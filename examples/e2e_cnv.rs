@@ -1,0 +1,19 @@
+//! End-to-end driver (DESIGN.md §4): four-way cross-validation of the
+//! small CNV model across all three layers of the stack —
+//!
+//! 1. JAX fake-quant reference, AOT-compiled, executed via PJRT (L2);
+//! 2. JAX streamlined-integer model through the Pallas multithreshold
+//!    and quant-matmul kernels, also via PJRT (L1+L2);
+//! 3. rust graph executor on the sidecar-rebuilt graph (L3);
+//! 4. rust executor on the SIRA-streamlined + threshold-converted graph,
+//!    with thresholds re-derived independently by the rust compiler (L3).
+//!
+//! Requires `make artifacts`.
+//!
+//! ```
+//! cargo run --release --example e2e_cnv
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    sira_finn::e2e::run_e2e("artifacts", 16)
+}

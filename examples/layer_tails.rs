@@ -1,0 +1,107 @@
+//! Layer-tail implementation explorer (§6.3 / Table 7): sweep the layer
+//! tail design space — thresholding vs composite (float32 / fixed-point),
+//! per-tensor vs per-channel granularity, input/output bitwidths — and
+//! print the LUT costs from the structural synthesis estimator plus the
+//! analytical-model prediction and the crossover point.
+//!
+//! ```
+//! cargo run --release --example layer_tails -- --channels 256 --pe 4
+//! ```
+
+use sira_finn::analytical::{crossover_out_bits, fit_elementwise_model, thresholding_lut};
+use sira_finn::hw::{
+    ElementwiseKernel, EwDtype, EwOp, HwKernel, Thresholding, ThresholdStyle,
+};
+use sira_finn::synth::{MemStyle, Synth};
+use sira_finn::util::cli::Args;
+use sira_finn::util::table::Table;
+
+fn composite_tail_lut(
+    synth: &Synth,
+    dtype: EwDtype,
+    n_i: u32,
+    n_p: u32,
+    channels: usize,
+    per_channel: bool,
+    pe: usize,
+) -> f64 {
+    // Fig 14 option 1: Mul -> Add -> Max -> Mul -> ToInt
+    let mk = |op: EwOp, in_bits: u32, param_bits: u32, pc: bool| ElementwiseKernel {
+        name: "tail".into(),
+        op,
+        in_bits,
+        param_bits,
+        out_bits: in_bits,
+        dtype,
+        channels,
+        per_channel: pc,
+        elems_per_frame: channels,
+        pe,
+        force_lut: true,
+        mem_style: MemStyle::Lut,
+    };
+    let stages = [
+        mk(EwOp::Mul, n_i, n_p, per_channel),
+        mk(EwOp::Add, n_i + n_p, n_p, per_channel),
+        mk(EwOp::Max, n_i + n_p + 1, 0, false),
+        mk(EwOp::Mul, n_i + n_p + 1, n_p, false),
+        mk(EwOp::ToInt, n_i + n_p + 1, 0, false),
+    ];
+    stages.iter().map(|k| k.resources(synth).lut).sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let channels = args.get_usize("channels", 256)?;
+    let pe = args.get_usize("pe", 4)?;
+    let synth = Synth::exact();
+
+    let mut t = Table::new(&[
+        "bits_in", "bits_out", "granularity", "thresholding", "comp float32",
+        "comp fixed16.8", "comp fixed32.16",
+    ]);
+    for &n_i in &[8u32, 16, 24] {
+        for &n_o in &[2u32, 4, 8] {
+            for (gname, pc) in [("per-tensor", false), ("per-channel", true)] {
+                let thr = Thresholding {
+                    name: "thr".into(),
+                    channels: if pc { channels } else { 1 },
+                    unique_rows: 0,
+                    elems_per_frame: channels,
+                    in_bits: n_i,
+                    out_bits: n_o,
+                    pe,
+                    style: ThresholdStyle::BinarySearch,
+                    mem_style: MemStyle::Lut,
+                }
+                .resources(&synth)
+                .lut;
+                let f32c = composite_tail_lut(&synth, EwDtype::Float32, n_i, 32, channels, pc, pe);
+                let fx16 = composite_tail_lut(&synth, EwDtype::Fixed(16, 8), n_i, 16, channels, pc, pe);
+                let fx32 = composite_tail_lut(&synth, EwDtype::Fixed(32, 16), n_i, 32, channels, pc, pe);
+                t.row(vec![
+                    n_i.to_string(),
+                    n_o.to_string(),
+                    gname.into(),
+                    format!("{thr:.0}"),
+                    format!("{f32c:.0}"),
+                    format!("{fx16:.0}"),
+                    format!("{fx32:.0}"),
+                ]);
+            }
+        }
+    }
+    println!("Layer tail LUT costs (C={channels}, PE={pe}):\n{}", t.render());
+
+    let model = fit_elementwise_model(&synth);
+    println!("analytical crossover (thresholding -> composite wins above n_o):");
+    for &c in &[16usize, 64, 256, 1024, 4096] {
+        let x = crossover_out_bits(&model, 24, 16, c, pe);
+        println!(
+            "  C={c:>5}: crossover at n_o = {:?} (thresholding LUT at n_o=4: {:.0})",
+            x,
+            thresholding_lut(24, 4, c, pe)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! (profiling helper — not part of the public examples)
+use std::time::Instant;
+fn main() {
+    let m = sira_finn::models::cnv_w2a2().unwrap();
+    // time per-node propagation
+    let g = &m.graph;
+    let mut ranges: std::collections::BTreeMap<String, sira_finn::sira::SiRange> = Default::default();
+    for inp in &g.inputs { ranges.insert(inp.clone(), m.input_ranges[inp].clone()); }
+    let t0 = Instant::now();
+    for (name, t) in &g.initializers { ranges.insert(name.clone(), sira_finn::sira::SiRange::point(t)); }
+    println!("init point ranges: {:?}", t0.elapsed());
+    let mut per_op: std::collections::BTreeMap<&'static str, std::time::Duration> = Default::default();
+    for node in g.topo_nodes().unwrap() {
+        let ins: Vec<&sira_finn::sira::SiRange> = node.inputs.iter().map(|i| &ranges[i]).collect();
+        let t = Instant::now();
+        let outs = sira_finn::sira::propagate_node(g, node, &ins).unwrap();
+        *per_op.entry(node.op.name()).or_default() += t.elapsed();
+        for (o, r) in node.outputs.iter().zip(outs) { ranges.insert(o.clone(), r); }
+    }
+    let mut v: Vec<_> = per_op.into_iter().collect();
+    v.sort_by_key(|(_, d)| std::cmp::Reverse(*d));
+    for (op, d) in v { println!("{op:<20} {d:?}"); }
+}

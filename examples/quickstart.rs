@@ -1,0 +1,74 @@
+//! Quickstart: run SIRA on the paper's worked example (§3.3, Fig 7 /
+//! Tables 2-3), print the scaled-integer ranges, aggregate the scales and
+//! biases, and size the accumulator (Fig 12).
+//!
+//! ```
+//! cargo run --release --example quickstart
+//! ```
+
+use sira_finn::models::worked_example;
+use sira_finn::passes::accmin::{minimize_accumulators, AccPolicy};
+use sira_finn::passes::{fold, streamline, thresholds};
+use sira_finn::sira::analyze;
+use sira_finn::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let (mut g, inputs) = worked_example();
+
+    // --- SIRA analysis (Table 3) ------------------------------------------
+    let a = analyze(&g, &inputs)?;
+    let mut t = Table::new(&["Tensor", "Range", "Scale", "Bias"]);
+    for name in ["X_q", "W_q", "MM", "AB", "MU", "NO", "RO", "Y"] {
+        let r = a.get(name)?;
+        let (lo, hi) = r.bounds();
+        match &r.int {
+            Some(ic) => {
+                let (il, ih) = ic.int_bounds();
+                t.row(vec![
+                    name.into(),
+                    format!("int [{il}, {ih}]"),
+                    format!("{:?}", ic.scale.data()),
+                    format!("{:?}", ic.bias.data()),
+                ]);
+            }
+            None => {
+                t.row(vec![
+                    name.into(),
+                    format!("[{lo:.3}, {hi:.3}]"),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    println!("SIRA scaled-integer ranges (the paper's Table 3):\n{}", t.render());
+
+    // --- accumulator minimization (§4.2 / Fig 12) ---------------------------
+    let acc = minimize_accumulators(&mut g, &a, AccPolicy::Sira)?;
+    for row in &acc.rows {
+        println!(
+            "accumulator for {}: SIRA {} bits (datatype bound {} bits, fixed-arch 32 bits)",
+            row.node, row.bits_sira, row.bits_datatype
+        );
+    }
+
+    // --- streamlining (§4.1.2, Fig 9) ---------------------------------------
+    streamline::extract_quant_scales(&mut g)?;
+    fold::duplicate_shared_initializers(&mut g)?;
+    let rewrites = streamline::streamline(&mut g)?;
+    println!("\nstreamlining applied {rewrites} rewrites; ops now:");
+    for n in g.topo_nodes()? {
+        println!("  {} ({})", n.name, n.op.name());
+    }
+
+    // --- threshold conversion (§4.1.3, Fig 11) ------------------------------
+    let rep = thresholds::convert_to_thresholds(&mut g, &inputs)?;
+    println!(
+        "\nthreshold conversion: {} layer tails collapsed into MultiThreshold ({} thresholds)",
+        rep.converted, rep.threshold_count
+    );
+    for n in g.topo_nodes()? {
+        println!("  {} ({})", n.name, n.op.name());
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Serving demo: the L3 coordinator (router + dynamic batcher + worker
+//! pool) serving the AOT-compiled CNV artifact via PJRT — python never on
+//! the request path. Falls back to the rust graph executor when
+//! artifacts are absent.
+//!
+//! ```
+//! make artifacts && cargo run --release --example serve -- --requests 200
+//! ```
+
+use std::sync::Arc;
+
+use sira_finn::coordinator::{BatchPolicy, Coordinator};
+use sira_finn::executor::Executor;
+use sira_finn::models::sidecar::load_sidecar_file;
+use sira_finn::runtime::Runtime;
+use sira_finn::tensor::Tensor;
+use sira_finn::util::cli::Args;
+use sira_finn::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["executor"])?;
+    let n = args.get_usize("requests", 200)?;
+    let workers = args.get_usize("workers", 2)?;
+    let use_pjrt = !args.flag("executor")
+        && std::path::Path::new("artifacts/model_streamlined.hlo.txt").exists();
+
+    let coord = if use_pjrt {
+        println!("engine: PJRT (streamlined Pallas artifact)");
+        Coordinator::start(workers, BatchPolicy::default(), move || {
+            // each worker owns its own PJRT client + executable
+            let rt = Runtime::cpu().expect("pjrt client");
+            let model = rt
+                .load_hlo_text("artifacts/model_streamlined.hlo.txt")
+                .expect("artifact");
+            move |x: &Tensor| Ok(model.run(std::slice::from_ref(x))?.remove(0))
+        })
+    } else {
+        println!("engine: rust graph executor (sidecar model)");
+        let m = load_sidecar_file("artifacts/model_params.json")?;
+        let g = Arc::new(m.graph);
+        Coordinator::start(workers, BatchPolicy::default(), move || {
+            let g = Arc::clone(&g);
+            move |x: &Tensor| {
+                let mut e = Executor::new(&g)?;
+                Ok(e.run_single(x)?.remove(0))
+            }
+        })
+    };
+
+    let mut rng = Rng::new(1);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|_| {
+            let x = Tensor::new(
+                &[1, 3, 8, 8],
+                (0..192).map(|_| rng.int_in(0, 255) as f64).collect(),
+            )
+            .unwrap();
+            coord.submit(x).unwrap()
+        })
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let (p50, p95, p99) = coord.metrics.percentiles();
+    println!(
+        "{ok}/{n} ok in {dt:.2?} -> {:.1} req/s across {workers} workers",
+        n as f64 / dt.as_secs_f64()
+    );
+    println!("latency p50 {p50} us, p95 {p95} us, p99 {p99} us");
+    coord.shutdown();
+    Ok(())
+}

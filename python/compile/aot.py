@@ -1,0 +1,146 @@
+"""AOT export (build path): lower the L2 JAX model (reference and
+streamlined forwards, weights baked as constants) to **HLO text** and
+write the JSON parameter sidecar the rust compiler rebuilds the graph
+from.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")``/``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # constants as `constant({...})`, silently dropping the baked weights
+    # and thresholds from the artifact.
+    return comp.as_hlo_text(True)
+
+
+def export_sidecar(params):
+    """Serialize the model parameters as the layer list the rust sidecar
+    loader (rust/src/models/sidecar.rs) understands."""
+    p = params
+
+    def conv_layer(cp, stride):
+        return [
+            {
+                "kind": "conv",
+                "weight": np.asarray(cp["w"]).ravel().tolist(),
+                "weight_shape": list(cp["w"].shape),
+                "stride": stride,
+                "pad": 1,
+                "wbits": cp["wbits"],
+                "wscale": np.asarray(cp["wscale"]).ravel().tolist(),
+                "depthwise": False,
+            },
+            {
+                "kind": "batchnorm",
+                "gamma": cp["gamma"].tolist(),
+                "beta": cp["beta"].tolist(),
+                "mean": cp["mean"].tolist(),
+                "var": cp["var"].tolist(),
+                "eps": cp["eps"],
+            },
+            {"kind": "relu"},
+        ]
+
+    layers = [
+        {"kind": "quant_act", "bits": p["in_bits"], "signed": False,
+         "scale": [p["in_scale"]]},
+    ]
+    layers += conv_layer(p["conv1"], 1)
+    layers += [{"kind": "quant_act", "bits": p["act_bits"], "signed": False,
+                "scale": [p["act1_scale"]]}]
+    layers += conv_layer(p["conv2"], 2)
+    layers += [{"kind": "quant_act", "bits": p["act_bits"], "signed": False,
+                "scale": [p["act2_scale"]]}]
+    layers += [
+        {"kind": "flatten"},
+        {
+            "kind": "linear",
+            "weight": np.asarray(p["fc"]["w"]).ravel().tolist(),
+            "weight_shape": list(p["fc"]["w"].shape),
+            "bias": p["fc"]["bias"].tolist(),
+            "wbits": p["fc"]["wbits"],
+            "wscale": [float(p["fc"]["wscale"])],
+        },
+    ]
+    return {
+        "name": "cnv-e2e",
+        "input_shape": list(model.INPUT_SHAPE),
+        "input_range": [0, 255],
+        "layers": layers,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.make_params(args.seed)
+    sparams = model.streamlined_params(params)
+    spec = jax.ShapeDtypeStruct(model.INPUT_SHAPE, jnp.float32)
+
+    # (a) reference fake-quant forward
+    ref_fn = lambda x: (model.reference_forward(x, params),)
+    ref_hlo = to_hlo_text(jax.jit(ref_fn).lower(spec))
+    path = os.path.join(args.out_dir, "model.hlo.txt")
+    with open(path, "w") as f:
+        f.write(ref_hlo)
+    print(f"wrote {len(ref_hlo)} chars to {path}")
+
+    # (b) streamlined integer forward through the Pallas kernels
+    st_fn = lambda x: (model.streamlined_forward(x, params, sparams),)
+    st_hlo = to_hlo_text(jax.jit(st_fn).lower(spec))
+    path = os.path.join(args.out_dir, "model_streamlined.hlo.txt")
+    with open(path, "w") as f:
+        f.write(st_hlo)
+    print(f"wrote {len(st_hlo)} chars to {path}")
+
+    # (c) standalone Pallas multithreshold kernel (rust cross-checks its
+    # own MultiThreshold executor against this)
+    from .kernels.multithreshold import multithreshold
+    th = np.sort(np.random.RandomState(7).randint(-50, 50, size=(4, 15)), axis=1)
+    mt_fn = lambda x: (multithreshold(x, jnp.asarray(th, dtype=jnp.float32),
+                                      out_scale=1.0, out_bias=0.0),)
+    mt_spec = jax.ShapeDtypeStruct((8, 4), jnp.float32)
+    mt_hlo = to_hlo_text(jax.jit(mt_fn).lower(mt_spec))
+    path = os.path.join(args.out_dir, "multithreshold.hlo.txt")
+    with open(path, "w") as f:
+        f.write(mt_hlo)
+    print(f"wrote {len(mt_hlo)} chars to {path}")
+    with open(os.path.join(args.out_dir, "multithreshold_params.json"), "w") as f:
+        json.dump({"thresholds": th.tolist()}, f)
+
+    # (d) parameter sidecar for the rust graph builder
+    sidecar = export_sidecar(params)
+    path = os.path.join(args.out_dir, "model_params.json")
+    with open(path, "w") as f:
+        json.dump(sidecar, f)
+    print(f"wrote sidecar to {path}")
+
+
+if __name__ == "__main__":
+    main()

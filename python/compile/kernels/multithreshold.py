@@ -1,0 +1,57 @@
+"""Layer-1 Pallas kernel: the multi-threshold operator (§4.1.3 / §5.3).
+
+TPU hardware adaptation (DESIGN.md §Hardware-Adaptation / §7): the paper's
+RTL binary-search pipeline becomes a VPU comparison-reduction. The
+(C, N) threshold tile is held resident in VMEM while row-blocks of the
+data stream through; each element is compared against all N thresholds
+and the boolean lane-sums reduce on the VPU. Blocks are sized so the last
+dimension is lane-aligned (multiples of 128 when the channel count
+allows). `interpret=True` is mandatory on CPU — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mt_kernel(x_ref, th_ref, o_ref, *, out_scale, out_bias):
+    x = x_ref[...]  # (bm, C)
+    th = th_ref[...]  # (C, N)
+    # (bm, C, N) comparison then reduce over N on the VPU
+    cnt = (x[:, :, None] >= th[None, :, :]).sum(axis=-1).astype(x.dtype)
+    o_ref[...] = out_bias + out_scale * cnt
+
+
+def multithreshold(x, thresholds, out_scale=1.0, out_bias=0.0, block_rows=None):
+    """Pallas multi-threshold: x (M, C), thresholds (C, N) -> (M, C).
+
+    The row dimension is tiled by `block_rows`; channels and thresholds
+    stay resident per block (the threshold tile is the hot operand).
+    """
+    m, c = x.shape
+    c2, _n = thresholds.shape
+    if c2 != c and c2 != 1:
+        raise ValueError(f"thresholds channels {c2} != data channels {c}")
+    if c2 == 1 and c != 1:
+        thresholds = jnp.broadcast_to(thresholds, (c, thresholds.shape[1]))
+    if block_rows is None:
+        block_rows = min(m, 256)
+    # pick a row block that divides M (grid must tile exactly)
+    while m % block_rows != 0:
+        block_rows -= 1
+    grid = (m // block_rows,)
+    kernel = functools.partial(_mt_kernel, out_scale=out_scale, out_bias=out_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec(thresholds.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), x.dtype),
+        interpret=True,
+    )(x, thresholds)

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernel: fused integer matmul + multi-threshold layer
+tail (the paper's core insight restated for TPU — DESIGN.md §7): keep the
+MXU busy with the integer matmul and collapse the entire layer tail into
+a VPU compare-and-sum applied before writeback, avoiding a second HBM
+round trip for the elementwise tail.
+
+`interpret=True` throughout: CPU-PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, w_ref, o_ref):
+    # integer values carried in f32: exact up to 2^24, far beyond the
+    # accumulators this model needs (the rust side checks the SIRA bound)
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...])
+
+
+def quant_matmul(x, w, block_m=128):
+    """Integer matmul (M,K) x (K,N) -> (M,N) on the MXU."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dim mismatch {k} vs {k2}"
+    bm = min(m, block_m)
+    while m % bm != 0:
+        bm -= 1
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _qmm_thr_kernel(x_ref, w_ref, th_ref, o_ref, *, out_bias):
+    acc = jnp.dot(x_ref[...], w_ref[...])  # (bm, N) integer accumulators
+    th = th_ref[...]  # (N, T)
+    cnt = (acc[:, :, None] >= th[None, :, :]).sum(axis=-1).astype(acc.dtype)
+    o_ref[...] = out_bias + cnt
+
+
+def quant_matmul_thresholds(x, w, thresholds, out_bias=0.0, block_m=128):
+    """Fused integer matmul + layer tail: the accumulator never leaves
+    VMEM before thresholding. thresholds: (N_out_channels, T)."""
+    m, k = x.shape
+    _, n = w.shape
+    assert thresholds.shape[0] in (1, n)
+    th = thresholds
+    if th.shape[0] == 1 and n != 1:
+        th = jnp.broadcast_to(th, (n, th.shape[1]))
+    bm = min(m, block_m)
+    while m % bm != 0:
+        bm -= 1
+    kernel = functools.partial(_qmm_thr_kernel, out_bias=out_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec(th.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, th)

@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the Pallas kernels (the L1 correctness
+signal: pytest asserts kernel == ref across shape/dtype sweeps)."""
+
+import jax.numpy as jnp
+
+
+def multithreshold_ref(x, thresholds, out_scale=1.0, out_bias=0.0):
+    """Multi-threshold function (Eq. 1 of the paper).
+
+    x: (M, C) data; thresholds: (C, N) per-channel threshold values (C may
+    be 1 for per-tensor). Returns out_bias + out_scale * sum_i(x >= theta_i).
+    """
+    c = x.shape[1]
+    if thresholds.shape[0] == 1 and c != 1:
+        thresholds = jnp.broadcast_to(thresholds, (c, thresholds.shape[1]))
+    cnt = (x[:, :, None] >= thresholds[None, :, :]).sum(axis=-1)
+    return out_bias + out_scale * cnt.astype(x.dtype)
+
+
+def quant_matmul_ref(x, w):
+    """Integer matmul oracle: (M, K) x (K, N) with exact integer-valued
+    float accumulation (both operands carry integer values)."""
+    return jnp.matmul(x, w)
+
+
+def quant_bounds(bits, signed=True, narrow=False):
+    if signed:
+        return -(2 ** (bits - 1)) + (1 if narrow else 0), 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+def quant_ref(x, scale, zero_point, bits, signed=True, narrow=False):
+    """QONNX Quant operator: y = s * (clip(round(x/s + z), qmin, qmax) - z).
+
+    jnp.round rounds half to even, matching the rust executor exactly.
+    """
+    qmin, qmax = quant_bounds(bits, signed, narrow)
+    q = jnp.clip(jnp.round(x / scale + zero_point), qmin, qmax)
+    return scale * (q - zero_point)
+
+
+def quant_int_ref(x, scale, zero_point, bits, signed=True, narrow=False):
+    """Integer output of the Quant operator (the streamlined datapath)."""
+    qmin, qmax = quant_bounds(bits, signed, narrow)
+    return jnp.clip(jnp.round(x / scale + zero_point), qmin, qmax)

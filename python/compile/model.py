@@ -1,0 +1,205 @@
+"""Layer-2 JAX model: a small CNV-style quantized CNN used for the
+end-to-end cross-validation between the three layers (DESIGN.md §4).
+
+Two forwards are defined over the *same* parameters:
+
+* ``reference_forward`` — the fake-quantized QNN exactly as the QONNX
+  graph describes it (Quant -> Conv -> BatchNorm -> ReLU -> Quant ...),
+  the golden semantics the rust executor and the streamlined model must
+  match.
+* ``streamlined_forward`` — the integer datapath after SIRA streamlining:
+  integer convolutions whose layer tails are collapsed into
+  multi-threshold operators (computed here by the same
+  evaluate-and-bisect procedure of §4.1.3), executed by the Layer-1
+  Pallas kernels.
+
+Python runs at build time only: ``aot.py`` lowers both forwards to HLO
+text artifacts which the rust runtime loads and executes via PJRT.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.multithreshold import multithreshold
+from .kernels.quant_matmul import quant_matmul
+from .kernels.ref import quant_bounds, quant_int_ref, quant_ref
+
+INPUT_SHAPE = (1, 3, 8, 8)
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def make_params(seed=0):
+    """Deterministic model parameters; the exact values are also exported
+    to the JSON sidecar so the rust graph is bit-identical."""
+    rng = np.random.RandomState(seed)
+
+    def conv_params(cin, cout, k, wbits):
+        w = rng.randn(cout, cin, k, k) * 0.4
+        qmax = 2 ** (wbits - 1) - 1
+        wscale = np.maximum(np.abs(w).reshape(cout, -1).max(axis=1), 1e-3) / qmax
+        gamma = rng.uniform(0.5, 1.5, cout)
+        beta = rng.randn(cout) * 0.3
+        mean = rng.randn(cout) * 0.5
+        var = rng.uniform(0.5, 2.0, cout)
+        return dict(w=w, wbits=wbits, wscale=wscale, gamma=gamma, beta=beta,
+                    mean=mean, var=var, eps=1e-5)
+
+    fc_w = rng.randn(16 * 4 * 4, NUM_CLASSES) * 0.2
+    fc_qmax = 2 ** (8 - 1) - 1
+    params = dict(
+        in_scale=1.0,  # 8-bit input quantizer over [0, 255]
+        in_bits=8,
+        conv1=conv_params(3, 8, 3, 4),
+        act1_scale=None,  # filled below
+        act_bits=4,
+        conv2=conv_params(8, 16, 3, 4),
+        act2_scale=None,
+        fc=dict(
+            w=fc_w,
+            wbits=8,
+            wscale=np.abs(fc_w).max() / fc_qmax,
+            bias=rng.randn(NUM_CLASSES) * 0.1,
+        ),
+    )
+    # activation scales sized so 4-bit quant covers the useful range
+    params["act1_scale"] = 40.0 / (2**4 - 1)
+    params["act2_scale"] = 8.0 / (2**4 - 1)
+    return params
+
+
+# --------------------------------------------------------------------------
+# reference (fake-quantized) forward
+# --------------------------------------------------------------------------
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _bn(x, p):
+    a = p["gamma"] / np.sqrt(p["var"] + p["eps"])
+    b = p["beta"] - p["mean"] * a
+    return x * a.reshape(1, -1, 1, 1) + b.reshape(1, -1, 1, 1)
+
+
+def _quant_w(p):
+    s = p["wscale"].reshape(-1, 1, 1, 1) if p["w"].ndim == 4 else p["wscale"]
+    return quant_ref(jnp.asarray(p["w"]), s, 0.0, p["wbits"])
+
+
+def reference_forward(x, params):
+    """Fake-quantized forward: float in [0,255] -> logits (1, classes)."""
+    p = params
+    x = quant_ref(x, p["in_scale"], 0.0, p["in_bits"], signed=False)
+    # layer 1
+    h = _conv(x, _quant_w(p["conv1"]), stride=1)
+    h = jax.nn.relu(_bn(h, p["conv1"]))
+    h = quant_ref(h, p["act1_scale"], 0.0, p["act_bits"], signed=False)
+    # layer 2
+    h = _conv(h, _quant_w(p["conv2"]), stride=2)
+    h = jax.nn.relu(_bn(h, p["conv2"]))
+    h = quant_ref(h, p["act2_scale"], 0.0, p["act_bits"], signed=False)
+    # classifier
+    h = h.reshape(1, -1)
+    wq = quant_ref(jnp.asarray(p["fc"]["w"]), p["fc"]["wscale"], 0.0, p["fc"]["wbits"])
+    return jnp.matmul(h, wq) + p["fc"]["bias"].reshape(1, -1)
+
+
+# --------------------------------------------------------------------------
+# streamlined (integer) forward via the Pallas kernels
+# --------------------------------------------------------------------------
+
+def _tail_thresholds(p, s_in, s_out, act_bits, acc_range):
+    """Threshold conversion (§4.1.3) for one conv layer tail: evaluate the
+    tail function (affine BN + ReLU + quantizer) over the integer
+    accumulator domain and bisect for each output level. Returns a
+    (C, 2^bits - 1) integer threshold array."""
+    cout = p["w"].shape[0]
+    a = p["gamma"] / np.sqrt(p["var"] + p["eps"])
+    b = p["beta"] - p["mean"] * a
+    qmax = 2**act_bits - 1
+    wscale = p["wscale"]
+
+    def f(acc, c):
+        v = acc * (s_in * wscale[c])       # dequantized MAC output
+        v = max(v * a[c] + b[c], 0.0)      # BN + ReLU
+        return int(np.clip(np.round(v / s_out), 0, qmax))
+
+    lo, hi = acc_range
+    th = np.zeros((cout, qmax), dtype=np.float64)
+    for c in range(cout):
+        for level in range(1, qmax + 1):
+            if f(lo, c) >= level:
+                th[c, level - 1] = lo
+                continue
+            if f(hi, c) < level:
+                th[c, level - 1] = hi + 1  # +inf proxy
+                continue
+            a_, b_ = lo, hi
+            while b_ - a_ > 1:
+                mid = (a_ + b_) // 2
+                if f(mid, c) >= level:
+                    b_ = mid
+                else:
+                    a_ = mid
+            th[c, level - 1] = b_
+    return th
+
+
+def streamlined_params(params):
+    """Build the integer-model parameters (integer weights + thresholds)."""
+    p = params
+    out = {}
+    for name, s_in_key, s_out_key in [("conv1", "in_scale", "act1_scale"),
+                                      ("conv2", "act1_scale", "act2_scale")]:
+        cp = p[name]
+        s_w = cp["wscale"].reshape(-1, 1, 1, 1)
+        wq = np.asarray(quant_int_ref(jnp.asarray(cp["w"]), s_w, 0.0, cp["wbits"]))
+        # datatype-bound accumulator range (conservative; the rust side
+        # tightens it with SIRA)
+        k = int(np.prod(cp["w"].shape[1:]))
+        in_max = (2**p["in_bits"] - 1) if name == "conv1" else (2**p["act_bits"] - 1)
+        w_mag = 2 ** (cp["wbits"] - 1)
+        bound = k * in_max * w_mag
+        th = _tail_thresholds(cp, p[s_in_key], p[s_out_key], p["act_bits"],
+                              (-bound, bound))
+        out[name] = dict(wq=wq, thresholds=th)
+    fcp = p["fc"]
+    out["fc"] = dict(
+        wq=np.asarray(quant_int_ref(jnp.asarray(fcp["w"]), fcp["wscale"], 0.0, fcp["wbits"])),
+    )
+    return out
+
+
+def streamlined_forward(x, params, sparams):
+    """Integer forward: uint8 image -> logits, via Pallas kernels.
+
+    All intermediate tensors are integer-valued; the only float ops are
+    the final dequantization scale and bias of the classifier.
+    """
+    p = params
+    # input quantizer with scale 1.0 over [0,255]: identity on integers
+    qmin, qmax = quant_bounds(p["in_bits"], signed=False)
+    h = jnp.clip(jnp.round(x / p["in_scale"]), qmin, qmax)
+
+    for name in ("conv1", "conv2"):
+        sp = sparams[name]
+        stride = 1 if name == "conv1" else 2
+        acc = _conv(h, jnp.asarray(sp["wq"], dtype=h.dtype), stride)
+        n, c, hh, ww = acc.shape
+        # (N*H*W, C) layout for the thresholding kernel
+        flat = acc.transpose(0, 2, 3, 1).reshape(-1, c)
+        tq = multithreshold(flat, jnp.asarray(sp["thresholds"], dtype=acc.dtype))
+        h = tq.reshape(n, hh, ww, c).transpose(0, 3, 1, 2)
+
+    h = h.reshape(1, -1)
+    acc = quant_matmul(h, jnp.asarray(sparams["fc"]["wq"], dtype=h.dtype))
+    # final dequant: acc * (s_act2 * s_wfc) + bias
+    s = p["act2_scale"] * p["fc"]["wscale"]
+    return acc * s + p["fc"]["bias"].reshape(1, -1)

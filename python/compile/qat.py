@@ -1,0 +1,106 @@
+"""Quantization-aware training with straight-through estimators, used by
+the Table 1 motivation experiment (experiments/table1_qat.py): train a
+small conv net under different scale-factor constraints (power-of-two vs
+float, per-tensor vs per-channel) at 3/4-bit precision and compare
+accuracy. Build-time python only."""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x):
+    """Round with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant(x, scale, bits, signed=True, pot=False):
+    """Uniform fake quantization with STE. `scale` may be scalar
+    (per-tensor) or per-channel (broadcastable)."""
+    scale = jnp.maximum(scale, 1e-6)
+    if pot:
+        # snap scale to the nearest power of two (through a STE as well)
+        log2 = jnp.log2(scale)
+        scale = 2.0 ** (log2 + jax.lax.stop_gradient(jnp.round(log2) - log2))
+    if signed:
+        qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    else:
+        qmin, qmax = 0, 2**bits - 1
+    q = jnp.clip(ste_round(x / scale), qmin, qmax)
+    return q * scale
+
+
+def weight_scale(w, bits, per_channel):
+    """Max-abs calibrated scale for a (cout, ...) weight tensor."""
+    qmax = 2 ** (bits - 1) - 1
+    if per_channel:
+        mags = jnp.abs(w.reshape(w.shape[0], -1)).max(axis=1)
+        return (mags / qmax).reshape((-1,) + (1,) * (w.ndim - 1))
+    return jnp.abs(w).max() / qmax
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "per_channel", "pot"))
+def qnn_forward(params, x, bits, per_channel, pot):
+    """2-conv + 1-fc net with fake-quantized weights and activations."""
+    h = x
+    for name in ("c1", "c2"):
+        w = params[name]
+        ws = weight_scale(w, bits, per_channel)
+        wq = fake_quant(w, ws, bits, signed=True, pot=pot)
+        h = jax.lax.conv_general_dilated(
+            h, wq, (2, 2), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        h = h + params[name + "_b"].reshape(1, -1, 1, 1)
+        h = jax.nn.relu(h)
+        a_scale = jnp.abs(h).max() / (2**bits - 1)
+        h = fake_quant(h, a_scale, bits, signed=False, pot=pot)
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fc"] + params["fc_b"]
+
+
+def make_dataset(n, classes, rng, dim=8, centers=None):
+    """Gaussian-blob images (class-dependent spatial patterns). Pass the
+    same `centers` for train and validation splits of one task."""
+    if centers is None:
+        centers = rng.randn(classes, 3, dim, dim) * 1.2
+    labels = rng.randint(0, classes, n)
+    x = centers[labels] + rng.randn(n, 3, dim, dim) * 1.0
+    return x.astype(np.float32), labels, centers
+
+
+def init_params(rng, classes, dim=8):
+    fc_in = 16 * (dim // 4) * (dim // 4)
+    return {
+        "c1": jnp.asarray(rng.randn(8, 3, 3, 3) * 0.3),
+        "c1_b": jnp.zeros(8),
+        "c2": jnp.asarray(rng.randn(16, 8, 3, 3) * 0.3),
+        "c2_b": jnp.zeros(16),
+        "fc": jnp.asarray(rng.randn(fc_in, classes) * 0.1),
+        "fc_b": jnp.zeros(classes),
+    }
+
+
+def train_qat(bits, per_channel, pot, steps=300, seed=0, classes=10, n_train=512):
+    """Train one QAT configuration; returns validation top-1 accuracy."""
+    rng = np.random.RandomState(seed)
+    xtr, ytr, centers = make_dataset(n_train, classes, rng)
+    xva, yva, _ = make_dataset(256, classes, rng, centers=centers)
+    params = init_params(rng, classes)
+
+    def loss_fn(p, xb, yb):
+        logits = qnn_forward(p, xb, bits, per_channel, pot)
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(len(yb)), yb].mean()
+
+    grad_fn = jax.jit(
+        jax.grad(loss_fn), static_argnames=())
+    lr = 0.05
+    batch = 64
+    for step in range(steps):
+        idx = rng.randint(0, n_train, batch)
+        g = grad_fn(params, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+        params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+    logits = qnn_forward(params, jnp.asarray(xva), bits, per_channel, pot)
+    acc = float((np.argmax(np.asarray(logits), axis=1) == yva).mean())
+    return acc

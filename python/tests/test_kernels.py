@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, with hypothesis
+sweeps over shapes, dtypes and threshold structure."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.multithreshold import multithreshold
+from compile.kernels.quant_matmul import quant_matmul, quant_matmul_thresholds
+from compile.kernels.ref import (
+    multithreshold_ref,
+    quant_int_ref,
+    quant_matmul_ref,
+    quant_ref,
+)
+
+
+def test_multithreshold_small_exact():
+    x = jnp.asarray([[-1.0, 0.5], [2.0, 10.0]])
+    th = jnp.asarray([[0.0, 1.0, 5.0], [0.0, 1.0, 5.0]])
+    out = multithreshold(x, th)
+    np.testing.assert_array_equal(np.asarray(out), [[0.0, 1.0], [2.0, 3.0]])
+
+
+def test_multithreshold_bias_scale():
+    x = jnp.asarray([[5.0]])
+    th = jnp.asarray([[1.0, 2.0, 3.0]])
+    out = multithreshold(x, th, out_scale=2.0, out_bias=-4.0)
+    assert float(out[0, 0]) == 2.0
+
+
+def test_multithreshold_per_tensor_broadcast():
+    x = jnp.asarray([[1.0, 6.0, -3.0]])
+    th = jnp.asarray([[0.0, 5.0]])  # (1, N) per-tensor
+    out = multithreshold(x, th)
+    np.testing.assert_array_equal(np.asarray(out), [[1.0, 2.0, 0.0]])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    c=st.integers(1, 16),
+    n=st.integers(1, 31),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_multithreshold_matches_ref(m, c, n, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randint(-100, 100, size=(m, c)).astype(np.float32))
+    th = jnp.asarray(np.sort(rng.randint(-100, 100, size=(c, n)), axis=1)
+                     .astype(np.float32))
+    out = multithreshold(x, th)
+    ref = multithreshold_ref(x, th)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 48),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randint(-15, 16, size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.randint(-7, 8, size=(k, n)).astype(np.float32))
+    out = quant_matmul(x, w)
+    ref = quant_matmul_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # integer exactness: results are integral
+    assert np.all(np.asarray(out) == np.round(np.asarray(out)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 32),
+    n=st.integers(1, 12),
+    levels=st.integers(1, 15),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matmul_thresholds_matches_composition(m, k, n, levels, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randint(-7, 8, size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.randint(-7, 8, size=(k, n)).astype(np.float32))
+    th = jnp.asarray(
+        np.sort(rng.randint(-200, 200, size=(n, levels)), axis=1).astype(np.float32))
+    fused = quant_matmul_thresholds(x, w, th, out_bias=-2.0)
+    acc = quant_matmul_ref(x, w)
+    ref = multithreshold_ref(acc, th, out_bias=-2.0)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_ref_properties(bits, signed, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(32).astype(np.float64) * 10)
+    s = 0.37
+    y = np.asarray(quant_ref(x, s, 0.0, bits, signed=signed))
+    q = np.asarray(quant_int_ref(x, s, 0.0, bits, signed=signed))
+    # y = s*q exactly, q integral and in range
+    np.testing.assert_allclose(y, s * q, rtol=0, atol=0)
+    assert np.all(q == np.round(q))
+    if signed:
+        assert q.min() >= -(2 ** (bits - 1)) and q.max() <= 2 ** (bits - 1) - 1
+    else:
+        assert q.min() >= 0 and q.max() <= 2**bits - 1
+
+
+def test_round_half_even_semantics():
+    # jnp.round must round half to even to match the rust executor
+    x = jnp.asarray([0.5, 1.5, 2.5, -0.5, -1.5])
+    np.testing.assert_array_equal(np.asarray(jnp.round(x)), [0.0, 2.0, 2.0, -0.0, -2.0])
+
+
+def test_multithreshold_rejects_bad_channels():
+    x = jnp.zeros((4, 3))
+    th = jnp.zeros((2, 5))
+    with pytest.raises(ValueError):
+        multithreshold(x, th)

@@ -1,0 +1,64 @@
+"""L2 correctness: the streamlined integer forward (through the Pallas
+kernels) must match the fake-quantized reference forward — the python
+half of the end-to-end equivalence argument (the rust half re-derives the
+same thresholds independently via SIRA)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.make_params(0)
+    sparams = model.streamlined_params(params)
+    return params, sparams
+
+
+def rand_image(seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(
+        rng.randint(0, 256, size=model.INPUT_SHAPE).astype(np.float32))
+
+
+def test_reference_shapes(setup):
+    params, _ = setup
+    y = model.reference_forward(rand_image(0), params)
+    assert y.shape == (1, model.NUM_CLASSES)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_streamlined_matches_reference(setup, seed):
+    params, sparams = setup
+    x = rand_image(seed)
+    y_ref = np.asarray(model.reference_forward(x, params))
+    y_st = np.asarray(model.streamlined_forward(x, params, sparams))
+    np.testing.assert_allclose(y_st, y_ref, rtol=0, atol=1e-4)
+
+
+def test_streamlined_intermediates_are_integer(setup):
+    params, sparams = setup
+    # integer weights integral and within wbits
+    for name in ("conv1", "conv2"):
+        wq = sparams[name]["wq"]
+        assert np.all(wq == np.round(wq))
+        bits = params[name]["wbits"]
+        assert np.abs(wq).max() <= 2 ** (bits - 1)
+        th = sparams[name]["thresholds"]
+        assert np.all(th == np.round(th)), "thresholds must be integers (Eq. 3)"
+
+
+def test_thresholds_monotone_nondecreasing(setup):
+    _, sparams = setup
+    for name in ("conv1", "conv2"):
+        th = sparams[name]["thresholds"]
+        assert np.all(np.diff(th, axis=1) >= 0), "positive unit steps require sorted thresholds"
+
+
+def test_logits_differ_across_inputs(setup):
+    params, _ = setup
+    y0 = np.asarray(model.reference_forward(rand_image(0), params))
+    y1 = np.asarray(model.reference_forward(rand_image(1), params))
+    assert not np.allclose(y0, y1)

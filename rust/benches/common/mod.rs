@@ -1,0 +1,49 @@
+//! Shared helpers for the paper-reproduction bench harnesses.
+#![allow(dead_code)] // each bench uses a subset
+
+use sira_finn::accel::{compile_qnn, CompileOptions, CompiledAccel, TailStyle};
+use sira_finn::hw::{EwDtype, ThresholdStyle};
+use sira_finn::models::{self, ZooModel};
+use sira_finn::passes::accmin::AccPolicy;
+
+/// The four QNN workloads of Table 5 with the folding targets that mirror
+/// the paper's reported throughputs (Table 6), scaled where our MNv1 runs
+/// at 56x56 (1/16 of the paper's 224x224 pixel volume).
+pub fn workloads() -> Vec<(ZooModel, u64)> {
+    vec![
+        (models::tfc_w2a2().unwrap(), 64),
+        (models::cnv_w2a2().unwrap(), 8192),
+        (models::rn8_w3a3().unwrap(), 16384),
+        (models::mnv1_w4a4_scaled(4).unwrap(), 25088),
+    ]
+}
+
+/// The four optimization configurations of Table 6: (Acc, Thr) off/on.
+/// The baseline uses the composite fixed-point tail (§6.2.1) with
+/// datatype-bound accumulators.
+pub fn config(acc: bool, thr: bool, target_cycles: u64) -> CompileOptions {
+    CompileOptions {
+        tail_style: if thr {
+            TailStyle::Thresholding(ThresholdStyle::BinarySearch)
+        } else {
+            TailStyle::Composite(EwDtype::Fixed(16, 8))
+        },
+        acc_policy: if acc { AccPolicy::Sira } else { AccPolicy::Datatype },
+        target_cycles,
+        ..Default::default()
+    }
+}
+
+/// Compile one workload under one config.
+pub fn compile(m: &ZooModel, acc: bool, thr: bool, target_cycles: u64) -> CompiledAccel {
+    compile_qnn(m.graph.clone(), &m.input_ranges, &config(acc, thr, target_cycles))
+        .unwrap_or_else(|e| panic!("{}: {e:#}", m.name))
+}
+
+pub fn check(v: bool, what: &str) {
+    if v {
+        println!("  [ok] {what}");
+    } else {
+        println!("  [!!] SHAPE MISMATCH: {what}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Fig 18 / Table 4 reproduction: the analytical cost model of the
+//! elementwise meta-kernel. Fits α/β per operation by linear regression
+//! over out-of-context synthesis (the structural estimator standing in
+//! for Vivado, DESIGN.md), then reports predictions vs observations and
+//! the mean relative error (paper: MRE ≈ 4%).
+
+use sira_finn::analytical::{fit_elementwise_model, op_feature};
+use sira_finn::hw::{ElementwiseKernel, EwDtype, EwOp, HwKernel};
+use sira_finn::synth::{MemStyle, Synth};
+use sira_finn::util::stats::mean_relative_error;
+use sira_finn::util::table::Table;
+
+fn kernel(op: EwOp, n_i: u32, n_p: u32, pe: usize) -> ElementwiseKernel {
+    ElementwiseKernel {
+        name: "f18".into(),
+        op,
+        in_bits: n_i,
+        param_bits: if matches!(op, EwOp::Max | EwOp::ToInt) { 0 } else { n_p },
+        out_bits: n_i,
+        dtype: EwDtype::Fixed(n_i.max(n_p), n_i.max(n_p) / 2),
+        channels: 1,
+        per_channel: false,
+        elems_per_frame: 1,
+        pe,
+        force_lut: true,
+        mem_style: MemStyle::Lut,
+    }
+}
+
+fn main() {
+    println!("=== Fig 18 / Table 4: elementwise analytical cost model ===");
+    let synth = Synth::exact();
+    let model = fit_elementwise_model(&synth);
+
+    let mut t = Table::new(&["Operation", "model", "alpha", "beta"]);
+    for (name, feat, c) in [
+        ("Mul", "a*n_i*n_p*PE + b", model.mul),
+        ("Add", "a*(n_i+n_p)*PE + b", model.add),
+        ("ToInt", "a*n_i*PE + b", model.to_int),
+        ("Max", "a*n_i*PE + b", model.max),
+    ] {
+        t.row(vec![
+            name.into(),
+            feat.into(),
+            format!("{:.2}", c.alpha),
+            format!("{:.0}", c.beta),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(paper Table 4: Mul a=1.18 b=124; Add a=2.0 b=24; ToInt a=4.2 b=13; Max a=4.0 b=21)\n");
+
+    // evaluate against a *noisy* synthesis run on a held-out sweep
+    let noisy = Synth::with_seed(7);
+    let mut preds = Vec::new();
+    let mut obs = Vec::new();
+    let mut t = Table::new(&["op", "n_i", "n_p", "PE", "observed", "predicted"]);
+    for op in [EwOp::Mul, EwOp::Add, EwOp::ToInt, EwOp::Max] {
+        for &n_i in &[10u32, 14, 20, 28] {
+            for &n_p in &[10u32, 20] {
+                for &pe in &[1usize, 3] {
+                    let o = kernel(op, n_i, n_p, pe).resources(&noisy).lut;
+                    let c = match op {
+                        EwOp::Mul => model.mul,
+                        EwOp::Add => model.add,
+                        EwOp::ToInt => model.to_int,
+                        EwOp::Max => model.max,
+                    };
+                    let p = c.alpha * op_feature(op, n_i, n_p, pe) + c.beta;
+                    preds.push(p);
+                    obs.push(o);
+                    if n_p == 10 && pe == 1 {
+                        t.row(vec![
+                            format!("{op:?}"),
+                            n_i.to_string(),
+                            n_p.to_string(),
+                            pe.to_string(),
+                            format!("{o:.0}"),
+                            format!("{p:.0}"),
+                        ]);
+                    }
+                }
+            }
+        }
+    }
+    println!("{}", t.render());
+    let mre = mean_relative_error(&preds, &obs);
+    println!("mean relative error over {} configs: {:.1}% (paper: ~4%)", preds.len(), mre * 100.0);
+    assert!(mre < 0.20, "elementwise model MRE too high: {mre}");
+}

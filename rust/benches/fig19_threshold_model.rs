@@ -1,0 +1,62 @@
+//! Fig 19 reproduction: the analytical cost model of the multi-threshold
+//! operator vs out-of-context synthesis across the paper's full 244-point
+//! sweep: n_i ∈ {8,16,32}, n_o ∈ {2,4,8}, channels ∈ {1,64,128,256,512},
+//! PE ∈ {1,2,4}, LUT-only, 200 MHz target. Paper: MRE ≈ 15%.
+
+use sira_finn::analytical::thresholding_lut;
+use sira_finn::hw::{HwKernel, Thresholding, ThresholdStyle};
+use sira_finn::synth::{MemStyle, Synth};
+use sira_finn::util::stats::mean_relative_error;
+use sira_finn::util::table::Table;
+
+fn main() {
+    println!("=== Fig 19: thresholding analytical model vs synthesis ===");
+    let synth = Synth::with_seed(3);
+    let mut preds = Vec::new();
+    let mut obs = Vec::new();
+    let mut t = Table::new(&["n_i", "n_o", "C", "PE", "observed", "predicted"]);
+    let mut shown = 0;
+    for &n_i in &[8u32, 16, 32] {
+        for &n_o in &[2u32, 4, 8] {
+            for &c in &[1usize, 64, 128, 256, 512] {
+                for &pe in &[1usize, 2, 4] {
+                    let k = Thresholding {
+                        name: "f19".into(),
+                        channels: c,
+                        unique_rows: 0,
+                        elems_per_frame: c,
+                        in_bits: n_i,
+                        out_bits: n_o,
+                        pe,
+                        style: ThresholdStyle::BinarySearch,
+                        mem_style: MemStyle::Lut,
+                    };
+                    let o = k.resources(&synth).lut;
+                    let p = thresholding_lut(n_i, n_o, c, pe);
+                    preds.push(p);
+                    obs.push(o);
+                    if c == 256 && shown < 9 {
+                        shown += 1;
+                        t.row(vec![
+                            n_i.to_string(),
+                            n_o.to_string(),
+                            c.to_string(),
+                            pe.to_string(),
+                            format!("{o:.0}"),
+                            format!("{p:.0}"),
+                        ]);
+                    }
+                }
+            }
+        }
+    }
+    println!("{}(showing C=256 slice of {} configs)\n", t.render(), preds.len());
+    let mre = mean_relative_error(&preds, &obs);
+    println!(
+        "mean relative error over {} configurations: {:.1}% (paper: 15%)",
+        preds.len(),
+        mre * 100.0
+    );
+    assert_eq!(preds.len(), 135);
+    assert!(mre < 0.40, "thresholding model MRE too high: {mre}");
+}

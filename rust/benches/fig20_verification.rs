@@ -1,0 +1,99 @@
+//! Fig 20 reproduction + §7.1: empirical verification of SIRA ranges.
+//! Runs instrumented inference over a synthetic validation set on
+//! MNv1-w4a4 and compares per-channel observed ranges of the first
+//! quantized activation layer against the SIRA-analyzed ranges; also
+//! reports stuck channels.
+//!
+//! Expected shape: every observation falls inside the analyzed range
+//! (soundness); the analyzed range is conservative (≥ observed width);
+//! some stuck channels exist.
+
+mod common;
+
+use sira_finn::executor::{ExecOptions, Executor};
+use sira_finn::models;
+use sira_finn::passes::stuck::stuck_report;
+use sira_finn::sira::analyze;
+use sira_finn::util::table::Table;
+
+fn main() {
+    println!("=== Fig 20: instrumented vs SIRA ranges (MNv1-w4a4, first act layer) ===");
+    let m = models::mnv1_w4a4_scaled(8).unwrap(); // 28x28 for bench speed
+    let a = analyze(&m.graph, &m.input_ranges).unwrap();
+
+    // first activation quantizer after the stem conv
+    let first_q = m
+        .graph
+        .topo_nodes()
+        .unwrap()
+        .into_iter()
+        .filter(|n| n.op.name() == "Quant")
+        .find(|n| !m.graph.is_initializer(&n.inputs[0]) && n.inputs[0] != "x")
+        .map(|n| n.output().to_string())
+        .expect("no activation quantizer found");
+
+    // instrumented inference over a synthetic validation set
+    let data = models::gaussian_blobs(&m.input_shape, 10, 16, 99);
+    let mut exec = Executor::with_options(
+        &m.graph,
+        ExecOptions {
+            instrument: true,
+            verify_dtypes: false,
+        },
+    )
+    .unwrap();
+    for (x, _) in &data.samples {
+        exec.run_single(x).unwrap();
+    }
+
+    let (obs_lo, obs_hi) = &exec.instrumentation.observed[&first_q];
+    let r = a.get(&first_q).unwrap();
+    let c = obs_lo.numel();
+    let sira_lo = r.lo.broadcast_to(&[1, c, 1, 1]).unwrap();
+    let sira_hi = r.hi.broadcast_to(&[1, c, 1, 1]).unwrap();
+
+    let mut t = Table::new(&["ch", "obs lo", "obs hi", "SIRA lo", "SIRA hi"]);
+    for ch in 0..c.min(16) {
+        t.row(vec![
+            ch.to_string(),
+            format!("{:.3}", obs_lo.data()[ch]),
+            format!("{:.3}", obs_hi.data()[ch]),
+            format!("{:.3}", sira_lo.data()[ch]),
+            format!("{:.3}", sira_hi.data()[ch]),
+        ]);
+    }
+    println!("{}(first {} of {} channels)\n", t.render(), c.min(16), c);
+
+    // soundness: every observation within the analyzed range
+    let mut sound = true;
+    let mut conservative = 0usize;
+    for ch in 0..c {
+        sound &= obs_lo.data()[ch] >= sira_lo.data()[ch] - 1e-9;
+        sound &= obs_hi.data()[ch] <= sira_hi.data()[ch] + 1e-9;
+        if sira_hi.data()[ch] - sira_lo.data()[ch]
+            > obs_hi.data()[ch] - obs_lo.data()[ch] + 1e-9
+        {
+            conservative += 1;
+        }
+    }
+    common::check(sound, "all observed ranges fall within SIRA ranges (soundness)");
+    common::check(
+        conservative > 0,
+        "SIRA ranges are conservative on some channels (expected)",
+    );
+    println!("  conservative on {conservative}/{c} channels");
+
+    // stuck channels (§7.1)
+    let stuck = stuck_report(&m.graph, &a);
+    let total: usize = stuck.iter().map(|(_, v)| v.len()).sum();
+    println!("\nstuck channels across activation tensors: {total}");
+    for (tensor, chs) in stuck.iter().take(3) {
+        println!(
+            "  {tensor}: {} stuck (e.g. ch{} = {:.3})",
+            chs.len(),
+            chs[0].channel,
+            chs[0].value
+        );
+    }
+    common::check(total > 0, "stuck channels exist in the zoo models (§7.1)");
+}

@@ -1,0 +1,63 @@
+//! Fig 21 reproduction: breakdown of FPGA resources (LUT, BRAM, DSP) into
+//! MAC and non-MAC layers under the four optimization configurations
+//! (B)aseline, (A)ccumulator minimization, (T)hresholding, (AT) both.
+//!
+//! Expected shape (paper §7.2.1): MAC-layer resources stable across
+//! configurations; the savings concentrate in non-MAC layers; non-MAC
+//! DSPs eliminated entirely under AT.
+
+mod common;
+
+use sira_finn::util::table::Table;
+
+fn main() {
+    println!("=== Fig 21: MAC vs non-MAC resource breakdown ===");
+    let mut t = Table::new(&[
+        "Network", "Cfg", "MAC LUT", "nonMAC LUT", "MAC BRAM", "nonMAC BRAM", "MAC DSP",
+        "nonMAC DSP",
+    ]);
+    let mut stable_mac = true;
+    let mut nonmac_saved = true;
+    let mut nonmac_dsp_at = 0.0;
+    for (m, cycles) in common::workloads() {
+        let mut mac_base = 0.0;
+        let mut nonmac_base = 0.0;
+        for (label, acc, thr) in [
+            ("B", false, false),
+            ("A", true, false),
+            ("T", false, true),
+            ("AT", true, true),
+        ] {
+            let c = common::compile(&m, acc, thr, cycles);
+            let f = &c.fdna;
+            if label == "B" {
+                mac_base = f.mac.lut;
+                nonmac_base = f.non_mac.lut;
+            }
+            if label == "AT" {
+                // MAC resources should move much less than non-MAC
+                let mac_delta = (f.mac.lut - mac_base).abs() / mac_base.max(1.0);
+                stable_mac &= mac_delta < 0.30;
+                nonmac_saved &= f.non_mac.lut <= nonmac_base * 1.01;
+                nonmac_dsp_at += f.non_mac.dsp;
+            }
+            t.row(vec![
+                m.name.to_string(),
+                label.into(),
+                format!("{:.0}", f.mac.lut),
+                format!("{:.0}", f.non_mac.lut),
+                format!("{:.1}", f.mac.bram18),
+                format!("{:.1}", f.non_mac.bram18),
+                format!("{:.0}", f.mac.dsp),
+                format!("{:.0}", f.non_mac.dsp),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    common::check(stable_mac, "MAC-layer resources stable across optimizations");
+    common::check(nonmac_saved, "savings concentrate in non-MAC layers");
+    common::check(
+        nonmac_dsp_at == 0.0,
+        "non-MAC DSPs eliminated entirely under AT (paper §7.2.1)",
+    );
+}

@@ -1,0 +1,62 @@
+//! Fig 22 reproduction: per-layer accumulator width histograms for the
+//! four QNN workloads, comparing the datatype bound against the
+//! SIRA-optimized widths (μ_D vs μ_S).
+//!
+//! Expected shape (paper §7.2.2): SIRA accumulators ≈22% smaller than the
+//! datatype bound and ≈63% smaller than 32-bit on average; 8-bit
+//! first/last layers need the widest accumulators; MNv1 depthwise convs
+//! concentrate at small widths (short dot products).
+
+mod common;
+
+use sira_finn::util::stats::int_histogram;
+use sira_finn::util::table::Table;
+
+fn main() {
+    println!("=== Fig 22: accumulator width histograms (datatype vs SIRA) ===");
+    let mut all_s = Vec::new();
+    let mut all_d = Vec::new();
+    for (m, cycles) in common::workloads() {
+        let c = common::compile(&m, true, true, cycles);
+        let sira: Vec<u32> = c.acc_report.rows.iter().map(|r| r.bits_sira).collect();
+        let dtype: Vec<u32> = c.acc_report.rows.iter().map(|r| r.bits_datatype).collect();
+        all_s.extend(sira.iter().map(|&b| b as f64));
+        all_d.extend(dtype.iter().map(|&b| b as f64));
+        let mu_s = sira.iter().sum::<u32>() as f64 / sira.len() as f64;
+        let mu_d = dtype.iter().sum::<u32>() as f64 / dtype.len() as f64;
+        println!("\n{} ({} MAC layers): μ_S = {mu_s:.1}, μ_D = {mu_d:.1}", m.name, sira.len());
+        let mut t = Table::new(&["bits", "SIRA count", "datatype count"]);
+        let hs = int_histogram(&sira);
+        let hd = int_histogram(&dtype);
+        let all_bits: std::collections::BTreeSet<u32> = hs
+            .iter()
+            .map(|&(b, _)| b)
+            .chain(hd.iter().map(|&(b, _)| b))
+            .collect();
+        for b in all_bits {
+            let cs = hs.iter().find(|&&(x, _)| x == b).map(|&(_, c)| c).unwrap_or(0);
+            let cd = hd.iter().find(|&&(x, _)| x == b).map(|&(_, c)| c).unwrap_or(0);
+            t.row(vec![
+                b.to_string(),
+                format!("{}", "#".repeat(cs)),
+                format!("{}", "#".repeat(cd)),
+            ]);
+        }
+        println!("{}", t.render());
+        // per-layer soundness: SIRA never exceeds the datatype bound
+        for r in &c.acc_report.rows {
+            assert!(r.bits_sira <= r.bits_datatype, "{}", r.node);
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let vs_dtype = 1.0 - mean(&all_s) / mean(&all_d);
+    let vs_32 = 1.0 - mean(&all_s) / 32.0;
+    println!(
+        "\nSIRA accumulators: {:.0}% smaller than datatype bound (paper: 22%), \
+         {:.0}% smaller than 32-bit (paper: 63%)",
+        vs_dtype * 100.0,
+        vs_32 * 100.0
+    );
+    common::check(vs_dtype > 0.10, "SIRA meaningfully below the datatype bound");
+    common::check(vs_32 > 0.40, "SIRA far below 32-bit accumulation");
+}

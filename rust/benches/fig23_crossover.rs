@@ -1,0 +1,68 @@
+//! Fig 23 reproduction: LUT cost prediction for thresholding vs composite
+//! (fixed16.8) layer tails as output bitwidth grows, (a) sweeping channel
+//! count and (b) sweeping PE parallelism (24-bit inputs, per-channel
+//! granularity).
+//!
+//! Expected shape: thresholding cost is exponential in output bits
+//! (straight lines on the log axis), composite is near-constant;
+//! thresholding wins < 4-bit outputs, composite wins > 8-bit, crossover
+//! in between moves with channels (memory-dominated) and PE
+//! (compute-dominated).
+
+use sira_finn::analytical::{crossover_out_bits, fit_elementwise_model, thresholding_lut};
+use sira_finn::synth::Synth;
+use sira_finn::util::table::Table;
+
+fn main() {
+    println!("=== Fig 23: thresholding vs composite crossover (n_i=24, per-channel) ===");
+    let model = fit_elementwise_model(&Synth::exact());
+
+    println!("\n(a) channel sweep at PE=4");
+    let mut t = Table::new(&["n_o", "thr C=64", "thr C=256", "thr C=1024", "comp C=64", "comp C=256", "comp C=1024"]);
+    for n_o in 1..=10u32 {
+        t.row(vec![
+            n_o.to_string(),
+            format!("{:.0}", thresholding_lut(24, n_o, 64, 4)),
+            format!("{:.0}", thresholding_lut(24, n_o, 256, 4)),
+            format!("{:.0}", thresholding_lut(24, n_o, 1024, 4)),
+            format!("{:.0}", model.composite_tail_lut(24, 16, 64, 4)),
+            format!("{:.0}", model.composite_tail_lut(24, 16, 256, 4)),
+            format!("{:.0}", model.composite_tail_lut(24, 16, 1024, 4)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("(b) PE sweep at C=256");
+    let mut t = Table::new(&["n_o", "thr PE=1", "thr PE=4", "thr PE=16", "comp PE=1", "comp PE=4", "comp PE=16"]);
+    for n_o in 1..=10u32 {
+        t.row(vec![
+            n_o.to_string(),
+            format!("{:.0}", thresholding_lut(24, n_o, 256, 1)),
+            format!("{:.0}", thresholding_lut(24, n_o, 256, 4)),
+            format!("{:.0}", thresholding_lut(24, n_o, 256, 16)),
+            format!("{:.0}", model.composite_tail_lut(24, 16, 256, 1)),
+            format!("{:.0}", model.composite_tail_lut(24, 16, 256, 4)),
+            format!("{:.0}", model.composite_tail_lut(24, 16, 256, 16)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // crossover points
+    println!("crossover n_o (composite becomes cheaper):");
+    let mut prev = u32::MAX;
+    let mut monotone = true;
+    for &c in &[16usize, 64, 256, 1024, 4096] {
+        let x = crossover_out_bits(&model, 24, 16, c, 4).unwrap_or(17);
+        println!("  C={c:>5}, PE=4 -> n_o = {x}");
+        monotone &= x <= prev;
+        prev = x;
+    }
+    // shape checks
+    let thr_lo = thresholding_lut(24, 2, 256, 4);
+    let comp = model.composite_tail_lut(24, 16, 256, 4);
+    let thr_hi = thresholding_lut(24, 10, 256, 4);
+    assert!(thr_lo < comp, "thresholding must win at 2-bit outputs");
+    assert!(thr_hi > comp, "composite must win at 10-bit outputs");
+    assert!(monotone, "crossover must move earlier with more channels");
+    println!("\n  [ok] exponential-vs-flat crossover shape holds; crossover moves with C");
+}

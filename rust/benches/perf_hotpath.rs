@@ -1,0 +1,121 @@
+//! Hot-path performance benchmarks (EXPERIMENTS.md §Perf): timings for
+//! the compiler passes (SIRA analysis, streamlining, threshold
+//! conversion), the integer executor inference path, the structural
+//! synthesis sweep and the serving coordinator.
+
+use std::collections::BTreeMap;
+
+use sira_finn::bench::{section, Bencher};
+use sira_finn::coordinator::{BatchPolicy, Coordinator};
+use sira_finn::executor::Executor;
+use sira_finn::models;
+use sira_finn::passes::thresholds::convert_to_thresholds;
+use sira_finn::passes::{fold, lower, streamline};
+use sira_finn::sira::analyze;
+use sira_finn::synth::Synth;
+use sira_finn::tensor::Tensor;
+
+fn main() {
+    let b = Bencher::default();
+    section("SIRA analysis");
+    for m in [
+        models::tfc_w2a2().unwrap(),
+        models::cnv_w2a2().unwrap(),
+        models::rn8_w3a3().unwrap(),
+        models::mnv1_w4a4_scaled(4).unwrap(),
+    ] {
+        let r = b.run(&format!("sira::analyze {}", m.name), || {
+            analyze(&m.graph, &m.input_ranges).unwrap()
+        });
+        println!("{r}");
+    }
+
+    section("streamlining + threshold conversion (CNV-w2a2)");
+    let m = models::cnv_w2a2().unwrap();
+    let prepped = {
+        let mut g = m.graph.clone();
+        lower::lower_all(&mut g).unwrap();
+        fold::fold_constants(&mut g, false).unwrap();
+        g
+    };
+    let r = b.run("streamline (extract + rules to fixpoint)", || {
+        let mut g = prepped.clone();
+        streamline::extract_quant_scales(&mut g).unwrap();
+        fold::duplicate_shared_initializers(&mut g).unwrap();
+        streamline::streamline(&mut g).unwrap();
+        g
+    });
+    println!("{r}");
+    let streamlined = {
+        let mut g = prepped.clone();
+        streamline::extract_quant_scales(&mut g).unwrap();
+        fold::duplicate_shared_initializers(&mut g).unwrap();
+        streamline::streamline(&mut g).unwrap();
+        g
+    };
+    let r = b.run("convert_to_thresholds", || {
+        let mut g = streamlined.clone();
+        convert_to_thresholds(&mut g, &m.input_ranges).unwrap()
+    });
+    println!("{r}");
+
+    section("executor inference (images/s)");
+    for (zm, reps) in [(models::tfc_w2a2().unwrap(), 1.0), (models::cnv_w2a2().unwrap(), 1.0)] {
+        let x = Tensor::full(&zm.input_shape, 100.0);
+        let mut e = Executor::new(&zm.graph).unwrap();
+        let r = b.run(&format!("executor {}", zm.name), || {
+            e.run_single(&x).unwrap()
+        });
+        println!("{r}  ({:.1} img/s)", r.throughput(reps));
+    }
+
+    section("structural synthesis sweep (Fig 19 grid)");
+    let synth = Synth::with_seed(1);
+    let r = b.run("135-config thresholding sweep", || {
+        use sira_finn::hw::{HwKernel, Thresholding, ThresholdStyle};
+        let mut total = 0.0;
+        for &n_i in &[8u32, 16, 32] {
+            for &n_o in &[2u32, 4, 8] {
+                for &c in &[1usize, 64, 128, 256, 512] {
+                    for &pe in &[1usize, 2, 4] {
+                        total += Thresholding {
+                            name: String::new(),
+                            channels: c,
+                            unique_rows: 0,
+                            elems_per_frame: c,
+                            in_bits: n_i,
+                            out_bits: n_o,
+                            pe,
+                            style: ThresholdStyle::BinarySearch,
+                            mem_style: sira_finn::synth::MemStyle::Lut,
+                        }
+                        .resources(&synth)
+                        .lut;
+                    }
+                }
+            }
+        }
+        total
+    });
+    println!("{r}");
+
+    section("serving coordinator (TFC, 2 workers)");
+    let zm = models::tfc_w2a2().unwrap();
+    let g = std::sync::Arc::new(zm.graph);
+    let coord = Coordinator::start(2, BatchPolicy::default(), {
+        let g = std::sync::Arc::clone(&g);
+        move || {
+            let g = std::sync::Arc::clone(&g);
+            let mut cache: BTreeMap<usize, ()> = BTreeMap::new();
+            let _ = &mut cache;
+            move |x: &Tensor| {
+                let mut e = Executor::new(&g)?;
+                Ok(e.run_single(x)?.remove(0))
+            }
+        }
+    });
+    let x = Tensor::full(&[1, 784], 100.0);
+    let r = b.run("coordinator.infer", || coord.infer(x.clone()).unwrap());
+    println!("{r}  ({:.1} req/s single-stream)", r.throughput(1.0));
+    coord.shutdown();
+}

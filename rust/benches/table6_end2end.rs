@@ -1,0 +1,73 @@
+//! Table 6 reproduction: out-of-context synthesis results for the four
+//! QNN workloads with and without SIRA optimizations (accumulator
+//! minimization "Acc" and threshold conversion "Thr"), reporting
+//! LUT/rLUT, BRAM/rBRAM, DSP/rDSP, throughput and latency.
+//!
+//! Expected shape (paper §7.2): with both optimizations, average LUT
+//! reduction ~17%, DSP ~66%, slight BRAM increase; throughput/latency
+//! unchanged by the optimizations.
+
+mod common;
+
+use sira_finn::bench::{section, Bencher};
+use sira_finn::util::table::{sci, Table};
+
+fn main() {
+    section("Table 6: end-to-end QNN workloads (B / A / T / AT)");
+    let mut t = Table::new(&[
+        "Network", "Acc", "Thr", "LUT", "rLUT", "BRAM", "rBRAM", "DSP", "rDSP",
+        "Thr.put(FPS)", "Latency(ms)",
+    ]);
+    let mut rl_at = Vec::new();
+    let mut rd_at = Vec::new();
+    let mut rb_at = Vec::new();
+    for (m, cycles) in common::workloads() {
+        let mut base = None;
+        for (acc, thr) in [(false, false), (true, false), (false, true), (true, true)] {
+            let c = common::compile(&m, acc, thr, cycles);
+            let f = &c.fdna;
+            let (b_lut, b_bram, b_dsp) =
+                *base.get_or_insert((f.total.lut, f.total.bram18, f.total.dsp));
+            let rl = f.total.lut / b_lut;
+            let rb = if b_bram > 0.0 { f.total.bram18 / b_bram } else { 1.0 };
+            let rd = if b_dsp > 0.0 { f.total.dsp / b_dsp } else { 1.0 };
+            if acc && thr {
+                rl_at.push(rl);
+                rb_at.push(rb);
+                rd_at.push(rd);
+            }
+            t.row(vec![
+                m.name.to_string(),
+                if acc { "x" } else { "" }.into(),
+                if thr { "x" } else { "" }.into(),
+                format!("{:.0}", f.total.lut),
+                format!("{rl:.2}"),
+                format!("{:.1}", f.total.bram18),
+                format!("{rb:.2}"),
+                format!("{:.0}", f.total.dsp),
+                format!("{rd:.2}"),
+                sci(f.perf.fps),
+                format!("{:.3}", f.perf.latency_ms),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "AT means: rLUT {:.2} (paper 0.83), rBRAM {:.2} (paper 1.04), rDSP {:.2} (paper 0.34)",
+        mean(&rl_at),
+        mean(&rb_at),
+        mean(&rd_at)
+    );
+    common::check(mean(&rl_at) < 1.0, "SIRA opts reduce LUTs on average");
+    common::check(mean(&rd_at) < 0.7, "SIRA opts cut DSPs substantially");
+
+    // timing: full compile of the largest workload
+    let b = Bencher::quick();
+    let (m, cycles) = common::workloads().remove(1).into();
+    let r = b.run("compile CNV-w2a2 (frontend+backend)", || {
+        common::compile(&m, true, true, cycles)
+    });
+    println!("\n{r}");
+}

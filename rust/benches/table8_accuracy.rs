@@ -1,0 +1,98 @@
+//! Table 8 reproduction ("This work" rows): task accuracy of the two
+//! layer-tail implementation styles — exact thresholding (thr) vs
+//! fixed-point composite (fix) — for CNV-w2a2 and MNv1-w4a4.
+//!
+//! The paper reports trained-checkpoint accuracy on CIFAR-10/ImageNet
+//! (thr: 88.8 / 69.9; fix: 87.9 / 68.5 — thresholding preserves slightly
+//! more accuracy because it is numerically exact, Eq. 3). With seeded
+//! weights we measure the same *shape* on a synthetic task: prediction
+//! agreement with the float-scale reference model. Thresholding must be
+//! exact (100% agreement); fixed-point tails may flip some predictions.
+
+
+use sira_finn::executor::Executor;
+use sira_finn::models;
+use sira_finn::passes::fixedpoint::quantize_tail_params;
+use sira_finn::passes::thresholds::convert_to_thresholds;
+use sira_finn::passes::{fold, lower, streamline};
+use sira_finn::util::table::Table;
+
+fn predictions(g: &sira_finn::graph::Graph, data: &models::Dataset) -> Vec<usize> {
+    let mut e = Executor::new(g).unwrap();
+    data.samples
+        .iter()
+        .map(|(x, _)| e.run_single(x).unwrap()[0].argmax_rows().unwrap()[0])
+        .collect()
+}
+
+fn agreement(a: &[usize], b: &[usize]) -> f64 {
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+fn main() {
+    println!("=== Table 8: layer-tail style vs accuracy ('This work' rows) ===");
+    let mut t = Table::new(&["Network", "Scale impl", "BatchNorm", "agreement vs float ref"]);
+    let mut all_thr_exact = true;
+    for (m, samples) in [
+        (models::cnv_w2a2().unwrap(), 40),
+        (models::mnv1_w4a4_scaled(8).unwrap(), 12),
+    ] {
+        let data = models::gaussian_blobs(&m.input_shape, m.classes.min(10), samples, 5);
+        let base_preds = predictions(&m.graph, &data);
+
+        // thr: full streamlining + threshold conversion (exact by Eq. 3)
+        let mut g_thr = m.graph.clone();
+        lower::lower_all(&mut g_thr).unwrap();
+        fold::fold_constants(&mut g_thr, false).unwrap();
+        streamline::extract_quant_scales(&mut g_thr).unwrap();
+        fold::duplicate_shared_initializers(&mut g_thr).unwrap();
+        streamline::streamline(&mut g_thr).unwrap();
+        convert_to_thresholds(&mut g_thr, &m.input_ranges).unwrap();
+        let thr_agree = agreement(&predictions(&g_thr, &data), &base_preds);
+        all_thr_exact &= thr_agree == 1.0;
+
+        // fix: streamlined composite tail with fixed-point parameters;
+        // per §6.2.1 the format is grid-searched for bounded accuracy
+        // loss (we sweep total width, integer bits chosen per tensor)
+        let mut fix_agree = 0.0;
+        let mut fix_w = 0;
+        for w in [16u32, 24, 32] {
+            let mut g_fix = m.graph.clone();
+            lower::lower_all(&mut g_fix).unwrap();
+            fold::fold_constants(&mut g_fix, false).unwrap();
+            streamline::extract_quant_scales(&mut g_fix).unwrap();
+            fold::duplicate_shared_initializers(&mut g_fix).unwrap();
+            streamline::streamline(&mut g_fix).unwrap();
+            quantize_tail_params(&mut g_fix, w).unwrap();
+            fix_agree = agreement(&predictions(&g_fix, &data), &base_preds);
+            fix_w = w;
+            if fix_agree >= 0.95 {
+                break; // paper: at most 1.5pp accuracy drop
+            }
+        }
+
+        t.row(vec![
+            m.name.to_string(),
+            "thr".into(),
+            "thr".into(),
+            format!("{:.1}%", thr_agree * 100.0),
+        ]);
+        t.row(vec![
+            m.name.to_string(),
+            format!("fix{fix_w}"),
+            "fix".into(),
+            format!("{:.1}%", fix_agree * 100.0),
+        ]);
+        assert!(
+            thr_agree >= fix_agree,
+            "{}: thresholding must preserve at least as much accuracy",
+            m.name
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "  [{}] thresholding tails are numerically exact (paper: thr rows score higher)",
+        if all_thr_exact { "ok" } else { "!!" }
+    );
+    assert!(all_thr_exact, "threshold conversion must be lossless");
+}

@@ -1,0 +1,656 @@
+//! FDNA builder (the FINN backend, §5.1): maps a streamlined QNN graph
+//! onto hardware kernel instances, solves the folding configuration for a
+//! target throughput (§6.2.2), inserts FIFOs and width converters, and
+//! aggregates resources with the MAC / non-MAC breakdown of Fig 21.
+
+use anyhow::{bail, Context, Result};
+
+use crate::dataflow::{fifo_depths, simulate, PipelineReport};
+use crate::graph::{DataType, Graph, Op};
+use crate::hw::{
+    Dwc, ElementwiseKernel, EwDtype, EwOp, Fifo, KernelCategory, KernelInstance, Mvu,
+    PoolKernel, SlidingWindow, Thresholding, ThresholdStyle, MAX_STREAM_BITS,
+};
+use crate::passes::accmin::{minimize_accumulators, AccPolicy, AccReport};
+use crate::passes::thresholds::{convert_to_thresholds, ThresholdReport};
+use crate::passes::{fold, lower, streamline};
+use crate::sira::{analyze, Analysis, SiRange};
+use crate::synth::{MemStyle, Resources, Synth};
+use crate::util::bits_for_range;
+
+/// Layer-tail implementation mode (Fig 14).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TailStyle {
+    /// option 1: elementwise meta-kernels with the given arithmetic dtype
+    Composite(EwDtype),
+    /// option 2: threshold conversion + RTL thresholding kernel
+    Thresholding(ThresholdStyle),
+}
+
+/// Full compile configuration.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    pub tail_style: TailStyle,
+    pub acc_policy: AccPolicy,
+    /// target cycles per frame for the folding solver (lower = more
+    /// parallel = more resources)
+    pub target_cycles: u64,
+    pub freq_hz: f64,
+    pub mem_style: MemStyle,
+    /// force LUT-only arithmetic in layer tails (microbenchmark mode)
+    pub force_lut_tails: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            tail_style: TailStyle::Thresholding(ThresholdStyle::BinarySearch),
+            acc_policy: AccPolicy::Sira,
+            target_cycles: 1 << 16,
+            freq_hz: 200e6,
+            mem_style: MemStyle::Auto,
+            force_lut_tails: false,
+        }
+    }
+}
+
+/// A compiled FDNA.
+pub struct Fdna {
+    pub kernels: Vec<KernelInstance>,
+    pub perf: PipelineReport,
+    pub total: Resources,
+    pub mac: Resources,
+    pub non_mac: Resources,
+}
+
+/// Result of the full frontend+backend compile.
+pub struct CompiledAccel {
+    pub graph: Graph,
+    pub analysis: Analysis,
+    pub acc_report: AccReport,
+    pub thr_report: Option<ThresholdReport>,
+    pub fdna: Fdna,
+}
+
+/// Bits carried by a tensor: datatype annotation first, then the SIRA
+/// integer range, then a conservative float default.
+fn tensor_bits(g: &Graph, analysis: &Analysis, name: &str, default: u32) -> u32 {
+    if let Some(dt) = g.dtypes.get(name) {
+        return dt.bits();
+    }
+    if let Ok(r) = analysis.get(name) {
+        if let Some(ic) = &r.int {
+            let (lo, hi) = ic.int_bounds();
+            return bits_for_range(lo, hi);
+        }
+    }
+    default
+}
+
+/// Smallest divisor `d` of `n` with `n/d <= limit` (folding helper).
+fn divisor_for(n: usize, limit: u64) -> usize {
+    if n == 0 {
+        return 1;
+    }
+    for d in 1..=n {
+        if n % d == 0 && (n / d) as u64 <= limit {
+            return d;
+        }
+    }
+    n
+}
+
+/// Largest divisor of `n` that is <= `pe` and keeps the stream width
+/// `pe * bits` within the 8192-bit ap_int limit (§6.2.2: "the output of
+/// an individual layer cannot be wider than this limit, thus limiting
+/// the available parallelism").
+fn clamp_pe(n: usize, pe: usize, bits: u32) -> usize {
+    let max_pe = (MAX_STREAM_BITS / bits.max(1) as u64).max(1) as usize;
+    let mut best = 1;
+    for d in 1..=n.max(1) {
+        if n.max(1) % d == 0 && d <= pe && d <= max_pe {
+            best = d;
+        }
+    }
+    best
+}
+
+/// Folding for elementwise-style kernels: channels processed PE at a
+/// time over `elems` total elements; pick the smallest PE meeting the
+/// cycle target, clamped by the stream-width limit.
+fn ew_pe(channels: usize, elems: usize, tc: u64, bits: u32) -> usize {
+    let spatial = (elems / channels.max(1)).max(1) as u64;
+    let limit = (tc / spatial).max(1);
+    let pe = divisor_for(channels.max(1), limit);
+    clamp_pe(channels.max(1), pe, bits)
+}
+
+/// Frontend: lower → fold → extract scales → streamline (§4.1.2)
+/// [→ threshold conversion (§4.1.3)] → SIRA → accumulator minimization.
+pub fn frontend(
+    g: &mut Graph,
+    input_ranges: &std::collections::BTreeMap<String, SiRange>,
+    opts: &CompileOptions,
+) -> Result<(Analysis, AccReport, Option<ThresholdReport>)> {
+    lower::lower_all(g)?;
+    fold::fold_constants(g, false)?;
+    streamline::extract_quant_scales(g)?;
+    fold::duplicate_shared_initializers(g)?;
+    streamline::streamline(g)?;
+    let thr_report = if matches!(opts.tail_style, TailStyle::Thresholding(_)) {
+        Some(convert_to_thresholds(g, input_ranges)?)
+    } else {
+        None
+    };
+    let analysis = analyze(g, input_ranges)?;
+    let acc_report = minimize_accumulators(g, &analysis, opts.acc_policy)?;
+    // annotate remaining pure-integer tensors
+    for (name, r) in &analysis.ranges {
+        if g.dtypes.contains_key(name) {
+            continue;
+        }
+        if let Some(ic) = &r.int {
+            if ic.is_pure_integer() {
+                let (lo, hi) = ic.int_bounds();
+                g.dtypes.insert(name.clone(), DataType::for_range(lo, hi));
+            }
+        }
+    }
+    Ok((analysis, acc_report, thr_report))
+}
+
+/// Backend: map graph nodes to kernel instances and fold for throughput.
+pub fn backend(g: &Graph, analysis: &Analysis, opts: &CompileOptions) -> Result<Fdna> {
+    let mut kernels: Vec<KernelInstance> = Vec::new();
+    let tc = opts.target_cycles;
+    let tail_dtype = match opts.tail_style {
+        TailStyle::Composite(dt) => dt,
+        TailStyle::Thresholding(_) => EwDtype::Float32, // residual non-converted ops
+    };
+    let frame_elems = |shape: &[usize]| -> usize { shape.iter().product() };
+
+    for node in g.topo_nodes()? {
+        let out = node.output();
+        let out_shape = g.shapes[out].clone();
+        match &node.op {
+            Op::MatMul => {
+                let (k, m) = (g.shapes[&node.inputs[1]][0], g.shapes[&node.inputs[1]][1]);
+                let abits = tensor_bits(g, analysis, &node.inputs[0], 8);
+                let wbits = tensor_bits(g, analysis, &node.inputs[1], 8);
+                let acc_bits = tensor_bits(g, analysis, out, 32);
+                let vectors = out_shape[..out_shape.len() - 1].iter().product::<usize>();
+                let per_vec = tc / vectors.max(1) as u64;
+                // fold: choose pe then simd, clamped by stream widths
+                let pe = clamp_pe(m, divisor_for(m, per_vec.max(1)), acc_bits);
+                let simd = clamp_pe(
+                    k,
+                    divisor_for(k, (per_vec.max(1) / (m / pe) as u64).max(1)),
+                    abits,
+                );
+                kernels.push(KernelInstance {
+                    kernel: Box::new(Mvu {
+                        name: format!("MVU_{}", node.name),
+                        mh: m,
+                        mw: k,
+                        pe,
+                        simd,
+                        wbits,
+                        abits,
+                        acc_bits,
+                        vectors_per_frame: vectors,
+                        mem_style: opts.mem_style,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            Op::Conv { spec, group } => {
+                let in_shape = g.shapes[&node.inputs[0]].clone();
+                let w_shape = g.shapes[&node.inputs[1]].clone();
+                let abits = tensor_bits(g, analysis, &node.inputs[0], 8);
+                let wbits = tensor_bits(g, analysis, &node.inputs[1], 8);
+                let acc_bits = tensor_bits(g, analysis, out, 32);
+                let depthwise = *group > 1;
+                let (oh, ow) = (out_shape[2], out_shape[3]);
+                let vectors = oh * ow;
+                let (mh, mw) = if depthwise {
+                    (w_shape[0], spec.kernel.0 * spec.kernel.1)
+                } else {
+                    (w_shape[0], w_shape[1] * spec.kernel.0 * spec.kernel.1)
+                };
+                let per_vec = (tc / vectors.max(1) as u64).max(1);
+                let pe = clamp_pe(mh, divisor_for(mh, per_vec), acc_bits);
+                let simd = clamp_pe(
+                    mw,
+                    divisor_for(mw, (per_vec / (mh / pe) as u64).max(1)),
+                    abits,
+                );
+                kernels.push(KernelInstance {
+                    kernel: Box::new(SlidingWindow {
+                        name: format!("SWU_{}", node.name),
+                        channels: in_shape[1],
+                        kernel: spec.kernel.0,
+                        ifm_dim: in_shape[2],
+                        ofm_dim: oh,
+                        stride: spec.stride.0,
+                        in_bits: abits,
+                        simd: if depthwise { pe } else { simd },
+                        mem_style: opts.mem_style,
+                    }),
+                    source_node: node.name.clone(),
+                });
+                kernels.push(KernelInstance {
+                    kernel: Box::new(Mvu {
+                        name: format!("MVU_{}", node.name),
+                        mh,
+                        mw,
+                        pe,
+                        simd,
+                        wbits,
+                        abits,
+                        acc_bits,
+                        vectors_per_frame: vectors,
+                        mem_style: opts.mem_style,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            Op::MultiThreshold { .. } => {
+                let th = g
+                    .initializer(&node.inputs[1])
+                    .context("thresholds must be initializers")?;
+                let (c, n) = (th.shape()[0], th.shape()[1]);
+                let in_bits = tensor_bits(g, analysis, &node.inputs[0], 24);
+                let out_bits = crate::util::ceil_log2(n as u64 + 1).max(1);
+                let elems = frame_elems(&out_shape);
+                let data_ch = if out_shape.len() >= 2 { out_shape[1] } else { 1 };
+                let pe = ew_pe(data_ch, elems, tc, in_bits);
+                let style = match opts.tail_style {
+                    TailStyle::Thresholding(s) => s,
+                    _ => ThresholdStyle::BinarySearch,
+                };
+                // threshold compression (paper §9): channels with
+                // identical threshold vectors share one memory row
+                let unique_rows = {
+                    let mut rows: std::collections::BTreeSet<Vec<u64>> = Default::default();
+                    for ch in 0..c {
+                        let row: Vec<u64> = th.data()[ch * n..(ch + 1) * n]
+                            .iter()
+                            .map(|v| v.to_bits())
+                            .collect();
+                        rows.insert(row);
+                    }
+                    rows.len()
+                };
+                kernels.push(KernelInstance {
+                    kernel: Box::new(Thresholding {
+                        name: format!("THR_{}", node.name),
+                        channels: c,
+                        unique_rows,
+                        elems_per_frame: elems,
+                        in_bits,
+                        out_bits,
+                        pe,
+                        style,
+                        mem_style: opts.mem_style,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            Op::Mul | Op::Add | Op::Div | Op::Sub => {
+                let elems = frame_elems(&out_shape);
+                let in_bits = tensor_bits(g, analysis, &node.inputs[0], 24);
+                // parameter side (const) or second stream (residual add)
+                let (param_bits, per_channel, channels) = match node
+                    .inputs
+                    .get(1)
+                    .filter(|i| g.is_initializer(i))
+                {
+                    Some(p) => {
+                        let t = &g.initializers[p.as_str()];
+                        let bits = if t.is_integral() {
+                            let (lo, hi) = (t.min() as i64, t.max() as i64);
+                            bits_for_range(lo.min(0), hi.max(1))
+                        } else {
+                            tail_dtype.bits()
+                        };
+                        (bits, t.numel() > 1, t.numel())
+                    }
+                    None => (in_bits, false, 1),
+                };
+                let dtype = match g.dtypes.get(out) {
+                    Some(dt) if dt.is_integer() => EwDtype::Int(dt.bits()),
+                    _ => tail_dtype,
+                };
+                let op = match node.op {
+                    Op::Mul | Op::Div => EwOp::Mul,
+                    _ => EwOp::Add,
+                };
+                let data_ch = out_shape.get(1).copied().unwrap_or(1);
+                let pe = ew_pe(data_ch, elems, tc, in_bits.max(dtype.bits()));
+                kernels.push(KernelInstance {
+                    kernel: Box::new(ElementwiseKernel {
+                        name: format!("EW_{}", node.name),
+                        op,
+                        in_bits,
+                        param_bits,
+                        out_bits: tensor_bits(g, analysis, out, in_bits + param_bits),
+                        dtype,
+                        channels,
+                        per_channel,
+                        elems_per_frame: elems,
+                        pe,
+                        force_lut: opts.force_lut_tails,
+                        mem_style: opts.mem_style,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            Op::Relu | Op::Clip { .. } => {
+                let elems = frame_elems(&out_shape);
+                let in_bits = tensor_bits(g, analysis, &node.inputs[0], 24);
+                let data_ch = out_shape.get(1).copied().unwrap_or(1);
+                let pe = ew_pe(data_ch, elems, tc, in_bits);
+                kernels.push(KernelInstance {
+                    kernel: Box::new(ElementwiseKernel {
+                        name: format!("EW_{}", node.name),
+                        op: EwOp::Max,
+                        in_bits,
+                        param_bits: 0,
+                        out_bits: in_bits,
+                        dtype: match g.dtypes.get(&node.inputs[0]) {
+                            Some(dt) if dt.is_integer() => EwDtype::Int(in_bits),
+                            _ => tail_dtype,
+                        },
+                        channels: 1,
+                        per_channel: false,
+                        elems_per_frame: elems,
+                        pe,
+                        force_lut: opts.force_lut_tails,
+                        mem_style: opts.mem_style,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            Op::Quant { .. } => {
+                // post-streamlining unit quantizer = ToInt conversion
+                let elems = frame_elems(&out_shape);
+                let in_bits = tensor_bits(g, analysis, &node.inputs[0], 24);
+                let out_bits = tensor_bits(g, analysis, out, 8);
+                let data_ch = out_shape.get(1).copied().unwrap_or(1);
+                let pe = ew_pe(data_ch, elems, tc, in_bits.max(tail_dtype.bits()));
+                kernels.push(KernelInstance {
+                    kernel: Box::new(ElementwiseKernel {
+                        name: format!("EW_{}", node.name),
+                        op: EwOp::ToInt,
+                        in_bits: in_bits.max(tail_dtype.bits()),
+                        param_bits: 0,
+                        out_bits,
+                        dtype: tail_dtype,
+                        channels: 1,
+                        per_channel: false,
+                        elems_per_frame: elems,
+                        pe,
+                        force_lut: opts.force_lut_tails,
+                        mem_style: opts.mem_style,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            Op::MaxPool { spec } | Op::AveragePool { spec } => {
+                let in_shape = g.shapes[&node.inputs[0]].clone();
+                let in_bits = tensor_bits(g, analysis, &node.inputs[0], 8);
+                let windows = (out_shape[2] * out_shape[3] * spec.kernel.0 * spec.kernel.1)
+                    .max(1) as u64;
+                let pe = ew_pe(in_shape[1], in_shape[1] * windows as usize, tc, in_bits);
+                kernels.push(KernelInstance {
+                    kernel: Box::new(PoolKernel {
+                        name: format!("POOL_{}", node.name),
+                        channels: in_shape[1],
+                        kernel: spec.kernel.0,
+                        ifm_dim: in_shape[2],
+                        in_bits,
+                        pe,
+                        is_max: matches!(node.op, Op::MaxPool { .. }),
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            Op::GlobalAveragePool => {
+                let in_shape = g.shapes[&node.inputs[0]].clone();
+                let in_bits = tensor_bits(g, analysis, &node.inputs[0], 8);
+                kernels.push(KernelInstance {
+                    kernel: Box::new(PoolKernel {
+                        name: format!("GAP_{}", node.name),
+                        channels: in_shape[1],
+                        kernel: in_shape[2],
+                        ifm_dim: in_shape[2],
+                        in_bits,
+                        pe: ew_pe(
+                            in_shape[1],
+                            in_shape[1] * in_shape[2] * in_shape[3],
+                            tc,
+                            in_bits,
+                        ),
+                        is_max: false,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            // pure data movement: no hardware
+            Op::Reshape { .. } | Op::Flatten { .. } | Op::Transpose { .. } | Op::Identity => {}
+            Op::Concat { .. } => {
+                // stream merger: modeled as a width-matched mux
+                kernels.push(KernelInstance {
+                    kernel: Box::new(Dwc {
+                        name: format!("CAT_{}", node.name),
+                        in_bits: 64,
+                        out_bits: 64,
+                    }),
+                    source_node: node.name.clone(),
+                });
+            }
+            other => bail!("backend: unmapped op {} in node '{}'", other.name(), node.name),
+        }
+    }
+    if kernels.is_empty() {
+        bail!("backend produced no kernels");
+    }
+
+    // insert DWCs on width mismatches, then FIFOs sized by rate mismatch
+    let mut staged: Vec<KernelInstance> = Vec::new();
+    for ki in kernels {
+        if let Some(prev) = staged.last() {
+            let (_, w_out) = prev.kernel.stream_widths();
+            let (w_in, _) = ki.kernel.stream_widths();
+            if w_out != w_in && w_out > 0 && w_in > 0 {
+                staged.push(KernelInstance {
+                    kernel: Box::new(Dwc {
+                        name: format!("DWC_{}", ki.kernel.name()),
+                        in_bits: w_out.min(MAX_STREAM_BITS),
+                        out_bits: w_in.min(MAX_STREAM_BITS),
+                    }),
+                    source_node: ki.source_node.clone(),
+                });
+            }
+        }
+        staged.push(ki);
+    }
+    let depths = fifo_depths(&staged);
+    let mut with_fifos: Vec<KernelInstance> = Vec::new();
+    for (ki, depth) in staged.into_iter().zip(depths) {
+        let (_, w_out) = ki.kernel.stream_widths();
+        let fifo_name = format!("FIFO_{}", ki.kernel.name());
+        let src = ki.source_node.clone();
+        with_fifos.push(ki);
+        with_fifos.push(KernelInstance {
+            kernel: Box::new(Fifo {
+                name: fifo_name,
+                width_bits: w_out.min(MAX_STREAM_BITS),
+                depth,
+            }),
+            source_node: src,
+        });
+    }
+
+    let perf = simulate(&with_fifos, opts.freq_hz)?;
+    // resource aggregation (average of three seeded synthesis runs, as in
+    // the paper's methodology §6.3)
+    let mut total = Resources::default();
+    let mut mac = Resources::default();
+    let mut non_mac = Resources::default();
+    for ki in &with_fifos {
+        let mut r = Resources::default();
+        for seed in 1..=3u64 {
+            r += ki.kernel.resources(&Synth::with_seed(seed));
+        }
+        let r = r * (1.0 / 3.0);
+        total += r;
+        match ki.kernel.category() {
+            KernelCategory::Mac => mac += r,
+            KernelCategory::NonMac => non_mac += r,
+        }
+    }
+    Ok(Fdna {
+        kernels: with_fifos,
+        perf,
+        total: total.round(),
+        mac: mac.round(),
+        non_mac: non_mac.round(),
+    })
+}
+
+/// Full compile: frontend + backend.
+pub fn compile_qnn(
+    mut graph: Graph,
+    input_ranges: &std::collections::BTreeMap<String, SiRange>,
+    opts: &CompileOptions,
+) -> Result<CompiledAccel> {
+    let (analysis, acc_report, thr_report) = frontend(&mut graph, input_ranges, opts)?;
+    let fdna = backend(&graph, &analysis, opts)?;
+    Ok(CompiledAccel {
+        graph,
+        analysis,
+        acc_report,
+        thr_report,
+        fdna,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn opts(tail: TailStyle, acc: AccPolicy) -> CompileOptions {
+        CompileOptions {
+            tail_style: tail,
+            acc_policy: acc,
+            target_cycles: 1 << 14,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn compiles_tfc_with_thresholds() {
+        let m = models::tfc_w2a2().unwrap();
+        let c = compile_qnn(
+            m.graph,
+            &m.input_ranges,
+            &opts(
+                TailStyle::Thresholding(ThresholdStyle::BinarySearch),
+                AccPolicy::Sira,
+            ),
+        )
+        .unwrap();
+        assert!(c.thr_report.as_ref().unwrap().converted >= 4);
+        assert!(c.fdna.total.lut > 0.0);
+        assert!(c.fdna.perf.fps > 0.0);
+        // MAC and non-MAC resources both present
+        assert!(c.fdna.mac.lut > 0.0);
+        assert!(c.fdna.non_mac.lut > 0.0);
+    }
+
+    #[test]
+    fn compiles_tfc_composite() {
+        let m = models::tfc_w2a2().unwrap();
+        let c = compile_qnn(
+            m.graph,
+            &m.input_ranges,
+            &opts(
+                TailStyle::Composite(EwDtype::Fixed(16, 8)),
+                AccPolicy::Datatype,
+            ),
+        )
+        .unwrap();
+        assert!(c.thr_report.is_none());
+        assert!(c.fdna.total.lut > 0.0);
+    }
+
+    #[test]
+    fn sira_accumulators_do_not_exceed_datatype_bound() {
+        let m = models::tfc_w2a2().unwrap();
+        let c = compile_qnn(
+            m.graph,
+            &m.input_ranges,
+            &opts(
+                TailStyle::Thresholding(ThresholdStyle::BinarySearch),
+                AccPolicy::Sira,
+            ),
+        )
+        .unwrap();
+        for row in &c.acc_report.rows {
+            assert!(
+                row.bits_sira <= row.bits_datatype,
+                "{}: sira {} > datatype {}",
+                row.node,
+                row.bits_sira,
+                row.bits_datatype
+            );
+        }
+    }
+
+    #[test]
+    fn sira_opts_reduce_resources_vs_baseline() {
+        let baseline = {
+            let m = models::tfc_w2a2().unwrap();
+            compile_qnn(
+                m.graph,
+                &m.input_ranges,
+                &opts(
+                    TailStyle::Composite(EwDtype::Fixed(32, 16)),
+                    AccPolicy::Datatype,
+                ),
+            )
+            .unwrap()
+        };
+        let optimized = {
+            let m = models::tfc_w2a2().unwrap();
+            compile_qnn(
+                m.graph,
+                &m.input_ranges,
+                &opts(
+                    TailStyle::Thresholding(ThresholdStyle::BinarySearch),
+                    AccPolicy::Sira,
+                ),
+            )
+            .unwrap()
+        };
+        assert!(
+            optimized.fdna.total.lut < baseline.fdna.total.lut,
+            "optimized {} vs baseline {}",
+            optimized.fdna.total.lut,
+            baseline.fdna.total.lut
+        );
+        // throughput unchanged by the optimizations (§7.2)
+        let r = optimized.fdna.perf.fps / baseline.fdna.perf.fps;
+        assert!(r > 0.8, "fps ratio {r}");
+    }
+
+    #[test]
+    fn folding_divisor_helper() {
+        assert_eq!(divisor_for(64, 64), 1);
+        assert_eq!(divisor_for(64, 16), 4);
+        assert_eq!(divisor_for(64, 1), 64);
+        assert_eq!(divisor_for(10, 3), 5); // divisors of 10: need 10/d<=3 -> d=5
+    }
+}

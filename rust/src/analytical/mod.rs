@@ -1,0 +1,211 @@
+//! Analytical resource cost models (§5.4): closed-form LUT predictions
+//! for the elementwise meta-kernel (Table 4), the composite layer tail
+//! (§5.4.2) and the thresholding kernel (§5.4.3), plus the regression
+//! machinery used to calibrate the α/β coefficients against
+//! out-of-context synthesis results (here: the [`crate::synth`]
+//! structural estimator, standing in for Vivado as described in
+//! DESIGN.md).
+
+use crate::synth::{MemStyle, Synth};
+use crate::hw::{ElementwiseKernel, EwDtype, EwOp, HwKernel};
+use crate::util::stats::linreg;
+
+/// Fitted coefficients of a `LUT = α·x + β` model.
+#[derive(Clone, Copy, Debug)]
+pub struct Coeffs {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+/// The Table 4 model family for elementwise ops. `x` is the op-specific
+/// size feature *including* the PE factor:
+/// * Mul:   x = n_i · n_p · PE
+/// * Add:   x = (n_i + n_p) · PE
+/// * ToInt: x = n_i · PE
+/// * Max:   x = n_i · PE
+#[derive(Clone, Debug)]
+pub struct ElementwiseModel {
+    pub mul: Coeffs,
+    pub add: Coeffs,
+    pub to_int: Coeffs,
+    pub max: Coeffs,
+}
+
+/// The paper's published Table 4 coefficients.
+pub fn paper_table4() -> ElementwiseModel {
+    ElementwiseModel {
+        mul: Coeffs { alpha: 1.18, beta: 124.0 },
+        add: Coeffs { alpha: 2.0, beta: 24.0 },
+        to_int: Coeffs { alpha: 4.2, beta: 13.0 },
+        max: Coeffs { alpha: 4.0, beta: 21.0 },
+    }
+}
+
+/// Size feature for one op configuration (the regressor x).
+pub fn op_feature(op: EwOp, n_i: u32, n_p: u32, pe: usize) -> f64 {
+    let pe = pe as f64;
+    match op {
+        EwOp::Mul => n_i as f64 * n_p as f64 * pe,
+        EwOp::Add => (n_i + n_p) as f64 * pe,
+        EwOp::ToInt | EwOp::Max => n_i as f64 * pe,
+    }
+}
+
+impl ElementwiseModel {
+    pub fn coeffs(&self, op: EwOp) -> Coeffs {
+        match op {
+            EwOp::Mul => self.mul,
+            EwOp::Add => self.add,
+            EwOp::ToInt => self.to_int,
+            EwOp::Max => self.max,
+        }
+    }
+
+    /// Predicted compute LUTs for one op instance.
+    pub fn predict(&self, op: EwOp, n_i: u32, n_p: u32, pe: usize) -> f64 {
+        let c = self.coeffs(op);
+        c.alpha * op_feature(op, n_i, n_p, pe) + c.beta
+    }
+
+    /// §5.4.2 — composite layer tail of 5 nodes (Fig 14):
+    /// `Mul(n_i,n_p) → Add(n_i+n_p, n_p) → Max(n_i+n_p+1) →
+    ///  Mul(n_i+n_p+1, n_p) → ToInt(n_i+n_p+1)` plus per-channel
+    /// parameter memory `2·C·n_p/64`.
+    pub fn composite_tail_lut(&self, n_i: u32, n_p: u32, c: usize, pe: usize) -> f64 {
+        let comp = self.predict(EwOp::Mul, n_i, n_p, pe)
+            + self.predict(EwOp::Add, n_i + n_p, n_p, pe)
+            + self.predict(EwOp::Max, n_i + n_p + 1, 0, pe)
+            + self.predict(EwOp::Mul, n_i + n_p + 1, n_p, pe)
+            + self.predict(EwOp::ToInt, n_i + n_p + 1, 0, pe);
+        let mem = 2.0 * c as f64 * n_p as f64 / 64.0;
+        comp + mem
+    }
+}
+
+/// §5.4.3 — thresholding kernel analytical model:
+/// `LUT_comp = n_o·PE·n_i`, `LUT_mem = (2^n_o - 1)·C·n_i / 64`.
+pub fn thresholding_lut(n_i: u32, n_o: u32, c: usize, pe: usize) -> f64 {
+    let comp = n_o as f64 * pe as f64 * n_i as f64;
+    let sum_thresholds = ((1u64 << n_o) - 1) as f64 * c as f64;
+    let mem = sum_thresholds * n_i as f64 / 64.0;
+    comp + mem
+}
+
+/// Fit Table 4 coefficients by linear regression over out-of-context
+/// synthesis of the elementwise meta-kernel across a sweep of
+/// (n_i, n_p, PE), mirroring the paper's calibration procedure.
+pub fn fit_elementwise_model(synth: &Synth) -> ElementwiseModel {
+    let fit_op = |op: EwOp| -> Coeffs {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &n_i in &[8u32, 12, 16, 24, 32] {
+            for &n_p in &[8u32, 16, 24] {
+                for &pe in &[1usize, 2, 4] {
+                    let k = ElementwiseKernel {
+                        name: "fit".into(),
+                        op,
+                        in_bits: n_i,
+                        param_bits: if matches!(op, EwOp::Max | EwOp::ToInt) { 0 } else { n_p },
+                        out_bits: n_i,
+                        dtype: EwDtype::Fixed(n_i.max(n_p), n_i.max(n_p) / 2),
+                        channels: 1, // compute-only fit (mem modeled separately)
+                        per_channel: false,
+                        elems_per_frame: 1,
+                        pe,
+                        force_lut: true,
+                        mem_style: MemStyle::Lut,
+                    };
+                    xs.push(op_feature(op, n_i, n_p, pe));
+                    ys.push(k.resources(synth).lut);
+                }
+            }
+        }
+        let (alpha, beta) = linreg(&xs, &ys);
+        Coeffs { alpha, beta }
+    };
+    ElementwiseModel {
+        mul: fit_op(EwOp::Mul),
+        add: fit_op(EwOp::Add),
+        to_int: fit_op(EwOp::ToInt),
+        max: fit_op(EwOp::Max),
+    }
+}
+
+/// Crossover analysis (Fig 23): smallest output bitwidth at which the
+/// composite tail becomes cheaper than thresholding, for a given
+/// configuration (None if thresholding always wins up to 16 bits).
+pub fn crossover_out_bits(
+    model: &ElementwiseModel,
+    n_i: u32,
+    n_p: u32,
+    c: usize,
+    pe: usize,
+) -> Option<u32> {
+    let comp = model.composite_tail_lut(n_i, n_p, c, pe);
+    (1..=16).find(|&n_o| thresholding_lut(n_i, n_o, c, pe) > comp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_model_reproduces_table4_shape() {
+        let m = paper_table4();
+        // Mul grows multiplicatively in n_i*n_p
+        assert!(m.predict(EwOp::Mul, 16, 16, 1) > 3.0 * m.predict(EwOp::Mul, 8, 8, 1) - 200.0);
+        // Add linear in (n_i+n_p)
+        let a8 = m.predict(EwOp::Add, 8, 8, 1);
+        let a16 = m.predict(EwOp::Add, 16, 16, 1);
+        assert!((a16 - a8 - 2.0 * 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thresholding_model_matches_paper_examples() {
+        // exponential in n_o, linear in C
+        let t2 = thresholding_lut(24, 2, 256, 4);
+        let t8 = thresholding_lut(24, 8, 256, 4);
+        assert!(t8 > 20.0 * t2);
+        let c1 = thresholding_lut(24, 8, 1, 4);
+        let c512 = thresholding_lut(24, 8, 512, 4);
+        assert!(c512 > 50.0 * c1, "c1 {c1} c512 {c512}");
+    }
+
+    #[test]
+    fn fitted_model_tracks_structural_synth() {
+        let synth = Synth::exact();
+        let m = fit_elementwise_model(&synth);
+        // regression quality: prediction within 25% on an unseen config
+        let k = ElementwiseKernel {
+            name: "probe".into(),
+            op: EwOp::Mul,
+            in_bits: 20,
+            param_bits: 12,
+            out_bits: 20,
+            dtype: EwDtype::Fixed(20, 10),
+            channels: 1,
+            per_channel: false,
+            elems_per_frame: 1,
+            pe: 2,
+            force_lut: true,
+            mem_style: MemStyle::Lut,
+        };
+        let obs = k.resources(&synth).lut;
+        let pred = m.predict(EwOp::Mul, 20, 12, 2);
+        assert!(
+            (pred - obs).abs() / obs < 0.25,
+            "pred {pred} vs obs {obs}"
+        );
+    }
+
+    #[test]
+    fn crossover_moves_with_channels() {
+        // paper §7.3.2: thresholding wins <4-bit outputs, composite >8-bit;
+        // more channels pull the crossover earlier (memory-dominated)
+        let m = paper_table4();
+        let few = crossover_out_bits(&m, 24, 16, 16, 4).unwrap();
+        let many = crossover_out_bits(&m, 24, 16, 4096, 4).unwrap();
+        assert!(many <= few, "few-ch {few} vs many-ch {many}");
+        assert!(few >= 4, "thresholding should win at low out-bits: {few}");
+    }
+}

@@ -1,0 +1,135 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//! Provides warmup + repeated measurement with mean/stddev reporting and
+//! a simple ops/sec view. All `cargo bench` targets use `harness = false`
+//! and drive this module, printing the paper-table reproductions alongside
+//! the timing numbers.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} ± {:>10}  (n={}, min {:?}, max {:?})",
+            self.name,
+            format!("{:?}", self.mean),
+            format!("{:?}", self.stddev),
+            self.iters,
+            self.min,
+            self.max
+        )
+    }
+}
+
+/// Benchmark runner with configurable warmup and measurement budgets.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            max_iters: 1_000,
+        }
+    }
+
+    /// Run `f` repeatedly, returning timing statistics. The closure's
+    /// return value is passed through `std::hint::black_box` to keep the
+    /// optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup
+        let start = Instant::now();
+        let mut warm_iters = 0usize;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Measure
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = stats::mean(&samples);
+        let sd = stats::stddev(&samples);
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().cloned().fold(0.0, f64::max);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(sd),
+            min: Duration::from_secs_f64(min),
+            max: Duration::from_secs_f64(max),
+        }
+    }
+}
+
+/// Print a section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_iters: 100,
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.mean && r.mean <= r.max + Duration::from_nanos(1));
+    }
+}

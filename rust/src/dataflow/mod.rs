@@ -1,0 +1,150 @@
+//! Streaming dataflow performance simulator: given the chain of kernel
+//! instances produced by the FDNA builder, computes steady-state
+//! throughput (FPS at the target clock), end-to-end single-frame latency,
+//! FIFO depths and stream-width legality (the 8192-bit ap_int limit of
+//! §6.2.2). This stands in for the paper's on-board ZCU102 measurements
+//! (DESIGN.md §Hardware-Adaptation).
+
+use anyhow::{bail, Result};
+
+use crate::hw::{KernelInstance, MAX_STREAM_BITS};
+
+/// Performance summary of a dataflow pipeline.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    /// steady-state initiation interval in cycles (slowest stage)
+    pub ii_cycles: u64,
+    /// index + name of the bottleneck kernel
+    pub bottleneck: String,
+    /// end-to-end first-frame latency in cycles
+    pub latency_cycles: u64,
+    /// frames per second at `freq_hz`
+    pub fps: f64,
+    /// latency in milliseconds
+    pub latency_ms: f64,
+    /// per-kernel (name, cycles_per_frame)
+    pub stage_cycles: Vec<(String, u64)>,
+}
+
+/// Simulate a pipeline at the given clock frequency.
+pub fn simulate(kernels: &[KernelInstance], freq_hz: f64) -> Result<PipelineReport> {
+    if kernels.is_empty() {
+        bail!("empty pipeline");
+    }
+    let mut ii = 0u64;
+    let mut bottleneck = String::new();
+    let mut latency = 0u64;
+    let mut stage_cycles = Vec::new();
+    for ki in kernels {
+        let k = &ki.kernel;
+        let (w_in, w_out) = k.stream_widths();
+        if w_in > MAX_STREAM_BITS || w_out > MAX_STREAM_BITS {
+            bail!(
+                "kernel '{}' exceeds the {}-bit stream limit ({} in / {} out)",
+                k.name(),
+                MAX_STREAM_BITS,
+                w_in,
+                w_out
+            );
+        }
+        let c = k.cycles_per_frame();
+        stage_cycles.push((k.name(), c));
+        if c > ii {
+            ii = c;
+            bottleneck = k.name();
+        }
+        latency += k.latency();
+    }
+    // first frame flows through every stage sequentially; subsequent
+    // frames pipeline at the bottleneck II
+    let first_frame = latency + ii;
+    let ii = ii.max(1);
+    Ok(PipelineReport {
+        ii_cycles: ii,
+        bottleneck,
+        latency_cycles: first_frame,
+        fps: freq_hz / ii as f64,
+        latency_ms: first_frame as f64 / freq_hz * 1e3,
+        stage_cycles,
+    })
+}
+
+/// Size inter-stage FIFOs: a stage that produces in bursts feeding a
+/// slower consumer needs buffering proportional to the rate mismatch.
+/// Returns the suggested depth for the FIFO after each kernel.
+pub fn fifo_depths(kernels: &[KernelInstance]) -> Vec<u64> {
+    let mut depths = Vec::with_capacity(kernels.len());
+    for w in kernels.windows(2) {
+        let a = w[0].kernel.cycles_per_frame().max(1);
+        let b = w[1].kernel.cycles_per_frame().max(1);
+        // rate ratio rounded up; capped like FINN's simulated FIFO sizing
+        // (rate mismatches beyond ~32x are absorbed by backpressure, not
+        // buffering)
+        let ratio = (b as f64 / a as f64).max(a as f64 / b as f64);
+        let depth = (2.0 * ratio).ceil() as u64;
+        depths.push(depth.clamp(2, 64));
+    }
+    depths.push(2);
+    depths
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{Fifo, KernelInstance};
+    use crate::synth::MemStyle;
+
+    fn inst(cycles: u64, width: u64) -> KernelInstance {
+        // use a Thresholding kernel shim with configurable cycles by
+        // abusing elems_per_frame
+        KernelInstance {
+            kernel: Box::new(crate::hw::Thresholding {
+                name: format!("k{cycles}"),
+                channels: 1,
+                unique_rows: 0,
+                elems_per_frame: cycles as usize,
+                in_bits: width as u32,
+                out_bits: 4,
+                pe: 1,
+                style: crate::hw::ThresholdStyle::BinarySearch,
+                mem_style: MemStyle::Lut,
+            }),
+            source_node: "n".into(),
+        }
+    }
+
+    #[test]
+    fn bottleneck_sets_fps() {
+        let ks = vec![inst(100, 8), inst(400, 8), inst(50, 8)];
+        let r = simulate(&ks, 200e6).unwrap();
+        assert_eq!(r.ii_cycles, 400);
+        assert_eq!(r.bottleneck, "k400");
+        assert!((r.fps - 200e6 / 400.0).abs() < 1e-6);
+        assert!(r.latency_cycles > 400);
+    }
+
+    #[test]
+    fn stream_width_limit_enforced() {
+        let wide = KernelInstance {
+            kernel: Box::new(Fifo {
+                name: "wide".into(),
+                width_bits: 10_000,
+                depth: 2,
+            }),
+            source_node: "n".into(),
+        };
+        assert!(simulate(&[wide], 200e6).is_err());
+    }
+
+    #[test]
+    fn fifo_depths_track_rate_mismatch() {
+        let ks = vec![inst(10, 8), inst(1000, 8)];
+        let d = fifo_depths(&ks);
+        assert!(d[0] >= 64, "depth {:?}", d); // capped at 64
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        assert!(simulate(&[], 200e6).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! End-to-end validation driver (DESIGN.md §4): proves all three layers
+//! compose by checking four implementations of the same QNN against each
+//! other on random inputs:
+//!
+//! 1. the JAX fake-quant reference, AOT-lowered and executed via PJRT;
+//! 2. the JAX streamlined-integer model (through the L1 Pallas kernels),
+//!    also via PJRT;
+//! 3. the rust graph executor on the graph rebuilt from the sidecar;
+//! 4. the rust executor on the SIRA-streamlined + threshold-converted
+//!    graph (thresholds re-derived *independently* by the rust compiler).
+//!
+//! Used by `examples/e2e_cnv.rs` and `sira-finn e2e`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::{compile_qnn, CompileOptions, TailStyle};
+use crate::executor::Executor;
+use crate::hw::ThresholdStyle;
+use crate::models::sidecar::load_sidecar_file;
+use crate::passes::accmin::AccPolicy;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Outcome of the end-to-end run.
+pub struct E2eReport {
+    pub samples: usize,
+    pub max_dev_ref_vs_rust: f64,
+    pub max_dev_ref_vs_streamlined_rust: f64,
+    pub max_dev_ref_vs_streamlined_pjrt: f64,
+    pub lut: f64,
+    pub dsp: f64,
+    pub fps: f64,
+}
+
+/// Run the full four-way equivalence check + FDNA build.
+pub fn run_e2e(artifact_dir: &str, samples: usize) -> Result<()> {
+    let r = e2e_report(artifact_dir, samples)?;
+    println!(
+        "e2e OK over {} samples:\n\
+         max |ref_pjrt - rust_executor|            = {:.2e}\n\
+         max |ref_pjrt - rust_streamlined|         = {:.2e}\n\
+         max |ref_pjrt - pallas_streamlined_pjrt|  = {:.2e}",
+        r.samples, r.max_dev_ref_vs_rust, r.max_dev_ref_vs_streamlined_rust,
+        r.max_dev_ref_vs_streamlined_pjrt
+    );
+    println!(
+        "FDNA (thresholding + SIRA accumulators): LUT {:.0}, DSP {:.0}, {:.0} FPS @200MHz",
+        r.lut, r.dsp, r.fps
+    );
+    Ok(())
+}
+
+/// Produce the report (library form, used by tests).
+pub fn e2e_report(artifact_dir: &str, samples: usize) -> Result<E2eReport> {
+    let sidecar_path = format!("{artifact_dir}/model_params.json");
+    let m = load_sidecar_file(&sidecar_path)?;
+    let rt = Runtime::cpu()?;
+    let reference = rt
+        .load_hlo_text(&format!("{artifact_dir}/model.hlo.txt"))
+        .context("loading reference artifact")?;
+    let streamlined_pjrt = rt
+        .load_hlo_text(&format!("{artifact_dir}/model_streamlined.hlo.txt"))
+        .context("loading streamlined artifact")?;
+
+    // rust compile: streamline + thresholds + SIRA accumulators
+    let opts = CompileOptions {
+        tail_style: TailStyle::Thresholding(ThresholdStyle::BinarySearch),
+        acc_policy: AccPolicy::Sira,
+        target_cycles: 4096,
+        ..Default::default()
+    };
+    let compiled = compile_qnn(m.graph.clone(), &m.input_ranges, &opts)?;
+    if compiled
+        .thr_report
+        .as_ref()
+        .map(|t| t.converted)
+        .unwrap_or(0)
+        == 0
+    {
+        bail!("rust threshold conversion converted nothing");
+    }
+
+    let mut exec_orig = Executor::new(&m.graph)?;
+    let mut exec_streamlined = Executor::new(&compiled.graph)?;
+    let mut rng = Rng::new(0xE2E);
+    let numel: usize = m.input_shape.iter().product();
+    let mut dev_rust = 0f64;
+    let mut dev_st_rust = 0f64;
+    let mut dev_st_pjrt = 0f64;
+    for _ in 0..samples {
+        let x = Tensor::new(
+            &m.input_shape,
+            (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+        )?;
+        let y_ref = reference.run(std::slice::from_ref(&x))?.remove(0);
+        let y_rust = exec_orig.run_single(&x)?.remove(0);
+        let y_st_rust = exec_streamlined.run_single(&x)?.remove(0);
+        let y_st_pjrt = streamlined_pjrt.run(std::slice::from_ref(&x))?.remove(0);
+        for i in 0..y_ref.numel() {
+            dev_rust = dev_rust.max((y_ref.data()[i] - y_rust.data()[i]).abs());
+            dev_st_rust = dev_st_rust.max((y_ref.data()[i] - y_st_rust.data()[i]).abs());
+            dev_st_pjrt = dev_st_pjrt.max((y_ref.data()[i] - y_st_pjrt.data()[i]).abs());
+        }
+    }
+    // f32 PJRT vs f64 rust: small tolerance; implementations agree when
+    // every pair deviates by less than the smallest quantization step
+    let tol = 1e-3;
+    if dev_rust > tol || dev_st_rust > tol || dev_st_pjrt > tol {
+        bail!(
+            "e2e deviation too large: rust {dev_rust:.2e}, streamlined-rust {dev_st_rust:.2e}, \
+             streamlined-pjrt {dev_st_pjrt:.2e}"
+        );
+    }
+    Ok(E2eReport {
+        samples,
+        max_dev_ref_vs_rust: dev_rust,
+        max_dev_ref_vs_streamlined_rust: dev_st_rust,
+        max_dev_ref_vs_streamlined_pjrt: dev_st_pjrt,
+        lut: compiled.fdna.total.lut,
+        dsp: compiled.fdna.total.dsp,
+        fps: compiled.fdna.perf.fps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn e2e_four_way_equivalence() {
+        if !std::path::Path::new("artifacts/model_params.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let r = super::e2e_report("artifacts", 4).unwrap();
+        assert!(r.max_dev_ref_vs_rust < 1e-3);
+        assert!(r.max_dev_ref_vs_streamlined_rust < 1e-3);
+        assert!(r.max_dev_ref_vs_streamlined_pjrt < 1e-3);
+        assert!(r.lut > 0.0 && r.fps > 0.0);
+    }
+}

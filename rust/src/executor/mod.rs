@@ -1,0 +1,263 @@
+//! Graph interpreter: reference execution of QNN graphs (float and
+//! streamlined-integer forms), with optional per-channel min/max
+//! instrumentation (the empirical verification data of §6.1 / Fig 20) and
+//! datatype conformance checking (overflow detection for accumulator
+//! width failure-injection tests).
+
+pub mod ops;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+pub use ops::{dot_length, execute_op, mac_count};
+
+use crate::graph::Graph;
+use crate::tensor::Tensor;
+
+/// Running per-channel min/max observations per tensor.
+#[derive(Clone, Debug, Default)]
+pub struct Instrumentation {
+    /// tensor -> (per-channel min, per-channel max); channel = axis 1.
+    pub observed: BTreeMap<String, (Tensor, Tensor)>,
+    /// number of samples folded in
+    pub samples: usize,
+}
+
+impl Instrumentation {
+    fn record(&mut self, name: &str, t: &Tensor) {
+        let (mins, maxs) = per_channel_minmax(t);
+        match self.observed.get_mut(name) {
+            None => {
+                self.observed.insert(name.to_string(), (mins, maxs));
+            }
+            Some((lo, hi)) => {
+                *lo = lo.minimum(&mins).expect("instr shape drift");
+                *hi = hi.maximum(&maxs).expect("instr shape drift");
+            }
+        }
+    }
+}
+
+/// Per-channel (axis 1) min and max of a tensor; rank<2 uses one channel.
+pub fn per_channel_minmax(t: &Tensor) -> (Tensor, Tensor) {
+    if t.rank() < 2 {
+        return (Tensor::scalar(t.min()), Tensor::scalar(t.max()));
+    }
+    (
+        t.reduce_except(1, f64::INFINITY, f64::min),
+        t.reduce_except(1, f64::NEG_INFINITY, f64::max),
+    )
+}
+
+/// Options controlling execution.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOptions {
+    /// Record per-channel min/max for every intermediate tensor.
+    pub instrument: bool,
+    /// Verify tensors against their `graph.dtypes` annotations (integer
+    /// integrality + width bounds). Catches accumulator overflow.
+    pub verify_dtypes: bool,
+}
+
+/// A prepared executor for one graph (topological order cached).
+pub struct Executor<'g> {
+    pub graph: &'g Graph,
+    order: Vec<usize>,
+    pub options: ExecOptions,
+    pub instrumentation: Instrumentation,
+}
+
+impl<'g> Executor<'g> {
+    pub fn new(graph: &'g Graph) -> Result<Executor<'g>> {
+        Ok(Executor {
+            graph,
+            order: graph.topo_order()?,
+            options: ExecOptions::default(),
+            instrumentation: Instrumentation::default(),
+        })
+    }
+
+    pub fn with_options(graph: &'g Graph, options: ExecOptions) -> Result<Executor<'g>> {
+        Ok(Executor {
+            options,
+            ..Executor::new(graph)?
+        })
+    }
+
+    /// Execute the graph; returns the graph outputs in declaration order.
+    pub fn run(&mut self, inputs: &BTreeMap<String, Tensor>) -> Result<Vec<Tensor>> {
+        let env = self.run_env(inputs)?;
+        self.graph
+            .outputs
+            .iter()
+            .map(|o| {
+                env.get(o)
+                    .cloned()
+                    .with_context(|| format!("output '{o}' not produced"))
+            })
+            .collect()
+    }
+
+    /// Convenience: run with a single input tensor.
+    pub fn run_single(&mut self, x: &Tensor) -> Result<Vec<Tensor>> {
+        let mut inputs = BTreeMap::new();
+        inputs.insert(self.graph.inputs[0].clone(), x.clone());
+        self.run(&inputs)
+    }
+
+    /// Execute and return the full tensor environment (all intermediates).
+    pub fn run_env(&mut self, inputs: &BTreeMap<String, Tensor>) -> Result<BTreeMap<String, Tensor>> {
+        let mut env: BTreeMap<String, Tensor> = BTreeMap::new();
+        for name in &self.graph.inputs {
+            let t = inputs
+                .get(name)
+                .with_context(|| format!("missing graph input '{name}'"))?;
+            let want = &self.graph.shapes[name];
+            if t.shape() != &want[..] {
+                bail!(
+                    "input '{name}': shape {:?} does not match declared {:?}",
+                    t.shape(),
+                    want
+                );
+            }
+            env.insert(name.clone(), t.clone());
+        }
+        for (name, t) in &self.graph.initializers {
+            env.insert(name.clone(), t.clone());
+        }
+        for &idx in &self.order {
+            let node = &self.graph.nodes[idx];
+            let ins: Vec<Tensor> = node
+                .inputs
+                .iter()
+                .map(|i| {
+                    env.get(i)
+                        .cloned()
+                        .with_context(|| format!("node '{}' reads undefined '{i}'", node.name))
+                })
+                .collect::<Result<_>>()?;
+            let outs = execute_op(&node.op, &ins)
+                .with_context(|| format!("executing node '{}' ({})", node.name, node.op.name()))?;
+            for (oname, t) in node.outputs.iter().zip(outs) {
+                if self.options.verify_dtypes {
+                    if let Some(dt) = self.graph.dtypes.get(oname) {
+                        verify_dtype(oname, &t, *dt)?;
+                    }
+                }
+                if self.options.instrument {
+                    self.instrumentation.record(oname, &t);
+                }
+                env.insert(oname.clone(), t);
+            }
+        }
+        if self.options.instrument {
+            self.instrumentation.samples += 1;
+        }
+        Ok(env)
+    }
+}
+
+/// Check every element of `t` against datatype `dt`.
+pub fn verify_dtype(name: &str, t: &Tensor, dt: crate::graph::DataType) -> Result<()> {
+    for &v in t.data() {
+        if !dt.allows(v) {
+            bail!("tensor '{name}': value {v} outside datatype {dt} — possible overflow");
+        }
+    }
+    Ok(())
+}
+
+/// Top-1 accuracy of a classifier graph over a labeled dataset.
+/// `data` is a list of (input, label) pairs; the single graph input and
+/// single output (logits, shape (1, classes)) are assumed.
+pub fn top1_accuracy(g: &Graph, data: &[(Tensor, usize)]) -> Result<f64> {
+    let mut exec = Executor::new(g)?;
+    let mut correct = 0usize;
+    for (x, label) in data {
+        let out = exec.run_single(x)?;
+        let pred = out[0].argmax_rows()?[0];
+        if pred == *label {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / data.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DataType, Node, Op};
+
+    fn relu_graph() -> Graph {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 3]);
+        g.add_node(Node::new("r", Op::Relu, &["x"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        g
+    }
+
+    #[test]
+    fn runs_simple_graph() {
+        let g = relu_graph();
+        let mut e = Executor::new(&g).unwrap();
+        let out = e
+            .run_single(&Tensor::new(&[1, 3], vec![-1.0, 0.0, 2.0]).unwrap())
+            .unwrap();
+        assert_eq!(out[0].data(), &[0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_bad_input_shape() {
+        let g = relu_graph();
+        let mut e = Executor::new(&g).unwrap();
+        assert!(e.run_single(&Tensor::zeros(&[1, 4])).is_err());
+    }
+
+    #[test]
+    fn instrumentation_accumulates() {
+        let g = relu_graph();
+        let mut e = Executor::with_options(
+            &g,
+            ExecOptions {
+                instrument: true,
+                verify_dtypes: false,
+            },
+        )
+        .unwrap();
+        for vals in [vec![-1.0, 5.0, 0.0], vec![2.0, -3.0, 1.0]] {
+            e.run_single(&Tensor::new(&[1, 3], vals).unwrap()).unwrap();
+        }
+        let (lo, hi) = &e.instrumentation.observed["y"];
+        assert_eq!(lo.data(), &[0.0, 0.0, 0.0]);
+        assert_eq!(hi.data(), &[2.0, 5.0, 1.0]);
+        assert_eq!(e.instrumentation.samples, 2);
+    }
+
+    #[test]
+    fn dtype_verification_catches_overflow() {
+        let mut g = relu_graph();
+        g.dtypes.insert("y".to_string(), DataType::UInt(2));
+        let mut e = Executor::with_options(
+            &g,
+            ExecOptions {
+                instrument: false,
+                verify_dtypes: true,
+            },
+        )
+        .unwrap();
+        let err = e
+            .run_single(&Tensor::new(&[1, 3], vec![0.0, 1.0, 7.0]).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn per_channel_minmax_nchw() {
+        let t = Tensor::new(&[1, 2, 1, 2], vec![1.0, -2.0, 5.0, 3.0]).unwrap();
+        let (lo, hi) = per_channel_minmax(&t);
+        assert_eq!(lo.data(), &[-2.0, 3.0]);
+        assert_eq!(hi.data(), &[1.0, 5.0]);
+    }
+}

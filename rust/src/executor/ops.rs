@@ -1,0 +1,331 @@
+//! Reference execution semantics for every operator (the float path;
+//! bit-exact integer behaviour is obtained because all integer values are
+//! exactly representable in f64 — see the crate docs of [`crate::tensor`]).
+
+use anyhow::{bail, Result};
+
+use crate::graph::{Op, RoundMode};
+use crate::sira::quant_bounds;
+use crate::tensor::{conv2d, conv2d_depthwise, pool2d, PoolKind, Tensor};
+
+/// Execute one operator on concrete input tensors.
+pub fn execute_op(op: &Op, ins: &[Tensor]) -> Result<Vec<Tensor>> {
+    let out = match op {
+        Op::Quant {
+            signed,
+            narrow,
+            rounding,
+        } => quant(ins, *signed, *narrow, *rounding)?,
+        Op::MatMul => ins[0].matmul(&ins[1])?,
+        Op::Gemm => ins[0].matmul(&ins[1])?.add(&ins[2])?,
+        Op::Conv { spec, group } => {
+            let c = ins[0].shape()[1];
+            if *group == 1 {
+                conv2d(&ins[0], &ins[1], *spec)?
+            } else if *group == c && ins[1].shape()[1] == 1 {
+                conv2d_depthwise(&ins[0], &ins[1], *spec)?
+            } else {
+                bail!("unsupported conv group {group}");
+            }
+        }
+        Op::Add => ins[0].add(&ins[1])?,
+        Op::Sub => ins[0].sub(&ins[1])?,
+        Op::Mul => ins[0].mul(&ins[1])?,
+        Op::Div => ins[0].div(&ins[1])?,
+        Op::Relu => ins[0].relu(),
+        Op::Sigmoid => ins[0].sigmoid(),
+        Op::Floor => ins[0].floor(),
+        Op::Clip { lo, hi } => ins[0].clip(*lo, *hi),
+        Op::BatchNorm { eps } => {
+            let (x, gamma, beta, mean, var) = (&ins[0], &ins[1], &ins[2], &ins[3], &ins[4]);
+            let c = gamma.numel();
+            let a = gamma.zip(var, |g, v| g / (v + eps).sqrt())?;
+            let b = beta.zip(&mean.mul(&a)?, |bt, ma| bt - ma)?;
+            // reshape per-channel params to broadcast along axis 1
+            let pshape: Vec<usize> = if x.rank() == 4 { vec![1, c, 1, 1] } else { vec![1, c] };
+            let a4 = a.reshape(&pshape)?;
+            let b4 = b.reshape(&pshape)?;
+            x.mul(&a4)?.add(&b4)?
+        }
+        Op::MaxPool { spec } => pool2d(&ins[0], PoolKind::Max, *spec)?,
+        Op::AveragePool { spec } => pool2d(&ins[0], PoolKind::Average, *spec)?,
+        Op::GlobalAveragePool => {
+            let (h, w) = (ins[0].shape()[2], ins[0].shape()[3]);
+            pool2d(
+                &ins[0],
+                PoolKind::Average,
+                crate::tensor::Conv2dSpec {
+                    kernel: (h, w),
+                    stride: (1, 1),
+                    pad: (0, 0),
+                },
+            )?
+        }
+        Op::Reshape { shape } => {
+            let numel = ins[0].numel();
+            let mut out: Vec<usize> = Vec::new();
+            let mut known = 1usize;
+            let mut infer = None;
+            for (i, &d) in shape.iter().enumerate() {
+                if d == -1 {
+                    infer = Some(i);
+                    out.push(0);
+                } else if d == 0 {
+                    out.push(ins[0].shape()[i]);
+                    known *= ins[0].shape()[i];
+                } else {
+                    out.push(d as usize);
+                    known *= d as usize;
+                }
+            }
+            if let Some(i) = infer {
+                out[i] = numel / known;
+            }
+            ins[0].reshape(&out)?
+        }
+        Op::Flatten { axis } => {
+            let outer: usize = ins[0].shape()[..*axis].iter().product();
+            let inner: usize = ins[0].shape()[*axis..].iter().product();
+            ins[0].reshape(&[outer, inner])?
+        }
+        Op::Transpose { perm } => ins[0].permute(perm)?,
+        Op::Concat { axis } => {
+            let refs: Vec<&Tensor> = ins.iter().collect();
+            Tensor::concat(&refs, *axis)?
+        }
+        Op::Identity => ins[0].clone(),
+        Op::MultiThreshold {
+            out_scale,
+            out_bias,
+        } => multithreshold(&ins[0], &ins[1], *out_scale, *out_bias)?,
+    };
+    Ok(vec![out])
+}
+
+/// QONNX Quant execution:
+/// `y = s * (clip(round(x/s + z), qmin, qmax) - z)`.
+fn quant(ins: &[Tensor], signed: bool, narrow: bool, rounding: RoundMode) -> Result<Tensor> {
+    let (x, s, z) = (&ins[0], &ins[1], &ins[2]);
+    let bits = ins[3].first() as u32;
+    let (qmin, qmax) = quant_bounds(bits, signed, narrow);
+    let pre = x.div(s)?.add(z)?;
+    let rounded = match rounding {
+        RoundMode::RoundEven => pre.round_even(),
+        RoundMode::Floor => pre.floor(),
+        RoundMode::Ceil => pre.ceil(),
+    };
+    let q = rounded.clip(qmin, qmax);
+    q.sub(z)?.mul(s)
+}
+
+/// Integer output of the Quant operator (before dequantization): the value
+/// the streamlined integer datapath carries.
+pub fn quant_int(ins: &[Tensor], signed: bool, narrow: bool, rounding: RoundMode) -> Result<Tensor> {
+    let (x, s, z) = (&ins[0], &ins[1], &ins[2]);
+    let bits = ins[3].first() as u32;
+    let (qmin, qmax) = quant_bounds(bits, signed, narrow);
+    let pre = x.div(s)?.add(z)?;
+    let rounded = match rounding {
+        RoundMode::RoundEven => pre.round_even(),
+        RoundMode::Floor => pre.floor(),
+        RoundMode::Ceil => pre.ceil(),
+    };
+    Ok(rounded.clip(qmin, qmax))
+}
+
+/// MultiThreshold execution: per-channel comparison count
+/// `y = out_bias + out_scale * Σ_i (x >= Θ_i)` (Eq. 1 of the paper).
+/// Thresholds have shape (C, N); C must match the channel axis (axis 1)
+/// of the input or be 1 (per-tensor).
+fn multithreshold(x: &Tensor, th: &Tensor, out_scale: f64, out_bias: f64) -> Result<Tensor> {
+    if th.rank() != 2 {
+        bail!("thresholds must be rank-2 (C, N), got {:?}", th.shape());
+    }
+    let (c_th, n) = (th.shape()[0], th.shape()[1]);
+    let channels = if x.rank() >= 2 { x.shape()[1] } else { 1 };
+    if c_th != 1 && c_th != channels {
+        bail!(
+            "threshold channels {c_th} incompatible with data channels {channels}"
+        );
+    }
+    let ch_stride: usize = if x.rank() >= 2 {
+        x.shape()[2..].iter().product()
+    } else {
+        1
+    };
+    let mut out = Vec::with_capacity(x.numel());
+    for (flat, &v) in x.data().iter().enumerate() {
+        let ch = if c_th == 1 { 0 } else { (flat / ch_stride) % channels };
+        let row = &th.data()[ch * n..(ch + 1) * n];
+        let cnt = row.iter().filter(|&&t| v >= t).count() as f64;
+        out.push(out_bias + out_scale * cnt);
+    }
+    Tensor::new(x.shape(), out)
+}
+
+/// Number of multiply-accumulate operations performed by a MAC op (used
+/// for workload statistics and folding decisions).
+pub fn mac_count(op: &Op, in_shapes: &[Vec<usize>]) -> Result<u64> {
+    Ok(match op {
+        Op::MatMul | Op::Gemm => {
+            let (a, b) = (&in_shapes[0], &in_shapes[1]);
+            (a[0] * a[1] * b[1]) as u64
+        }
+        Op::Conv { spec, group } => {
+            let (x, w) = (&in_shapes[0], &in_shapes[1]);
+            let (oh, ow) = spec.out_hw(x[2], x[3]);
+            let _ = group;
+            (x[0] * w[0] * oh * ow * w[1] * w[2] * w[3]) as u64
+        }
+        _ => 0,
+    })
+}
+
+/// Dot-product length K of a MAC op (drives the datatype accumulator
+/// bound of §4.2).
+pub fn dot_length(op: &Op, in_shapes: &[Vec<usize>]) -> Result<u64> {
+    Ok(match op {
+        Op::MatMul | Op::Gemm => in_shapes[0][1] as u64,
+        Op::Conv { spec, .. } => {
+            let w = &in_shapes[1];
+            (w[1] * spec.kernel.0 * spec.kernel.1) as u64
+        }
+        _ => bail!("dot_length on non-MAC op"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Conv2dSpec;
+
+    #[test]
+    fn quant_roundtrip_4bit() {
+        let x = Tensor::from_vec(vec![-5.1, 0.0, 0.34, 5.1]);
+        let ins = [
+            x,
+            Tensor::scalar(0.7),
+            Tensor::scalar(0.0),
+            Tensor::scalar(4.0),
+        ];
+        let y = quant(&ins, true, false, RoundMode::RoundEven).unwrap();
+        // -5.1/0.7 = -7.29 -> -7 -> -4.9 ; 0.34/0.7 = 0.486 -> 0
+        assert!((y.data()[0] + 4.9).abs() < 1e-12);
+        assert_eq!(y.data()[1], 0.0);
+        assert_eq!(y.data()[2], 0.0);
+        assert!((y.data()[3] - 4.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quant_saturates() {
+        let x = Tensor::from_vec(vec![-100.0, 100.0]);
+        let ins = [
+            x,
+            Tensor::scalar(1.0),
+            Tensor::scalar(0.0),
+            Tensor::scalar(4.0),
+        ];
+        let y = quant(&ins, true, false, RoundMode::RoundEven).unwrap();
+        assert_eq!(y.data(), &[-8.0, 7.0]);
+        let yn = quant(&ins, true, true, RoundMode::RoundEven).unwrap();
+        assert_eq!(yn.data(), &[-7.0, 7.0]); // narrow range
+    }
+
+    #[test]
+    fn quant_zero_point() {
+        // z = -8 maps unsigned-looking data onto signed grid
+        let x = Tensor::from_vec(vec![0.0, 15.0]);
+        let ins = [
+            x,
+            Tensor::scalar(1.0),
+            Tensor::scalar(-8.0),
+            Tensor::scalar(4.0),
+        ];
+        let y = quant(&ins, true, false, RoundMode::RoundEven).unwrap();
+        assert_eq!(y.data(), &[0.0, 15.0]);
+    }
+
+    #[test]
+    fn multithreshold_per_tensor() {
+        let x = Tensor::from_vec(vec![-1.0, 0.5, 2.0, 10.0]).reshape(&[1, 4]).unwrap();
+        let th = Tensor::new(&[1, 3], vec![0.0, 1.0, 5.0]).unwrap();
+        let y = multithreshold(&x, &th, 1.0, 0.0).unwrap();
+        assert_eq!(y.data(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn multithreshold_per_channel_nchw() {
+        // 2 channels with different thresholds
+        let x = Tensor::new(&[1, 2, 1, 2], vec![1.0, 3.0, 1.0, 3.0]).unwrap();
+        let th = Tensor::new(&[2, 2], vec![0.0, 2.0, 2.5, 2.8]).unwrap();
+        let y = multithreshold(&x, &th, 1.0, 0.0).unwrap();
+        assert_eq!(y.data(), &[1.0, 2.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn multithreshold_bias_scale() {
+        let x = Tensor::from_vec(vec![5.0]).reshape(&[1, 1]).unwrap();
+        let th = Tensor::new(&[1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        // sign bias -4 and scale 2: y = -4 + 2*3 = 2
+        let y = multithreshold(&x, &th, 2.0, -4.0).unwrap();
+        assert_eq!(y.data(), &[2.0]);
+    }
+
+    #[test]
+    fn bn_matches_manual() {
+        let x = Tensor::new(&[1, 2, 1, 1], vec![1.0, 2.0]).unwrap();
+        let ins = [
+            x,
+            Tensor::from_vec(vec![2.0, 1.0]),  // gamma
+            Tensor::from_vec(vec![0.5, -1.0]), // beta
+            Tensor::from_vec(vec![1.0, 0.0]),  // mean
+            Tensor::from_vec(vec![3.0, 0.0]),  // var
+        ];
+        let y = execute_op(&Op::BatchNorm { eps: 1.0 }, &ins).unwrap();
+        // ch0: 2*(1-1)/sqrt(4) + 0.5 = 0.5 ; ch1: 1*(2-0)/1 - 1 = 1
+        assert!((y[0].data()[0] - 0.5).abs() < 1e-12);
+        assert!((y[0].data()[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mac_count_conv() {
+        let op = Op::Conv {
+            spec: Conv2dSpec {
+                kernel: (3, 3),
+                stride: (1, 1),
+                pad: (1, 1),
+            },
+            group: 1,
+        };
+        let macs = mac_count(&op, &[vec![1, 3, 32, 32], vec![16, 3, 3, 3]]).unwrap();
+        assert_eq!(macs, 16 * 32 * 32 * 3 * 9);
+        assert_eq!(
+            dot_length(&op, &[vec![1, 3, 32, 32], vec![16, 3, 3, 3]]).unwrap(),
+            27
+        );
+    }
+
+    #[test]
+    fn gemm_bias() {
+        let a = Tensor::new(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[2, 1], vec![3.0, 4.0]).unwrap();
+        let c = Tensor::new(&[1, 1], vec![10.0]).unwrap();
+        let y = execute_op(&Op::Gemm, &[a, b, c]).unwrap();
+        assert_eq!(y[0].data(), &[21.0]);
+    }
+
+    #[test]
+    fn flatten_reshape_exec() {
+        let x = Tensor::zeros(&[2, 3, 4]);
+        let y = execute_op(&Op::Flatten { axis: 1 }, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(y[0].shape(), &[2, 12]);
+        let z = execute_op(
+            &Op::Reshape {
+                shape: vec![0, -1, 2],
+            },
+            &[x],
+        )
+        .unwrap();
+        assert_eq!(z[0].shape(), &[2, 6, 2]);
+    }
+}

@@ -1,0 +1,197 @@
+//! Arbitrary-precision container datatypes, mirroring QONNX/FINN datatype
+//! annotations: INT<b>, UINT<b>, FLOAT32 and fixed-point FIXED<W,I>.
+//! These drive datapath widths in the hardware kernels and the datatype
+//! accumulator bound of §4.2.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// A container datatype for a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataType {
+    /// Single-precision float (scales/biases before fixed-point quantization).
+    Float32,
+    /// Signed two's-complement integer of the given bitwidth.
+    Int(u32),
+    /// Unsigned integer of the given bitwidth.
+    UInt(u32),
+    /// Binary {0, 1}.
+    Binary,
+    /// Bipolar {-1, +1} (BNN legacy; 1 bit of storage).
+    Bipolar,
+    /// Fixed-point with total width W and integer bits I (value = m / 2^(W-I)).
+    Fixed { w: u32, i: u32 },
+}
+
+impl DataType {
+    /// Storage bits for one element.
+    pub fn bits(&self) -> u32 {
+        match self {
+            DataType::Float32 => 32,
+            DataType::Int(b) | DataType::UInt(b) => *b,
+            DataType::Binary | DataType::Bipolar => 1,
+            DataType::Fixed { w, .. } => *w,
+        }
+    }
+
+    /// Minimum representable value.
+    pub fn min_value(&self) -> f64 {
+        match self {
+            DataType::Float32 => f64::NEG_INFINITY,
+            DataType::Int(b) => -((1i64 << (b - 1)) as f64),
+            DataType::UInt(_) | DataType::Binary => 0.0,
+            DataType::Bipolar => -1.0,
+            DataType::Fixed { w, i } => {
+                -((1i64 << (w - 1)) as f64) / (1i64 << (w - i)) as f64
+            }
+        }
+    }
+
+    /// Maximum representable value.
+    pub fn max_value(&self) -> f64 {
+        match self {
+            DataType::Float32 => f64::INFINITY,
+            DataType::Int(b) => ((1i64 << (b - 1)) - 1) as f64,
+            DataType::UInt(b) => ((1u64 << b) - 1) as f64,
+            DataType::Binary => 1.0,
+            DataType::Bipolar => 1.0,
+            DataType::Fixed { w, i } => {
+                ((1i64 << (w - 1)) - 1) as f64 / (1i64 << (w - i)) as f64
+            }
+        }
+    }
+
+    pub fn signed(&self) -> bool {
+        matches!(
+            self,
+            DataType::Int(_) | DataType::Bipolar | DataType::Fixed { .. } | DataType::Float32
+        )
+    }
+
+    pub fn is_integer(&self) -> bool {
+        matches!(
+            self,
+            DataType::Int(_) | DataType::UInt(_) | DataType::Binary | DataType::Bipolar
+        )
+    }
+
+    /// Does `v` fit this datatype exactly?
+    pub fn allows(&self, v: f64) -> bool {
+        match self {
+            DataType::Float32 => true,
+            DataType::Bipolar => v == -1.0 || v == 1.0,
+            DataType::Fixed { w, i } => {
+                let scale = (1i64 << (w - i)) as f64;
+                let m = v * scale;
+                m.fract() == 0.0 && v >= self.min_value() && v <= self.max_value()
+            }
+            _ => v.fract() == 0.0 && v >= self.min_value() && v <= self.max_value(),
+        }
+    }
+
+    /// Smallest integer datatype covering the closed interval [lo, hi].
+    pub fn for_range(lo: i64, hi: i64) -> DataType {
+        let bits = crate::util::bits_for_range(lo, hi);
+        if lo < 0 {
+            DataType::Int(bits)
+        } else {
+            DataType::UInt(bits)
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DataType> {
+        if s == "FLOAT32" {
+            return Ok(DataType::Float32);
+        }
+        if s == "BINARY" {
+            return Ok(DataType::Binary);
+        }
+        if s == "BIPOLAR" {
+            return Ok(DataType::Bipolar);
+        }
+        if let Some(b) = s.strip_prefix("UINT") {
+            return Ok(DataType::UInt(b.parse()?));
+        }
+        if let Some(b) = s.strip_prefix("INT") {
+            return Ok(DataType::Int(b.parse()?));
+        }
+        if let Some(rest) = s.strip_prefix("FIXED<") {
+            let rest = rest.trim_end_matches('>');
+            let (w, i) = rest
+                .split_once(',')
+                .ok_or_else(|| anyhow::anyhow!("bad FIXED spec {s}"))?;
+            return Ok(DataType::Fixed {
+                w: w.trim().parse()?,
+                i: i.trim().parse()?,
+            });
+        }
+        bail!("unknown datatype '{s}'")
+    }
+}
+
+impl fmt::Display for DataType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataType::Float32 => write!(f, "FLOAT32"),
+            DataType::Int(b) => write!(f, "INT{b}"),
+            DataType::UInt(b) => write!(f, "UINT{b}"),
+            DataType::Binary => write!(f, "BINARY"),
+            DataType::Bipolar => write!(f, "BIPOLAR"),
+            DataType::Fixed { w, i } => write!(f, "FIXED<{w},{i}>"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_ranges() {
+        assert_eq!(DataType::Int(4).min_value(), -8.0);
+        assert_eq!(DataType::Int(4).max_value(), 7.0);
+        assert_eq!(DataType::UInt(4).min_value(), 0.0);
+        assert_eq!(DataType::UInt(4).max_value(), 15.0);
+        assert_eq!(DataType::Int(8).bits(), 8);
+    }
+
+    #[test]
+    fn fixed_point_ranges() {
+        // fixed16.8: 8 fractional bits
+        let t = DataType::Fixed { w: 16, i: 8 };
+        assert_eq!(t.max_value(), (32767.0) / 256.0);
+        assert_eq!(t.min_value(), -128.0);
+        assert!(t.allows(1.5));
+        assert!(t.allows(-0.00390625));
+        assert!(!t.allows(0.001));
+    }
+
+    #[test]
+    fn allows_integers() {
+        assert!(DataType::Int(4).allows(-8.0));
+        assert!(!DataType::Int(4).allows(8.0));
+        assert!(!DataType::Int(4).allows(0.5));
+        assert!(DataType::UInt(2).allows(3.0));
+        assert!(!DataType::UInt(2).allows(-1.0));
+        assert!(DataType::Bipolar.allows(-1.0));
+        assert!(!DataType::Bipolar.allows(0.0));
+    }
+
+    #[test]
+    fn for_range_picks_minimal() {
+        assert_eq!(DataType::for_range(0, 15), DataType::UInt(4));
+        assert_eq!(DataType::for_range(-8, 7), DataType::Int(4));
+        assert_eq!(DataType::for_range(-96, 96), DataType::Int(8));
+        assert_eq!(DataType::for_range(0, 0), DataType::UInt(1));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["FLOAT32", "INT5", "UINT13", "BINARY", "BIPOLAR", "FIXED<16,8>"] {
+            let t = DataType::parse(s).unwrap();
+            assert_eq!(t.to_string(), s);
+        }
+        assert!(DataType::parse("floaty").is_err());
+    }
+}

@@ -1,0 +1,465 @@
+//! QONNX-like graph intermediate representation.
+//!
+//! A [`Graph`] is a list of [`Node`]s over named tensors, with constant
+//! tensors ("initializers", e.g. trained weights and quantization
+//! parameters) stored inline. The representation deliberately mirrors
+//! (Q)ONNX: SIRA (§3) and the streamlining passes (§4) are expressed as
+//! analyses and rewrites over this graph, exactly as the paper implements
+//! them over QONNX.
+
+pub mod dtypes;
+pub mod node;
+pub mod shapes;
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use anyhow::{anyhow, bail, Result};
+
+pub use dtypes::DataType;
+pub use node::{Node, Op, RoundMode};
+
+use crate::tensor::Tensor;
+
+/// A neural network compute graph.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub name: String,
+    /// Nodes in insertion order (not necessarily topological; use
+    /// [`Graph::topo_order`]).
+    pub nodes: Vec<Node>,
+    /// Names of dynamic graph inputs.
+    pub inputs: Vec<String>,
+    /// Names of graph outputs.
+    pub outputs: Vec<String>,
+    /// Constant tensors (weights, scales, zero-points, bitwidths, ...).
+    pub initializers: BTreeMap<String, Tensor>,
+    /// Shape annotations for dynamic tensors (graph inputs at minimum;
+    /// the rest are filled in by [`shapes::infer_shapes`]).
+    pub shapes: BTreeMap<String, Vec<usize>>,
+    /// Optional container-datatype annotations (filled by passes).
+    pub dtypes: BTreeMap<String, DataType>,
+    counter: usize,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    // ---- naming ----------------------------------------------------------
+
+    /// Fresh tensor/node name with the given prefix.
+    pub fn fresh(&mut self, prefix: &str) -> String {
+        loop {
+            let name = format!("{prefix}_{}", self.counter);
+            self.counter += 1;
+            if !self.tensor_exists(&name) && !self.nodes.iter().any(|n| n.name == name) {
+                return name;
+            }
+        }
+    }
+
+    fn tensor_exists(&self, name: &str) -> bool {
+        self.initializers.contains_key(name)
+            || self.shapes.contains_key(name)
+            || self.inputs.iter().any(|i| i == name)
+            || self
+                .nodes
+                .iter()
+                .any(|n| n.outputs.iter().any(|o| o == name))
+    }
+
+    // ---- construction ----------------------------------------------------
+
+    pub fn add_input(&mut self, name: &str, shape: &[usize]) {
+        self.inputs.push(name.to_string());
+        self.shapes.insert(name.to_string(), shape.to_vec());
+    }
+
+    pub fn add_initializer(&mut self, name: &str, t: Tensor) {
+        self.shapes.insert(name.to_string(), t.shape().to_vec());
+        self.initializers.insert(name.to_string(), t);
+    }
+
+    pub fn add_node(&mut self, node: Node) {
+        self.nodes.push(node);
+    }
+
+    /// Convenience: add a node with a fresh name and fresh single output;
+    /// returns the output tensor name.
+    pub fn emit(&mut self, op: Op, inputs: &[&str]) -> String {
+        let name = self.fresh(op.name());
+        let out = self.fresh(&format!("{}_out", op.name()));
+        self.nodes.push(Node {
+            name,
+            op,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: vec![out.clone()],
+        });
+        out
+    }
+
+    // ---- queries -----------------------------------------------------------
+
+    pub fn is_initializer(&self, tensor: &str) -> bool {
+        self.initializers.contains_key(tensor)
+    }
+
+    pub fn initializer(&self, tensor: &str) -> Option<&Tensor> {
+        self.initializers.get(tensor)
+    }
+
+    /// Index of the node producing `tensor`, if any.
+    pub fn producer(&self, tensor: &str) -> Option<usize> {
+        self.nodes
+            .iter()
+            .position(|n| n.outputs.iter().any(|o| o == tensor))
+    }
+
+    /// Indices of nodes consuming `tensor`.
+    pub fn consumers(&self, tensor: &str) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.iter().any(|i| i == tensor))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of consumers of a tensor (graph outputs count as one each).
+    pub fn fanout(&self, tensor: &str) -> usize {
+        self.consumers(tensor).len() + self.outputs.iter().filter(|o| *o == tensor).count()
+    }
+
+    /// All tensor names referenced by the graph.
+    pub fn all_tensors(&self) -> BTreeSet<String> {
+        let mut out: BTreeSet<String> = self.inputs.iter().cloned().collect();
+        out.extend(self.initializers.keys().cloned());
+        for n in &self.nodes {
+            out.extend(n.inputs.iter().cloned());
+            out.extend(n.outputs.iter().cloned());
+        }
+        out
+    }
+
+    /// Topological order of node indices (Kahn's algorithm). Errors on
+    /// cycles or on references to undefined tensors.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let mut produced: BTreeSet<&str> = self.inputs.iter().map(|s| s.as_str()).collect();
+        produced.extend(self.initializers.keys().map(|s| s.as_str()));
+        let mut remaining: VecDeque<usize> = (0..self.nodes.len()).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        let mut stuck = 0usize;
+        while let Some(i) = remaining.pop_front() {
+            let ready = self.nodes[i]
+                .inputs
+                .iter()
+                .all(|inp| produced.contains(inp.as_str()));
+            if ready {
+                for o in &self.nodes[i].outputs {
+                    produced.insert(o);
+                }
+                order.push(i);
+                stuck = 0;
+            } else {
+                remaining.push_back(i);
+                stuck += 1;
+                if stuck > remaining.len() {
+                    let n = &self.nodes[i];
+                    let missing: Vec<_> = n
+                        .inputs
+                        .iter()
+                        .filter(|inp| !produced.contains(inp.as_str()))
+                        .collect();
+                    bail!(
+                        "graph has a cycle or undefined tensors: node '{}' waits on {:?}",
+                        n.name,
+                        missing
+                    );
+                }
+            }
+        }
+        Ok(order)
+    }
+
+    /// Nodes sorted topologically (cloned indices view).
+    pub fn topo_nodes(&self) -> Result<Vec<&Node>> {
+        Ok(self.topo_order()?.into_iter().map(|i| &self.nodes[i]).collect())
+    }
+
+    // ---- surgery -----------------------------------------------------------
+
+    /// Remove node by index, reconnecting its single input to its single
+    /// output's consumers (only valid for 1-in/1-out pass-through removal).
+    pub fn remove_node_bypass(&mut self, idx: usize) -> Result<()> {
+        let node = self.nodes[idx].clone();
+        let dynamic_inputs: Vec<&String> = node
+            .inputs
+            .iter()
+            .filter(|i| !self.is_initializer(i))
+            .collect();
+        if dynamic_inputs.len() != 1 || node.outputs.len() != 1 {
+            bail!(
+                "remove_node_bypass requires 1 dynamic input / 1 output, node '{}' has {}/{}",
+                node.name,
+                dynamic_inputs.len(),
+                node.outputs.len()
+            );
+        }
+        let src = dynamic_inputs[0].clone();
+        let dst = node.outputs[0].clone();
+        self.nodes.remove(idx);
+        for n in &mut self.nodes {
+            for i in &mut n.inputs {
+                if *i == dst {
+                    *i = src.clone();
+                }
+            }
+        }
+        for o in &mut self.outputs {
+            if *o == dst {
+                *o = src.clone();
+            }
+        }
+        self.shapes.remove(&dst);
+        self.dtypes.remove(&dst);
+        Ok(())
+    }
+
+    /// Insert a node so that it consumes `tensor` and all previous
+    /// consumers of `tensor` (and graph outputs) read the node's output
+    /// instead. Returns the new output tensor name.
+    pub fn insert_after(&mut self, tensor: &str, op: Op, extra_inputs: &[&str]) -> Result<String> {
+        if !self.tensor_exists(tensor) {
+            bail!("insert_after: tensor '{tensor}' not found");
+        }
+        let name = self.fresh(op.name());
+        let out = self.fresh(&format!("{tensor}_post"));
+        // Rewire existing consumers first.
+        for n in &mut self.nodes {
+            for i in &mut n.inputs {
+                if i == tensor {
+                    *i = out.clone();
+                }
+            }
+        }
+        for o in &mut self.outputs {
+            if o == tensor {
+                *o = out.clone();
+            }
+        }
+        let mut inputs = vec![tensor.to_string()];
+        inputs.extend(extra_inputs.iter().map(|s| s.to_string()));
+        self.nodes.push(Node {
+            name,
+            op,
+            inputs,
+            outputs: vec![out.clone()],
+        });
+        Ok(out)
+    }
+
+    /// Drop initializers that no node references (cleanup after rewrites).
+    pub fn prune_unused_initializers(&mut self) {
+        let used: BTreeSet<&String> = self
+            .nodes
+            .iter()
+            .flat_map(|n| n.inputs.iter())
+            .chain(self.outputs.iter())
+            .collect();
+        let dead: Vec<String> = self
+            .initializers
+            .keys()
+            .filter(|k| !used.contains(k))
+            .cloned()
+            .collect();
+        for k in dead {
+            self.initializers.remove(&k);
+            self.shapes.remove(&k);
+            self.dtypes.remove(&k);
+        }
+    }
+
+    /// Remove nodes whose outputs reach no graph output (dead code).
+    pub fn eliminate_dead_nodes(&mut self) -> Result<()> {
+        let mut live: BTreeSet<String> = self.outputs.iter().cloned().collect();
+        let order = self.topo_order()?;
+        let mut keep = vec![false; self.nodes.len()];
+        for &i in order.iter().rev() {
+            let n = &self.nodes[i];
+            if n.outputs.iter().any(|o| live.contains(o)) {
+                keep[i] = true;
+                live.extend(n.inputs.iter().cloned());
+            }
+        }
+        let mut idx = 0;
+        self.nodes.retain(|_| {
+            let k = keep[idx];
+            idx += 1;
+            k
+        });
+        self.prune_unused_initializers();
+        Ok(())
+    }
+
+    /// Validate structural invariants: unique node outputs, defined inputs,
+    /// acyclicity, output existence.
+    pub fn check(&self) -> Result<()> {
+        let mut produced: BTreeSet<&str> = BTreeSet::new();
+        for n in &self.nodes {
+            for o in &n.outputs {
+                if self.inputs.iter().any(|i| i == o) || self.initializers.contains_key(o) {
+                    bail!("node '{}' writes graph input/initializer '{}'", n.name, o);
+                }
+                if !produced.insert(o) {
+                    bail!("tensor '{}' produced twice", o);
+                }
+            }
+        }
+        self.topo_order()?;
+        for o in &self.outputs {
+            if !self.tensor_exists(o) {
+                bail!("graph output '{o}' is not produced");
+            }
+        }
+        Ok(())
+    }
+
+    /// Find a node by name.
+    pub fn node_by_name(&self, name: &str) -> Result<&Node> {
+        self.nodes
+            .iter()
+            .find(|n| n.name == name)
+            .ok_or_else(|| anyhow!("no node named '{name}'"))
+    }
+
+    /// Count nodes with a given operator name.
+    pub fn count_op(&self, op_name: &str) -> usize {
+        self.nodes.iter().filter(|n| n.op.name() == op_name).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // x -> relu -> a ; x -> sigmoid -> b ; a+b -> y
+        let mut g = Graph::new("diamond");
+        g.add_input("x", &[1, 4]);
+        g.add_node(Node::new("r", Op::Relu, &["x"], &["a"]));
+        g.add_node(Node::new("s", Op::Sigmoid, &["x"], &["b"]));
+        g.add_node(Node::new("add", Op::Add, &["a", "b"], &["y"]));
+        g.outputs.push("y".into());
+        g
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let mut g = diamond();
+        // scramble: put add first
+        g.nodes.swap(0, 2);
+        let order = g.topo_order().unwrap();
+        let pos = |name: &str| order.iter().position(|&i| g.nodes[i].name == name).unwrap();
+        assert!(pos("r") < pos("add"));
+        assert!(pos("s") < pos("add"));
+        g.check().unwrap();
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new("cyc");
+        g.add_input("x", &[1]);
+        g.add_node(Node::new("a", Op::Add, &["x", "w"], &["v"]));
+        g.add_node(Node::new("b", Op::Relu, &["v"], &["w"]));
+        g.outputs.push("w".into());
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn producer_consumer_maps() {
+        let g = diamond();
+        assert_eq!(g.producer("a"), Some(0));
+        assert_eq!(g.producer("x"), None);
+        assert_eq!(g.consumers("x").len(), 2);
+        assert_eq!(g.fanout("y"), 1); // graph output
+    }
+
+    #[test]
+    fn bypass_removal() {
+        let mut g = Graph::new("line");
+        g.add_input("x", &[2]);
+        g.add_node(Node::new("i", Op::Identity, &["x"], &["m"]));
+        g.add_node(Node::new("r", Op::Relu, &["m"], &["y"]));
+        g.outputs.push("y".into());
+        g.remove_node_bypass(0).unwrap();
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].inputs[0], "x");
+        g.check().unwrap();
+    }
+
+    #[test]
+    fn bypass_requires_single_dynamic_input() {
+        let mut g = diamond();
+        assert!(g.remove_node_bypass(2).is_err()); // Add has 2 dynamic inputs
+    }
+
+    #[test]
+    fn insert_after_rewires_consumers() {
+        let mut g = diamond();
+        let new_out = g.insert_after("x", Op::Identity, &[]).unwrap();
+        g.check().unwrap();
+        // relu and sigmoid now read the identity output
+        assert_eq!(g.node_by_name("r").unwrap().inputs[0], new_out);
+        assert_eq!(g.node_by_name("s").unwrap().inputs[0], new_out);
+        // identity reads x
+        let id = g.nodes.iter().find(|n| n.op == Op::Identity).unwrap();
+        assert_eq!(id.inputs[0], "x");
+    }
+
+    #[test]
+    fn insert_after_graph_output() {
+        let mut g = diamond();
+        let new_out = g.insert_after("y", Op::Relu, &[]).unwrap();
+        assert_eq!(g.outputs[0], new_out);
+        g.check().unwrap();
+    }
+
+    #[test]
+    fn dead_node_elimination() {
+        let mut g = diamond();
+        g.add_node(Node::new("dead", Op::Relu, &["a"], &["unused"]));
+        g.eliminate_dead_nodes().unwrap();
+        assert!(g.node_by_name("dead").is_err());
+        assert_eq!(g.nodes.len(), 3);
+    }
+
+    #[test]
+    fn prune_initializers() {
+        let mut g = diamond();
+        g.add_initializer("w_dead", Tensor::scalar(1.0));
+        g.prune_unused_initializers();
+        assert!(!g.is_initializer("w_dead"));
+    }
+
+    #[test]
+    fn fresh_names_unique() {
+        let mut g = diamond();
+        let a = g.fresh("t");
+        let b = g.fresh("t");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn check_rejects_double_produce() {
+        let mut g = Graph::new("bad");
+        g.add_input("x", &[1]);
+        g.add_node(Node::new("a", Op::Relu, &["x"], &["y"]));
+        g.add_node(Node::new("b", Op::Sigmoid, &["x"], &["y"]));
+        g.outputs.push("y".into());
+        assert!(g.check().is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Shape inference over the graph (ONNX-style static shapes).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::broadcast_shape;
+
+use super::{Graph, Op};
+
+/// Infer and record shapes for every tensor in the graph. Requires shapes
+/// for all graph inputs and initializers (initializers carry their own).
+pub fn infer_shapes(g: &mut Graph) -> Result<()> {
+    let order = g.topo_order()?;
+    for idx in order {
+        let node = g.nodes[idx].clone();
+        let in_shapes: Vec<Vec<usize>> = node
+            .inputs
+            .iter()
+            .map(|i| {
+                g.shapes
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("no shape for tensor '{i}' (node '{}')", node.name))
+            })
+            .collect::<Result<_>>()?;
+        let out_shapes = infer_node(&node.op, &in_shapes, &node.name)?;
+        if out_shapes.len() != node.outputs.len() {
+            bail!("node '{}': inferred {} outputs, node declares {}", node.name, out_shapes.len(), node.outputs.len());
+        }
+        for (o, s) in node.outputs.iter().zip(out_shapes) {
+            g.shapes.insert(o.clone(), s);
+        }
+    }
+    Ok(())
+}
+
+/// Shape inference for a single node.
+pub fn infer_node(op: &Op, ins: &[Vec<usize>], name: &str) -> Result<Vec<Vec<usize>>> {
+    let shape = match op {
+        Op::Quant { .. } => {
+            // output shape = broadcast(x, scale, zero_point)
+            let mut s = ins[0].clone();
+            for extra in ins.iter().take(3).skip(1) {
+                s = broadcast_shape(&s, extra)?;
+            }
+            s
+        }
+        Op::MatMul => {
+            let (a, b) = (&ins[0], &ins[1]);
+            if a.len() != 2 || b.len() != 2 {
+                bail!("node '{name}': MatMul expects rank-2, got {a:?} x {b:?}");
+            }
+            if a[1] != b[0] {
+                bail!("node '{name}': MatMul inner-dim mismatch {a:?} x {b:?}");
+            }
+            vec![a[0], b[1]]
+        }
+        Op::Gemm => {
+            let (a, b) = (&ins[0], &ins[1]);
+            if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+                bail!("node '{name}': Gemm shape mismatch {a:?} x {b:?}");
+            }
+            vec![a[0], b[1]]
+        }
+        Op::Conv { spec, group } => {
+            let (x, w) = (&ins[0], &ins[1]);
+            if x.len() != 4 || w.len() != 4 {
+                bail!("node '{name}': Conv expects NCHW x OIHW");
+            }
+            if w[1] * group != x[1] {
+                bail!(
+                    "node '{name}': Conv channels mismatch: x C={}, w I={} group={}",
+                    x[1],
+                    w[1],
+                    group
+                );
+            }
+            let (oh, ow) = spec.out_hw(x[2], x[3]);
+            vec![x[0], w[0], oh, ow]
+        }
+        Op::Add | Op::Sub | Op::Mul | Op::Div => broadcast_shape(&ins[0], &ins[1])?,
+        Op::Relu | Op::Sigmoid | Op::Identity | Op::Floor | Op::Clip { .. } => ins[0].clone(),
+        Op::BatchNorm { .. } => ins[0].clone(),
+        Op::MaxPool { spec } | Op::AveragePool { spec } => {
+            let x = &ins[0];
+            if x.len() != 4 {
+                bail!("node '{name}': pooling expects NCHW");
+            }
+            let (oh, ow) = spec.out_hw(x[2], x[3]);
+            vec![x[0], x[1], oh, ow]
+        }
+        Op::GlobalAveragePool => {
+            let x = &ins[0];
+            if x.len() != 4 {
+                bail!("node '{name}': GlobalAveragePool expects NCHW");
+            }
+            vec![x[0], x[1], 1, 1]
+        }
+        Op::Reshape { shape } => {
+            let numel: usize = ins[0].iter().product();
+            let mut out: Vec<usize> = Vec::with_capacity(shape.len());
+            let mut infer_at: Option<usize> = None;
+            let mut known: usize = 1;
+            for (i, &d) in shape.iter().enumerate() {
+                if d == -1 {
+                    if infer_at.is_some() {
+                        bail!("node '{name}': multiple -1 in reshape");
+                    }
+                    infer_at = Some(i);
+                    out.push(0);
+                } else if d == 0 {
+                    let v = ins[0][i];
+                    out.push(v);
+                    known *= v;
+                } else {
+                    out.push(d as usize);
+                    known *= d as usize;
+                }
+            }
+            if let Some(i) = infer_at {
+                if numel % known != 0 {
+                    bail!("node '{name}': reshape cannot infer -1");
+                }
+                out[i] = numel / known;
+            } else if known != numel {
+                bail!("node '{name}': reshape element count mismatch");
+            }
+            out
+        }
+        Op::Flatten { axis } => {
+            let x = &ins[0];
+            let outer: usize = x[..*axis].iter().product();
+            let inner: usize = x[*axis..].iter().product();
+            vec![outer, inner]
+        }
+        Op::Transpose { perm } => {
+            if perm.len() != ins[0].len() {
+                bail!("node '{name}': transpose arity mismatch");
+            }
+            perm.iter().map(|&p| ins[0][p]).collect()
+        }
+        Op::Concat { axis } => {
+            let mut out = ins[0].clone();
+            if *axis >= out.len() {
+                bail!("node '{name}': concat axis out of range");
+            }
+            for s in &ins[1..] {
+                if s.len() != out.len() {
+                    bail!("node '{name}': concat rank mismatch");
+                }
+                for d in 0..out.len() {
+                    if d != *axis && s[d] != out[d] {
+                        bail!("node '{name}': concat dim {d} mismatch");
+                    }
+                }
+                out[*axis] += s[*axis];
+            }
+            out
+        }
+        Op::MultiThreshold { .. } => ins[0].clone(),
+    };
+    Ok(vec![shape])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Node};
+    use crate::tensor::{Conv2dSpec, Tensor};
+
+    #[test]
+    fn infers_mlp_shapes() {
+        let mut g = Graph::new("mlp");
+        g.add_input("x", &[1, 784]);
+        g.add_initializer("w", Tensor::zeros(&[784, 64]));
+        g.add_node(Node::new("mm", Op::MatMul, &["x", "w"], &["h"]));
+        g.add_node(Node::new("r", Op::Relu, &["h"], &["y"]));
+        g.outputs.push("y".into());
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shapes["h"], vec![1, 64]);
+        assert_eq!(g.shapes["y"], vec![1, 64]);
+    }
+
+    #[test]
+    fn infers_conv_chain() {
+        let mut g = Graph::new("conv");
+        g.add_input("x", &[1, 3, 32, 32]);
+        g.add_initializer("w", Tensor::zeros(&[16, 3, 3, 3]));
+        let spec = Conv2dSpec {
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+        };
+        g.add_node(Node::new("c", Op::Conv { spec, group: 1 }, &["x", "w"], &["h"]));
+        g.add_node(Node::new(
+            "p",
+            Op::MaxPool {
+                spec: Conv2dSpec {
+                    kernel: (2, 2),
+                    stride: (2, 2),
+                    pad: (0, 0),
+                },
+            },
+            &["h"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        infer_shapes(&mut g).unwrap();
+        assert_eq!(g.shapes["h"], vec![1, 16, 32, 32]);
+        assert_eq!(g.shapes["y"], vec![1, 16, 16, 16]);
+    }
+
+    #[test]
+    fn reshape_with_minus_one_and_zero() {
+        let out = infer_node(
+            &Op::Reshape {
+                shape: vec![0, -1],
+            },
+            &[vec![2, 3, 4]],
+            "r",
+        )
+        .unwrap();
+        assert_eq!(out[0], vec![2, 12]);
+        assert!(infer_node(
+            &Op::Reshape {
+                shape: vec![-1, -1]
+            },
+            &[vec![4]],
+            "r"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn flatten_axis() {
+        let out = infer_node(&Op::Flatten { axis: 1 }, &[vec![2, 3, 4, 5]], "f").unwrap();
+        assert_eq!(out[0], vec![2, 60]);
+    }
+
+    #[test]
+    fn conv_group_mismatch_rejected() {
+        let spec = Conv2dSpec {
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+        };
+        // depthwise weights (C,1,3,3) with group=C ok
+        let ok = infer_node(
+            &Op::Conv { spec, group: 8 },
+            &[vec![1, 8, 16, 16], vec![8, 1, 3, 3]],
+            "dw",
+        );
+        assert!(ok.is_ok());
+        let bad = infer_node(
+            &Op::Conv { spec, group: 1 },
+            &[vec![1, 8, 16, 16], vec![8, 4, 3, 3]],
+            "dw",
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn quant_broadcasts_scale() {
+        // per-channel scale (1,C,1,1) over NCHW input
+        let out = infer_node(
+            &Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: crate::graph::RoundMode::RoundEven,
+            },
+            &[
+                vec![1, 4, 8, 8],
+                vec![1, 4, 1, 1],
+                vec![],
+                vec![],
+            ],
+            "q",
+        )
+        .unwrap();
+        assert_eq!(out[0], vec![1, 4, 8, 8]);
+    }
+
+    #[test]
+    fn missing_shape_is_error() {
+        let mut g = Graph::new("bad");
+        g.add_input("x", &[1, 4]);
+        g.add_node(Node::new("mm", Op::MatMul, &["x", "w_undef"], &["y"]));
+        g.outputs.push("y".into());
+        assert!(infer_shapes(&mut g).is_err());
+    }
+}

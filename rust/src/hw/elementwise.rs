@@ -1,0 +1,201 @@
+//! Elementwise operation meta-kernel model (§5.2, after Berganski et
+//! al.): a pipelined loop-nest applying one binary op per cycle per PE,
+//! with multidirectional broadcasting and an embedded constant parameter
+//! storage. Used to implement *composite* layer tails (Fig 14 option 1):
+//! Mul → Add → Max(ReLU) → Mul → ToInt.
+
+use crate::synth::{MemStyle, Resources, Synth};
+
+use super::{HwKernel, KernelCategory};
+
+/// The binary operation implemented by the kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EwOp {
+    Mul,
+    Add,
+    /// max(x, const) — covers ReLU
+    Max,
+    /// rounding/clipping conversion to integer (the quantizer step)
+    ToInt,
+}
+
+/// Arithmetic implementation datatype for the op (§6.3: float32,
+/// fixed16.8 or fixed32.16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EwDtype {
+    Float32,
+    /// fixed-point with total bits / integer bits
+    Fixed(u32, u32),
+    /// pure integer at given width
+    Int(u32),
+}
+
+impl EwDtype {
+    pub fn bits(&self) -> u32 {
+        match self {
+            EwDtype::Float32 => 32,
+            EwDtype::Fixed(w, _) => *w,
+            EwDtype::Int(w) => *w,
+        }
+    }
+}
+
+/// Elementwise meta-kernel instance.
+#[derive(Clone, Debug)]
+pub struct ElementwiseKernel {
+    pub name: String,
+    pub op: EwOp,
+    /// dynamic input bits (n_i)
+    pub in_bits: u32,
+    /// constant parameter bits (n_p); 0 when the op has no parameter
+    pub param_bits: u32,
+    /// output bits
+    pub out_bits: u32,
+    /// arithmetic datatype
+    pub dtype: EwDtype,
+    /// channels (parameter storage depth when per-channel)
+    pub channels: usize,
+    /// per-channel parameters? (false = scalar constant)
+    pub per_channel: bool,
+    pub elems_per_frame: usize,
+    pub pe: usize,
+    /// force LUT implementation of arithmetic (the §6.4.1 microbenchmark
+    /// setting); otherwise the "tool" may use DSPs for wide multiplies
+    pub force_lut: bool,
+    pub mem_style: MemStyle,
+}
+
+impl HwKernel for ElementwiseKernel {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn category(&self) -> KernelCategory {
+        KernelCategory::NonMac
+    }
+
+    fn resources(&self, synth: &Synth) -> Resources {
+        let pe = self.pe as f64;
+        let mut r = Resources::default();
+        // compute element
+        match self.dtype {
+            EwDtype::Float32 => {
+                let unit = match self.op {
+                    EwOp::Mul => synth.fmul32(),
+                    EwOp::Add | EwOp::Max => synth.fadd32(),
+                    EwOp::ToInt => synth.fcvt32(),
+                };
+                r += unit * pe;
+            }
+            EwDtype::Fixed(..) | EwDtype::Int(_) => {
+                let unit = match self.op {
+                    EwOp::Mul => {
+                        if self.force_lut || self.in_bits.max(self.param_bits) < 10 {
+                            synth.multiplier_lut(self.in_bits, self.param_bits.max(1))
+                        } else {
+                            synth.multiplier_dsp(self.in_bits, self.param_bits.max(1))
+                        }
+                    }
+                    EwOp::Add => synth.adder(self.in_bits.max(self.param_bits) + 1),
+                    EwOp::Max => {
+                        synth.comparator(self.in_bits) + synth.mux2(self.in_bits)
+                    }
+                    // round + clip: adder for the rounding increment plus
+                    // saturation comparators
+                    EwOp::ToInt => {
+                        synth.adder(self.in_bits) + synth.comparator(self.in_bits) * 2.0
+                            + synth.mux2(self.out_bits)
+                    }
+                };
+                r += unit * pe;
+            }
+        }
+        // constant parameter storage (per-channel only; scalar params fold
+        // into the datapath)
+        if self.per_channel && self.param_bits > 0 {
+            let bits = self.channels as u64 * self.param_bits as u64;
+            r += synth.memory(bits, self.param_bits * self.pe as u32, self.mem_style);
+        }
+        // broadcasting buffer index logic + loop-nest control (§5.2)
+        r += Resources::lut_only(24.0 + 4.0 * pe);
+        r
+    }
+
+    fn cycles_per_frame(&self) -> u64 {
+        (self.elems_per_frame as u64).div_ceil(self.pe as u64)
+    }
+
+    fn latency(&self) -> u64 {
+        match self.dtype {
+            EwDtype::Float32 => 12,
+            _ => 3,
+        }
+    }
+
+    fn stream_widths(&self) -> (u64, u64) {
+        (
+            self.pe as u64 * self.in_bits as u64,
+            self.pe as u64 * self.out_bits as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ew(op: EwOp, dtype: EwDtype, n_i: u32, n_p: u32, pe: usize) -> ElementwiseKernel {
+        ElementwiseKernel {
+            name: "ew".into(),
+            op,
+            in_bits: n_i,
+            param_bits: n_p,
+            out_bits: n_i,
+            dtype,
+            channels: 256,
+            per_channel: true,
+            elems_per_frame: 256,
+            pe,
+            force_lut: true,
+            mem_style: MemStyle::Lut,
+        }
+    }
+
+    #[test]
+    fn mul_scales_multiplicatively() {
+        let s = Synth::exact();
+        let small = ew(EwOp::Mul, EwDtype::Fixed(16, 8), 8, 8, 1).resources(&s);
+        let big = ew(EwOp::Mul, EwDtype::Fixed(16, 8), 16, 16, 1).resources(&s);
+        // n_i*n_p grows 4x
+        assert!(big.lut / small.lut > 2.0);
+    }
+
+    #[test]
+    fn add_scales_linearly() {
+        let s = Synth::exact();
+        let a8 = ew(EwOp::Add, EwDtype::Fixed(16, 8), 8, 8, 1).resources(&s);
+        let a16 = ew(EwOp::Add, EwDtype::Fixed(16, 8), 16, 16, 1).resources(&s);
+        assert!(a16.lut < a8.lut * 2.5);
+    }
+
+    #[test]
+    fn float32_is_an_order_of_magnitude_costlier() {
+        let s = Synth::exact();
+        let fx = ew(EwOp::Mul, EwDtype::Fixed(16, 8), 8, 8, 4).resources(&s);
+        let fl = ew(EwOp::Mul, EwDtype::Float32, 8, 8, 4).resources(&s);
+        assert!(fl.lut > fx.lut * 3.0, "float {} vs fixed {}", fl.lut, fx.lut);
+    }
+
+    #[test]
+    fn pe_parallelism_multiplies_compute() {
+        let s = Synth::exact();
+        let p1 = ew(EwOp::Max, EwDtype::Int(16), 16, 0, 1).resources(&s);
+        let p4 = ew(EwOp::Max, EwDtype::Int(16), 16, 0, 4).resources(&s);
+        assert!(p4.lut > p1.lut * 2.5 && p4.lut < p1.lut * 4.5);
+    }
+
+    #[test]
+    fn cycles_per_frame_by_pe() {
+        assert_eq!(ew(EwOp::Mul, EwDtype::Int(8), 8, 8, 4).cycles_per_frame(), 64);
+    }
+}

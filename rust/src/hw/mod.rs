@@ -1,0 +1,50 @@
+//! Hardware kernel library models (§5): the building blocks the FINN
+//! backend instantiates into a streaming dataflow pipeline. Each kernel
+//! models its FPGA resource cost (via the [`crate::synth`] structural
+//! estimator) and its cycle behaviour (initiation interval + latency) for
+//! the dataflow performance simulator.
+
+pub mod elementwise;
+pub mod mvu;
+pub mod stream;
+pub mod thresholding;
+
+pub use elementwise::{EwDtype, EwOp, ElementwiseKernel};
+pub use mvu::Mvu;
+pub use stream::{Dwc, Fifo, PoolKernel, SlidingWindow};
+pub use thresholding::{Thresholding, ThresholdStyle};
+
+use crate::synth::{Resources, Synth};
+
+/// Category for the Fig 21 MAC / non-MAC resource breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelCategory {
+    Mac,
+    NonMac,
+}
+
+/// A hardware kernel model.
+pub trait HwKernel {
+    fn name(&self) -> String;
+    fn category(&self) -> KernelCategory;
+    /// FPGA resources under a given synthesis context.
+    fn resources(&self, synth: &Synth) -> Resources;
+    /// Cycles to process one input frame (initiation interval at the
+    /// frame level; streaming kernels overlap frames).
+    fn cycles_per_frame(&self) -> u64;
+    /// Pipeline latency in cycles from first input to first output.
+    fn latency(&self) -> u64;
+    /// Input and output stream widths in bits (checked against the
+    /// 8192-bit Vitis ap_int limit, §6.2.2).
+    fn stream_widths(&self) -> (u64, u64);
+}
+
+/// A placed kernel instance in the FDNA.
+pub struct KernelInstance {
+    pub kernel: Box<dyn HwKernel>,
+    /// graph node this was generated from
+    pub source_node: String,
+}
+
+/// The Vitis HLS arbitrary-precision integer stream-width limit.
+pub const MAX_STREAM_BITS: u64 = 8192;

@@ -1,0 +1,165 @@
+//! Matrix-Vector Unit (MVU) model — the FINN MAC engine [Alam et al.]:
+//! PE × SIMD multiply-accumulate lanes, folded over a (MW × MH) weight
+//! matrix. DSP packing is applied for 4-bit and 8-bit operands (§6.4.1:
+//! "FINN RTL MVU with DSP packing optimizations for 4-bit and 8-bit
+//! arithmetic, while MACs with other precisions are instantiated with
+//! LUTs").
+
+use crate::synth::{MemStyle, Resources, Synth};
+
+use super::{HwKernel, KernelCategory};
+
+/// MVU configuration.
+#[derive(Clone, Debug)]
+pub struct Mvu {
+    pub name: String,
+    /// matrix height = output channels (neurons)
+    pub mh: usize,
+    /// matrix width = dot-product length (synapses)
+    pub mw: usize,
+    pub pe: usize,
+    pub simd: usize,
+    /// weight bits
+    pub wbits: u32,
+    /// activation (input) bits
+    pub abits: u32,
+    /// accumulator bits (set by the accumulator-minimization policy; this
+    /// is where §4.2 savings enter the datapath)
+    pub acc_bits: u32,
+    /// number of output vectors computed per frame (1 for FC; OH*OW for a
+    /// convolution lowered onto the MVU)
+    pub vectors_per_frame: usize,
+    pub mem_style: MemStyle,
+}
+
+impl Mvu {
+    /// cycles to compute one output vector
+    pub fn cycles_per_vector(&self) -> u64 {
+        ((self.mh + self.pe - 1) / self.pe) as u64 * ((self.mw + self.simd - 1) / self.simd) as u64
+    }
+
+    /// MACs per DSP slice achievable by operand packing. Per §6.4.1 the
+    /// RTL MVU packs 4-bit and 8-bit *arithmetic* onto DSPs; packing
+    /// requires both operands in the same precision class (a 2-bit-weight
+    /// layer with 8-bit activations is cheaper in LUTs — this is why the
+    /// paper's CNV-w2a2 reaches zero DSPs under full SIRA optimization).
+    fn dsp_packing(&self) -> Option<f64> {
+        let b = self.wbits.max(self.abits);
+        let same_class = self.wbits.min(self.abits) * 2 >= b;
+        match (same_class, b) {
+            (true, 4) => Some(4.0), // int4 packing: 4 MACs per DSP48E2
+            (true, 8) => Some(2.0), // int8 packing: 2 MACs per DSP48E2
+            _ => None,            // other precisions: LUT multipliers
+        }
+    }
+}
+
+impl HwKernel for Mvu {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn category(&self) -> KernelCategory {
+        KernelCategory::Mac
+    }
+
+    fn resources(&self, synth: &Synth) -> Resources {
+        let lanes = (self.pe * self.simd) as f64;
+        let mut r = Resources::default();
+        // multipliers: DSP-packed for 4/8-bit (per §6.4.1), LUTs otherwise
+        match self.dsp_packing() {
+            Some(macs_per_dsp) => {
+                r.dsp += (lanes / macs_per_dsp).ceil();
+                // packing glue
+                r += Resources::lut_only(6.0 * lanes);
+            }
+            None => {
+                r += synth.multiplier_lut(self.wbits, self.abits) * lanes;
+            }
+        }
+        // adder tree per PE: SIMD-1 adders at product width, growing
+        let prod_bits = self.wbits + self.abits;
+        let tree_adders = (self.simd.saturating_sub(1)) as f64;
+        r += synth.adder(prod_bits + 2) * (tree_adders * self.pe as f64);
+        // accumulator per PE at acc_bits — the §4.2 lever
+        r += synth.adder(self.acc_bits) * self.pe as f64;
+        // weight memory: MH*MW*wbits bits, read pe*simd*wbits wide
+        let wbits_total = (self.mh * self.mw) as u64 * self.wbits as u64;
+        let read_width = (self.pe * self.simd) as u32 * self.wbits;
+        r += synth.memory(wbits_total, read_width, self.mem_style);
+        // control
+        r += Resources::lut_only(120.0);
+        r
+    }
+
+    fn cycles_per_frame(&self) -> u64 {
+        self.cycles_per_vector() * self.vectors_per_frame as u64
+    }
+
+    fn latency(&self) -> u64 {
+        self.cycles_per_vector() + 8
+    }
+
+    fn stream_widths(&self) -> (u64, u64) {
+        (
+            (self.simd as u64) * self.abits as u64,
+            (self.pe as u64) * self.acc_bits as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mvu(pe: usize, simd: usize, wbits: u32, abits: u32, acc: u32) -> Mvu {
+        Mvu {
+            name: "mvu".into(),
+            mh: 64,
+            mw: 128,
+            pe,
+            simd,
+            wbits,
+            abits,
+            acc_bits: acc,
+            vectors_per_frame: 1,
+            mem_style: MemStyle::Auto,
+        }
+    }
+
+    #[test]
+    fn folding_controls_cycles() {
+        assert_eq!(mvu(1, 1, 2, 2, 16).cycles_per_frame(), 64 * 128);
+        assert_eq!(mvu(8, 16, 2, 2, 16).cycles_per_frame(), 8 * 8);
+        assert_eq!(mvu(64, 128, 2, 2, 16).cycles_per_frame(), 1);
+    }
+
+    #[test]
+    fn dsp_packing_for_4_and_8_bit() {
+        let s = Synth::exact();
+        let m4 = mvu(4, 8, 4, 4, 16).resources(&s);
+        assert_eq!(m4.dsp, 8.0); // 32 lanes / 4 per DSP
+        let m8 = mvu(4, 8, 8, 8, 24).resources(&s);
+        assert_eq!(m8.dsp, 16.0); // 32 lanes / 2 per DSP
+        let m3 = mvu(4, 8, 3, 3, 14).resources(&s);
+        assert_eq!(m3.dsp, 0.0); // LUT multipliers
+        assert!(m3.lut > m4.lut);
+    }
+
+    #[test]
+    fn accumulator_width_moves_luts() {
+        let s = Synth::exact();
+        let wide = mvu(8, 8, 3, 3, 32).resources(&s);
+        let narrow = mvu(8, 8, 3, 3, 14).resources(&s);
+        assert!(narrow.lut < wide.lut);
+        // saving ~ pe * (32-14) LUTs
+        let delta = wide.lut - narrow.lut;
+        assert!((delta - 8.0 * 18.0).abs() < 16.0, "delta = {delta}");
+    }
+
+    #[test]
+    fn parallelism_widens_streams() {
+        let m = mvu(8, 16, 2, 2, 16);
+        assert_eq!(m.stream_widths(), (32, 128));
+    }
+}

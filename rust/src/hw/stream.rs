@@ -1,0 +1,263 @@
+//! Streaming plumbing kernels: FIFOs, data width converters, the sliding
+//! window unit (convolution input generator) and pooling kernels. These
+//! are the "other components" of the paper's non-MAC category (Fig 21:
+//! "FIFOs, data width converters, elementwise kernels, thresholding and
+//! others") whose widths inherit from upstream accumulators — the channel
+//! through which accumulator minimization (§4.2) propagates savings.
+
+use crate::synth::{MemStyle, Resources, Synth};
+
+use super::{HwKernel, KernelCategory};
+
+/// Inter-kernel FIFO buffer.
+#[derive(Clone, Debug)]
+pub struct Fifo {
+    pub name: String,
+    pub width_bits: u64,
+    pub depth: u64,
+}
+
+impl HwKernel for Fifo {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn category(&self) -> KernelCategory {
+        KernelCategory::NonMac
+    }
+
+    fn resources(&self, synth: &Synth) -> Resources {
+        // shallow FIFOs map to SRL shift registers (32 bits/LUT), deep and
+        // wide ones to BRAM
+        let bits = self.width_bits * self.depth;
+        if self.depth <= 32 {
+            Resources::lut_only((self.width_bits as f64 * self.depth as f64) / 32.0 + 12.0)
+        } else {
+            synth.memory(bits, self.width_bits as u32, MemStyle::Auto)
+                + Resources::lut_only(16.0)
+        }
+    }
+
+    fn cycles_per_frame(&self) -> u64 {
+        0 // transparent to throughput
+    }
+
+    fn latency(&self) -> u64 {
+        1
+    }
+
+    fn stream_widths(&self) -> (u64, u64) {
+        (self.width_bits, self.width_bits)
+    }
+}
+
+/// Data width converter between mismatched stream widths.
+#[derive(Clone, Debug)]
+pub struct Dwc {
+    pub name: String,
+    pub in_bits: u64,
+    pub out_bits: u64,
+}
+
+impl HwKernel for Dwc {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn category(&self) -> KernelCategory {
+        KernelCategory::NonMac
+    }
+
+    fn resources(&self, _synth: &Synth) -> Resources {
+        // barrel shifter + holding register sized by the wider side
+        let w = self.in_bits.max(self.out_bits) as f64;
+        Resources {
+            lut: w * 1.2 + 20.0,
+            ff: w * 2.0,
+            ..Default::default()
+        }
+    }
+
+    fn cycles_per_frame(&self) -> u64 {
+        0
+    }
+
+    fn latency(&self) -> u64 {
+        2
+    }
+
+    fn stream_widths(&self) -> (u64, u64) {
+        (self.in_bits, self.out_bits)
+    }
+}
+
+/// Sliding window unit (convolution input generator): buffers K rows of
+/// the input feature map and emits im2col-ordered windows for the MVU.
+#[derive(Clone, Debug)]
+pub struct SlidingWindow {
+    pub name: String,
+    pub channels: usize,
+    pub kernel: usize,
+    pub ifm_dim: usize,
+    pub ofm_dim: usize,
+    pub stride: usize,
+    pub in_bits: u32,
+    pub simd: usize,
+    pub mem_style: MemStyle,
+}
+
+impl HwKernel for SlidingWindow {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn category(&self) -> KernelCategory {
+        KernelCategory::NonMac
+    }
+
+    fn resources(&self, synth: &Synth) -> Resources {
+        // line buffer: K rows of the IFM
+        let buf_bits =
+            (self.kernel * self.ifm_dim * self.channels) as u64 * self.in_bits as u64;
+        let read_width = (self.simd as u32) * self.in_bits;
+        synth.memory(buf_bits, read_width, self.mem_style)
+            + Resources::lut_only(150.0 + 2.0 * self.kernel as f64 * self.kernel as f64)
+    }
+
+    fn cycles_per_frame(&self) -> u64 {
+        // emits OFM*OFM windows of K*K*C elements, SIMD at a time
+        (self.ofm_dim * self.ofm_dim) as u64
+            * ((self.kernel * self.kernel * self.channels) as u64).div_ceil(self.simd as u64)
+    }
+
+    fn latency(&self) -> u64 {
+        (self.kernel * self.ifm_dim * self.channels / self.simd.max(1)) as u64
+    }
+
+    fn stream_widths(&self) -> (u64, u64) {
+        let w = self.simd as u64 * self.in_bits as u64;
+        (w, w)
+    }
+}
+
+/// Max/average pooling kernel.
+#[derive(Clone, Debug)]
+pub struct PoolKernel {
+    pub name: String,
+    pub channels: usize,
+    pub kernel: usize,
+    pub ifm_dim: usize,
+    pub in_bits: u32,
+    pub pe: usize,
+    pub is_max: bool,
+}
+
+impl HwKernel for PoolKernel {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn category(&self) -> KernelCategory {
+        KernelCategory::NonMac
+    }
+
+    fn resources(&self, synth: &Synth) -> Resources {
+        let unit = if self.is_max {
+            synth.comparator(self.in_bits) + synth.mux2(self.in_bits)
+        } else {
+            synth.adder(self.in_bits + 4)
+        };
+        // line buffer for the pooling window
+        let buf_bits = (self.kernel * self.ifm_dim * self.channels) as u64 * self.in_bits as u64;
+        unit * self.pe as f64
+            + synth.memory(buf_bits, self.in_bits * self.pe as u32, MemStyle::Auto)
+            + Resources::lut_only(60.0)
+    }
+
+    fn cycles_per_frame(&self) -> u64 {
+        let ofm = self.ifm_dim / self.kernel.max(1);
+        (ofm * ofm * self.kernel * self.kernel) as u64
+            * (self.channels as u64).div_ceil(self.pe as u64)
+    }
+
+    fn latency(&self) -> u64 {
+        (self.kernel * self.ifm_dim) as u64
+    }
+
+    fn stream_widths(&self) -> (u64, u64) {
+        let w = self.pe as u64 * self.in_bits as u64;
+        (w, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shallow_fifo_is_srl() {
+        let s = Synth::exact();
+        let f = Fifo {
+            name: "f".into(),
+            width_bits: 64,
+            depth: 16,
+        };
+        let r = f.resources(&s);
+        assert_eq!(r.bram18, 0.0);
+        assert!(r.lut < 60.0);
+    }
+
+    #[test]
+    fn deep_fifo_uses_bram() {
+        let s = Synth::exact();
+        let f = Fifo {
+            name: "f".into(),
+            width_bits: 64,
+            depth: 2048,
+        };
+        assert!(f.resources(&s).bram18 >= 4.0);
+    }
+
+    #[test]
+    fn fifo_width_follows_accumulator_bits() {
+        // the §4.2 propagation: narrower accumulator -> narrower FIFO
+        let s = Synth::exact();
+        let wide = Fifo { name: "w".into(), width_bits: 32 * 4, depth: 512 };
+        let narrow = Fifo { name: "n".into(), width_bits: 14 * 4, depth: 512 };
+        let (rw, rn) = (wide.resources(&s), narrow.resources(&s));
+        assert!(rn.bram18 <= rw.bram18);
+        assert!(rn.lut <= rw.lut + 1.0);
+    }
+
+    #[test]
+    fn swu_cycles_match_im2col_volume() {
+        let swu = SlidingWindow {
+            name: "swu".into(),
+            channels: 16,
+            kernel: 3,
+            ifm_dim: 32,
+            ofm_dim: 32,
+            stride: 1,
+            in_bits: 4,
+            simd: 16,
+            mem_style: MemStyle::Auto,
+        };
+        assert_eq!(swu.cycles_per_frame(), 32 * 32 * 9);
+    }
+
+    #[test]
+    fn pool_kernel_runs() {
+        let s = Synth::exact();
+        let p = PoolKernel {
+            name: "p".into(),
+            channels: 64,
+            kernel: 2,
+            ifm_dim: 32,
+            in_bits: 4,
+            pe: 2,
+            is_max: true,
+        };
+        assert!(p.resources(&s).lut > 0.0);
+        assert_eq!(p.cycles_per_frame(), 16 * 16 * 4 * 32);
+    }
+}

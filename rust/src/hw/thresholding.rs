@@ -1,0 +1,232 @@
+//! Thresholding kernel models (§5.3): the legacy parallel-comparator
+//! implementation (Fig 16: 2^n - 1 comparators + adder tree) and the new
+//! RTL binary-search implementation (Fig 17: n pipeline stages, one
+//! comparator each, stage-local threshold storage).
+
+use crate::synth::{MemStyle, Resources, Synth};
+
+use super::{HwKernel, KernelCategory};
+
+/// Implementation style for the multi-threshold operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThresholdStyle {
+    /// Fig 16: N parallel comparators + popcount adder tree.
+    Parallel,
+    /// Fig 17: pipelined binary search over sorted thresholds.
+    BinarySearch,
+}
+
+/// Thresholding kernel configuration.
+#[derive(Clone, Debug)]
+pub struct Thresholding {
+    pub name: String,
+    /// channels (threshold granularity: 1 = per-tensor)
+    pub channels: usize,
+    /// distinct threshold rows after compression (paper §9 future work:
+    /// "threshold compression"); channels sharing an identical threshold
+    /// vector share one memory bank plus an indirection entry.
+    /// 0 = uncompressed (= channels).
+    pub unique_rows: usize,
+    /// data channels processed per frame element (frame elements =
+    /// channels * spatial positions)
+    pub elems_per_frame: usize,
+    /// input bitwidth n_i (the accumulator width of the producer — the
+    /// §4.2 coupling illustrated in Fig 12)
+    pub in_bits: u32,
+    /// output bitwidth n_o (N = 2^n_o - 1 thresholds)
+    pub out_bits: u32,
+    pub pe: usize,
+    pub style: ThresholdStyle,
+    pub mem_style: MemStyle,
+}
+
+impl Thresholding {
+    /// number of thresholds per channel
+    pub fn n_thresholds(&self) -> u64 {
+        (1u64 << self.out_bits) - 1
+    }
+
+    /// total threshold memory bits: Sum_Θ * n_i (§5.4.3), reduced by row
+    /// deduplication when compression found shared rows, plus the
+    /// per-channel indirection table.
+    pub fn mem_bits(&self) -> u64 {
+        let rows = if self.unique_rows == 0 {
+            self.channels.max(1)
+        } else {
+            self.unique_rows.max(1)
+        } as u64;
+        let table = self.n_thresholds() * rows * self.in_bits as u64;
+        let indirection = if (rows as usize) < self.channels.max(1) {
+            let idx_bits = crate::util::ceil_log2(rows.max(2)).max(1) as u64;
+            self.channels as u64 * idx_bits
+        } else {
+            0
+        };
+        table + indirection
+    }
+}
+
+impl HwKernel for Thresholding {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn category(&self) -> KernelCategory {
+        KernelCategory::NonMac
+    }
+
+    fn resources(&self, synth: &Synth) -> Resources {
+        let mut r = Resources::default();
+        let n = self.n_thresholds();
+        match self.style {
+            ThresholdStyle::Parallel => {
+                // N comparators per PE + adder tree of n_o-bit counters
+                r += synth.comparator(self.in_bits) * (n as f64 * self.pe as f64);
+                r += synth.adder(self.out_bits) * ((n as f64 - 1.0).max(0.0) * self.pe as f64);
+            }
+            ThresholdStyle::BinarySearch => {
+                // one comparator per tree level per PE + index extension
+                r += synth.comparator(self.in_bits) * (self.out_bits as f64 * self.pe as f64);
+                r += Resources::lut_only(4.0 * self.out_bits as f64 * self.pe as f64);
+            }
+        }
+        // threshold parameter storage, partitioned into PE banks (each PE
+        // serves a slice of the channels; total bits are constant)
+        let read_width = self.in_bits * self.pe as u32;
+        r += synth.memory(self.mem_bits(), read_width, self.mem_style);
+        // control
+        r += Resources::lut_only(40.0);
+        r
+    }
+
+    fn cycles_per_frame(&self) -> u64 {
+        (self.elems_per_frame as u64).div_ceil(self.pe as u64)
+    }
+
+    fn latency(&self) -> u64 {
+        match self.style {
+            ThresholdStyle::Parallel => 4,
+            ThresholdStyle::BinarySearch => self.out_bits as u64 + 2,
+        }
+    }
+
+    fn stream_widths(&self) -> (u64, u64) {
+        (
+            self.pe as u64 * self.in_bits as u64,
+            self.pe as u64 * self.out_bits as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn thr(style: ThresholdStyle, in_bits: u32, out_bits: u32, c: usize, pe: usize) -> Thresholding {
+        Thresholding {
+            name: "thr".into(),
+            channels: c,
+            unique_rows: 0,
+            elems_per_frame: c,
+            in_bits,
+            out_bits,
+            pe,
+            style,
+            mem_style: MemStyle::Lut,
+        }
+    }
+
+    #[test]
+    fn binary_search_beats_parallel_compute() {
+        let s = Synth::exact();
+        // 8-bit output: 255 comparators vs 8
+        let par = thr(ThresholdStyle::Parallel, 16, 8, 1, 1).resources(&s);
+        let bin = thr(ThresholdStyle::BinarySearch, 16, 8, 1, 1).resources(&s);
+        assert!(
+            bin.lut < par.lut / 3.0,
+            "binary {} vs parallel {}",
+            bin.lut,
+            par.lut
+        );
+    }
+
+    #[test]
+    fn memory_grows_exponentially_with_out_bits() {
+        let t2 = thr(ThresholdStyle::BinarySearch, 16, 2, 256, 1);
+        let t8 = thr(ThresholdStyle::BinarySearch, 16, 8, 256, 1);
+        assert_eq!(t2.mem_bits(), 3 * 256 * 16);
+        assert_eq!(t8.mem_bits(), 255 * 256 * 16);
+        assert!(t8.mem_bits() / t2.mem_bits() == 85);
+    }
+
+    #[test]
+    fn per_channel_costs_more_than_per_tensor() {
+        let s = Synth::exact();
+        let pt = thr(ThresholdStyle::BinarySearch, 24, 8, 1, 1).resources(&s);
+        let pc = thr(ThresholdStyle::BinarySearch, 24, 8, 512, 1).resources(&s);
+        assert!(pc.lut > pt.lut * 10.0);
+    }
+
+    #[test]
+    fn cycles_follow_pe() {
+        let t = thr(ThresholdStyle::BinarySearch, 8, 4, 256, 4);
+        assert_eq!(t.cycles_per_frame(), 64);
+    }
+
+    #[test]
+    fn bram_style_moves_memory_off_luts() {
+        let s = Synth::exact();
+        let mut t = thr(ThresholdStyle::BinarySearch, 24, 8, 512, 1);
+        t.mem_style = MemStyle::Bram;
+        let r = t.resources(&s);
+        assert!(r.bram18 > 0.0);
+        // only the comparators + control remain in LUTs
+        assert!(r.lut < 350.0, "lut = {}", r.lut);
+    }
+}
+
+
+#[cfg(test)]
+mod compression_tests {
+    use super::*;
+    use crate::synth::{MemStyle, Synth};
+
+    #[test]
+    fn row_dedup_reduces_memory() {
+        let base = Thresholding {
+            name: "t".into(),
+            channels: 256,
+            unique_rows: 0,
+            elems_per_frame: 256,
+            in_bits: 16,
+            out_bits: 4,
+            pe: 1,
+            style: ThresholdStyle::BinarySearch,
+            mem_style: MemStyle::Lut,
+        };
+        let mut compressed = base.clone();
+        compressed.unique_rows = 16;
+        assert!(compressed.mem_bits() < base.mem_bits() / 4);
+        let s = Synth::exact();
+        assert!(compressed.resources(&s).lut < base.resources(&s).lut);
+    }
+
+    #[test]
+    fn indirection_overhead_accounted() {
+        let mut t = Thresholding {
+            name: "t".into(),
+            channels: 256,
+            unique_rows: 2,
+            elems_per_frame: 256,
+            in_bits: 16,
+            out_bits: 2,
+            pe: 1,
+            style: ThresholdStyle::BinarySearch,
+            mem_style: MemStyle::Lut,
+        };
+        // 2 unique rows x 3 thresholds x 16 bits + 256 x 1-bit index
+        assert_eq!(t.mem_bits(), 2 * 3 * 16 + 256);
+        t.unique_rows = 256; // no sharing: no indirection table
+        assert_eq!(t.mem_bits(), 256 * 3 * 16);
+    }
+}

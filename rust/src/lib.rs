@@ -1,0 +1,62 @@
+//! # sira-finn
+//!
+//! A production-quality reproduction of *SIRA: Scaled-Integer Range
+//! Analysis for Optimizing FPGA Dataflow Neural Network Accelerators*
+//! (CS.AR 2025).
+//!
+//! The crate implements the complete SIRA-enhanced FINN-style FDNA
+//! compiler stack:
+//!
+//! - [`tensor`] — an n-dimensional array substrate (f64/i64) with ONNX
+//!   multidirectional broadcasting, matmul, im2col convolution, pooling.
+//! - [`graph`] — a QONNX-like graph intermediate representation with
+//!   shape/datatype inference and graph-surgery utilities.
+//! - [`sira`] — the paper's contribution: scaled-integer range analysis
+//!   via interval arithmetic (§3), tracking `range`, `int_range`,
+//!   `scale` and `bias` per tensor plus scale/bias contribution history.
+//! - [`passes`] — compiler passes built on SIRA: operator lowering,
+//!   scale/bias aggregation (§4.1.2), threshold conversion (§4.1.3),
+//!   accumulator minimization (§4.2), stuck-channel detection (§7.1).
+//! - [`executor`] — a bit-exact graph interpreter (float + integer
+//!   paths) with min/max instrumentation, used for verification.
+//! - [`models`] — the QNN workload zoo of the paper's evaluation
+//!   (TFC-w2a2, CNV-w2a2, RN8-w3a3, MNv1-w4a4) plus synthetic datasets.
+//! - [`hw`] — hardware kernel models: MVU, thresholding (parallel and
+//!   binary-search), elementwise meta-kernel, FIFOs, width converters.
+//! - [`synth`] — a structural out-of-context synthesis estimator for the
+//!   Zynq UltraScale+ XCZU9EG (LUT/FF/BRAM/DSP), replacing Vivado.
+//! - [`analytical`] — the analytical resource cost models of §5.4 and
+//!   the linear-regression fitting used to calibrate them.
+//! - [`dataflow`] — a streaming dataflow performance simulator
+//!   (initiation intervals, FIFO sizing, FPS/latency at 200 MHz).
+//! - [`accel`] — the FDNA builder mapping graphs onto kernel instances
+//!   with a folding-config solver.
+//! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX artifacts
+//!   (`artifacts/*.hlo.txt`) via the `xla` crate.
+//! - [`coordinator`] — a multi-threaded inference-serving coordinator
+//!   (request router, dynamic batcher, worker pool, metrics).
+//! - [`util`] — substrates unavailable offline: JSON, seeded RNG, CLI
+//!   parsing, table formatting, timing/bench harness.
+//!
+//! See `DESIGN.md` for the per-experiment index mapping every table and
+//! figure of the paper onto modules and bench targets.
+
+pub mod accel;
+pub mod analytical;
+pub mod bench;
+pub mod coordinator;
+pub mod dataflow;
+pub mod e2e;
+pub mod executor;
+pub mod graph;
+pub mod hw;
+pub mod models;
+pub mod passes;
+pub mod runtime;
+pub mod sira;
+pub mod synth;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

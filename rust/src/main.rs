@@ -1,0 +1,185 @@
+//! sira-finn CLI: analyze, compile, and serve quantized neural networks
+//! with the SIRA-enhanced FDNA compiler.
+//!
+//! ```text
+//! sira-finn analyze --model tfc|cnv|rn8|mnv1
+//! sira-finn compile --model tfc --tail thresholding|composite \
+//!                   --acc sira|datatype|32 --target-cycles 16384
+//! sira-finn serve   --model tfc --workers 4 --requests 256
+//! sira-finn e2e     [--artifacts artifacts]
+//! ```
+
+use anyhow::{bail, Result};
+
+use sira_finn::accel::{compile_qnn, CompileOptions, TailStyle};
+use sira_finn::coordinator::{BatchPolicy, Coordinator};
+use sira_finn::executor::Executor;
+use sira_finn::hw::{EwDtype, ThresholdStyle};
+use sira_finn::models::{self, ZooModel};
+use sira_finn::passes::accmin::AccPolicy;
+use sira_finn::sira::analyze;
+use sira_finn::tensor::Tensor;
+use sira_finn::util::cli::Args;
+use sira_finn::util::table::Table;
+
+fn zoo_model(name: &str) -> Result<ZooModel> {
+    match name {
+        "tfc" => models::tfc_w2a2(),
+        "cnv" => models::cnv_w2a2(),
+        "rn8" => models::rn8_w3a3(),
+        "mnv1" => models::mnv1_w4a4_scaled(4),
+        "mnv1-full" => models::mnv1_w4a4(),
+        other => bail!("unknown model '{other}' (tfc|cnv|rn8|mnv1|mnv1-full)"),
+    }
+}
+
+fn parse_opts(args: &Args) -> Result<CompileOptions> {
+    let tail = match args.get_or("tail", "thresholding") {
+        "thresholding" | "thr" => TailStyle::Thresholding(ThresholdStyle::BinarySearch),
+        "thresholding-parallel" => TailStyle::Thresholding(ThresholdStyle::Parallel),
+        "composite" | "fix" => TailStyle::Composite(EwDtype::Fixed(16, 8)),
+        "composite-fix32" => TailStyle::Composite(EwDtype::Fixed(32, 16)),
+        "composite-float" => TailStyle::Composite(EwDtype::Float32),
+        other => bail!("unknown tail style '{other}'"),
+    };
+    let acc = match args.get_or("acc", "sira") {
+        "sira" => AccPolicy::Sira,
+        "datatype" => AccPolicy::Datatype,
+        "32" => AccPolicy::Bound32,
+        other => bail!("unknown acc policy '{other}'"),
+    };
+    Ok(CompileOptions {
+        tail_style: tail,
+        acc_policy: acc,
+        target_cycles: args.get_u64("target-cycles", 1 << 16)?,
+        freq_hz: args.get_f64("freq", 200e6)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let m = zoo_model(args.get_or("model", "tfc"))?;
+    let a = analyze(&m.graph, &m.input_ranges)?;
+    let mut t = Table::new(&["Tensor", "lo", "hi", "int?", "scale", "bits"]);
+    for node in m.graph.topo_nodes()? {
+        let out = node.output();
+        let r = a.get(out)?;
+        let (lo, hi) = r.bounds();
+        let (is_int, scale, bits) = match &r.int {
+            Some(ic) => {
+                let (l, h) = ic.int_bounds();
+                (
+                    if ic.is_pure_integer() { "pure" } else { "scaled" },
+                    format!("{:.4}", ic.scale.data()[0]),
+                    format!("{}", sira_finn::util::bits_for_range(l, h)),
+                )
+            }
+            None => ("-", "-".into(), "-".into()),
+        };
+        t.row(vec![
+            format!("{} ({})", out, node.op.name()),
+            format!("{lo:.3}"),
+            format!("{hi:.3}"),
+            is_int.to_string(),
+            scale,
+            bits,
+        ]);
+    }
+    println!("SIRA analysis of {}:\n{}", m.name, t.render());
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let m = zoo_model(args.get_or("model", "tfc"))?;
+    let opts = parse_opts(args)?;
+    let c = compile_qnn(m.graph, &m.input_ranges, &opts)?;
+    println!("compiled {} with {:?} / {:?}", m.name, opts.tail_style, opts.acc_policy);
+    if let Some(tr) = &c.thr_report {
+        println!(
+            "threshold conversion: {} tails converted, {} thresholds, {} skipped",
+            tr.converted,
+            tr.threshold_count,
+            tr.skipped_nonmonotone + tr.skipped_no_int_input
+        );
+    }
+    let mut t = Table::new(&["Layer", "K", "SIRA bits", "Datatype bits"]);
+    for row in &c.acc_report.rows {
+        t.row(vec![
+            row.node.clone(),
+            row.k.to_string(),
+            row.bits_sira.to_string(),
+            row.bits_datatype.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let f = &c.fdna;
+    println!(
+        "resources: LUT {:.0}  BRAM18 {:.1}  DSP {:.0}   (MAC: {:.0} LUT / non-MAC: {:.0} LUT)",
+        f.total.lut, f.total.bram18, f.total.dsp, f.mac.lut, f.non_mac.lut
+    );
+    println!(
+        "performance @{:.0} MHz: {:.1} FPS, latency {:.3} ms, bottleneck {}",
+        opts.freq_hz / 1e6,
+        f.perf.fps,
+        f.perf.latency_ms,
+        f.perf.bottleneck
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let m = zoo_model(args.get_or("model", "tfc"))?;
+    let workers = args.get_usize("workers", 4)?;
+    let n = args.get_usize("requests", 256)?;
+    let g = std::sync::Arc::new(m.graph);
+    let shape = m.input_shape.clone();
+    let coord = Coordinator::start(workers, BatchPolicy::default(), move || {
+        let g = std::sync::Arc::clone(&g);
+        move |x: &Tensor| {
+            let mut e = Executor::new(&g)?;
+            Ok(e.run_single(x)?.remove(0))
+        }
+    });
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|i| coord.submit(Tensor::full(&shape, (i % 255) as f64)).unwrap())
+        .collect();
+    for h in handles {
+        h.recv().unwrap()?;
+    }
+    let dt = t0.elapsed();
+    let (p50, p95, p99) = coord.metrics.percentiles();
+    println!(
+        "{} requests in {:.2?} -> {:.1} req/s (workers={workers})",
+        n,
+        dt,
+        n as f64 / dt.as_secs_f64()
+    );
+    println!("latency p50 {p50} us, p95 {p95} us, p99 {p99} us");
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    sira_finn::e2e::run_e2e(dir, 8)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["help"])?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "analyze" => cmd_analyze(&args),
+        "compile" => cmd_compile(&args),
+        "serve" => cmd_serve(&args),
+        "e2e" => cmd_e2e(&args),
+        _ => {
+            println!(
+                "sira-finn — SIRA-enhanced FDNA compiler\n\
+                 usage: sira-finn <analyze|compile|serve|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
+                 see README.md"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! Fluent builder for quantized neural network graphs in the QONNX style
+//! used by the paper's workloads: fake-quantized weights/activations with
+//! Quant nodes, BatchNorm before ReLU, per-tensor or per-channel scales.
+
+use anyhow::Result;
+
+use crate::graph::{Graph, Node, Op, RoundMode};
+use crate::tensor::{Conv2dSpec, Tensor};
+use crate::util::rng::Rng;
+
+/// Scale granularity for a quantizer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    PerChannel,
+}
+
+/// Scale constraint (Table 1 / §2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleKind {
+    Float,
+    PowerOfTwo,
+}
+
+/// Builder state: a graph under construction plus the current tensor.
+pub struct QnnBuilder {
+    pub g: Graph,
+    pub rng: Rng,
+    cur: String,
+    cur_shape: Vec<usize>,
+    pub scale_kind: ScaleKind,
+}
+
+fn round_pot(x: f64) -> f64 {
+    // nearest power of two (for PoT scale constraint experiments)
+    if x <= 0.0 {
+        return 1.0;
+    }
+    2f64.powf(x.log2().round())
+}
+
+impl QnnBuilder {
+    pub fn new(name: &str, seed: u64) -> QnnBuilder {
+        QnnBuilder {
+            g: Graph::new(name),
+            rng: Rng::new(seed),
+            cur: String::new(),
+            cur_shape: Vec::new(),
+            scale_kind: ScaleKind::Float,
+        }
+    }
+
+    /// Declare the graph input.
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> &mut Self {
+        self.g.add_input(name, shape);
+        self.cur = name.to_string();
+        self.cur_shape = shape.to_vec();
+        self
+    }
+
+    pub fn current(&self) -> &str {
+        &self.cur
+    }
+
+    pub fn current_shape(&self) -> &[usize] {
+        &self.cur_shape
+    }
+
+    /// Jump the builder cursor to an existing tensor (for residual taps).
+    pub fn seek(&mut self, tensor: &str, shape: &[usize]) -> &mut Self {
+        self.cur = tensor.to_string();
+        self.cur_shape = shape.to_vec();
+        self
+    }
+
+    fn fresh_init(&mut self, prefix: &str, t: Tensor) -> String {
+        let name = self.g.fresh(prefix);
+        self.g.add_initializer(&name, t);
+        name
+    }
+
+    fn push_node(&mut self, op: Op, extra_inputs: &[String], out_shape: Vec<usize>) -> String {
+        let name = self.g.fresh(op.name());
+        let out = self.g.fresh(&format!("{}_out", op.name()));
+        let mut inputs = vec![self.cur.clone()];
+        inputs.extend(extra_inputs.iter().cloned());
+        self.g.add_node(Node {
+            name,
+            op,
+            inputs,
+            outputs: vec![out.clone()],
+        });
+        self.cur = out.clone();
+        self.cur_shape = out_shape;
+        out
+    }
+
+    fn maybe_pot(&self, s: f64) -> f64 {
+        match self.scale_kind {
+            ScaleKind::Float => s,
+            ScaleKind::PowerOfTwo => round_pot(s),
+        }
+    }
+
+    /// Random weights with a per-channel magnitude profile.
+    fn random_weights(&mut self, shape: &[usize], std: f64) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data: Vec<f64> = (0..n).map(|_| self.rng.normal(0.0, std)).collect();
+        Tensor::new(shape, data).unwrap()
+    }
+
+    /// Insert an activation quantizer on the current tensor.
+    /// `scale_hint` approximates the dynamic range the scale must cover.
+    pub fn quant_act(
+        &mut self,
+        bits: u32,
+        signed: bool,
+        gran: Granularity,
+        scale_hint: f64,
+    ) -> &mut Self {
+        let qmax = if signed {
+            (1u64 << (bits - 1)) - 1
+        } else {
+            (1u64 << bits) - 1
+        } as f64;
+        let channels = if self.cur_shape.len() >= 2 {
+            self.cur_shape[1]
+        } else {
+            1
+        };
+        let scale = match gran {
+            Granularity::PerTensor => Tensor::scalar(self.maybe_pot(scale_hint / qmax)),
+            Granularity::PerChannel => {
+                let shape: Vec<usize> = if self.cur_shape.len() == 4 {
+                    vec![1, channels, 1, 1]
+                } else {
+                    vec![1, channels]
+                };
+                let mut data = Vec::with_capacity(channels);
+                for _ in 0..channels {
+                    let u = self.rng.uniform(0.6, 1.4);
+                    data.push(self.maybe_pot(scale_hint * u / qmax));
+                }
+                Tensor::new(&shape, data).unwrap()
+            }
+        };
+        let s = self.fresh_init("act_scale", scale);
+        let z = self.fresh_init("act_zp", Tensor::scalar(0.0));
+        let b = self.fresh_init("act_bits", Tensor::scalar(bits as f64));
+        let shape = self.cur_shape.clone();
+        self.push_node(
+            Op::Quant {
+                signed,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &[s, z, b],
+            shape,
+        );
+        self
+    }
+
+    /// Weight tensor + quantizer; returns the dequantized weight tensor name.
+    fn quant_weights(
+        &mut self,
+        shape: &[usize],
+        bits: u32,
+        gran: Granularity,
+        chan_axis: usize,
+    ) -> String {
+        let w = self.random_weights(shape, 0.4);
+        let qmax = ((1u64 << (bits - 1)) - 1) as f64;
+        let scale = match gran {
+            Granularity::PerTensor => Tensor::scalar(self.maybe_pot(w.abs_max() / qmax)),
+            Granularity::PerChannel => {
+                let c = shape[chan_axis];
+                let mut maxs = vec![0f64; c];
+                let strides = crate::tensor::strides_of(shape);
+                for (flat, &v) in w.data().iter().enumerate() {
+                    let ch = (flat / strides[chan_axis]) % c;
+                    maxs[ch] = maxs[ch].max(v.abs());
+                }
+                let mut sshape = vec![1usize; shape.len()];
+                sshape[chan_axis] = c;
+                Tensor::new(
+                    &sshape,
+                    maxs.iter()
+                        .map(|m| self.maybe_pot(m.max(1e-3) / qmax))
+                        .collect(),
+                )
+                .unwrap()
+            }
+        };
+        let w_name = self.fresh_init("W", w);
+        let s = self.fresh_init("w_scale", scale);
+        let z = self.fresh_init("w_zp", Tensor::scalar(0.0));
+        let b = self.fresh_init("w_bits", Tensor::scalar(bits as f64));
+        let node_name = self.g.fresh("QuantW");
+        let out = self.g.fresh("Wq");
+        self.g.add_node(Node {
+            name: node_name,
+            op: Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            inputs: vec![w_name, s, z, b],
+            outputs: vec![out.clone()],
+        });
+        out
+    }
+
+    /// Fully-connected layer (MatMul; optional bias via Add).
+    pub fn linear(&mut self, out_features: usize, wbits: u32, gran: Granularity, bias: bool) -> &mut Self {
+        let in_features = *self.cur_shape.last().unwrap();
+        let wq = self.quant_weights(&[in_features, out_features], wbits, gran, 1);
+        let rows = self.cur_shape[0];
+        self.push_node(Op::MatMul, &[wq], vec![rows, out_features]);
+        if bias {
+            let b = self.random_weights(&[1, out_features], 0.2);
+            let b_name = self.fresh_init("fc_bias", b);
+            let shape = self.cur_shape.clone();
+            self.push_node(Op::Add, &[b_name], shape);
+        }
+        self
+    }
+
+    /// Convolution layer (dense or depthwise).
+    pub fn conv(
+        &mut self,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        wbits: u32,
+        gran: Granularity,
+        depthwise: bool,
+    ) -> &mut Self {
+        let (n, c, h, w) = (
+            self.cur_shape[0],
+            self.cur_shape[1],
+            self.cur_shape[2],
+            self.cur_shape[3],
+        );
+        let spec = Conv2dSpec {
+            kernel: (kernel, kernel),
+            stride: (stride, stride),
+            pad: (pad, pad),
+        };
+        let (oh, ow) = spec.out_hw(h, w);
+        let (wshape, group, oc) = if depthwise {
+            (vec![c, 1, kernel, kernel], c, c)
+        } else {
+            (vec![out_ch, c, kernel, kernel], 1, out_ch)
+        };
+        let wq = self.quant_weights(&wshape, wbits, gran, 0);
+        self.push_node(Op::Conv { spec, group }, &[wq], vec![n, oc, oh, ow]);
+        self
+    }
+
+    /// BatchNormalization with random (but well-conditioned) parameters.
+    pub fn batchnorm(&mut self) -> &mut Self {
+        let c = self.cur_shape[1];
+        let gamma: Vec<f64> = (0..c).map(|_| self.rng.uniform(0.5, 1.5)).collect();
+        let beta: Vec<f64> = (0..c).map(|_| self.rng.normal(0.0, 0.3)).collect();
+        let mean: Vec<f64> = (0..c).map(|_| self.rng.normal(0.0, 0.5)).collect();
+        let var: Vec<f64> = (0..c).map(|_| self.rng.uniform(0.5, 2.0)).collect();
+        let gn = self.fresh_init("bn_gamma", Tensor::from_vec(gamma));
+        let bn = self.fresh_init("bn_beta", Tensor::from_vec(beta));
+        let mn = self.fresh_init("bn_mean", Tensor::from_vec(mean));
+        let vn = self.fresh_init("bn_var", Tensor::from_vec(var));
+        let shape = self.cur_shape.clone();
+        self.push_node(Op::BatchNorm { eps: 1e-5 }, &[gn, bn, mn, vn], shape);
+        self
+    }
+
+    pub fn relu(&mut self) -> &mut Self {
+        let shape = self.cur_shape.clone();
+        self.push_node(Op::Relu, &[], shape);
+        self
+    }
+
+    pub fn maxpool(&mut self, k: usize) -> &mut Self {
+        let spec = Conv2dSpec {
+            kernel: (k, k),
+            stride: (k, k),
+            pad: (0, 0),
+        };
+        let (n, c, h, w) = (
+            self.cur_shape[0],
+            self.cur_shape[1],
+            self.cur_shape[2],
+            self.cur_shape[3],
+        );
+        let (oh, ow) = spec.out_hw(h, w);
+        self.push_node(Op::MaxPool { spec }, &[], vec![n, c, oh, ow]);
+        self
+    }
+
+    pub fn global_avgpool(&mut self) -> &mut Self {
+        let (n, c) = (self.cur_shape[0], self.cur_shape[1]);
+        self.push_node(Op::GlobalAveragePool, &[], vec![n, c, 1, 1]);
+        self
+    }
+
+    pub fn flatten(&mut self) -> &mut Self {
+        let n = self.cur_shape[0];
+        let rest: usize = self.cur_shape[1..].iter().product();
+        self.push_node(Op::Flatten { axis: 1 }, &[], vec![n, rest]);
+        self
+    }
+
+    /// Elementwise residual Add with another tensor (shapes must match).
+    pub fn add_residual(&mut self, other: &str) -> &mut Self {
+        let shape = self.cur_shape.clone();
+        self.push_node(Op::Add, &[other.to_string()], shape);
+        self
+    }
+
+    /// Finish: mark the current tensor as the graph output and infer shapes.
+    pub fn finish(mut self) -> Result<Graph> {
+        let out = self.cur.clone();
+        self.g.outputs.push(out);
+        crate::graph::shapes::infer_shapes(&mut self.g)?;
+        self.g.check()?;
+        Ok(self.g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::Executor;
+
+    #[test]
+    fn builds_runnable_mlp() {
+        let mut b = QnnBuilder::new("mlp", 1);
+        b.input("x", &[1, 16]);
+        b.quant_act(8, true, Granularity::PerTensor, 4.0);
+        b.linear(8, 2, Granularity::PerChannel, true);
+        b.batchnorm();
+        b.relu();
+        b.quant_act(2, false, Granularity::PerTensor, 4.0);
+        b.linear(4, 2, Granularity::PerTensor, true);
+        let g = b.finish().unwrap();
+        assert_eq!(g.shapes[&g.outputs[0]], vec![1, 4]);
+        let x = Tensor::full(&[1, 16], 0.5);
+        let y = Executor::new(&g).unwrap().run_single(&x).unwrap();
+        assert_eq!(y[0].shape(), &[1, 4]);
+    }
+
+    #[test]
+    fn builds_runnable_cnn_with_residual() {
+        let mut b = QnnBuilder::new("cnn", 2);
+        b.input("x", &[1, 3, 8, 8]);
+        b.quant_act(8, true, Granularity::PerTensor, 2.0);
+        b.conv(4, 3, 1, 1, 4, Granularity::PerChannel, false);
+        b.batchnorm();
+        b.relu();
+        b.quant_act(4, false, Granularity::PerTensor, 4.0);
+        let tap = b.current().to_string();
+        let tap_shape = b.current_shape().to_vec();
+        b.conv(4, 3, 1, 1, 4, Granularity::PerChannel, false);
+        b.batchnorm();
+        b.seek(&tap, &tap_shape);
+        // jump back: residual add of conv output onto the tap
+        let conv_out = b.g.nodes.last().unwrap().outputs[0].clone();
+        b.seek(&conv_out, &tap_shape);
+        b.add_residual(&tap);
+        b.relu();
+        b.quant_act(4, false, Granularity::PerTensor, 4.0);
+        b.global_avgpool();
+        b.flatten();
+        b.linear(10, 8, Granularity::PerTensor, true);
+        let g = b.finish().unwrap();
+        let x = Tensor::full(&[1, 3, 8, 8], 0.3);
+        let y = Executor::new(&g).unwrap().run_single(&x).unwrap();
+        assert_eq!(y[0].shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn depthwise_conv_shapes() {
+        let mut b = QnnBuilder::new("dw", 3);
+        b.input("x", &[1, 6, 8, 8]);
+        b.quant_act(4, false, Granularity::PerChannel, 2.0);
+        b.conv(0, 3, 1, 1, 4, Granularity::PerChannel, true);
+        let g = b.finish().unwrap();
+        assert_eq!(g.shapes[&g.outputs[0]], vec![1, 6, 8, 8]);
+    }
+
+    #[test]
+    fn pot_scales_are_powers_of_two() {
+        let mut b = QnnBuilder::new("pot", 4);
+        b.scale_kind = ScaleKind::PowerOfTwo;
+        b.input("x", &[1, 8]);
+        b.quant_act(4, true, Granularity::PerTensor, 3.7);
+        let g = b.g;
+        let scale = g
+            .initializers
+            .iter()
+            .find(|(k, _)| k.starts_with("act_scale"))
+            .unwrap()
+            .1;
+        let s = scale.first();
+        assert_eq!(s, round_pot(s));
+    }
+}

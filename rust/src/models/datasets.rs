@@ -1,0 +1,61 @@
+//! Synthetic labeled datasets (the paper's workloads use MNIST/CIFAR/
+//! ImageNet; per the substitution rule we generate class-structured
+//! Gaussian-blob data that exercises the same code paths: quantized
+//! inference, instrumentation, accuracy comparisons between layer-tail
+//! implementation styles).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A labeled dataset of single-sample input tensors.
+pub struct Dataset {
+    pub samples: Vec<(Tensor, usize)>,
+    pub classes: usize,
+}
+
+/// Gaussian blobs in pixel space: each class has a random per-pixel mean
+/// pattern in [0,255]; samples add noise and clip. Values are rounded to
+/// integers (uint8 images), matching the pure-integer input ranges the
+/// zoo models declare.
+pub fn gaussian_blobs(input_shape: &[usize], classes: usize, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let numel: usize = input_shape.iter().product();
+    let centers: Vec<Vec<f64>> = (0..classes)
+        .map(|_| (0..numel).map(|_| rng.uniform(40.0, 215.0)).collect())
+        .collect();
+    let mut samples = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = i % classes;
+        let data: Vec<f64> = centers[label]
+            .iter()
+            .map(|&c| (c + rng.normal(0.0, 25.0)).clamp(0.0, 255.0).round())
+            .collect();
+        samples.push((Tensor::new(input_shape, data).unwrap(), label));
+    }
+    Dataset { samples, classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_are_integral_uint8() {
+        let d = gaussian_blobs(&[1, 4], 3, 12, 7);
+        assert_eq!(d.samples.len(), 12);
+        for (x, label) in &d.samples {
+            assert!(*label < 3);
+            assert!(x.is_integral());
+            assert!(x.min() >= 0.0 && x.max() <= 255.0);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gaussian_blobs(&[1, 8], 2, 4, 9);
+        let b = gaussian_blobs(&[1, 8], 2, 4, 9);
+        for ((x, _), (y, _)) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x, y);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! QNN workload zoo (Table 5), synthetic datasets, the §3.3 worked
+//! example and the artifact-sidecar model loader used by the end-to-end
+//! example.
+
+pub mod builder;
+pub mod datasets;
+pub mod sidecar;
+pub mod zoo;
+
+pub use builder::{Granularity, QnnBuilder, ScaleKind};
+pub use datasets::{gaussian_blobs, Dataset};
+pub use sidecar::load_sidecar;
+pub use zoo::{
+    cnv_w2a2, mnv1_w4a4, mnv1_w4a4_scaled, paper_zoo, rn8_w3a3, tfc_w2a2, worked_example,
+    ZooModel,
+};

@@ -1,0 +1,326 @@
+//! Loader for the JSON model sidecar exported by `python/compile/aot.py`.
+//!
+//! The sidecar carries the exact weights and quantization parameters the
+//! JAX reference model was lowered with, so the rust compiler can rebuild
+//! the identical QNN graph and prove end-to-end equivalence against the
+//! PJRT-executed HLO artifact (DESIGN.md §4).
+//!
+//! Format (see `python/compile/aot.py::export_sidecar`):
+//! ```json
+//! {
+//!   "name": "cnv-e2e",
+//!   "input_shape": [1, 3, 8, 8],
+//!   "input_range": [0.0, 255.0],
+//!   "layers": [
+//!     {"kind": "quant_act", "bits": 8, "signed": false, "scale": [..s..]},
+//!     {"kind": "conv", "weight": [...], "weight_shape": [O,I,KH,KW],
+//!      "stride": 1, "pad": 1, "wbits": 4, "wscale": [...], "depthwise": false},
+//!     {"kind": "batchnorm", "gamma": [...], "beta": [...],
+//!      "mean": [...], "var": [...], "eps": 1e-5},
+//!     {"kind": "relu"},
+//!     {"kind": "maxpool", "k": 2},
+//!     {"kind": "global_avgpool"},
+//!     {"kind": "flatten"},
+//!     {"kind": "linear", "weight": [...], "weight_shape": [K,M],
+//!      "bias": [...], "wbits": 8, "wscale": [...]}
+//!   ]
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{Graph, Node, Op, RoundMode};
+use crate::sira::SiRange;
+use crate::tensor::{Conv2dSpec, Tensor};
+use crate::util::json::Json;
+
+/// A model rebuilt from a sidecar file.
+pub struct SidecarModel {
+    pub name: String,
+    pub graph: Graph,
+    pub input_ranges: BTreeMap<String, SiRange>,
+    pub input_shape: Vec<usize>,
+}
+
+/// Parse a sidecar JSON string into a graph.
+pub fn load_sidecar(text: &str) -> Result<SidecarModel> {
+    let v = Json::parse(text)?;
+    let name = v.get("name")?.as_str()?.to_string();
+    let input_shape = v.get("input_shape")?.as_usize_vec()?;
+    let range = v.get("input_range")?.as_f64_vec()?;
+    if range.len() != 2 {
+        bail!("input_range must be [lo, hi]");
+    }
+
+    let mut g = Graph::new(&name);
+    g.add_input("x", &input_shape);
+    let mut cur = "x".to_string();
+    let mut cur_shape = input_shape.clone();
+
+    let q_op = |signed: bool| Op::Quant {
+        signed,
+        narrow: false,
+        rounding: RoundMode::RoundEven,
+    };
+
+    for (li, layer) in v.get("layers")?.as_arr()?.iter().enumerate() {
+        let kind = layer.get("kind")?.as_str()?;
+        match kind {
+            "quant_act" => {
+                let bits = layer.get("bits")?.as_f64()?;
+                let signed = layer.get("signed")?.as_bool()?;
+                let scale = layer.get("scale")?.as_f64_vec()?;
+                let sshape: Vec<usize> = match layer.opt("scale_shape") {
+                    Some(s) => s.as_usize_vec()?,
+                    None => {
+                        if scale.len() == 1 {
+                            vec![]
+                        } else if cur_shape.len() == 4 {
+                            vec![1, scale.len(), 1, 1]
+                        } else {
+                            vec![1, scale.len()]
+                        }
+                    }
+                };
+                let s_name = g.fresh(&format!("l{li}_scale"));
+                g.add_initializer(&s_name, Tensor::new(&sshape, scale)?);
+                let z = g.fresh(&format!("l{li}_zp"));
+                g.add_initializer(&z, Tensor::scalar(0.0));
+                let b = g.fresh(&format!("l{li}_bits"));
+                g.add_initializer(&b, Tensor::scalar(bits));
+                let out = g.fresh(&format!("l{li}_q"));
+                let nname = g.fresh(&format!("l{li}_Quant"));
+                g.add_node(Node {
+                    name: nname,
+                    op: q_op(signed),
+                    inputs: vec![cur.clone(), s_name, z, b],
+                    outputs: vec![out.clone()],
+                });
+                cur = out;
+            }
+            "conv" | "linear" => {
+                let wshape = layer.get("weight_shape")?.as_usize_vec()?;
+                let w = Tensor::new(&wshape, layer.get("weight")?.as_f64_vec()?)?;
+                let wbits = layer.get("wbits")?.as_f64()?;
+                let wscale = layer.get("wscale")?.as_f64_vec()?;
+                let w_name = g.fresh(&format!("l{li}_W"));
+                g.add_initializer(&w_name, w);
+                let sshape: Vec<usize> = if wscale.len() == 1 {
+                    vec![]
+                } else if kind == "conv" {
+                    vec![wscale.len(), 1, 1, 1]
+                } else {
+                    vec![1, wscale.len()]
+                };
+                let ws_name = g.fresh(&format!("l{li}_ws"));
+                g.add_initializer(&ws_name, Tensor::new(&sshape, wscale)?);
+                let z = g.fresh(&format!("l{li}_wz"));
+                g.add_initializer(&z, Tensor::scalar(0.0));
+                let bb = g.fresh(&format!("l{li}_wbits"));
+                g.add_initializer(&bb, Tensor::scalar(wbits));
+                let wq = g.fresh(&format!("l{li}_Wq"));
+                let nname = g.fresh(&format!("l{li}_QuantW"));
+                g.add_node(Node {
+                    name: nname,
+                    op: q_op(true),
+                    inputs: vec![w_name, ws_name, z, bb],
+                    outputs: vec![wq.clone()],
+                });
+                let out = g.fresh(&format!("l{li}_mac"));
+                if kind == "conv" {
+                    let stride = layer.get("stride")?.as_usize()?;
+                    let pad = layer.get("pad")?.as_usize()?;
+                    let depthwise = layer
+                        .opt("depthwise")
+                        .map(|b| b.as_bool())
+                        .transpose()?
+                        .unwrap_or(false);
+                    let spec = Conv2dSpec {
+                        kernel: (wshape[2], wshape[3]),
+                        stride: (stride, stride),
+                        pad: (pad, pad),
+                    };
+                    let group = if depthwise { cur_shape[1] } else { 1 };
+                    let (oh, ow) = spec.out_hw(cur_shape[2], cur_shape[3]);
+                    let nname = g.fresh(&format!("l{li}_Conv"));
+                    g.add_node(Node {
+                        name: nname,
+                        op: Op::Conv { spec, group },
+                        inputs: vec![cur.clone(), wq],
+                        outputs: vec![out.clone()],
+                    });
+                    cur_shape = vec![cur_shape[0], wshape[0], oh, ow];
+                } else {
+                    let nname = g.fresh(&format!("l{li}_MatMul"));
+                    g.add_node(Node {
+                        name: nname,
+                        op: Op::MatMul,
+                        inputs: vec![cur.clone(), wq],
+                        outputs: vec![out.clone()],
+                    });
+                    cur_shape = vec![cur_shape[0], wshape[1]];
+                }
+                cur = out;
+                if let Some(bias) = layer.opt("bias") {
+                    let b = Tensor::new(&[1, *cur_shape.last().unwrap()], bias.as_f64_vec()?)?;
+                    let b_name = g.fresh(&format!("l{li}_b"));
+                    g.add_initializer(&b_name, b);
+                    let out = g.fresh(&format!("l{li}_biased"));
+                    let nname = g.fresh(&format!("l{li}_Add"));
+                    g.add_node(Node {
+                        name: nname,
+                        op: Op::Add,
+                        inputs: vec![cur.clone(), b_name],
+                        outputs: vec![out.clone()],
+                    });
+                    cur = out;
+                }
+            }
+            "batchnorm" => {
+                let mut names = Vec::new();
+                for key in ["gamma", "beta", "mean", "var"] {
+                    let t = Tensor::from_vec(layer.get(key)?.as_f64_vec()?);
+                    let n = g.fresh(&format!("l{li}_{key}"));
+                    g.add_initializer(&n, t);
+                    names.push(n);
+                }
+                let eps = layer.get("eps")?.as_f64()?;
+                let out = g.fresh(&format!("l{li}_bn"));
+                let mut inputs = vec![cur.clone()];
+                inputs.extend(names);
+                let nname = g.fresh(&format!("l{li}_BN"));
+                g.add_node(Node {
+                    name: nname,
+                    op: Op::BatchNorm { eps },
+                    inputs,
+                    outputs: vec![out.clone()],
+                });
+                cur = out;
+            }
+            "relu" => {
+                let out = g.fresh(&format!("l{li}_relu"));
+                let nname = g.fresh(&format!("l{li}_Relu"));
+                g.add_node(Node {
+                    name: nname,
+                    op: Op::Relu,
+                    inputs: vec![cur.clone()],
+                    outputs: vec![out.clone()],
+                });
+                cur = out;
+            }
+            "maxpool" => {
+                let k = layer.get("k")?.as_usize()?;
+                let spec = Conv2dSpec {
+                    kernel: (k, k),
+                    stride: (k, k),
+                    pad: (0, 0),
+                };
+                let (oh, ow) = spec.out_hw(cur_shape[2], cur_shape[3]);
+                let out = g.fresh(&format!("l{li}_mp"));
+                let nname = g.fresh(&format!("l{li}_MaxPool"));
+                g.add_node(Node {
+                    name: nname,
+                    op: Op::MaxPool { spec },
+                    inputs: vec![cur.clone()],
+                    outputs: vec![out.clone()],
+                });
+                cur = out;
+                cur_shape = vec![cur_shape[0], cur_shape[1], oh, ow];
+            }
+            "global_avgpool" => {
+                let out = g.fresh(&format!("l{li}_gap"));
+                let nname = g.fresh(&format!("l{li}_GAP"));
+                g.add_node(Node {
+                    name: nname,
+                    op: Op::GlobalAveragePool,
+                    inputs: vec![cur.clone()],
+                    outputs: vec![out.clone()],
+                });
+                cur = out;
+                cur_shape = vec![cur_shape[0], cur_shape[1], 1, 1];
+            }
+            "flatten" => {
+                let out = g.fresh(&format!("l{li}_flat"));
+                let nname = g.fresh(&format!("l{li}_Flatten"));
+                g.add_node(Node {
+                    name: nname,
+                    op: Op::Flatten { axis: 1 },
+                    inputs: vec![cur.clone()],
+                    outputs: vec![out.clone()],
+                });
+                cur = out;
+                cur_shape = vec![cur_shape[0], cur_shape[1..].iter().product()];
+            }
+            other => bail!("unknown sidecar layer kind '{other}'"),
+        }
+    }
+    g.outputs.push(cur);
+    crate::graph::shapes::infer_shapes(&mut g)
+        .with_context(|| "sidecar shape inference failed")?;
+    g.check()?;
+
+    let mut input_ranges = BTreeMap::new();
+    let integral = range[0].fract() == 0.0 && range[1].fract() == 0.0;
+    let r = if integral {
+        SiRange::from_int(
+            Tensor::scalar(range[0]),
+            Tensor::scalar(range[1]),
+            Tensor::scalar(1.0),
+            Tensor::scalar(0.0),
+            Default::default(),
+            Default::default(),
+        )?
+    } else {
+        SiRange::scalar(range[0], range[1])
+    };
+    input_ranges.insert("x".to_string(), r);
+    Ok(SidecarModel {
+        name,
+        graph: g,
+        input_ranges,
+        input_shape,
+    })
+}
+
+/// Load a sidecar from a file path.
+pub fn load_sidecar_file(path: &str) -> Result<SidecarModel> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading sidecar '{path}' (run `make artifacts` first)"))?;
+    load_sidecar(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_minimal_mlp_sidecar() {
+        let text = r#"{
+            "name": "mini",
+            "input_shape": [1, 2],
+            "input_range": [0, 255],
+            "layers": [
+                {"kind": "quant_act", "bits": 8, "signed": false, "scale": [1.0]},
+                {"kind": "linear", "weight": [0.1, -0.2, 0.3, 0.4],
+                 "weight_shape": [2, 2], "bias": [0.0, 0.5],
+                 "wbits": 4, "wscale": [0.05, 0.06]},
+                {"kind": "relu"}
+            ]
+        }"#;
+        let m = load_sidecar(text).unwrap();
+        assert_eq!(m.graph.count_op("MatMul"), 1);
+        assert_eq!(m.graph.count_op("Quant"), 2);
+        assert_eq!(m.graph.shapes[&m.graph.outputs[0]], vec![1, 2]);
+        // input declared integral -> pure-int range
+        assert!(m.input_ranges["x"].int.is_some());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let text = r#"{"name":"x","input_shape":[1,2],"input_range":[0,1],
+                       "layers":[{"kind":"wat"}]}"#;
+        assert!(load_sidecar(text).is_err());
+    }
+}

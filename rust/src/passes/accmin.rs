@@ -1,0 +1,212 @@
+//! Accumulator minimization (§4.2): choose the minimum accumulator
+//! bitwidth for each MatMul/Conv layer.
+//!
+//! Three policies are modeled:
+//! * **Bound32** — the fixed-architecture default (32-bit accumulators);
+//! * **Datatype** — the datatype bound of Colbert et al.:
+//!   `P = ceil(α + φ(α) + 1)`, `α = log2(K) + N + M - 1`,
+//!   `φ(α) = log2(1 + 2^-α)` for a K-element dot product of N-bit
+//!   unsigned inputs and M-bit signed weights;
+//! * **Sira** — the lossless SIRA bound from the analyzed integer output
+//!   interval `[lo, hi]`: `P = ceil(log2(max(|lo|, |hi|+1))) + 1`.
+
+use anyhow::Result;
+
+use crate::executor::ops::dot_length;
+use crate::graph::{DataType, Graph, Op};
+use crate::sira::Analysis;
+use crate::util::bits_for_range;
+
+/// Accumulator sizing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccPolicy {
+    Bound32,
+    Datatype,
+    Sira,
+}
+
+/// Per-layer accumulator report row (drives Fig 22).
+#[derive(Clone, Debug)]
+pub struct AccRow {
+    pub node: String,
+    /// dot-product length
+    pub k: u64,
+    /// input/weight bits feeding the datatype bound
+    pub n_bits: u32,
+    pub m_bits: u32,
+    pub bits_32: u32,
+    pub bits_datatype: u32,
+    pub bits_sira: u32,
+}
+
+/// Report for a full accumulator-minimization run.
+#[derive(Clone, Debug, Default)]
+pub struct AccReport {
+    pub rows: Vec<AccRow>,
+}
+
+impl AccReport {
+    pub fn mean_sira(&self) -> f64 {
+        crate::util::stats::mean(&self.rows.iter().map(|r| r.bits_sira as f64).collect::<Vec<_>>())
+    }
+
+    pub fn mean_datatype(&self) -> f64 {
+        crate::util::stats::mean(
+            &self
+                .rows
+                .iter()
+                .map(|r| r.bits_datatype as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// The paper's datatype-bound accumulator width (§4.2, after Colbert et
+/// al.): K-element dot product, N-bit unsigned inputs, M-bit signed
+/// weights.
+pub fn datatype_bound_bits(k: u64, n_bits: u32, m_bits: u32) -> u32 {
+    let alpha = (k as f64).log2() + n_bits as f64 + m_bits as f64 - 1.0;
+    let phi = (1.0 + 2f64.powf(-alpha)).log2();
+    (alpha + phi + 1.0).ceil() as u32
+}
+
+/// The SIRA bound: two's complement bits to losslessly hold [lo, hi] in
+/// a signed accumulator — the paper's
+/// `P = ceil(log2(max(|lo|, |hi|+1))) + 1`.
+pub fn sira_bound_bits(lo: i64, hi: i64) -> u32 {
+    let mag = lo.unsigned_abs().max(hi.unsigned_abs() + 1);
+    (crate::util::ceil_log2(mag.max(1)) + 1).max(2)
+}
+
+/// Compute accumulator widths for every MAC node and annotate the graph's
+/// datatype map according to `policy`. Must run after streamlining (MAC
+/// inputs pure-integer) with a completed SIRA [`Analysis`].
+pub fn minimize_accumulators(
+    g: &mut Graph,
+    analysis: &Analysis,
+    policy: AccPolicy,
+) -> Result<AccReport> {
+    let mut report = AccReport::default();
+    let order = g.topo_order()?;
+    for idx in order {
+        let node = g.nodes[idx].clone();
+        if !node.op.is_mac() {
+            continue;
+        }
+        let in_shapes: Vec<Vec<usize>> = node
+            .inputs
+            .iter()
+            .map(|i| g.shapes[i].clone())
+            .collect();
+        let k = dot_length(&node.op, &in_shapes)?;
+        // operand bits from SIRA input ranges (falls back to datatype
+        // annotations, then conservative 8/8)
+        let operand_bits = |name: &str, signed_default: bool| -> u32 {
+            if let Ok(r) = analysis.get(name) {
+                if let Some(ic) = &r.int {
+                    let (lo, hi) = ic.int_bounds();
+                    return bits_for_range(lo, hi);
+                }
+            }
+            match g.dtypes.get(name) {
+                Some(dt) => dt.bits(),
+                None => {
+                    let _ = signed_default;
+                    8
+                }
+            }
+        };
+        let n_bits = operand_bits(&node.inputs[0], false);
+        let m_bits = operand_bits(&node.inputs[1], true);
+        let bits_datatype = datatype_bound_bits(k, n_bits, m_bits).min(32);
+        let out = node.outputs[0].clone();
+        // The accumulator holds the *integer component* of the MAC output
+        // (scales are applied downstream), so any scaled-integer range —
+        // pure or not — provides the lossless SIRA bound.
+        let bits_sira = match analysis.get(&out).ok().and_then(|r| r.int.as_ref()) {
+            Some(ic) => {
+                let (lo, hi) = ic.int_bounds();
+                sira_bound_bits(lo, hi)
+            }
+            None => bits_datatype, // no lossless info: fall back
+        };
+        let chosen = match policy {
+            AccPolicy::Bound32 => 32,
+            AccPolicy::Datatype => bits_datatype,
+            AccPolicy::Sira => bits_sira,
+        };
+        // accumulators are signed whenever weights are signed
+        g.dtypes.insert(out.clone(), DataType::Int(chosen));
+        report.rows.push(AccRow {
+            node: node.name.clone(),
+            k,
+            n_bits,
+            m_bits,
+            bits_32: 32,
+            bits_datatype,
+            bits_sira,
+        });
+    }
+    Ok(report)
+}
+
+/// MAC nodes in the graph (helper for reports).
+pub fn mac_nodes(g: &Graph) -> Vec<usize> {
+    g.nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| matches!(n.op, Op::MatMul | Op::Conv { .. } | Op::Gemm))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datatype_bound_matches_paper_formula() {
+        // K=2, N=4 (unsigned), M=4 (signed): α = 1+4+4-1 = 8,
+        // φ ≈ 0.0056 → P = ceil(9.0056) = 10
+        assert_eq!(datatype_bound_bits(2, 4, 4), 10);
+        // large K dominates: K=1024, N=8, M=8 → α = 10+8+8-1 = 25 → 27
+        assert_eq!(datatype_bound_bits(1024, 8, 8), 27);
+    }
+
+    #[test]
+    fn sira_bound_matches_fig12() {
+        // Fig 12: output interval ±96 -> ceil(log2(97)) + 1 = 8 bits
+        assert_eq!(sira_bound_bits(-96, 96), 8);
+        assert_eq!(sira_bound_bits(-1, 1), 2);
+        // all-positive interval still gets a sign bit via min(0)
+        assert_eq!(sira_bound_bits(5, 96), 8);
+    }
+
+    #[test]
+    fn sira_never_exceeds_exact_need() {
+        for (lo, hi) in [(-100i64, 50i64), (0, 1), (-8, 7), (-129, 130)] {
+            let b = sira_bound_bits(lo, hi);
+            // interval must fit in b signed bits
+            assert!(lo >= -(1 << (b - 1)));
+            assert!(hi <= (1 << (b - 1)) - 1);
+        }
+    }
+
+    #[test]
+    fn minimize_on_worked_example() {
+        use crate::sira::analyze;
+        let (mut g, inputs) = crate::models::worked_example();
+        let a = analyze(&g, &inputs).unwrap();
+        let rep = minimize_accumulators(&mut g, &a, AccPolicy::Sira).unwrap();
+        assert_eq!(rep.rows.len(), 1);
+        let row = &rep.rows[0];
+        // SIRA: output range ±96 -> 8 bits; inputs 4-bit ranges
+        assert_eq!(row.bits_sira, 8);
+        assert_eq!(row.k, 2);
+        // datatype bound must be >= sira bound
+        assert!(row.bits_datatype >= row.bits_sira);
+        // the MAC output dtype was annotated
+        let mm = g.nodes.iter().find(|n| n.op.name() == "MatMul").unwrap();
+        assert_eq!(g.dtypes[&mm.outputs[0]], DataType::Int(8));
+    }
+}

@@ -1,0 +1,92 @@
+//! Fixed-point quantization of aggregated scales and biases (§6.2.1):
+//! for composite layer tails, the float parameters of elementwise Mul/Add
+//! nodes are snapped to a fixed<W,I> grid (the paper grid-searches the
+//! fractional bits per tensor; we expose W and F directly). Not part of
+//! the SIRA optimizations proper — it is the paper's *baseline* treatment
+//! for non-thresholded tails — but needed to reproduce the Table 8
+//! accuracy comparison.
+
+use anyhow::Result;
+
+use crate::graph::{Graph, Op};
+
+/// Snap a value to the fixed<W,I> grid (F = W - I fractional bits),
+/// saturating at the representable range.
+pub fn to_fixed(v: f64, w: u32, i: u32) -> f64 {
+    let f = w - i;
+    let scale = (1u64 << f) as f64;
+    let lo = -((1i64 << (w - 1)) as f64) / scale;
+    let hi = ((1i64 << (w - 1)) - 1) as f64 / scale;
+    ((v * scale).round() / scale).clamp(lo, hi)
+}
+
+/// Quantize every non-integral elementwise constant (Mul/Add/Div/Sub
+/// parameters) to a fixed<W,I> format with the integer bits `I` chosen
+/// per tensor for lossless representation of the integer part (the
+/// paper's §6.2.1 procedure; the remaining W−I bits are fractional).
+/// Returns the number of tensors touched.
+pub fn quantize_tail_params(g: &mut Graph, w: u32) -> Result<usize> {
+    let mut touched = 0;
+    let mut targets: Vec<String> = Vec::new();
+    for node in &g.nodes {
+        if !matches!(node.op, Op::Mul | Op::Add | Op::Div | Op::Sub) {
+            continue;
+        }
+        for inp in &node.inputs {
+            if g.is_initializer(inp) && !g.initializers[inp].is_integral() {
+                targets.push(inp.clone());
+            }
+        }
+    }
+    targets.sort();
+    targets.dedup();
+    for name in targets {
+        let t = &g.initializers[&name];
+        // I: signed integer bits covering the integer part losslessly
+        let mag = t.abs_max().floor().max(0.0) as u64;
+        let i = (crate::util::ceil_log2(mag + 2) + 1).min(w - 1);
+        let q = t.map(|v| to_fixed(v, w, i));
+        g.add_initializer(&name, q);
+        touched += 1;
+    }
+    Ok(touched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn fixed_grid_snapping() {
+        // fixed16.8: step 1/256
+        assert_eq!(to_fixed(0.5, 16, 8), 0.5);
+        assert_eq!(to_fixed(0.001, 16, 8), 0.0);
+        assert!((to_fixed(0.335, 16, 8) - 0.3359375).abs() < 1e-12);
+        // saturation
+        assert_eq!(to_fixed(1e9, 16, 8), (32767.0) / 256.0);
+        assert_eq!(to_fixed(-1e9, 16, 8), -128.0);
+    }
+
+    #[test]
+    fn quantizes_only_float_tail_params() {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 2]);
+        g.add_initializer("s", Tensor::from_vec(vec![0.333, 1.5]));
+        g.add_initializer("k", Tensor::from_vec(vec![3.0, -2.0])); // integral
+        g.add_node(Node::new("m", Op::Mul, &["x", "s"], &["a"]));
+        g.add_node(Node::new("a", Op::Add, &["a", "k"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let n = quantize_tail_params(&mut g, 16).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.initializers["k"].data(), &[3.0, -2.0]);
+        let s = &g.initializers["s"];
+        // I is chosen per tensor; values land on some power-of-two grid
+        assert!(s
+            .data()
+            .iter()
+            .all(|v| (v * 8192.0).fract() == 0.0 || (v * 256.0).fract() == 0.0));
+    }
+}

@@ -1,0 +1,149 @@
+//! Constant folding and shared-parameter duplication.
+//!
+//! Constant folding evaluates nodes whose inputs are all initializers and
+//! replaces them with constants. Quant nodes are excluded by default:
+//! folding a weight quantizer would replace the scaled-integer structure
+//! with an opaque float constant and block SIRA's integer propagation —
+//! weight quantizers are instead handled by
+//! [`crate::passes::streamline::extract_quant_scales`].
+//!
+//! Shared-parameter duplication (§4.1.2 step 1) gives every consumer of a
+//! scale/bias initializer its own private copy so the aggregation pass can
+//! erase contributions independently.
+
+use anyhow::Result;
+
+use crate::executor::execute_op;
+use crate::graph::{Graph, Op};
+use crate::tensor::Tensor;
+
+/// Fold constant subexpressions. `fold_quant` controls whether Quant
+/// nodes with constant inputs are folded (default: keep them).
+pub fn fold_constants(g: &mut Graph, fold_quant: bool) -> Result<usize> {
+    let mut total = 0;
+    loop {
+        let mut changed = false;
+        let order = g.topo_order()?;
+        for idx in order {
+            let node = g.nodes[idx].clone();
+            if matches!(node.op, Op::Quant { .. }) && !fold_quant {
+                continue;
+            }
+            if node.inputs.is_empty() || !node.inputs.iter().all(|i| g.is_initializer(i)) {
+                continue;
+            }
+            let ins: Vec<Tensor> = node
+                .inputs
+                .iter()
+                .map(|i| g.initializers[i].clone())
+                .collect();
+            let outs = execute_op(&node.op, &ins)?;
+            for (oname, t) in node.outputs.iter().zip(outs) {
+                g.add_initializer(oname, t);
+            }
+            g.nodes.remove(idx);
+            g.prune_unused_initializers();
+            total += 1;
+            changed = true;
+            break; // indices shifted; restart scan
+        }
+        if !changed {
+            return Ok(total);
+        }
+    }
+}
+
+/// Give each consumer of a multiply-referenced initializer its own copy.
+/// Returns the number of duplicates created.
+pub fn duplicate_shared_initializers(g: &mut Graph) -> Result<usize> {
+    let mut created = 0;
+    let names: Vec<String> = g.initializers.keys().cloned().collect();
+    for name in names {
+        let consumers = g.consumers(&name);
+        if consumers.len() <= 1 {
+            continue;
+        }
+        // keep the first consumer on the original; clone for the rest
+        for &ci in &consumers[1..] {
+            let copy_name = g.fresh(&format!("{name}_dup"));
+            let t = g.initializers[&name].clone();
+            g.add_initializer(&copy_name, t);
+            for inp in &mut g.nodes[ci].inputs {
+                if *inp == name {
+                    *inp = copy_name.clone();
+                }
+            }
+            created += 1;
+        }
+    }
+    Ok(created)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Node, RoundMode};
+
+    #[test]
+    fn folds_constant_chain() {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 2]);
+        g.add_initializer("a", Tensor::from_vec(vec![1.0, 2.0]));
+        g.add_initializer("b", Tensor::from_vec(vec![3.0, 4.0]));
+        g.add_node(Node::new("cadd", Op::Add, &["a", "b"], &["c"]));
+        g.add_node(Node::new("use", Op::Mul, &["x", "c"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let n = fold_constants(&mut g, false).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.initializers["c"].data(), &[4.0, 6.0]);
+        g.check().unwrap();
+    }
+
+    #[test]
+    fn quant_not_folded_by_default() {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 2]);
+        g.add_initializer("w", Tensor::from_vec(vec![0.5, 1.5]));
+        g.add_initializer("s", Tensor::scalar(0.5));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("b", Tensor::scalar(4.0));
+        g.add_node(Node::new(
+            "q",
+            Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &["w", "s", "z", "b"],
+            &["wq"],
+        ));
+        g.add_node(Node::new("m", Op::Mul, &["x", "wq"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        assert_eq!(fold_constants(&mut g, false).unwrap(), 0);
+        assert_eq!(fold_constants(&mut g, true).unwrap(), 1);
+        assert_eq!(g.initializers["wq"].data(), &[0.5, 1.5]);
+    }
+
+    #[test]
+    fn duplicates_shared_scale() {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 2]);
+        g.add_initializer("s", Tensor::scalar(2.0));
+        g.add_node(Node::new("m1", Op::Mul, &["x", "s"], &["a"]));
+        g.add_node(Node::new("m2", Op::Mul, &["a", "s"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let n = duplicate_shared_initializers(&mut g).unwrap();
+        assert_eq!(n, 1);
+        let (i1, i2) = (
+            g.nodes[0].inputs[1].clone(),
+            g.nodes[1].inputs[1].clone(),
+        );
+        assert_ne!(i1, i2);
+        assert_eq!(g.initializers[&i1].data(), g.initializers[&i2].data());
+        g.check().unwrap();
+    }
+}

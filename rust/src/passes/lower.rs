@@ -1,0 +1,184 @@
+//! Operator lowering (§3.3): rewrite composite operators into the
+//! primitive forms SIRA defines propagation handlers for — `Gemm` with
+//! bias becomes `MatMul + Add`, and `BatchNormalization` becomes
+//! `Mul + Add` with folded per-channel affine parameters.
+
+use anyhow::Result;
+
+use crate::graph::{Graph, Node, Op};
+
+/// Lower all Gemm nodes to MatMul + Add. Returns the number lowered.
+pub fn lower_gemm(g: &mut Graph) -> Result<usize> {
+    let mut count = 0;
+    let mut i = 0;
+    while i < g.nodes.len() {
+        if matches!(g.nodes[i].op, Op::Gemm) {
+            let node = g.nodes[i].clone();
+            let mm_out = g.fresh(&format!("{}_mm", node.name));
+            let mm = Node {
+                name: g.fresh(&format!("{}_MatMul", node.name)),
+                op: Op::MatMul,
+                inputs: vec![node.inputs[0].clone(), node.inputs[1].clone()],
+                outputs: vec![mm_out.clone()],
+            };
+            let add = Node {
+                name: g.fresh(&format!("{}_Add", node.name)),
+                op: Op::Add,
+                inputs: vec![mm_out, node.inputs[2].clone()],
+                outputs: node.outputs.clone(),
+            };
+            g.nodes.remove(i);
+            g.nodes.insert(i, mm);
+            g.nodes.insert(i + 1, add);
+            count += 1;
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    if count > 0 {
+        crate::graph::shapes::infer_shapes(g)?;
+    }
+    Ok(count)
+}
+
+/// Lower all BatchNormalization nodes to Mul + Add with per-channel
+/// constants `A = gamma / sqrt(var + eps)` and `B = beta - mean * A`,
+/// reshaped to broadcast over the data layout (NCHW or NC).
+pub fn lower_batchnorm(g: &mut Graph) -> Result<usize> {
+    let mut count = 0;
+    let mut i = 0;
+    while i < g.nodes.len() {
+        let Op::BatchNorm { eps } = g.nodes[i].op else {
+            i += 1;
+            continue;
+        };
+        let node = g.nodes[i].clone();
+        let gamma = g.initializers[&node.inputs[1]].clone();
+        let beta = g.initializers[&node.inputs[2]].clone();
+        let mean = g.initializers[&node.inputs[3]].clone();
+        let var = g.initializers[&node.inputs[4]].clone();
+        let c = gamma.numel();
+        let a = gamma.zip(&var, |gm, v| gm / (v + eps).sqrt())?;
+        let b = beta.zip(&mean.mul(&a)?, |bt, ma| bt - ma)?;
+        let rank = g.shapes[&node.inputs[0]].len();
+        let param_shape: Vec<usize> = if rank == 4 {
+            vec![1, c, 1, 1]
+        } else {
+            vec![1, c]
+        };
+        let a = a.reshape(&param_shape)?;
+        let b = b.reshape(&param_shape)?;
+        let a_name = g.fresh(&format!("{}_scale", node.name));
+        let b_name = g.fresh(&format!("{}_bias", node.name));
+        g.add_initializer(&a_name, a);
+        g.add_initializer(&b_name, b);
+        let mul_out = g.fresh(&format!("{}_mul", node.name));
+        let mul = Node {
+            name: g.fresh(&format!("{}_Mul", node.name)),
+            op: Op::Mul,
+            inputs: vec![node.inputs[0].clone(), a_name],
+            outputs: vec![mul_out.clone()],
+        };
+        let add = Node {
+            name: g.fresh(&format!("{}_Add", node.name)),
+            op: Op::Add,
+            inputs: vec![mul_out, b_name],
+            outputs: node.outputs.clone(),
+        };
+        g.nodes.remove(i);
+        g.nodes.insert(i, mul);
+        g.nodes.insert(i + 1, add);
+        g.prune_unused_initializers();
+        count += 1;
+        i += 2;
+    }
+    if count > 0 {
+        crate::graph::shapes::infer_shapes(g)?;
+    }
+    Ok(count)
+}
+
+/// Run all lowering passes.
+pub fn lower_all(g: &mut Graph) -> Result<usize> {
+    Ok(lower_gemm(g)? + lower_batchnorm(g)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::Executor;
+    use crate::graph::Node;
+    use crate::tensor::Tensor;
+
+    fn gemm_bn_graph() -> Graph {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 2]);
+        g.add_initializer("w", Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap());
+        g.add_initializer("c", Tensor::new(&[1, 2], vec![0.5, -0.5]).unwrap());
+        g.add_node(Node::new("gemm", Op::Gemm, &["x", "w", "c"], &["h"]));
+        g.add_initializer("gamma", Tensor::from_vec(vec![2.0, 1.0]));
+        g.add_initializer("beta", Tensor::from_vec(vec![0.1, 0.2]));
+        g.add_initializer("mean", Tensor::from_vec(vec![1.0, -1.0]));
+        g.add_initializer("var", Tensor::from_vec(vec![3.0, 0.0]));
+        g.add_node(Node::new(
+            "bn",
+            Op::BatchNorm { eps: 1.0 },
+            &["h", "gamma", "beta", "mean", "var"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        g
+    }
+
+    #[test]
+    fn lowering_preserves_semantics() {
+        let g0 = gemm_bn_graph();
+        let x = Tensor::new(&[1, 2], vec![1.5, -2.0]).unwrap();
+        let y0 = Executor::new(&g0).unwrap().run_single(&x).unwrap();
+
+        let mut g1 = g0.clone();
+        let n = lower_all(&mut g1).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(g1.count_op("Gemm"), 0);
+        assert_eq!(g1.count_op("BatchNormalization"), 0);
+        assert_eq!(g1.count_op("MatMul"), 1);
+        assert_eq!(g1.count_op("Mul"), 1);
+        assert_eq!(g1.count_op("Add"), 2);
+        g1.check().unwrap();
+
+        let y1 = Executor::new(&g1).unwrap().run_single(&x).unwrap();
+        for (a, b) in y0[0].data().iter().zip(y1[0].data()) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bn_lowering_rank4() {
+        let mut g = Graph::new("t4");
+        g.add_input("x", &[1, 2, 2, 2]);
+        g.add_initializer("gamma", Tensor::from_vec(vec![1.0, 2.0]));
+        g.add_initializer("beta", Tensor::from_vec(vec![0.0, 0.0]));
+        g.add_initializer("mean", Tensor::from_vec(vec![0.0, 0.0]));
+        g.add_initializer("var", Tensor::from_vec(vec![0.0, 3.0]));
+        g.add_node(Node::new(
+            "bn",
+            Op::BatchNorm { eps: 1.0 },
+            &["x", "gamma", "beta", "mean", "var"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let x = Tensor::new(&[1, 2, 2, 2], (0..8).map(|v| v as f64).collect()).unwrap();
+        let y0 = Executor::new(&g).unwrap().run_single(&x).unwrap();
+        lower_batchnorm(&mut g).unwrap();
+        let y1 = Executor::new(&g).unwrap().run_single(&x).unwrap();
+        for (a, b) in y0[0].data().iter().zip(y1[0].data()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // params must be (1,C,1,1) for NCHW broadcast
+        let mul = g.nodes.iter().find(|n| n.op == Op::Mul).unwrap();
+        assert_eq!(g.initializers[&mul.inputs[1]].shape(), &[1, 2, 1, 1]);
+    }
+}

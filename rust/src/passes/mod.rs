@@ -1,0 +1,11 @@
+//! Compiler passes built on SIRA (§4): operator lowering, constant
+//! folding, streamlining (scale/bias aggregation), threshold conversion,
+//! accumulator minimization and stuck-channel detection.
+
+pub mod accmin;
+pub mod fixedpoint;
+pub mod fold;
+pub mod lower;
+pub mod streamline;
+pub mod stuck;
+pub mod thresholds;

@@ -1,0 +1,733 @@
+//! SIRA-based streamlining (§4.1): make quantizer scales explicit, move
+//! scales and biases downstream through linear regions, and aggregate
+//! them into a single Mul + Add in front of each activation (the *target
+//! tensor*), revealing pure-integer MatMul/Conv kernels.
+//!
+//! The rewrite rules are local algebraic identities, each of which is
+//! exact over the reals; as the paper notes (§4.1.2), aggregation of
+//! floating-point scales is not bit-identical to the original composition
+//! — the end-to-end tests therefore compare *quantized* outputs.
+
+use anyhow::{bail, Result};
+
+use crate::executor::ops::quant_int;
+use crate::graph::{DataType, Graph, Node, Op};
+use crate::tensor::Tensor;
+
+/// Step 1 of streamlining: make every quantizer's scale explicit.
+///
+/// * Weight quantizers (constant input) are folded to integer weight
+///   initializers followed by an explicit `Mul(W_q, s)` dequantization.
+/// * Activation quantizers become `Div(x, s) → Quant(scale=1) → Mul(q, s)`
+///   so the integer tensor `q` is visible between them.
+///
+/// Returns the number of quantizers rewritten. Quantizers with non-zero
+/// zero-points are left untouched (asymmetric activation quantization is
+/// outside the paper's streamlining scope, see §9).
+pub fn extract_quant_scales(g: &mut Graph) -> Result<usize> {
+    let mut count = 0;
+    let mut idx = 0;
+    while idx < g.nodes.len() {
+        let node = g.nodes[idx].clone();
+        let Op::Quant {
+            signed,
+            narrow,
+            rounding,
+        } = node.op
+        else {
+            idx += 1;
+            continue;
+        };
+        let s_name = node.inputs[1].clone();
+        let z_name = node.inputs[2].clone();
+        let b_name = node.inputs[3].clone();
+        let (Some(s), Some(z), Some(b)) = (
+            g.initializer(&s_name).cloned(),
+            g.initializer(&z_name).cloned(),
+            g.initializer(&b_name).cloned(),
+        ) else {
+            idx += 1;
+            continue;
+        };
+        if !z.all_eq(0.0) {
+            idx += 1;
+            continue; // asymmetric quantization: not streamlined
+        }
+        // Skip already-extracted unit-scale quantizers.
+        if s.all_eq(1.0) {
+            idx += 1;
+            continue;
+        }
+        let bits = b.first() as u32;
+        let out_dt = if signed {
+            DataType::Int(bits)
+        } else {
+            DataType::UInt(bits)
+        };
+        let x_name = node.inputs[0].clone();
+        let y_name = node.outputs[0].clone();
+
+        if let Some(w) = g.initializer(&x_name).cloned() {
+            // ---- weight quantizer: fold to integer weights + Mul(s) ----
+            let wq = quant_int(
+                &[w, s.clone(), z.clone(), b.clone()],
+                signed,
+                narrow,
+                rounding,
+            )?;
+            let wq_name = g.fresh(&format!("{x_name}_int"));
+            g.add_initializer(&wq_name, wq);
+            g.dtypes.insert(wq_name.clone(), out_dt);
+            let mul = Node {
+                name: g.fresh(&format!("{}_deq", node.name)),
+                op: Op::Mul,
+                inputs: vec![wq_name, s_name.clone()],
+                outputs: vec![y_name],
+            };
+            g.nodes.remove(idx);
+            g.nodes.insert(idx, mul);
+            g.prune_unused_initializers();
+        } else {
+            // ---- activation quantizer: Div → Quant(1) → Mul ----
+            let div_out = g.fresh(&format!("{}_scaled", node.name));
+            let int_out = g.fresh(&format!("{}_int", node.name));
+            let one_name = g.fresh(&format!("{}_one", node.name));
+            g.add_initializer(&one_name, Tensor::scalar(1.0));
+            let div = Node {
+                name: g.fresh(&format!("{}_Div", node.name)),
+                op: Op::Div,
+                inputs: vec![x_name, s_name.clone()],
+                outputs: vec![div_out.clone()],
+            };
+            let quant = Node {
+                name: node.name.clone(),
+                op: Op::Quant {
+                    signed,
+                    narrow,
+                    rounding,
+                },
+                inputs: vec![div_out, one_name, z_name, b_name],
+                outputs: vec![int_out.clone()],
+            };
+            g.dtypes.insert(int_out.clone(), out_dt);
+            let mul = Node {
+                name: g.fresh(&format!("{}_deq", node.name)),
+                op: Op::Mul,
+                inputs: vec![int_out, s_name.clone()],
+                outputs: vec![node.outputs[0].clone()],
+            };
+            g.nodes.remove(idx);
+            g.nodes.insert(idx, div);
+            g.nodes.insert(idx + 1, quant);
+            g.nodes.insert(idx + 2, mul);
+        }
+        count += 1;
+        idx += 1;
+    }
+    crate::graph::shapes::infer_shapes(g)?;
+    Ok(count)
+}
+
+/// Which input of a 2-ary elementwise node is a constant? Returns
+/// (const_idx, dynamic_idx).
+fn const_side(g: &Graph, node: &Node) -> Option<(usize, usize)> {
+    if node.inputs.len() != 2 {
+        return None;
+    }
+    match (
+        g.is_initializer(&node.inputs[0]),
+        g.is_initializer(&node.inputs[1]),
+    ) {
+        (false, true) => Some((1, 0)),
+        (true, false) => Some((0, 1)),
+        _ => None,
+    }
+}
+
+/// True if `tensor` is consumed exactly once and is not a graph output.
+fn single_use(g: &Graph, tensor: &str) -> bool {
+    g.consumers(tensor).len() == 1 && !g.outputs.iter().any(|o| o == tensor)
+}
+
+/// The streamlining rule engine: applies local rewrites until fixpoint.
+/// Returns the number of rewrites applied.
+pub fn streamline(g: &mut Graph) -> Result<usize> {
+    let mut total = 0;
+    let budget = 200 + 50 * g.nodes.len();
+    loop {
+        let applied = apply_one_rule(g)?;
+        if !applied {
+            break;
+        }
+        total += 1;
+        if total > budget {
+            bail!("streamlining did not reach a fixpoint (applied {total} rewrites)");
+        }
+    }
+    remove_identities(g)?;
+    g.prune_unused_initializers();
+    crate::graph::shapes::infer_shapes(g)?;
+    Ok(total)
+}
+
+/// Try each rule in priority order; apply the first match.
+fn apply_one_rule(g: &mut Graph) -> Result<bool> {
+    let order = g.topo_order()?;
+    for &i in &order {
+        if try_fuse_elementwise(g, i)? {
+            return Ok(true);
+        }
+    }
+    for &i in &order {
+        if try_swap_mul_over_add(g, i)? {
+            return Ok(true);
+        }
+    }
+    for &i in &order {
+        if try_move_mul_past_mac(g, i)? {
+            return Ok(true);
+        }
+    }
+    for &i in &order {
+        if try_move_past_movement_and_pool(g, i)? {
+            return Ok(true);
+        }
+    }
+    for &i in &order {
+        if try_factor_residual(g, i)? {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// R1/R2: `Mul(Mul(x,a),b) → Mul(x,a⊙b)`; `Add(Add(x,a),b) → Add(x,a+b)`.
+fn try_fuse_elementwise(g: &mut Graph, i: usize) -> Result<bool> {
+    let node = g.nodes[i].clone();
+    let want_mul = matches!(node.op, Op::Mul);
+    if !want_mul && !matches!(node.op, Op::Add) {
+        return Ok(false);
+    }
+    let Some((ci, di)) = const_side(g, &node) else {
+        return Ok(false);
+    };
+    let dyn_in = node.inputs[di].clone();
+    let Some(pi) = g.producer(&dyn_in) else {
+        return Ok(false);
+    };
+    let prev = g.nodes[pi].clone();
+    if prev.op != node.op || !single_use(g, &dyn_in) {
+        return Ok(false);
+    }
+    let Some((pci, pdi)) = const_side(g, &prev) else {
+        return Ok(false);
+    };
+    let a = g.initializers[&prev.inputs[pci]].clone();
+    let b = g.initializers[&node.inputs[ci]].clone();
+    let fused = if want_mul { a.mul(&b)? } else { a.add(&b)? };
+    let fused_name = g.fresh("fused_c");
+    g.add_initializer(&fused_name, fused);
+    // node becomes op(x_prev_dyn, fused)
+    let x = prev.inputs[pdi].clone();
+    g.nodes[i].inputs = vec![x, fused_name];
+    g.nodes.remove(pi);
+    g.prune_unused_initializers();
+    Ok(true)
+}
+
+/// R4: `Mul(Add(x,b),c) → Add(Mul(x,c), b⊙c)` — canonical Mul-then-Add.
+fn try_swap_mul_over_add(g: &mut Graph, i: usize) -> Result<bool> {
+    let node = g.nodes[i].clone();
+    if !matches!(node.op, Op::Mul) {
+        return Ok(false);
+    }
+    let Some((ci, di)) = const_side(g, &node) else {
+        return Ok(false);
+    };
+    let dyn_in = node.inputs[di].clone();
+    let Some(pi) = g.producer(&dyn_in) else {
+        return Ok(false);
+    };
+    let prev = g.nodes[pi].clone();
+    if !matches!(prev.op, Op::Add) || !single_use(g, &dyn_in) {
+        return Ok(false);
+    }
+    let Some((pci, pdi)) = const_side(g, &prev) else {
+        return Ok(false);
+    };
+    let b = g.initializers[&prev.inputs[pci]].clone();
+    let c = g.initializers[&node.inputs[ci]].clone();
+    let bc = b.mul(&c)?;
+    let bc_name = g.fresh("swapped_b");
+    g.add_initializer(&bc_name, bc);
+    let x = prev.inputs[pdi].clone();
+    // prev becomes Mul(x, c); node becomes Add(prev_out, b*c)
+    g.nodes[pi].op = Op::Mul;
+    g.nodes[pi].inputs = vec![x, node.inputs[ci].clone()];
+    g.nodes[i].op = Op::Add;
+    g.nodes[i].inputs = vec![dyn_in, bc_name];
+    g.prune_unused_initializers();
+    Ok(true)
+}
+
+/// R5/R6: move a constant Mul past MatMul/Conv.
+/// * activation side: `MatMul(Mul(x,c), W) → Mul(MatMul(x,W), c)` for
+///   scalar c (per-channel c allowed for depthwise Conv);
+/// * weight side: `MatMul(x, Mul(W,s)) → Mul(MatMul(x,W), s')` for
+///   per-output-channel s.
+fn try_move_mul_past_mac(g: &mut Graph, i: usize) -> Result<bool> {
+    let node = g.nodes[i].clone();
+    let (is_matmul, conv_info) = match &node.op {
+        Op::MatMul => (true, None),
+        Op::Conv { group, .. } => (false, Some(*group)),
+        _ => return Ok(false),
+    };
+    // -- weight-side Mul --
+    if let Some(wi) = g.producer(&node.inputs[1]) {
+        let wnode = g.nodes[wi].clone();
+        if matches!(wnode.op, Op::Mul) && single_use(g, &node.inputs[1]) {
+            // the weight dequant Mul has BOTH inputs constant (integer
+            // weights x scale); pick the larger-numel side as the weights
+            let both_const = wnode.inputs.len() == 2
+                && g.is_initializer(&wnode.inputs[0])
+                && g.is_initializer(&wnode.inputs[1]);
+            let side = if both_const {
+                let n0 = g.initializers[&wnode.inputs[0]].numel();
+                let n1 = g.initializers[&wnode.inputs[1]].numel();
+                if n0 >= n1 { Some((1, 0)) } else { Some((0, 1)) }
+            } else {
+                const_side(g, &wnode)
+            };
+            if let Some((ci, di)) = side {
+                let s = g.initializers[&wnode.inputs[ci]].clone();
+                let w_shape = g.shapes[&wnode.inputs[di]].clone();
+                let (ok, out_scale_shape) = if is_matmul {
+                    let m = w_shape[1];
+                    (
+                        s.numel() == 1 || crate::tensor::broadcastable_to(s.shape(), &[1, m]),
+                        vec![1, m],
+                    )
+                } else {
+                    let o = w_shape[0];
+                    // conv weight scale (O,1,1,1) or scalar
+                    (
+                        s.numel() == 1 || (s.numel() == o && s.shape()[0] == o),
+                        vec![1, o, 1, 1],
+                    )
+                };
+                if ok {
+                    let s_out = if s.numel() == 1 {
+                        s.clone()
+                    } else {
+                        s.reshape(&out_scale_shape)?
+                    };
+                    let s_out_name = g.fresh("wscale_moved");
+                    g.add_initializer(&s_out_name, s_out);
+                    // rewire: mac reads raw weights; Mul applied after
+                    g.nodes[i].inputs[1] = wnode.inputs[di].clone();
+                    let y = node.outputs[0].clone();
+                    let mid = g.fresh(&format!("{y}_raw"));
+                    g.nodes[i].outputs[0] = mid.clone();
+                    let new_mul = Node {
+                        name: g.fresh("MulW"),
+                        op: Op::Mul,
+                        inputs: vec![mid, s_out_name],
+                        outputs: vec![y],
+                    };
+                    g.nodes.push(new_mul);
+                    // drop the old weight-side Mul
+                    let wi = g.producer(&wnode.outputs[0]).unwrap();
+                    g.nodes.remove(wi);
+                    g.prune_unused_initializers();
+                    crate::graph::shapes::infer_shapes(g)?;
+                    return Ok(true);
+                }
+            }
+        }
+    }
+    // -- activation-side Mul --
+    if let Some(xi) = g.producer(&node.inputs[0]) {
+        let xnode = g.nodes[xi].clone();
+        if matches!(xnode.op, Op::Mul) && single_use(g, &node.inputs[0]) {
+            if let Some((ci, di)) = const_side(g, &xnode) {
+                let c = g.initializers[&xnode.inputs[ci]].clone();
+                let depthwise = matches!(conv_info, Some(gr) if gr > 1);
+                let movable = c.numel() == 1 || (depthwise && c.rank() == 4 && c.shape()[0] == 1);
+                if movable {
+                    let c_name = xnode.inputs[ci].clone();
+                    g.nodes[i].inputs[0] = xnode.inputs[di].clone();
+                    let y = node.outputs[0].clone();
+                    let mid = g.fresh(&format!("{y}_raw"));
+                    g.nodes[i].outputs[0] = mid.clone();
+                    let new_mul = Node {
+                        name: g.fresh("MulX"),
+                        op: Op::Mul,
+                        inputs: vec![mid, c_name],
+                        outputs: vec![y],
+                    };
+                    g.nodes.push(new_mul);
+                    let xi = g.producer(&xnode.outputs[0]).unwrap();
+                    g.nodes.remove(xi);
+                    crate::graph::shapes::infer_shapes(g)?;
+                    return Ok(true);
+                }
+            }
+        }
+    }
+    Ok(false)
+}
+
+/// R7-R10: move constant Mul/Add past pooling, ReLU and data movement.
+/// MaxPool and ReLU require positive scale for Mul; Add commutes with
+/// MaxPool and data movement but not with ReLU.
+fn try_move_past_movement_and_pool(g: &mut Graph, i: usize) -> Result<bool> {
+    let node = g.nodes[i].clone();
+    let kind = match &node.op {
+        Op::MaxPool { .. } => "max",
+        Op::AveragePool { .. } | Op::GlobalAveragePool => "avg",
+        Op::Relu => "relu",
+        Op::Reshape { .. } | Op::Flatten { .. } | Op::Transpose { .. } | Op::Identity => "move",
+        _ => return Ok(false),
+    };
+    let Some(pi) = g.producer(&node.inputs[0]) else {
+        return Ok(false);
+    };
+    let prev = g.nodes[pi].clone();
+    let prev_is_mul = matches!(prev.op, Op::Mul);
+    let prev_is_add = matches!(prev.op, Op::Add);
+    if (!prev_is_mul && !prev_is_add) || !single_use(g, &node.inputs[0]) {
+        return Ok(false);
+    }
+    let Some((ci, di)) = const_side(g, &prev) else {
+        return Ok(false);
+    };
+    let c = g.initializers[&prev.inputs[ci]].clone();
+    let allowed = match (kind, prev_is_mul) {
+        ("avg", _) => true,                                      // linear
+        ("move", _) => c.numel() == 1,                           // scalar only
+        ("max", true) => c.data().iter().all(|&v| v > 0.0),      // monotone
+        ("max", false) => true,                                  // max(x+c) = max(x)+c
+        ("relu", true) => c.data().iter().all(|&v| v > 0.0),     // relu(cx)=c relu(x)
+        ("relu", false) => false,
+        _ => false,
+    };
+    if !allowed {
+        return Ok(false);
+    }
+    // rewire: node consumes prev's dynamic input; prev applied after node
+    let c_name = prev.inputs[ci].clone();
+    let op = prev.op.clone();
+    g.nodes[i].inputs[0] = prev.inputs[di].clone();
+    let y = node.outputs[0].clone();
+    let mid = g.fresh(&format!("{y}_raw"));
+    g.nodes[i].outputs[0] = mid.clone();
+    let nm = g.fresh("moved_ew");
+    g.nodes.push(Node {
+        name: nm,
+        op,
+        inputs: vec![mid, c_name],
+        outputs: vec![y],
+    });
+    let pi = g.producer(&prev.outputs[0]).unwrap();
+    g.nodes.remove(pi);
+    crate::graph::shapes::infer_shapes(g)?;
+    Ok(true)
+}
+
+/// R11: residual factoring — `Add(Mul(a,c), Mul(b,c)) → Mul(Add(a,b), c)`
+/// when both scales are equal (the integer-ratio generalisation of
+/// §3.2.2 falls out of re-running this after an integer Mul insertion).
+fn try_factor_residual(g: &mut Graph, i: usize) -> Result<bool> {
+    let node = g.nodes[i].clone();
+    if !matches!(node.op, Op::Add) || node.inputs.len() != 2 {
+        return Ok(false);
+    }
+    if g.is_initializer(&node.inputs[0]) || g.is_initializer(&node.inputs[1]) {
+        return Ok(false);
+    }
+    let (Some(p0), Some(p1)) = (g.producer(&node.inputs[0]), g.producer(&node.inputs[1])) else {
+        return Ok(false);
+    };
+    let (n0, n1) = (g.nodes[p0].clone(), g.nodes[p1].clone());
+    if !matches!(n0.op, Op::Mul) || !matches!(n1.op, Op::Mul) {
+        return Ok(false);
+    }
+    if !single_use(g, &node.inputs[0]) || !single_use(g, &node.inputs[1]) {
+        return Ok(false);
+    }
+    let (Some((c0, d0)), Some((c1, d1))) = (const_side(g, &n0), const_side(g, &n1)) else {
+        return Ok(false);
+    };
+    let s0 = g.initializers[&n0.inputs[c0]].clone();
+    let s1 = g.initializers[&n1.inputs[c1]].clone();
+    if s0.shape() != s1.shape() || s0.data() != s1.data() {
+        return Ok(false);
+    }
+    // Add reads both raw branches; shared Mul applied after.
+    let a = n0.inputs[d0].clone();
+    let b = n1.inputs[d1].clone();
+    let c_name = n0.inputs[c0].clone();
+    let y = node.outputs[0].clone();
+    let mid = g.fresh(&format!("{y}_raw"));
+    g.nodes[i].inputs = vec![a, b];
+    g.nodes[i].outputs[0] = mid.clone();
+    let nm = g.fresh("residual_scale");
+    g.nodes.push(Node {
+        name: nm,
+        op: Op::Mul,
+        inputs: vec![mid, c_name],
+        outputs: vec![y],
+    });
+    // remove both old Muls (recompute indices after mutation)
+    let r0 = g.producer(&n0.outputs[0]).unwrap();
+    g.nodes.remove(r0);
+    let r1 = g.producer(&n1.outputs[0]).unwrap();
+    g.nodes.remove(r1);
+    g.prune_unused_initializers();
+    crate::graph::shapes::infer_shapes(g)?;
+    Ok(true)
+}
+
+/// R12: remove `Mul(x,1)`, `Add(x,0)`, `Div(x,1)` and Identity nodes.
+pub fn remove_identities(g: &mut Graph) -> Result<usize> {
+    let mut removed = 0;
+    loop {
+        let mut found = None;
+        for (i, node) in g.nodes.iter().enumerate() {
+            let is_id = match &node.op {
+                Op::Identity => true,
+                Op::Mul | Op::Div => const_side(g, node)
+                    .map(|(ci, _)| g.initializers[&node.inputs[ci]].all_eq(1.0))
+                    .unwrap_or(false),
+                Op::Add | Op::Sub => const_side(g, node)
+                    .map(|(ci, _)| g.initializers[&node.inputs[ci]].all_eq(0.0))
+                    .unwrap_or(false),
+                _ => false,
+            };
+            if is_id {
+                found = Some(i);
+                break;
+            }
+        }
+        match found {
+            Some(i) => {
+                g.remove_node_bypass(i)?;
+                g.prune_unused_initializers();
+                removed += 1;
+            }
+            None => return Ok(removed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::Executor;
+    use crate::graph::RoundMode;
+    use crate::tensor::Conv2dSpec;
+
+    fn q_op() -> Op {
+        Op::Quant {
+            signed: true,
+            narrow: false,
+            rounding: RoundMode::RoundEven,
+        }
+    }
+
+    /// x -> Quant -> MatMul(W quantized) -> Add(B) -> BN-lowered Mul/Add
+    /// -> Relu -> Quant -> y  (the Fig 7 layer)
+    fn layer_graph() -> Graph {
+        let mut g = Graph::new("layer");
+        g.add_input("x", &[1, 2]);
+        g.add_initializer("qs_x", Tensor::scalar(0.7));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("b4", Tensor::scalar(4.0));
+        g.add_node(Node::new("qx", q_op(), &["x", "qs_x", "z", "b4"], &["xq"]));
+        g.add_initializer(
+            "W",
+            Tensor::new(&[2, 3], vec![-1.4, 0.9, -1.3, 1.2, 0.0, -0.7]).unwrap(),
+        );
+        g.add_initializer("qs_w", Tensor::new(&[1, 3], vec![0.2, 0.3, 0.1]).unwrap());
+        g.add_node(Node::new("qw", q_op(), &["W", "qs_w", "z", "b4"], &["wq"]));
+        g.add_node(Node::new("mm", Op::MatMul, &["xq", "wq"], &["h"]));
+        g.add_initializer("B", Tensor::new(&[1, 3], vec![-3.3, 1.1, 0.0]).unwrap());
+        g.add_node(Node::new("addb", Op::Add, &["h", "B"], &["hb"]));
+        g.add_initializer("M", Tensor::new(&[1, 3], vec![0.6, 0.2, 0.4]).unwrap());
+        g.add_node(Node::new("mulm", Op::Mul, &["hb", "M"], &["hm"]));
+        g.add_initializer("N", Tensor::new(&[1, 3], vec![-0.2, -0.4, 1.1]).unwrap());
+        g.add_node(Node::new("addn", Op::Add, &["hm", "N"], &["hn"]));
+        g.add_node(Node::new("relu", Op::Relu, &["hn"], &["hr"]));
+        g.add_initializer("qs_y", Tensor::scalar(0.1));
+        g.add_node(Node::new(
+            "qy",
+            Op::Quant {
+                signed: false,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &["hr", "qs_y", "z", "b4"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        g
+    }
+
+    fn run(g: &Graph, x: &Tensor) -> Vec<f64> {
+        Executor::new(g)
+            .unwrap()
+            .run_single(x)
+            .unwrap()[0]
+            .data()
+            .to_vec()
+    }
+
+    #[test]
+    fn extraction_preserves_semantics() {
+        let g0 = layer_graph();
+        let x = Tensor::new(&[1, 2], vec![1.37, -2.2]).unwrap();
+        let y0 = run(&g0, &x);
+        let mut g1 = g0.clone();
+        let n = extract_quant_scales(&mut g1).unwrap();
+        assert_eq!(n, 3);
+        g1.check().unwrap();
+        let y1 = run(&g1, &x);
+        assert_eq!(y0, y1);
+        // integer weights are annotated
+        let wq_names: Vec<_> = g1
+            .dtypes
+            .iter()
+            .filter(|(_, dt)| dt.is_integer())
+            .collect();
+        assert!(!wq_names.is_empty());
+    }
+
+    #[test]
+    fn streamline_reveals_integer_matmul() {
+        let mut g = layer_graph();
+        extract_quant_scales(&mut g).unwrap();
+        crate::passes::fold::duplicate_shared_initializers(&mut g).unwrap();
+        let x = Tensor::new(&[1, 2], vec![1.37, -2.2]).unwrap();
+        let y0 = run(&layer_graph(), &x);
+        streamline(&mut g).unwrap();
+        g.check().unwrap();
+        let y1 = run(&g, &x);
+        // quantized outputs must agree exactly (values are multiples of qs_y)
+        assert_eq!(y0, y1);
+
+        // the MatMul must now read integer-valued tensors on both sides
+        let mm = g.nodes.iter().find(|n| n.op == Op::MatMul).unwrap();
+        let w = &g.initializers[&mm.inputs[1]];
+        assert!(w.is_integral(), "weights not integer after streamlining");
+        // and the layer tail collapses to one Mul and one Add before Relu
+        let muls = g.count_op("Mul");
+        let adds = g.count_op("Add");
+        assert!(muls <= 3, "got {muls} Muls: {:?}", g.nodes.iter().map(|n| n.op.name()).collect::<Vec<_>>());
+        assert_eq!(adds, 1, "tail adds not aggregated");
+    }
+
+    #[test]
+    fn mul_moves_past_maxpool_and_flatten() {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 1, 2, 2]);
+        g.add_initializer("c", Tensor::scalar(2.0));
+        g.add_node(Node::new("m", Op::Mul, &["x", "c"], &["a"]));
+        g.add_node(Node::new(
+            "p",
+            Op::MaxPool {
+                spec: Conv2dSpec {
+                    kernel: (2, 2),
+                    stride: (2, 2),
+                    pad: (0, 0),
+                },
+            },
+            &["a"],
+            &["b"],
+        ));
+        g.add_node(Node::new("f", Op::Flatten { axis: 1 }, &["b"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 5., 3., 2.]).unwrap();
+        let y0 = run(&g, &x);
+        streamline(&mut g).unwrap();
+        let y1 = run(&g, &x);
+        assert_eq!(y0, y1);
+        // Mul must now be the last node before output
+        let last = g.producer("y").or_else(|| g.producer(&g.outputs[0])).unwrap();
+        let out_producer = g
+            .nodes
+            .iter()
+            .position(|n| n.outputs[0] == g.outputs[0])
+            .unwrap();
+        assert_eq!(last, out_producer);
+        assert!(matches!(g.nodes[out_producer].op, Op::Mul));
+    }
+
+    #[test]
+    fn negative_scale_does_not_cross_maxpool() {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 1, 2, 2]);
+        g.add_initializer("c", Tensor::scalar(-1.0));
+        g.add_node(Node::new("m", Op::Mul, &["x", "c"], &["a"]));
+        g.add_node(Node::new(
+            "p",
+            Op::MaxPool {
+                spec: Conv2dSpec {
+                    kernel: (2, 2),
+                    stride: (2, 2),
+                    pad: (0, 0),
+                },
+            },
+            &["a"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 5., 3., 2.]).unwrap();
+        let y0 = run(&g, &x);
+        streamline(&mut g).unwrap();
+        let y1 = run(&g, &x);
+        assert_eq!(y0, y1);
+        // Mul stays before the pool
+        assert!(matches!(g.nodes[g.producer("y").unwrap()].op, Op::MaxPool { .. }));
+    }
+
+    #[test]
+    fn residual_factoring() {
+        let mut g = Graph::new("res");
+        g.add_input("x", &[1, 4]);
+        g.add_initializer("s1", Tensor::scalar(0.5));
+        g.add_initializer("s2", Tensor::scalar(0.5));
+        g.add_node(Node::new("m1", Op::Mul, &["x", "s1"], &["a"]));
+        g.add_node(Node::new("r", Op::Relu, &["x"], &["xr"]));
+        g.add_node(Node::new("m2", Op::Mul, &["xr", "s2"], &["b"]));
+        g.add_node(Node::new("add", Op::Add, &["a", "b"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let x = Tensor::new(&[1, 4], vec![1., -2., 3., -4.]).unwrap();
+        let y0 = run(&g, &x);
+        streamline(&mut g).unwrap();
+        let y1 = run(&g, &x);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert_eq!(g.count_op("Mul"), 1, "branch scales not factored");
+    }
+
+    #[test]
+    fn identity_removal() {
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 2]);
+        g.add_initializer("one", Tensor::scalar(1.0));
+        g.add_initializer("zero", Tensor::scalar(0.0));
+        g.add_node(Node::new("m", Op::Mul, &["x", "one"], &["a"]));
+        g.add_node(Node::new("a", Op::Add, &["a", "zero"], &["b"]));
+        g.add_node(Node::new("i", Op::Identity, &["b"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        assert_eq!(remove_identities(&mut g).unwrap(), 3);
+        assert_eq!(g.nodes.len(), 0);
+        assert_eq!(g.outputs[0], "x");
+    }
+}

@@ -1,0 +1,89 @@
+//! Stuck-channel detection (§7.1): channels whose analyzed range is a
+//! point interval produce a constant regardless of input — a
+//! generalisation of the dying-ReLU problem. Such channels offer no
+//! predictive power and can be removed (the paper leaves removal to
+//! future work; we report them and expose an optional pruning hook).
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::sira::Analysis;
+
+/// A stuck channel: (channel index, constant output value).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StuckChannel {
+    pub channel: usize,
+    pub value: f64,
+}
+
+/// Find stuck channels of a tensor from its analyzed per-channel range.
+pub fn stuck_channels(analysis: &Analysis, tensor: &str) -> Result<Vec<StuckChannel>> {
+    let r = analysis.get(tensor)?;
+    let lo = r.lo.data();
+    let hi = r.hi.data();
+    let mut out = Vec::new();
+    for (ch, (&l, &h)) in lo.iter().zip(hi).enumerate() {
+        if l == h {
+            out.push(StuckChannel {
+                channel: ch,
+                value: l,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Summary of stuck channels over all activation tensors of the graph
+/// (tensors produced by Quant or MultiThreshold nodes).
+pub fn stuck_report(g: &Graph, analysis: &Analysis) -> Vec<(String, Vec<StuckChannel>)> {
+    let mut rows = Vec::new();
+    for node in &g.nodes {
+        if !matches!(node.op.name(), "Quant" | "MultiThreshold") {
+            continue;
+        }
+        // activations only: weight quantizers are constants by definition
+        if g.is_initializer(&node.inputs[0]) {
+            continue;
+        }
+        if let Ok(sc) = stuck_channels(analysis, node.output()) {
+            if !sc.is_empty() {
+                rows.push((node.output().to_string(), sc));
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sira::SiRange;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn detects_point_channels() {
+        let mut a = Analysis::default();
+        a.ranges.insert(
+            "t".to_string(),
+            SiRange::float(
+                Tensor::new(&[1, 3, 1, 1], vec![0.0, -1.0, 0.48]).unwrap(),
+                Tensor::new(&[1, 3, 1, 1], vec![0.0, 2.0, 0.48]).unwrap(),
+            )
+            .unwrap(),
+        );
+        let sc = stuck_channels(&a, "t").unwrap();
+        assert_eq!(
+            sc,
+            vec![
+                StuckChannel { channel: 0, value: 0.0 },
+                StuckChannel { channel: 2, value: 0.48 }
+            ]
+        );
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let a = Analysis::default();
+        assert!(stuck_channels(&a, "nope").is_err());
+    }
+}

@@ -1,0 +1,636 @@
+//! Threshold conversion (§4.1.3): collapse a quantized layer tail — a
+//! chain of elementwise Mul/Add/Div/ReLU/Clip/Floor ops terminating in a
+//! unit-scale quantizer — into a single MultiThreshold operator.
+//!
+//! Following the paper, the conversion characterises the tail by its
+//! end-to-end behaviour: the tail function is evaluated over the integer
+//! input range reported by SIRA and the thresholds are the step locations
+//! of the resulting piecewise-constant function (found here by binary
+//! search per output level — the tail function is monotone whenever the
+//! paper's "positive unit steps" kernel restriction holds; non-monotone
+//! tails are detected and skipped). Thresholds are rounded up to integers
+//! and clipped to the input range (Eq. 3), right-padded with +inf proxies
+//! (`hi+1`, any value outside the input range) and the sign bias of Eq. 2
+//! is applied through the MultiThreshold output bias.
+
+use anyhow::{bail, Result};
+
+use crate::graph::{Graph, Node, Op, RoundMode};
+use crate::sira::{analyze, quant_bounds, Analysis, SiRange};
+use crate::tensor::{round_half_even, Tensor};
+
+/// One elementwise step of a layer tail, parameterised per channel.
+#[derive(Clone, Debug)]
+enum TailOp {
+    MulC(Tensor),
+    AddC(Tensor),
+    DivC(Tensor),
+    Relu,
+    Clip(f64, f64),
+    Floor,
+}
+
+impl TailOp {
+    fn param(&self, ch: usize) -> f64 {
+        match self {
+            TailOp::MulC(t) | TailOp::AddC(t) | TailOp::DivC(t) => {
+                if t.numel() == 1 {
+                    t.data()[0]
+                } else {
+                    t.data()[ch]
+                }
+            }
+            _ => 0.0,
+        }
+    }
+
+    fn apply(&self, x: f64, ch: usize) -> f64 {
+        match self {
+            TailOp::MulC(_) => x * self.param(ch),
+            TailOp::AddC(_) => x + self.param(ch),
+            TailOp::DivC(_) => x / self.param(ch),
+            TailOp::Relu => x.max(0.0),
+            TailOp::Clip(lo, hi) => x.clamp(*lo, *hi),
+            TailOp::Floor => x.floor(),
+        }
+    }
+}
+
+/// An extracted layer tail: the chain from an integer tensor to (and
+/// including) a unit-scale quantizer.
+struct Tail {
+    /// tensor feeding the tail
+    start: String,
+    /// true when the start tensor is a pure integer per SIRA (enables
+    /// integer threshold rounding, Eq. 3)
+    integer_input: bool,
+    /// indices of the chain nodes (excluding the quantizer)
+    chain_nodes: Vec<usize>,
+    /// quantizer node index
+    quant_node: usize,
+    ops: Vec<TailOp>,
+    /// channels of the tail (1 = per-tensor)
+    channels: usize,
+    signed: bool,
+    narrow: bool,
+    rounding: RoundMode,
+    bits: u32,
+}
+
+impl Tail {
+    /// Evaluate the tail function for channel `ch` at integer input `x`,
+    /// returning the quantizer's integer output level.
+    fn eval(&self, x: f64, ch: usize) -> i64 {
+        let mut v = x;
+        for op in &self.ops {
+            v = op.apply(v, ch);
+        }
+        let (qmin, qmax) = quant_bounds(self.bits, self.signed, self.narrow);
+        let r = match self.rounding {
+            RoundMode::RoundEven => round_half_even(v),
+            RoundMode::Floor => v.floor(),
+            RoundMode::Ceil => v.ceil(),
+        };
+        r.clamp(qmin, qmax) as i64
+    }
+}
+
+/// Report of a conversion run.
+#[derive(Debug, Default, Clone)]
+pub struct ThresholdReport {
+    pub converted: usize,
+    pub skipped_nonmonotone: usize,
+    pub skipped_no_int_input: usize,
+    /// total threshold parameters materialised
+    pub threshold_count: usize,
+}
+
+/// Convert every eligible layer tail in `g` to a MultiThreshold operator.
+/// `input_ranges` are the graph input ranges for the SIRA run.
+pub fn convert_to_thresholds(
+    g: &mut Graph,
+    input_ranges: &std::collections::BTreeMap<String, SiRange>,
+) -> Result<ThresholdReport> {
+    let mut report = ThresholdReport::default();
+    // Anchor at final quantizers, working upwards (reverse topological
+    // order) to fuse maximally-extending subgraphs. Conversions preserve
+    // tensor values and names, so one SIRA run stays valid for every tail
+    // converted in the same sweep (perf: see EXPERIMENTS.md §Perf).
+    loop {
+        let analysis = analyze(g, input_ranges)?;
+        let mut progressed = false;
+        // collect anchor names up front; indices shift as tails collapse
+        let order = g.topo_order()?;
+        let anchors: Vec<String> = order
+            .iter()
+            .rev()
+            .filter(|&&i| matches!(g.nodes[i].op, Op::Quant { .. }))
+            .map(|&i| g.nodes[i].name.clone())
+            .collect();
+        for name in anchors {
+            let Some(qi) = g.nodes.iter().position(|n| n.name == name) else {
+                continue;
+            };
+            let Op::Quant {
+                signed,
+                narrow,
+                rounding,
+            } = g.nodes[qi].op
+            else {
+                continue;
+            };
+            // unit-scale quantizer with zero zero-point only
+            let s_ok = g
+                .initializer(&g.nodes[qi].inputs[1])
+                .map(|t| t.all_eq(1.0))
+                .unwrap_or(false);
+            let z_ok = g
+                .initializer(&g.nodes[qi].inputs[2])
+                .map(|t| t.all_eq(0.0))
+                .unwrap_or(false);
+            if !s_ok || !z_ok {
+                continue;
+            }
+            let bits = g.initializers[&g.nodes[qi].inputs[3]].first() as u32;
+            match extract_tail(g, &analysis, qi, signed, narrow, rounding, bits) {
+                Ok(Some(tail)) => {
+                    if materialise(g, &analysis, tail, &mut report)? {
+                        progressed = true;
+                    }
+                }
+                Ok(None) => {
+                    report.skipped_no_int_input += 1;
+                }
+                Err(_) => {}
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    g.prune_unused_initializers();
+    crate::graph::shapes::infer_shapes(g)?;
+    Ok(report)
+}
+
+/// Walk upstream from the quantizer through elementwise ops to an integer
+/// tensor. Returns None when the walk dead-ends on a non-integer tensor.
+fn extract_tail(
+    g: &Graph,
+    analysis: &Analysis,
+    quant_node: usize,
+    signed: bool,
+    narrow: bool,
+    rounding: RoundMode,
+    bits: u32,
+) -> Result<Option<Tail>> {
+    let mut ops_rev: Vec<TailOp> = Vec::new();
+    let mut chain_nodes: Vec<usize> = Vec::new();
+    let mut cur = g.nodes[quant_node].inputs[0].clone();
+    let mut channels = 1usize;
+
+    // Walk upstream while the producer is an absorbable elementwise op
+    // and the chain tensors are single-use.
+    loop {
+        // stop if `cur` is already a pure integer tensor per SIRA: keep
+        // the tail minimal over the integer domain (Eq. 3 applies)
+        let is_pure_int = analysis
+            .get(&cur)
+            .ok()
+            .and_then(|r| r.int.as_ref().map(|ic| ic.is_pure_integer()))
+            .unwrap_or(false);
+        if is_pure_int {
+            break;
+        }
+        let Some(pi) = g.producer(&cur) else {
+            break; // graph input (float range): continuous thresholds
+        };
+        if g.consumers(&cur).len() != 1 || g.outputs.iter().any(|o| *o == cur) {
+            break; // tail tensors must be single-use
+        }
+        let node = &g.nodes[pi];
+        match &node.op {
+            Op::Relu => {
+                cur = node.inputs[0].clone();
+                chain_nodes.push(pi);
+                ops_rev.push(TailOp::Relu);
+            }
+            Op::Floor => {
+                cur = node.inputs[0].clone();
+                chain_nodes.push(pi);
+                ops_rev.push(TailOp::Floor);
+            }
+            Op::Clip { lo, hi } => {
+                cur = node.inputs[0].clone();
+                chain_nodes.push(pi);
+                ops_rev.push(TailOp::Clip(*lo, *hi));
+            }
+            Op::Mul | Op::Add | Op::Div => {
+                let (ci, di) = match (
+                    g.is_initializer(&node.inputs[0]),
+                    g.is_initializer(&node.inputs[1]),
+                ) {
+                    (false, true) => (1, 0),
+                    (true, false) => {
+                        if matches!(node.op, Op::Div) {
+                            break; // const / dynamic unsupported
+                        }
+                        (0, 1)
+                    }
+                    _ => break,
+                };
+                let param = g.initializers[&node.inputs[ci]].clone();
+                let pn = param.numel();
+                if pn > 1 {
+                    if channels > 1 && channels != pn {
+                        break; // mixed granularities
+                    }
+                    channels = pn;
+                }
+                let op = match node.op {
+                    Op::Mul => TailOp::MulC(param),
+                    Op::Add => TailOp::AddC(param),
+                    Op::Div => TailOp::DivC(param),
+                    _ => unreachable!(),
+                };
+                cur = node.inputs[di].clone();
+                chain_nodes.push(pi);
+                ops_rev.push(op);
+            }
+            _ => break,
+        }
+    }
+    // `cur` is now the tail start: need a usable range.
+    let Ok(r) = analysis.get(&cur) else {
+        return Ok(None);
+    };
+    let integer_input = r
+        .int
+        .as_ref()
+        .map(|ic| ic.is_pure_integer())
+        .unwrap_or(false);
+    if !integer_input && !r.lo.data().iter().all(|v| v.is_finite()) {
+        return Ok(None);
+    }
+    let data_channels = g
+        .shapes
+        .get(&cur)
+        .map(|s| if s.len() >= 2 { s[1] } else { 1 })
+        .unwrap_or(1);
+    if channels > 1 && channels != data_channels {
+        bail!("tail params have {channels} channels, data has {data_channels}");
+    }
+    let chs = if channels > 1 { data_channels } else { 1 };
+    let mut ops = ops_rev;
+    ops.reverse();
+    Ok(Some(Tail {
+        start: cur,
+        integer_input,
+        chain_nodes,
+        quant_node,
+        ops,
+        channels: chs,
+        signed,
+        narrow,
+        rounding,
+        bits,
+    }))
+}
+
+/// Compute thresholds for a tail and rewrite the graph. Returns false if
+/// the tail is non-monotone (left untouched).
+fn materialise(
+    g: &mut Graph,
+    analysis: &Analysis,
+    tail: Tail,
+    report: &mut ThresholdReport,
+) -> Result<bool> {
+    let r = analysis.get(&tail.start)?;
+    let c = tail.channels;
+    // per-channel bounds of the tail input (integer domain when available)
+    let (blo, bhi) = match (&r.int, tail.integer_input) {
+        (Some(ic), true) => (ic.lo.clone(), ic.hi.clone()),
+        _ => (r.lo.clone(), r.hi.clone()),
+    };
+    let (qmin, qmax) = quant_bounds(tail.bits, tail.signed, tail.narrow);
+    let n_levels = (qmax - qmin) as usize;
+
+    // Monotonicity check: sample the tail function per channel.
+    for ch in 0..c {
+        let (lo, hi) = (chan_bound_lo(&blo, ch, c), chan_bound_hi(&bhi, ch, c));
+        let span = (hi - lo).max(1.0);
+        let mut prev = tail.eval(lo, ch);
+        for k in 1..=16 {
+            let x = lo + span * k as f64 / 16.0;
+            let x = if tail.integer_input { x.round() } else { x };
+            let v = tail.eval(x, ch);
+            if v < prev {
+                report.skipped_nonmonotone += 1;
+                return Ok(false);
+            }
+            prev = v;
+        }
+    }
+
+    // Binary search per channel and output level: θ = smallest input with
+    // f(x) >= level. Integer bisection when the input is integer (Eq. 3
+    // rounding/clipping falls out for free); continuous bisection for
+    // float inputs (e.g. the network input quantizer).
+    let mut th = Vec::with_capacity(c * n_levels);
+    for ch in 0..c {
+        let (lo, hi) = (chan_bound_lo(&blo, ch, c), chan_bound_hi(&bhi, ch, c));
+        for k in 1..=n_levels {
+            let level = qmin as i64 + k as i64;
+            if tail.eval(lo, ch) >= level {
+                th.push(lo); // clipped to the input lower bound
+                continue;
+            }
+            if tail.eval(hi, ch) < level {
+                // +inf proxy (right padding): any value outside the range
+                th.push(if tail.integer_input { hi + 1.0 } else { hi * (1.0 + 1e-9) + 1.0 });
+                continue;
+            }
+            if tail.integer_input {
+                let (mut a, mut b) = (lo as i64, hi as i64);
+                while b - a > 1 {
+                    let mid = a + (b - a) / 2;
+                    if tail.eval(mid as f64, ch) >= level {
+                        b = mid;
+                    } else {
+                        a = mid;
+                    }
+                }
+                th.push(b as f64);
+            } else {
+                let (mut a, mut b) = (lo, hi);
+                for _ in 0..100 {
+                    let mid = 0.5 * (a + b);
+                    if tail.eval(mid, ch) >= level {
+                        b = mid;
+                    } else {
+                        a = mid;
+                    }
+                }
+                th.push(b);
+            }
+        }
+    }
+    let th_t = Tensor::new(&[c, n_levels], th)?;
+
+    // Validation: reconstruct f from thresholds on sampled inputs.
+    for ch in 0..c {
+        let (lo, hi) = (chan_bound_lo(&blo, ch, c), chan_bound_hi(&bhi, ch, c));
+        let span = (hi - lo).max(1.0);
+        for k in 0..=24 {
+            let x = (lo + span * k as f64 / 24.0).clamp(lo, hi);
+            let x = if tail.integer_input { x.round().clamp(lo, hi) } else { x };
+            let want = tail.eval(x, ch);
+            let row = &th_t.data()[ch * n_levels..(ch + 1) * n_levels];
+            let got = qmin as i64 + row.iter().filter(|&&t| x >= t).count() as i64;
+            if want != got {
+                report.skipped_nonmonotone += 1;
+                return Ok(false); // behaviour not representable; leave as-is
+            }
+        }
+    }
+
+    // Rewrite: MultiThreshold(start, thresholds) replaces chain + quant.
+    let y = g.nodes[tail.quant_node].outputs[0].clone();
+    let th_name = g.fresh(&format!("{}_thresholds", y));
+    g.add_initializer(&th_name, th_t);
+    let mt = Node {
+        name: g.fresh("MultiThreshold"),
+        op: Op::MultiThreshold {
+            out_scale: 1.0,
+            out_bias: qmin,
+        },
+        inputs: vec![tail.start.clone(), th_name],
+        outputs: vec![y],
+    };
+    // remove quant + chain nodes (by name, indices shift)
+    let mut doomed: Vec<String> = vec![g.nodes[tail.quant_node].name.clone()];
+    doomed.extend(tail.chain_nodes.iter().map(|&i| g.nodes[i].name.clone()));
+    g.nodes.retain(|n| !doomed.contains(&n.name));
+    g.nodes.push(mt);
+    g.prune_unused_initializers();
+    report.converted += 1;
+    report.threshold_count += c * n_levels;
+    Ok(true)
+}
+
+fn chan_bound_lo(t: &Tensor, ch: usize, c: usize) -> f64 {
+    if t.numel() == 1 {
+        t.data()[0]
+    } else if t.numel() == c {
+        t.data()[ch]
+    } else {
+        t.min()
+    }
+}
+
+fn chan_bound_hi(t: &Tensor, ch: usize, c: usize) -> f64 {
+    if t.numel() == 1 {
+        t.data()[0]
+    } else if t.numel() == c {
+        t.data()[ch]
+    } else {
+        t.max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::executor::Executor;
+    use crate::passes::{fold, streamline};
+    use crate::tensor::Tensor;
+
+    fn q_op(signed: bool) -> Op {
+        Op::Quant {
+            signed,
+            narrow: false,
+            rounding: RoundMode::RoundEven,
+        }
+    }
+
+    /// Integer input -> Mul -> Add -> Relu -> Quant(1) tail.
+    fn tail_graph(per_channel: bool) -> (Graph, BTreeMap<String, SiRange>) {
+        let mut g = Graph::new("tail");
+        g.add_input("x", &[1, 3]);
+        let (m, a) = if per_channel {
+            (
+                Tensor::new(&[1, 3], vec![0.05, 0.1, 0.2]).unwrap(),
+                Tensor::new(&[1, 3], vec![-1.0, 0.5, 0.0]).unwrap(),
+            )
+        } else {
+            (Tensor::scalar(0.1), Tensor::scalar(-0.7))
+        };
+        g.add_initializer("m", m);
+        g.add_initializer("a", a);
+        g.add_initializer("one", Tensor::scalar(1.0));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("bits", Tensor::scalar(4.0));
+        g.add_node(Node::new("mul", Op::Mul, &["x", "m"], &["h1"]));
+        g.add_node(Node::new("add", Op::Add, &["h1", "a"], &["h2"]));
+        g.add_node(Node::new("relu", Op::Relu, &["h2"], &["h3"]));
+        g.add_node(Node::new("q", q_op(false), &["h3", "one", "z", "bits"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let mut inputs = BTreeMap::new();
+        // pure-integer input range [-100, 100]
+        inputs.insert(
+            "x".to_string(),
+            SiRange::from_int(
+                Tensor::scalar(-100.0),
+                Tensor::scalar(100.0),
+                Tensor::scalar(1.0),
+                Tensor::scalar(0.0),
+                Default::default(),
+                Default::default(),
+            )
+            .unwrap(),
+        );
+        (g, inputs)
+    }
+
+    fn exhaustive_equivalence(g0: &Graph, g1: &Graph) {
+        let mut e0 = Executor::new(g0).unwrap();
+        let mut e1 = Executor::new(g1).unwrap();
+        for x in -100..=100 {
+            let t = Tensor::new(&[1, 3], vec![x as f64, x as f64, x as f64]).unwrap();
+            let y0 = e0.run_single(&t).unwrap();
+            let y1 = e1.run_single(&t).unwrap();
+            assert_eq!(y0[0].data(), y1[0].data(), "mismatch at x={x}");
+        }
+    }
+
+    #[test]
+    fn converts_per_tensor_tail() {
+        let (g0, inputs) = tail_graph(false);
+        let mut g1 = g0.clone();
+        let rep = convert_to_thresholds(&mut g1, &inputs).unwrap();
+        assert_eq!(rep.converted, 1);
+        assert_eq!(g1.count_op("MultiThreshold"), 1);
+        assert_eq!(g1.count_op("Mul"), 0);
+        assert_eq!(g1.count_op("Quant"), 0);
+        // per-tensor: 1 channel x 15 thresholds
+        let mt = g1.nodes.iter().find(|n| n.op.name() == "MultiThreshold").unwrap();
+        assert_eq!(g1.initializers[&mt.inputs[1]].shape(), &[1, 15]);
+        exhaustive_equivalence(&g0, &g1);
+    }
+
+    #[test]
+    fn converts_per_channel_tail() {
+        let (g0, inputs) = tail_graph(true);
+        let mut g1 = g0.clone();
+        let rep = convert_to_thresholds(&mut g1, &inputs).unwrap();
+        assert_eq!(rep.converted, 1);
+        let mt = g1.nodes.iter().find(|n| n.op.name() == "MultiThreshold").unwrap();
+        assert_eq!(g1.initializers[&mt.inputs[1]].shape(), &[3, 15]);
+        exhaustive_equivalence(&g0, &g1);
+    }
+
+    #[test]
+    fn thresholds_are_integers_within_clip_bounds() {
+        let (_, inputs) = tail_graph(true);
+        let (mut g, _) = tail_graph(true);
+        convert_to_thresholds(&mut g, &inputs).unwrap();
+        let mt = g.nodes.iter().find(|n| n.op.name() == "MultiThreshold").unwrap();
+        let th = &g.initializers[&mt.inputs[1]];
+        assert!(th.is_integral());
+        // Eq. 3: thresholds clipped to [lo, hi+1]
+        assert!(th.data().iter().all(|&t| (-100.0..=101.0).contains(&t)));
+    }
+
+    #[test]
+    fn nonmonotone_tail_is_skipped() {
+        let (mut g, inputs) = tail_graph(false);
+        // negate the scale -> decreasing tail
+        g.initializers.insert("m".to_string(), Tensor::scalar(-0.1));
+        let rep = convert_to_thresholds(&mut g, &inputs).unwrap();
+        assert_eq!(rep.converted, 0);
+        assert!(rep.skipped_nonmonotone >= 1);
+        assert_eq!(g.count_op("Quant"), 1); // untouched
+    }
+
+    #[test]
+    fn float_input_tail_gets_continuous_thresholds() {
+        let (g0, mut inputs) = tail_graph(false);
+        // plain float input range -> continuous-bisection thresholds
+        inputs.insert("x".to_string(), SiRange::scalar(-100.0, 100.0));
+        let mut g1 = g0.clone();
+        let rep = convert_to_thresholds(&mut g1, &inputs).unwrap();
+        assert_eq!(rep.converted, 1);
+        // equivalence on non-integer inputs away from threshold boundaries
+        let mut e0 = Executor::new(&g0).unwrap();
+        let mut e1 = Executor::new(&g1).unwrap();
+        for i in 0..100 {
+            let v = -99.5 + 2.0 * i as f64 + 0.137;
+            let t = Tensor::new(&[1, 3], vec![v, v, v]).unwrap();
+            let y0 = e0.run_single(&t).unwrap();
+            let y1 = e1.run_single(&t).unwrap();
+            assert_eq!(y0[0].data(), y1[0].data(), "mismatch at {v}");
+        }
+    }
+
+    #[test]
+    fn full_streamline_then_threshold_pipeline() {
+        // End-to-end: the Fig 7 layer through extraction + streamlining +
+        // threshold conversion, equivalence checked on float inputs.
+        use crate::graph::Node;
+        let mut g = Graph::new("layer");
+        g.add_input("x", &[1, 2]);
+        for (n, t) in [
+            ("qs_x", Tensor::scalar(0.7)),
+            ("z", Tensor::scalar(0.0)),
+            ("b4", Tensor::scalar(4.0)),
+            ("qs_w", Tensor::new(&[1, 3], vec![0.2, 0.3, 0.1]).unwrap()),
+            (
+                "W",
+                Tensor::new(&[2, 3], vec![-1.4, 0.9, -1.3, 1.2, 0.0, -0.7]).unwrap(),
+            ),
+            ("B", Tensor::new(&[1, 3], vec![-3.3, 1.1, 0.0]).unwrap()),
+            ("M", Tensor::new(&[1, 3], vec![0.6, 0.2, 0.4]).unwrap()),
+            ("N", Tensor::new(&[1, 3], vec![-0.2, -0.4, 1.1]).unwrap()),
+            ("qs_y", Tensor::scalar(0.1)),
+        ] {
+            g.add_initializer(n, t);
+        }
+        g.add_node(Node::new("qx", q_op(true), &["x", "qs_x", "z", "b4"], &["xq"]));
+        g.add_node(Node::new("qw", q_op(true), &["W", "qs_w", "z", "b4"], &["wq"]));
+        g.add_node(Node::new("mm", Op::MatMul, &["xq", "wq"], &["h"]));
+        g.add_node(Node::new("addb", Op::Add, &["h", "B"], &["hb"]));
+        g.add_node(Node::new("mulm", Op::Mul, &["hb", "M"], &["hm"]));
+        g.add_node(Node::new("addn", Op::Add, &["hm", "N"], &["hn"]));
+        g.add_node(Node::new("relu", Op::Relu, &["hn"], &["hr"]));
+        g.add_node(Node::new("qy", q_op(false), &["hr", "qs_y", "z", "b4"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+
+        let g0 = g.clone();
+        streamline::extract_quant_scales(&mut g).unwrap();
+        fold::duplicate_shared_initializers(&mut g).unwrap();
+        streamline::streamline(&mut g).unwrap();
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), SiRange::scalar(-6.0, 6.0));
+        let rep = convert_to_thresholds(&mut g, &inputs).unwrap();
+        assert_eq!(rep.converted, 2, "input quant + layer tail"); // qx & qy
+        assert_eq!(g.count_op("Quant"), 0);
+        g.check().unwrap();
+
+        // equivalence on a float grid
+        let mut e0 = Executor::new(&g0).unwrap();
+        let mut e1 = Executor::new(&g).unwrap();
+        for i in 0..60 {
+            let a = -6.0 + 0.2 * i as f64;
+            let t = Tensor::new(&[1, 2], vec![a, -a * 0.5]).unwrap();
+            let y0 = e0.run_single(&t).unwrap();
+            let y1 = e1.run_single(&t).unwrap();
+            for (u, v) in y0[0].data().iter().zip(y1[0].data()) {
+                assert!((u - v).abs() < 1e-9, "{u} vs {v} at {a}");
+            }
+        }
+    }
+}

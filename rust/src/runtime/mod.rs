@@ -1,0 +1,175 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from rust via the `xla`
+//! crate. After `make artifacts`, inference is pure rust — python never
+//! appears on the request path.
+//!
+//! Interchange is HLO *text* (not serialized HloModuleProto): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A compiled PJRT executable for one model artifact.
+pub struct PjrtModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+/// The PJRT client wrapper (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &str) -> Result<PjrtModel> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text '{path}' (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling '{path}'"))?;
+        Ok(PjrtModel {
+            exe,
+            path: path.to_string(),
+        })
+    }
+}
+
+impl PjrtModel {
+    /// Execute with f32 tensor inputs; returns f64 tensors (the artifacts
+    /// are lowered from f32 JAX functions with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let data: Vec<f32> = t.data().iter().map(|&v| v as f32).collect();
+                let lit = xla::Literal::vec1(&data);
+                lit.reshape(&t.shape().iter().map(|&d| d as i64).collect::<Vec<_>>())
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let mut out = result[0][0].to_literal_sync()?;
+        // jax lowering uses return_tuple=True: unpack the tuple
+        let elements = out.decompose_tuple()?;
+        if elements.is_empty() {
+            bail!("executable returned an empty tuple");
+        }
+        elements
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data: Vec<f32> = lit.to_vec::<f32>()?;
+                Tensor::new(&dims, data.into_iter().map(|v| v as f64).collect())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/model.hlo.txt").exists()
+    }
+
+    #[test]
+    fn loads_and_runs_reference_model() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let m = rt.load_hlo_text("artifacts/model.hlo.txt").unwrap();
+        let x = Tensor::full(&[1, 3, 8, 8], 128.0);
+        let y = m.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(y[0].shape(), &[1, 10]);
+        assert!(y[0].data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn streamlined_artifact_matches_reference() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let reference = rt.load_hlo_text("artifacts/model.hlo.txt").unwrap();
+        let streamlined = rt
+            .load_hlo_text("artifacts/model_streamlined.hlo.txt")
+            .unwrap();
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..4 {
+            let x = Tensor::new(
+                &[1, 3, 8, 8],
+                (0..192).map(|_| rng.int_in(0, 255) as f64).collect(),
+            )
+            .unwrap();
+            let yr = reference.run(std::slice::from_ref(&x)).unwrap();
+            let ys = streamlined.run(std::slice::from_ref(&x)).unwrap();
+            for (a, b) in yr[0].data().iter().zip(ys[0].data()) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pallas_multithreshold_artifact_matches_rust_executor() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        use crate::graph::Op;
+        let rt = Runtime::cpu().unwrap();
+        let m = rt.load_hlo_text("artifacts/multithreshold.hlo.txt").unwrap();
+        // thresholds baked into the artifact; sidecar carries the values
+        let text = std::fs::read_to_string("artifacts/multithreshold_params.json").unwrap();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        let th_rows = v.get("thresholds").unwrap().as_arr().unwrap();
+        let n = th_rows[0].as_arr().unwrap().len();
+        let c = th_rows.len();
+        let th = Tensor::new(&[c, n], v.get("thresholds").unwrap().as_f64_vec().unwrap()).unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x = Tensor::new(
+            &[8, c],
+            (0..8 * c).map(|_| rng.int_in(-80, 80) as f64).collect(),
+        )
+        .unwrap();
+        let y_pjrt = m.run(std::slice::from_ref(&x)).unwrap();
+        let y_rust = crate::executor::execute_op(
+            &Op::MultiThreshold {
+                out_scale: 1.0,
+                out_bias: 0.0,
+            },
+            &[x, th],
+        )
+        .unwrap();
+        assert_eq!(y_pjrt[0].data(), y_rust[0].data());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo_text("artifacts/nope.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("expected load failure"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

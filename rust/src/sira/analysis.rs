@@ -1,0 +1,257 @@
+//! The SIRA analysis driver: a node-by-node walk of the topologically
+//! sorted graph (Listing 1 of the paper), maintaining a dictionary from
+//! tensor name to [`SiRange`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::graph::{DataType, Graph};
+
+use super::propagate::propagate_node;
+use super::range::SiRange;
+
+/// Result of a SIRA run: scaled-integer ranges for every tensor.
+#[derive(Clone, Debug, Default)]
+pub struct Analysis {
+    pub ranges: BTreeMap<String, SiRange>,
+}
+
+impl Analysis {
+    pub fn get(&self, tensor: &str) -> Result<&SiRange> {
+        self.ranges
+            .get(tensor)
+            .with_context(|| format!("no analyzed range for tensor '{tensor}'"))
+    }
+
+    /// Tensors whose range is a point interval (candidates for stuck
+    /// channel removal, §7.1, are per-channel points inside these).
+    pub fn point_tensors(&self) -> Vec<&str> {
+        self.ranges
+            .iter()
+            .filter(|(_, r)| r.is_point())
+            .map(|(k, _)| k.as_str())
+            .collect()
+    }
+}
+
+/// Run SIRA over `g`. `input_ranges` must provide a range for every graph
+/// input; initializers are automatically treated as point ranges. Graph
+/// shapes must already be inferred ([`crate::graph::shapes::infer_shapes`]).
+pub fn analyze(g: &Graph, input_ranges: &BTreeMap<String, SiRange>) -> Result<Analysis> {
+    let mut ranges: BTreeMap<String, SiRange> = BTreeMap::new();
+    for inp in &g.inputs {
+        let r = input_ranges
+            .get(inp)
+            .with_context(|| format!("missing input range for '{inp}'"))?;
+        ranges.insert(inp.clone(), r.clone());
+    }
+    for (name, t) in &g.initializers {
+        ranges.insert(name.clone(), SiRange::point(t));
+    }
+    for node in g.topo_nodes()? {
+        let ins: Vec<&SiRange> = node
+            .inputs
+            .iter()
+            .map(|i| {
+                ranges
+                    .get(i)
+                    .with_context(|| format!("node '{}' reads unanalyzed tensor '{i}'", node.name))
+            })
+            .collect::<Result<_>>()?;
+        let outs = propagate_node(g, node, &ins)
+            .with_context(|| format!("propagating node '{}' ({})", node.name, node.op.name()))?;
+        for (o, r) in node.outputs.iter().zip(outs) {
+            debug_assert!(r.check_invariant().is_ok(), "invariant violated at {o}");
+            ranges.insert(o.clone(), r);
+        }
+    }
+    Ok(Analysis { ranges })
+}
+
+/// Range implied by a datatype annotation (e.g. for UINT8 image inputs).
+pub fn range_of_dtype(dt: DataType) -> SiRange {
+    SiRange::scalar(dt.min_value(), dt.max_value())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::graph::{Graph, Node, Op, RoundMode};
+    use crate::sira::range::SiRange;
+    use crate::tensor::Tensor;
+
+    /// Build the lowered QNN layer of Fig. 7 with the Table 2 inputs.
+    /// X --Quant(qs_X)--> X_q --MatMul(W_q)--> M_o --Add(B)--> A_o
+    ///   --Mul(M)--> Mu_o --Add(N)--> N_o --Relu--> R_o --Quant(qs_Y)--> Y
+    pub fn fig7_graph() -> (Graph, BTreeMap<String, SiRange>) {
+        let mut g = Graph::new("fig7");
+        g.add_input("X", &[1, 2]);
+        // Quant params for X: per-tensor scale 0.7, signed 4-bit
+        g.add_initializer("qs_X", Tensor::scalar(0.7));
+        g.add_initializer("z0", Tensor::scalar(0.0));
+        g.add_initializer("b4", Tensor::scalar(4.0));
+        let q = |signed| Op::Quant {
+            signed,
+            narrow: false,
+            rounding: RoundMode::RoundEven,
+        };
+        g.add_node(Node::new("QuantX", q(true), &["X", "qs_X", "z0", "b4"], &["X_q"]));
+        // Weights W (2,3) quantized per-channel with scales (0.2, 0.3, 0.1)
+        g.add_initializer(
+            "W",
+            Tensor::new(&[2, 3], vec![-2.1, 5.0, -1.3, 3.1, 0.0, -3.2]).unwrap(),
+        );
+        g.add_initializer("qs_W", Tensor::new(&[1, 3], vec![0.2, 0.3, 0.1]).unwrap());
+        g.add_node(Node::new("QuantW", q(true), &["W", "qs_W", "z0", "b4"], &["W_q"]));
+        g.add_node(Node::new("MatMul0", Op::MatMul, &["X_q", "W_q"], &["MM"]));
+        // Gemm bias B, BatchNorm lowered to Mul(M) + Add(N)
+        g.add_initializer("B", Tensor::new(&[1, 3], vec![-3.3, 1.1, 0.0]).unwrap());
+        g.add_node(Node::new("AddB", Op::Add, &["MM", "B"], &["AB"]));
+        g.add_initializer("M", Tensor::new(&[1, 3], vec![0.6, 0.2, 0.4]).unwrap());
+        g.add_node(Node::new("MulM", Op::Mul, &["AB", "M"], &["MU"]));
+        g.add_initializer("N", Tensor::new(&[1, 3], vec![-0.2, -0.4, 1.1]).unwrap());
+        g.add_node(Node::new("AddN", Op::Add, &["MU", "N"], &["NO"]));
+        g.add_node(Node::new("Relu0", Op::Relu, &["NO"], &["RO"]));
+        g.add_initializer("qs_Y", Tensor::scalar(0.1));
+        g.add_node(Node::new("QuantY", q(false), &["RO", "qs_Y", "z0", "b4"], &["Y"]));
+        g.outputs.push("Y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+
+        let mut inputs = BTreeMap::new();
+        inputs.insert(
+            "X".to_string(),
+            SiRange::float(
+                Tensor::new(&[1, 2], vec![-5.1, -3.8]).unwrap(),
+                Tensor::new(&[1, 2], vec![5.1, 3.8]).unwrap(),
+            )
+            .unwrap(),
+        );
+        (g, inputs)
+    }
+
+    #[test]
+    fn worked_example_quant_x() {
+        let (g, inputs) = fig7_graph();
+        let a = analyze(&g, &inputs).unwrap();
+        let xq = a.get("X_q").unwrap();
+        let ic = xq.int.as_ref().unwrap();
+        // round(-5.1/0.7) = -7, round(5.1/0.7) = 7; round(±3.8/0.7) = ±5
+        assert_eq!(ic.lo.data(), &[-7.0, -5.0]);
+        assert_eq!(ic.hi.data(), &[7.0, 5.0]);
+        assert_eq!(ic.scale.data(), &[0.7]);
+        assert!(ic.zero_bias());
+        assert!(ic.scale_contribs.contains("qs_X"));
+        // value range = 0.7 * int range
+        assert!((xq.lo.data()[0] + 4.9).abs() < 1e-12);
+        assert!((xq.hi.data()[1] - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worked_example_quant_w_clips() {
+        let (g, inputs) = fig7_graph();
+        let a = analyze(&g, &inputs).unwrap();
+        let wq = a.get("W_q").unwrap();
+        let ic = wq.int.as_ref().unwrap();
+        assert!(wq.is_point());
+        // -2.1/0.2 = -10.5 -> round-even -10 -> clip -8; 3.1/0.2 = 15.5 -> 16 -> clip 7
+        assert_eq!(ic.lo.data(), &[-8.0, 7.0, -8.0, 7.0, 0.0, -8.0]);
+    }
+
+    #[test]
+    fn worked_example_matmul() {
+        let (g, inputs) = fig7_graph();
+        let a = analyze(&g, &inputs).unwrap();
+        let mm = a.get("MM").unwrap();
+        let ic = mm.int.as_ref().unwrap();
+        // miv/mav over integer ranges: columns (±91, ±49, ±96)
+        assert_eq!(ic.lo.data(), &[-91.0, -49.0, -96.0]);
+        assert_eq!(ic.hi.data(), &[91.0, 49.0, 96.0]);
+        // s_Y = s_X * s_W = (0.14, 0.21, 0.07)
+        for (s, e) in ic.scale.data().iter().zip([0.14, 0.21, 0.07]) {
+            assert!((s - e).abs() < 1e-12);
+        }
+        assert!(ic.zero_bias());
+        // accumulator example of Fig. 12: max |..| = 96 -> 8 bits
+        assert_eq!(crate::util::bits_for_range(-96, 96), 8);
+    }
+
+    #[test]
+    fn worked_example_layer_tail_scale_bias() {
+        let (g, inputs) = fig7_graph();
+        let a = analyze(&g, &inputs).unwrap();
+        // After Add(B): bias = B; after Mul(M): scale = s*M, bias = B*M;
+        // after Add(N): bias = B*M + N.
+        let no = a.get("NO").unwrap();
+        let ic = no.int.as_ref().unwrap();
+        let exp_scale = [0.14 * 0.6, 0.21 * 0.2, 0.07 * 0.4];
+        let exp_bias = [
+            -3.3 * 0.6 - 0.2,
+            1.1 * 0.2 - 0.4,
+            0.0 * 0.4 + 1.1,
+        ];
+        for (s, e) in ic.scale.data().iter().zip(exp_scale) {
+            assert!((s - e).abs() < 1e-12, "scale {s} vs {e}");
+        }
+        for (b, e) in ic.bias.data().iter().zip(exp_bias) {
+            assert!((b - e).abs() < 1e-12, "bias {b} vs {e}");
+        }
+        // contribution history: scale fed by qs_X, qs_W, M; bias by B, M, N
+        assert!(ic.scale_contribs.contains("qs_X"));
+        assert!(ic.scale_contribs.contains("qs_W"));
+        assert!(ic.scale_contribs.contains("M"));
+        assert!(ic.bias_contribs.contains("B"));
+        assert!(ic.bias_contribs.contains("M"));
+        assert!(ic.bias_contribs.contains("N"));
+        // integer range unchanged through the affine tail
+        assert_eq!(ic.lo.data(), &[-91.0, -49.0, -96.0]);
+    }
+
+    #[test]
+    fn worked_example_relu_drops_int() {
+        let (g, inputs) = fig7_graph();
+        let a = analyze(&g, &inputs).unwrap();
+        let ro = a.get("RO").unwrap();
+        assert!(ro.int.is_none());
+        assert!(ro.lo.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn worked_example_output_quant() {
+        let (g, inputs) = fig7_graph();
+        let a = analyze(&g, &inputs).unwrap();
+        let y = a.get("Y").unwrap();
+        let ic = y.int.as_ref().unwrap();
+        assert_eq!(ic.scale.data(), &[0.1]);
+        assert!(ic.zero_bias());
+        // unsigned 4-bit: q in [0, 15]
+        assert!(ic.lo.data().iter().all(|&v| v >= 0.0));
+        assert!(ic.hi.data().iter().all(|&v| v <= 15.0));
+        // col0 pre-activation max 91*0.084 - 2.18 = 5.464 -> q = 15 (sat)
+        assert_eq!(ic.hi.data()[0], 15.0);
+        y.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn all_ranges_satisfy_invariant() {
+        let (g, inputs) = fig7_graph();
+        let a = analyze(&g, &inputs).unwrap();
+        for (name, r) in &a.ranges {
+            r.check_invariant().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn missing_input_range_errors() {
+        let (g, _) = fig7_graph();
+        assert!(analyze(&g, &BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn dtype_range_for_inputs() {
+        let r = range_of_dtype(DataType::UInt(8));
+        assert_eq!(r.bounds(), (0.0, 255.0));
+    }
+}

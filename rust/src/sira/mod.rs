@@ -1,0 +1,15 @@
+//! SIRA — scaled-integer range analysis (§3 of the paper).
+//!
+//! Applies interval arithmetic to a trained QNN graph, tracking for every
+//! tensor (1) its possible value range, (2) the underlying integer
+//! component's range with the affine scale/bias mapping, and (3) which
+//! graph tensors contributed to the scale and bias (the contribution
+//! history driving the aggregation pass of §4.1.2).
+
+pub mod analysis;
+pub mod propagate;
+pub mod range;
+
+pub use analysis::{analyze, range_of_dtype, Analysis};
+pub use propagate::{propagate_node, quant_bounds};
+pub use range::{IntComponent, SiRange};

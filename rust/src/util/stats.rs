@@ -1,0 +1,121 @@
+//! Small statistics helpers: summary statistics, histograms and ordinary
+//! least-squares linear regression (used to fit the analytical cost models
+//! of §5.4 against the structural synthesis estimator, mirroring the
+//! paper's regression over Vivado out-of-context runs).
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (sorts a copy).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n == 0 {
+        f64::NAN
+    } else if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Mean relative error |pred - obs| / obs, skipping zero observations.
+/// This is the MRE metric the paper reports for Figs. 18 and 19.
+pub fn mean_relative_error(pred: &[f64], obs: &[f64]) -> f64 {
+    assert_eq!(pred.len(), obs.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (&p, &o) in pred.iter().zip(obs) {
+        if o != 0.0 {
+            total += ((p - o) / o).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        total / n as f64
+    }
+}
+
+/// Simple OLS fit y = alpha * x + beta. Returns (alpha, beta).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, sy / n);
+    }
+    let alpha = (n * sxy - sx * sy) / denom;
+    let beta = (sy - alpha * sx) / n;
+    (alpha, beta)
+}
+
+/// Histogram over integer-valued samples; returns (value, count) sorted.
+pub fn int_histogram(xs: &[u32]) -> Vec<(u32, usize)> {
+    let mut map = std::collections::BTreeMap::new();
+    for &x in xs {
+        *map.entry(x).or_insert(0usize) += 1;
+    }
+    map.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn linreg_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 7.0).collect();
+        let (a, b) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mre_basics() {
+        let pred = [110.0, 95.0];
+        let obs = [100.0, 100.0];
+        assert!((mean_relative_error(&pred, &obs) - 0.075).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = int_histogram(&[8, 8, 10, 24]);
+        assert_eq!(h, vec![(8, 2), (10, 1), (24, 1)]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration tests over the full compile pipeline (frontend + backend)
+//! plus failure-injection for accumulator overflow detection.
+
+use std::collections::BTreeMap;
+
+use sira_finn::accel::{compile_qnn, CompileOptions, TailStyle};
+use sira_finn::executor::{ExecOptions, Executor};
+use sira_finn::graph::DataType;
+use sira_finn::hw::{EwDtype, ThresholdStyle};
+use sira_finn::models;
+use sira_finn::passes::accmin::AccPolicy;
+use sira_finn::tensor::Tensor;
+use sira_finn::util::rng::Rng;
+
+fn opts(tail: TailStyle, acc: AccPolicy) -> CompileOptions {
+    CompileOptions {
+        tail_style: tail,
+        acc_policy: acc,
+        target_cycles: 1 << 14,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_zoo_models_compile_under_all_configs() {
+    for m in [
+        models::tfc_w2a2().unwrap(),
+        models::cnv_w2a2().unwrap(),
+        models::rn8_w3a3().unwrap(),
+    ] {
+        for tail in [
+            TailStyle::Thresholding(ThresholdStyle::BinarySearch),
+            TailStyle::Thresholding(ThresholdStyle::Parallel),
+            TailStyle::Composite(EwDtype::Fixed(16, 8)),
+            TailStyle::Composite(EwDtype::Float32),
+        ] {
+            for acc in [AccPolicy::Bound32, AccPolicy::Datatype, AccPolicy::Sira] {
+                let c = compile_qnn(m.graph.clone(), &m.input_ranges, &opts(tail, acc))
+                    .unwrap_or_else(|e| panic!("{} {tail:?} {acc:?}: {e:#}", m.name));
+                assert!(c.fdna.total.lut > 0.0);
+                assert!(c.fdna.perf.fps > 0.0);
+                assert!(c.fdna.perf.ii_cycles <= (1 << 14) + 1);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_thresholding_costs_more_compute_than_binary_search() {
+    let m = models::tfc_w2a2().unwrap();
+    let bin = compile_qnn(
+        m.graph.clone(),
+        &m.input_ranges,
+        &opts(TailStyle::Thresholding(ThresholdStyle::BinarySearch), AccPolicy::Sira),
+    )
+    .unwrap();
+    let m = models::tfc_w2a2().unwrap();
+    let par = compile_qnn(
+        m.graph,
+        &m.input_ranges,
+        &opts(TailStyle::Thresholding(ThresholdStyle::Parallel), AccPolicy::Sira),
+    )
+    .unwrap();
+    assert!(
+        par.fdna.non_mac.lut >= bin.fdna.non_mac.lut,
+        "parallel {} < binary {}",
+        par.fdna.non_mac.lut,
+        bin.fdna.non_mac.lut
+    );
+}
+
+#[test]
+fn executor_validates_sira_accumulator_widths_on_real_traffic() {
+    // annotate the streamlined TFC with SIRA widths and run with dtype
+    // verification: no overflow may occur on any sampled input
+    let m = models::tfc_w2a2().unwrap();
+    let c = compile_qnn(
+        m.graph,
+        &m.input_ranges,
+        &opts(TailStyle::Thresholding(ThresholdStyle::BinarySearch), AccPolicy::Sira),
+    )
+    .unwrap();
+    let mut exec = Executor::with_options(
+        &c.graph,
+        ExecOptions {
+            instrument: false,
+            verify_dtypes: true,
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(77);
+    for _ in 0..6 {
+        let x = Tensor::new(
+            &[1, 784],
+            (0..784).map(|_| rng.int_in(0, 255) as f64).collect(),
+        )
+        .unwrap();
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), x);
+        exec.run_env(&inputs).unwrap(); // must not report overflow
+    }
+}
+
+#[test]
+fn failure_injection_undersized_accumulator_is_caught() {
+    // shrink one MAC accumulator annotation below the SIRA bound and
+    // drive the network with extreme inputs: verification must trip
+    let m = models::tfc_w2a2().unwrap();
+    let c = compile_qnn(
+        m.graph,
+        &m.input_ranges,
+        &opts(TailStyle::Thresholding(ThresholdStyle::BinarySearch), AccPolicy::Sira),
+    )
+    .unwrap();
+    let mut g = c.graph.clone();
+    // find the first MAC output annotation and halve its width
+    let mm_out = g
+        .nodes
+        .iter()
+        .find(|n| n.op.is_mac())
+        .map(|n| n.outputs[0].clone())
+        .unwrap();
+    let orig = g.dtypes[&mm_out];
+    g.dtypes.insert(mm_out.clone(), DataType::Int(orig.bits() / 2));
+
+    let mut exec = Executor::with_options(
+        &g,
+        ExecOptions {
+            instrument: false,
+            verify_dtypes: true,
+        },
+    )
+    .unwrap();
+    // extreme input: all 255s maximizes the first-layer accumulators
+    let x = Tensor::full(&[1, 784], 255.0);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("x".to_string(), x);
+    let err = exec.run_env(&inputs).err().expect("undersized accumulator must be detected");
+    assert!(err.to_string().contains("overflow"), "{err}");
+}
+
+#[test]
+fn fps_is_invariant_across_optimizations() {
+    // §7.2: "the degree of parallelization for each network stays
+    // constant across optimizations, and we do not see differences in
+    // throughput and latency"
+    let mut fps = Vec::new();
+    for (acc, thr) in [(false, false), (true, true)] {
+        let m = models::cnv_w2a2().unwrap();
+        let tail = if thr {
+            TailStyle::Thresholding(ThresholdStyle::BinarySearch)
+        } else {
+            TailStyle::Composite(EwDtype::Fixed(16, 8))
+        };
+        let pol = if acc { AccPolicy::Sira } else { AccPolicy::Datatype };
+        let c = compile_qnn(m.graph, &m.input_ranges, &opts(tail, pol)).unwrap();
+        fps.push(c.fdna.perf.fps);
+    }
+    let ratio = fps[1] / fps[0];
+    assert!((0.9..=1.6).contains(&ratio), "fps ratio {ratio}");
+}
+
+#[test]
+fn sidecar_roundtrip_compiles_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/model_params.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let m = sira_finn::models::sidecar::load_sidecar_file("artifacts/model_params.json").unwrap();
+    let c = compile_qnn(
+        m.graph,
+        &m.input_ranges,
+        &opts(TailStyle::Thresholding(ThresholdStyle::BinarySearch), AccPolicy::Sira),
+    )
+    .unwrap();
+    assert!(c.thr_report.unwrap().converted >= 2);
+}

@@ -1,0 +1,220 @@
+//! Property tests (in-repo proptest substrate, seeded generation): SIRA
+//! soundness. For randomly generated QNN graphs and randomly sampled
+//! inputs within the declared input ranges, every executed intermediate
+//! tensor must fall inside its analyzed range, and the affine
+//! scale/bias invariant must hold for every scaled-integer range.
+
+use std::collections::BTreeMap;
+
+use sira_finn::executor::Executor;
+use sira_finn::graph::{Graph, Node, Op, RoundMode};
+use sira_finn::models::{Granularity, QnnBuilder};
+use sira_finn::sira::{analyze, SiRange};
+use sira_finn::tensor::Tensor;
+use sira_finn::util::rng::Rng;
+
+/// Generate a random small QNN (random layer kinds / widths / bitwidths).
+fn random_qnn(seed: u64) -> (Graph, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let conv_input = rng.chance(0.5);
+    let mut b = QnnBuilder::new("prop", seed ^ 0x51AA);
+    let in_shape: Vec<usize> = if conv_input {
+        let hw = *rng.choose(&[4usize, 6, 8]);
+        vec![1, *rng.choose(&[1usize, 2, 3]), hw, hw]
+    } else {
+        vec![1, *rng.choose(&[4usize, 8, 12])]
+    };
+    b.input("x", &in_shape);
+    b.quant_act(8, rng.chance(0.5), Granularity::PerTensor, 255.0);
+    let layers = rng.int_in(1, 3);
+    for li in 0..layers {
+        let wbits = rng.int_in(2, 6) as u32;
+        let abits = rng.int_in(2, 5) as u32;
+        let gran = if rng.chance(0.5) {
+            Granularity::PerChannel
+        } else {
+            Granularity::PerTensor
+        };
+        if b.current_shape().len() == 4 {
+            let ch = *rng.choose(&[2usize, 4, 6]);
+            let depthwise = rng.chance(0.25);
+            let stride = if rng.chance(0.3) { 2 } else { 1 };
+            b.conv(ch, 3, stride, 1, wbits, gran, depthwise);
+            b.batchnorm();
+            b.relu();
+            b.quant_act(abits, false, Granularity::PerTensor, 8.0);
+            if rng.chance(0.3) && b.current_shape()[2] >= 2 && b.current_shape()[2] % 2 == 0 {
+                b.maxpool(2);
+            }
+            if li == layers - 1 {
+                b.global_avgpool();
+                b.flatten();
+            }
+        } else {
+            b.linear(*rng.choose(&[4usize, 8, 10]), wbits, gran, rng.chance(0.5));
+            b.batchnorm();
+            b.relu();
+            b.quant_act(abits, false, Granularity::PerTensor, 8.0);
+        }
+    }
+    b.linear(5, 8, Granularity::PerTensor, true);
+    (b.finish().unwrap(), in_shape)
+}
+
+fn uint8_range() -> SiRange {
+    SiRange::from_int(
+        Tensor::scalar(0.0),
+        Tensor::scalar(255.0),
+        Tensor::scalar(1.0),
+        Tensor::scalar(0.0),
+        Default::default(),
+        Default::default(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn sampled_executions_stay_within_analyzed_ranges() {
+    for seed in 0..24u64 {
+        let (g, in_shape) = random_qnn(seed);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), uint8_range());
+        let analysis = analyze(&g, &inputs).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+
+        let mut rng = Rng::new(seed ^ 0xEEE);
+        let numel: usize = in_shape.iter().product();
+        let mut exec = Executor::new(&g).unwrap();
+        for _ in 0..4 {
+            let x = Tensor::new(
+                &in_shape,
+                (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+            )
+            .unwrap();
+            let mut m = BTreeMap::new();
+            m.insert("x".to_string(), x);
+            let env = exec.run_env(&m).unwrap();
+            for (tensor, value) in &env {
+                let Ok(r) = analysis.get(tensor) else { continue };
+                // check every element against the (broadcast) range
+                let lo = r.lo.broadcast_to(value.shape()).unwrap_or_else(|_| r.lo.clone());
+                let hi = r.hi.broadcast_to(value.shape()).unwrap_or_else(|_| r.hi.clone());
+                if lo.numel() == value.numel() {
+                    for i in 0..value.numel() {
+                        let v = value.data()[i];
+                        assert!(
+                            v >= lo.data()[i] - 1e-6 && v <= hi.data()[i] + 1e-6,
+                            "seed {seed}, tensor {tensor}[{i}]: {v} outside [{}, {}]",
+                            lo.data()[i],
+                            hi.data()[i]
+                        );
+                    }
+                } else {
+                    let (rl, rh) = r.bounds();
+                    assert!(
+                        value.min() >= rl - 1e-6 && value.max() <= rh + 1e-6,
+                        "seed {seed}, tensor {tensor}: [{}, {}] outside [{rl}, {rh}]",
+                        value.min(),
+                        value.max()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_analyzed_ranges_satisfy_affine_invariant() {
+    for seed in 24..40u64 {
+        let (g, _) = random_qnn(seed);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), uint8_range());
+        let analysis = analyze(&g, &inputs).unwrap();
+        for (name, r) in &analysis.ranges {
+            r.check_invariant()
+                .unwrap_or_else(|e| panic!("seed {seed}, tensor {name}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn matmul_interval_bound_is_achievable_with_extreme_inputs() {
+    // tightness property (§2.4.2): feeding the minimizing/maximizing
+    // input vectors achieves the analyzed bound exactly for MatMul.
+    for seed in 0..16u64 {
+        let mut rng = Rng::new(seed ^ 0x7157);
+        let (k, m) = (rng.int_in(1, 6) as usize, rng.int_in(1, 5) as usize);
+        let w = Tensor::new(
+            &[k, m],
+            (0..k * m).map(|_| rng.int_in(-7, 7) as f64).collect(),
+        )
+        .unwrap();
+        let (lo_v, hi_v) = (rng.int_in(-9, 0) as f64, rng.int_in(0, 9) as f64);
+        let mut g = Graph::new("mm");
+        g.add_input("x", &[1, k]);
+        g.add_initializer("w", w.clone());
+        g.add_node(Node::new("mm", Op::MatMul, &["x", "w"], &["y"]));
+        g.outputs.push("y".into());
+        sira_finn::graph::shapes::infer_shapes(&mut g).unwrap();
+
+        let mut inputs = BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            SiRange::from_int(
+                Tensor::scalar(lo_v),
+                Tensor::scalar(hi_v),
+                Tensor::scalar(1.0),
+                Tensor::scalar(0.0),
+                Default::default(),
+                Default::default(),
+            )
+            .unwrap(),
+        );
+        let a = analyze(&g, &inputs).unwrap();
+        let r = a.get("y").unwrap();
+        // minimizing vector for output column 0
+        let mut x_min = vec![0.0; k];
+        let mut x_max = vec![0.0; k];
+        for kk in 0..k {
+            let wv = w.data()[kk * m];
+            x_min[kk] = if wv >= 0.0 { lo_v } else { hi_v };
+            x_max[kk] = if wv >= 0.0 { hi_v } else { lo_v };
+        }
+        let mut exec = Executor::new(&g).unwrap();
+        let y_min = exec
+            .run_single(&Tensor::new(&[1, k], x_min).unwrap())
+            .unwrap()[0]
+            .data()[0];
+        let y_max = exec
+            .run_single(&Tensor::new(&[1, k], x_max).unwrap())
+            .unwrap()[0]
+            .data()[0];
+        let lo0 = r.lo.data()[0];
+        let hi0 = r.hi.data()[0];
+        assert_eq!(y_min, lo0, "seed {seed}: lower bound not tight");
+        assert_eq!(y_max, hi0, "seed {seed}: upper bound not tight");
+    }
+}
+
+#[test]
+fn quant_output_never_escapes_datatype_bounds() {
+    // property: analyzed Quant ranges always lie within the quantizer's
+    // own representable interval
+    for seed in 0..20u64 {
+        let (g, _) = random_qnn(seed);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), uint8_range());
+        let a = analyze(&g, &inputs).unwrap();
+        for node in &g.nodes {
+            let Op::Quant { signed, narrow, .. } = node.op else {
+                continue;
+            };
+            let bits = g.initializers[&node.inputs[3]].first() as u32;
+            let (qmin, qmax) = sira_finn::sira::quant_bounds(bits, signed, narrow);
+            let r = a.get(node.output()).unwrap();
+            if let Some(ic) = &r.int {
+                let (lo, hi) = ic.int_bounds();
+                assert!(lo as f64 >= qmin && hi as f64 <= qmax, "{}", node.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Property tests: the streamlining passes preserve quantized semantics.
+//! Random QNNs are pushed through lowering, scale extraction,
+//! aggregation and threshold conversion; predictions must match the
+//! original graph on random inputs (quantized outputs agree exactly up
+//! to float-association noise well below one quantization step).
+
+use std::collections::BTreeMap;
+
+use sira_finn::executor::Executor;
+use sira_finn::models::{Granularity, QnnBuilder};
+use sira_finn::passes::{fold, lower, streamline, thresholds};
+use sira_finn::sira::SiRange;
+use sira_finn::tensor::Tensor;
+use sira_finn::util::rng::Rng;
+
+fn random_qnn(seed: u64) -> (sira_finn::graph::Graph, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let mut b = QnnBuilder::new("prop", seed ^ 0xABCD);
+    let conv = rng.chance(0.5);
+    let in_shape: Vec<usize> = if conv {
+        vec![1, 2, 6, 6]
+    } else {
+        vec![1, *rng.choose(&[6usize, 10])]
+    };
+    b.input("x", &in_shape);
+    b.quant_act(8, false, Granularity::PerTensor, 255.0);
+    for _ in 0..rng.int_in(1, 2) {
+        let wbits = rng.int_in(2, 5) as u32;
+        if b.current_shape().len() == 4 {
+            b.conv(4, 3, 1, 1, wbits, Granularity::PerChannel, false);
+            b.batchnorm();
+            b.relu();
+            b.quant_act(3, false, Granularity::PerTensor, 8.0);
+        } else {
+            b.linear(8, wbits, Granularity::PerTensor, rng.chance(0.5));
+            b.batchnorm();
+            b.relu();
+            b.quant_act(3, false, Granularity::PerTensor, 8.0);
+        }
+    }
+    if b.current_shape().len() == 4 {
+        b.global_avgpool();
+        b.flatten();
+    }
+    b.linear(4, 8, Granularity::PerTensor, true);
+    (b.finish().unwrap(), in_shape)
+}
+
+fn sample_outputs(g: &sira_finn::graph::Graph, in_shape: &[usize], seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    let numel: usize = in_shape.iter().product();
+    let mut exec = Executor::new(g).unwrap();
+    (0..5)
+        .map(|_| {
+            let x = Tensor::new(
+                in_shape,
+                (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+            )
+            .unwrap();
+            exec.run_single(&x).unwrap()[0].data().to_vec()
+        })
+        .collect()
+}
+
+#[test]
+fn streamlining_preserves_predictions() {
+    for seed in 0..20u64 {
+        let (g0, in_shape) = random_qnn(seed);
+        let y0 = sample_outputs(&g0, &in_shape, seed ^ 1);
+
+        let mut g1 = g0.clone();
+        lower::lower_all(&mut g1).unwrap();
+        fold::fold_constants(&mut g1, false).unwrap();
+        streamline::extract_quant_scales(&mut g1).unwrap();
+        fold::duplicate_shared_initializers(&mut g1).unwrap();
+        streamline::streamline(&mut g1).unwrap();
+        g1.check().unwrap();
+        let y1 = sample_outputs(&g1, &in_shape, seed ^ 1);
+        for (a, b) in y0.iter().flatten().zip(y1.iter().flatten()) {
+            assert!(
+                (a - b).abs() < 1e-6 * (1.0 + a.abs()),
+                "seed {seed}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn threshold_conversion_preserves_predictions() {
+    let mut converted_any = false;
+    for seed in 20..40u64 {
+        let (g0, in_shape) = random_qnn(seed);
+        let y0 = sample_outputs(&g0, &in_shape, seed ^ 2);
+
+        let mut g1 = g0.clone();
+        lower::lower_all(&mut g1).unwrap();
+        fold::fold_constants(&mut g1, false).unwrap();
+        streamline::extract_quant_scales(&mut g1).unwrap();
+        fold::duplicate_shared_initializers(&mut g1).unwrap();
+        streamline::streamline(&mut g1).unwrap();
+        let mut inputs = BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            SiRange::from_int(
+                Tensor::scalar(0.0),
+                Tensor::scalar(255.0),
+                Tensor::scalar(1.0),
+                Tensor::scalar(0.0),
+                Default::default(),
+                Default::default(),
+            )
+            .unwrap(),
+        );
+        let rep = thresholds::convert_to_thresholds(&mut g1, &inputs).unwrap();
+        converted_any |= rep.converted > 0;
+        g1.check().unwrap();
+        let y1 = sample_outputs(&g1, &in_shape, seed ^ 2);
+        for (a, b) in y0.iter().flatten().zip(y1.iter().flatten()) {
+            assert!(
+                (a - b).abs() < 1e-6 * (1.0 + a.abs()),
+                "seed {seed}: {a} vs {b}"
+            );
+        }
+    }
+    assert!(converted_any, "no tails were ever converted");
+}
+
+#[test]
+fn streamlined_graphs_reveal_integer_macs() {
+    for seed in 40..52u64 {
+        let (g0, _) = random_qnn(seed);
+        let mut g1 = g0;
+        lower::lower_all(&mut g1).unwrap();
+        fold::fold_constants(&mut g1, false).unwrap();
+        streamline::extract_quant_scales(&mut g1).unwrap();
+        fold::duplicate_shared_initializers(&mut g1).unwrap();
+        streamline::streamline(&mut g1).unwrap();
+        for node in &g1.nodes {
+            if node.op.is_mac() {
+                let w = &g1.initializers[&node.inputs[1]];
+                assert!(
+                    w.is_integral(),
+                    "seed {seed}: MAC '{}' weights not integer after streamlining",
+                    node.name
+                );
+            }
+        }
+    }
+}
