@@ -1,59 +1,122 @@
 //! Serving demo: the L3 coordinator (router + dynamic batcher + worker
-//! pool) serving the AOT-compiled CNV artifact via PJRT — python never on
-//! the request path. Falls back to the rust graph executor when
-//! artifacts are absent.
+//! pool) with selectable execution backends:
+//!
+//! * `--engine` — the plan-compiled integer runtime ([`sira_finn::engine`])
+//!   behind batched workers: real batched execution, SIRA-narrowed
+//!   accumulators, fused thresholds. Add `--streamline` to serve the
+//!   streamlined (pure-integer) form of the model.
+//! * default — PJRT artifact (when built with `--features pjrt` and
+//!   `make artifacts` ran), else the sidecar graph on the interpretive
+//!   executor, else the zoo graph on the executor.
+//! * `--executor` — force the interpretive executor.
 //!
 //! ```
-//! make artifacts && cargo run --release --example serve -- --requests 200
+//! cargo run --release --example serve -- --engine --model cnv --requests 200
 //! ```
 
 use std::sync::Arc;
 
+use anyhow::Result;
 use sira_finn::coordinator::{BatchPolicy, Coordinator};
+use sira_finn::engine;
 use sira_finn::executor::Executor;
 use sira_finn::models::sidecar::load_sidecar_file;
+use sira_finn::models::{self, ZooModel};
 use sira_finn::runtime::Runtime;
+use sira_finn::sira::analyze;
 use sira_finn::tensor::Tensor;
 use sira_finn::util::cli::Args;
 use sira_finn::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["executor"])?;
+fn zoo(name: &str) -> Result<ZooModel> {
+    match name {
+        "tfc" => models::tfc_w2a2(),
+        "cnv" => models::cnv_w2a2(),
+        "rn8" => models::rn8_w3a3(),
+        "mnv1" => models::mnv1_w4a4_scaled(4),
+        other => anyhow::bail!("unknown model '{other}' (tfc|cnv|rn8|mnv1)"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["executor", "engine", "streamline"])?;
     let n = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
-    let use_pjrt = !args.flag("executor")
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("batch", 8)?,
+        ..Default::default()
+    };
+    let model_name = args.get_or("model", "cnv").to_string();
+    // --streamline only makes sense for the plan engine: imply --engine
+    let engine_mode = args.flag("engine") || args.flag("streamline");
+    let use_pjrt = cfg!(feature = "pjrt")
+        && !args.flag("executor")
+        && !engine_mode
         && std::path::Path::new("artifacts/model_streamlined.hlo.txt").exists();
+    let have_sidecar = std::path::Path::new("artifacts/model_params.json").exists();
 
-    let coord = if use_pjrt {
-        println!("engine: PJRT (streamlined Pallas artifact)");
-        Coordinator::start(workers, BatchPolicy::default(), move || {
+    let (coord, input_shape) = if engine_mode {
+        let m = zoo(&model_name)?;
+        let mut g = m.graph.clone();
+        let analysis = if args.flag("streamline") {
+            engine::prepare_streamlined(&mut g, &m.input_ranges)?
+        } else {
+            analyze(&g, &m.input_ranges)?
+        };
+        let plan = engine::compile(&g, &analysis)?;
+        println!(
+            "backend: plan engine ({}{}) — {}",
+            m.name,
+            if args.flag("streamline") { ", streamlined" } else { "" },
+            plan.stats()
+        );
+        let shape = m.input_shape.clone();
+        let c = Coordinator::start_batched(workers, policy, move || {
+            // each worker owns a private clone of the compiled plan
+            let mut p = plan.clone();
+            move |xs: &[Tensor]| p.run_batch(xs)
+        });
+        (c, shape)
+    } else if use_pjrt {
+        println!("backend: PJRT (streamlined Pallas artifact)");
+        let c = Coordinator::start(workers, policy, move || {
             // each worker owns its own PJRT client + executable
             let rt = Runtime::cpu().expect("pjrt client");
             let model = rt
                 .load_hlo_text("artifacts/model_streamlined.hlo.txt")
                 .expect("artifact");
             move |x: &Tensor| Ok(model.run(std::slice::from_ref(x))?.remove(0))
-        })
+        });
+        (c, vec![1, 3, 8, 8])
     } else {
-        println!("engine: rust graph executor (sidecar model)");
-        let m = load_sidecar_file("artifacts/model_params.json")?;
-        let g = Arc::new(m.graph);
-        Coordinator::start(workers, BatchPolicy::default(), move || {
+        // interpretive executor over whichever graph source is available
+        let (graph, shape, label) = if have_sidecar {
+            let m = load_sidecar_file("artifacts/model_params.json")?;
+            (m.graph, m.input_shape, "sidecar model".to_string())
+        } else {
+            let m = zoo(&model_name)?;
+            (m.graph, m.input_shape, format!("zoo model {}", m.name))
+        };
+        println!("backend: rust graph executor ({label})");
+        let g = Arc::new(graph);
+        let c = Coordinator::start(workers, policy, move || {
             let g = Arc::clone(&g);
             move |x: &Tensor| {
                 let mut e = Executor::new(&g)?;
                 Ok(e.run_single(x)?.remove(0))
             }
-        })
+        });
+        (c, shape)
     };
 
+    let numel: usize = input_shape.iter().product();
     let mut rng = Rng::new(1);
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..n)
         .map(|_| {
             let x = Tensor::new(
-                &[1, 3, 8, 8],
-                (0..192).map(|_| rng.int_in(0, 255) as f64).collect(),
+                &input_shape,
+                (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
             )
             .unwrap();
             coord.submit(x).unwrap()
@@ -67,11 +130,20 @@ fn main() -> anyhow::Result<()> {
     }
     let dt = t0.elapsed();
     let (p50, p95, p99) = coord.metrics.percentiles();
+    let (o50, o95, o99) = coord.metrics.occupancy_percentiles();
     println!(
         "{ok}/{n} ok in {dt:.2?} -> {:.1} req/s across {workers} workers",
         n as f64 / dt.as_secs_f64()
     );
     println!("latency p50 {p50} us, p95 {p95} us, p99 {p99} us");
+    println!(
+        "batch occupancy mean {:.2} (p50 {o50} / p95 {o95} / p99 {o99}) over {} batches",
+        coord.metrics.mean_occupancy(),
+        coord
+            .metrics
+            .batches
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
     coord.shutdown();
     Ok(())
 }

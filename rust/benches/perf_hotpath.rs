@@ -1,12 +1,18 @@
 //! Hot-path performance benchmarks (EXPERIMENTS.md §Perf): timings for
 //! the compiler passes (SIRA analysis, streamlining, threshold
-//! conversion), the integer executor inference path, the structural
+//! conversion), the execution backends (interpretive executor vs the
+//! plan-compiled engine, single-stream and batched), the structural
 //! synthesis sweep and the serving coordinator.
+//!
+//! Every backend measurement additionally prints a one-line JSON summary
+//! (`{"bench":"perf_hotpath",...}`) so the perf trajectory can be
+//! tracked mechanically across PRs (collect into `BENCH_*.json`).
 
 use std::collections::BTreeMap;
 
 use sira_finn::bench::{section, Bencher};
 use sira_finn::coordinator::{BatchPolicy, Coordinator};
+use sira_finn::engine;
 use sira_finn::executor::Executor;
 use sira_finn::models;
 use sira_finn::passes::thresholds::convert_to_thresholds;
@@ -14,6 +20,20 @@ use sira_finn::passes::{fold, lower, streamline};
 use sira_finn::sira::analyze;
 use sira_finn::synth::Synth;
 use sira_finn::tensor::Tensor;
+use sira_finn::util::rng::Rng;
+
+/// Machine-readable one-line summary of one backend measurement.
+fn json_line(name: &str, backend: &str, model: &str, batch: usize, ns_per_inference: f64) {
+    println!(
+        "{{\"bench\":\"perf_hotpath\",\"name\":\"{name}\",\"backend\":\"{backend}\",\
+         \"model\":\"{model}\",\"batch\":{batch},\"ns_per_inference\":{ns_per_inference:.0}}}"
+    );
+}
+
+fn random_input(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let numel: usize = shape.iter().product();
+    Tensor::new(shape, (0..numel).map(|_| rng.int_in(0, 255) as f64).collect()).unwrap()
+}
 
 fn main() {
     let b = Bencher::default();
@@ -59,14 +79,84 @@ fn main() {
     });
     println!("{r}");
 
-    section("executor inference (images/s)");
-    for (zm, reps) in [(models::tfc_w2a2().unwrap(), 1.0), (models::cnv_w2a2().unwrap(), 1.0)] {
-        let x = Tensor::full(&zm.input_shape, 100.0);
-        let mut e = Executor::new(&zm.graph).unwrap();
-        let r = b.run(&format!("executor {}", zm.name), || {
-            e.run_single(&x).unwrap()
+    section("execution backends: interpreter vs plan engine");
+    let mut rng = Rng::new(0xBEEF);
+    for zm in [models::tfc_w2a2().unwrap(), models::cnv_w2a2().unwrap()] {
+        let x = random_input(&mut rng, &zm.input_shape);
+        let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
+
+        let mut exec = Executor::new(&zm.graph).unwrap();
+        let r_exec = b.run(&format!("executor {} b=1", zm.name), || {
+            exec.run_single(&x).unwrap()
         });
-        println!("{r}  ({:.1} img/s)", r.throughput(reps));
+        println!("{r_exec}  ({:.1} img/s)", r_exec.throughput(1.0));
+        json_line("backend", "executor", zm.name, 1, r_exec.mean.as_nanos() as f64);
+
+        let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
+        println!("  plan: {}", plan.stats());
+        let r_plan = b.run(&format!("engine   {} b=1", zm.name), || {
+            plan.run_batch(std::slice::from_ref(&x)).unwrap()
+        });
+        println!("{r_plan}  ({:.1} img/s)", r_plan.throughput(1.0));
+        json_line("backend", "engine", zm.name, 1, r_plan.mean.as_nanos() as f64);
+
+        let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
+        let r_plan8 = b.run(&format!("engine   {} b=8", zm.name), || {
+            plan.run_batch(&batch8).unwrap()
+        });
+        let ns8 = r_plan8.mean.as_nanos() as f64 / 8.0;
+        println!("{r_plan8}  ({:.1} img/s)", 8.0 * r_plan8.throughput(1.0));
+        json_line("backend", "engine", zm.name, 8, ns8);
+
+        println!(
+            "  speedup vs executor: {:.2}x single-stream, {:.2}x at batch 8",
+            r_exec.mean.as_secs_f64() / r_plan.mean.as_secs_f64(),
+            r_exec.mean.as_secs_f64() / (r_plan8.mean.as_secs_f64() / 8.0)
+        );
+
+        // streamlined (pure-integer) plan: the full SIRA payoff
+        let mut sg = zm.graph.clone();
+        let s_analysis = engine::prepare_streamlined(&mut sg, &zm.input_ranges).unwrap();
+        let mut s_exec = Executor::new(&sg).unwrap();
+        let r_sexec = b.run(&format!("executor {} streamlined b=1", zm.name), || {
+            s_exec.run_single(&x).unwrap()
+        });
+        println!("{r_sexec}");
+        json_line(
+            "backend-streamlined",
+            "executor",
+            zm.name,
+            1,
+            r_sexec.mean.as_nanos() as f64,
+        );
+        let mut s_plan = engine::compile(&sg, &s_analysis).unwrap();
+        println!("  plan: {}", s_plan.stats());
+        let r_splan = b.run(&format!("engine   {} streamlined b=1", zm.name), || {
+            s_plan.run_batch(std::slice::from_ref(&x)).unwrap()
+        });
+        println!("{r_splan}  ({:.1} img/s)", r_splan.throughput(1.0));
+        json_line(
+            "backend-streamlined",
+            "engine",
+            zm.name,
+            1,
+            r_splan.mean.as_nanos() as f64,
+        );
+        let r_splan8 = b.run(&format!("engine   {} streamlined b=8", zm.name), || {
+            s_plan.run_batch(&batch8).unwrap()
+        });
+        json_line(
+            "backend-streamlined",
+            "engine",
+            zm.name,
+            8,
+            r_splan8.mean.as_nanos() as f64 / 8.0,
+        );
+        println!(
+            "{r_splan8}\n  streamlined speedup vs streamlined executor: {:.2}x single, {:.2}x at batch 8",
+            r_sexec.mean.as_secs_f64() / r_splan.mean.as_secs_f64(),
+            r_sexec.mean.as_secs_f64() / (r_splan8.mean.as_secs_f64() / 8.0)
+        );
     }
 
     section("structural synthesis sweep (Fig 19 grid)");
@@ -99,7 +189,28 @@ fn main() {
     });
     println!("{r}");
 
-    section("serving coordinator (TFC, 2 workers)");
+    section("serving coordinator (TFC, 2 workers, plan engine)");
+    let zm = models::tfc_w2a2().unwrap();
+    let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
+    let plan = engine::compile(&zm.graph, &analysis).unwrap();
+    let coord = Coordinator::start_batched(2, BatchPolicy::default(), move || {
+        let mut p = plan.clone();
+        move |xs: &[Tensor]| p.run_batch(xs)
+    });
+    let x = Tensor::full(&[1, 784], 100.0);
+    let r = b.run("coordinator.infer (engine)", || coord.infer(x.clone()).unwrap());
+    println!("{r}  ({:.1} req/s single-stream)", r.throughput(1.0));
+    println!(
+        "  batch occupancy mean {:.2} over {} batches",
+        coord.metrics.mean_occupancy(),
+        coord
+            .metrics
+            .batches
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    coord.shutdown();
+
+    section("serving coordinator (TFC, 2 workers, executor)");
     let zm = models::tfc_w2a2().unwrap();
     let g = std::sync::Arc::new(zm.graph);
     let coord = Coordinator::start(2, BatchPolicy::default(), {
@@ -115,7 +226,7 @@ fn main() {
         }
     });
     let x = Tensor::full(&[1, 784], 100.0);
-    let r = b.run("coordinator.infer", || coord.infer(x.clone()).unwrap());
+    let r = b.run("coordinator.infer (executor)", || coord.infer(x.clone()).unwrap());
     println!("{r}  ({:.1} req/s single-stream)", r.throughput(1.0));
     coord.shutdown();
 }

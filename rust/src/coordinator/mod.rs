@@ -3,6 +3,16 @@
 //! compiled model instance. Demonstrates the "python never on the request
 //! path" property: after `make artifacts`, serving is pure rust.
 //!
+//! Two worker shapes exist:
+//! * [`Coordinator::start`] — per-request engines (`FnMut(&Tensor)`), the
+//!   original interpreter-style path: the batcher only amortises channel
+//!   wakeups.
+//! * [`Coordinator::start_batched`] — batch engines
+//!   (`FnMut(&[Tensor]) -> Vec<Tensor>`), which hand the whole drained
+//!   batch to one engine call: the shape the plan-compiled
+//!   [`crate::engine`] wants, where batch execution genuinely shares
+//!   weight traversals.
+//!
 //! tokio is unavailable offline; the coordinator is built on std threads
 //! and mpsc channels (ample for a CPU inference pipeline — the FDNA this
 //! models is itself a synchronous streaming dataflow).
@@ -31,6 +41,8 @@ pub struct Metrics {
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
+    /// requests per executed batch, one entry per batch
+    batch_sizes: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -46,15 +58,40 @@ impl Metrics {
             .push(lat.as_micros() as u64);
     }
 
-    /// (p50, p95, p99) latency in microseconds.
-    pub fn percentiles(&self) -> (u64, u64, u64) {
-        let mut v = self.latencies_us.lock().unwrap().clone();
+    fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(size as u64);
+    }
+
+    fn percentiles_of(v: &Mutex<Vec<u64>>) -> (u64, u64, u64) {
+        let mut v = v.lock().unwrap().clone();
         if v.is_empty() {
             return (0, 0, 0);
         }
         v.sort_unstable();
         let pick = |p: f64| v[((v.len() - 1) as f64 * p) as usize];
         (pick(0.50), pick(0.95), pick(0.99))
+    }
+
+    /// (p50, p95, p99) latency in microseconds.
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        Metrics::percentiles_of(&self.latencies_us)
+    }
+
+    /// (p50, p95, p99) batch occupancy — requests per executed batch.
+    /// The observable for whether dynamic batching is actually feeding
+    /// the batched engine.
+    pub fn occupancy_percentiles(&self) -> (u64, u64, u64) {
+        Metrics::percentiles_of(&self.batch_sizes)
+    }
+
+    /// Mean requests per executed batch (0.0 before any batch ran).
+    pub fn mean_occupancy(&self) -> f64 {
+        let v = self.batch_sizes.lock().unwrap();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().sum::<u64>() as f64 / v.len() as f64
     }
 }
 
@@ -74,6 +111,36 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(2),
         }
     }
+}
+
+/// Drain one batch from the shared queue: the first job blocks, the rest
+/// are best-effort; the batching window only opens when more work is
+/// visibly arriving (keeps single-stream latency at the engine latency
+/// instead of engine + max_wait). Returns None when the channel closed.
+fn drain_batch(rx: &Mutex<Receiver<Job>>, policy: &BatchPolicy) -> Option<Vec<Job>> {
+    let mut batch: Vec<Job> = Vec::with_capacity(policy.max_batch);
+    let rx = rx.lock().unwrap();
+    match rx.recv() {
+        Ok(job) => batch.push(job),
+        Err(_) => return None, // channel closed: shut down
+    }
+    while batch.len() < policy.max_batch {
+        match rx.try_recv() {
+            Ok(job) => batch.push(job),
+            Err(_) => break,
+        }
+    }
+    if batch.len() > 1 {
+        let deadline = Instant::now() + policy.max_wait;
+        while batch.len() < policy.max_batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(job) => batch.push(job),
+                Err(_) => break,
+            }
+        }
+    }
+    Some(batch)
 }
 
 /// The coordinator: router + batcher + worker pool.
@@ -103,42 +170,80 @@ impl Coordinator {
             let make_engine = Arc::clone(&make_engine);
             workers.push(std::thread::spawn(move || {
                 let mut engine = make_engine();
-                loop {
-                    // drain a batch: first job blocks, rest are best-effort
-                    let mut batch: Vec<Job> = Vec::with_capacity(policy.max_batch);
-                    {
-                        let rx = rx.lock().unwrap();
-                        match rx.recv() {
-                            Ok(job) => batch.push(job),
-                            Err(_) => return, // channel closed: shut down
-                        }
-                        // fast path: drain whatever is already queued; only
-                        // wait out the batching window if more work is
-                        // visibly arriving (keeps single-stream latency at
-                        // the engine latency instead of engine + max_wait)
-                        while batch.len() < policy.max_batch {
-                            match rx.try_recv() {
-                                Ok(job) => batch.push(job),
-                                Err(_) => break,
-                            }
-                        }
-                        if batch.len() > 1 {
-                            let deadline = Instant::now() + policy.max_wait;
-                            while batch.len() < policy.max_batch {
-                                let left = deadline.saturating_duration_since(Instant::now());
-                                match rx.recv_timeout(left) {
-                                    Ok(job) => batch.push(job),
-                                    Err(_) => break,
-                                }
-                            }
-                        }
-                    }
-                    metrics.batches.fetch_add(1, Ordering::Relaxed);
+                while let Some(batch) = drain_batch(&rx, &policy) {
+                    metrics.record_batch(batch.len());
                     for job in batch {
                         let result = engine(&job.input);
                         let ok = result.is_ok();
                         metrics.record(job.enqueued.elapsed(), ok);
                         let _ = job.reply.send(result);
+                    }
+                }
+            }));
+        }
+        Coordinator {
+            tx: Some(tx),
+            workers,
+            metrics,
+        }
+    }
+
+    /// Start `num_workers` workers around *batched* engines: each drained
+    /// batch is executed in a single engine call, one output per input.
+    /// This is the worker shape for [`crate::engine::Plan::run_batch`].
+    pub fn start_batched<F, E>(
+        num_workers: usize,
+        policy: BatchPolicy,
+        make_engine: F,
+    ) -> Coordinator
+    where
+        F: Fn() -> E + Send + Sync + 'static,
+        E: FnMut(&[Tensor]) -> Result<Vec<Tensor>> + 'static,
+    {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let make_engine = Arc::new(make_engine);
+        let mut workers = Vec::new();
+        for _ in 0..num_workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let make_engine = Arc::clone(&make_engine);
+            workers.push(std::thread::spawn(move || {
+                let mut engine = make_engine();
+                while let Some(batch) = drain_batch(&rx, &policy) {
+                    metrics.record_batch(batch.len());
+                    let mut inputs = Vec::with_capacity(batch.len());
+                    let mut metas = Vec::with_capacity(batch.len());
+                    for job in batch {
+                        inputs.push(job.input);
+                        metas.push((job.enqueued, job.reply));
+                    }
+                    match engine(&inputs) {
+                        Ok(outs) if outs.len() == inputs.len() => {
+                            for ((enq, reply), out) in metas.into_iter().zip(outs) {
+                                metrics.record(enq.elapsed(), true);
+                                let _ = reply.send(Ok(out));
+                            }
+                        }
+                        Ok(outs) => {
+                            let msg = format!(
+                                "batch engine returned {} outputs for {} inputs",
+                                outs.len(),
+                                inputs.len()
+                            );
+                            for (enq, reply) in metas {
+                                metrics.record(enq.elapsed(), false);
+                                let _ = reply.send(Err(anyhow!("{msg}")));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            for (enq, reply) in metas {
+                                metrics.record(enq.elapsed(), false);
+                                let _ = reply.send(Err(anyhow!("{msg}")));
+                            }
+                        }
                     }
                 }
             }));
@@ -236,6 +341,33 @@ mod tests {
     }
 
     #[test]
+    fn occupancy_is_observable() {
+        let c = Coordinator::start(
+            1,
+            BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(20),
+            },
+            doubler,
+        );
+        let handles: Vec<_> = (0..48)
+            .map(|i| c.submit(Tensor::scalar(i as f64)).unwrap())
+            .collect();
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+        let batches = c.metrics.batches.load(Ordering::Relaxed);
+        let mean = c.metrics.mean_occupancy();
+        let (o50, o95, o99) = c.metrics.occupancy_percentiles();
+        // batches * mean occupancy must account for every request
+        assert!((mean * batches as f64 - 48.0).abs() < 1e-9, "mean {mean}");
+        assert!(mean >= 1.0);
+        assert!(o50 <= o95 && o95 <= o99);
+        assert!(o99 as usize <= 16);
+        c.shutdown();
+    }
+
+    #[test]
     fn engine_errors_are_reported() {
         let c = Coordinator::start(1, BatchPolicy::default(), || {
             |_: &Tensor| Err(anyhow!("boom"))
@@ -243,6 +375,55 @@ mod tests {
         let err = c.infer(Tensor::scalar(1.0)).unwrap_err();
         assert!(err.to_string().contains("boom"));
         assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn batched_workers_serve_whole_batches() {
+        let c = Coordinator::start_batched(
+            1,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+            },
+            || |xs: &[Tensor]| Ok(xs.iter().map(|x| x.map(|v| v + 1.0)).collect()),
+        );
+        let handles: Vec<_> = (0..24)
+            .map(|i| c.submit(Tensor::scalar(i as f64)).unwrap())
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let y = h.recv().unwrap().unwrap();
+            assert_eq!(y.first(), i as f64 + 1.0);
+        }
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 24);
+        assert!(c.metrics.mean_occupancy() >= 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batched_engine_errors_fail_every_job_in_batch() {
+        let c = Coordinator::start_batched(1, BatchPolicy::default(), || {
+            |_: &[Tensor]| Err(anyhow!("batch boom"))
+        });
+        let err = c.infer(Tensor::scalar(1.0)).unwrap_err();
+        assert!(err.to_string().contains("batch boom"));
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batched_worker_runs_a_compiled_plan() {
+        use crate::engine;
+        use crate::sira::analyze;
+        let m = crate::models::tfc_w2a2().unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let plan = engine::compile(&m.graph, &analysis).unwrap();
+        let c = Coordinator::start_batched(2, BatchPolicy::default(), move || {
+            let mut p = plan.clone();
+            move |xs: &[Tensor]| p.run_batch(xs)
+        });
+        let y = c.infer(Tensor::full(&[1, 784], 100.0)).unwrap();
+        assert_eq!(y.shape(), &[1, 10]);
+        c.shutdown();
     }
 
     #[test]

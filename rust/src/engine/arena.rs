@@ -1,0 +1,149 @@
+//! Buffer arena for the plan engine: maps logical tensor slots onto a
+//! small set of reusable physical buffers via a greedy linear-scan over
+//! the step schedule. Buffers are plain `Vec<f64>` grown on demand (the
+//! batch dimension is only known at run time), so two slots of different
+//! sizes can share a physical buffer — every kernel fully overwrites its
+//! `[0, batch*numel)` output region before any reader touches it.
+//!
+//! Aliasing rules: a step's outputs are allocated *before* its dying
+//! inputs are released, so a kernel never reads and writes the same
+//! physical buffer (kernels are not required to be in-place safe).
+
+/// Per-step slot usage, in schedule order.
+#[derive(Clone, Debug, Default)]
+pub struct StepUse {
+    pub reads: Vec<usize>,
+    pub writes: Vec<usize>,
+}
+
+/// Result of the assignment: `phys[slot]` is the physical buffer index.
+#[derive(Clone, Debug)]
+pub struct ArenaLayout {
+    pub phys: Vec<usize>,
+    pub n_phys: usize,
+}
+
+/// Assign physical buffers to `n_slots` logical slots given the schedule.
+/// `pinned` slots (graph input before its first use, graph outputs after
+/// their last) are never recycled.
+pub fn assign(n_slots: usize, uses: &[StepUse], pinned: &[usize]) -> ArenaLayout {
+    const UNASSIGNED: usize = usize::MAX;
+    let never = uses.len() + 1;
+    // last step that reads each slot (definition counts as a use so
+    // write-only dead slots are freed immediately after their writer)
+    let mut last_use = vec![0usize; n_slots];
+    for (si, u) in uses.iter().enumerate() {
+        for &s in u.writes.iter().chain(u.reads.iter()) {
+            last_use[s] = si;
+        }
+    }
+    for &p in pinned {
+        last_use[p] = never;
+    }
+
+    let mut dies_at: Vec<Vec<usize>> = vec![Vec::new(); uses.len()];
+    for (s, &lu) in last_use.iter().enumerate() {
+        if lu < uses.len() {
+            dies_at[lu].push(s);
+        }
+    }
+
+    let mut phys = vec![UNASSIGNED; n_slots];
+    let mut free: Vec<usize> = Vec::new();
+    let mut n_phys = 0usize;
+    let mut alloc = |free: &mut Vec<usize>| -> usize {
+        free.pop().unwrap_or_else(|| {
+            n_phys += 1;
+            n_phys - 1
+        })
+    };
+    // pinned inputs exist before step 0
+    for &p in pinned {
+        if phys[p] == UNASSIGNED {
+            phys[p] = alloc(&mut free);
+        }
+    }
+    for (si, u) in uses.iter().enumerate() {
+        for &w in &u.writes {
+            if phys[w] == UNASSIGNED {
+                phys[w] = alloc(&mut free);
+            }
+        }
+        for &dead in &dies_at[si] {
+            if phys[dead] != UNASSIGNED {
+                free.push(phys[dead]);
+            }
+        }
+    }
+    // slots never written nor pinned (shouldn't happen): give them fresh
+    // buffers rather than corrupting a live one
+    for p in phys.iter_mut() {
+        if *p == UNASSIGNED {
+            *p = n_phys;
+            n_phys += 1;
+        }
+    }
+    ArenaLayout { phys, n_phys }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(reads: &[usize], writes: &[usize]) -> StepUse {
+        StepUse {
+            reads: reads.to_vec(),
+            writes: writes.to_vec(),
+        }
+    }
+
+    #[test]
+    fn linear_chain_reuses_buffers() {
+        // 0 -> 1 -> 2 -> 3 (3 is the output)
+        let uses = vec![step(&[0], &[1]), step(&[1], &[2]), step(&[2], &[3])];
+        let l = assign(4, &uses, &[0, 3]);
+        // slot 2 can reuse slot 0 or 1's buffer once they die; 4 slots
+        // never need more than 3 buffers here
+        assert!(l.n_phys <= 3, "n_phys = {}", l.n_phys);
+        // no step reads and writes the same physical buffer
+        for u in &uses {
+            for &r in &u.reads {
+                for &w in &u.writes {
+                    assert_ne!(l.phys[r], l.phys[w]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diamond_keeps_both_branches_live() {
+        // 0 -> 1 ; 0 -> 2 ; (1,2) -> 3
+        let uses = vec![step(&[0], &[1]), step(&[0], &[2]), step(&[1, 2], &[3])];
+        let l = assign(4, &uses, &[0, 3]);
+        assert_ne!(l.phys[1], l.phys[2]);
+        assert_ne!(l.phys[1], l.phys[0]);
+        assert_ne!(l.phys[2], l.phys[0]);
+        assert_ne!(l.phys[3], l.phys[1]);
+        assert_ne!(l.phys[3], l.phys[2]);
+    }
+
+    #[test]
+    fn pinned_output_never_recycled() {
+        let uses = vec![step(&[0], &[1]), step(&[1], &[2]), step(&[2], &[3])];
+        let l = assign(4, &uses, &[0, 1]);
+        // slot 1 pinned: later writes must not take its buffer
+        assert_ne!(l.phys[2], l.phys[1]);
+        assert_ne!(l.phys[3], l.phys[1]);
+    }
+
+    #[test]
+    fn long_pipeline_stays_bounded() {
+        // 64-step chain: arena should settle at a constant few buffers
+        let mut uses = Vec::new();
+        for i in 0..64 {
+            uses.push(step(&[i], &[i + 1]));
+        }
+        let l = assign(65, &uses, &[0, 64]);
+        assert!(l.n_phys <= 3, "n_phys = {}", l.n_phys);
+    }
+}

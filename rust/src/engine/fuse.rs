@@ -1,0 +1,840 @@
+//! The plan compiler: lowers a graph plus its SIRA [`Analysis`] into a
+//! flat [`Plan`] of fused kernels.
+//!
+//! Compile-time specialisation performed here, all driven by facts SIRA
+//! proves (§4 of the paper):
+//!
+//! * **Constant folding** — any node whose inputs are all constants
+//!   (weight quantizers above all) is evaluated once at compile time; the
+//!   interpreter re-quantizes every weight tensor on every inference.
+//! * **Elementwise chain fusion** — runs of single-consumer elementwise
+//!   nodes (aggregated scales/biases of §4.1.2, quantizers, activations,
+//!   batch-norm affines, thresholds) collapse into one per-element pass.
+//! * **MAC + threshold fusion** — a MatMul/Conv whose only consumer is a
+//!   MultiThreshold (§4.1.3) thresholds its accumulators directly,
+//!   never materialising the wide intermediate.
+//! * **Accumulator narrowing** — when SIRA proves MAC operands are pure
+//!   integers ([`IntComponent::is_pure_integer`]) and a conservative
+//!   worst-case partial-sum bound fits, the kernel runs on i32 (or i64)
+//!   accumulators instead of f64 (§4.2; cf. the A2Q guaranteed-width
+//!   argument).
+//! * **Movement elision** — contiguous Reshape/Flatten/Identity become
+//!   buffer aliases; no copy.
+//!
+//! Anything else falls back to a per-sample [`crate::executor`] call, so
+//! every graph the interpreter runs, the plan runs — bit-exactly.
+//!
+//! [`IntComponent::is_pure_integer`]: crate::sira::IntComponent::is_pure_integer
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::executor::execute_op;
+use crate::graph::{Graph, Node, Op, RoundMode};
+use crate::passes::accmin::sira_int_bounds;
+use crate::sira::{quant_bounds, Analysis};
+use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
+
+use super::arena::{assign, StepUse};
+use super::kernels::{MicroOp, Param, ThresholdTable, WeightMat};
+use super::plan::{
+    BinKind, BinaryStep, ConvStep, DepthwiseStep, EwChainStep, GSrc, GenericStep, MatMulStep,
+    Plan, PlanStats, PoolStep, Step,
+};
+
+/// Conservative headroom limits for integer accumulation: the worst-case
+/// partial-sum magnitude bound must stay below these for the narrowed
+/// kernels to be selected.
+const I32_LIMIT: f64 = 2_147_000_000.0;
+const I64_LIMIT: f64 = 4.0e18;
+
+/// Compile `g` (shapes inferred, per-sample tensors with leading dim 1)
+/// and its SIRA `analysis` into an executable [`Plan`]. The analysis is
+/// consulted opportunistically — missing or float-only ranges simply
+/// disable the integer fast paths, never fail the compile.
+pub fn compile(g: &Graph, analysis: &Analysis) -> Result<Plan> {
+    if g.inputs.len() != 1 {
+        bail!("engine: exactly one graph input required, got {}", g.inputs.len());
+    }
+    if g.outputs.len() != 1 {
+        bail!("engine: exactly one graph output required, got {}", g.outputs.len());
+    }
+    let mut c = Compiler {
+        g,
+        analysis,
+        consts: g.initializers.clone(),
+        slot_of: BTreeMap::new(),
+        slot_count: 0,
+        steps: Vec::new(),
+        stats: PlanStats::default(),
+    };
+    let input_name = g.inputs[0].clone();
+    let input_slot = c.new_slot(&input_name)?;
+    let order = g.topo_order()?;
+    let mut consumed = vec![false; g.nodes.len()];
+
+    for &ni in &order {
+        if consumed[ni] {
+            continue;
+        }
+        consumed[ni] = true;
+        let node = g.nodes[ni].clone();
+
+        // 1) whole node is constant: fold at compile time
+        if node.inputs.iter().all(|i| c.consts.contains_key(i)) {
+            let ins: Vec<Tensor> = node.inputs.iter().map(|i| c.consts[i].clone()).collect();
+            let outs = execute_op(&node.op, &ins)
+                .with_context(|| format!("constant-folding node '{}'", node.name))?;
+            for (o, t) in node.outputs.iter().zip(outs) {
+                c.consts.insert(o.clone(), t);
+            }
+            c.stats.folded_nodes += 1;
+            continue;
+        }
+
+        // 2) contiguous data movement: alias the buffer, no step
+        if matches!(node.op, Op::Reshape { .. } | Op::Flatten { .. } | Op::Identity)
+            && node.outputs.len() == 1
+            && !c.consts.contains_key(&node.inputs[0])
+        {
+            let src = &node.inputs[0];
+            let dst = &node.outputs[0];
+            let in_numel = c.sample_numel(src)?;
+            let out_numel = c.sample_numel(dst)?;
+            if in_numel == out_numel {
+                let sid = c.slot_for_read(src)?;
+                c.slot_of.insert(dst.clone(), sid);
+                continue;
+            }
+            // numel change (cannot happen for these ops): fall through
+        }
+
+        // 3) fused elementwise chain
+        if let Some((di, mut ops)) = c.node_micro_ops(&node)? {
+            let start = node.inputs[di].clone();
+            let in_slot = c.slot_for_read(&start)?;
+            let numel = c.sample_numel(&start)?;
+            let mut cur = ni;
+            loop {
+                let out_name = g.nodes[cur].outputs[0].clone();
+                if g.outputs.iter().any(|o| *o == out_name) {
+                    break;
+                }
+                let cons = g.consumers(&out_name);
+                if cons.len() != 1 {
+                    break;
+                }
+                let next = cons[0];
+                match c.node_micro_ops(&g.nodes[next])? {
+                    Some((ndi, nops)) if g.nodes[next].inputs[ndi] == out_name => {
+                        ops.extend(nops);
+                        consumed[next] = true;
+                        cur = next;
+                    }
+                    _ => break,
+                }
+            }
+            let end = g.nodes[cur].outputs[0].clone();
+            let out_slot = c.new_slot(&end)?;
+            c.stats.ew_chains += 1;
+            c.stats.fused_micro_ops += ops.len();
+            c.steps.push(Step::Ew(EwChainStep {
+                input: in_slot,
+                out: out_slot,
+                numel,
+                ops,
+            }));
+            continue;
+        }
+
+        // 4) MAC against constant weights
+        if let Op::MatMul = node.op {
+            if c.consts.contains_key(&node.inputs[1]) && !c.consts.contains_key(&node.inputs[0]) {
+                let a_shape = c.sample_shape(&node.inputs[0])?.to_vec();
+                let w = c.consts[&node.inputs[1]].clone();
+                if a_shape.len() == 2 && w.rank() == 2 && w.shape()[0] == a_shape[1] {
+                    c.emit_matmul(&node, &a_shape, &w, &mut consumed)?;
+                    continue;
+                }
+            }
+        }
+        if let Op::Conv { spec, group } = &node.op {
+            let (spec, group) = (*spec, *group);
+            if c.consts.contains_key(&node.inputs[1]) && !c.consts.contains_key(&node.inputs[0]) {
+                let x_shape = c.sample_shape(&node.inputs[0])?.to_vec();
+                let w = c.consts[&node.inputs[1]].clone();
+                if x_shape.len() == 4
+                    && w.rank() == 4
+                    && w.shape()[2] == spec.kernel.0
+                    && w.shape()[3] == spec.kernel.1
+                {
+                    let ch = x_shape[1];
+                    if group == 1 && w.shape()[1] == ch {
+                        c.emit_conv(&node, &x_shape, &w, spec, &mut consumed)?;
+                        continue;
+                    }
+                    if group == ch && w.shape()[1] == 1 && w.shape()[0] == ch {
+                        c.emit_depthwise(&node, &x_shape, &w, spec, &mut consumed)?;
+                        continue;
+                    }
+                }
+            }
+        }
+
+        // 5) elementwise binary over two dynamic same-shape tensors
+        if matches!(node.op, Op::Add | Op::Sub | Op::Mul | Op::Div)
+            && node.inputs.len() == 2
+            && !c.consts.contains_key(&node.inputs[0])
+            && !c.consts.contains_key(&node.inputs[1])
+            && c.sample_shape(&node.inputs[0])? == c.sample_shape(&node.inputs[1])?
+        {
+            let numel = c.sample_numel(&node.inputs[0])?;
+            let a = c.slot_for_read(&node.inputs[0])?;
+            let b = c.slot_for_read(&node.inputs[1])?;
+            let out = c.new_slot(&node.outputs[0])?;
+            let kind = match node.op {
+                Op::Add => BinKind::Add,
+                Op::Sub => BinKind::Sub,
+                Op::Mul => BinKind::Mul,
+                _ => BinKind::Div,
+            };
+            c.stats.binary += 1;
+            c.steps.push(Step::Binary(BinaryStep {
+                a,
+                b,
+                out,
+                numel,
+                kind,
+            }));
+            continue;
+        }
+
+        // 6) pooling
+        let pool = match &node.op {
+            Op::MaxPool { spec } => Some((PoolKind::Max, *spec)),
+            Op::AveragePool { spec } => Some((PoolKind::Average, *spec)),
+            Op::GlobalAveragePool => {
+                let xs = c.sample_shape(&node.inputs[0])?;
+                if xs.len() == 4 {
+                    Some((
+                        PoolKind::Average,
+                        Conv2dSpec {
+                            kernel: (xs[2], xs[3]),
+                            stride: (1, 1),
+                            pad: (0, 0),
+                        },
+                    ))
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        if let Some((kind, spec)) = pool {
+            let xs = c.sample_shape(&node.inputs[0])?.to_vec();
+            if xs.len() == 4 && !c.consts.contains_key(&node.inputs[0]) {
+                let (oh, ow) = spec.out_hw(xs[2], xs[3]);
+                let x = c.slot_for_read(&node.inputs[0])?;
+                let out = c.new_slot(&node.outputs[0])?;
+                c.stats.pool += 1;
+                c.steps.push(Step::Pool(PoolStep {
+                    x,
+                    out,
+                    kind,
+                    c: xs[1],
+                    h: xs[2],
+                    w: xs[3],
+                    oh,
+                    ow,
+                    spec,
+                }));
+                continue;
+            }
+        }
+
+        // 7) fully general fallback: reference semantics per sample
+        c.emit_generic(&node)?;
+    }
+
+    c.finish(&input_name, input_slot)
+}
+
+struct Compiler<'g> {
+    g: &'g Graph,
+    analysis: &'g Analysis,
+    consts: BTreeMap<String, Tensor>,
+    slot_of: BTreeMap<String, usize>,
+    slot_count: usize,
+    steps: Vec<Step>,
+    stats: PlanStats,
+}
+
+impl<'g> Compiler<'g> {
+    fn sample_shape(&self, name: &str) -> Result<&[usize]> {
+        self.g
+            .shapes
+            .get(name)
+            .map(|s| s.as_slice())
+            .with_context(|| format!("engine: no shape for tensor '{name}' (run infer_shapes)"))
+    }
+
+    fn sample_numel(&self, name: &str) -> Result<usize> {
+        Ok(self.sample_shape(name)?.iter().product())
+    }
+
+    fn slot_for_read(&self, name: &str) -> Result<usize> {
+        self.slot_of
+            .get(name)
+            .copied()
+            .with_context(|| format!("engine internal: tensor '{name}' has no slot"))
+    }
+
+    fn new_slot(&mut self, name: &str) -> Result<usize> {
+        let shape = self.sample_shape(name)?;
+        if shape.is_empty() || shape[0] != 1 {
+            bail!(
+                "engine: tensor '{name}' has shape {:?}; per-sample tensors must have a leading \
+                 batch dim of 1",
+                shape
+            );
+        }
+        let id = self.slot_count;
+        self.slot_count += 1;
+        self.slot_of.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// Broadcast-materialise a constant against a per-sample shape.
+    fn param(&self, t: &Tensor, shape: &[usize]) -> Option<Param> {
+        if t.numel() == 1 {
+            return Some(Param::Scalar(t.first()));
+        }
+        let b = t.broadcast_to(shape).ok()?;
+        Some(Param::PerElem(b.into_data()))
+    }
+
+    /// Sorted threshold table for `Op::MultiThreshold` over data of the
+    /// given per-sample shape; None when the shapes are incompatible.
+    fn threshold_table(
+        &self,
+        th: &Tensor,
+        data_shape: &[usize],
+        out_scale: f64,
+        out_bias: f64,
+    ) -> Option<ThresholdTable> {
+        if th.rank() != 2 {
+            return None;
+        }
+        let (c_th, n) = (th.shape()[0], th.shape()[1]);
+        let channels = if data_shape.len() >= 2 { data_shape[1] } else { 1 };
+        if c_th != 1 && c_th != channels {
+            return None;
+        }
+        let ch_stride: usize = if data_shape.len() >= 2 {
+            data_shape[2..].iter().product()
+        } else {
+            1
+        };
+        let mut rows = th.data().to_vec();
+        if rows.iter().any(|v| v.is_nan()) {
+            return None;
+        }
+        for ch in 0..c_th {
+            rows[ch * n..(ch + 1) * n].sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        Some(ThresholdTable {
+            rows,
+            n,
+            channels: c_th,
+            ch_stride,
+            out_scale,
+            out_bias,
+        })
+    }
+
+    /// Micro-op lowering for a chain-eligible node: returns the dynamic
+    /// input index and the per-element op sequence, or None when the node
+    /// is not elementwise-fusable.
+    fn node_micro_ops(&self, node: &Node) -> Result<Option<(usize, Vec<MicroOp>)>> {
+        if node.outputs.len() != 1 {
+            return Ok(None);
+        }
+        let dyn_idx: Vec<usize> = (0..node.inputs.len())
+            .filter(|&i| !self.consts.contains_key(&node.inputs[i]))
+            .collect();
+        if dyn_idx.len() != 1 {
+            return Ok(None);
+        }
+        let di = dyn_idx[0];
+        let in_shape = match self.g.shapes.get(&node.inputs[di]) {
+            Some(s) => s.clone(),
+            None => return Ok(None),
+        };
+        let out_shape = match self.g.shapes.get(&node.outputs[0]) {
+            Some(s) => s.clone(),
+            None => return Ok(None),
+        };
+        if in_shape != out_shape {
+            return Ok(None); // shape-changing broadcast: not chain-fusable
+        }
+        let ops = match &node.op {
+            Op::Relu => vec![MicroOp::Relu],
+            Op::Sigmoid => vec![MicroOp::Sigmoid],
+            Op::Floor => vec![MicroOp::Floor],
+            Op::Identity => vec![],
+            Op::Clip { lo, hi } => vec![MicroOp::Clip { lo: *lo, hi: *hi }],
+            Op::Mul | Op::Add | Op::Sub | Op::Div => {
+                if node.inputs.len() != 2 || di > 1 {
+                    return Ok(None);
+                }
+                let ci = 1 - di;
+                let Some(p) = self.param(&self.consts[&node.inputs[ci]], &out_shape) else {
+                    return Ok(None);
+                };
+                let op = match (&node.op, di) {
+                    (Op::Mul, _) => MicroOp::Mul(p),
+                    (Op::Add, _) => MicroOp::Add(p),
+                    (Op::Sub, 0) => MicroOp::Sub(p),
+                    (Op::Sub, _) => MicroOp::Rsub(p),
+                    (Op::Div, 0) => MicroOp::Div(p),
+                    _ => MicroOp::Rdiv(p),
+                };
+                vec![op]
+            }
+            Op::Quant {
+                signed,
+                narrow,
+                rounding,
+            } => {
+                if di != 0 || node.inputs.len() != 4 {
+                    return Ok(None);
+                }
+                let (Some(s), Some(z), Some(b)) = (
+                    self.consts.get(&node.inputs[1]),
+                    self.consts.get(&node.inputs[2]),
+                    self.consts.get(&node.inputs[3]),
+                ) else {
+                    return Ok(None);
+                };
+                let bits = b.first() as u32;
+                let (qmin, qmax) = quant_bounds(bits, *signed, *narrow);
+                let (Some(sp), Some(zp)) =
+                    (self.param(s, &out_shape), self.param(z, &out_shape))
+                else {
+                    return Ok(None);
+                };
+                let round = match rounding {
+                    RoundMode::RoundEven => MicroOp::RoundEven,
+                    RoundMode::Floor => MicroOp::Floor,
+                    RoundMode::Ceil => MicroOp::Ceil,
+                };
+                // y = s * (clip(round(x/s + z), qmin, qmax) - z), exactly
+                // the executor's operation order
+                vec![
+                    MicroOp::Div(sp.clone()),
+                    MicroOp::Add(zp.clone()),
+                    round,
+                    MicroOp::Clip { lo: qmin, hi: qmax },
+                    MicroOp::Sub(zp),
+                    MicroOp::Mul(sp),
+                ]
+            }
+            Op::BatchNorm { eps } => {
+                if di != 0 || node.inputs.len() != 5 {
+                    return Ok(None);
+                }
+                let (Some(gamma), Some(beta), Some(mean), Some(var)) = (
+                    self.consts.get(&node.inputs[1]),
+                    self.consts.get(&node.inputs[2]),
+                    self.consts.get(&node.inputs[3]),
+                    self.consts.get(&node.inputs[4]),
+                ) else {
+                    return Ok(None);
+                };
+                // identical arithmetic to the executor's BatchNorm lowering
+                let ch = gamma.numel();
+                let eps = *eps;
+                let a = gamma.zip(var, |g_, v| g_ / (v + eps).sqrt()).ok();
+                let Some(a) = a else { return Ok(None) };
+                let Some(b) = mean
+                    .mul(&a)
+                    .ok()
+                    .and_then(|ma| beta.zip(&ma, |bt, m| bt - m).ok())
+                else {
+                    return Ok(None);
+                };
+                let pshape: Vec<usize> = if out_shape.len() == 4 {
+                    vec![1, ch, 1, 1]
+                } else {
+                    vec![1, ch]
+                };
+                let (Ok(a), Ok(b)) = (a.reshape(&pshape), b.reshape(&pshape)) else {
+                    return Ok(None);
+                };
+                let (Some(ap), Some(bp)) =
+                    (self.param(&a, &out_shape), self.param(&b, &out_shape))
+                else {
+                    return Ok(None);
+                };
+                vec![MicroOp::Mul(ap), MicroOp::Add(bp)]
+            }
+            Op::MultiThreshold {
+                out_scale,
+                out_bias,
+            } => {
+                if di != 0 || node.inputs.len() != 2 {
+                    return Ok(None);
+                }
+                let Some(th) = self.consts.get(&node.inputs[1]) else {
+                    return Ok(None);
+                };
+                let Some(t) = self.threshold_table(th, &in_shape, *out_scale, *out_bias) else {
+                    return Ok(None);
+                };
+                vec![MicroOp::Threshold(t)]
+            }
+            _ => return Ok(None),
+        };
+        Ok(Some((di, ops)))
+    }
+
+    /// If the single consumer of `out_name` is a fusable MultiThreshold,
+    /// consume it and return its table plus the new output tensor.
+    fn fusable_threshold(
+        &self,
+        out_name: &str,
+        out_shape: &[usize],
+        consumed: &mut [bool],
+    ) -> Option<(ThresholdTable, String)> {
+        if self.g.outputs.iter().any(|o| o == out_name) {
+            return None;
+        }
+        let cons = self.g.consumers(out_name);
+        if cons.len() != 1 {
+            return None;
+        }
+        let mi = cons[0];
+        let mnode = &self.g.nodes[mi];
+        let (os, ob) = match &mnode.op {
+            Op::MultiThreshold {
+                out_scale,
+                out_bias,
+            } => (*out_scale, *out_bias),
+            _ => return None,
+        };
+        if mnode.inputs.len() != 2
+            || mnode.inputs[0] != out_name
+            || mnode.outputs.len() != 1
+        {
+            return None;
+        }
+        let th = self.consts.get(&mnode.inputs[1])?;
+        let table = self.threshold_table(th, out_shape, os, ob)?;
+        consumed[mi] = true;
+        Some((table, mnode.outputs[0].clone()))
+    }
+
+    /// Per-element |value| upper bound for a SIRA-proven pure-integer
+    /// activation, broadcast to its per-sample shape.
+    fn activation_amax(&self, name: &str, sample_shape: &[usize]) -> Option<Vec<f64>> {
+        let r = self.analysis.get(name).ok()?;
+        let ic = r.int.as_ref()?;
+        if !ic.is_pure_integer() {
+            return None;
+        }
+        let lo = ic.lo.broadcast_to(sample_shape).ok()?;
+        let hi = ic.hi.broadcast_to(sample_shape).ok()?;
+        let v: Vec<f64> = lo
+            .data()
+            .iter()
+            .zip(hi.data())
+            .map(|(&l, &h)| l.abs().max(h.abs()))
+            .collect();
+        if v.iter().all(|x| x.is_finite()) {
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Pick the weight representation: integer (i32/i64 accumulators)
+    /// when SIRA proves the operands integer and the worst-case
+    /// partial-sum magnitude `max_j Σ_k amax_k*|w_kj|` fits; f64
+    /// otherwise. `wdata` is `(k, n)` row-major.
+    fn choose_weight_mat(
+        &self,
+        out_name: &str,
+        amax_per_k: Option<Vec<f64>>,
+        wdata: &[f64],
+        k: usize,
+        n: usize,
+    ) -> WeightMat {
+        let fallback = || WeightMat::F64(wdata.to_vec());
+        // cheap reject via the shared SIRA metadata: no integer output
+        // interval means the operands cannot both be pure integers
+        if sira_int_bounds(self.analysis, out_name).is_none() {
+            return fallback();
+        }
+        let Some(amax) = amax_per_k else {
+            return fallback();
+        };
+        if amax.len() != k || !wdata.iter().all(|v| v.fract() == 0.0 && v.is_finite()) {
+            return fallback();
+        }
+        let mut worst = 0.0f64;
+        for j in 0..n {
+            let mut s = 0.0;
+            for (kk, &a) in amax.iter().enumerate() {
+                s += a * wdata[kk * n + j].abs();
+            }
+            worst = worst.max(s);
+        }
+        let amax_all = amax.iter().cloned().fold(0.0f64, f64::max);
+        let wmax = wdata.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        let peak = worst.max(amax_all).max(wmax);
+        if peak < I32_LIMIT {
+            WeightMat::I32(wdata.iter().map(|&v| v as i32).collect())
+        } else if peak < I64_LIMIT {
+            WeightMat::I64(wdata.iter().map(|&v| v as i64).collect())
+        } else {
+            fallback()
+        }
+    }
+
+    fn emit_matmul(
+        &mut self,
+        node: &Node,
+        a_shape: &[usize],
+        w: &Tensor,
+        consumed: &mut [bool],
+    ) -> Result<()> {
+        let (m, k) = (a_shape[0], a_shape[1]);
+        let n = w.shape()[1];
+        let amax = self.activation_amax(&node.inputs[0], a_shape).map(|full| {
+            // per-k max over the m rows
+            let mut per_k = vec![0.0f64; k];
+            for r in 0..m {
+                for kk in 0..k {
+                    per_k[kk] = per_k[kk].max(full[r * k + kk]);
+                }
+            }
+            per_k
+        });
+        let out_name = node.outputs[0].clone();
+        let wmat = self.choose_weight_mat(&out_name, amax, w.data(), k, n);
+        let out_shape = self.sample_shape(&out_name)?.to_vec();
+        let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
+        let (table, final_out) = match fused {
+            Some((t, mt_out)) => (Some(t), mt_out),
+            None => (None, out_name),
+        };
+        match &wmat {
+            WeightMat::F64(_) => self.stats.matmul_f64 += 1,
+            WeightMat::I32(_) => self.stats.matmul_i32 += 1,
+            WeightMat::I64(_) => self.stats.matmul_i64 += 1,
+        }
+        if table.is_some() {
+            self.stats.fused_thresholds += 1;
+        }
+        let a = self.slot_for_read(&node.inputs[0])?;
+        let out = self.new_slot(&final_out)?;
+        self.steps.push(Step::MatMul(MatMulStep {
+            a,
+            out,
+            m,
+            k,
+            n,
+            w: wmat,
+            fused: table,
+            a32: Vec::new(),
+            a64: Vec::new(),
+        }));
+        Ok(())
+    }
+
+    fn emit_conv(
+        &mut self,
+        node: &Node,
+        x_shape: &[usize],
+        w: &Tensor,
+        spec: Conv2dSpec,
+        consumed: &mut [bool],
+    ) -> Result<()> {
+        let (ch, h, wd) = (x_shape[1], x_shape[2], x_shape[3]);
+        let (kh, kw) = spec.kernel;
+        let oc = w.shape()[0];
+        let k = ch * kh * kw;
+        let (oh, ow) = spec.out_hw(h, wd);
+        // (oc, c*kh*kw) -> transpose -> (k, oc), exactly the executor's
+        // weight lowering
+        let wmat_t = w.reshape(&[oc, k])?.t()?;
+        let amax = self.activation_amax(&node.inputs[0], x_shape).map(|full| {
+            // per-channel max over spatial positions, expanded to im2col k
+            let mut chmax = vec![0.0f64; ch];
+            for (i, &v) in full.iter().enumerate() {
+                chmax[i / (h * wd)] = chmax[i / (h * wd)].max(v);
+            }
+            (0..k).map(|kk| chmax[kk / (kh * kw)]).collect::<Vec<f64>>()
+        });
+        let out_name = node.outputs[0].clone();
+        let wmat = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
+        let out_shape = self.sample_shape(&out_name)?.to_vec();
+        let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
+        let (table, final_out) = match fused {
+            Some((t, mt_out)) => (Some(t), mt_out),
+            None => (None, out_name),
+        };
+        match &wmat {
+            WeightMat::F64(_) => self.stats.conv_f64 += 1,
+            WeightMat::I32(_) => self.stats.conv_i32 += 1,
+            WeightMat::I64(_) => self.stats.conv_i64 += 1,
+        }
+        if table.is_some() {
+            self.stats.fused_thresholds += 1;
+        }
+        let x = self.slot_for_read(&node.inputs[0])?;
+        let out = self.new_slot(&final_out)?;
+        self.steps.push(Step::Conv(ConvStep {
+            x,
+            out,
+            c: ch,
+            h,
+            w: wd,
+            oc,
+            oh,
+            ow,
+            spec,
+            wmat,
+            fused: table,
+            cols: Vec::new(),
+            cols32: Vec::new(),
+            cols64: Vec::new(),
+        }));
+        Ok(())
+    }
+
+    fn emit_depthwise(
+        &mut self,
+        node: &Node,
+        x_shape: &[usize],
+        w: &Tensor,
+        spec: Conv2dSpec,
+        consumed: &mut [bool],
+    ) -> Result<()> {
+        let (ch, h, wd) = (x_shape[1], x_shape[2], x_shape[3]);
+        let (oh, ow) = spec.out_hw(h, wd);
+        let out_name = node.outputs[0].clone();
+        let out_shape = self.sample_shape(&out_name)?.to_vec();
+        let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
+        let (table, final_out) = match fused {
+            Some((t, mt_out)) => (Some(t), mt_out),
+            None => (None, out_name),
+        };
+        self.stats.depthwise += 1;
+        if table.is_some() {
+            self.stats.fused_thresholds += 1;
+        }
+        let x = self.slot_for_read(&node.inputs[0])?;
+        let out = self.new_slot(&final_out)?;
+        self.steps.push(Step::Depthwise(DepthwiseStep {
+            x,
+            out,
+            c: ch,
+            h,
+            w: wd,
+            oh,
+            ow,
+            spec,
+            weights: w.data().to_vec(),
+            fused: table,
+        }));
+        Ok(())
+    }
+
+    fn emit_generic(&mut self, node: &Node) -> Result<()> {
+        if node.outputs.len() != 1 {
+            bail!(
+                "engine: multi-output node '{}' ({}) is unsupported",
+                node.name,
+                node.op.name()
+            );
+        }
+        let mut ins = Vec::with_capacity(node.inputs.len());
+        for i in &node.inputs {
+            if let Some(t) = self.consts.get(i) {
+                ins.push(GSrc::Const(t.clone()));
+            } else {
+                let shape = self.sample_shape(i)?.to_vec();
+                ins.push(GSrc::Slot(self.slot_for_read(i)?, shape));
+            }
+        }
+        let out_shape = self.sample_shape(&node.outputs[0])?.to_vec();
+        let out_numel = out_shape.iter().product();
+        let out = self.new_slot(&node.outputs[0])?;
+        self.stats.generic += 1;
+        self.steps.push(Step::Generic(GenericStep {
+            op: node.op.clone(),
+            ins,
+            out,
+            out_shape,
+            out_numel,
+        }));
+        Ok(())
+    }
+
+    fn finish(mut self, input_name: &str, input_slot: usize) -> Result<Plan> {
+        let out_name = self.g.outputs[0].clone();
+        let input_shape = self.sample_shape(input_name)?.to_vec();
+        let input_numel: usize = input_shape.iter().product();
+        let output_shape = self.sample_shape(&out_name)?.to_vec();
+        let output_numel: usize = output_shape.iter().product();
+
+        if let Some(t) = self.consts.get(&out_name) {
+            // degenerate: the whole graph constant-folded
+            return Ok(Plan {
+                name: self.g.name.clone(),
+                steps: Vec::new(),
+                bufs: vec![Vec::new()],
+                input_phys: 0,
+                input_shape,
+                input_numel,
+                output_phys: 0,
+                output_shape: t.shape().to_vec(),
+                output_numel: t.numel(),
+                const_output: Some(t.clone()),
+                stats: self.stats,
+            });
+        }
+
+        let out_slot = self.slot_for_read(&out_name)?;
+        let uses: Vec<StepUse> = self
+            .steps
+            .iter()
+            .map(|s| StepUse {
+                reads: s.reads(),
+                writes: s.writes(),
+            })
+            .collect();
+        let layout = assign(self.slot_count, &uses, &[input_slot, out_slot]);
+        for step in &mut self.steps {
+            step.remap(&layout.phys);
+        }
+        self.stats.steps = self.steps.len();
+        self.stats.logical_slots = self.slot_count;
+        self.stats.physical_buffers = layout.n_phys;
+        Ok(Plan {
+            name: self.g.name.clone(),
+            steps: self.steps,
+            bufs: vec![Vec::new(); layout.n_phys],
+            input_phys: layout.phys[input_slot],
+            input_shape,
+            input_numel,
+            output_phys: layout.phys[out_slot],
+            output_shape,
+            output_numel,
+            const_output: None,
+            stats: self.stats,
+        })
+    }
+}

@@ -1,0 +1,352 @@
+//! Low-level compute primitives for the plan engine: fused elementwise
+//! micro-ops, sorted-threshold tables (binary-search MultiThreshold, the
+//! software twin of the §4.1.3 hardware kernel), weight matrices with
+//! SIRA-narrowed integer accumulation (§4.2), and a batched im2col.
+//!
+//! Every routine is arithmetic-identical to the reference
+//! [`crate::executor`] semantics: identical per-element operation order
+//! for elementwise chains, identical k-order (zero-skipping) accumulation
+//! for matrix products, and order-independent threshold counting — this
+//! is what makes the engine bit-exact against the interpreter (enforced
+//! by `rust/tests/engine_equivalence.rs`).
+
+use crate::tensor::{round_half_even, Conv2dSpec};
+
+/// A per-element constant parameter, broadcast-materialised at compile
+/// time to the (per-sample) shape of the tensor it applies to.
+#[derive(Clone, Debug)]
+pub enum Param {
+    Scalar(f64),
+    PerElem(Vec<f64>),
+}
+
+impl Param {
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> f64 {
+        match self {
+            Param::Scalar(v) => *v,
+            Param::PerElem(v) => v[i],
+        }
+    }
+}
+
+/// A sorted per-channel threshold table: the engine form of
+/// `Op::MultiThreshold`. Rows are sorted ascending so the comparison
+/// count (`Σ_i x >= Θ_i`, order-independent) becomes a binary search.
+#[derive(Clone, Debug)]
+pub struct ThresholdTable {
+    /// `channels * n` thresholds, each row ascending.
+    pub rows: Vec<f64>,
+    pub n: usize,
+    /// Threshold channels: 1 (per-tensor) or the data channel count.
+    pub channels: usize,
+    /// Intra-sample stride of the channel axis (product of dims after it).
+    pub ch_stride: usize,
+    pub out_scale: f64,
+    pub out_bias: f64,
+}
+
+/// Number of elements of ascending `row` that are <= x — equal to the
+/// linear count `Σ_i (x >= row[i])` the executor computes.
+#[inline]
+pub fn count_ge(row: &[f64], x: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = row.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if x >= row[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+impl ThresholdTable {
+    #[inline]
+    fn channel_of(&self, i: usize) -> usize {
+        if self.channels == 1 {
+            0
+        } else {
+            (i / self.ch_stride) % self.channels
+        }
+    }
+
+    /// Threshold a value at intra-sample flat index `i`.
+    #[inline]
+    pub fn apply(&self, v: f64, i: usize) -> f64 {
+        self.apply_channel(v, self.channel_of(i))
+    }
+
+    /// Threshold a value whose channel is already known (fused MAC tails).
+    #[inline]
+    pub fn apply_channel(&self, v: f64, ch: usize) -> f64 {
+        let ch = if self.channels == 1 { 0 } else { ch };
+        let row = &self.rows[ch * self.n..(ch + 1) * self.n];
+        self.out_bias + self.out_scale * count_ge(row, v) as f64
+    }
+}
+
+/// One fused elementwise operation, applied per element. `i` is the
+/// intra-sample flat index (for per-element parameters and thresholds).
+#[derive(Clone, Debug)]
+pub enum MicroOp {
+    Mul(Param),
+    Add(Param),
+    Sub(Param),
+    /// `param - x` (constant on the left of a Sub).
+    Rsub(Param),
+    Div(Param),
+    /// `param / x` (constant on the left of a Div).
+    Rdiv(Param),
+    Relu,
+    Sigmoid,
+    Floor,
+    Ceil,
+    RoundEven,
+    Clip { lo: f64, hi: f64 },
+    Threshold(ThresholdTable),
+}
+
+impl MicroOp {
+    #[inline(always)]
+    pub fn apply(&self, v: f64, i: usize) -> f64 {
+        match self {
+            MicroOp::Mul(p) => v * p.get(i),
+            MicroOp::Add(p) => v + p.get(i),
+            MicroOp::Sub(p) => v - p.get(i),
+            MicroOp::Rsub(p) => p.get(i) - v,
+            MicroOp::Div(p) => v / p.get(i),
+            MicroOp::Rdiv(p) => p.get(i) / v,
+            MicroOp::Relu => v.max(0.0),
+            MicroOp::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+            MicroOp::Floor => v.floor(),
+            MicroOp::Ceil => v.ceil(),
+            MicroOp::RoundEven => round_half_even(v),
+            MicroOp::Clip { lo, hi } => v.clamp(*lo, *hi),
+            MicroOp::Threshold(t) => t.apply(v, i),
+        }
+    }
+}
+
+/// Constant weight matrix of a MAC step, laid out `(k, n)` row-major
+/// (already transposed for row-times-matrix products). The integer
+/// variants carry SIRA-proven-width accumulation: `I32` when the
+/// compile-time worst-case partial-sum bound fits a 32-bit accumulator,
+/// `I64` when it needs up to 63 bits.
+#[derive(Clone, Debug)]
+pub enum WeightMat {
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl WeightMat {
+    pub fn is_integer(&self) -> bool {
+        !matches!(self, WeightMat::F64(_))
+    }
+}
+
+/// `acc += a_row · W` over `(k, n)` weights, accumulating in increasing
+/// k order with the same zero-skip as [`crate::tensor::Tensor::matmul`]
+/// (exact: skipped terms contribute +0.0). `acc` must be zeroed, len n.
+#[inline]
+pub fn mac_row_f64(a_row: &[f64], w: &[f64], n: usize, acc: &mut [f64]) {
+    for (kk, &a) in a_row.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let w_row = &w[kk * n..(kk + 1) * n];
+        for (j, &b) in w_row.iter().enumerate() {
+            acc[j] += a * b;
+        }
+    }
+}
+
+/// Integer variant, 32-bit accumulators (no overflow by the compile-time
+/// bound in [`super::fuse`]).
+#[inline]
+pub fn mac_row_i32(a_row: &[i32], w: &[i32], n: usize, acc: &mut [i32]) {
+    for (kk, &a) in a_row.iter().enumerate() {
+        if a == 0 {
+            continue;
+        }
+        let w_row = &w[kk * n..(kk + 1) * n];
+        for (j, &b) in w_row.iter().enumerate() {
+            acc[j] += a * b;
+        }
+    }
+}
+
+/// Integer variant, 64-bit accumulators.
+#[inline]
+pub fn mac_row_i64(a_row: &[i64], w: &[i64], n: usize, acc: &mut [i64]) {
+    for (kk, &a) in a_row.iter().enumerate() {
+        if a == 0 {
+            continue;
+        }
+        let w_row = &w[kk * n..(kk + 1) * n];
+        for (j, &b) in w_row.iter().enumerate() {
+            acc[j] += a * b;
+        }
+    }
+}
+
+/// Batched im2col into a caller-provided buffer: lowers `(B,C,H,W)` input
+/// data to a `(B*OH*OW, C*KH*KW)` matrix, padding with 0.0 — identical
+/// loop order and padding semantics to [`crate::tensor::im2col`].
+/// `cols` is resized to fit.
+pub fn im2col_batched(
+    x: &[f64],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    spec: Conv2dSpec,
+    cols: &mut Vec<f64>,
+) -> (usize, usize) {
+    let (kh, kw) = spec.kernel;
+    let (oh, ow) = spec.out_hw(h, w);
+    let k = c * kh * kw;
+    let rows = b * oh * ow;
+    if cols.len() < rows * k {
+        cols.resize(rows * k, 0.0);
+    }
+    let mut idx = 0usize;
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+                            let ix = (ox * spec.stride.1 + kx) as isize - spec.pad.1 as isize;
+                            let v = if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                0.0
+                            } else {
+                                x[((bi * c + ch) * h + iy as usize) * w + ix as usize]
+                            };
+                            cols[idx] = v;
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (rows, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn count_ge_matches_linear_scan() {
+        let row = [-3.0, -1.0, 0.0, 0.0, 2.5, 7.0];
+        for x in [-10.0, -3.0, -2.0, 0.0, 0.1, 2.5, 6.9, 7.0, 100.0] {
+            let linear = row.iter().filter(|&&t| x >= t).count();
+            assert_eq!(count_ge(&row, x), linear, "x = {x}");
+        }
+        assert_eq!(count_ge(&[], 1.0), 0);
+    }
+
+    #[test]
+    fn threshold_table_matches_executor_op() {
+        use crate::executor::execute_op;
+        use crate::graph::Op;
+        // 2 channels x 3 thresholds over a (1,2,1,2) NCHW tensor
+        let th = Tensor::new(&[2, 3], vec![0.0, 2.0, 5.0, -1.0, 1.0, 4.0]).unwrap();
+        let x = Tensor::new(&[1, 2, 1, 2], vec![1.0, 6.0, -2.0, 3.5]).unwrap();
+        let want = execute_op(
+            &Op::MultiThreshold {
+                out_scale: 2.0,
+                out_bias: -4.0,
+            },
+            &[x.clone(), th.clone()],
+        )
+        .unwrap();
+        let mut rows = th.data().to_vec();
+        for ch in 0..2 {
+            rows[ch * 3..(ch + 1) * 3].sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        let table = ThresholdTable {
+            rows,
+            n: 3,
+            channels: 2,
+            ch_stride: 2, // product of dims after the channel axis
+            out_scale: 2.0,
+            out_bias: -4.0,
+        };
+        let got: Vec<f64> = x
+            .data()
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| table.apply(v, i))
+            .collect();
+        assert_eq!(got, want[0].data());
+    }
+
+    #[test]
+    fn mac_rows_agree_across_widths() {
+        let a = [3.0, 0.0, -2.0, 7.0];
+        let w = [1.0, -1.0, 2.0, 0.5, -3.0, 4.0, 1.0, 1.0]; // (4,2)
+        let mut acc_f = vec![0.0; 2];
+        mac_row_f64(&a, &w, 2, &mut acc_f);
+        let ai: Vec<i32> = a.iter().map(|&v| v as i32).collect();
+        // use integer weights for the integer comparison
+        let wi = [1i32, -1, 2, 1, -3, 4, 1, 1];
+        let wf: Vec<f64> = wi.iter().map(|&v| v as f64).collect();
+        let mut acc_ref = vec![0.0; 2];
+        mac_row_f64(&a, &wf, 2, &mut acc_ref);
+        let mut acc32 = vec![0i32; 2];
+        mac_row_i32(&ai, &wi, 2, &mut acc32);
+        let ai64: Vec<i64> = a.iter().map(|&v| v as i64).collect();
+        let wi64: Vec<i64> = wi.iter().map(|&v| v as i64).collect();
+        let mut acc64 = vec![0i64; 2];
+        mac_row_i64(&ai64, &wi64, 2, &mut acc64);
+        for j in 0..2 {
+            assert_eq!(acc32[j] as f64, acc_ref[j]);
+            assert_eq!(acc64[j] as f64, acc_ref[j]);
+        }
+        let _ = acc_f;
+    }
+
+    #[test]
+    fn im2col_batched_matches_tensor_im2col() {
+        let spec = Conv2dSpec {
+            kernel: (3, 3),
+            stride: (2, 2),
+            pad: (1, 1),
+        };
+        let x = Tensor::new(&[2, 2, 5, 5], (0..100).map(|i| i as f64 - 30.0).collect()).unwrap();
+        let (want, _, _) = crate::tensor::im2col(&x, spec, 0.0).unwrap();
+        let mut cols = Vec::new();
+        let (rows, k) = im2col_batched(x.data(), 2, 2, 5, 5, spec, &mut cols);
+        assert_eq!(&cols[..rows * k], want.data());
+    }
+
+    #[test]
+    fn micro_ops_match_executor_elementwise() {
+        let ops = [
+            MicroOp::Mul(Param::Scalar(0.3)),
+            MicroOp::Add(Param::PerElem(vec![1.0, -2.0, 0.5])),
+            MicroOp::Relu,
+            MicroOp::RoundEven,
+            MicroOp::Clip { lo: -1.0, hi: 4.0 },
+        ];
+        let xs = [-3.7, 0.0, 9.9];
+        for (i, &x) in xs.iter().enumerate() {
+            let mut v = x;
+            for op in &ops {
+                v = op.apply(v, i);
+            }
+            // manual reference, same order
+            let p = [1.0, -2.0, 0.5][i];
+            let want = round_half_even((x * 0.3 + p).max(0.0)).clamp(-1.0, 4.0);
+            assert_eq!(v, want);
+        }
+    }
+}

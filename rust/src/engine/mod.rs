@@ -1,0 +1,310 @@
+//! The serving hot path: an ahead-of-time **plan compiler** and
+//! **batched integer runtime** — the second execution backend next to the
+//! interpretive [`crate::executor`].
+//!
+//! The interpreter is the reference: it re-resolves the graph node by
+//! node, clones every input tensor (weights included) on every
+//! inference, and allocates fresh output tensors per op. That is the
+//! right shape for verification and instrumentation, and the wrong shape
+//! for serving. Following the FINN-R observation that end-to-end
+//! throughput is set by the compiled dataflow rather than the model
+//! math, this module turns SIRA's per-tensor facts into a specialised
+//! execution artifact:
+//!
+//! ```text
+//! let analysis = sira::analyze(&graph, &input_ranges)?;
+//! let mut plan  = engine::compile(&graph, &analysis)?;   // AOT
+//! let outputs   = plan.run_batch(&inputs)?;              // hot path
+//! ```
+//!
+//! See [`fuse`] for what the compiler specialises (constant folding,
+//! elementwise-chain fusion, im2col+MVU+threshold fusion, SIRA-narrowed
+//! i32/i64 accumulators, buffer-arena reuse) and
+//! `rust/tests/engine_equivalence.rs` for the bit-exactness contract
+//! against the interpreter on all four zoo workloads.
+
+pub mod arena;
+pub mod fuse;
+pub mod kernels;
+pub mod plan;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::passes::{fold, lower, streamline, thresholds};
+use crate::sira::{analyze, Analysis, SiRange};
+
+pub use fuse::compile;
+pub use plan::{Plan, PlanStats};
+
+/// Streamline `g` in place (lower → fold → extract scales → aggregate →
+/// threshold-convert, the §4.1 pipeline) and return a fresh SIRA
+/// analysis of the streamlined graph. Compiling the result yields plans
+/// whose MACs run on pure-integer operands with narrowed accumulators —
+/// the configuration the serving benchmarks use.
+pub fn prepare_streamlined(
+    g: &mut Graph,
+    input_ranges: &BTreeMap<String, SiRange>,
+) -> Result<Analysis> {
+    lower::lower_all(g)?;
+    fold::fold_constants(g, false)?;
+    streamline::extract_quant_scales(g)?;
+    fold::duplicate_shared_initializers(g)?;
+    streamline::streamline(g)?;
+    thresholds::convert_to_thresholds(g, input_ranges)?;
+    analyze(g, input_ranges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::Executor;
+    use crate::graph::{Node, Op, RoundMode};
+    use crate::models::{Granularity, QnnBuilder};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn exact_match(g: &Graph, analysis: &Analysis, xs: &[Tensor]) {
+        let mut plan = compile(g, analysis).unwrap();
+        let mut exec = Executor::new(g).unwrap();
+        let ys = plan.run_batch(xs).unwrap();
+        assert_eq!(ys.len(), xs.len());
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = exec.run_single(x).unwrap().remove(0);
+            assert_eq!(want.shape(), y.shape());
+            assert_eq!(want.data(), y.data(), "engine output differs");
+        }
+    }
+
+    fn input_batch(rng: &mut Rng, shape: &[usize], b: usize) -> Vec<Tensor> {
+        let numel: usize = shape.iter().product();
+        (0..b)
+            .map(|_| {
+                Tensor::new(shape, (0..numel).map(|_| rng.int_in(0, 255) as f64).collect())
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mlp_bit_exact_vs_executor() {
+        let mut b = QnnBuilder::new("mlp", 11);
+        b.input("x", &[1, 12]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.linear(8, 2, Granularity::PerChannel, true);
+        b.batchnorm();
+        b.relu();
+        b.quant_act(2, false, Granularity::PerTensor, 4.0);
+        b.linear(5, 4, Granularity::PerTensor, true);
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            crate::sira::SiRange::scalar(0.0, 255.0),
+        );
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut rng = Rng::new(99);
+        exact_match(&m, &analysis, &input_batch(&mut rng, &[1, 12], 5));
+    }
+
+    #[test]
+    fn cnn_with_pool_and_residual_bit_exact() {
+        let mut b = QnnBuilder::new("cnn", 21);
+        b.input("x", &[1, 2, 8, 8]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.conv(4, 3, 1, 1, 3, Granularity::PerChannel, false);
+        b.batchnorm();
+        b.relu();
+        b.quant_act(3, true, Granularity::PerTensor, 4.0);
+        let tap = b.current().to_string();
+        let tap_shape = b.current_shape().to_vec();
+        b.conv(4, 3, 1, 1, 3, Granularity::PerChannel, false);
+        b.batchnorm();
+        b.quant_act(3, true, Granularity::PerTensor, 4.0);
+        let main = b.current().to_string();
+        let main_shape = b.current_shape().to_vec();
+        b.seek(&main, &main_shape);
+        b.add_residual(&tap);
+        let _ = tap_shape;
+        b.relu();
+        b.maxpool(2);
+        b.global_avgpool();
+        b.flatten();
+        b.linear(3, 4, Granularity::PerTensor, true);
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut rng = Rng::new(7);
+        exact_match(&m, &analysis, &input_batch(&mut rng, &[1, 2, 8, 8], 3));
+    }
+
+    #[test]
+    fn depthwise_conv_bit_exact() {
+        let mut b = QnnBuilder::new("dw", 31);
+        b.input("x", &[1, 4, 6, 6]);
+        b.quant_act(4, false, Granularity::PerChannel, 8.0);
+        b.conv(0, 3, 1, 1, 4, Granularity::PerChannel, true);
+        b.relu();
+        b.global_avgpool();
+        b.flatten();
+        b.linear(3, 4, Granularity::PerTensor, false);
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 15.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut rng = Rng::new(13);
+        let xs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                Tensor::new(
+                    &[1, 4, 6, 6],
+                    (0..144).map(|_| rng.int_in(0, 15) as f64).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        exact_match(&m, &analysis, &xs);
+    }
+
+    /// Pure-integer tail → MultiThreshold graph: the MatMul must compile
+    /// onto a narrowed integer accumulator and fuse the threshold.
+    #[test]
+    fn integer_matmul_with_fused_threshold() {
+        let mut g = Graph::new("intmm");
+        g.add_input("x", &[1, 4]);
+        g.add_initializer("one", Tensor::scalar(1.0));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("bits", Tensor::scalar(8.0));
+        // x is quantized to pure integers by a unit-scale quantizer
+        g.add_node(Node::new(
+            "q",
+            Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &["x", "one", "z", "bits"],
+            &["xq"],
+        ));
+        g.add_initializer(
+            "W",
+            Tensor::new(&[4, 3], vec![1.0, -2.0, 3.0, 0.0, 5.0, -1.0, 2.0, 2.0, 0.0, -3.0, 1.0, 4.0])
+                .unwrap(),
+        );
+        g.add_node(Node::new("mm", Op::MatMul, &["xq", "W"], &["h"]));
+        g.add_initializer(
+            "th",
+            Tensor::new(&[1, 3], vec![-50.0, 0.0, 75.0]).unwrap(),
+        );
+        g.add_node(Node::new(
+            "mt",
+            Op::MultiThreshold {
+                out_scale: 1.0,
+                out_bias: 0.0,
+            },
+            &["h", "th"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(-100.0, 100.0));
+        let analysis = analyze(&g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        assert_eq!(plan.stats().matmul_i32, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().fused_thresholds, 1);
+        let mut rng = Rng::new(5);
+        let xs: Vec<Tensor> = (0..4)
+            .map(|_| {
+                Tensor::new(&[1, 4], (0..4).map(|_| rng.int_in(-100, 100) as f64).collect())
+                    .unwrap()
+            })
+            .collect();
+        exact_match(&g, &analysis, &xs);
+    }
+
+    /// The streamlined pipeline produces integer MACs on a real QNN.
+    #[test]
+    fn streamlined_mlp_uses_integer_macs() {
+        let mut b = QnnBuilder::new("smlp", 41);
+        b.input("x", &[1, 10]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.linear(6, 2, Granularity::PerTensor, false);
+        b.batchnorm();
+        b.relu();
+        b.quant_act(2, false, Granularity::PerTensor, 4.0);
+        b.linear(4, 4, Granularity::PerTensor, true);
+        let mut g = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = prepare_streamlined(&mut g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        assert!(
+            plan.stats().integer_macs() >= 1,
+            "no integer MACs after streamlining: {}",
+            plan.stats()
+        );
+        let mut rng = Rng::new(3);
+        exact_match(&g, &analysis, &input_batch(&mut rng, &[1, 10], 4));
+    }
+
+    #[test]
+    fn batch_matches_single_runs() {
+        let mut b = QnnBuilder::new("bm", 51);
+        b.input("x", &[1, 8]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.linear(5, 3, Granularity::PerTensor, true);
+        b.relu();
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut plan = compile(&m, &analysis).unwrap();
+        let mut rng = Rng::new(17);
+        let xs = input_batch(&mut rng, &[1, 8], 6);
+        let batched = plan.run_batch(&xs).unwrap();
+        for (x, yb) in xs.iter().zip(&batched) {
+            let y1 = plan.run_one(x).unwrap();
+            assert_eq!(y1.data(), yb.data());
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let mut b = QnnBuilder::new("shape", 61);
+        b.input("x", &[1, 8]);
+        b.relu();
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(-1.0, 1.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut plan = compile(&m, &analysis).unwrap();
+        assert!(plan.run_batch(&[Tensor::zeros(&[1, 9])]).is_err());
+        assert!(plan.run_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn arena_reuses_buffers_on_deep_chains() {
+        let mut b = QnnBuilder::new("deep", 71);
+        b.input("x", &[1, 16]);
+        for _ in 0..6 {
+            b.quant_act(8, true, Granularity::PerTensor, 64.0);
+            b.linear(16, 4, Granularity::PerTensor, true);
+            b.relu();
+        }
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let plan = compile(&m, &analysis).unwrap();
+        let st = plan.stats();
+        assert!(
+            st.physical_buffers < st.logical_slots,
+            "no buffer reuse: {st}"
+        );
+        let mut rng = Rng::new(23);
+        exact_match(&m, &analysis, &input_batch(&mut rng, &[1, 16], 2));
+    }
+}

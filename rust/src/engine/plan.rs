@@ -1,0 +1,723 @@
+//! The compiled execution plan: a flat, topologically ordered list of
+//! fused kernels over physical buffers, plus the batched runner.
+//!
+//! A [`Plan`] is produced by [`super::fuse::compile`] from a graph and
+//! its SIRA [`crate::sira::Analysis`]. All constants (weights, folded
+//! quantizers, aggregated scales/biases, threshold tables) are baked into
+//! the steps at compile time; at run time the only dynamic state is the
+//! buffer arena, sized `batch * per_sample_numel` per buffer and reused
+//! across calls — the hot path performs no per-node graph resolution, no
+//! name lookups, and no constant-tensor clones (all of which dominate the
+//! interpretive [`crate::executor::Executor`]'s per-inference cost).
+
+use anyhow::{bail, Context, Result};
+
+use crate::executor::execute_op;
+use crate::graph::Op;
+use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
+
+use super::kernels::{
+    im2col_batched, mac_row_f64, mac_row_i32, mac_row_i64, MicroOp, ThresholdTable, WeightMat,
+};
+
+/// Fused elementwise chain: one pass over the input applying a sequence
+/// of micro-ops per element (aggregated scales/biases, quantizers,
+/// activations, thresholds).
+#[derive(Clone, Debug)]
+pub(crate) struct EwChainStep {
+    pub input: usize,
+    pub out: usize,
+    /// per-sample element count (input and output shapes agree)
+    pub numel: usize,
+    pub ops: Vec<MicroOp>,
+}
+
+/// Batched matrix multiply against a constant weight matrix, optionally
+/// finishing each output element through a fused threshold table.
+#[derive(Clone, Debug)]
+pub(crate) struct MatMulStep {
+    pub a: usize,
+    pub out: usize,
+    /// per-sample rows of the left operand (1 for the zoo workloads)
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub w: WeightMat,
+    pub fused: Option<ThresholdTable>,
+    // run-time scratch, reused across calls
+    pub a32: Vec<i32>,
+    pub a64: Vec<i64>,
+}
+
+/// Dense convolution as batched im2col + matrix multiply, scattering
+/// results straight into NCHW layout (the `permute` the interpreter
+/// performs is folded into the output indexing), with optional fused
+/// per-channel thresholding.
+#[derive(Clone, Debug)]
+pub(crate) struct ConvStep {
+    pub x: usize,
+    pub out: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub oc: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub spec: Conv2dSpec,
+    /// `(c*kh*kw, oc)` weight matrix
+    pub wmat: WeightMat,
+    pub fused: Option<ThresholdTable>,
+    pub cols: Vec<f64>,
+    pub cols32: Vec<i32>,
+    pub cols64: Vec<i64>,
+}
+
+/// Depthwise convolution (per-channel kernels), optional fused threshold.
+#[derive(Clone, Debug)]
+pub(crate) struct DepthwiseStep {
+    pub x: usize,
+    pub out: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub spec: Conv2dSpec,
+    /// `(c, kh, kw)` flattened
+    pub weights: Vec<f64>,
+    pub fused: Option<ThresholdTable>,
+}
+
+/// Max/average pooling over NCHW (count_include_pad = false, identical
+/// to [`crate::tensor::pool2d`]).
+#[derive(Clone, Debug)]
+pub(crate) struct PoolStep {
+    pub x: usize,
+    pub out: usize,
+    pub kind: PoolKind,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub spec: Conv2dSpec,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum BinKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Elementwise binary op over two same-shape dynamic tensors (residual
+/// adds and friends).
+#[derive(Clone, Debug)]
+pub(crate) struct BinaryStep {
+    pub a: usize,
+    pub b: usize,
+    pub out: usize,
+    pub numel: usize,
+    pub kind: BinKind,
+}
+
+/// Source of a generic-step operand.
+#[derive(Clone, Debug)]
+pub(crate) enum GSrc {
+    /// dynamic tensor: (slot, per-sample shape)
+    Slot(usize, Vec<usize>),
+    Const(Tensor),
+}
+
+/// Fallback: execute the reference operator per sample via
+/// [`crate::executor::execute_op`]. Slow but exact and fully general —
+/// anything the interpreter runs, the plan runs.
+#[derive(Clone, Debug)]
+pub(crate) struct GenericStep {
+    pub op: Op,
+    pub ins: Vec<GSrc>,
+    pub out: usize,
+    pub out_shape: Vec<usize>,
+    pub out_numel: usize,
+}
+
+#[derive(Clone, Debug)]
+pub(crate) enum Step {
+    Ew(EwChainStep),
+    MatMul(MatMulStep),
+    Conv(ConvStep),
+    Depthwise(DepthwiseStep),
+    Pool(PoolStep),
+    Binary(BinaryStep),
+    Generic(GenericStep),
+}
+
+impl Step {
+    /// Logical slots this step reads.
+    pub(crate) fn reads(&self) -> Vec<usize> {
+        match self {
+            Step::Ew(s) => vec![s.input],
+            Step::MatMul(s) => vec![s.a],
+            Step::Conv(s) => vec![s.x],
+            Step::Depthwise(s) => vec![s.x],
+            Step::Pool(s) => vec![s.x],
+            Step::Binary(s) => vec![s.a, s.b],
+            Step::Generic(s) => s
+                .ins
+                .iter()
+                .filter_map(|src| match src {
+                    GSrc::Slot(id, _) => Some(*id),
+                    GSrc::Const(_) => None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Logical slots this step writes.
+    pub(crate) fn writes(&self) -> Vec<usize> {
+        match self {
+            Step::Ew(s) => vec![s.out],
+            Step::MatMul(s) => vec![s.out],
+            Step::Conv(s) => vec![s.out],
+            Step::Depthwise(s) => vec![s.out],
+            Step::Pool(s) => vec![s.out],
+            Step::Binary(s) => vec![s.out],
+            Step::Generic(s) => vec![s.out],
+        }
+    }
+
+    /// Rewrite logical slot ids to physical buffer ids.
+    pub(crate) fn remap(&mut self, phys: &[usize]) {
+        match self {
+            Step::Ew(s) => {
+                s.input = phys[s.input];
+                s.out = phys[s.out];
+            }
+            Step::MatMul(s) => {
+                s.a = phys[s.a];
+                s.out = phys[s.out];
+            }
+            Step::Conv(s) => {
+                s.x = phys[s.x];
+                s.out = phys[s.out];
+            }
+            Step::Depthwise(s) => {
+                s.x = phys[s.x];
+                s.out = phys[s.out];
+            }
+            Step::Pool(s) => {
+                s.x = phys[s.x];
+                s.out = phys[s.out];
+            }
+            Step::Binary(s) => {
+                s.a = phys[s.a];
+                s.b = phys[s.b];
+                s.out = phys[s.out];
+            }
+            Step::Generic(s) => {
+                for src in &mut s.ins {
+                    if let GSrc::Slot(id, _) = src {
+                        *id = phys[*id];
+                    }
+                }
+                s.out = phys[s.out];
+            }
+        }
+    }
+}
+
+/// Take a physical output buffer out of the arena, grown to `need`.
+/// The buffer is detached so input buffers can be borrowed immutably
+/// while it is written; the caller puts it back when done.
+#[inline]
+fn take_out(bufs: &mut [Vec<f64>], phys: usize, need: usize) -> Vec<f64> {
+    let mut v = std::mem::take(&mut bufs[phys]);
+    if v.len() < need {
+        v.resize(need, 0.0);
+    }
+    v
+}
+
+impl Step {
+    fn run(&mut self, bufs: &mut [Vec<f64>], b: usize) -> Result<()> {
+        match self {
+            Step::Ew(s) => {
+                let need = b * s.numel;
+                let mut out = take_out(bufs, s.out, need);
+                let x = &bufs[s.input][..need];
+                let numel = s.numel;
+                for (i, (&v0, o)) in x.iter().zip(out[..need].iter_mut()).enumerate() {
+                    let si = i % numel;
+                    let mut v = v0;
+                    for op in &s.ops {
+                        v = op.apply(v, si);
+                    }
+                    *o = v;
+                }
+                bufs[s.out] = out;
+            }
+            Step::MatMul(s) => {
+                let rows = b * s.m;
+                let need = rows * s.n;
+                let mut out = take_out(bufs, s.out, need);
+                let a = &bufs[s.a][..rows * s.k];
+                match &s.w {
+                    WeightMat::F64(w) => {
+                        let mut acc = vec![0.0f64; s.n];
+                        for r in 0..rows {
+                            acc.iter_mut().for_each(|v| *v = 0.0);
+                            mac_row_f64(&a[r * s.k..(r + 1) * s.k], w, s.n, &mut acc);
+                            write_row(&mut out[r * s.n..(r + 1) * s.n], &acc, &s.fused);
+                        }
+                    }
+                    WeightMat::I32(w) => {
+                        if s.a32.len() < a.len() {
+                            s.a32.resize(a.len(), 0);
+                        }
+                        for (d, &v) in s.a32.iter_mut().zip(a.iter()) {
+                            *d = v as i32;
+                        }
+                        let mut acc = vec![0i32; s.n];
+                        for r in 0..rows {
+                            acc.iter_mut().for_each(|v| *v = 0);
+                            mac_row_i32(&s.a32[r * s.k..(r + 1) * s.k], w, s.n, &mut acc);
+                            write_row_i(&mut out[r * s.n..(r + 1) * s.n], &acc, &s.fused);
+                        }
+                    }
+                    WeightMat::I64(w) => {
+                        if s.a64.len() < a.len() {
+                            s.a64.resize(a.len(), 0);
+                        }
+                        for (d, &v) in s.a64.iter_mut().zip(a.iter()) {
+                            *d = v as i64;
+                        }
+                        let mut acc = vec![0i64; s.n];
+                        for r in 0..rows {
+                            acc.iter_mut().for_each(|v| *v = 0);
+                            mac_row_i64(&s.a64[r * s.k..(r + 1) * s.k], w, s.n, &mut acc);
+                            write_row_i(&mut out[r * s.n..(r + 1) * s.n], &acc, &s.fused);
+                        }
+                    }
+                }
+                bufs[s.out] = out;
+            }
+            Step::Conv(s) => {
+                let per_out = s.oc * s.oh * s.ow;
+                let need = b * per_out;
+                let mut out = take_out(bufs, s.out, need);
+                let x = &bufs[s.x][..b * s.c * s.h * s.w];
+                let mut cols = std::mem::take(&mut s.cols);
+                let (rows, k) = im2col_batched(x, b, s.c, s.h, s.w, s.spec, &mut cols);
+                let frame = s.oh * s.ow;
+                match &s.wmat {
+                    WeightMat::F64(w) => {
+                        let mut acc = vec![0.0f64; s.oc];
+                        for r in 0..rows {
+                            acc.iter_mut().for_each(|v| *v = 0.0);
+                            mac_row_f64(&cols[r * k..(r + 1) * k], w, s.oc, &mut acc);
+                            scatter_row(&mut out, &acc, r, frame, s.ow, per_out, &s.fused);
+                        }
+                    }
+                    WeightMat::I32(w) => {
+                        if s.cols32.len() < rows * k {
+                            s.cols32.resize(rows * k, 0);
+                        }
+                        for (d, &v) in s.cols32.iter_mut().zip(cols[..rows * k].iter()) {
+                            *d = v as i32;
+                        }
+                        let mut acc = vec![0i32; s.oc];
+                        for r in 0..rows {
+                            acc.iter_mut().for_each(|v| *v = 0);
+                            mac_row_i32(&s.cols32[r * k..(r + 1) * k], w, s.oc, &mut acc);
+                            scatter_row_i(&mut out, &acc, r, frame, s.ow, per_out, &s.fused);
+                        }
+                    }
+                    WeightMat::I64(w) => {
+                        if s.cols64.len() < rows * k {
+                            s.cols64.resize(rows * k, 0);
+                        }
+                        for (d, &v) in s.cols64.iter_mut().zip(cols[..rows * k].iter()) {
+                            *d = v as i64;
+                        }
+                        let mut acc = vec![0i64; s.oc];
+                        for r in 0..rows {
+                            acc.iter_mut().for_each(|v| *v = 0);
+                            mac_row_i64(&s.cols64[r * k..(r + 1) * k], w, s.oc, &mut acc);
+                            scatter_row_i(&mut out, &acc, r, frame, s.ow, per_out, &s.fused);
+                        }
+                    }
+                }
+                s.cols = cols;
+                bufs[s.out] = out;
+            }
+            Step::Depthwise(s) => {
+                let per_out = s.c * s.oh * s.ow;
+                let need = b * per_out;
+                let mut out = take_out(bufs, s.out, need);
+                let x = &bufs[s.x][..b * s.c * s.h * s.w];
+                let (kh, kw) = s.spec.kernel;
+                for bi in 0..b {
+                    for ch in 0..s.c {
+                        for oy in 0..s.oh {
+                            for ox in 0..s.ow {
+                                let mut acc = 0.0f64;
+                                for ky in 0..kh {
+                                    for kx in 0..kw {
+                                        let iy = (oy * s.spec.stride.0 + ky) as isize
+                                            - s.spec.pad.0 as isize;
+                                        let ix = (ox * s.spec.stride.1 + kx) as isize
+                                            - s.spec.pad.1 as isize;
+                                        if iy < 0
+                                            || ix < 0
+                                            || iy >= s.h as isize
+                                            || ix >= s.w as isize
+                                        {
+                                            continue;
+                                        }
+                                        acc += x[((bi * s.c + ch) * s.h + iy as usize) * s.w
+                                            + ix as usize]
+                                            * s.weights[(ch * kh + ky) * kw + kx];
+                                    }
+                                }
+                                let v = match &s.fused {
+                                    Some(t) => t.apply_channel(acc, ch),
+                                    None => acc,
+                                };
+                                out[((bi * s.c + ch) * s.oh + oy) * s.ow + ox] = v;
+                            }
+                        }
+                    }
+                }
+                bufs[s.out] = out;
+            }
+            Step::Pool(s) => {
+                let per_out = s.c * s.oh * s.ow;
+                let need = b * per_out;
+                let mut out = take_out(bufs, s.out, need);
+                let x = &bufs[s.x][..b * s.c * s.h * s.w];
+                let (kh, kw) = s.spec.kernel;
+                for bi in 0..b {
+                    for ch in 0..s.c {
+                        for oy in 0..s.oh {
+                            for ox in 0..s.ow {
+                                let mut acc = match s.kind {
+                                    PoolKind::Max => f64::NEG_INFINITY,
+                                    PoolKind::Average => 0.0,
+                                };
+                                let mut count = 0usize;
+                                for ky in 0..kh {
+                                    for kx in 0..kw {
+                                        let iy = (oy * s.spec.stride.0 + ky) as isize
+                                            - s.spec.pad.0 as isize;
+                                        let ix = (ox * s.spec.stride.1 + kx) as isize
+                                            - s.spec.pad.1 as isize;
+                                        if iy < 0
+                                            || ix < 0
+                                            || iy >= s.h as isize
+                                            || ix >= s.w as isize
+                                        {
+                                            continue;
+                                        }
+                                        let v = x[((bi * s.c + ch) * s.h + iy as usize) * s.w
+                                            + ix as usize];
+                                        match s.kind {
+                                            PoolKind::Max => acc = acc.max(v),
+                                            PoolKind::Average => acc += v,
+                                        }
+                                        count += 1;
+                                    }
+                                }
+                                out[((bi * s.c + ch) * s.oh + oy) * s.ow + ox] = match s.kind {
+                                    PoolKind::Max => acc,
+                                    PoolKind::Average => acc / count.max(1) as f64,
+                                };
+                            }
+                        }
+                    }
+                }
+                bufs[s.out] = out;
+            }
+            Step::Binary(s) => {
+                let need = b * s.numel;
+                let mut out = take_out(bufs, s.out, need);
+                let xa = &bufs[s.a][..need];
+                let xb = &bufs[s.b][..need];
+                match s.kind {
+                    BinKind::Add => ew2(xa, xb, &mut out[..need], |a, c| a + c),
+                    BinKind::Sub => ew2(xa, xb, &mut out[..need], |a, c| a - c),
+                    BinKind::Mul => ew2(xa, xb, &mut out[..need], |a, c| a * c),
+                    BinKind::Div => ew2(xa, xb, &mut out[..need], |a, c| a / c),
+                }
+                bufs[s.out] = out;
+            }
+            Step::Generic(s) => {
+                let need = b * s.out_numel;
+                let mut out = take_out(bufs, s.out, need);
+                for bi in 0..b {
+                    let ins: Vec<Tensor> = s
+                        .ins
+                        .iter()
+                        .map(|src| match src {
+                            GSrc::Const(t) => Ok(t.clone()),
+                            GSrc::Slot(id, shape) => {
+                                let numel: usize = shape.iter().product();
+                                Tensor::new(shape, bufs[*id][bi * numel..(bi + 1) * numel].to_vec())
+                            }
+                        })
+                        .collect::<Result<_>>()?;
+                    let y = execute_op(&s.op, &ins)
+                        .with_context(|| format!("generic step {:?}", s.op.name()))?
+                        .remove(0);
+                    if y.numel() != s.out_numel {
+                        bail!(
+                            "generic step {} produced {} elements, expected {}",
+                            s.op.name(),
+                            y.numel(),
+                            s.out_numel
+                        );
+                    }
+                    out[bi * s.out_numel..(bi + 1) * s.out_numel].copy_from_slice(y.data());
+                }
+                bufs[s.out] = out;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[inline]
+fn ew2(a: &[f64], b: &[f64], out: &mut [f64], f: impl Fn(f64, f64) -> f64) {
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = f(x, y);
+    }
+}
+
+/// Write one matmul output row, column channel = j.
+#[inline]
+fn write_row(out_row: &mut [f64], acc: &[f64], fused: &Option<ThresholdTable>) {
+    match fused {
+        None => out_row.copy_from_slice(acc),
+        Some(t) => {
+            for (j, (&v, o)) in acc.iter().zip(out_row.iter_mut()).enumerate() {
+                *o = t.apply_channel(v, j);
+            }
+        }
+    }
+}
+
+#[inline]
+fn write_row_i<T: Copy + Into<i64>>(out_row: &mut [f64], acc: &[T], fused: &Option<ThresholdTable>) {
+    match fused {
+        None => {
+            for (o, &v) in out_row.iter_mut().zip(acc.iter()) {
+                *o = Into::<i64>::into(v) as f64;
+            }
+        }
+        Some(t) => {
+            for (j, (&v, o)) in acc.iter().zip(out_row.iter_mut()).enumerate() {
+                *o = t.apply_channel(Into::<i64>::into(v) as f64, j);
+            }
+        }
+    }
+}
+
+/// Scatter one conv row (output position `r`, all output channels) into
+/// NCHW layout — the fold of the interpreter's final `permute`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn scatter_row(
+    out: &mut [f64],
+    acc: &[f64],
+    r: usize,
+    frame: usize,
+    ow: usize,
+    per_out: usize,
+    fused: &Option<ThresholdTable>,
+) {
+    let bi = r / frame;
+    let rem = r % frame;
+    let oy = rem / ow;
+    let ox = rem % ow;
+    let oh = frame / ow;
+    let base = bi * per_out + oy * ow + ox;
+    for (j, &v) in acc.iter().enumerate() {
+        let val = match fused {
+            Some(t) => t.apply_channel(v, j),
+            None => v,
+        };
+        out[base + j * oh * ow] = val;
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn scatter_row_i<T: Copy + Into<i64>>(
+    out: &mut [f64],
+    acc: &[T],
+    r: usize,
+    frame: usize,
+    ow: usize,
+    per_out: usize,
+    fused: &Option<ThresholdTable>,
+) {
+    let bi = r / frame;
+    let rem = r % frame;
+    let oy = rem / ow;
+    let ox = rem % ow;
+    let oh = frame / ow;
+    let base = bi * per_out + oy * ow + ox;
+    for (j, &v) in acc.iter().enumerate() {
+        let f = Into::<i64>::into(v) as f64;
+        let val = match fused {
+            Some(t) => t.apply_channel(f, j),
+            None => f,
+        };
+        out[base + j * oh * ow] = val;
+    }
+}
+
+/// Composition statistics of a compiled plan (also the observable for the
+/// equivalence tests asserting the integer fast paths actually engage).
+#[derive(Clone, Debug, Default)]
+pub struct PlanStats {
+    pub steps: usize,
+    pub ew_chains: usize,
+    pub fused_micro_ops: usize,
+    pub matmul_f64: usize,
+    pub matmul_i32: usize,
+    pub matmul_i64: usize,
+    pub conv_f64: usize,
+    pub conv_i32: usize,
+    pub conv_i64: usize,
+    pub depthwise: usize,
+    pub pool: usize,
+    pub binary: usize,
+    pub generic: usize,
+    pub fused_thresholds: usize,
+    pub folded_nodes: usize,
+    pub logical_slots: usize,
+    pub physical_buffers: usize,
+}
+
+impl PlanStats {
+    /// MAC steps running on narrowed integer accumulators.
+    pub fn integer_macs(&self) -> usize {
+        self.matmul_i32 + self.matmul_i64 + self.conv_i32 + self.conv_i64
+    }
+}
+
+impl std::fmt::Display for PlanStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} steps (ew {} / mm {}+{}i32+{}i64 / conv {}+{}i32+{}i64 / dw {} / pool {} / bin {} / gen {}), \
+             {} fused thresholds, {} folded nodes, {} buffers for {} tensors",
+            self.steps,
+            self.ew_chains,
+            self.matmul_f64,
+            self.matmul_i32,
+            self.matmul_i64,
+            self.conv_f64,
+            self.conv_i32,
+            self.conv_i64,
+            self.depthwise,
+            self.pool,
+            self.binary,
+            self.generic,
+            self.fused_thresholds,
+            self.folded_nodes,
+            self.physical_buffers,
+            self.logical_slots,
+        )
+    }
+}
+
+/// A compiled, batched execution plan. See the module docs.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub(crate) name: String,
+    pub(crate) steps: Vec<Step>,
+    pub(crate) bufs: Vec<Vec<f64>>,
+    pub(crate) input_phys: usize,
+    pub(crate) input_shape: Vec<usize>,
+    pub(crate) input_numel: usize,
+    pub(crate) output_phys: usize,
+    pub(crate) output_shape: Vec<usize>,
+    pub(crate) output_numel: usize,
+    /// Set when the whole graph constant-folds (degenerate but legal).
+    pub(crate) const_output: Option<Tensor>,
+    pub(crate) stats: PlanStats,
+}
+
+impl Plan {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn stats(&self) -> &PlanStats {
+        &self.stats
+    }
+
+    /// Per-sample input shape the plan expects (leading dim 1).
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    /// Per-sample output shape (leading dim 1).
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    /// Execute the plan over a batch of per-sample inputs; returns one
+    /// output tensor per input, in order.
+    pub fn run_batch(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let b = inputs.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        if let Some(t) = &self.const_output {
+            return Ok(vec![t.clone(); b]);
+        }
+        for t in inputs {
+            if t.shape() != &self.input_shape[..] {
+                bail!(
+                    "plan '{}': input shape {:?} does not match expected {:?}",
+                    self.name,
+                    t.shape(),
+                    self.input_shape
+                );
+            }
+        }
+        // pack the batch into the input buffer
+        {
+            let need = b * self.input_numel;
+            let ib = &mut self.bufs[self.input_phys];
+            if ib.len() < need {
+                ib.resize(need, 0.0);
+            }
+            for (i, t) in inputs.iter().enumerate() {
+                ib[i * self.input_numel..(i + 1) * self.input_numel].copy_from_slice(t.data());
+            }
+        }
+        let (steps, bufs) = (&mut self.steps, &mut self.bufs);
+        for step in steps.iter_mut() {
+            step.run(bufs, b)?;
+        }
+        let ob = &self.bufs[self.output_phys];
+        (0..b)
+            .map(|i| {
+                Tensor::new(
+                    &self.output_shape,
+                    ob[i * self.output_numel..(i + 1) * self.output_numel].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Single-sample convenience wrapper.
+    pub fn run_one(&mut self, x: &Tensor) -> Result<Tensor> {
+        let mut out = self.run_batch(std::slice::from_ref(x))?;
+        Ok(out.remove(0))
+    }
+}

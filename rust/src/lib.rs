@@ -19,6 +19,10 @@
 //!   accumulator minimization (§4.2), stuck-channel detection (§7.1).
 //! - [`executor`] — a bit-exact graph interpreter (float + integer
 //!   paths) with min/max instrumentation, used for verification.
+//! - [`engine`] — the serving hot path: an ahead-of-time plan compiler
+//!   (constant folding, elementwise-chain and im2col+MVU+threshold
+//!   fusion, SIRA-narrowed i32/i64 accumulators) and a batched integer
+//!   runtime over a reusable buffer arena, bit-exact vs [`executor`].
 //! - [`models`] — the QNN workload zoo of the paper's evaluation
 //!   (TFC-w2a2, CNV-w2a2, RN8-w3a3, MNv1-w4a4) plus synthetic datasets.
 //! - [`hw`] — hardware kernel models: MVU, thresholding (parallel and
@@ -47,6 +51,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod dataflow;
 pub mod e2e;
+pub mod engine;
 pub mod executor;
 pub mod graph;
 pub mod hw;

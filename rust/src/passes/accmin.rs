@@ -78,6 +78,18 @@ pub fn sira_bound_bits(lo: i64, hi: i64) -> u32 {
     (crate::util::ceil_log2(mag.max(1)) + 1).max(2)
 }
 
+/// Lossless integer bounds of a tensor's SIRA integer component, if any.
+/// Shared fusion metadata: this pass uses it to size hardware
+/// accumulators, and the plan engine ([`crate::engine`]) uses it to pick
+/// i32 vs i64 software accumulation for the same MAC outputs.
+pub fn sira_int_bounds(analysis: &Analysis, tensor: &str) -> Option<(i64, i64)> {
+    analysis
+        .get(tensor)
+        .ok()
+        .and_then(|r| r.int.as_ref())
+        .map(|ic| ic.int_bounds())
+}
+
 /// Compute accumulator widths for every MAC node and annotate the graph's
 /// datatype map according to `policy`. Must run after streamlining (MAC
 /// inputs pure-integer) with a completed SIRA [`Analysis`].
@@ -123,11 +135,8 @@ pub fn minimize_accumulators(
         // The accumulator holds the *integer component* of the MAC output
         // (scales are applied downstream), so any scaled-integer range —
         // pure or not — provides the lossless SIRA bound.
-        let bits_sira = match analysis.get(&out).ok().and_then(|r| r.int.as_ref()) {
-            Some(ic) => {
-                let (lo, hi) = ic.int_bounds();
-                sira_bound_bits(lo, hi)
-            }
+        let bits_sira = match sira_int_bounds(analysis, &out) {
+            Some((lo, hi)) => sira_bound_bits(lo, hi),
             None => bits_datatype, // no lossless info: fall back
         };
         let chosen = match policy {

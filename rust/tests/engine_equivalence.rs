@@ -1,0 +1,123 @@
+//! The engine's contract: for every zoo workload (Table 5), the
+//! plan-compiled [`sira_finn::engine`] backend must be **bit-exact**
+//! against the interpretive [`sira_finn::executor`] on the same graph,
+//! on seeded random batches — both on the raw QNN graphs (f64 kernels)
+//! and on the streamlined pure-integer forms (i32/i64 kernels + fused
+//! thresholds), where the integer fast paths are additionally asserted
+//! to engage.
+
+use sira_finn::engine;
+use sira_finn::executor::Executor;
+use sira_finn::graph::Graph;
+use sira_finn::models::{self, ZooModel};
+use sira_finn::sira::{analyze, Analysis};
+use sira_finn::tensor::Tensor;
+use sira_finn::util::rng::Rng;
+
+fn random_batch(rng: &mut Rng, shape: &[usize], b: usize) -> Vec<Tensor> {
+    let numel: usize = shape.iter().product();
+    (0..b)
+        .map(|_| {
+            Tensor::new(shape, (0..numel).map(|_| rng.int_in(0, 255) as f64).collect()).unwrap()
+        })
+        .collect()
+}
+
+/// Engine vs executor on the same graph: identical shapes, identical bits.
+fn assert_bit_exact(g: &Graph, analysis: &Analysis, seed: u64, batches: &[usize]) {
+    let mut plan = engine::compile(g, analysis)
+        .unwrap_or_else(|e| panic!("{}: engine compile failed: {e:#}", g.name));
+    let mut exec = Executor::new(g).unwrap();
+    let mut rng = Rng::new(seed);
+    let in_shape = g.shapes[&g.inputs[0]].clone();
+    for &bsz in batches {
+        let xs = random_batch(&mut rng, &in_shape, bsz);
+        let ys = plan.run_batch(&xs).unwrap();
+        assert_eq!(ys.len(), xs.len());
+        for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
+            let want = exec.run_single(x).unwrap().remove(0);
+            assert_eq!(want.shape(), y.shape(), "{}: shape at sample {i}", g.name);
+            assert_eq!(
+                want.data(),
+                y.data(),
+                "{}: engine not bit-exact at sample {i} (batch {bsz})",
+                g.name
+            );
+        }
+    }
+}
+
+fn raw_case(m: ZooModel, seed: u64, batches: &[usize]) {
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    assert_bit_exact(&m.graph, &analysis, seed, batches);
+}
+
+#[test]
+fn tfc_w2a2_bit_exact() {
+    raw_case(models::tfc_w2a2().unwrap(), 0x7FC0, &[1, 5]);
+}
+
+#[test]
+fn cnv_w2a2_bit_exact() {
+    raw_case(models::cnv_w2a2().unwrap(), 0xC270, &[2]);
+}
+
+#[test]
+fn rn8_w3a3_bit_exact() {
+    raw_case(models::rn8_w3a3().unwrap(), 0x8380, &[2]);
+}
+
+#[test]
+fn mnv1_w4a4_bit_exact() {
+    // 28x28 resolution: identical graph structure/params to the paper
+    // model, tractable for a per-sample interpreter comparison
+    raw_case(models::mnv1_w4a4_scaled(8).unwrap(), 0x1144, &[1]);
+}
+
+#[test]
+fn streamlined_tfc_bit_exact_with_integer_macs() {
+    let m = models::tfc_w2a2().unwrap();
+    let mut g = m.graph.clone();
+    let analysis = engine::prepare_streamlined(&mut g, &m.input_ranges).unwrap();
+    let plan = engine::compile(&g, &analysis).unwrap();
+    assert!(
+        plan.stats().integer_macs() >= 1,
+        "streamlined TFC produced no integer MACs: {}",
+        plan.stats()
+    );
+    assert_bit_exact(&g, &analysis, 0x57FC, &[1, 4]);
+}
+
+#[test]
+fn streamlined_cnv_bit_exact_with_fused_thresholds() {
+    let m = models::cnv_w2a2().unwrap();
+    let mut g = m.graph.clone();
+    let analysis = engine::prepare_streamlined(&mut g, &m.input_ranges).unwrap();
+    let plan = engine::compile(&g, &analysis).unwrap();
+    assert!(
+        plan.stats().integer_macs() >= 1,
+        "streamlined CNV produced no integer MACs: {}",
+        plan.stats()
+    );
+    assert!(
+        plan.stats().fused_thresholds >= 1,
+        "streamlined CNV fused no thresholds: {}",
+        plan.stats()
+    );
+    assert_bit_exact(&g, &analysis, 0x5C27, &[2]);
+}
+
+#[test]
+fn engine_batching_is_order_preserving() {
+    // outputs must correspond to inputs positionally, not just setwise
+    let m = models::tfc_w2a2().unwrap();
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    let mut plan = engine::compile(&m.graph, &analysis).unwrap();
+    let mut rng = Rng::new(0x0DDB);
+    let xs = random_batch(&mut rng, &m.input_shape, 6);
+    let batched = plan.run_batch(&xs).unwrap();
+    for (x, yb) in xs.iter().zip(&batched) {
+        let y1 = plan.run_one(x).unwrap();
+        assert_eq!(y1.data(), yb.data());
+    }
+}

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (referenced from ROADMAP.md). Runs the full
+# build (all targets, so benches and examples must compile), the test
+# suite, and — when rustfmt is installed — the formatting check.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release --all-targets =="
+cargo build --release --all-targets
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --check
+else
+  echo "== cargo fmt --check skipped (rustfmt not installed) =="
+fi
+
+echo "verify: OK"
