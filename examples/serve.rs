@@ -4,7 +4,9 @@
 //! * `--engine` — the plan-compiled integer runtime ([`sira_finn::engine`])
 //!   behind batched workers: real batched execution, SIRA-narrowed
 //!   accumulators, fused thresholds. Add `--streamline` to serve the
-//!   streamlined (pure-integer) form of the model.
+//!   streamlined (pure-integer) form of the model, and `--threads N` to
+//!   let each worker's plan shard its drained batch across N std::threads
+//!   (row-sharding large MVU kernels when the batch is small).
 //! * default — PJRT artifact (when built with `--features pjrt` and
 //!   `make artifacts` ran), else the sidecar graph on the interpretive
 //!   executor, else the zoo graph on the executor.
@@ -63,16 +65,19 @@ fn main() -> Result<()> {
         } else {
             analyze(&g, &m.input_ranges)?
         };
-        let plan = engine::compile(&g, &analysis)?;
+        let mut plan = engine::compile(&g, &analysis)?;
+        plan.set_threads(args.get_usize("threads", 1)?);
         println!(
-            "backend: plan engine ({}{}) — {}",
+            "backend: plan engine ({}{}, threads={}) — {}",
             m.name,
             if args.flag("streamline") { ", streamlined" } else { "" },
+            plan.threads(),
             plan.stats()
         );
         let shape = m.input_shape.clone();
         let c = Coordinator::start_batched(workers, policy, move || {
             // each worker owns a private clone of the compiled plan
+            // (thread budget included)
             let mut p = plan.clone();
             move |xs: &[Tensor]| p.run_batch(xs)
         });

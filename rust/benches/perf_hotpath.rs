@@ -1,12 +1,23 @@
 //! Hot-path performance benchmarks (EXPERIMENTS.md §Perf): timings for
 //! the compiler passes (SIRA analysis, streamlining, threshold
 //! conversion), the execution backends (interpretive executor vs the
-//! plan-compiled engine, single-stream and batched), the structural
-//! synthesis sweep and the serving coordinator.
+//! plan-compiled engine, single-stream and batched, serial and
+//! multi-threaded), the structural synthesis sweep and the serving
+//! coordinator.
 //!
 //! Every backend measurement additionally prints a one-line JSON summary
-//! (`{"bench":"perf_hotpath",...}`) so the perf trajectory can be
-//! tracked mechanically across PRs (collect into `BENCH_*.json`).
+//! (`{"bench":"perf_hotpath",...}`, now with a `"threads"` field) so the
+//! perf trajectory can be tracked mechanically across PRs.
+//!
+//! # Regression gate
+//!
+//! `cargo bench --bench perf_hotpath -- --gate BENCH_baseline.json` runs
+//! only the engine batch-8 measurements (threads 1 and 4) and compares
+//! them against the checked-in baseline, failing (exit 1) on a >25%
+//! throughput regression. Baselines are machine-relative: an entry
+//! missing for this environment is measured and recorded into the file
+//! instead of compared, so the first gate run on a fresh machine
+//! self-calibrates. `scripts/verify.sh` wires this into tier-1.
 
 use std::collections::BTreeMap;
 
@@ -20,13 +31,23 @@ use sira_finn::passes::{fold, lower, streamline};
 use sira_finn::sira::analyze;
 use sira_finn::synth::Synth;
 use sira_finn::tensor::Tensor;
+use sira_finn::util::cli::Args;
+use sira_finn::util::json::Json;
 use sira_finn::util::rng::Rng;
 
 /// Machine-readable one-line summary of one backend measurement.
-fn json_line(name: &str, backend: &str, model: &str, batch: usize, ns_per_inference: f64) {
+fn json_line(
+    name: &str,
+    backend: &str,
+    model: &str,
+    batch: usize,
+    threads: usize,
+    ns_per_inference: f64,
+) {
     println!(
         "{{\"bench\":\"perf_hotpath\",\"name\":\"{name}\",\"backend\":\"{backend}\",\
-         \"model\":\"{model}\",\"batch\":{batch},\"ns_per_inference\":{ns_per_inference:.0}}}"
+         \"model\":\"{model}\",\"batch\":{batch},\"threads\":{threads},\
+         \"ns_per_inference\":{ns_per_inference:.0}}}"
     );
 }
 
@@ -35,7 +56,98 @@ fn random_input(rng: &mut Rng, shape: &[usize]) -> Tensor {
     Tensor::new(shape, (0..numel).map(|_| rng.int_in(0, 255) as f64).collect()).unwrap()
 }
 
+/// Measure engine ns/inference at batch 8 for one zoo model and thread
+/// count (the gate observable).
+fn measure_engine_b8(b: &Bencher, model: &str, threads: usize) -> f64 {
+    let zm = match model {
+        "tfc" => models::tfc_w2a2().unwrap(),
+        "cnv" => models::cnv_w2a2().unwrap(),
+        other => panic!("gate model '{other}'"),
+    };
+    let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
+    let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
+    plan.set_threads(threads);
+    let mut rng = Rng::new(0xBA5E);
+    let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
+    let r = b.run(&format!("engine {model} b=8 t={threads}"), || {
+        plan.run_batch(&batch8).unwrap()
+    });
+    r.mean.as_nanos() as f64 / 8.0
+}
+
+/// `--gate <file>`: compare the engine batch-8 measurements against the
+/// baseline file; record entries this environment has never measured.
+/// Baselines are machine-relative, so the file should be a machine-local
+/// copy (scripts/verify.sh seeds `target/BENCH_baseline.local.json` from
+/// the checked-in `BENCH_baseline.json`), never a file shared across
+/// machines. Returns the process exit code.
+fn run_gate(path: &str) -> i32 {
+    let b = Bencher::default();
+    let text = std::fs::read_to_string(path).unwrap_or_default();
+    let mut doc = if text.trim().is_empty() {
+        Json::obj(vec![
+            ("bench", Json::Str("perf_hotpath".into())),
+            ("tolerance", Json::Num(1.25)),
+            ("entries", Json::Obj(BTreeMap::new())),
+        ])
+    } else {
+        Json::parse(&text).expect("baseline file is not valid JSON")
+    };
+    let tolerance = doc
+        .opt("tolerance")
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(1.25);
+    let mut entries: BTreeMap<String, Json> = match doc.opt("entries") {
+        Some(Json::Obj(o)) => o.clone(),
+        _ => BTreeMap::new(),
+    };
+    let mut failed = false;
+    let mut recorded = false;
+    for (model, threads) in [("tfc", 1), ("tfc", 4), ("cnv", 1), ("cnv", 4)] {
+        let key = format!("engine/{model}/b8/t{threads}");
+        let got = measure_engine_b8(&b, model, threads);
+        json_line("gate", "engine", model, 8, threads, got);
+        match entries.get(&key).and_then(|v| v.as_f64().ok()) {
+            Some(base) => {
+                let limit = base * tolerance;
+                if got > limit {
+                    eprintln!(
+                        "GATE FAIL {key}: {got:.0} ns/inference > {limit:.0} \
+                         (baseline {base:.0} * tolerance {tolerance})"
+                    );
+                    failed = true;
+                } else {
+                    println!("gate ok {key}: {got:.0} ns vs baseline {base:.0} ns");
+                }
+            }
+            None => {
+                println!("gate: recording first baseline for {key}: {got:.0} ns");
+                entries.insert(key, Json::Num(got));
+                recorded = true;
+            }
+        }
+    }
+    if recorded {
+        if let Json::Obj(o) = &mut doc {
+            o.insert("entries".to_string(), Json::Obj(entries));
+        }
+        std::fs::write(path, format!("{doc}\n")).expect("write baseline");
+        println!("gate: baseline recorded at {path}");
+    }
+    if failed {
+        1
+    } else {
+        0
+    }
+}
+
 fn main() {
+    // `cargo bench` appends a bare `--bench` to harness=false targets:
+    // accept it as a value-less flag
+    let args = Args::from_env(&["bench"]).unwrap();
+    if let Some(path) = args.get("gate") {
+        std::process::exit(run_gate(path));
+    }
     let b = Bencher::default();
     section("SIRA analysis");
     for m in [
@@ -90,7 +202,7 @@ fn main() {
             exec.run_single(&x).unwrap()
         });
         println!("{r_exec}  ({:.1} img/s)", r_exec.throughput(1.0));
-        json_line("backend", "executor", zm.name, 1, r_exec.mean.as_nanos() as f64);
+        json_line("backend", "executor", zm.name, 1, 1, r_exec.mean.as_nanos() as f64);
 
         let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
         println!("  plan: {}", plan.stats());
@@ -98,7 +210,7 @@ fn main() {
             plan.run_batch(std::slice::from_ref(&x)).unwrap()
         });
         println!("{r_plan}  ({:.1} img/s)", r_plan.throughput(1.0));
-        json_line("backend", "engine", zm.name, 1, r_plan.mean.as_nanos() as f64);
+        json_line("backend", "engine", zm.name, 1, 1, r_plan.mean.as_nanos() as f64);
 
         let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
         let r_plan8 = b.run(&format!("engine   {} b=8", zm.name), || {
@@ -106,13 +218,35 @@ fn main() {
         });
         let ns8 = r_plan8.mean.as_nanos() as f64 / 8.0;
         println!("{r_plan8}  ({:.1} img/s)", 8.0 * r_plan8.throughput(1.0));
-        json_line("backend", "engine", zm.name, 8, ns8);
+        json_line("backend", "engine", zm.name, 8, 1, ns8);
 
         println!(
             "  speedup vs executor: {:.2}x single-stream, {:.2}x at batch 8",
             r_exec.mean.as_secs_f64() / r_plan.mean.as_secs_f64(),
             r_exec.mean.as_secs_f64() / (r_plan8.mean.as_secs_f64() / 8.0)
         );
+
+        // thread scaling: sample-sharded batch 8, row-sharded batch 1
+        let ns8_serial = ns8;
+        for threads in [2usize, 4] {
+            plan.set_threads(threads);
+            let r_t8 = b.run(&format!("engine   {} b=8 t={threads}", zm.name), || {
+                plan.run_batch(&batch8).unwrap()
+            });
+            let ns = r_t8.mean.as_nanos() as f64 / 8.0;
+            json_line("backend", "engine", zm.name, 8, threads, ns);
+            println!(
+                "{r_t8}  ({:.1} img/s, {:.2}x vs t=1)",
+                8.0 * r_t8.throughput(1.0),
+                ns8_serial / ns
+            );
+            let r_t1 = b.run(&format!("engine   {} b=1 t={threads}", zm.name), || {
+                plan.run_batch(std::slice::from_ref(&x)).unwrap()
+            });
+            json_line("backend", "engine", zm.name, 1, threads, r_t1.mean.as_nanos() as f64);
+            println!("{r_t1}  ({:.1} img/s)", r_t1.throughput(1.0));
+        }
+        plan.set_threads(1);
 
         // streamlined (pure-integer) plan: the full SIRA payoff
         let mut sg = zm.graph.clone();
@@ -127,6 +261,7 @@ fn main() {
             "executor",
             zm.name,
             1,
+            1,
             r_sexec.mean.as_nanos() as f64,
         );
         let mut s_plan = engine::compile(&sg, &s_analysis).unwrap();
@@ -140,6 +275,7 @@ fn main() {
             "engine",
             zm.name,
             1,
+            1,
             r_splan.mean.as_nanos() as f64,
         );
         let r_splan8 = b.run(&format!("engine   {} streamlined b=8", zm.name), || {
@@ -150,6 +286,7 @@ fn main() {
             "engine",
             zm.name,
             8,
+            1,
             r_splan8.mean.as_nanos() as f64 / 8.0,
         );
         println!(
@@ -157,6 +294,16 @@ fn main() {
             r_sexec.mean.as_secs_f64() / r_splan.mean.as_secs_f64(),
             r_sexec.mean.as_secs_f64() / (r_splan8.mean.as_secs_f64() / 8.0)
         );
+        for threads in [2usize, 4] {
+            s_plan.set_threads(threads);
+            let r_st8 = b.run(
+                &format!("engine   {} streamlined b=8 t={threads}", zm.name),
+                || s_plan.run_batch(&batch8).unwrap(),
+            );
+            let ns = r_st8.mean.as_nanos() as f64 / 8.0;
+            json_line("backend-streamlined", "engine", zm.name, 8, threads, ns);
+            println!("{r_st8}  ({:.1} img/s)", 8.0 * r_st8.throughput(1.0));
+        }
     }
 
     section("structural synthesis sweep (Fig 19 grid)");
@@ -217,8 +364,6 @@ fn main() {
         let g = std::sync::Arc::clone(&g);
         move || {
             let g = std::sync::Arc::clone(&g);
-            let mut cache: BTreeMap<usize, ()> = BTreeMap::new();
-            let _ = &mut cache;
             move |x: &Tensor| {
                 let mut e = Executor::new(&g)?;
                 Ok(e.run_single(x)?.remove(0))

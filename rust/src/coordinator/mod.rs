@@ -191,6 +191,14 @@ impl Coordinator {
     /// Start `num_workers` workers around *batched* engines: each drained
     /// batch is executed in a single engine call, one output per input.
     /// This is the worker shape for [`crate::engine::Plan::run_batch`].
+    ///
+    /// The engine's own thread pool composes multiplicatively: a plan
+    /// with [`crate::engine::Plan::set_threads`]` = T` behind `W`
+    /// coordinator workers runs up to `W * T` threads at peak — `W`
+    /// scales independent batches (throughput under load), `T` scales
+    /// inside one batch (latency of a single drained batch). `make_engine`
+    /// is the pass-through: build the plan once, then hand each worker a
+    /// clone with the thread budget already set.
     pub fn start_batched<F, E>(
         num_workers: usize,
         policy: BatchPolicy,
@@ -423,6 +431,41 @@ mod tests {
         });
         let y = c.infer(Tensor::full(&[1, 784], 100.0)).unwrap();
         assert_eq!(y.shape(), &[1, 10]);
+        c.shutdown();
+    }
+
+    /// The serve path with a thread budget: batched workers around a
+    /// row-sharding plan must agree with a serial plan on every request.
+    #[test]
+    fn batched_worker_runs_a_threaded_plan() {
+        use crate::engine;
+        use crate::sira::analyze;
+        let m = crate::models::tfc_w2a2().unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let mut serial = engine::compile(&m.graph, &analysis).unwrap();
+        let mut threaded = engine::compile(&m.graph, &analysis).unwrap();
+        threaded.set_threads(4);
+        threaded.set_min_kernel_work(0);
+        let c = Coordinator::start_batched(
+            2,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+            },
+            move || {
+                let mut p = threaded.clone();
+                move |xs: &[Tensor]| p.run_batch(xs)
+            },
+        );
+        let xs: Vec<Tensor> = (0..12)
+            .map(|i| Tensor::full(&[1, 784], (i * 17 % 255) as f64))
+            .collect();
+        let handles: Vec<_> = xs.iter().map(|x| c.submit(x.clone()).unwrap()).collect();
+        for (x, h) in xs.iter().zip(handles) {
+            let got = h.recv().unwrap().unwrap();
+            let want = serial.run_one(x).unwrap();
+            assert_eq!(want.data(), got.data());
+        }
         c.shutdown();
     }
 

@@ -8,6 +8,12 @@
 //! Aliasing rules: a step's outputs are allocated *before* its dying
 //! inputs are released, so a kernel never reads and writes the same
 //! physical buffer (kernels are not required to be in-place safe).
+//!
+//! The layout computed here is instantiated once per *worker*: the
+//! parallel runner ([`crate::engine::Plan::run_batch`]) gives every
+//! sample shard its own `n_phys`-buffer arena (see `WorkerState` in the
+//! plan module), so the liveness reasoning above never has to consider
+//! cross-thread interleavings — buffers simply never cross threads.
 
 /// Per-step slot usage, in schedule order.
 #[derive(Clone, Debug, Default)]

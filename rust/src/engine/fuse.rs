@@ -18,6 +18,12 @@
 //!   worst-case partial-sum bound fits, the kernel runs on i32 (or i64)
 //!   accumulators instead of f64 (§4.2; cf. the A2Q guaranteed-width
 //!   argument).
+//! * **Stuck-channel elision** (§7.1) — input channels SIRA proves stuck
+//!   at a constant ([`crate::passes::stuck`]) are removed from integer
+//!   MAC kernels entirely; their constant contribution is folded into a
+//!   bias that seeds the accumulator. Integer accumulation is exact, so
+//!   the elision is bit-invisible; f64 kernels are never elided (the
+//!   fold would reorder float additions).
 //! * **Movement elision** — contiguous Reshape/Flatten/Identity become
 //!   buffer aliases; no copy.
 //!
@@ -33,14 +39,15 @@ use anyhow::{bail, Context, Result};
 use crate::executor::execute_op;
 use crate::graph::{Graph, Node, Op, RoundMode};
 use crate::passes::accmin::sira_int_bounds;
+use crate::passes::stuck;
 use crate::sira::{quant_bounds, Analysis};
 use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 
 use super::arena::{assign, StepUse};
 use super::kernels::{MicroOp, Param, ThresholdTable, WeightMat};
 use super::plan::{
-    BinKind, BinaryStep, ConvStep, DepthwiseStep, EwChainStep, GSrc, GenericStep, MatMulStep,
-    Plan, PlanStats, PoolStep, Step,
+    BinKind, BinaryStep, ConvStep, DepthwiseStep, EwChainStep, GSrc, GenericStep, MacElide,
+    MatMulStep, Plan, PlanStats, PoolStep, Step,
 };
 
 /// Conservative headroom limits for integer accumulation: the worst-case
@@ -48,6 +55,70 @@ use super::plan::{
 /// kernels to be selected.
 const I32_LIMIT: f64 = 2_147_000_000.0;
 const I64_LIMIT: f64 = 4.0e18;
+
+/// Split an integer `(k, n)` weight matrix into its live rows plus a
+/// per-column bias folding the contribution of rows whose input is stuck
+/// at a constant (`stuck[r] = Some(v)`). Returns None when nothing is
+/// stuck, a stuck value is non-integral, or the matrix is f64 (elision
+/// would reorder float additions; integer addition is order-free, and
+/// the bias magnitude is covered by the same worst-case partial-sum
+/// bound that selected the accumulator width).
+fn elide_stuck_rows(
+    wmat: &WeightMat,
+    k: usize,
+    n: usize,
+    stuck: &[Option<f64>],
+) -> Option<(WeightMat, Vec<usize>, Vec<i64>)> {
+    if stuck.len() != k || stuck.iter().all(|s| s.is_none()) {
+        return None;
+    }
+    if stuck
+        .iter()
+        .flatten()
+        .any(|v| !v.is_finite() || v.fract() != 0.0)
+    {
+        return None;
+    }
+    fn split<T: Copy>(
+        w: &[T],
+        n: usize,
+        stuck: &[Option<f64>],
+        to_i64: impl Fn(T) -> i64,
+    ) -> (Vec<T>, Vec<usize>, Vec<i64>) {
+        let mut live = Vec::new();
+        let mut compact = Vec::new();
+        let mut bias = vec![0i64; n];
+        for (r, s) in stuck.iter().enumerate() {
+            let row = &w[r * n..(r + 1) * n];
+            match s {
+                None => {
+                    live.push(r);
+                    compact.extend_from_slice(row);
+                }
+                Some(v) => {
+                    let v = *v as i64;
+                    if v != 0 {
+                        for (b, &wv) in bias.iter_mut().zip(row.iter()) {
+                            *b += v * to_i64(wv);
+                        }
+                    }
+                }
+            }
+        }
+        (compact, live, bias)
+    }
+    match wmat {
+        WeightMat::I32(w) => {
+            let (c, live, bias) = split(w, n, stuck, |v| v as i64);
+            Some((WeightMat::I32(c), live, bias))
+        }
+        WeightMat::I64(w) => {
+            let (c, live, bias) = split(w, n, stuck, |v| v);
+            Some((WeightMat::I64(c), live, bias))
+        }
+        WeightMat::F64(_) => None,
+    }
+}
 
 /// Compile `g` (shapes inferred, per-sample tensors with leading dim 1)
 /// and its SIRA `analysis` into an executable [`Plan`]. The analysis is
@@ -622,7 +693,21 @@ impl<'g> Compiler<'g> {
             per_k
         });
         let out_name = node.outputs[0].clone();
-        let wmat = self.choose_weight_mat(&out_name, amax, w.data(), k, n);
+        let mut wmat = self.choose_weight_mat(&out_name, amax, w.data(), k, n);
+        // §7.1 stuck-channel elision: input positions proven constant
+        // never enter the MAC; their contribution seeds the accumulator.
+        // m == 1 keeps the per-row gather trivial (all zoo layers).
+        let mut elide = None;
+        if wmat.is_integer() && m == 1 {
+            if let Ok(stuck) = stuck::stuck_elements(self.analysis, &node.inputs[0], a_shape) {
+                if let Some((compact, live, bias)) = elide_stuck_rows(&wmat, k, n, &stuck) {
+                    self.stats.elided_mac_steps += 1;
+                    self.stats.elided_mac_channels += k - live.len();
+                    wmat = compact;
+                    elide = Some(MacElide { live, bias });
+                }
+            }
+        }
         let out_shape = self.sample_shape(&out_name)?.to_vec();
         let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
         let (table, final_out) = match fused {
@@ -647,8 +732,7 @@ impl<'g> Compiler<'g> {
             n,
             w: wmat,
             fused: table,
-            a32: Vec::new(),
-            a64: Vec::new(),
+            elide,
         }));
         Ok(())
     }
@@ -678,7 +762,35 @@ impl<'g> Compiler<'g> {
             (0..k).map(|kk| chmax[kk / (kh * kw)]).collect::<Vec<f64>>()
         });
         let out_name = node.outputs[0].clone();
-        let wmat = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
+        let mut wmat = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
+        // §7.1 stuck-channel elision: a channel whose every spatial
+        // element is stuck at one value contributes a constant to every
+        // output position, so it leaves the im2col + MAC entirely. pad
+        // must be 0 (a padded border would read 0.0 where the bias
+        // assumes the stuck value).
+        let mut elide = None;
+        if wmat.is_integer() && spec.pad == (0, 0) {
+            if let Ok(stuck) = stuck::stuck_elements(self.analysis, &node.inputs[0], x_shape) {
+                let hw = h * wd;
+                let ch_stuck: Vec<Option<f64>> = (0..ch)
+                    .map(|c| match stuck[c * hw] {
+                        Some(v) if stuck[c * hw..(c + 1) * hw].iter().all(|&e| e == Some(v)) => {
+                            Some(v)
+                        }
+                        _ => None,
+                    })
+                    .collect();
+                let per_ch = kh * kw;
+                let stuck_rows: Vec<Option<f64>> = (0..k).map(|r| ch_stuck[r / per_ch]).collect();
+                if let Some((compact, _rows, bias)) = elide_stuck_rows(&wmat, k, oc, &stuck_rows) {
+                    let live: Vec<usize> = (0..ch).filter(|&c| ch_stuck[c].is_none()).collect();
+                    self.stats.elided_mac_steps += 1;
+                    self.stats.elided_mac_channels += ch - live.len();
+                    wmat = compact;
+                    elide = Some(MacElide { live, bias });
+                }
+            }
+        }
         let out_shape = self.sample_shape(&out_name)?.to_vec();
         let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
         let (table, final_out) = match fused {
@@ -707,9 +819,7 @@ impl<'g> Compiler<'g> {
             spec,
             wmat,
             fused: table,
-            cols: Vec::new(),
-            cols32: Vec::new(),
-            cols64: Vec::new(),
+            elide,
         }));
         Ok(())
     }
@@ -786,26 +896,24 @@ impl<'g> Compiler<'g> {
     fn finish(mut self, input_name: &str, input_slot: usize) -> Result<Plan> {
         let out_name = self.g.outputs[0].clone();
         let input_shape = self.sample_shape(input_name)?.to_vec();
-        let input_numel: usize = input_shape.iter().product();
-        let output_shape = self.sample_shape(&out_name)?.to_vec();
-        let output_numel: usize = output_shape.iter().product();
 
         if let Some(t) = self.consts.get(&out_name) {
             // degenerate: the whole graph constant-folded
-            return Ok(Plan {
-                name: self.g.name.clone(),
-                steps: Vec::new(),
-                bufs: vec![Vec::new()],
-                input_phys: 0,
+            return Ok(Plan::new(
+                self.g.name.clone(),
+                Vec::new(),
+                1,
+                0,
                 input_shape,
-                input_numel,
-                output_phys: 0,
-                output_shape: t.shape().to_vec(),
-                output_numel: t.numel(),
-                const_output: Some(t.clone()),
-                stats: self.stats,
-            });
+                0,
+                t.shape().to_vec(),
+                t.numel(),
+                Some(t.clone()),
+                self.stats,
+            ));
         }
+        let output_shape = self.sample_shape(&out_name)?.to_vec();
+        let output_numel: usize = output_shape.iter().product();
 
         let out_slot = self.slot_for_read(&out_name)?;
         let uses: Vec<StepUse> = self
@@ -823,18 +931,17 @@ impl<'g> Compiler<'g> {
         self.stats.steps = self.steps.len();
         self.stats.logical_slots = self.slot_count;
         self.stats.physical_buffers = layout.n_phys;
-        Ok(Plan {
-            name: self.g.name.clone(),
-            steps: self.steps,
-            bufs: vec![Vec::new(); layout.n_phys],
-            input_phys: layout.phys[input_slot],
+        Ok(Plan::new(
+            self.g.name.clone(),
+            self.steps,
+            layout.n_phys,
+            layout.phys[input_slot],
             input_shape,
-            input_numel,
-            output_phys: layout.phys[out_slot],
+            layout.phys[out_slot],
             output_shape,
             output_numel,
-            const_output: None,
-            stats: self.stats,
-        })
+            None,
+            self.stats,
+        ))
     }
 }

@@ -148,49 +148,138 @@ impl WeightMat {
     }
 }
 
-/// `acc += a_row · W` over `(k, n)` weights, accumulating in increasing
-/// k order with the same zero-skip as [`crate::tensor::Tensor::matmul`]
-/// (exact: skipped terms contribute +0.0). `acc` must be zeroed, len n.
-#[inline]
-pub fn mac_row_f64(a_row: &[f64], w: &[f64], n: usize, acc: &mut [f64]) {
-    for (kk, &a) in a_row.iter().enumerate() {
-        if a == 0.0 {
-            continue;
-        }
-        let w_row = &w[kk * n..(kk + 1) * n];
-        for (j, &b) in w_row.iter().enumerate() {
-            acc[j] += a * b;
+/// A MAC accumulator element: the one abstraction over the three
+/// accumulation widths (f64, SIRA-narrowed i32/i64) so the plan runner
+/// has a single row-times-matrix implementation for the serial, the
+/// row-sharded and the channel-sharded execution paths. Integer addition
+/// is exact and order-free, which is what makes both re-sharding and
+/// stuck-channel bias folding bit-exact for the integer variants; the
+/// f64 variant keeps the reference accumulation order because sharding
+/// only ever splits *between* output elements, never within one dot
+/// product.
+pub trait MacElem: Copy + Send + Sync + 'static {
+    const ZERO: Self;
+    fn from_f64(v: f64) -> Self;
+    fn from_i64(v: i64) -> Self;
+    fn to_f64(self) -> f64;
+    fn is_zero(self) -> bool;
+    fn mul_acc(self, a: Self, b: Self) -> Self;
+
+    /// `acc += a_row · W[:, cols]` over `(k, n)` weights, accumulating in
+    /// increasing k order with the same zero-skip as
+    /// [`crate::tensor::Tensor::matmul`] (exact: skipped terms contribute
+    /// +0.0). `acc` has `cols.len()` elements and is *not* zeroed here —
+    /// the caller seeds it (zero, or an elided-channel bias).
+    #[inline]
+    fn mac_row(
+        a_row: &[Self],
+        w: &[Self],
+        n: usize,
+        cols: core::ops::Range<usize>,
+        acc: &mut [Self],
+    ) {
+        for (kk, &a) in a_row.iter().enumerate() {
+            if a.is_zero() {
+                continue;
+            }
+            let w_row = &w[kk * n + cols.start..kk * n + cols.end];
+            for (j, &b) in w_row.iter().enumerate() {
+                acc[j] = acc[j].mul_acc(a, b);
+            }
         }
     }
+}
+
+impl MacElem for f64 {
+    const ZERO: Self = 0.0;
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn from_i64(v: i64) -> Self {
+        v as f64
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self == 0.0
+    }
+    #[inline(always)]
+    fn mul_acc(self, a: Self, b: Self) -> Self {
+        self + a * b
+    }
+}
+
+impl MacElem for i32 {
+    const ZERO: Self = 0;
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as i32
+    }
+    #[inline(always)]
+    fn from_i64(v: i64) -> Self {
+        v as i32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+    #[inline(always)]
+    fn mul_acc(self, a: Self, b: Self) -> Self {
+        self + a * b
+    }
+}
+
+impl MacElem for i64 {
+    const ZERO: Self = 0;
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as i64
+    }
+    #[inline(always)]
+    fn from_i64(v: i64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+    #[inline(always)]
+    fn mul_acc(self, a: Self, b: Self) -> Self {
+        self + a * b
+    }
+}
+
+/// `acc += a_row · W` over `(k, n)` weights (all columns). `acc` must be
+/// zeroed, len n. Kept as the width-explicit entry points.
+#[inline]
+pub fn mac_row_f64(a_row: &[f64], w: &[f64], n: usize, acc: &mut [f64]) {
+    MacElem::mac_row(a_row, w, n, 0..n, acc);
 }
 
 /// Integer variant, 32-bit accumulators (no overflow by the compile-time
 /// bound in [`super::fuse`]).
 #[inline]
 pub fn mac_row_i32(a_row: &[i32], w: &[i32], n: usize, acc: &mut [i32]) {
-    for (kk, &a) in a_row.iter().enumerate() {
-        if a == 0 {
-            continue;
-        }
-        let w_row = &w[kk * n..(kk + 1) * n];
-        for (j, &b) in w_row.iter().enumerate() {
-            acc[j] += a * b;
-        }
-    }
+    MacElem::mac_row(a_row, w, n, 0..n, acc);
 }
 
 /// Integer variant, 64-bit accumulators.
 #[inline]
 pub fn mac_row_i64(a_row: &[i64], w: &[i64], n: usize, acc: &mut [i64]) {
-    for (kk, &a) in a_row.iter().enumerate() {
-        if a == 0 {
-            continue;
-        }
-        let w_row = &w[kk * n..(kk + 1) * n];
-        for (j, &b) in w_row.iter().enumerate() {
-            acc[j] += a * b;
-        }
-    }
+    MacElem::mac_row(a_row, w, n, 0..n, acc);
 }
 
 /// Batched im2col into a caller-provided buffer: lowers `(B,C,H,W)` input
@@ -228,6 +317,52 @@ pub fn im2col_batched(
                                 x[((bi * c + ch) * h + iy as usize) * w + ix as usize]
                             };
                             cols[idx] = v;
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (rows, k)
+}
+
+/// im2col restricted to a subset of input channels (ascending `live`
+/// list): the lowering used by stuck-channel elision (§7.1), where the
+/// elided channels' constant contribution is pre-folded into the MAC
+/// bias at compile time. Column order matches [`im2col_batched`] with the
+/// stuck channels deleted, which is exactly how [`super::fuse`] compacts
+/// the weight matrix rows. Requires zero padding offsets (enforced by the
+/// compiler) so no padded zeros can stand in for a stuck value.
+pub fn im2col_channels(
+    x: &[f64],
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    spec: Conv2dSpec,
+    live: &[usize],
+    cols: &mut Vec<f64>,
+) -> (usize, usize) {
+    debug_assert_eq!(spec.pad, (0, 0), "channel-subset im2col requires pad 0");
+    let (kh, kw) = spec.kernel;
+    let (oh, ow) = spec.out_hw(h, w);
+    let k = live.len() * kh * kw;
+    let rows = b * oh * ow;
+    if cols.len() < rows * k {
+        cols.resize(rows * k, 0.0);
+    }
+    let mut idx = 0usize;
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for &ch in live {
+                    debug_assert!(ch < c);
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = oy * spec.stride.0 + ky;
+                            let ix = ox * spec.stride.1 + kx;
+                            cols[idx] = x[((bi * c + ch) * h + iy) * w + ix];
                             idx += 1;
                         }
                     }
@@ -326,6 +461,49 @@ mod tests {
         let mut cols = Vec::new();
         let (rows, k) = im2col_batched(x.data(), 2, 2, 5, 5, spec, &mut cols);
         assert_eq!(&cols[..rows * k], want.data());
+    }
+
+    #[test]
+    fn mac_row_column_ranges_tile_the_full_product() {
+        // concatenating column-range MACs must equal the full-width MAC
+        // (the invariant channel-sharding relies on)
+        let a = [3i32, 0, -2, 7, 1];
+        let w: Vec<i32> = (0..5 * 6).map(|i| (i as i32 % 11) - 5).collect();
+        let mut full = vec![0i32; 6];
+        mac_row_i32(&a, &w, 6, &mut full);
+        for split in 1..6 {
+            let mut lo = vec![0i32; split];
+            let mut hi = vec![0i32; 6 - split];
+            MacElem::mac_row(&a, &w[..], 6, 0..split, &mut lo);
+            MacElem::mac_row(&a, &w[..], 6, split..6, &mut hi);
+            lo.extend(hi);
+            assert_eq!(lo, full, "split at {split}");
+        }
+    }
+
+    #[test]
+    fn im2col_channels_matches_full_on_live_subset() {
+        let spec = Conv2dSpec {
+            kernel: (2, 2),
+            stride: (1, 1),
+            pad: (0, 0),
+        };
+        let x: Vec<f64> = (0..2 * 3 * 4 * 4).map(|i| i as f64 - 40.0).collect();
+        let mut full = Vec::new();
+        let (rows, k) = im2col_batched(&x, 2, 3, 4, 4, spec, &mut full);
+        assert_eq!(k, 3 * 4);
+        let live = [0usize, 2];
+        let mut sub = Vec::new();
+        let (srows, sk) = im2col_channels(&x, 2, 3, 4, 4, spec, &live, &mut sub);
+        assert_eq!(srows, rows);
+        assert_eq!(sk, 2 * 4);
+        // each subset row = full row with channel 1's 4 columns deleted
+        for r in 0..rows {
+            let frow = &full[r * k..(r + 1) * k];
+            let srow = &sub[r * sk..(r + 1) * sk];
+            assert_eq!(&srow[..4], &frow[..4]);
+            assert_eq!(&srow[4..], &frow[8..12]);
+        }
     }
 
     #[test]

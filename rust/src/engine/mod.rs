@@ -14,14 +14,19 @@
 //! ```text
 //! let analysis = sira::analyze(&graph, &input_ranges)?;
 //! let mut plan  = engine::compile(&graph, &analysis)?;   // AOT
+//! plan.set_threads(4);                                   // optional
 //! let outputs   = plan.run_batch(&inputs)?;              // hot path
 //! ```
 //!
 //! See [`fuse`] for what the compiler specialises (constant folding,
 //! elementwise-chain fusion, im2col+MVU+threshold fusion, SIRA-narrowed
-//! i32/i64 accumulators, buffer-arena reuse) and
-//! `rust/tests/engine_equivalence.rs` for the bit-exactness contract
-//! against the interpreter on all four zoo workloads.
+//! i32/i64 accumulators, stuck-channel elision, buffer-arena reuse),
+//! [`plan`] for the parallel runner (sample sharding across the batch
+//! plus row/channel sharding inside large MVU kernels, one arena per
+//! worker), and `rust/tests/engine_equivalence.rs` plus
+//! `rust/tests/engine_differential.rs` for the bit-exactness contract
+//! against the interpreter — on the zoo workloads and on seeded random
+//! graphs, at every tested batch size and thread count.
 
 pub mod arena;
 pub mod fuse;
@@ -283,6 +288,212 @@ mod tests {
         let mut plan = compile(&m, &analysis).unwrap();
         assert!(plan.run_batch(&[Tensor::zeros(&[1, 9])]).is_err());
         assert!(plan.run_batch(&[]).unwrap().is_empty());
+    }
+
+    /// Regression: the empty-batch and shape-mismatch paths must run
+    /// their checks before any arena touch — a rejected (or empty) call
+    /// leaves every worker buffer exactly as it found it.
+    #[test]
+    fn empty_and_invalid_batches_never_touch_the_arena() {
+        let mut b = QnnBuilder::new("pristine", 62);
+        b.input("x", &[1, 8]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.linear(4, 3, Granularity::PerTensor, true);
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut plan = compile(&m, &analysis).unwrap();
+        let untouched = |p: &super::Plan| {
+            p.workers
+                .iter()
+                .all(|w| w.bufs.iter().all(|b| b.is_empty()))
+        };
+        assert!(untouched(&plan), "fresh plan must start with empty buffers");
+        assert!(plan.run_batch(&[]).unwrap().is_empty());
+        assert!(untouched(&plan), "empty batch grew a buffer");
+        // a mixed batch where a later sample mismatches must fail before
+        // the first sample is packed
+        let good = Tensor::zeros(&[1, 8]);
+        let bad = Tensor::zeros(&[1, 9]);
+        assert!(plan.run_batch(&[good, bad]).is_err());
+        assert!(untouched(&plan), "rejected batch perturbed the arena");
+    }
+
+    /// Sample sharding and intra-kernel row/channel sharding must be
+    /// bit-invisible at every thread count (min work forced to 0 so the
+    /// sharded paths engage even on this tiny model).
+    #[test]
+    fn threaded_execution_is_bit_exact() {
+        let mut b = QnnBuilder::new("thr", 63);
+        b.input("x", &[1, 2, 8, 8]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.conv(4, 3, 1, 0, 3, Granularity::PerChannel, false);
+        b.relu();
+        b.quant_act(3, true, Granularity::PerTensor, 4.0);
+        b.flatten();
+        b.linear(6, 3, Granularity::PerTensor, true);
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut rng = Rng::new(64);
+        let xs = input_batch(&mut rng, &[1, 2, 8, 8], 5);
+        let mut reference = compile(&m, &analysis).unwrap();
+        let want = reference.run_batch(&xs).unwrap();
+        for threads in [2usize, 3, 4, 8] {
+            let mut plan = compile(&m, &analysis).unwrap();
+            plan.set_threads(threads);
+            plan.set_min_kernel_work(0);
+            for bsz in [1usize, 2, 5] {
+                let got = plan.run_batch(&xs[..bsz]).unwrap();
+                for (w, g) in want[..bsz].iter().zip(&got) {
+                    assert_eq!(
+                        w.data(),
+                        g.data(),
+                        "threads={threads} bsz={bsz} diverged from serial"
+                    );
+                }
+            }
+        }
+    }
+
+    /// §7.1 stuck-channel elision: input positions with point-interval
+    /// ranges leave the integer MAC (their contribution folds into the
+    /// accumulator bias), the stats record it, and outputs stay
+    /// bit-exact against the executor for in-range inputs.
+    #[test]
+    fn stuck_channels_are_elided_from_integer_matmul() {
+        let mut g = Graph::new("stuckmm");
+        g.add_input("x", &[1, 4]);
+        g.add_initializer("one", Tensor::scalar(1.0));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("bits", Tensor::scalar(8.0));
+        g.add_node(Node::new(
+            "q",
+            Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &["x", "one", "z", "bits"],
+            &["xq"],
+        ));
+        g.add_initializer(
+            "W",
+            Tensor::new(
+                &[4, 3],
+                vec![1.0, -2.0, 3.0, 0.0, 5.0, -1.0, 2.0, 2.0, 0.0, -3.0, 1.0, 4.0],
+            )
+            .unwrap(),
+        );
+        g.add_node(Node::new("mm", Op::MatMul, &["xq", "W"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        // elements 0 and 3 are stuck (point intervals), 1 and 2 are live
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            crate::sira::SiRange::float(
+                Tensor::new(&[1, 4], vec![5.0, -100.0, -100.0, 7.0]).unwrap(),
+                Tensor::new(&[1, 4], vec![5.0, 100.0, 100.0, 7.0]).unwrap(),
+            )
+            .unwrap(),
+        );
+        let analysis = analyze(&g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        assert_eq!(plan.stats().matmul_i32, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_mac_steps, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_mac_channels, 2, "{}", plan.stats());
+        let mut rng = Rng::new(65);
+        let xs: Vec<Tensor> = (0..6)
+            .map(|_| {
+                Tensor::new(
+                    &[1, 4],
+                    vec![
+                        5.0,
+                        rng.int_in(-100, 100) as f64,
+                        rng.int_in(-100, 100) as f64,
+                        7.0,
+                    ],
+                )
+                .unwrap()
+            })
+            .collect();
+        exact_match(&g, &analysis, &xs);
+    }
+
+    /// Conv variant of elision: a spatially uniform stuck input channel
+    /// (per-channel point interval) is dropped from the im2col and the
+    /// weight matrix when pad is 0.
+    #[test]
+    fn stuck_channels_are_elided_from_integer_conv() {
+        let mut g = Graph::new("stuckconv");
+        g.add_input("x", &[1, 3, 4, 4]);
+        g.add_initializer("one", Tensor::scalar(1.0));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("bits", Tensor::scalar(8.0));
+        g.add_node(Node::new(
+            "q",
+            Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &["x", "one", "z", "bits"],
+            &["xq"],
+        ));
+        let mut rng = Rng::new(66);
+        g.add_initializer(
+            "W",
+            Tensor::new(
+                &[2, 3, 3, 3],
+                (0..2 * 3 * 9).map(|_| rng.int_in(-3, 3) as f64).collect(),
+            )
+            .unwrap(),
+        );
+        g.add_node(Node::new(
+            "conv",
+            Op::Conv {
+                spec: crate::tensor::Conv2dSpec {
+                    kernel: (3, 3),
+                    stride: (1, 1),
+                    pad: (0, 0),
+                },
+                group: 1,
+            },
+            &["xq", "W"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        // channel 1 stuck at 9, channels 0 and 2 live
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            crate::sira::SiRange::float(
+                Tensor::new(&[1, 3, 1, 1], vec![-50.0, 9.0, -50.0]).unwrap(),
+                Tensor::new(&[1, 3, 1, 1], vec![50.0, 9.0, 50.0]).unwrap(),
+            )
+            .unwrap(),
+        );
+        let analysis = analyze(&g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        assert_eq!(plan.stats().conv_i32, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_mac_steps, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_mac_channels, 1, "{}", plan.stats());
+        let xs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                let mut data = Vec::with_capacity(48);
+                for ch in 0..3 {
+                    for _ in 0..16 {
+                        data.push(if ch == 1 { 9.0 } else { rng.int_in(-50, 50) as f64 });
+                    }
+                }
+                Tensor::new(&[1, 3, 4, 4], data).unwrap()
+            })
+            .collect();
+        exact_match(&g, &analysis, &xs);
     }
 
     #[test]

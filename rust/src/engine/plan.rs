@@ -1,14 +1,33 @@
 //! The compiled execution plan: a flat, topologically ordered list of
-//! fused kernels over physical buffers, plus the batched runner.
+//! fused kernels over physical buffers, plus the batched multi-threaded
+//! runner.
 //!
 //! A [`Plan`] is produced by [`super::fuse::compile`] from a graph and
 //! its SIRA [`crate::sira::Analysis`]. All constants (weights, folded
-//! quantizers, aggregated scales/biases, threshold tables) are baked into
-//! the steps at compile time; at run time the only dynamic state is the
-//! buffer arena, sized `batch * per_sample_numel` per buffer and reused
-//! across calls — the hot path performs no per-node graph resolution, no
-//! name lookups, and no constant-tensor clones (all of which dominate the
-//! interpretive [`crate::executor::Executor`]'s per-inference cost).
+//! quantizers, aggregated scales/biases, threshold tables, elided-channel
+//! biases) are baked into the steps at compile time; at run time the only
+//! dynamic state lives in per-worker [`WorkerState`]s (a liveness-managed
+//! buffer arena plus conversion scratch), reused across calls — the hot
+//! path performs no per-node graph resolution, no name lookups, and no
+//! constant-tensor clones (all of which dominate the interpretive
+//! [`crate::executor::Executor`]'s per-inference cost).
+//!
+//! # Parallel execution
+//!
+//! `Plan::run_batch` honours a thread budget ([`Plan::set_threads`]) with
+//! two composable sharding strategies, both bit-exact:
+//!
+//! * **Sample sharding** — the batch is split into contiguous chunks,
+//!   one scoped `std::thread` per chunk, each owning a private
+//!   [`WorkerState`] so buffers never cross threads. Samples are
+//!   independent in every kernel, so per-shard results are the bits the
+//!   serial runner would produce.
+//! * **Row/channel sharding inside MVU kernels** — leftover threads
+//!   (notably at batch 1) split large MatMul steps across output rows
+//!   (or output columns when there is only one row) and large Conv steps
+//!   across output channels. Shard boundaries always fall *between*
+//!   output elements — no dot product is ever split — so each output
+//!   element is accumulated in exactly the reference order.
 
 use anyhow::{bail, Context, Result};
 
@@ -17,8 +36,28 @@ use crate::graph::Op;
 use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 
 use super::kernels::{
-    im2col_batched, mac_row_f64, mac_row_i32, mac_row_i64, MicroOp, ThresholdTable, WeightMat,
+    im2col_batched, im2col_channels, MacElem, MicroOp, ThresholdTable, WeightMat,
 };
+
+/// Below this many MAC operations (`rows * k * n`) a kernel is run on one
+/// thread regardless of the budget: thread spawn + join costs more than
+/// the arithmetic. Tests lower it via [`Plan::set_min_kernel_work`] to
+/// force the sharded paths onto tiny graphs.
+const DEFAULT_MIN_KERNEL_WORK: usize = 1 << 15;
+
+/// Stuck-channel elision (§7.1) applied to an integer MAC step: `live`
+/// lists the input positions (MatMul) or input channels (Conv) still fed
+/// to the kernel; the constant contribution of the elided positions is
+/// folded into `bias` (one value per output column), which seeds the
+/// accumulator. Integer accumulation is exact and order-free, so seeding
+/// with the elided partial sum is bit-identical to accumulating it
+/// in-place — which is why elision is only ever applied to I32/I64
+/// kernels, never F64.
+#[derive(Clone, Debug)]
+pub(crate) struct MacElide {
+    pub live: Vec<usize>,
+    pub bias: Vec<i64>,
+}
 
 /// Fused elementwise chain: one pass over the input applying a sequence
 /// of micro-ops per element (aggregated scales/biases, quantizers,
@@ -40,13 +79,19 @@ pub(crate) struct MatMulStep {
     pub out: usize,
     /// per-sample rows of the left operand (1 for the zoo workloads)
     pub m: usize,
+    /// logical dot length of the input row (gather source width)
     pub k: usize,
     pub n: usize,
+    /// `(k_eff, n)` where `k_eff = elide.live.len()` when elided
     pub w: WeightMat,
     pub fused: Option<ThresholdTable>,
-    // run-time scratch, reused across calls
-    pub a32: Vec<i32>,
-    pub a64: Vec<i64>,
+    pub elide: Option<MacElide>,
+}
+
+impl MatMulStep {
+    fn k_eff(&self) -> usize {
+        self.elide.as_ref().map_or(self.k, |e| e.live.len())
+    }
 }
 
 /// Dense convolution as batched im2col + matrix multiply, scattering
@@ -64,12 +109,11 @@ pub(crate) struct ConvStep {
     pub oh: usize,
     pub ow: usize,
     pub spec: Conv2dSpec,
-    /// `(c*kh*kw, oc)` weight matrix
+    /// `(k_eff, oc)` weight matrix, `k_eff = live_channels * kh * kw`
     pub wmat: WeightMat,
     pub fused: Option<ThresholdTable>,
-    pub cols: Vec<f64>,
-    pub cols32: Vec<i32>,
-    pub cols64: Vec<i64>,
+    /// `live` holds input *channel* indices here
+    pub elide: Option<MacElide>,
 }
 
 /// Depthwise convolution (per-channel kernels), optional fused threshold.
@@ -227,6 +271,37 @@ impl Step {
     }
 }
 
+/// Per-worker conversion scratch (f64 activations gathered/converted to
+/// the MAC's accumulator width, plus the im2col buffer), grown on demand
+/// and reused across calls. Lives beside the buffer arena in
+/// [`WorkerState`] so no scratch ever crosses a thread.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Scratch {
+    cols: Vec<f64>,
+    i32v: Vec<i32>,
+    i64v: Vec<i64>,
+}
+
+/// One worker's run-time state: a private instance of the liveness-
+/// managed buffer arena (see [`super::arena`]) plus conversion scratch.
+/// `run_batch` hands each sample shard exactly one of these, which is the
+/// whole thread-safety argument: steps are immutable, constants are
+/// shared read-only, and everything mutable is worker-private.
+#[derive(Clone, Debug)]
+pub(crate) struct WorkerState {
+    pub bufs: Vec<Vec<f64>>,
+    pub scratch: Scratch,
+}
+
+impl WorkerState {
+    pub(crate) fn new(n_phys: usize) -> WorkerState {
+        WorkerState {
+            bufs: vec![Vec::new(); n_phys],
+            scratch: Scratch::default(),
+        }
+    }
+}
+
 /// Take a physical output buffer out of the arena, grown to `need`.
 /// The buffer is detached so input buffers can be borrowed immutably
 /// while it is written; the caller puts it back when done.
@@ -239,8 +314,219 @@ fn take_out(bufs: &mut [Vec<f64>], phys: usize, need: usize) -> Vec<f64> {
     v
 }
 
+/// Convert (and, under elision, gather the live positions of) `rows`
+/// activation rows of logical width `k` into `dst` at the accumulator
+/// width; returns the effective row width.
+fn gather_rows<T: MacElem>(
+    a: &[f64],
+    rows: usize,
+    k: usize,
+    live: Option<&[usize]>,
+    dst: &mut Vec<T>,
+) -> usize {
+    match live {
+        None => {
+            if dst.len() < rows * k {
+                dst.resize(rows * k, T::ZERO);
+            }
+            for (d, &v) in dst.iter_mut().zip(a.iter()) {
+                *d = T::from_f64(v);
+            }
+            k
+        }
+        Some(idx) => {
+            let ke = idx.len();
+            if dst.len() < rows * ke {
+                dst.resize(rows * ke, T::ZERO);
+            }
+            for r in 0..rows {
+                let src = &a[r * k..(r + 1) * k];
+                let row = &mut dst[r * ke..(r + 1) * ke];
+                for (d, &kk) in row.iter_mut().zip(idx.iter()) {
+                    *d = T::from_f64(src[kk]);
+                }
+            }
+            ke
+        }
+    }
+}
+
+/// Seed an accumulator span for output columns `j0..j0+acc.len()`: the
+/// elided-channel bias when present, zero otherwise.
+#[inline]
+fn seed_acc<T: MacElem>(acc: &mut [T], bias: Option<&[i64]>, j0: usize) {
+    match bias {
+        None => acc.iter_mut().for_each(|v| *v = T::ZERO),
+        Some(b) => {
+            for (jj, v) in acc.iter_mut().enumerate() {
+                *v = T::from_i64(b[j0 + jj]);
+            }
+        }
+    }
+}
+
+/// MAC a block of rows over output columns `cols`, writing finished
+/// values (optionally thresholded) row-major into `out` (row stride
+/// `cols.len()`). The single compute core behind the serial, row-sharded
+/// and column-sharded matmul paths.
+fn mm_block<T: MacElem>(
+    a: &[T],
+    w: &[T],
+    rows: usize,
+    k: usize,
+    n: usize,
+    cols: core::ops::Range<usize>,
+    bias: Option<&[i64]>,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+) {
+    let width = cols.len();
+    let mut acc = vec![T::ZERO; width];
+    for r in 0..rows {
+        seed_acc(&mut acc, bias, cols.start);
+        T::mac_row(&a[r * k..(r + 1) * k], w, n, cols.clone(), &mut acc);
+        let out_row = &mut out[r * width..(r + 1) * width];
+        for (jj, (&v, o)) in acc.iter().zip(out_row.iter_mut()).enumerate() {
+            let f = v.to_f64();
+            *o = match fused {
+                Some(t) => t.apply_channel(f, cols.start + jj),
+                None => f,
+            };
+        }
+    }
+}
+
+/// Batched matmul over `rows * k` activations: serial, or sharded across
+/// rows (batch/m parallelism), or across output columns when only one
+/// row exists (the single-sample large-layer case).
+#[allow(clippy::too_many_arguments)]
+fn run_mm<T: MacElem>(
+    a: &[T],
+    w: &[T],
+    rows: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[i64]>,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+    kt: usize,
+) {
+    let out = &mut out[..rows * n];
+    if kt > 1 && rows >= 2 {
+        let per = rows.div_ceil(kt);
+        std::thread::scope(|sc| {
+            let mut rest = out;
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let r1 = (r0 + per).min(rows);
+                let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+                rest = tail;
+                let a_block = &a[r0 * k..r1 * k];
+                sc.spawn(move || mm_block(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk));
+                r0 = r1;
+            }
+        });
+    } else if kt > 1 && rows == 1 && n >= 2 * kt {
+        let per = n.div_ceil(kt);
+        std::thread::scope(|sc| {
+            let mut rest = out;
+            let mut j0 = 0usize;
+            while j0 < n {
+                let j1 = (j0 + per).min(n);
+                let (chunk, tail) = rest.split_at_mut(j1 - j0);
+                rest = tail;
+                sc.spawn(move || mm_block(a, w, 1, k, n, j0..j1, bias, fused, chunk));
+                j0 = j1;
+            }
+        });
+    } else {
+        mm_block(a, w, rows, k, n, 0..n, bias, fused, out);
+    }
+}
+
+/// One sample's conv MAC over output channels `jr`: for every output
+/// position `rp` accumulate the im2col row against the weight columns and
+/// scatter into the channel-major chunk (`chunk[(j - jr.start) * frame +
+/// rp]`), folding the interpreter's final permute into the indexing.
+#[allow(clippy::too_many_arguments)]
+fn conv_block<T: MacElem>(
+    cols: &[T],
+    w: &[T],
+    frame: usize,
+    k: usize,
+    n: usize,
+    jr: core::ops::Range<usize>,
+    bias: Option<&[i64]>,
+    fused: &Option<ThresholdTable>,
+    chunk: &mut [f64],
+) {
+    let mut acc = vec![T::ZERO; jr.len()];
+    for rp in 0..frame {
+        seed_acc(&mut acc, bias, jr.start);
+        T::mac_row(&cols[rp * k..(rp + 1) * k], w, n, jr.clone(), &mut acc);
+        for (jj, &v) in acc.iter().enumerate() {
+            let f = v.to_f64();
+            chunk[jj * frame + rp] = match fused {
+                Some(t) => t.apply_channel(f, jr.start + jj),
+                None => f,
+            };
+        }
+    }
+}
+
+/// Batched conv MAC: per sample, optionally sharding the output-channel
+/// axis across threads (each shard's NCHW output region is contiguous,
+/// so no two threads ever share a cache line, let alone an element).
+#[allow(clippy::too_many_arguments)]
+fn run_conv<T: MacElem>(
+    cols: &[T],
+    w: &[T],
+    b: usize,
+    frame: usize,
+    k: usize,
+    oc: usize,
+    per_out: usize,
+    bias: Option<&[i64]>,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+    kt: usize,
+) {
+    for bi in 0..b {
+        let sample_cols = &cols[bi * frame * k..(bi + 1) * frame * k];
+        let sample_out = &mut out[bi * per_out..(bi + 1) * per_out];
+        if kt > 1 && oc >= 2 {
+            let per = oc.div_ceil(kt);
+            std::thread::scope(|sc| {
+                let mut rest = sample_out;
+                let mut j0 = 0usize;
+                while j0 < oc {
+                    let j1 = (j0 + per).min(oc);
+                    let (chunk, tail) = rest.split_at_mut((j1 - j0) * frame);
+                    rest = tail;
+                    sc.spawn(move || {
+                        conv_block(sample_cols, w, frame, k, oc, j0..j1, bias, fused, chunk)
+                    });
+                    j0 = j1;
+                }
+            });
+        } else {
+            conv_block(sample_cols, w, frame, k, oc, 0..oc, bias, fused, sample_out);
+        }
+    }
+}
+
 impl Step {
-    fn run(&mut self, bufs: &mut [Vec<f64>], b: usize) -> Result<()> {
+    /// Execute one step over a `b`-sample shard. `kt` is the intra-kernel
+    /// thread budget (1 = serial); `min_work` gates sharding so tiny
+    /// kernels never pay a spawn.
+    fn run(
+        &self,
+        bufs: &mut [Vec<f64>],
+        scratch: &mut Scratch,
+        b: usize,
+        kt: usize,
+        min_work: usize,
+    ) -> Result<()> {
         match self {
             Step::Ew(s) => {
                 let need = b * s.numel;
@@ -262,42 +548,24 @@ impl Step {
                 let need = rows * s.n;
                 let mut out = take_out(bufs, s.out, need);
                 let a = &bufs[s.a][..rows * s.k];
+                let k_eff = s.k_eff();
+                let live = s.elide.as_ref().map(|e| e.live.as_slice());
+                let bias = s.elide.as_ref().map(|e| e.bias.as_slice());
+                let kt = if rows * k_eff * s.n >= min_work { kt } else { 1 };
                 match &s.w {
                     WeightMat::F64(w) => {
-                        let mut acc = vec![0.0f64; s.n];
-                        for r in 0..rows {
-                            acc.iter_mut().for_each(|v| *v = 0.0);
-                            mac_row_f64(&a[r * s.k..(r + 1) * s.k], w, s.n, &mut acc);
-                            write_row(&mut out[r * s.n..(r + 1) * s.n], &acc, &s.fused);
-                        }
+                        debug_assert!(s.elide.is_none(), "elision is integer-only");
+                        run_mm(a, w, rows, s.k, s.n, None, &s.fused, &mut out, kt);
                     }
                     WeightMat::I32(w) => {
-                        if s.a32.len() < a.len() {
-                            s.a32.resize(a.len(), 0);
-                        }
-                        for (d, &v) in s.a32.iter_mut().zip(a.iter()) {
-                            *d = v as i32;
-                        }
-                        let mut acc = vec![0i32; s.n];
-                        for r in 0..rows {
-                            acc.iter_mut().for_each(|v| *v = 0);
-                            mac_row_i32(&s.a32[r * s.k..(r + 1) * s.k], w, s.n, &mut acc);
-                            write_row_i(&mut out[r * s.n..(r + 1) * s.n], &acc, &s.fused);
-                        }
+                        gather_rows(a, rows, s.k, live, &mut scratch.i32v);
+                        let at = &scratch.i32v[..rows * k_eff];
+                        run_mm(at, w, rows, k_eff, s.n, bias, &s.fused, &mut out, kt);
                     }
                     WeightMat::I64(w) => {
-                        if s.a64.len() < a.len() {
-                            s.a64.resize(a.len(), 0);
-                        }
-                        for (d, &v) in s.a64.iter_mut().zip(a.iter()) {
-                            *d = v as i64;
-                        }
-                        let mut acc = vec![0i64; s.n];
-                        for r in 0..rows {
-                            acc.iter_mut().for_each(|v| *v = 0);
-                            mac_row_i64(&s.a64[r * s.k..(r + 1) * s.k], w, s.n, &mut acc);
-                            write_row_i(&mut out[r * s.n..(r + 1) * s.n], &acc, &s.fused);
-                        }
+                        gather_rows(a, rows, s.k, live, &mut scratch.i64v);
+                        let at = &scratch.i64v[..rows * k_eff];
+                        run_mm(at, w, rows, k_eff, s.n, bias, &s.fused, &mut out, kt);
                     }
                 }
                 bufs[s.out] = out;
@@ -307,48 +575,32 @@ impl Step {
                 let need = b * per_out;
                 let mut out = take_out(bufs, s.out, need);
                 let x = &bufs[s.x][..b * s.c * s.h * s.w];
-                let mut cols = std::mem::take(&mut s.cols);
-                let (rows, k) = im2col_batched(x, b, s.c, s.h, s.w, s.spec, &mut cols);
                 let frame = s.oh * s.ow;
+                let cols = &mut scratch.cols;
+                let (rows, k_eff) = match &s.elide {
+                    Some(e) => im2col_channels(x, b, s.c, s.h, s.w, s.spec, &e.live, cols),
+                    None => im2col_batched(x, b, s.c, s.h, s.w, s.spec, cols),
+                };
+                let bias = s.elide.as_ref().map(|e| e.bias.as_slice());
+                let kt = if rows * k_eff * s.oc >= min_work { kt } else { 1 };
+                let oc = s.oc;
                 match &s.wmat {
                     WeightMat::F64(w) => {
-                        let mut acc = vec![0.0f64; s.oc];
-                        for r in 0..rows {
-                            acc.iter_mut().for_each(|v| *v = 0.0);
-                            mac_row_f64(&cols[r * k..(r + 1) * k], w, s.oc, &mut acc);
-                            scatter_row(&mut out, &acc, r, frame, s.ow, per_out, &s.fused);
-                        }
+                        debug_assert!(s.elide.is_none(), "elision is integer-only");
+                        let ct = &cols[..rows * k_eff];
+                        run_conv(ct, w, b, frame, k_eff, oc, per_out, None, &s.fused, &mut out, kt);
                     }
                     WeightMat::I32(w) => {
-                        if s.cols32.len() < rows * k {
-                            s.cols32.resize(rows * k, 0);
-                        }
-                        for (d, &v) in s.cols32.iter_mut().zip(cols[..rows * k].iter()) {
-                            *d = v as i32;
-                        }
-                        let mut acc = vec![0i32; s.oc];
-                        for r in 0..rows {
-                            acc.iter_mut().for_each(|v| *v = 0);
-                            mac_row_i32(&s.cols32[r * k..(r + 1) * k], w, s.oc, &mut acc);
-                            scatter_row_i(&mut out, &acc, r, frame, s.ow, per_out, &s.fused);
-                        }
+                        gather_rows(&cols[..rows * k_eff], rows, k_eff, None, &mut scratch.i32v);
+                        let ct = &scratch.i32v[..rows * k_eff];
+                        run_conv(ct, w, b, frame, k_eff, oc, per_out, bias, &s.fused, &mut out, kt);
                     }
                     WeightMat::I64(w) => {
-                        if s.cols64.len() < rows * k {
-                            s.cols64.resize(rows * k, 0);
-                        }
-                        for (d, &v) in s.cols64.iter_mut().zip(cols[..rows * k].iter()) {
-                            *d = v as i64;
-                        }
-                        let mut acc = vec![0i64; s.oc];
-                        for r in 0..rows {
-                            acc.iter_mut().for_each(|v| *v = 0);
-                            mac_row_i64(&s.cols64[r * k..(r + 1) * k], w, s.oc, &mut acc);
-                            scatter_row_i(&mut out, &acc, r, frame, s.ow, per_out, &s.fused);
-                        }
+                        gather_rows(&cols[..rows * k_eff], rows, k_eff, None, &mut scratch.i64v);
+                        let ct = &scratch.i64v[..rows * k_eff];
+                        run_conv(ct, w, b, frame, k_eff, oc, per_out, bias, &s.fused, &mut out, kt);
                     }
                 }
-                s.cols = cols;
                 bufs[s.out] = out;
             }
             Step::Depthwise(s) => {
@@ -493,90 +745,6 @@ fn ew2(a: &[f64], b: &[f64], out: &mut [f64], f: impl Fn(f64, f64) -> f64) {
     }
 }
 
-/// Write one matmul output row, column channel = j.
-#[inline]
-fn write_row(out_row: &mut [f64], acc: &[f64], fused: &Option<ThresholdTable>) {
-    match fused {
-        None => out_row.copy_from_slice(acc),
-        Some(t) => {
-            for (j, (&v, o)) in acc.iter().zip(out_row.iter_mut()).enumerate() {
-                *o = t.apply_channel(v, j);
-            }
-        }
-    }
-}
-
-#[inline]
-fn write_row_i<T: Copy + Into<i64>>(out_row: &mut [f64], acc: &[T], fused: &Option<ThresholdTable>) {
-    match fused {
-        None => {
-            for (o, &v) in out_row.iter_mut().zip(acc.iter()) {
-                *o = Into::<i64>::into(v) as f64;
-            }
-        }
-        Some(t) => {
-            for (j, (&v, o)) in acc.iter().zip(out_row.iter_mut()).enumerate() {
-                *o = t.apply_channel(Into::<i64>::into(v) as f64, j);
-            }
-        }
-    }
-}
-
-/// Scatter one conv row (output position `r`, all output channels) into
-/// NCHW layout — the fold of the interpreter's final `permute`.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn scatter_row(
-    out: &mut [f64],
-    acc: &[f64],
-    r: usize,
-    frame: usize,
-    ow: usize,
-    per_out: usize,
-    fused: &Option<ThresholdTable>,
-) {
-    let bi = r / frame;
-    let rem = r % frame;
-    let oy = rem / ow;
-    let ox = rem % ow;
-    let oh = frame / ow;
-    let base = bi * per_out + oy * ow + ox;
-    for (j, &v) in acc.iter().enumerate() {
-        let val = match fused {
-            Some(t) => t.apply_channel(v, j),
-            None => v,
-        };
-        out[base + j * oh * ow] = val;
-    }
-}
-
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn scatter_row_i<T: Copy + Into<i64>>(
-    out: &mut [f64],
-    acc: &[T],
-    r: usize,
-    frame: usize,
-    ow: usize,
-    per_out: usize,
-    fused: &Option<ThresholdTable>,
-) {
-    let bi = r / frame;
-    let rem = r % frame;
-    let oy = rem / ow;
-    let ox = rem % ow;
-    let oh = frame / ow;
-    let base = bi * per_out + oy * ow + ox;
-    for (j, &v) in acc.iter().enumerate() {
-        let f = Into::<i64>::into(v) as f64;
-        let val = match fused {
-            Some(t) => t.apply_channel(f, j),
-            None => f,
-        };
-        out[base + j * oh * ow] = val;
-    }
-}
-
 /// Composition statistics of a compiled plan (also the observable for the
 /// equivalence tests asserting the integer fast paths actually engage).
 #[derive(Clone, Debug, Default)]
@@ -596,6 +764,11 @@ pub struct PlanStats {
     pub generic: usize,
     pub fused_thresholds: usize,
     pub folded_nodes: usize,
+    /// MAC steps with at least one stuck channel elided (§7.1)
+    pub elided_mac_steps: usize,
+    /// total stuck input channels removed from MAC kernels, their
+    /// constant contribution folded into the accumulator-seeding bias
+    pub elided_mac_channels: usize,
     pub logical_slots: usize,
     pub physical_buffers: usize,
 }
@@ -612,7 +785,8 @@ impl std::fmt::Display for PlanStats {
         write!(
             f,
             "{} steps (ew {} / mm {}+{}i32+{}i64 / conv {}+{}i32+{}i64 / dw {} / pool {} / bin {} / gen {}), \
-             {} fused thresholds, {} folded nodes, {} buffers for {} tensors",
+             {} fused thresholds, {} folded nodes, {} elided stuck channels ({} MACs), \
+             {} buffers for {} tensors",
             self.steps,
             self.ew_chains,
             self.matmul_f64,
@@ -627,6 +801,8 @@ impl std::fmt::Display for PlanStats {
             self.generic,
             self.fused_thresholds,
             self.folded_nodes,
+            self.elided_mac_channels,
+            self.elided_mac_steps,
             self.physical_buffers,
             self.logical_slots,
         )
@@ -638,7 +814,8 @@ impl std::fmt::Display for PlanStats {
 pub struct Plan {
     pub(crate) name: String,
     pub(crate) steps: Vec<Step>,
-    pub(crate) bufs: Vec<Vec<f64>>,
+    pub(crate) n_phys: usize,
+    pub(crate) workers: Vec<WorkerState>,
     pub(crate) input_phys: usize,
     pub(crate) input_shape: Vec<usize>,
     pub(crate) input_numel: usize,
@@ -648,9 +825,42 @@ pub struct Plan {
     /// Set when the whole graph constant-folds (degenerate but legal).
     pub(crate) const_output: Option<Tensor>,
     pub(crate) stats: PlanStats,
+    pub(crate) threads: usize,
+    pub(crate) min_kernel_work: usize,
 }
 
 impl Plan {
+    pub(crate) fn new(
+        name: String,
+        steps: Vec<Step>,
+        n_phys: usize,
+        input_phys: usize,
+        input_shape: Vec<usize>,
+        output_phys: usize,
+        output_shape: Vec<usize>,
+        output_numel: usize,
+        const_output: Option<Tensor>,
+        stats: PlanStats,
+    ) -> Plan {
+        let input_numel = input_shape.iter().product();
+        Plan {
+            name,
+            steps,
+            n_phys,
+            workers: vec![WorkerState::new(n_phys)],
+            input_phys,
+            input_shape,
+            input_numel,
+            output_phys,
+            output_shape,
+            output_numel,
+            const_output,
+            stats,
+            threads: 1,
+            min_kernel_work: DEFAULT_MIN_KERNEL_WORK,
+        }
+    }
+
     pub fn name(&self) -> &str {
         &self.name
     }
@@ -669,16 +879,31 @@ impl Plan {
         &self.output_shape
     }
 
+    /// Thread budget for `run_batch` (1 = fully serial, the default).
+    /// Up to `n` scoped threads are used per call: first to shard the
+    /// batch across samples (private arena per worker), and any leftover
+    /// budget to shard rows/channels inside large MVU kernels.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Minimum `rows * k * n` MAC volume before intra-kernel sharding
+    /// engages (defaults to a spawn-cost-amortising threshold). Tests set
+    /// 0 to force the sharded code paths onto deliberately tiny graphs.
+    pub fn set_min_kernel_work(&mut self, min_work: usize) {
+        self.min_kernel_work = min_work;
+    }
+
     /// Execute the plan over a batch of per-sample inputs; returns one
     /// output tensor per input, in order.
     pub fn run_batch(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let b = inputs.len();
-        if b == 0 {
-            return Ok(Vec::new());
-        }
-        if let Some(t) = &self.const_output {
-            return Ok(vec![t.clone(); b]);
-        }
+        // All validation (including the empty-batch early return) happens
+        // before any arena is touched, so a rejected call never perturbs
+        // worker state.
         for t in inputs {
             if t.shape() != &self.input_shape[..] {
                 bail!(
@@ -689,30 +914,76 @@ impl Plan {
                 );
             }
         }
-        // pack the batch into the input buffer
-        {
-            let need = b * self.input_numel;
-            let ib = &mut self.bufs[self.input_phys];
-            if ib.len() < need {
-                ib.resize(need, 0.0);
-            }
-            for (i, t) in inputs.iter().enumerate() {
-                ib[i * self.input_numel..(i + 1) * self.input_numel].copy_from_slice(t.data());
-            }
+        let b = inputs.len();
+        if b == 0 {
+            return Ok(Vec::new());
         }
-        let (steps, bufs) = (&mut self.steps, &mut self.bufs);
-        for step in steps.iter_mut() {
-            step.run(bufs, b)?;
+        if let Some(t) = &self.const_output {
+            return Ok(vec![t.clone(); b]);
         }
-        let ob = &self.bufs[self.output_phys];
-        (0..b)
-            .map(|i| {
-                Tensor::new(
-                    &self.output_shape,
-                    ob[i * self.output_numel..(i + 1) * self.output_numel].to_vec(),
-                )
-            })
-            .collect()
+        let shards = self.threads.min(b);
+        if self.workers.len() < shards {
+            let n_phys = self.n_phys;
+            self.workers.resize_with(shards, || WorkerState::new(n_phys));
+        }
+        if shards <= 1 {
+            return run_shard(
+                &self.steps,
+                &mut self.workers[0],
+                inputs,
+                self.input_phys,
+                self.input_numel,
+                self.output_phys,
+                &self.output_shape,
+                self.output_numel,
+                self.threads,
+                self.min_kernel_work,
+            );
+        }
+        // Sample sharding: contiguous chunks, one private worker each;
+        // leftover thread budget goes to intra-kernel sharding.
+        let chunk = b.div_ceil(shards);
+        let kt = (self.threads / shards).max(1);
+        let steps = &self.steps;
+        let (input_phys, input_numel) = (self.input_phys, self.input_numel);
+        let (output_phys, output_numel) = (self.output_phys, self.output_numel);
+        let output_shape = &self.output_shape;
+        let min_work = self.min_kernel_work;
+        let mut shard_outs: Vec<Result<Vec<Tensor>>> = Vec::with_capacity(shards);
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = self
+                .workers
+                .iter_mut()
+                .zip(inputs.chunks(chunk))
+                .map(|(worker, xs)| {
+                    sc.spawn(move || {
+                        run_shard(
+                            steps,
+                            worker,
+                            xs,
+                            input_phys,
+                            input_numel,
+                            output_phys,
+                            output_shape,
+                            output_numel,
+                            kt,
+                            min_work,
+                        )
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(r) => shard_outs.push(r),
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+        });
+        let mut out = Vec::with_capacity(b);
+        for r in shard_outs {
+            out.extend(r?);
+        }
+        Ok(out)
     }
 
     /// Single-sample convenience wrapper.
@@ -720,4 +991,43 @@ impl Plan {
         let mut out = self.run_batch(std::slice::from_ref(x))?;
         Ok(out.remove(0))
     }
+}
+
+/// Run every step over one contiguous sample shard on one worker.
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    steps: &[Step],
+    worker: &mut WorkerState,
+    inputs: &[Tensor],
+    input_phys: usize,
+    input_numel: usize,
+    output_phys: usize,
+    output_shape: &[usize],
+    output_numel: usize,
+    kt: usize,
+    min_work: usize,
+) -> Result<Vec<Tensor>> {
+    let b = inputs.len();
+    {
+        let need = b * input_numel;
+        let ib = &mut worker.bufs[input_phys];
+        if ib.len() < need {
+            ib.resize(need, 0.0);
+        }
+        for (i, t) in inputs.iter().enumerate() {
+            ib[i * input_numel..(i + 1) * input_numel].copy_from_slice(t.data());
+        }
+    }
+    for step in steps {
+        step.run(&mut worker.bufs, &mut worker.scratch, b, kt, min_work)?;
+    }
+    let ob = &worker.bufs[output_phys];
+    (0..b)
+        .map(|i| {
+            Tensor::new(
+                output_shape,
+                ob[i * output_numel..(i + 1) * output_numel].to_vec(),
+            )
+        })
+        .collect()
 }

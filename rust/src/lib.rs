@@ -21,8 +21,10 @@
 //!   paths) with min/max instrumentation, used for verification.
 //! - [`engine`] — the serving hot path: an ahead-of-time plan compiler
 //!   (constant folding, elementwise-chain and im2col+MVU+threshold
-//!   fusion, SIRA-narrowed i32/i64 accumulators) and a batched integer
-//!   runtime over a reusable buffer arena, bit-exact vs [`executor`].
+//!   fusion, SIRA-narrowed i32/i64 accumulators, stuck-channel elision)
+//!   and a batched multi-threaded integer runtime (sample sharding plus
+//!   intra-kernel row/channel sharding, one buffer arena per worker),
+//!   bit-exact vs [`executor`] at every thread count.
 //! - [`models`] — the QNN workload zoo of the paper's evaluation
 //!   (TFC-w2a2, CNV-w2a2, RN8-w3a3, MNv1-w4a4) plus synthetic datasets.
 //! - [`hw`] — hardware kernel models: MVU, thresholding (parallel and

@@ -5,7 +5,8 @@
 //! sira-finn analyze --model tfc|cnv|rn8|mnv1
 //! sira-finn compile --model tfc --tail thresholding|composite \
 //!                   --acc sira|datatype|32 --target-cycles 16384
-//! sira-finn serve   --model tfc --workers 4 --requests 256
+//! sira-finn serve   --model tfc --workers 4 --requests 256 \
+//!                   [--engine [--streamline] --threads N]
 //! sira-finn e2e     [--artifacts artifacts]
 //! ```
 
@@ -13,6 +14,7 @@ use anyhow::{bail, Result};
 
 use sira_finn::accel::{compile_qnn, CompileOptions, TailStyle};
 use sira_finn::coordinator::{BatchPolicy, Coordinator};
+use sira_finn::engine;
 use sira_finn::executor::Executor;
 use sira_finn::hw::{EwDtype, ThresholdStyle};
 use sira_finn::models::{self, ZooModel};
@@ -131,15 +133,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = zoo_model(args.get_or("model", "tfc"))?;
     let workers = args.get_usize("workers", 4)?;
     let n = args.get_usize("requests", 256)?;
-    let g = std::sync::Arc::new(m.graph);
+    let threads = args.get_usize("threads", 1)?;
+    // --streamline only makes sense on the engine path: imply --engine
+    let engine_mode = args.flag("engine") || args.flag("streamline");
     let shape = m.input_shape.clone();
-    let coord = Coordinator::start(workers, BatchPolicy::default(), move || {
-        let g = std::sync::Arc::clone(&g);
-        move |x: &Tensor| {
-            let mut e = Executor::new(&g)?;
-            Ok(e.run_single(x)?.remove(0))
-        }
-    });
+    let coord = if engine_mode {
+        // direct engine serve path: plan-compiled integer runtime behind
+        // batched workers, each worker's plan sharding its drained batch
+        // across `threads` std::threads
+        let mut g = m.graph.clone();
+        let analysis = if args.flag("streamline") {
+            engine::prepare_streamlined(&mut g, &m.input_ranges)?
+        } else {
+            analyze(&g, &m.input_ranges)?
+        };
+        let mut plan = engine::compile(&g, &analysis)?;
+        plan.set_threads(threads);
+        println!(
+            "backend: plan engine ({}{}, threads={threads}) — {}",
+            m.name,
+            if args.flag("streamline") { ", streamlined" } else { "" },
+            plan.stats()
+        );
+        Coordinator::start_batched(workers, BatchPolicy::default(), move || {
+            let mut p = plan.clone();
+            move |xs: &[Tensor]| p.run_batch(xs)
+        })
+    } else {
+        println!("backend: graph executor ({})", m.name);
+        let g = std::sync::Arc::new(m.graph);
+        Coordinator::start(workers, BatchPolicy::default(), move || {
+            let g = std::sync::Arc::clone(&g);
+            move |x: &Tensor| {
+                let mut e = Executor::new(&g)?;
+                Ok(e.run_single(x)?.remove(0))
+            }
+        })
+    };
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..n)
         .map(|i| coord.submit(Tensor::full(&shape, (i % 255) as f64)).unwrap())
@@ -166,7 +196,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help"])?;
+    let args = Args::from_env(&["help", "engine", "streamline"])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "analyze" => cmd_analyze(&args),
@@ -177,6 +207,11 @@ fn main() -> Result<()> {
             println!(
                 "sira-finn — SIRA-enhanced FDNA compiler\n\
                  usage: sira-finn <analyze|compile|serve|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
+                 serve: --workers N (coordinator workers) --requests N\n\
+                 \x20      --engine      serve the plan-compiled integer runtime\n\
+                 \x20      --streamline  streamline first (implies --engine)\n\
+                 \x20      --threads N   std::thread budget per engine call\n\
+                 \x20                    (sample-sharded batches + row-sharded MVUs)\n\
                  see README.md"
             );
             Ok(())

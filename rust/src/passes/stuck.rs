@@ -1,8 +1,11 @@
 //! Stuck-channel detection (§7.1): channels whose analyzed range is a
 //! point interval produce a constant regardless of input — a
 //! generalisation of the dying-ReLU problem. Such channels offer no
-//! predictive power and can be removed (the paper leaves removal to
-//! future work; we report them and expose an optional pruning hook).
+//! predictive power and can be removed. The paper leaves removal to
+//! future work; here the plan engine ([`crate::engine`]) consumes
+//! [`stuck_channels`] / [`stuck_elements`] to elide proven-constant
+//! channels from fused integer MAC kernels, folding their contribution
+//! into the accumulator bias.
 
 use anyhow::Result;
 
@@ -28,6 +31,36 @@ pub fn stuck_channels(analysis: &Analysis, tensor: &str) -> Result<Vec<StuckChan
                 channel: ch,
                 value: l,
             });
+        }
+    }
+    Ok(out)
+}
+
+/// Per-element stuck view of a tensor over its full per-sample `shape`:
+/// `out[i] = Some(v)` when flat element `i` is analytically proven
+/// constant `v`. When the analyzed range tensor already has one entry
+/// per element this is [`stuck_channels`] verbatim; coarser (per-channel
+/// or per-tensor) ranges are broadcast, so a point interval marks every
+/// element it governs.
+pub fn stuck_elements(
+    analysis: &Analysis,
+    tensor: &str,
+    shape: &[usize],
+) -> Result<Vec<Option<f64>>> {
+    let r = analysis.get(tensor)?;
+    let numel: usize = shape.iter().product();
+    let mut out = vec![None; numel];
+    if r.lo.numel() == numel {
+        for sc in stuck_channels(analysis, tensor)? {
+            out[sc.channel] = Some(sc.value);
+        }
+        return Ok(out);
+    }
+    let lo = r.lo.broadcast_to(shape)?;
+    let hi = r.hi.broadcast_to(shape)?;
+    for (e, (&l, &h)) in out.iter_mut().zip(lo.data().iter().zip(hi.data())) {
+        if l == h {
+            *e = Some(l);
         }
     }
     Ok(out)
@@ -85,5 +118,24 @@ mod tests {
     fn missing_tensor_errors() {
         let a = Analysis::default();
         assert!(stuck_channels(&a, "nope").is_err());
+    }
+
+    #[test]
+    fn stuck_elements_broadcasts_per_channel_ranges() {
+        let mut a = Analysis::default();
+        a.ranges.insert(
+            "t".to_string(),
+            SiRange::float(
+                Tensor::new(&[1, 2, 1, 1], vec![3.0, -1.0]).unwrap(),
+                Tensor::new(&[1, 2, 1, 1], vec![3.0, 2.0]).unwrap(),
+            )
+            .unwrap(),
+        );
+        let e = stuck_elements(&a, "t", &[1, 2, 2, 2]).unwrap();
+        assert_eq!(&e[..4], &[Some(3.0); 4]);
+        assert_eq!(&e[4..], &[None; 4]);
+        // exact-shape ranges round-trip through stuck_channels
+        let e = stuck_elements(&a, "t", &[1, 2, 1, 1]).unwrap();
+        assert_eq!(e, vec![Some(3.0), None]);
     }
 }

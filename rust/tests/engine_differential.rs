@@ -1,0 +1,196 @@
+//! Differential test harness locking down the parallel engine runtime:
+//! for ≥50 seeded random QNN graphs (random layer stacks, widths, signs
+//! and per-channel scales from `models::builder`), the plan-compiled
+//! engine must agree **element-exactly** with the interpretive executor —
+//! compiled both ways (raw graph, and streamlined via
+//! `engine::prepare_streamlined`), across batch sizes {1, 3, 8} and
+//! thread counts {1, 4}. Thread count 4 with `min_kernel_work = 0`
+//! forces every sharded code path (sample sharding at batch > 1,
+//! row/column/channel sharding at batch 1) even on these tiny graphs.
+//!
+//! The base seed is fixed (reproducible by construction); `scripts/
+//! verify.sh` pins it explicitly via `SIRA_DIFF_SEED` when running the
+//! suite as part of tier-1.
+
+use std::collections::BTreeMap;
+
+use sira_finn::engine;
+use sira_finn::executor::Executor;
+use sira_finn::graph::Graph;
+use sira_finn::models::{Granularity, QnnBuilder};
+use sira_finn::sira::{analyze, Analysis, SiRange};
+use sira_finn::tensor::Tensor;
+use sira_finn::util::rng::Rng;
+
+/// Fixed default; override (e.g. from CI) with SIRA_DIFF_SEED.
+fn base_seed() -> u64 {
+    std::env::var("SIRA_DIFF_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1FF)
+}
+
+/// Random small QNN: random input rank, layer kinds, widths, bitwidths,
+/// signedness, activation/weight granularities (per-channel scales
+/// included), pooling and optional depthwise convs.
+///
+/// `streamline_safe` keeps activation quantizers unsigned + per-tensor —
+/// the envelope the streamlining passes are specified over (weight
+/// granularity stays random, per-channel included). Raw-graph cases use
+/// the full variety: the engine's generic fallback must swallow anything
+/// the executor runs.
+fn random_qnn(seed: u64, streamline_safe: bool) -> (Graph, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let conv_input = rng.chance(0.5);
+    let mut b = QnnBuilder::new("diff", seed ^ 0xD1FF);
+    let in_shape: Vec<usize> = if conv_input {
+        let hw = *rng.choose(&[4usize, 6, 8]);
+        vec![1, *rng.choose(&[1usize, 2, 3]), hw, hw]
+    } else {
+        vec![1, *rng.choose(&[4usize, 8, 12])]
+    };
+    b.input("x", &in_shape);
+    let act_gran = |rng: &mut Rng| {
+        if !streamline_safe && rng.chance(0.3) {
+            Granularity::PerChannel
+        } else {
+            Granularity::PerTensor
+        }
+    };
+    let g0 = act_gran(&mut rng);
+    b.quant_act(8, !streamline_safe && rng.chance(0.3), g0, 255.0);
+    let layers = rng.int_in(1, 3);
+    for li in 0..layers {
+        let wbits = rng.int_in(2, 6) as u32;
+        let abits = rng.int_in(2, 5) as u32;
+        let wgran = if rng.chance(0.5) {
+            Granularity::PerChannel
+        } else {
+            Granularity::PerTensor
+        };
+        let agran = act_gran(&mut rng);
+        if b.current_shape().len() == 4 {
+            let ch = *rng.choose(&[2usize, 4, 6]);
+            let depthwise = rng.chance(0.25);
+            let stride = if rng.chance(0.3) { 2 } else { 1 };
+            // pad 0 (the stuck-elision-eligible shape) only when the
+            // spatial extent still covers the 3x3 kernel
+            let pad = if rng.chance(0.5) && b.current_shape()[2] >= 3 { 0 } else { 1 };
+            b.conv(ch, 3, stride, pad, wbits, wgran, depthwise);
+            b.batchnorm();
+            b.relu();
+            b.quant_act(abits, !streamline_safe && rng.chance(0.3), agran, 8.0);
+            if rng.chance(0.3) && b.current_shape()[2] >= 2 && b.current_shape()[2] % 2 == 0 {
+                b.maxpool(2);
+            }
+            if li == layers - 1 {
+                b.global_avgpool();
+                b.flatten();
+            }
+        } else {
+            b.linear(*rng.choose(&[4usize, 8, 10]), wbits, wgran, rng.chance(0.5));
+            b.batchnorm();
+            b.relu();
+            b.quant_act(abits, false, agran, 8.0);
+        }
+    }
+    b.linear(5, 8, Granularity::PerTensor, true);
+    (b.finish().unwrap(), in_shape)
+}
+
+fn uint8_input_ranges() -> BTreeMap<String, SiRange> {
+    let mut m = BTreeMap::new();
+    m.insert("x".to_string(), SiRange::scalar(0.0, 255.0));
+    m
+}
+
+/// Engine (both thread counts, all batch splits) vs executor, exact.
+fn assert_differential(g: &Graph, analysis: &Analysis, seed: u64, label: &str) {
+    let in_shape = g.shapes[&g.inputs[0]].clone();
+    let numel: usize = in_shape.iter().product();
+    let mut rng = Rng::new(seed ^ 0xE11E);
+    let xs: Vec<Tensor> = (0..8)
+        .map(|_| {
+            Tensor::new(
+                &in_shape,
+                (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut exec = Executor::new(g).unwrap();
+    let want: Vec<Tensor> = xs
+        .iter()
+        .map(|x| exec.run_single(x).unwrap().remove(0))
+        .collect();
+    for threads in [1usize, 4] {
+        let mut plan = engine::compile(g, analysis)
+            .unwrap_or_else(|e| panic!("{label} seed {seed}: compile failed: {e:#}"));
+        plan.set_threads(threads);
+        plan.set_min_kernel_work(0); // force the sharded paths
+        for bsz in [1usize, 3, 8] {
+            let ys = plan.run_batch(&xs[..bsz]).unwrap_or_else(|e| {
+                panic!("{label} seed {seed} t={threads} b={bsz}: run failed: {e:#}")
+            });
+            assert_eq!(ys.len(), bsz);
+            for (i, (w, y)) in want[..bsz].iter().zip(&ys).enumerate() {
+                assert_eq!(
+                    w.shape(),
+                    y.shape(),
+                    "{label} seed {seed} t={threads} b={bsz}: shape at sample {i}"
+                );
+                assert_eq!(
+                    w.data(),
+                    y.data(),
+                    "{label} seed {seed} t={threads} b={bsz}: not element-exact at sample {i}"
+                );
+            }
+        }
+    }
+}
+
+fn raw_cases(range: std::ops::Range<u64>) {
+    let base = base_seed();
+    for case in range {
+        let seed = base.wrapping_add(case);
+        let (g, _) = random_qnn(seed, false);
+        let analysis = analyze(&g, &uint8_input_ranges())
+            .unwrap_or_else(|e| panic!("raw seed {seed}: analyze failed: {e:#}"));
+        assert_differential(&g, &analysis, seed, "raw");
+    }
+}
+
+fn streamlined_cases(range: std::ops::Range<u64>) {
+    let base = base_seed();
+    for case in range {
+        let seed = base.wrapping_add(case);
+        let (mut g, _) = random_qnn(seed, true);
+        let analysis = engine::prepare_streamlined(&mut g, &uint8_input_ranges())
+            .unwrap_or_else(|e| panic!("streamlined seed {seed}: prepare failed: {e:#}"));
+        assert_differential(&g, &analysis, seed, "streamlined");
+    }
+}
+
+// 50 graph cases, each compiled both ways (raw + streamlined) = 100
+// engine/executor comparisons, split into four #[test]s so the harness
+// runs them in parallel.
+
+#[test]
+fn differential_raw_first_half() {
+    raw_cases(0..25);
+}
+
+#[test]
+fn differential_raw_second_half() {
+    raw_cases(25..50);
+}
+
+#[test]
+fn differential_streamlined_first_half() {
+    streamlined_cases(0..25);
+}
+
+#[test]
+fn differential_streamlined_second_half() {
+    streamlined_cases(25..50);
+}

@@ -122,6 +122,91 @@ fn sampled_executions_stay_within_analyzed_ranges() {
     }
 }
 
+/// The integer-component soundness property stuck-channel elision and
+/// accumulator narrowing both rest on: for inputs drawn inside the
+/// declared input range, every observed value of a tensor whose SIRA
+/// range carries a *pure-integer* component lies inside its
+/// `sira_int_bounds` interval — and a point interval (`lo == hi`, a
+/// stuck channel) is observed at exactly that constant. Checked on the
+/// raw graphs and on their streamlined forms, since the engine elides
+/// channels on both.
+#[test]
+fn observed_values_lie_within_sira_int_bounds_raw_and_streamlined() {
+    use sira_finn::engine::prepare_streamlined;
+    use sira_finn::passes::accmin::sira_int_bounds;
+
+    let check = |g: &Graph, analysis: &sira_finn::sira::Analysis, seed: u64, label: &str| {
+        let in_shape = g.shapes[&g.inputs[0]].clone();
+        let numel: usize = in_shape.iter().product();
+        let mut rng = Rng::new(seed ^ 0x1B0);
+        let mut exec = Executor::new(g).unwrap();
+        let mut checked = 0usize;
+        for _ in 0..3 {
+            let x = Tensor::new(
+                &in_shape,
+                (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+            )
+            .unwrap();
+            let mut m = BTreeMap::new();
+            m.insert("x".to_string(), x);
+            let env = exec.run_env(&m).unwrap();
+            for (tensor, value) in &env {
+                let Ok(r) = analysis.get(tensor) else { continue };
+                let Some(ic) = &r.int else { continue };
+                if !ic.is_pure_integer() {
+                    continue;
+                }
+                let Some((lo, hi)) = sira_int_bounds(analysis, tensor) else {
+                    continue;
+                };
+                for (i, &v) in value.data().iter().enumerate() {
+                    assert!(
+                        v >= lo as f64 - 1e-9 && v <= hi as f64 + 1e-9,
+                        "{label} seed {seed}, {tensor}[{i}]: {v} outside int bounds [{lo}, {hi}]"
+                    );
+                }
+                // per-element point intervals pin the observed value
+                if let (Ok(elo), Ok(ehi)) = (
+                    ic.lo.broadcast_to(value.shape()),
+                    ic.hi.broadcast_to(value.shape()),
+                ) {
+                    if elo.numel() == value.numel() {
+                        for (i, &v) in value.data().iter().enumerate() {
+                            if elo.data()[i] == ehi.data()[i] {
+                                assert!(
+                                    (v - elo.data()[i]).abs() <= 1e-9,
+                                    "{label} seed {seed}, {tensor}[{i}]: stuck element moved \
+                                     ({v} != {})",
+                                    elo.data()[i]
+                                );
+                            }
+                        }
+                    }
+                }
+                checked += 1;
+            }
+        }
+        assert!(
+            checked > 0,
+            "{label} seed {seed}: no pure-integer tensors were checked"
+        );
+    };
+
+    for seed in 40..56u64 {
+        let (g, _) = random_qnn(seed);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), uint8_range());
+        let analysis = analyze(&g, &inputs).unwrap();
+        check(&g, &analysis, seed, "raw");
+
+        let mut sg = g.clone();
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), uint8_range());
+        let s_analysis = prepare_streamlined(&mut sg, &inputs).unwrap();
+        check(&sg, &s_analysis, seed, "streamlined");
+    }
+}
+
 #[test]
 fn all_analyzed_ranges_satisfy_affine_invariant() {
     for seed in 24..40u64 {

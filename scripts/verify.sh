@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate (referenced from ROADMAP.md). Runs the full
 # build (all targets, so benches and examples must compile), the test
-# suite, and — when rustfmt is installed — the formatting check.
+# suite, the engine differential suite under a pinned seed (release, so
+# the 50-case harness is fast), the perf_hotpath batch-8 regression gate
+# against BENCH_baseline.json, and — when rustfmt is installed — the
+# formatting check.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,6 +13,19 @@ cargo build --release --all-targets
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== engine differential suite (release, fixed seed) =="
+SIRA_DIFF_SEED=53759 cargo test --release --test engine_differential -q
+
+echo "== perf_hotpath batch-8 gate (>25% engine regression fails) =="
+# Baselines are machine-relative: gate against a machine-local copy under
+# target/ (never committed), seeded from the checked-in schema/config in
+# BENCH_baseline.json. The first run on a fresh machine records its own
+# timings; later runs compare against them. Delete the local copy to
+# re-calibrate after an intentional perf change.
+mkdir -p target
+[ -f target/BENCH_baseline.local.json ] || cp BENCH_baseline.json target/BENCH_baseline.local.json
+cargo bench --bench perf_hotpath -- --gate target/BENCH_baseline.local.json
 
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
