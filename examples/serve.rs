@@ -4,9 +4,11 @@
 //! * `--engine` — the plan-compiled integer runtime ([`sira_finn::engine`])
 //!   behind batched workers: real batched execution, SIRA-narrowed
 //!   accumulators, fused thresholds. Add `--streamline` to serve the
-//!   streamlined (pure-integer) form of the model, and `--threads N` to
-//!   let each worker's plan shard its drained batch across N std::threads
-//!   (row-sharding large MVU kernels when the batch is small).
+//!   streamlined (pure-integer) form of the model, `--threads N` to let
+//!   each worker's plan shard its drained batch across the persistent
+//!   N-thread pool (row-sharding large MVU kernels when the batch is
+//!   small), and `--pipeline N` to serve pipeline-parallel over N plan
+//!   segments (batch k+1 enters segment 0 while batch k runs segment 1).
 //! * default — PJRT artifact (when built with `--features pjrt` and
 //!   `make artifacts` ran), else the sidecar graph on the interpretive
 //!   executor, else the zoo graph on the executor.
@@ -49,8 +51,10 @@ fn main() -> Result<()> {
         ..Default::default()
     };
     let model_name = args.get_or("model", "cnv").to_string();
-    // --streamline only makes sense for the plan engine: imply --engine
-    let engine_mode = args.flag("engine") || args.flag("streamline");
+    let pipeline = args.get_usize("pipeline", 1)?;
+    // --streamline / --pipeline only make sense for the plan engine:
+    // imply --engine
+    let engine_mode = args.flag("engine") || args.flag("streamline") || pipeline > 1;
     let use_pjrt = cfg!(feature = "pjrt")
         && !args.flag("executor")
         && !engine_mode
@@ -75,12 +79,18 @@ fn main() -> Result<()> {
             plan.stats()
         );
         let shape = m.input_shape.clone();
-        let c = Coordinator::start_batched(workers, policy, move || {
-            // each worker owns a private clone of the compiled plan
-            // (thread budget included)
-            let mut p = plan.clone();
-            move |xs: &[Tensor]| p.run_batch(xs)
-        });
+        let c = if pipeline > 1 {
+            let sp = engine::SegmentedPlan::new(plan, pipeline);
+            println!("pipeline: {}", sp.describe());
+            Coordinator::start_pipelined(sp, policy)
+        } else {
+            Coordinator::start_batched(workers, policy, move || {
+                // each worker owns a private clone of the compiled plan
+                // (thread budget and persistent pool included)
+                let mut p = plan.clone();
+                move |xs: &[Tensor]| p.run_batch(xs)
+            })
+        };
         (c, shape)
     } else if use_pjrt {
         println!("backend: PJRT (streamlined Pallas artifact)");
@@ -149,6 +159,7 @@ fn main() -> Result<()> {
             .batches
             .load(std::sync::atomic::Ordering::Relaxed)
     );
+    print!("{}", coord.metrics.segment_summary(dt));
     coord.shutdown();
     Ok(())
 }

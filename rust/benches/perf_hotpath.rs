@@ -12,12 +12,14 @@
 //! # Regression gate
 //!
 //! `cargo bench --bench perf_hotpath -- --gate BENCH_baseline.json` runs
-//! only the engine batch-8 measurements (threads 1 and 4) and compares
-//! them against the checked-in baseline, failing (exit 1) on a >25%
-//! throughput regression. Baselines are machine-relative: an entry
-//! missing for this environment is measured and recorded into the file
-//! instead of compared, so the first gate run on a fresh machine
-//! self-calibrates. `scripts/verify.sh` wires this into tier-1.
+//! only the engine batch-8 measurements — threads 1 and 4 through
+//! `run_batch`, plus the threads-4 two-segment *pipelined* coordinator
+//! configuration — and compares them against the checked-in baseline,
+//! failing (exit 1) on a >25% throughput regression. Baselines are
+//! machine-relative: an entry missing for this environment is measured
+//! and recorded into the file instead of compared, so the first gate run
+//! on a fresh machine self-calibrates. `scripts/verify.sh` wires this
+//! into tier-1.
 
 use std::collections::BTreeMap;
 
@@ -75,6 +77,78 @@ fn measure_engine_b8(b: &Bencher, model: &str, threads: usize) -> f64 {
     r.mean.as_nanos() as f64 / 8.0
 }
 
+/// Measure pipelined serving ns/inference for one zoo model: a plan
+/// with the given thread budget split into `segments`, behind the
+/// pipelined coordinator, fed enough upfront requests that drained
+/// batches fill to 8. Best-of-3 wall-clock runs (channel scheduling
+/// noise would otherwise leak into the gate).
+fn measure_pipelined_b8(model: &str, threads: usize, segments: usize) -> f64 {
+    let zm = match model {
+        "tfc" => models::tfc_w2a2().unwrap(),
+        "cnv" => models::cnv_w2a2().unwrap(),
+        other => panic!("gate model '{other}'"),
+    };
+    let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
+    let mut rng = Rng::new(0x919E);
+    let xs: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
+    let n = 256usize;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
+        plan.set_threads(threads);
+        let sp = engine::SegmentedPlan::new(plan, segments);
+        let coord = Coordinator::start_pipelined(
+            sp,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..n)
+            .map(|i| coord.submit(xs[i % xs.len()].clone()).unwrap())
+            .collect();
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / n as f64;
+        coord.shutdown();
+        best = best.min(ns);
+    }
+    best
+}
+
+/// Compare one measurement against the baseline map, recording it when
+/// this environment has never seen the key.
+fn gate_check(
+    entries: &mut BTreeMap<String, Json>,
+    tolerance: f64,
+    key: String,
+    got: f64,
+    failed: &mut bool,
+    recorded: &mut bool,
+) {
+    match entries.get(&key).and_then(|v| v.as_f64().ok()) {
+        Some(base) => {
+            let limit = base * tolerance;
+            if got > limit {
+                eprintln!(
+                    "GATE FAIL {key}: {got:.0} ns/inference > {limit:.0} \
+                     (baseline {base:.0} * tolerance {tolerance})"
+                );
+                *failed = true;
+            } else {
+                println!("gate ok {key}: {got:.0} ns vs baseline {base:.0} ns");
+            }
+        }
+        None => {
+            println!("gate: recording first baseline for {key}: {got:.0} ns");
+            entries.insert(key, Json::Num(got));
+            *recorded = true;
+        }
+    }
+}
+
 /// `--gate <file>`: compare the engine batch-8 measurements against the
 /// baseline file; record entries this environment has never measured.
 /// Baselines are machine-relative, so the file should be a machine-local
@@ -107,25 +181,14 @@ fn run_gate(path: &str) -> i32 {
         let key = format!("engine/{model}/b8/t{threads}");
         let got = measure_engine_b8(&b, model, threads);
         json_line("gate", "engine", model, 8, threads, got);
-        match entries.get(&key).and_then(|v| v.as_f64().ok()) {
-            Some(base) => {
-                let limit = base * tolerance;
-                if got > limit {
-                    eprintln!(
-                        "GATE FAIL {key}: {got:.0} ns/inference > {limit:.0} \
-                         (baseline {base:.0} * tolerance {tolerance})"
-                    );
-                    failed = true;
-                } else {
-                    println!("gate ok {key}: {got:.0} ns vs baseline {base:.0} ns");
-                }
-            }
-            None => {
-                println!("gate: recording first baseline for {key}: {got:.0} ns");
-                entries.insert(key, Json::Num(got));
-                recorded = true;
-            }
-        }
+        gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
+    }
+    // pipelined serving configuration: threads 4, batch 8, 2 segments
+    for model in ["tfc", "cnv"] {
+        let key = format!("engine/{model}/b8/t4/pipe2");
+        let got = measure_pipelined_b8(model, 4, 2);
+        json_line("gate-pipelined", "engine", model, 8, 4, got);
+        gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
     if recorded {
         if let Json::Obj(o) = &mut doc {
@@ -356,6 +419,15 @@ fn main() {
             .load(std::sync::atomic::Ordering::Relaxed)
     );
     coord.shutdown();
+
+    section("pipelined serving (TFC, 2 segments, plan engine)");
+    let ns = measure_pipelined_b8("tfc", 1, 2);
+    json_line("pipelined", "engine", "tfc", 8, 1, ns);
+    println!(
+        "pipelined tfc b=8 segments=2: {:.0} ns/inference ({:.1} img/s)",
+        ns,
+        1e9 / ns
+    );
 
     section("serving coordinator (TFC, 2 workers, executor)");
     let zm = models::tfc_w2a2().unwrap();

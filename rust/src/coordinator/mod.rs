@@ -3,7 +3,7 @@
 //! compiled model instance. Demonstrates the "python never on the request
 //! path" property: after `make artifacts`, serving is pure rust.
 //!
-//! Two worker shapes exist:
+//! Three worker shapes exist:
 //! * [`Coordinator::start`] — per-request engines (`FnMut(&Tensor)`), the
 //!   original interpreter-style path: the batcher only amortises channel
 //!   wakeups.
@@ -12,6 +12,12 @@
 //!   batch to one engine call: the shape the plan-compiled
 //!   [`crate::engine`] wants, where batch execution genuinely shares
 //!   weight traversals.
+//! * [`Coordinator::start_pipelined`] — pipeline-parallel serving over a
+//!   [`SegmentedPlan`]: one stage thread per plan segment, batch *k+1*
+//!   entering segment 0 while batch *k* runs segment 1. Stages hand each
+//!   other only the segment-boundary carry buffers (`Vec` moves, no
+//!   copies); per-stage busy time lands in
+//!   [`Metrics::segment_stats`].
 //!
 //! tokio is unavailable offline; the coordinator is built on std threads
 //! and mpsc channels (ample for a CPU inference pipeline — the FDNA this
@@ -25,6 +31,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::engine::pool::WorkerState;
+use crate::engine::SegmentedPlan;
 use crate::tensor::Tensor;
 
 /// One inference request.
@@ -32,6 +40,56 @@ struct Job {
     input: Tensor,
     enqueued: Instant,
     reply: Sender<Result<Tensor>>,
+}
+
+/// Per-request bookkeeping carried alongside a batch through the
+/// pipeline stages.
+type Meta = (Instant, Sender<Result<Tensor>>);
+
+/// A batch in flight between two pipeline stages: request bookkeeping
+/// plus the segment-boundary carry buffers (moved, never copied).
+struct StageMsg {
+    metas: Vec<Meta>,
+    b: usize,
+    carry: Vec<Vec<f64>>,
+}
+
+/// Fail every request of a pipelined batch with the same error text.
+fn fail_batch(metrics: &Metrics, metas: Vec<Meta>, msg: &str) {
+    for (enq, reply) in metas {
+        metrics.record(enq.elapsed(), false);
+        let _ = reply.send(Err(anyhow!("{msg}")));
+    }
+}
+
+/// Final pipeline stage: extract per-sample outputs and reply.
+fn finish_batch(
+    sp: &SegmentedPlan,
+    ws: &WorkerState,
+    b: usize,
+    metas: Vec<Meta>,
+    metrics: &Metrics,
+) {
+    match sp.extract(ws, b) {
+        Ok(outs) => {
+            for ((enq, reply), out) in metas.into_iter().zip(outs) {
+                metrics.record(enq.elapsed(), true);
+                let _ = reply.send(Ok(out));
+            }
+        }
+        Err(e) => fail_batch(metrics, metas, &format!("{e:#}")),
+    }
+}
+
+/// Busy-time accounting of one pipeline stage (see
+/// [`Coordinator::start_pipelined`]).
+#[derive(Clone, Debug, Default)]
+pub struct SegmentStat {
+    /// batches this stage executed
+    pub batches: u64,
+    /// cumulative busy time in microseconds (pipeline balance
+    /// diagnostic: steady-state throughput is set by the busiest stage)
+    pub busy_us: u64,
 }
 
 /// Aggregated serving metrics.
@@ -43,6 +101,8 @@ pub struct Metrics {
     latencies_us: Mutex<Vec<u64>>,
     /// requests per executed batch, one entry per batch
     batch_sizes: Mutex<Vec<u64>>,
+    /// per-pipeline-segment occupancy (empty outside pipelined serving)
+    segments: Mutex<Vec<SegmentStat>>,
 }
 
 impl Metrics {
@@ -92,6 +152,45 @@ impl Metrics {
             return 0.0;
         }
         v.iter().sum::<u64>() as f64 / v.len() as f64
+    }
+
+    fn init_segments(&self, n: usize) {
+        *self.segments.lock().unwrap() = vec![SegmentStat::default(); n];
+    }
+
+    fn record_segment(&self, s: usize, busy: Duration) {
+        let mut v = self.segments.lock().unwrap();
+        if let Some(st) = v.get_mut(s) {
+            st.batches += 1;
+            st.busy_us += busy.as_micros() as u64;
+        }
+    }
+
+    /// Per-segment pipeline occupancy counters, one entry per stage
+    /// (empty unless serving via [`Coordinator::start_pipelined`]).
+    pub fn segment_stats(&self) -> Vec<SegmentStat> {
+        self.segments.lock().unwrap().clone()
+    }
+
+    /// Render the per-segment occupancy report against a serving wall
+    /// time, one line per stage ("segment 0: ... busy ... (..% of
+    /// wall)"); empty outside pipelined serving. Shared by the CLI and
+    /// the serve example.
+    pub fn segment_summary(&self, wall: Duration) -> String {
+        use std::fmt::Write;
+        let seg = self.segment_stats();
+        let wall_us = wall.as_micros().max(1) as f64;
+        let mut out = String::new();
+        for (i, st) in seg.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "segment {i}: {} batches, busy {} us ({:.0}% of wall)",
+                st.batches,
+                st.busy_us,
+                100.0 * st.busy_us as f64 / wall_us
+            );
+        }
+        out
     }
 }
 
@@ -256,6 +355,132 @@ impl Coordinator {
                 }
             }));
         }
+        Coordinator {
+            tx: Some(tx),
+            workers,
+            metrics,
+        }
+    }
+
+    /// Start **pipelined** serving over a [`SegmentedPlan`]: one
+    /// long-lived stage thread per plan segment, connected by channels
+    /// that move only the segment-boundary carry buffers. Batch *k+1*
+    /// enters segment 0 while batch *k* runs segment 1, so steady-state
+    /// throughput approaches `1 / max(stage_time)` instead of
+    /// `1 / total_time` — at unchanged bit-exactness, since segments
+    /// never split a kernel and each stage runs the same steps on the
+    /// same buffers as the monolithic runner.
+    ///
+    /// The plan's intra-kernel thread budget
+    /// ([`crate::engine::Plan::set_threads`]) keeps applying *within*
+    /// each stage through the shared persistent pool; sample sharding is
+    /// left to the pipeline, which overlaps whole batches instead.
+    /// Per-stage busy time and batch counts land in
+    /// [`Metrics::segment_stats`].
+    pub fn start_pipelined(sp: SegmentedPlan, policy: BatchPolicy) -> Coordinator {
+        let sp = Arc::new(sp);
+        let nseg = sp.segments();
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        metrics.init_segments(nseg);
+        let mut workers = Vec::new();
+
+        // stage s sends its carry to stage s + 1
+        let mut stage_tx: Vec<Sender<StageMsg>> = Vec::new();
+        let mut stage_rx: Vec<Receiver<StageMsg>> = Vec::new();
+        for _ in 1..nseg {
+            let (t, r) = channel::<StageMsg>();
+            stage_tx.push(t);
+            stage_rx.push(r);
+        }
+        let mut stage_tx = stage_tx.into_iter();
+        let mut stage_rx = stage_rx.into_iter();
+
+        // stage 0: drain + validate + pack + segment 0
+        {
+            let sp = Arc::clone(&sp);
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let next = stage_tx.next(); // None when the plan is one segment
+            workers.push(std::thread::spawn(move || {
+                let mut ws = WorkerState::default();
+                while let Some(batch) = drain_batch(&rx, &policy) {
+                    metrics.record_batch(batch.len());
+                    let b = batch.len();
+                    let mut inputs = Vec::with_capacity(b);
+                    let mut metas: Vec<Meta> = Vec::with_capacity(b);
+                    for job in batch {
+                        inputs.push(job.input);
+                        metas.push((job.enqueued, job.reply));
+                    }
+                    if let Some(t) = sp.const_output() {
+                        // degenerate constant-output plan: no pipeline
+                        for (enq, reply) in metas {
+                            metrics.record(enq.elapsed(), true);
+                            let _ = reply.send(Ok(t.clone()));
+                        }
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    let run = sp
+                        .pack(&mut ws, &inputs)
+                        .and_then(|()| sp.run_segment(0, &mut ws, b));
+                    match run {
+                        Ok(()) => match &next {
+                            Some(nx) => {
+                                let carry = sp.take_carry(0, &mut ws);
+                                metrics.record_segment(0, t0.elapsed());
+                                if let Err(lost) = nx.send(StageMsg { metas, b, carry }) {
+                                    fail_batch(&metrics, lost.0.metas, "pipeline stage exited");
+                                }
+                            }
+                            None => {
+                                metrics.record_segment(0, t0.elapsed());
+                                finish_batch(&sp, &ws, b, metas, &metrics);
+                            }
+                        },
+                        Err(e) => fail_batch(&metrics, metas, &format!("{e:#}")),
+                    }
+                }
+            }));
+        }
+
+        // stages 1..nseg: receive carry, run own segment, pass on
+        for s in 1..nseg {
+            let sp = Arc::clone(&sp);
+            let metrics = Arc::clone(&metrics);
+            let rx = stage_rx.next().expect("one receiver per later stage");
+            let next = if s + 1 < nseg {
+                Some(stage_tx.next().expect("one sender per inner stage"))
+            } else {
+                None
+            };
+            workers.push(std::thread::spawn(move || {
+                let mut ws = WorkerState::default();
+                while let Ok(StageMsg { metas, b, carry }) = rx.recv() {
+                    let t0 = Instant::now();
+                    sp.put_carry(s - 1, &mut ws, carry);
+                    match sp.run_segment(s, &mut ws, b) {
+                        Ok(()) => match &next {
+                            Some(nx) => {
+                                let carry = sp.take_carry(s, &mut ws);
+                                metrics.record_segment(s, t0.elapsed());
+                                if let Err(lost) = nx.send(StageMsg { metas, b, carry }) {
+                                    fail_batch(&metrics, lost.0.metas, "pipeline stage exited");
+                                }
+                            }
+                            None => {
+                                metrics.record_segment(s, t0.elapsed());
+                                finish_batch(&sp, &ws, b, metas, &metrics);
+                            }
+                        },
+                        Err(e) => fail_batch(&metrics, metas, &format!("{e:#}")),
+                    }
+                }
+            }));
+        }
+
         Coordinator {
             tx: Some(tx),
             workers,
@@ -466,6 +691,110 @@ mod tests {
             let want = serial.run_one(x).unwrap();
             assert_eq!(want.data(), got.data());
         }
+        c.shutdown();
+    }
+
+    /// Pipelined serving must be bit-exact against a serial plan on
+    /// every request, and every stage must actually run.
+    #[test]
+    fn pipelined_serving_matches_serial_plan() {
+        use crate::engine::{self, SegmentedPlan};
+        use crate::sira::analyze;
+        let m = crate::models::tfc_w2a2().unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let mut serial = engine::compile(&m.graph, &analysis).unwrap();
+        let sp = SegmentedPlan::new(engine::compile(&m.graph, &analysis).unwrap(), 3);
+        let nseg = sp.segments();
+        assert!(nseg >= 2, "TFC should segment: {}", sp.describe());
+        let c = Coordinator::start_pipelined(
+            sp,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+            },
+        );
+        let xs: Vec<Tensor> = (0..16)
+            .map(|i| Tensor::full(&[1, 784], (i * 13 % 255) as f64))
+            .collect();
+        let handles: Vec<_> = xs.iter().map(|x| c.submit(x.clone()).unwrap()).collect();
+        for (x, h) in xs.iter().zip(handles) {
+            let got = h.recv().unwrap().unwrap();
+            let want = serial.run_one(x).unwrap();
+            assert_eq!(want.data(), got.data());
+        }
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 16);
+        let stats = c.metrics.segment_stats();
+        assert_eq!(stats.len(), nseg);
+        assert!(
+            stats.iter().all(|s| s.batches >= 1),
+            "every pipeline stage must have executed: {stats:?}"
+        );
+        c.shutdown();
+    }
+
+    /// A pipelined plan with a thread budget: intra-kernel sharding
+    /// inside the stages must stay bit-invisible.
+    #[test]
+    fn pipelined_serving_with_thread_budget_is_bit_exact() {
+        use crate::engine::{self, SegmentedPlan};
+        use crate::sira::analyze;
+        let m = crate::models::tfc_w2a2().unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let mut serial = engine::compile(&m.graph, &analysis).unwrap();
+        let mut threaded = engine::compile(&m.graph, &analysis).unwrap();
+        threaded.set_threads(4);
+        threaded.set_min_kernel_work(0);
+        let sp = SegmentedPlan::new(threaded, 2);
+        let c = Coordinator::start_pipelined(sp, BatchPolicy::default());
+        let xs: Vec<Tensor> = (0..8)
+            .map(|i| Tensor::full(&[1, 784], (i * 29 % 255) as f64))
+            .collect();
+        let handles: Vec<_> = xs.iter().map(|x| c.submit(x.clone()).unwrap()).collect();
+        for (x, h) in xs.iter().zip(handles) {
+            let got = h.recv().unwrap().unwrap();
+            let want = serial.run_one(x).unwrap();
+            assert_eq!(want.data(), got.data());
+        }
+        c.shutdown();
+    }
+
+    /// Shape-invalid requests fail cleanly (their whole drained batch,
+    /// matching `run_batch` semantics) without wedging the pipeline.
+    #[test]
+    fn pipelined_rejects_bad_shapes_and_keeps_serving() {
+        use crate::engine::{self, SegmentedPlan};
+        use crate::sira::analyze;
+        let m = crate::models::tfc_w2a2().unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let sp = SegmentedPlan::new(engine::compile(&m.graph, &analysis).unwrap(), 3);
+        let c = Coordinator::start_pipelined(sp, BatchPolicy::default());
+        let err = c.infer(Tensor::zeros(&[1, 5])).unwrap_err();
+        assert!(err.to_string().contains("shape"), "unexpected error: {err:#}");
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
+        // the pipeline still serves after a rejected batch
+        let y = c.infer(Tensor::full(&[1, 784], 100.0)).unwrap();
+        assert_eq!(y.shape(), &[1, 10]);
+        c.shutdown();
+    }
+
+    /// Plans too small to cut degenerate to single-stage serving.
+    #[test]
+    fn pipelined_single_segment_plan_serves() {
+        use crate::engine::{self, SegmentedPlan};
+        use crate::models::{Granularity, QnnBuilder};
+        use crate::sira::analyze;
+        let mut b = QnnBuilder::new("tinypipe", 91);
+        b.input("x", &[1, 6]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        let g = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = analyze(&g, &inputs).unwrap();
+        let sp = SegmentedPlan::new(engine::compile(&g, &analysis).unwrap(), 4);
+        assert_eq!(sp.segments(), 1);
+        let c = Coordinator::start_pipelined(sp, BatchPolicy::default());
+        let y = c.infer(Tensor::full(&[1, 6], 7.0)).unwrap();
+        assert_eq!(y.shape(), &[1, 6]);
         c.shutdown();
     }
 

@@ -9,11 +9,16 @@
 //! inputs are released, so a kernel never reads and writes the same
 //! physical buffer (kernels are not required to be in-place safe).
 //!
-//! The layout computed here is instantiated once per *worker*: the
-//! parallel runner ([`crate::engine::Plan::run_batch`]) gives every
-//! sample shard its own `n_phys`-buffer arena (see `WorkerState` in the
-//! plan module), so the liveness reasoning above never has to consider
-//! cross-thread interleavings — buffers simply never cross threads.
+//! The layout computed here is instantiated once per *worker state*:
+//! the parallel runner ([`crate::engine::Plan::run_batch`]) gives every
+//! sample shard its own `n_phys`-buffer arena (see `WorkerState` in
+//! [`crate::engine::pool`]), so the liveness reasoning above never has
+//! to consider cross-thread interleavings — buffers simply never cross
+//! threads mid-task. Pipeline segmentation
+//! ([`crate::engine::segment`]) leans on the same invariant: because
+//! every kernel fully overwrites its output region before any reader
+//! touches it, a stage-owned arena only ever needs the segment-boundary
+//! carry buffers handed over between stages.
 
 /// Per-step slot usage, in schedule order.
 #[derive(Clone, Debug, Default)]

@@ -120,6 +120,64 @@ fn elide_stuck_rows(
     }
 }
 
+/// Per-output-position accumulator bias for a *padded* elided conv
+/// (ROADMAP §7.1 leftover): at output position `(oy, ox)` a stuck
+/// channel contributes its value through exactly the kernel taps that
+/// land in-bounds — out-of-bounds taps read the pad zero and contribute
+/// nothing, which is why a single per-column bias is wrong at the
+/// borders. Returns an `oh * ow * oc` position-major table whose row
+/// `rp` seeds the accumulators at that position. Magnitudes stay inside
+/// the accumulator-width bound: every row is a sub-sum of the worst-case
+/// partial-sum estimate that selected the integer kernel. Only called
+/// for integer matrices with integral stuck values (validated by
+/// [`elide_stuck_rows`]).
+fn conv_pos_bias(
+    wmat: &WeightMat,
+    ch_stuck: &[Option<f64>],
+    spec: Conv2dSpec,
+    h: usize,
+    w: usize,
+    oc: usize,
+) -> Vec<i64> {
+    let (kh, kw) = spec.kernel;
+    let (oh, ow) = spec.out_hw(h, w);
+    let at = |r: usize, j: usize| -> i64 {
+        match wmat {
+            WeightMat::I32(v) => v[r * oc + j] as i64,
+            WeightMat::I64(v) => v[r * oc + j],
+            WeightMat::F64(_) => unreachable!("elision is integer-only"),
+        }
+    };
+    let mut bias = vec![0i64; oh * ow * oc];
+    for (ch, s) in ch_stuck.iter().enumerate() {
+        let Some(v) = *s else { continue };
+        let v = v as i64;
+        if v == 0 {
+            continue;
+        }
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let rp = oy * ow + ox;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+                        let ix = (ox * spec.stride.1 + kx) as isize - spec.pad.1 as isize;
+                        if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                            continue;
+                        }
+                        let r = (ch * kh + ky) * kw + kx;
+                        let row = &mut bias[rp * oc..(rp + 1) * oc];
+                        for (j, b) in row.iter_mut().enumerate() {
+                            *b += v * at(r, j);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    bias
+}
+
 /// Compile `g` (shapes inferred, per-sample tensors with leading dim 1)
 /// and its SIRA `analysis` into an executable [`Plan`]. The analysis is
 /// consulted opportunistically — missing or float-only ranges simply
@@ -704,7 +762,11 @@ impl<'g> Compiler<'g> {
                     self.stats.elided_mac_steps += 1;
                     self.stats.elided_mac_channels += k - live.len();
                     wmat = compact;
-                    elide = Some(MacElide { live, bias });
+                    elide = Some(MacElide {
+                        live,
+                        bias,
+                        pos_stride: 0,
+                    });
                 }
             }
         }
@@ -764,12 +826,13 @@ impl<'g> Compiler<'g> {
         let out_name = node.outputs[0].clone();
         let mut wmat = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
         // §7.1 stuck-channel elision: a channel whose every spatial
-        // element is stuck at one value contributes a constant to every
-        // output position, so it leaves the im2col + MAC entirely. pad
-        // must be 0 (a padded border would read 0.0 where the bias
-        // assumes the stuck value).
+        // element is stuck at one value leaves the im2col + MAC entirely.
+        // With pad 0 the contribution is the same at every output
+        // position (one bias per output column); with padding, border
+        // taps read the pad zero instead of the stuck value, so the
+        // pad/stuck interaction folds into per-output-position biases.
         let mut elide = None;
-        if wmat.is_integer() && spec.pad == (0, 0) {
+        if wmat.is_integer() {
             if let Ok(stuck) = stuck::stuck_elements(self.analysis, &node.inputs[0], x_shape) {
                 let hw = h * wd;
                 let ch_stuck: Vec<Option<f64>> = (0..ch)
@@ -782,12 +845,23 @@ impl<'g> Compiler<'g> {
                     .collect();
                 let per_ch = kh * kw;
                 let stuck_rows: Vec<Option<f64>> = (0..k).map(|r| ch_stuck[r / per_ch]).collect();
-                if let Some((compact, _rows, bias)) = elide_stuck_rows(&wmat, k, oc, &stuck_rows) {
+                let elided = elide_stuck_rows(&wmat, k, oc, &stuck_rows);
+                if let Some((compact, _rows, col_bias)) = elided {
                     let live: Vec<usize> = (0..ch).filter(|&c| ch_stuck[c].is_none()).collect();
+                    let (bias, pos_stride) = if spec.pad == (0, 0) {
+                        (col_bias, 0)
+                    } else {
+                        self.stats.elided_padded_convs += 1;
+                        (conv_pos_bias(&wmat, &ch_stuck, spec, h, wd, oc), oc)
+                    };
                     self.stats.elided_mac_steps += 1;
                     self.stats.elided_mac_channels += ch - live.len();
                     wmat = compact;
-                    elide = Some(MacElide { live, bias });
+                    elide = Some(MacElide {
+                        live,
+                        bias,
+                        pos_stride,
+                    });
                 }
             }
         }

@@ -332,8 +332,10 @@ pub fn im2col_batched(
 /// elided channels' constant contribution is pre-folded into the MAC
 /// bias at compile time. Column order matches [`im2col_batched`] with the
 /// stuck channels deleted, which is exactly how [`super::fuse`] compacts
-/// the weight matrix rows. Requires zero padding offsets (enforced by the
-/// compiler) so no padded zeros can stand in for a stuck value.
+/// the weight matrix rows. Padding semantics are identical to the full
+/// lowering (out-of-bounds taps read 0.0); for elided channels the
+/// compiler accounts for the pad/stuck interaction with per-output-
+/// position biases instead.
 pub fn im2col_channels(
     x: &[f64],
     b: usize,
@@ -344,7 +346,6 @@ pub fn im2col_channels(
     live: &[usize],
     cols: &mut Vec<f64>,
 ) -> (usize, usize) {
-    debug_assert_eq!(spec.pad, (0, 0), "channel-subset im2col requires pad 0");
     let (kh, kw) = spec.kernel;
     let (oh, ow) = spec.out_hw(h, w);
     let k = live.len() * kh * kw;
@@ -360,9 +361,14 @@ pub fn im2col_channels(
                     debug_assert!(ch < c);
                     for ky in 0..kh {
                         for kx in 0..kw {
-                            let iy = oy * spec.stride.0 + ky;
-                            let ix = ox * spec.stride.1 + kx;
-                            cols[idx] = x[((bi * c + ch) * h + iy) * w + ix];
+                            let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+                            let ix = (ox * spec.stride.1 + kx) as isize - spec.pad.1 as isize;
+                            let v = if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                0.0
+                            } else {
+                                x[((bi * c + ch) * h + iy as usize) * w + ix as usize]
+                            };
+                            cols[idx] = v;
                             idx += 1;
                         }
                     }
@@ -503,6 +509,32 @@ mod tests {
             let srow = &sub[r * sk..(r + 1) * sk];
             assert_eq!(&srow[..4], &frow[..4]);
             assert_eq!(&srow[4..], &frow[8..12]);
+        }
+    }
+
+    #[test]
+    fn im2col_channels_pads_like_the_full_lowering() {
+        let spec = Conv2dSpec {
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+        };
+        let x: Vec<f64> = (0..2 * 3 * 4 * 4).map(|i| i as f64 - 40.0).collect();
+        let mut full = Vec::new();
+        let (rows, k) = im2col_batched(&x, 2, 3, 4, 4, spec, &mut full);
+        assert_eq!(k, 3 * 9);
+        let live = [0usize, 2];
+        let mut sub = Vec::new();
+        let (srows, sk) = im2col_channels(&x, 2, 3, 4, 4, spec, &live, &mut sub);
+        assert_eq!(srows, rows);
+        assert_eq!(sk, 2 * 9);
+        // each subset row = full row with channel 1's 9 columns deleted,
+        // padded zeros included
+        for r in 0..rows {
+            let frow = &full[r * k..(r + 1) * k];
+            let srow = &sub[r * sk..(r + 1) * sk];
+            assert_eq!(&srow[..9], &frow[..9]);
+            assert_eq!(&srow[9..], &frow[18..27]);
         }
     }
 

@@ -20,18 +20,26 @@
 //!
 //! See [`fuse`] for what the compiler specialises (constant folding,
 //! elementwise-chain fusion, im2col+MVU+threshold fusion, SIRA-narrowed
-//! i32/i64 accumulators, stuck-channel elision, buffer-arena reuse),
-//! [`plan`] for the parallel runner (sample sharding across the batch
-//! plus row/channel sharding inside large MVU kernels, one arena per
-//! worker), and `rust/tests/engine_equivalence.rs` plus
+//! i32/i64 accumulators, stuck-channel elision — padded convs included,
+//! buffer-arena reuse), [`plan`] for the parallel runner (sample
+//! sharding across the batch plus row/channel sharding inside large MVU
+//! kernels), [`pool`] for the persistent worker pool every sharded path
+//! executes on (work items instead of per-call thread spawns, worker
+//! states checked out per task), [`segment`] for pipeline-parallel plan
+//! segmentation ([`SegmentedPlan`], served by
+//! [`crate::coordinator::Coordinator::start_pipelined`]), and
+//! `rust/tests/engine_equivalence.rs` plus
 //! `rust/tests/engine_differential.rs` for the bit-exactness contract
 //! against the interpreter — on the zoo workloads and on seeded random
-//! graphs, at every tested batch size and thread count.
+//! graphs, at every tested batch size and thread count, monolithic and
+//! segmented.
 
 pub mod arena;
 pub mod fuse;
 pub mod kernels;
 pub mod plan;
+pub mod pool;
+pub mod segment;
 
 use std::collections::BTreeMap;
 
@@ -43,6 +51,8 @@ use crate::sira::{analyze, Analysis, SiRange};
 
 pub use fuse::compile;
 pub use plan::{Plan, PlanStats};
+pub use pool::WorkerPool;
+pub use segment::SegmentedPlan;
 
 /// Streamline `g` in place (lower → fold → extract scales → aggregate →
 /// threshold-convert, the §4.1 pipeline) and return a fresh SIRA
@@ -304,11 +314,7 @@ mod tests {
         inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
         let analysis = analyze(&m, &inputs).unwrap();
         let mut plan = compile(&m, &analysis).unwrap();
-        let untouched = |p: &super::Plan| {
-            p.workers
-                .iter()
-                .all(|w| w.bufs.iter().all(|b| b.is_empty()))
-        };
+        let untouched = |p: &super::Plan| p.serial.bufs.iter().all(|b| b.is_empty());
         assert!(untouched(&plan), "fresh plan must start with empty buffers");
         assert!(plan.run_batch(&[]).unwrap().is_empty());
         assert!(untouched(&plan), "empty batch grew a buffer");
@@ -482,6 +488,123 @@ mod tests {
         assert_eq!(plan.stats().conv_i32, 1, "{}", plan.stats());
         assert_eq!(plan.stats().elided_mac_steps, 1, "{}", plan.stats());
         assert_eq!(plan.stats().elided_mac_channels, 1, "{}", plan.stats());
+        let xs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                let mut data = Vec::with_capacity(48);
+                for ch in 0..3 {
+                    for _ in 0..16 {
+                        data.push(if ch == 1 { 9.0 } else { rng.int_in(-50, 50) as f64 });
+                    }
+                }
+                Tensor::new(&[1, 3, 4, 4], data).unwrap()
+            })
+            .collect();
+        exact_match(&g, &analysis, &xs);
+    }
+
+    /// The `min_kernel_work` tuning API: `usize::MAX` keeps every kernel
+    /// serial even under a thread budget; 0 forces the sharded paths
+    /// onto arbitrarily tiny kernels. Observable through the pool's
+    /// executed-work-item counter; bits never change either way.
+    #[test]
+    fn min_kernel_work_gates_intra_kernel_sharding() {
+        let mut b = QnnBuilder::new("gate", 81);
+        b.input("x", &[1, 8]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.linear(8, 3, Granularity::PerTensor, true);
+        let m = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = analyze(&m, &inputs).unwrap();
+        let mut rng = Rng::new(82);
+        let xs = input_batch(&mut rng, &[1, 8], 1);
+        let mut serial = compile(&m, &analysis).unwrap();
+        let want = serial.run_batch(&xs).unwrap();
+
+        let mut gated = compile(&m, &analysis)
+            .unwrap()
+            .with_min_kernel_work(usize::MAX);
+        gated.set_threads(2);
+        assert_eq!(gated.min_kernel_work(), usize::MAX);
+        let got = gated.run_batch(&xs).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
+        assert_eq!(
+            gated.pool().unwrap().tasks_executed(),
+            0,
+            "min_kernel_work = MAX must keep every kernel serial"
+        );
+
+        let mut forced = compile(&m, &analysis).unwrap().with_min_kernel_work(0);
+        forced.set_threads(2);
+        let got = forced.run_batch(&xs).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
+        assert!(
+            forced.pool().unwrap().tasks_executed() > 0,
+            "min_kernel_work = 0 must force sharded work items"
+        );
+    }
+
+    /// §7.1 extension: a stuck input channel of a *padded* conv is
+    /// elided too — border taps read pad zeros instead of the stuck
+    /// value, so the folded contribution becomes a per-output-position
+    /// bias; outputs stay bit-exact against the executor.
+    #[test]
+    fn stuck_channels_are_elided_from_padded_integer_conv() {
+        let mut g = Graph::new("stuckpad");
+        g.add_input("x", &[1, 3, 4, 4]);
+        g.add_initializer("one", Tensor::scalar(1.0));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("bits", Tensor::scalar(8.0));
+        g.add_node(Node::new(
+            "q",
+            Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &["x", "one", "z", "bits"],
+            &["xq"],
+        ));
+        let mut rng = Rng::new(83);
+        g.add_initializer(
+            "W",
+            Tensor::new(
+                &[2, 3, 3, 3],
+                (0..2 * 3 * 9).map(|_| rng.int_in(-3, 3) as f64).collect(),
+            )
+            .unwrap(),
+        );
+        g.add_node(Node::new(
+            "conv",
+            Op::Conv {
+                spec: crate::tensor::Conv2dSpec {
+                    kernel: (3, 3),
+                    stride: (1, 1),
+                    pad: (1, 1),
+                },
+                group: 1,
+            },
+            &["xq", "W"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        // channel 1 stuck at 9, channels 0 and 2 live
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            crate::sira::SiRange::float(
+                Tensor::new(&[1, 3, 1, 1], vec![-50.0, 9.0, -50.0]).unwrap(),
+                Tensor::new(&[1, 3, 1, 1], vec![50.0, 9.0, 50.0]).unwrap(),
+            )
+            .unwrap(),
+        );
+        let analysis = analyze(&g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        assert_eq!(plan.stats().conv_i32, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_mac_steps, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_mac_channels, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_padded_convs, 1, "{}", plan.stats());
         let xs: Vec<Tensor> = (0..3)
             .map(|_| {
                 let mut data = Vec::with_capacity(48);

@@ -6,28 +6,42 @@
 //! its SIRA [`crate::sira::Analysis`]. All constants (weights, folded
 //! quantizers, aggregated scales/biases, threshold tables, elided-channel
 //! biases) are baked into the steps at compile time; at run time the only
-//! dynamic state lives in per-worker [`WorkerState`]s (a liveness-managed
-//! buffer arena plus conversion scratch), reused across calls — the hot
-//! path performs no per-node graph resolution, no name lookups, and no
-//! constant-tensor clones (all of which dominate the interpretive
-//! [`crate::executor::Executor`]'s per-inference cost).
+//! dynamic state lives in per-task worker states (a liveness-managed
+//! buffer arena plus conversion scratch, see [`super::pool`]), reused
+//! across calls — the hot path performs no per-node graph resolution, no
+//! name lookups, and no constant-tensor clones (all of which dominate the
+//! interpretive [`crate::executor::Executor`]'s per-inference cost).
 //!
 //! # Parallel execution
 //!
-//! `Plan::run_batch` honours a thread budget ([`Plan::set_threads`]) with
-//! two composable sharding strategies, both bit-exact:
+//! `Plan::run_batch` honours a thread budget ([`Plan::set_threads`])
+//! backed by a persistent [`super::pool::WorkerPool`] shared by every
+//! clone of the plan — work items are queue pushes, not thread spawns,
+//! so parallelism no longer pays a per-call spawn cost. Two composable
+//! sharding strategies, both bit-exact:
 //!
 //! * **Sample sharding** — the batch is split into contiguous chunks,
-//!   one scoped `std::thread` per chunk, each owning a private
-//!   [`WorkerState`] so buffers never cross threads. Samples are
-//!   independent in every kernel, so per-shard results are the bits the
-//!   serial runner would produce.
-//! * **Row/channel sharding inside MVU kernels** — leftover threads
-//!   (notably at batch 1) split large MatMul steps across output rows
+//!   one pool work item per chunk (the submitting thread runs the tail
+//!   chunk itself), each checking out a private worker state so buffers
+//!   never cross threads mid-task. Samples are independent in every
+//!   kernel, so per-shard results are the bits the serial runner would
+//!   produce.
+//! * **Row/channel sharding inside MVU kernels** — leftover budget
+//!   (notably at batch 1) splits large MatMul steps across output rows
 //!   (or output columns when there is only one row) and large Conv steps
-//!   across output channels. Shard boundaries always fall *between*
-//!   output elements — no dot product is ever split — so each output
-//!   element is accumulated in exactly the reference order.
+//!   across output channels, again as pool work items. Shard boundaries
+//!   always fall *between* output elements — no dot product is ever
+//!   split — so each output element is accumulated in exactly the
+//!   reference order. [`Plan::set_min_kernel_work`] tunes the MAC volume
+//!   below which a kernel stays serial.
+//!
+//! # Segmented execution
+//!
+//! [`super::segment::SegmentedPlan`] additionally splits the step list
+//! at minimal-live-buffer boundaries so the serving coordinator can
+//! pipeline consecutive batches across segments; the per-segment runner
+//! here ([`PlanView::run_steps`]) executes exactly the same steps on the
+//! same buffers, which is why segmentation is bit-exact by construction.
 
 use anyhow::{bail, Context, Result};
 
@@ -38,25 +52,54 @@ use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 use super::kernels::{
     im2col_batched, im2col_channels, MacElem, MicroOp, ThresholdTable, WeightMat,
 };
+use super::pool::{Scratch, WorkerPool, WorkerState};
+
+use std::sync::Arc;
 
 /// Below this many MAC operations (`rows * k * n`) a kernel is run on one
-/// thread regardless of the budget: thread spawn + join costs more than
-/// the arithmetic. Tests lower it via [`Plan::set_min_kernel_work`] to
-/// force the sharded paths onto tiny graphs.
-const DEFAULT_MIN_KERNEL_WORK: usize = 1 << 15;
+/// thread regardless of the budget. With the persistent pool a work item
+/// costs a queue push rather than a thread spawn, so the default sits an
+/// order of magnitude below the PR 2 spawn-amortising threshold; tune per
+/// deployment via [`Plan::set_min_kernel_work`] /
+/// [`Plan::with_min_kernel_work`] (0 forces sharding, `usize::MAX`
+/// disables it).
+const DEFAULT_MIN_KERNEL_WORK: usize = 1 << 12;
 
 /// Stuck-channel elision (§7.1) applied to an integer MAC step: `live`
 /// lists the input positions (MatMul) or input channels (Conv) still fed
 /// to the kernel; the constant contribution of the elided positions is
-/// folded into `bias` (one value per output column), which seeds the
-/// accumulator. Integer accumulation is exact and order-free, so seeding
-/// with the elided partial sum is bit-identical to accumulating it
-/// in-place — which is why elision is only ever applied to I32/I64
-/// kernels, never F64.
+/// folded into `bias`, which seeds the accumulator. For MatMul and
+/// unpadded Conv the bias is one value per output column
+/// (`pos_stride == 0`); for padded Conv the border taps of a stuck
+/// channel fall on pad zeros instead of the stuck value, so the folded
+/// contribution varies by output position and `bias` holds
+/// `oh * ow * oc` values with `pos_stride == oc` (position-major).
+/// Integer accumulation is exact and order-free, so seeding with the
+/// elided partial sum is bit-identical to accumulating it in-place —
+/// which is why elision is only ever applied to I32/I64 kernels, never
+/// F64.
 #[derive(Clone, Debug)]
 pub(crate) struct MacElide {
     pub live: Vec<usize>,
     pub bias: Vec<i64>,
+    /// 0 = one bias per output column; `oc` = per-output-position rows.
+    pub pos_stride: usize,
+}
+
+/// Borrowed view of an elision bias used by the MAC cores.
+#[derive(Clone, Copy)]
+pub(crate) struct BiasRef<'a> {
+    bias: &'a [i64],
+    pos_stride: usize,
+}
+
+impl MacElide {
+    fn bias_ref(&self) -> BiasRef<'_> {
+        BiasRef {
+            bias: &self.bias,
+            pos_stride: self.pos_stride,
+        }
+    }
 }
 
 /// Fused elementwise chain: one pass over the input applying a sequence
@@ -231,6 +274,42 @@ impl Step {
         }
     }
 
+    /// Per-sample element count of the output this step writes (the
+    /// live-buffer transfer unit for segment boundary analysis).
+    pub(crate) fn out_numel(&self) -> usize {
+        match self {
+            Step::Ew(s) => s.numel,
+            Step::MatMul(s) => s.m * s.n,
+            Step::Conv(s) => s.oc * s.oh * s.ow,
+            Step::Depthwise(s) => s.c * s.oh * s.ow,
+            Step::Pool(s) => s.c * s.oh * s.ow,
+            Step::Binary(s) => s.numel,
+            Step::Generic(s) => s.out_numel,
+        }
+    }
+
+    /// Rough per-sample operation count — the load-balancing weight for
+    /// segment boundary placement. Only relative magnitudes matter.
+    pub(crate) fn work(&self) -> u64 {
+        let w = match self {
+            Step::Ew(s) => s.numel * s.ops.len().max(1),
+            Step::MatMul(s) => s.m * s.k_eff() * s.n,
+            Step::Conv(s) => {
+                let k_eff = match &s.elide {
+                    Some(e) => e.live.len() * s.spec.kernel.0 * s.spec.kernel.1,
+                    None => s.c * s.spec.kernel.0 * s.spec.kernel.1,
+                };
+                s.oh * s.ow * k_eff * s.oc
+            }
+            Step::Depthwise(s) => s.c * s.oh * s.ow * s.spec.kernel.0 * s.spec.kernel.1,
+            Step::Pool(s) => s.c * s.oh * s.ow * s.spec.kernel.0 * s.spec.kernel.1,
+            Step::Binary(s) => s.numel,
+            // interpreter round trip: charge a healthy constant factor
+            Step::Generic(s) => s.out_numel * 16,
+        };
+        w as u64
+    }
+
     /// Rewrite logical slot ids to physical buffer ids.
     pub(crate) fn remap(&mut self, phys: &[usize]) {
         match self {
@@ -271,33 +350,24 @@ impl Step {
     }
 }
 
-/// Per-worker conversion scratch (f64 activations gathered/converted to
-/// the MAC's accumulator width, plus the im2col buffer), grown on demand
-/// and reused across calls. Lives beside the buffer arena in
-/// [`WorkerState`] so no scratch ever crosses a thread.
-#[derive(Clone, Debug, Default)]
-pub(crate) struct Scratch {
-    cols: Vec<f64>,
-    i32v: Vec<i32>,
-    i64v: Vec<i64>,
+/// Immutable execution parameters threaded through a step run: the pool
+/// to submit intra-kernel work items to (None = fully serial), the
+/// intra-kernel thread budget, and the sharding gate.
+#[derive(Clone, Copy)]
+pub(crate) struct ExecCtx<'a> {
+    pub pool: Option<&'a WorkerPool>,
+    pub kt: usize,
+    pub min_work: usize,
 }
 
-/// One worker's run-time state: a private instance of the liveness-
-/// managed buffer arena (see [`super::arena`]) plus conversion scratch.
-/// `run_batch` hands each sample shard exactly one of these, which is the
-/// whole thread-safety argument: steps are immutable, constants are
-/// shared read-only, and everything mutable is worker-private.
-#[derive(Clone, Debug)]
-pub(crate) struct WorkerState {
-    pub bufs: Vec<Vec<f64>>,
-    pub scratch: Scratch,
-}
-
-impl WorkerState {
-    pub(crate) fn new(n_phys: usize) -> WorkerState {
-        WorkerState {
-            bufs: vec![Vec::new(); n_phys],
-            scratch: Scratch::default(),
+impl ExecCtx<'_> {
+    /// Effective intra-kernel budget for a MAC of `work` volume: the full
+    /// budget when it clears the gate (and a pool exists), else serial.
+    fn kernel_threads(&self, work: usize) -> usize {
+        if self.pool.is_some() && work >= self.min_work {
+            self.kt
+        } else {
+            1
         }
     }
 }
@@ -351,15 +421,17 @@ fn gather_rows<T: MacElem>(
     }
 }
 
-/// Seed an accumulator span for output columns `j0..j0+acc.len()`: the
-/// elided-channel bias when present, zero otherwise.
+/// Seed an accumulator span for output columns `j0..j0+acc.len()` at
+/// output position `rp`: the elided-channel bias when present (uniform
+/// across positions when `pos_stride == 0`), zero otherwise.
 #[inline]
-fn seed_acc<T: MacElem>(acc: &mut [T], bias: Option<&[i64]>, j0: usize) {
+fn seed_acc<T: MacElem>(acc: &mut [T], bias: Option<BiasRef<'_>>, j0: usize, rp: usize) {
     match bias {
         None => acc.iter_mut().for_each(|v| *v = T::ZERO),
         Some(b) => {
+            let base = rp * b.pos_stride + j0;
             for (jj, v) in acc.iter_mut().enumerate() {
-                *v = T::from_i64(b[j0 + jj]);
+                *v = T::from_i64(b.bias[base + jj]);
             }
         }
     }
@@ -368,7 +440,8 @@ fn seed_acc<T: MacElem>(acc: &mut [T], bias: Option<&[i64]>, j0: usize) {
 /// MAC a block of rows over output columns `cols`, writing finished
 /// values (optionally thresholded) row-major into `out` (row stride
 /// `cols.len()`). The single compute core behind the serial, row-sharded
-/// and column-sharded matmul paths.
+/// and column-sharded matmul paths. MatMul rows are batch samples, so
+/// the bias (when present) is always per-column (`pos_stride == 0`).
 fn mm_block<T: MacElem>(
     a: &[T],
     w: &[T],
@@ -376,14 +449,14 @@ fn mm_block<T: MacElem>(
     k: usize,
     n: usize,
     cols: core::ops::Range<usize>,
-    bias: Option<&[i64]>,
+    bias: Option<BiasRef<'_>>,
     fused: &Option<ThresholdTable>,
     out: &mut [f64],
 ) {
     let width = cols.len();
     let mut acc = vec![T::ZERO; width];
     for r in 0..rows {
-        seed_acc(&mut acc, bias, cols.start);
+        seed_acc(&mut acc, bias, cols.start, 0);
         T::mac_row(&a[r * k..(r + 1) * k], w, n, cols.clone(), &mut acc);
         let out_row = &mut out[r * width..(r + 1) * width];
         for (jj, (&v, o)) in acc.iter().zip(out_row.iter_mut()).enumerate() {
@@ -396,9 +469,20 @@ fn mm_block<T: MacElem>(
     }
 }
 
+/// Resolved parallelism of one MAC step: the intra-kernel work-item
+/// budget (already gated on `min_kernel_work`) and the pool to submit
+/// to.
+#[derive(Clone, Copy)]
+struct MacPar<'a> {
+    kt: usize,
+    pool: Option<&'a WorkerPool>,
+}
+
 /// Batched matmul over `rows * k` activations: serial, or sharded across
 /// rows (batch/m parallelism), or across output columns when only one
-/// row exists (the single-sample large-layer case).
+/// row exists (the single-sample large-layer case). Sharded work items
+/// are submitted to the persistent pool; the submitting thread computes
+/// the tail chunk itself.
 #[allow(clippy::too_many_arguments)]
 fn run_mm<T: MacElem>(
     a: &[T],
@@ -406,42 +490,58 @@ fn run_mm<T: MacElem>(
     rows: usize,
     k: usize,
     n: usize,
-    bias: Option<&[i64]>,
+    bias: Option<BiasRef<'_>>,
     fused: &Option<ThresholdTable>,
     out: &mut [f64],
-    kt: usize,
+    par: MacPar<'_>,
 ) {
     let out = &mut out[..rows * n];
-    if kt > 1 && rows >= 2 {
-        let per = rows.div_ceil(kt);
-        std::thread::scope(|sc| {
-            let mut rest = out;
-            let mut r0 = 0usize;
-            while r0 < rows {
-                let r1 = (r0 + per).min(rows);
-                let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
-                rest = tail;
-                let a_block = &a[r0 * k..r1 * k];
-                sc.spawn(move || mm_block(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk));
-                r0 = r1;
-            }
-        });
-    } else if kt > 1 && rows == 1 && n >= 2 * kt {
-        let per = n.div_ceil(kt);
-        std::thread::scope(|sc| {
-            let mut rest = out;
-            let mut j0 = 0usize;
-            while j0 < n {
-                let j1 = (j0 + per).min(n);
-                let (chunk, tail) = rest.split_at_mut(j1 - j0);
-                rest = tail;
-                sc.spawn(move || mm_block(a, w, 1, k, n, j0..j1, bias, fused, chunk));
-                j0 = j1;
-            }
-        });
-    } else {
-        mm_block(a, w, rows, k, n, 0..n, bias, fused, out);
+    let kt = par.kt;
+    let pool = if kt > 1 { par.pool } else { None };
+    if let Some(pool) = pool {
+        if rows >= 2 {
+            let per = rows.div_ceil(kt);
+            pool.scope(|sc| {
+                let mut rest = out;
+                let mut r0 = 0usize;
+                while r0 < rows {
+                    let r1 = (r0 + per).min(rows);
+                    let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+                    rest = tail;
+                    let a_block = &a[r0 * k..r1 * k];
+                    if r1 == rows {
+                        mm_block(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk);
+                    } else {
+                        sc.spawn(move || {
+                            mm_block(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk)
+                        });
+                    }
+                    r0 = r1;
+                }
+            });
+            return;
+        }
+        if rows == 1 && n >= 2 * kt {
+            let per = n.div_ceil(kt);
+            pool.scope(|sc| {
+                let mut rest = out;
+                let mut j0 = 0usize;
+                while j0 < n {
+                    let j1 = (j0 + per).min(n);
+                    let (chunk, tail) = rest.split_at_mut(j1 - j0);
+                    rest = tail;
+                    if j1 == n {
+                        mm_block(a, w, 1, k, n, j0..j1, bias, fused, chunk);
+                    } else {
+                        sc.spawn(move || mm_block(a, w, 1, k, n, j0..j1, bias, fused, chunk));
+                    }
+                    j0 = j1;
+                }
+            });
+            return;
+        }
     }
+    mm_block(a, w, rows, k, n, 0..n, bias, fused, out);
 }
 
 /// One sample's conv MAC over output channels `jr`: for every output
@@ -456,13 +556,13 @@ fn conv_block<T: MacElem>(
     k: usize,
     n: usize,
     jr: core::ops::Range<usize>,
-    bias: Option<&[i64]>,
+    bias: Option<BiasRef<'_>>,
     fused: &Option<ThresholdTable>,
     chunk: &mut [f64],
 ) {
     let mut acc = vec![T::ZERO; jr.len()];
     for rp in 0..frame {
-        seed_acc(&mut acc, bias, jr.start);
+        seed_acc(&mut acc, bias, jr.start, rp);
         T::mac_row(&cols[rp * k..(rp + 1) * k], w, n, jr.clone(), &mut acc);
         for (jj, &v) in acc.iter().enumerate() {
             let f = v.to_f64();
@@ -475,8 +575,9 @@ fn conv_block<T: MacElem>(
 }
 
 /// Batched conv MAC: per sample, optionally sharding the output-channel
-/// axis across threads (each shard's NCHW output region is contiguous,
-/// so no two threads ever share a cache line, let alone an element).
+/// axis across pool work items (each shard's NCHW output region is
+/// contiguous, so no two tasks ever share a cache line, let alone an
+/// element); the submitting thread computes the tail shard itself.
 #[allow(clippy::too_many_arguments)]
 fn run_conv<T: MacElem>(
     cols: &[T],
@@ -486,46 +587,51 @@ fn run_conv<T: MacElem>(
     k: usize,
     oc: usize,
     per_out: usize,
-    bias: Option<&[i64]>,
+    bias: Option<BiasRef<'_>>,
     fused: &Option<ThresholdTable>,
     out: &mut [f64],
-    kt: usize,
+    par: MacPar<'_>,
 ) {
+    let kt = par.kt;
+    let pool = if kt > 1 && oc >= 2 { par.pool } else { None };
     for bi in 0..b {
         let sample_cols = &cols[bi * frame * k..(bi + 1) * frame * k];
         let sample_out = &mut out[bi * per_out..(bi + 1) * per_out];
-        if kt > 1 && oc >= 2 {
-            let per = oc.div_ceil(kt);
-            std::thread::scope(|sc| {
-                let mut rest = sample_out;
-                let mut j0 = 0usize;
-                while j0 < oc {
-                    let j1 = (j0 + per).min(oc);
-                    let (chunk, tail) = rest.split_at_mut((j1 - j0) * frame);
-                    rest = tail;
-                    sc.spawn(move || {
-                        conv_block(sample_cols, w, frame, k, oc, j0..j1, bias, fused, chunk)
-                    });
-                    j0 = j1;
-                }
-            });
-        } else {
-            conv_block(sample_cols, w, frame, k, oc, 0..oc, bias, fused, sample_out);
+        match pool {
+            Some(pool) => {
+                let per = oc.div_ceil(kt);
+                pool.scope(|sc| {
+                    let mut rest = sample_out;
+                    let mut j0 = 0usize;
+                    while j0 < oc {
+                        let j1 = (j0 + per).min(oc);
+                        let (chunk, tail) = rest.split_at_mut((j1 - j0) * frame);
+                        rest = tail;
+                        if j1 == oc {
+                            conv_block(sample_cols, w, frame, k, oc, j0..j1, bias, fused, chunk);
+                        } else {
+                            sc.spawn(move || {
+                                conv_block(sample_cols, w, frame, k, oc, j0..j1, bias, fused, chunk)
+                            });
+                        }
+                        j0 = j1;
+                    }
+                });
+            }
+            None => conv_block(sample_cols, w, frame, k, oc, 0..oc, bias, fused, sample_out),
         }
     }
 }
 
 impl Step {
-    /// Execute one step over a `b`-sample shard. `kt` is the intra-kernel
-    /// thread budget (1 = serial); `min_work` gates sharding so tiny
-    /// kernels never pay a spawn.
+    /// Execute one step over a `b`-sample shard under `ctx` (intra-kernel
+    /// budget, sharding gate, pool).
     fn run(
         &self,
         bufs: &mut [Vec<f64>],
         scratch: &mut Scratch,
         b: usize,
-        kt: usize,
-        min_work: usize,
+        ctx: &ExecCtx,
     ) -> Result<()> {
         match self {
             Step::Ew(s) => {
@@ -550,22 +656,26 @@ impl Step {
                 let a = &bufs[s.a][..rows * s.k];
                 let k_eff = s.k_eff();
                 let live = s.elide.as_ref().map(|e| e.live.as_slice());
-                let bias = s.elide.as_ref().map(|e| e.bias.as_slice());
-                let kt = if rows * k_eff * s.n >= min_work { kt } else { 1 };
+                let bias = s.elide.as_ref().map(|e| e.bias_ref());
+                let par = MacPar {
+                    kt: ctx.kernel_threads(rows * k_eff * s.n),
+                    pool: ctx.pool,
+                };
+                let fused = &s.fused;
                 match &s.w {
                     WeightMat::F64(w) => {
                         debug_assert!(s.elide.is_none(), "elision is integer-only");
-                        run_mm(a, w, rows, s.k, s.n, None, &s.fused, &mut out, kt);
+                        run_mm(a, w, rows, s.k, s.n, None, fused, &mut out, par);
                     }
                     WeightMat::I32(w) => {
                         gather_rows(a, rows, s.k, live, &mut scratch.i32v);
                         let at = &scratch.i32v[..rows * k_eff];
-                        run_mm(at, w, rows, k_eff, s.n, bias, &s.fused, &mut out, kt);
+                        run_mm(at, w, rows, k_eff, s.n, bias, fused, &mut out, par);
                     }
                     WeightMat::I64(w) => {
                         gather_rows(a, rows, s.k, live, &mut scratch.i64v);
                         let at = &scratch.i64v[..rows * k_eff];
-                        run_mm(at, w, rows, k_eff, s.n, bias, &s.fused, &mut out, kt);
+                        run_mm(at, w, rows, k_eff, s.n, bias, fused, &mut out, par);
                     }
                 }
                 bufs[s.out] = out;
@@ -581,24 +691,28 @@ impl Step {
                     Some(e) => im2col_channels(x, b, s.c, s.h, s.w, s.spec, &e.live, cols),
                     None => im2col_batched(x, b, s.c, s.h, s.w, s.spec, cols),
                 };
-                let bias = s.elide.as_ref().map(|e| e.bias.as_slice());
-                let kt = if rows * k_eff * s.oc >= min_work { kt } else { 1 };
+                let bias = s.elide.as_ref().map(|e| e.bias_ref());
+                let par = MacPar {
+                    kt: ctx.kernel_threads(rows * k_eff * s.oc),
+                    pool: ctx.pool,
+                };
+                let fused = &s.fused;
                 let oc = s.oc;
                 match &s.wmat {
                     WeightMat::F64(w) => {
                         debug_assert!(s.elide.is_none(), "elision is integer-only");
                         let ct = &cols[..rows * k_eff];
-                        run_conv(ct, w, b, frame, k_eff, oc, per_out, None, &s.fused, &mut out, kt);
+                        run_conv(ct, w, b, frame, k_eff, oc, per_out, None, fused, &mut out, par);
                     }
                     WeightMat::I32(w) => {
                         gather_rows(&cols[..rows * k_eff], rows, k_eff, None, &mut scratch.i32v);
                         let ct = &scratch.i32v[..rows * k_eff];
-                        run_conv(ct, w, b, frame, k_eff, oc, per_out, bias, &s.fused, &mut out, kt);
+                        run_conv(ct, w, b, frame, k_eff, oc, per_out, bias, fused, &mut out, par);
                     }
                     WeightMat::I64(w) => {
                         gather_rows(&cols[..rows * k_eff], rows, k_eff, None, &mut scratch.i64v);
                         let ct = &scratch.i64v[..rows * k_eff];
-                        run_conv(ct, w, b, frame, k_eff, oc, per_out, bias, &s.fused, &mut out, kt);
+                        run_conv(ct, w, b, frame, k_eff, oc, per_out, bias, fused, &mut out, par);
                     }
                 }
                 bufs[s.out] = out;
@@ -769,6 +883,9 @@ pub struct PlanStats {
     /// total stuck input channels removed from MAC kernels, their
     /// constant contribution folded into the accumulator-seeding bias
     pub elided_mac_channels: usize,
+    /// elided Conv steps with nonzero padding, where the stuck/pad
+    /// interaction folds into per-output-position biases
+    pub elided_padded_convs: usize,
     pub logical_slots: usize,
     pub physical_buffers: usize,
 }
@@ -785,7 +902,7 @@ impl std::fmt::Display for PlanStats {
         write!(
             f,
             "{} steps (ew {} / mm {}+{}i32+{}i64 / conv {}+{}i32+{}i64 / dw {} / pool {} / bin {} / gen {}), \
-             {} fused thresholds, {} folded nodes, {} elided stuck channels ({} MACs), \
+             {} fused thresholds, {} folded nodes, {} elided stuck channels ({} MACs, {} padded), \
              {} buffers for {} tensors",
             self.steps,
             self.ew_chains,
@@ -803,6 +920,7 @@ impl std::fmt::Display for PlanStats {
             self.folded_nodes,
             self.elided_mac_channels,
             self.elided_mac_steps,
+            self.elided_padded_convs,
             self.physical_buffers,
             self.logical_slots,
         )
@@ -815,7 +933,13 @@ pub struct Plan {
     pub(crate) name: String,
     pub(crate) steps: Vec<Step>,
     pub(crate) n_phys: usize,
-    pub(crate) workers: Vec<WorkerState>,
+    /// Caller-side worker state: the serial path and the submitting
+    /// thread's own sample shard run here; pool work items check states
+    /// out of the shared pool instead.
+    pub(crate) serial: WorkerState,
+    /// Persistent execution pool, shared by every clone of this plan
+    /// (created by [`Plan::set_threads`], absent at budget 1).
+    pub(crate) pool: Option<Arc<WorkerPool>>,
     pub(crate) input_phys: usize,
     pub(crate) input_shape: Vec<usize>,
     pub(crate) input_numel: usize,
@@ -829,7 +953,74 @@ pub struct Plan {
     pub(crate) min_kernel_work: usize,
 }
 
+/// Borrowed, `Copy` view of the immutable parts of a plan needed to run
+/// steps — what sample shards, segments and pipeline stages share.
+#[derive(Clone, Copy)]
+pub(crate) struct PlanView<'a> {
+    pub steps: &'a [Step],
+    pub input_phys: usize,
+    pub input_numel: usize,
+    pub output_phys: usize,
+    pub output_shape: &'a [usize],
+    pub output_numel: usize,
+}
+
+impl PlanView<'_> {
+    /// Pack a batch of validated per-sample inputs into the input buffer.
+    pub(crate) fn pack(&self, ws: &mut WorkerState, inputs: &[Tensor]) {
+        let need = inputs.len() * self.input_numel;
+        let ib = &mut ws.bufs[self.input_phys];
+        if ib.len() < need {
+            ib.resize(need, 0.0);
+        }
+        for (i, t) in inputs.iter().enumerate() {
+            ib[i * self.input_numel..(i + 1) * self.input_numel].copy_from_slice(t.data());
+        }
+    }
+
+    /// Run steps `range` over a `b`-sample batch resident in `ws`.
+    pub(crate) fn run_steps(
+        &self,
+        ws: &mut WorkerState,
+        b: usize,
+        range: core::ops::Range<usize>,
+        ctx: &ExecCtx,
+    ) -> Result<()> {
+        for step in &self.steps[range] {
+            step.run(&mut ws.bufs, &mut ws.scratch, b, ctx)?;
+        }
+        Ok(())
+    }
+
+    /// Copy the output buffer back out into one tensor per sample.
+    pub(crate) fn extract(&self, ws: &WorkerState, b: usize) -> Result<Vec<Tensor>> {
+        let ob = &ws.bufs[self.output_phys];
+        (0..b)
+            .map(|i| {
+                Tensor::new(
+                    self.output_shape,
+                    ob[i * self.output_numel..(i + 1) * self.output_numel].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Run every step over one contiguous sample shard on one worker
+    /// state: pack, execute, extract.
+    pub(crate) fn run_shard(
+        &self,
+        ws: &mut WorkerState,
+        inputs: &[Tensor],
+        ctx: &ExecCtx,
+    ) -> Result<Vec<Tensor>> {
+        self.pack(ws, inputs);
+        self.run_steps(ws, inputs.len(), 0..self.steps.len(), ctx)?;
+        self.extract(ws, inputs.len())
+    }
+}
+
 impl Plan {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         name: String,
         steps: Vec<Step>,
@@ -847,7 +1038,8 @@ impl Plan {
             name,
             steps,
             n_phys,
-            workers: vec![WorkerState::new(n_phys)],
+            serial: WorkerState::new(n_phys),
+            pool: None,
             input_phys,
             input_shape,
             input_numel,
@@ -880,30 +1072,72 @@ impl Plan {
     }
 
     /// Thread budget for `run_batch` (1 = fully serial, the default).
-    /// Up to `n` scoped threads are used per call: first to shard the
-    /// batch across samples (private arena per worker), and any leftover
-    /// budget to shard rows/channels inside large MVU kernels.
+    /// A budget of `n > 1` attaches a persistent [`WorkerPool`] of
+    /// `n - 1` workers (the submitting thread is the n-th executor),
+    /// shared by every subsequent clone of this plan: up to `n` threads
+    /// cooperate per call, first sharding the batch across samples and
+    /// then sharding rows/channels inside large MVU kernels with any
+    /// leftover budget.
     pub fn set_threads(&mut self, n: usize) {
-        self.threads = n.max(1);
+        let n = n.max(1);
+        self.threads = n;
+        if n == 1 {
+            self.pool = None;
+        } else {
+            let have = self.pool.as_ref().map(|p| p.workers());
+            if have != Some(n - 1) {
+                self.pool = Some(Arc::new(WorkerPool::new(n - 1)));
+            }
+        }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// The persistent execution pool backing this plan's thread budget
+    /// (None at budget 1). Exposed for observability: worker count,
+    /// executed work items, parked states.
+    pub fn pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_deref()
+    }
+
     /// Minimum `rows * k * n` MAC volume before intra-kernel sharding
-    /// engages (defaults to a spawn-cost-amortising threshold). Tests set
-    /// 0 to force the sharded code paths onto deliberately tiny graphs.
+    /// engages. The default amortises the pool's submit/wake cost on
+    /// mid-sized kernels; set 0 to force the sharded code paths
+    /// (deterministic by construction, so this is safe anywhere), or
+    /// `usize::MAX` to keep every kernel serial while still sample-
+    /// sharding batches.
     pub fn set_min_kernel_work(&mut self, min_work: usize) {
         self.min_kernel_work = min_work;
     }
 
-    /// Execute the plan over a batch of per-sample inputs; returns one
-    /// output tensor per input, in order.
-    pub fn run_batch(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        // All validation (including the empty-batch early return) happens
-        // before any arena is touched, so a rejected call never perturbs
-        // worker state.
+    /// Builder-style [`Plan::set_min_kernel_work`].
+    pub fn with_min_kernel_work(mut self, min_work: usize) -> Plan {
+        self.min_kernel_work = min_work;
+        self
+    }
+
+    /// Current intra-kernel sharding gate.
+    pub fn min_kernel_work(&self) -> usize {
+        self.min_kernel_work
+    }
+
+    pub(crate) fn view(&self) -> PlanView<'_> {
+        PlanView {
+            steps: &self.steps,
+            input_phys: self.input_phys,
+            input_numel: self.input_numel,
+            output_phys: self.output_phys,
+            output_shape: &self.output_shape,
+            output_numel: self.output_numel,
+        }
+    }
+
+    /// Validate a batch against the expected per-sample shape without
+    /// touching any run-time state (a rejected call never perturbs an
+    /// arena).
+    pub(crate) fn validate(&self, inputs: &[Tensor]) -> Result<()> {
         for t in inputs {
             if t.shape() != &self.input_shape[..] {
                 bail!(
@@ -914,6 +1148,16 @@ impl Plan {
                 );
             }
         }
+        Ok(())
+    }
+
+    /// Execute the plan over a batch of per-sample inputs; returns one
+    /// output tensor per input, in order.
+    pub fn run_batch(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // All validation (including the empty-batch early return) happens
+        // before any arena is touched, so a rejected call never perturbs
+        // worker state.
+        self.validate(inputs)?;
         let b = inputs.len();
         if b == 0 {
             return Ok(Vec::new());
@@ -921,67 +1165,61 @@ impl Plan {
         if let Some(t) = &self.const_output {
             return Ok(vec![t.clone(); b]);
         }
-        let shards = self.threads.min(b);
-        if self.workers.len() < shards {
-            let n_phys = self.n_phys;
-            self.workers.resize_with(shards, || WorkerState::new(n_phys));
-        }
+        self.serial.ensure(self.n_phys);
+        let view = PlanView {
+            steps: &self.steps,
+            input_phys: self.input_phys,
+            input_numel: self.input_numel,
+            output_phys: self.output_phys,
+            output_shape: &self.output_shape,
+            output_numel: self.output_numel,
+        };
+        let pool = self.pool.clone();
+        let shards = if pool.is_some() { self.threads.min(b) } else { 1 };
         if shards <= 1 {
-            return run_shard(
-                &self.steps,
-                &mut self.workers[0],
-                inputs,
-                self.input_phys,
-                self.input_numel,
-                self.output_phys,
-                &self.output_shape,
-                self.output_numel,
-                self.threads,
-                self.min_kernel_work,
-            );
+            // one sample shard on the caller; the whole budget (if any)
+            // goes to intra-kernel sharding
+            let ctx = ExecCtx {
+                pool: pool.as_deref(),
+                kt: self.threads,
+                min_work: self.min_kernel_work,
+            };
+            return view.run_shard(&mut self.serial, inputs, &ctx);
         }
-        // Sample sharding: contiguous chunks, one private worker each;
-        // leftover thread budget goes to intra-kernel sharding.
+        // Sample sharding: contiguous chunks, one pool work item per
+        // chunk with a checked-out worker state — except the tail chunk,
+        // which the submitting thread runs itself on the plan's own
+        // state. Leftover thread budget goes to intra-kernel sharding.
+        let pool = pool.expect("shards > 1 implies a pool");
+        let pool = &*pool;
         let chunk = b.div_ceil(shards);
-        let kt = (self.threads / shards).max(1);
-        let steps = &self.steps;
-        let (input_phys, input_numel) = (self.input_phys, self.input_numel);
-        let (output_phys, output_numel) = (self.output_phys, self.output_numel);
-        let output_shape = &self.output_shape;
-        let min_work = self.min_kernel_work;
-        let mut shard_outs: Vec<Result<Vec<Tensor>>> = Vec::with_capacity(shards);
-        std::thread::scope(|sc| {
-            let handles: Vec<_> = self
-                .workers
-                .iter_mut()
-                .zip(inputs.chunks(chunk))
-                .map(|(worker, xs)| {
+        let n_chunks = b.div_ceil(chunk);
+        let ctx = ExecCtx {
+            pool: Some(pool),
+            kt: (self.threads / shards).max(1),
+            min_work: self.min_kernel_work,
+        };
+        let n_phys = self.n_phys;
+        let serial = &mut self.serial;
+        let mut results: Vec<Option<Result<Vec<Tensor>>>> = Vec::new();
+        results.resize_with(n_chunks, || None);
+        pool.scope(|sc| {
+            let mut slots = &mut results[..];
+            for (ci, xs) in inputs.chunks(chunk).enumerate() {
+                let (slot, rest) = slots.split_first_mut().expect("one slot per chunk");
+                slots = rest;
+                if ci + 1 == n_chunks {
+                    *slot = Some(view.run_shard(serial, xs, &ctx));
+                } else {
                     sc.spawn(move || {
-                        run_shard(
-                            steps,
-                            worker,
-                            xs,
-                            input_phys,
-                            input_numel,
-                            output_phys,
-                            output_shape,
-                            output_numel,
-                            kt,
-                            min_work,
-                        )
-                    })
-                })
-                .collect();
-            for h in handles {
-                match h.join() {
-                    Ok(r) => shard_outs.push(r),
-                    Err(p) => std::panic::resume_unwind(p),
+                        *slot = Some(pool.with_state(n_phys, |ws| view.run_shard(ws, xs, &ctx)));
+                    });
                 }
             }
         });
         let mut out = Vec::with_capacity(b);
-        for r in shard_outs {
-            out.extend(r?);
+        for r in results {
+            out.extend(r.expect("pool scope completed every shard")?);
         }
         Ok(out)
     }
@@ -991,43 +1229,4 @@ impl Plan {
         let mut out = self.run_batch(std::slice::from_ref(x))?;
         Ok(out.remove(0))
     }
-}
-
-/// Run every step over one contiguous sample shard on one worker.
-#[allow(clippy::too_many_arguments)]
-fn run_shard(
-    steps: &[Step],
-    worker: &mut WorkerState,
-    inputs: &[Tensor],
-    input_phys: usize,
-    input_numel: usize,
-    output_phys: usize,
-    output_shape: &[usize],
-    output_numel: usize,
-    kt: usize,
-    min_work: usize,
-) -> Result<Vec<Tensor>> {
-    let b = inputs.len();
-    {
-        let need = b * input_numel;
-        let ib = &mut worker.bufs[input_phys];
-        if ib.len() < need {
-            ib.resize(need, 0.0);
-        }
-        for (i, t) in inputs.iter().enumerate() {
-            ib[i * input_numel..(i + 1) * input_numel].copy_from_slice(t.data());
-        }
-    }
-    for step in steps {
-        step.run(&mut worker.bufs, &mut worker.scratch, b, kt, min_work)?;
-    }
-    let ob = &worker.bufs[output_phys];
-    (0..b)
-        .map(|i| {
-            Tensor::new(
-                output_shape,
-                ob[i * output_numel..(i + 1) * output_numel].to_vec(),
-            )
-        })
-        .collect()
 }

@@ -1,0 +1,431 @@
+//! Persistent worker pool for the plan engine: long-lived execution
+//! threads plus a checkout pool of per-worker run-time state
+//! ([`WorkerState`]: buffer arena + conversion scratch).
+//!
+//! PR 2 parallelised `Plan::run_batch` with scoped `std::thread`s spawned
+//! inside every call. That made the sharded paths bit-exact, but each
+//! call paid thread spawn + join (tens of microseconds) — more than the
+//! entire inference for the small zoo models, and the reason
+//! `min_kernel_work` had to stay high. This module replaces the scoped
+//! spawns with a pool that persists across `run_batch` calls (and across
+//! `Plan` clones, which share it through an `Arc`): submitting a work
+//! item is a queue push + condvar wake, so even small kernels can shard.
+//!
+//! # Execution model
+//!
+//! [`WorkerPool::scope`] mirrors `std::thread::scope`: work items may
+//! borrow from the caller's stack, and `scope` does not return until
+//! every spawned item has run. Waiting callers *help*: while their scope
+//! is incomplete they pop and run queued items (their own or another
+//! scope's), so a work item that itself opens a nested scope — e.g. a
+//! sample shard sharding a large MVU kernel — can never deadlock the
+//! pool, and the submitting thread always contributes a full worker's
+//! throughput. A `Plan` with a thread budget of `N` therefore backs
+//! itself with a pool of `N - 1` workers.
+//!
+//! A panic inside a work item is caught on the worker (workers are
+//! never lost to panics), recorded on the owning scope, and re-raised
+//! from that scope's `wait` — the same observable behaviour as a panic
+//! under `std::thread::scope`.
+//!
+//! # Worker state
+//!
+//! Mutable run-time state never crosses threads mid-task: a work item
+//! that needs an arena checks one out of the shared state pool for the
+//! duration of the item ([`WorkerPool::with_state`]) and returns it
+//! afterwards, so states are reused across calls and across plans (the
+//! arena is grown on demand and every kernel fully overwrites its output
+//! region before any reader touches it, so stale contents are
+//! unobservable — the same invariant the buffer arena itself relies on).
+//! At steady state the pool holds at most one state per executing
+//! thread; [`WorkerPool::pooled_states`] exposes the count so tests can
+//! assert reuse instead of growth.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Per-worker conversion scratch (f64 activations gathered/converted to
+/// the MAC's accumulator width, plus the im2col buffer), grown on demand
+/// and reused across calls. Lives beside the buffer arena in
+/// [`WorkerState`] so no scratch ever crosses a thread mid-task.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Scratch {
+    pub(crate) cols: Vec<f64>,
+    pub(crate) i32v: Vec<i32>,
+    pub(crate) i64v: Vec<i64>,
+}
+
+/// One execution thread's run-time state: a private instance of the
+/// liveness-managed buffer arena (see [`super::arena`]) plus conversion
+/// scratch. Every sample shard, pipeline stage, and serial run owns
+/// exactly one of these for its duration, which is the whole
+/// thread-safety argument: steps are immutable, constants are shared
+/// read-only, and everything mutable is task-private.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct WorkerState {
+    pub(crate) bufs: Vec<Vec<f64>>,
+    pub(crate) scratch: Scratch,
+}
+
+impl WorkerState {
+    pub(crate) fn new(n_phys: usize) -> WorkerState {
+        WorkerState {
+            bufs: vec![Vec::new(); n_phys],
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Grow the arena to at least `n_phys` buffers (plans of different
+    /// sizes share pooled states).
+    pub(crate) fn ensure(&mut self, n_phys: usize) {
+        if self.bufs.len() < n_phys {
+            self.bufs.resize(n_phys, Vec::new());
+        }
+    }
+}
+
+/// Recover the guard even if a previous holder panicked: none of the
+/// pool's critical sections leave shared state inconsistent on unwind.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Completion latch of one scope: counts outstanding work items and
+/// records the first panic any of them raised.
+struct Latch {
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch {
+            remaining: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.remaining.load(Ordering::SeqCst) == 0
+    }
+}
+
+/// A queued work item: the erased closure plus the scope it reports to.
+struct Task {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    latch: Arc<Latch>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    cond: Condvar,
+    shutdown: AtomicBool,
+    states: Mutex<Vec<WorkerState>>,
+    tasks_executed: AtomicUsize,
+}
+
+impl Shared {
+    /// Run one task (on a worker or a helping waiter), recording panics
+    /// on its latch and waking waiters when its scope completes.
+    fn run_task(&self, task: Task) {
+        let Task { run, latch } = task;
+        if let Err(p) = catch_unwind(AssertUnwindSafe(run)) {
+            let mut slot = lock(&latch.panic);
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        if latch.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // completion: take the queue lock before notifying so a
+            // waiter is either still holding it (and will observe
+            // `done()`) or already parked (and receives the wake)
+            let _guard = lock(&self.queue);
+            self.cond.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.cond.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        shared.run_task(task);
+    }
+}
+
+/// The persistent worker pool. See the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("tasks_executed", &self.tasks_executed())
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Start a pool of `workers` long-lived threads (at least 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            states: Mutex::new(Vec::new()),
+            tasks_executed: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sira-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            workers,
+        }
+    }
+
+    /// Number of pool threads (the submitting thread adds one more
+    /// executor on top during `scope`).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total work items executed over the pool's lifetime (workers and
+    /// helping waiters combined) — the observable tests use to assert
+    /// that sharding did or did not engage.
+    pub fn tasks_executed(&self) -> usize {
+        self.shared.tasks_executed.load(Ordering::Relaxed)
+    }
+
+    /// Worker states currently parked in the checkout pool. Bounded by
+    /// the number of threads that ever executed state-holding items
+    /// concurrently — the leak observable.
+    pub fn pooled_states(&self) -> usize {
+        lock(&self.shared.states).len()
+    }
+
+    /// Check a [`WorkerState`] out of the pool (creating one if none is
+    /// parked), grown to `n_phys` buffers, for the duration of `f`. The
+    /// state is returned to the pool afterwards, panic or not.
+    pub(crate) fn with_state<R>(&self, n_phys: usize, f: impl FnOnce(&mut WorkerState) -> R) -> R {
+        struct Return<'a> {
+            shared: &'a Shared,
+            state: Option<WorkerState>,
+        }
+        impl Drop for Return<'_> {
+            fn drop(&mut self) {
+                if let Some(st) = self.state.take() {
+                    lock(&self.shared.states).push(st);
+                }
+            }
+        }
+        let mut st = lock(&self.shared.states).pop().unwrap_or_default();
+        st.ensure(n_phys);
+        let mut guard = Return {
+            shared: &self.shared,
+            state: Some(st),
+        };
+        f(guard.state.as_mut().expect("state present until drop"))
+    }
+
+    /// Run `f` with a [`Scope`] on which borrowed work items can be
+    /// spawned; returns only after every spawned item has executed.
+    /// Panics from work items (and from `f` itself) propagate to the
+    /// caller, after the wait — exactly the `std::thread::scope`
+    /// contract this replaces.
+    pub fn scope<'env, R>(&self, f: impl FnOnce(&Scope<'_, 'env>) -> R) -> R {
+        let latch = Arc::new(Latch::new());
+        let scope = Scope {
+            pool: self,
+            latch: Arc::clone(&latch),
+            _env: PhantomData,
+        };
+        // `f` may panic after spawning items that borrow the caller's
+        // stack: the wait must happen on that path too, before unwinding
+        // out of the borrowed frame.
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        self.wait(&latch);
+        if let Some(p) = lock(&latch.panic).take() {
+            resume_unwind(p);
+        }
+        match result {
+            Ok(r) => r,
+            Err(p) => resume_unwind(p),
+        }
+    }
+
+    /// Block until `latch` completes, executing queued work items (of
+    /// any scope) while waiting.
+    fn wait(&self, latch: &Latch) {
+        if latch.done() {
+            return;
+        }
+        let shared = &self.shared;
+        let mut q = lock(&shared.queue);
+        loop {
+            if latch.done() {
+                return;
+            }
+            if let Some(task) = q.pop_front() {
+                drop(q);
+                shared.run_task(task);
+                q = lock(&shared.queue);
+            } else {
+                q = shared.cond.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _guard = lock(&self.shared.queue);
+            self.shared.cond.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn handle of one [`WorkerPool::scope`] call. Invariant over `'env`
+/// like `std::thread::Scope`.
+pub struct Scope<'pool, 'env> {
+    pool: &'pool WorkerPool,
+    latch: Arc<Latch>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Queue a work item that may borrow from `'env`.
+    pub fn spawn<F: FnOnce() + Send + 'env>(&self, f: F) {
+        self.latch.remaining.fetch_add(1, Ordering::SeqCst);
+        let run: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: `WorkerPool::scope` waits for this item to finish (on
+        // the normal and the panicking path) before returning, so every
+        // `'env` borrow the closure captures outlives its execution.
+        let run: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(run) };
+        lock(&self.pool.shared.queue).push_back(Task {
+            run,
+            latch: Arc::clone(&self.latch),
+        });
+        // one task, one wakeup: any single woken thread (worker or
+        // helping waiter) pops it; progress never depends on this
+        // notification because every scope's waiter drains the queue
+        // itself before parking
+        self.pool.shared.cond.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_runs_borrowed_tasks_to_completion() {
+        let pool = WorkerPool::new(3);
+        let mut parts = vec![0u64; 8];
+        pool.scope(|sc| {
+            for (i, p) in parts.iter_mut().enumerate() {
+                sc.spawn(move || *p = (i as u64 + 1) * 10);
+            }
+        });
+        assert_eq!(parts.iter().sum::<u64>(), 360);
+        assert!(pool.tasks_executed() >= 8);
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // more nested waits than workers: progress relies on waiters
+        // helping with queued items
+        let pool = WorkerPool::new(1);
+        let total = AtomicUsize::new(0);
+        pool.scope(|outer| {
+            for _ in 0..4 {
+                let (pool, total) = (&pool, &total);
+                outer.spawn(move || {
+                    pool.scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|sc| {
+                sc.spawn(|| panic!("kernel shard exploded"));
+                sc.spawn(|| {});
+            });
+        }));
+        assert!(r.is_err(), "task panic must propagate out of scope");
+        // the pool keeps working after a propagated panic
+        let ran = AtomicUsize::new(0);
+        pool.scope(|sc| {
+            for _ in 0..4 {
+                let ran = &ran;
+                sc.spawn(move || {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn states_are_reused_not_leaked() {
+        let pool = WorkerPool::new(2);
+        for _ in 0..10 {
+            pool.with_state(5, |st| {
+                assert!(st.bufs.len() >= 5);
+                st.bufs[0].resize(16, 1.0);
+            });
+        }
+        // serial checkouts always reuse the same parked state
+        assert_eq!(pool.pooled_states(), 1);
+        // a state checked out under a panic is still returned
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.with_state(5, |_| panic!("mid-task"));
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.pooled_states(), 1);
+    }
+}

@@ -1,0 +1,411 @@
+//! Plan segmentation for pipeline-parallel serving: split a compiled
+//! [`Plan`]'s step list into consecutive **segments** at boundaries where
+//! the set of live buffers — the data one pipeline stage must hand the
+//! next — is minimal, so the coordinator can run batch *k+1* through
+//! segment 0 while batch *k* runs segment 1 (FINN-R's per-layer stream
+//! overlap, lifted to the plan level).
+//!
+//! # Boundary analysis
+//!
+//! A boundary sits *between* two steps, so no kernel is ever split and
+//! segmented execution is bit-exact by construction: each segment runs
+//! the same [`Step`]s on the same physical buffers as the monolithic
+//! runner. For every candidate boundary the analysis computes the live
+//! set — buffers written before the cut and read at-or-after it
+//! (including the packed input and the plan output) — and its per-sample
+//! element count. Cuts are chosen to balance per-segment MAC/elementwise
+//! work (pipeline throughput is set by the slowest stage) and, within a
+//! half-segment tolerance of the balanced point, to minimise the carry
+//! cost.
+//!
+//! # Stage hand-off
+//!
+//! Pipeline stages own private worker states; between stages only the
+//! carry buffers move (`take_carry` / `put_carry`, a `Vec` move per
+//! buffer — no copies). Every other buffer a segment touches is fully
+//! overwritten before it is read (the arena invariant), so stale
+//! contents from a previous batch in a stage-owned state are
+//! unobservable — this is the same argument that lets pooled worker
+//! states be shared across plans.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+use super::plan::{ExecCtx, Plan, Step};
+use super::pool::WorkerState;
+
+/// A plan split into pipeline segments. Construct with
+/// [`SegmentedPlan::new`]; serve with
+/// [`crate::coordinator::Coordinator::start_pipelined`] or run inline
+/// with [`SegmentedPlan::run_batch`] (bit-identical to
+/// [`Plan::run_batch`]).
+pub struct SegmentedPlan {
+    plan: Plan,
+    /// Ascending cut step indices; segment `s` runs steps
+    /// `[bounds[s-1], bounds[s])` (with virtual bounds 0 and `n`).
+    bounds: Vec<usize>,
+    /// `carries[i]`: physical buffers live across `bounds[i]`, ascending.
+    carries: Vec<Vec<usize>>,
+}
+
+/// For every candidate boundary `i` in `1..n` (index `i - 1` in the
+/// returned vec): the buffers live across it and their summed per-sample
+/// element count.
+fn boundary_liveness(plan: &Plan) -> Vec<(Vec<usize>, u64)> {
+    let n = plan.steps.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    // write times: the input pack is step -1, step j is j; a write at
+    // step w supplying a read at step r is live across boundaries i with
+    // w < i <= r (boundaries are 1..=n-1; the plan output is read at n)
+    fn mark(live: &mut [BTreeMap<usize, usize>], w: isize, r: usize, p: usize, e: usize) {
+        let n_bounds = live.len();
+        let lo = (w + 1).max(1) as usize;
+        let hi = r.min(n_bounds);
+        for i in lo..=hi {
+            live[i - 1].insert(p, e);
+        }
+    }
+    let mut last_write: Vec<Option<(isize, usize)>> = vec![None; plan.n_phys];
+    last_write[plan.input_phys] = Some((-1, plan.input_numel));
+    let mut live: Vec<BTreeMap<usize, usize>> = vec![BTreeMap::new(); n - 1];
+    for (j, step) in plan.steps.iter().enumerate() {
+        for p in step.reads() {
+            if let Some((w, e)) = last_write[p] {
+                mark(&mut live, w, j, p, e);
+            }
+        }
+        for p in step.writes() {
+            last_write[p] = Some((j as isize, step.out_numel()));
+        }
+    }
+    if let Some((w, e)) = last_write[plan.output_phys] {
+        mark(&mut live, w, n, plan.output_phys, e);
+    }
+    live.into_iter()
+        .map(|m| {
+            let cost = m.values().map(|&e| e as u64).sum();
+            (m.into_keys().collect(), cost)
+        })
+        .collect()
+}
+
+/// Pick `want - 1` ascending cut indices over `n = work.len()` steps:
+/// for each cut, candidates within a half-segment of the work-balanced
+/// point compete on carry cost; outside the window, on balance alone.
+fn choose_bounds(work: &[u64], carry_cost: &[u64], want: usize) -> Vec<usize> {
+    let n = work.len();
+    let total: u64 = work.iter().sum();
+    let mut cum = vec![0u64; n + 1];
+    for (j, w) in work.iter().enumerate() {
+        cum[j + 1] = cum[j] + w;
+    }
+    let window = (total / (2 * want as u64)).max(1);
+    let mut bounds = Vec::with_capacity(want - 1);
+    let mut prev = 0usize;
+    for k in 1..want {
+        let lo = prev + 1;
+        let hi = n - (want - k); // leave >= 1 step per remaining segment
+        if lo > hi {
+            break;
+        }
+        let ideal = total * k as u64 / want as u64;
+        let mut best: Option<(u64, u64, u64, usize)> = None;
+        for i in lo..=hi {
+            let dev = cum[i].abs_diff(ideal);
+            let in_window = dev <= window;
+            let cand = (
+                u64::from(!in_window),
+                if in_window { carry_cost[i - 1] } else { dev },
+                dev,
+            );
+            let better = match best {
+                None => true,
+                Some((f, key, d, _)) => cand < (f, key, d),
+            };
+            if better {
+                best = Some((cand.0, cand.1, cand.2, i));
+            }
+        }
+        let (_, _, _, cut) = best.expect("non-empty candidate range");
+        bounds.push(cut);
+        prev = cut;
+    }
+    bounds
+}
+
+impl SegmentedPlan {
+    /// Split `plan` into up to `segments` pipeline segments (clamped to
+    /// the step count; degenerate plans stay single-segment). The plan's
+    /// thread budget and `min_kernel_work` gate keep applying *within*
+    /// each segment (intra-kernel sharding through the shared pool);
+    /// sample sharding is left to the pipeline, which overlaps whole
+    /// batches instead.
+    pub fn new(plan: Plan, segments: usize) -> SegmentedPlan {
+        let n = plan.steps.len();
+        let want = segments.max(1).min(n.max(1));
+        if want <= 1 || plan.const_output.is_some() {
+            return SegmentedPlan {
+                plan,
+                bounds: Vec::new(),
+                carries: Vec::new(),
+            };
+        }
+        let livec = boundary_liveness(&plan);
+        let carry_cost: Vec<u64> = livec.iter().map(|(_, c)| *c).collect();
+        let work: Vec<u64> = plan.steps.iter().map(Step::work).collect();
+        let bounds = choose_bounds(&work, &carry_cost, want);
+        let carries = bounds.iter().map(|&i| livec[i - 1].0.clone()).collect();
+        SegmentedPlan {
+            plan,
+            bounds,
+            carries,
+        }
+    }
+
+    /// Number of segments (1 when the plan was too small to cut).
+    pub fn segments(&self) -> usize {
+        self.bounds.len() + 1
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn into_plan(self) -> Plan {
+        self.plan
+    }
+
+    /// Carried-buffer count per cut (the minimality observable).
+    pub fn carry_counts(&self) -> Vec<usize> {
+        self.carries.iter().map(Vec::len).collect()
+    }
+
+    /// Human-readable summary for serve banners.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} segment(s) over {} steps, cuts {:?}, carry buffers {:?}",
+            self.segments(),
+            self.plan.steps.len(),
+            self.bounds,
+            self.carry_counts(),
+        )
+    }
+
+    fn seg_range(&self, s: usize) -> core::ops::Range<usize> {
+        let start = if s == 0 { 0 } else { self.bounds[s - 1] };
+        let end = if s + 1 == self.segments() {
+            self.plan.steps.len()
+        } else {
+            self.bounds[s]
+        };
+        start..end
+    }
+
+    /// Validate and pack a batch into `ws` (stage 0 of the pipeline).
+    pub(crate) fn pack(&self, ws: &mut WorkerState, inputs: &[Tensor]) -> Result<()> {
+        self.plan.validate(inputs)?;
+        ws.ensure(self.plan.n_phys);
+        self.plan.view().pack(ws, inputs);
+        Ok(())
+    }
+
+    /// Run one segment over the `b`-sample batch resident in `ws`.
+    pub(crate) fn run_segment(&self, s: usize, ws: &mut WorkerState, b: usize) -> Result<()> {
+        ws.ensure(self.plan.n_phys);
+        let ctx = ExecCtx {
+            pool: self.plan.pool.as_deref(),
+            kt: self.plan.threads,
+            min_work: self.plan.min_kernel_work,
+        };
+        self.plan.view().run_steps(ws, b, self.seg_range(s), &ctx)
+    }
+
+    /// Extract the batch outputs after the final segment.
+    pub(crate) fn extract(&self, ws: &WorkerState, b: usize) -> Result<Vec<Tensor>> {
+        self.plan.view().extract(ws, b)
+    }
+
+    /// Move the buffers live across cut `bound` out of `ws` (sender
+    /// side of the stage hand-off).
+    pub(crate) fn take_carry(&self, bound: usize, ws: &mut WorkerState) -> Vec<Vec<f64>> {
+        self.carries[bound]
+            .iter()
+            .map(|&p| std::mem::take(&mut ws.bufs[p]))
+            .collect()
+    }
+
+    /// Install carried buffers into the next stage's state (receiver
+    /// side; order matches [`SegmentedPlan::take_carry`]).
+    pub(crate) fn put_carry(&self, bound: usize, ws: &mut WorkerState, bufs: Vec<Vec<f64>>) {
+        ws.ensure(self.plan.n_phys);
+        for (&p, v) in self.carries[bound].iter().zip(bufs) {
+            ws.bufs[p] = v;
+        }
+    }
+
+    /// Whether the compile-time degenerate constant-output path applies.
+    pub(crate) fn const_output(&self) -> Option<&Tensor> {
+        self.plan.const_output.as_ref()
+    }
+
+    /// Run a batch through every segment in order on one state —
+    /// bit-identical to [`Plan::run_batch`] (same steps, same buffers),
+    /// used by tests and non-pipelined callers.
+    pub fn run_batch(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.plan.validate(inputs)?;
+        let b = inputs.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        if let Some(t) = &self.plan.const_output {
+            return Ok(vec![t.clone(); b]);
+        }
+        let mut ws = std::mem::take(&mut self.plan.serial);
+        ws.ensure(self.plan.n_phys);
+        self.plan.view().pack(&mut ws, inputs);
+        let mut run = Ok(());
+        for s in 0..self.segments() {
+            run = self.run_segment(s, &mut ws, b);
+            if run.is_err() {
+                break;
+            }
+        }
+        let out = match run {
+            Ok(()) => self.extract(&ws, b),
+            Err(e) => Err(e),
+        };
+        self.plan.serial = ws;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::compile;
+    use crate::models::{Granularity, QnnBuilder};
+    use crate::sira::analyze;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap as Map;
+
+    fn deep_mlp() -> (crate::graph::Graph, Map<String, crate::sira::SiRange>) {
+        let mut b = QnnBuilder::new("seg", 7);
+        b.input("x", &[1, 12]);
+        for _ in 0..4 {
+            b.quant_act(8, false, Granularity::PerTensor, 255.0);
+            b.linear(10, 3, Granularity::PerTensor, true);
+            b.relu();
+        }
+        b.linear(4, 4, Granularity::PerTensor, true);
+        let g = b.finish().unwrap();
+        let mut inputs = Map::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        (g, inputs)
+    }
+
+    fn batch(shape: &[usize], n: usize, seed: u64) -> Vec<Tensor> {
+        let numel: usize = shape.iter().product();
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                Tensor::new(shape, (0..numel).map(|_| rng.int_in(0, 255) as f64).collect())
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn segments_cover_all_steps_in_order() {
+        let (g, inputs) = deep_mlp();
+        let analysis = analyze(&g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        let n = plan.stats().steps;
+        let sp = SegmentedPlan::new(plan, 3);
+        assert!(sp.segments() >= 2, "deep chain should split: {}", sp.describe());
+        let mut covered = 0usize;
+        for s in 0..sp.segments() {
+            let r = sp.seg_range(s);
+            assert_eq!(r.start, covered, "segments must tile the step list");
+            assert!(r.end > r.start, "empty segment");
+            covered = r.end;
+        }
+        assert_eq!(covered, n);
+    }
+
+    #[test]
+    fn linear_chain_carries_single_buffer_per_cut() {
+        let (g, inputs) = deep_mlp();
+        let analysis = analyze(&g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        let sp = SegmentedPlan::new(plan, 4);
+        for (i, c) in sp.carry_counts().iter().enumerate() {
+            assert_eq!(*c, 1, "cut {i} of a linear chain should carry one buffer");
+        }
+    }
+
+    #[test]
+    fn segmented_run_matches_monolithic_bits() {
+        let (g, inputs) = deep_mlp();
+        let analysis = analyze(&g, &inputs).unwrap();
+        let mut mono = compile(&g, &analysis).unwrap();
+        let xs = batch(&[1, 12], 5, 0x5E6);
+        let want = mono.run_batch(&xs).unwrap();
+        for segs in [1usize, 2, 3, 8] {
+            let mut sp = SegmentedPlan::new(compile(&g, &analysis).unwrap(), segs);
+            let got = sp.run_batch(&xs).unwrap();
+            for (w, y) in want.iter().zip(&got) {
+                assert_eq!(w.data(), y.data(), "segments={segs} diverged");
+            }
+        }
+    }
+
+    /// Staged execution with per-stage states and explicit carry moves —
+    /// exactly what the pipelined coordinator does — must equal the
+    /// monolithic runner even though non-carry buffers hold stale data
+    /// from other batches.
+    #[test]
+    fn staged_states_with_carry_handoff_are_bit_exact() {
+        let (g, inputs) = deep_mlp();
+        let analysis = analyze(&g, &inputs).unwrap();
+        let mut mono = compile(&g, &analysis).unwrap();
+        let sp = SegmentedPlan::new(compile(&g, &analysis).unwrap(), 3);
+        let nseg = sp.segments();
+        let mut stage_states = vec![WorkerState::default(); nseg];
+        // two different batches pushed through the same stage states, so
+        // the second run sees the first run's leftovers
+        for seed in [1u64, 2] {
+            let xs = batch(&[1, 12], 3, seed);
+            let want = mono.run_batch(&xs).unwrap();
+            sp.pack(&mut stage_states[0], &xs).unwrap();
+            for s in 0..nseg {
+                sp.run_segment(s, &mut stage_states[s], xs.len()).unwrap();
+                if s + 1 < nseg {
+                    let carry = sp.take_carry(s, &mut stage_states[s]);
+                    sp.put_carry(s, &mut stage_states[s + 1], carry);
+                }
+            }
+            let got = sp.extract(&stage_states[nseg - 1], xs.len()).unwrap();
+            for (w, y) in want.iter().zip(&got) {
+                assert_eq!(w.data(), y.data(), "staged hand-off diverged (seed {seed})");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_plans_stay_single_segment() {
+        let mut b = QnnBuilder::new("tiny", 9);
+        b.input("x", &[1, 4]);
+        b.relu();
+        let g = b.finish().unwrap();
+        let mut inputs = Map::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(-1.0, 1.0));
+        let analysis = analyze(&g, &inputs).unwrap();
+        let sp = SegmentedPlan::new(compile(&g, &analysis).unwrap(), 8);
+        assert_eq!(sp.segments(), 1);
+        assert!(sp.carry_counts().is_empty());
+    }
+}

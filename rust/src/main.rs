@@ -6,7 +6,7 @@
 //! sira-finn compile --model tfc --tail thresholding|composite \
 //!                   --acc sira|datatype|32 --target-cycles 16384
 //! sira-finn serve   --model tfc --workers 4 --requests 256 \
-//!                   [--engine [--streamline] --threads N]
+//!                   [--engine [--streamline] --threads N --pipeline N]
 //! sira-finn e2e     [--artifacts artifacts]
 //! ```
 
@@ -134,13 +134,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", 4)?;
     let n = args.get_usize("requests", 256)?;
     let threads = args.get_usize("threads", 1)?;
+    let pipeline = args.get_usize("pipeline", 1)?;
     // --streamline only makes sense on the engine path: imply --engine
-    let engine_mode = args.flag("engine") || args.flag("streamline");
+    let engine_mode = args.flag("engine") || args.flag("streamline") || pipeline > 1;
     let shape = m.input_shape.clone();
     let coord = if engine_mode {
-        // direct engine serve path: plan-compiled integer runtime behind
-        // batched workers, each worker's plan sharding its drained batch
-        // across `threads` std::threads
+        // direct engine serve path: plan-compiled integer runtime with a
+        // persistent worker pool; --pipeline N swaps the batched workers
+        // for one stage thread per plan segment
         let mut g = m.graph.clone();
         let analysis = if args.flag("streamline") {
             engine::prepare_streamlined(&mut g, &m.input_ranges)?
@@ -155,10 +156,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if args.flag("streamline") { ", streamlined" } else { "" },
             plan.stats()
         );
-        Coordinator::start_batched(workers, BatchPolicy::default(), move || {
-            let mut p = plan.clone();
-            move |xs: &[Tensor]| p.run_batch(xs)
-        })
+        if pipeline > 1 {
+            let sp = engine::SegmentedPlan::new(plan, pipeline);
+            println!("pipeline: {}", sp.describe());
+            Coordinator::start_pipelined(sp, BatchPolicy::default())
+        } else {
+            Coordinator::start_batched(workers, BatchPolicy::default(), move || {
+                let mut p = plan.clone();
+                move |xs: &[Tensor]| p.run_batch(xs)
+            })
+        }
     } else {
         println!("backend: graph executor ({})", m.name);
         let g = std::sync::Arc::new(m.graph);
@@ -186,6 +193,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n as f64 / dt.as_secs_f64()
     );
     println!("latency p50 {p50} us, p95 {p95} us, p99 {p99} us");
+    print!("{}", coord.metrics.segment_summary(dt));
     coord.shutdown();
     Ok(())
 }
@@ -210,8 +218,10 @@ fn main() -> Result<()> {
                  serve: --workers N (coordinator workers) --requests N\n\
                  \x20      --engine      serve the plan-compiled integer runtime\n\
                  \x20      --streamline  streamline first (implies --engine)\n\
-                 \x20      --threads N   std::thread budget per engine call\n\
+                 \x20      --threads N   persistent-pool thread budget per engine call\n\
                  \x20                    (sample-sharded batches + row-sharded MVUs)\n\
+                 \x20      --pipeline N  pipeline-parallel serving over N plan\n\
+                 \x20                    segments (implies --engine)\n\
                  see README.md"
             );
             Ok(())

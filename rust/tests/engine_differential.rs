@@ -1,19 +1,26 @@
-//! Differential test harness locking down the parallel engine runtime:
-//! for ≥50 seeded random QNN graphs (random layer stacks, widths, signs
-//! and per-channel scales from `models::builder`), the plan-compiled
-//! engine must agree **element-exactly** with the interpretive executor —
-//! compiled both ways (raw graph, and streamlined via
-//! `engine::prepare_streamlined`), across batch sizes {1, 3, 8} and
-//! thread counts {1, 4}. Thread count 4 with `min_kernel_work = 0`
-//! forces every sharded code path (sample sharding at batch > 1,
-//! row/column/channel sharding at batch 1) even on these tiny graphs.
+//! Differential test harness locking down the pool-backed parallel
+//! engine runtime: for ≥50 seeded random QNN graphs (random layer
+//! stacks, widths, signs and per-channel scales from `models::builder`),
+//! the plan-compiled engine must agree **element-exactly** with the
+//! interpretive executor — compiled both ways (raw graph, and
+//! streamlined via `engine::prepare_streamlined`), across batch sizes
+//! {1, 3, 8} and thread counts {1, 2, 4, 8}, monolithic *and* segmented
+//! (`SegmentedPlan`, the pipelined coordinator's compute path).
+//! `min_kernel_work = 0` forces every sharded code path (pool sample
+//! sharding at batch > 1, row/column/channel work items at batch 1)
+//! even on these tiny graphs. A plan-reuse loop additionally locks the
+//! persistent pool's determinism across consecutive `run_batch` calls,
+//! and a subset of graphs goes through the full pipelined coordinator
+//! request path.
 //!
 //! The base seed is fixed (reproducible by construction); `scripts/
 //! verify.sh` pins it explicitly via `SIRA_DIFF_SEED` when running the
 //! suite as part of tier-1.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
+use sira_finn::coordinator::{BatchPolicy, Coordinator};
 use sira_finn::engine;
 use sira_finn::executor::Executor;
 use sira_finn::graph::Graph;
@@ -104,7 +111,8 @@ fn uint8_input_ranges() -> BTreeMap<String, SiRange> {
     m
 }
 
-/// Engine (both thread counts, all batch splits) vs executor, exact.
+/// Engine (every thread count and batch split, monolithic and
+/// segmented) vs executor, exact.
 fn assert_differential(g: &Graph, analysis: &Analysis, seed: u64, label: &str) {
     let in_shape = g.shapes[&g.inputs[0]].clone();
     let numel: usize = in_shape.iter().product();
@@ -123,7 +131,7 @@ fn assert_differential(g: &Graph, analysis: &Analysis, seed: u64, label: &str) {
         .iter()
         .map(|x| exec.run_single(x).unwrap().remove(0))
         .collect();
-    for threads in [1usize, 4] {
+    for threads in [1usize, 2, 4, 8] {
         let mut plan = engine::compile(g, analysis)
             .unwrap_or_else(|e| panic!("{label} seed {seed}: compile failed: {e:#}"));
         plan.set_threads(threads);
@@ -145,6 +153,24 @@ fn assert_differential(g: &Graph, analysis: &Analysis, seed: u64, label: &str) {
                     "{label} seed {seed} t={threads} b={bsz}: not element-exact at sample {i}"
                 );
             }
+        }
+    }
+    // segmented execution — the pipelined coordinator's compute path:
+    // same steps and buffers, run segment by segment with staged state
+    let mut plan = engine::compile(g, analysis).unwrap();
+    plan.set_threads(2);
+    plan.set_min_kernel_work(0);
+    let mut sp = engine::SegmentedPlan::new(plan, 3);
+    for bsz in [1usize, 3, 8] {
+        let ys = sp.run_batch(&xs[..bsz]).unwrap_or_else(|e| {
+            panic!("{label} seed {seed} segmented b={bsz}: run failed: {e:#}")
+        });
+        for (i, (w, y)) in want[..bsz].iter().zip(&ys).enumerate() {
+            assert_eq!(
+                w.data(),
+                y.data(),
+                "{label} seed {seed} segmented b={bsz}: not element-exact at sample {i}"
+            );
         }
     }
 }
@@ -193,4 +219,112 @@ fn differential_streamlined_first_half() {
 #[test]
 fn differential_streamlined_second_half() {
     streamlined_cases(25..50);
+}
+
+/// Pool-backed plan reuse: one `Plan`, 10 consecutive `run_batch` calls
+/// through the persistent pool — bit-exact against the executor every
+/// round, with the pool's parked-state count bounded by its executor
+/// count (no state leak across calls).
+#[test]
+fn plan_reuse_through_the_pool_is_deterministic_and_leak_free() {
+    let base = base_seed();
+    let (g, _) = random_qnn(base, false);
+    let analysis = analyze(&g, &uint8_input_ranges()).unwrap();
+    let in_shape = g.shapes[&g.inputs[0]].clone();
+    let numel: usize = in_shape.iter().product();
+    let mut rng = Rng::new(base ^ 0xAB);
+    let xs: Vec<Tensor> = (0..8)
+        .map(|_| {
+            Tensor::new(
+                &in_shape,
+                (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut exec = Executor::new(&g).unwrap();
+    let want: Vec<Tensor> = xs
+        .iter()
+        .map(|x| exec.run_single(x).unwrap().remove(0))
+        .collect();
+    let mut plan = engine::compile(&g, &analysis)
+        .unwrap()
+        .with_min_kernel_work(0);
+    plan.set_threads(4);
+    for round in 0..10 {
+        let ys = plan.run_batch(&xs).unwrap();
+        for (i, (w, y)) in want.iter().zip(&ys).enumerate() {
+            assert_eq!(
+                w.data(),
+                y.data(),
+                "plan reuse diverged at round {round}, sample {i}"
+            );
+        }
+    }
+    let pool = plan.pool().expect("threads > 1 attaches a pool");
+    assert!(
+        pool.tasks_executed() > 0,
+        "sharded paths never engaged through the pool"
+    );
+    assert!(
+        pool.pooled_states() <= 4,
+        "worker states leaked across runs: {} parked",
+        pool.pooled_states()
+    );
+}
+
+/// The full pipelined-coordinator request path (drain, pack, staged
+/// segments, carry hand-off between stage threads, extract, reply) on a
+/// subset of the harness graphs, threads {1, 2}.
+#[test]
+fn differential_pipelined_coordinator() {
+    let base = base_seed();
+    for case in 0..6u64 {
+        let seed = base.wrapping_add(case);
+        let (mut g, _) = random_qnn(seed, true);
+        let analysis = engine::prepare_streamlined(&mut g, &uint8_input_ranges())
+            .unwrap_or_else(|e| panic!("pipelined seed {seed}: prepare failed: {e:#}"));
+        let in_shape = g.shapes[&g.inputs[0]].clone();
+        let numel: usize = in_shape.iter().product();
+        let mut rng = Rng::new(seed ^ 0x919E);
+        let xs: Vec<Tensor> = (0..8)
+            .map(|_| {
+                Tensor::new(
+                    &in_shape,
+                    (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let mut exec = Executor::new(&g).unwrap();
+        let want: Vec<Tensor> = xs
+            .iter()
+            .map(|x| exec.run_single(x).unwrap().remove(0))
+            .collect();
+        for threads in [1usize, 2] {
+            let mut plan = engine::compile(&g, &analysis).unwrap();
+            plan.set_threads(threads);
+            plan.set_min_kernel_work(0);
+            let sp = engine::SegmentedPlan::new(plan, 3);
+            let coord = Coordinator::start_pipelined(
+                sp,
+                BatchPolicy {
+                    max_batch: 3,
+                    max_wait: Duration::from_millis(2),
+                },
+            );
+            let handles: Vec<_> = xs.iter().map(|x| coord.submit(x.clone()).unwrap()).collect();
+            for (i, (w, h)) in want.iter().zip(handles).enumerate() {
+                let y = h.recv().unwrap().unwrap_or_else(|e| {
+                    panic!("pipelined seed {seed} t={threads} sample {i}: {e:#}")
+                });
+                assert_eq!(
+                    w.data(),
+                    y.data(),
+                    "pipelined seed {seed} t={threads}: not element-exact at sample {i}"
+                );
+            }
+            coord.shutdown();
+        }
+    }
 }

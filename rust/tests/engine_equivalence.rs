@@ -107,6 +107,50 @@ fn streamlined_cnv_bit_exact_with_fused_thresholds() {
     assert_bit_exact(&g, &analysis, 0x5C27, &[2]);
 }
 
+/// Segmented execution on the zoo workloads: the pipelined serving
+/// compute path must produce the monolithic runner's bits.
+#[test]
+fn segmented_zoo_models_bit_exact() {
+    for (m, segs) in [
+        (models::tfc_w2a2().unwrap(), 3usize),
+        (models::cnv_w2a2().unwrap(), 4),
+    ] {
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let mut mono = engine::compile(&m.graph, &analysis).unwrap();
+        let mut sp =
+            engine::SegmentedPlan::new(engine::compile(&m.graph, &analysis).unwrap(), segs);
+        let mut rng = Rng::new(0x5E69);
+        let xs = random_batch(&mut rng, &m.input_shape, 3);
+        let want = mono.run_batch(&xs).unwrap();
+        let got = sp.run_batch(&xs).unwrap();
+        for (w, y) in want.iter().zip(&got) {
+            assert_eq!(w.data(), y.data(), "{}: segmented run diverged", m.name);
+        }
+    }
+}
+
+/// The persistent pool at a generous thread budget, reused across
+/// consecutive calls, on a real conv workload.
+#[test]
+fn pooled_threads_zoo_bit_exact_across_calls() {
+    let m = models::cnv_w2a2().unwrap();
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    let mut serial = engine::compile(&m.graph, &analysis).unwrap();
+    let mut rng = Rng::new(0x9001);
+    let xs = random_batch(&mut rng, &m.input_shape, 4);
+    let want = serial.run_batch(&xs).unwrap();
+    let mut pooled = engine::compile(&m.graph, &analysis)
+        .unwrap()
+        .with_min_kernel_work(0);
+    pooled.set_threads(8);
+    for round in 0..3 {
+        let got = pooled.run_batch(&xs).unwrap();
+        for (w, y) in want.iter().zip(&got) {
+            assert_eq!(w.data(), y.data(), "pooled run diverged at round {round}");
+        }
+    }
+}
+
 #[test]
 fn engine_batching_is_order_preserving() {
     // outputs must correspond to inputs positionally, not just setwise

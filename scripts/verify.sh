@@ -1,15 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate (referenced from ROADMAP.md). Runs the full
-# build (all targets, so benches and examples must compile), the test
-# suite, the engine differential suite under a pinned seed (release, so
-# the 50-case harness is fast), the perf_hotpath batch-8 regression gate
-# against BENCH_baseline.json, and — when rustfmt is installed — the
-# formatting check.
+# build (all targets, so benches and examples must compile), the lint
+# gate (when clippy is installed), the test suite, the engine
+# differential suite under a pinned seed (release, so the 50-case
+# harness is fast), the perf_hotpath batch-8 regression gate (plain and
+# pipelined configurations) against BENCH_baseline.json, and — when
+# rustfmt is installed — the formatting check.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== cargo build --release --all-targets =="
 cargo build --release --all-targets
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy --all-targets (-D warnings) =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== cargo clippy skipped (clippy not installed) =="
+fi
 
 echo "== cargo test -q =="
 cargo test -q
@@ -17,7 +25,7 @@ cargo test -q
 echo "== engine differential suite (release, fixed seed) =="
 SIRA_DIFF_SEED=53759 cargo test --release --test engine_differential -q
 
-echo "== perf_hotpath batch-8 gate (>25% engine regression fails) =="
+echo "== perf_hotpath batch-8 gate, plain + pipelined (>25% engine regression fails) =="
 # Baselines are machine-relative: gate against a machine-local copy under
 # target/ (never committed), seeded from the checked-in schema/config in
 # BENCH_baseline.json. The first run on a fresh machine records its own
