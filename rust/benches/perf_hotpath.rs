@@ -13,13 +13,24 @@
 //!
 //! `cargo bench --bench perf_hotpath -- --gate BENCH_baseline.json` runs
 //! only the engine batch-8 measurements — threads 1 and 4 through
-//! `run_batch`, plus the threads-4 two-segment *pipelined* coordinator
-//! configuration — and compares them against the checked-in baseline,
-//! failing (exit 1) on a >25% throughput regression. Baselines are
+//! `run_batch`, the threads-4 two-segment *pipelined* coordinator
+//! configuration, plus the tiled large-MVU configuration (a synthetic
+//! 784×256 integer MatMul, the shape class the register-blocked kernels
+//! target) — and compares them against the checked-in baseline, failing
+//! (exit 1) on a >25% throughput regression. Baselines are
 //! machine-relative: an entry missing for this environment is measured
 //! and recorded into the file instead of compared, so the first gate run
 //! on a fresh machine self-calibrates. `scripts/verify.sh` wires this
 //! into tier-1.
+//!
+//! # Per-kernel-shape microbench
+//!
+//! `cargo bench --bench perf_hotpath -- --shapes` times the two MAC
+//! cores head to head — scalar `MacElem::mac_row` vs the tiled
+//! `tile::mac_rows_tiled` — across MVU shapes from single-row FC layers
+//! to im2col conv frames, printing one JSON line per (width, shape) with
+//! both timings and the speedup. This is the observable for re-tuning
+//! the `NR`/`MR` tile constants per target CPU (see ROADMAP.md).
 
 use std::collections::BTreeMap;
 
@@ -118,6 +129,111 @@ fn measure_pipelined_b8(model: &str, threads: usize, segments: usize) -> f64 {
     best
 }
 
+/// Synthetic large-MVU gate workload: a unit-scale uint8 quant feeding a
+/// (784, 256) integer MatMul at batch 8 — big enough that the default
+/// `min_tile_work` gate engages the tiled register-blocked kernels (the
+/// configuration this gate key locks; the zoo models' layers straddle
+/// the gate, this one is squarely above it).
+fn measure_mvu_b8(b: &Bencher, threads: usize) -> f64 {
+    use sira_finn::graph::{Graph, Node, Op, RoundMode};
+    let mut g = Graph::new("mvu784x256");
+    g.add_input("x", &[1, 784]);
+    g.add_initializer("one", Tensor::scalar(1.0));
+    g.add_initializer("z", Tensor::scalar(0.0));
+    g.add_initializer("bits", Tensor::scalar(8.0));
+    g.add_node(Node::new(
+        "q",
+        Op::Quant {
+            signed: false,
+            narrow: false,
+            rounding: RoundMode::RoundEven,
+        },
+        &["x", "one", "z", "bits"],
+        &["xq"],
+    ));
+    let mut rng = Rng::new(0xA11CE);
+    g.add_initializer(
+        "W",
+        Tensor::new(
+            &[784, 256],
+            (0..784 * 256).map(|_| rng.int_in(-3, 3) as f64).collect(),
+        )
+        .unwrap(),
+    );
+    g.add_node(Node::new("mm", Op::MatMul, &["xq", "W"], &["y"]));
+    g.outputs.push("y".into());
+    sira_finn::graph::shapes::infer_shapes(&mut g).unwrap();
+    let mut inputs = BTreeMap::new();
+    inputs.insert("x".to_string(), sira_finn::sira::SiRange::scalar(0.0, 255.0));
+    let analysis = analyze(&g, &inputs).unwrap();
+    let mut plan = engine::compile(&g, &analysis).unwrap();
+    assert!(
+        plan.stats().integer_macs() >= 1,
+        "gate MVU must compile onto an integer MAC: {}",
+        plan.stats()
+    );
+    plan.set_threads(threads);
+    let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &[1, 784])).collect();
+    let r = b.run(&format!("engine mvu784x256 b=8 t={threads}"), || {
+        plan.run_batch(&batch8).unwrap()
+    });
+    r.mean.as_nanos() as f64 / 8.0
+}
+
+/// `--shapes`: per-kernel-shape microbench of the two MAC cores (scalar
+/// oracle vs tiled register blocks) at i32 and f64 width. Pure kernel
+/// time — no plan, no im2col — so tile-constant tuning sees the loop
+/// bodies alone.
+fn run_shapes() {
+    use sira_finn::engine::kernels::tile::{mac_rows_tiled, PackedWeights};
+    use sira_finn::engine::kernels::MacElem;
+
+    fn bench_width<T: MacElem>(b: &Bencher, width: &str, rows: usize, k: usize, n: usize) {
+        let mut rng = Rng::new(0x5147E5 ^ (rows * k * n) as u64);
+        let a: Vec<T> = (0..rows * k).map(|_| T::from_i64(rng.int_in(-8, 8))).collect();
+        let flat: Vec<T> = (0..k * n).map(|_| T::from_i64(rng.int_in(-8, 8))).collect();
+        let packed = PackedWeights::pack(&flat, k, n);
+        let mut acc = vec![T::ZERO; rows * n];
+        let r_scalar = b.run(&format!("scalar {width} {rows}x{k}x{n}"), || {
+            acc.iter_mut().for_each(|v| *v = T::ZERO);
+            for r in 0..rows {
+                let row = &a[r * k..(r + 1) * k];
+                T::mac_row(row, &flat, n, 0..n, &mut acc[r * n..(r + 1) * n]);
+            }
+            acc[0]
+        });
+        let r_tiled = b.run(&format!("tiled  {width} {rows}x{k}x{n}"), || {
+            acc.iter_mut().for_each(|v| *v = T::ZERO);
+            mac_rows_tiled(&a, rows, &packed, 0..n, &mut acc);
+            acc[0]
+        });
+        let (ns_s, ns_t) = (r_scalar.mean.as_nanos() as f64, r_tiled.mean.as_nanos() as f64);
+        println!("{r_scalar}");
+        println!("{r_tiled}");
+        println!(
+            "{{\"bench\":\"perf_hotpath\",\"name\":\"kernel-shape\",\"width\":\"{width}\",\
+             \"rows\":{rows},\"k\":{k},\"n\":{n},\"ns_scalar\":{ns_s:.0},\
+             \"ns_tiled\":{ns_t:.0},\"speedup\":{:.2}}}",
+            ns_s / ns_t
+        );
+    }
+
+    let b = Bencher::default();
+    section("per-kernel-shape MAC microbench: scalar oracle vs tiled");
+    // single-row wide FC, batched FC, and im2col conv frame shapes
+    for (rows, k, n) in [
+        (1usize, 64usize, 64usize),
+        (1, 512, 512),
+        (8, 256, 256),
+        (8, 784, 1024),
+        (900, 27, 64),
+        (196, 576, 128),
+    ] {
+        bench_width::<i32>(&b, "i32", rows, k, n);
+        bench_width::<f64>(&b, "f64", rows, k, n);
+    }
+}
+
 /// Compare one measurement against the baseline map, recording it when
 /// this environment has never seen the key.
 fn gate_check(
@@ -190,6 +306,17 @@ fn run_gate(path: &str) -> i32 {
         json_line("gate-pipelined", "engine", model, 8, 4, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
+    // tiled large-MVU configuration: the synthetic 784x256 integer
+    // MatMul at batch 8, threads 1 — the shape class where the
+    // register-blocked kernels pay off most, gated so a tiling
+    // regression (or an accidental fall-back to the scalar oracle on
+    // large kernels) fails tier-1
+    {
+        let key = "engine/mvu784x256/b8/t1/tiled".to_string();
+        let got = measure_mvu_b8(&b, 1);
+        json_line("gate-mvu", "engine", "mvu784x256", 8, 1, got);
+        gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
+    }
     if recorded {
         if let Json::Obj(o) = &mut doc {
             o.insert("entries".to_string(), Json::Obj(entries));
@@ -207,9 +334,13 @@ fn run_gate(path: &str) -> i32 {
 fn main() {
     // `cargo bench` appends a bare `--bench` to harness=false targets:
     // accept it as a value-less flag
-    let args = Args::from_env(&["bench"]).unwrap();
+    let args = Args::from_env(&["bench", "shapes"]).unwrap();
     if let Some(path) = args.get("gate") {
         std::process::exit(run_gate(path));
+    }
+    if args.flag("shapes") {
+        run_shapes();
+        return;
     }
     let b = Bencher::default();
     section("SIRA analysis");

@@ -26,6 +26,12 @@
 //!   fold would reorder float additions).
 //! * **Movement elision** — contiguous Reshape/Flatten/Identity become
 //!   buffer aliases; no copy.
+//! * **Weight pre-packing** — every MAC weight matrix (elision-compacted
+//!   form included) is additionally packed tile-major at compile time
+//!   ([`MacMat::new`] → [`super::kernels::tile::PackedWeights`]) so the
+//!   register-blocked kernels stream contiguous panels at run time; the
+//!   extra copy is counted in `PlanStats::packed_weight_elems` (the
+//!   packed-weights memory trade-off).
 //!
 //! Anything else falls back to a per-sample [`crate::executor`] call, so
 //! every graph the interpreter runs, the plan runs — bit-exactly.
@@ -44,7 +50,7 @@ use crate::sira::{quant_bounds, Analysis};
 use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 
 use super::arena::{assign, StepUse};
-use super::kernels::{MicroOp, Param, ThresholdTable, WeightMat};
+use super::kernels::{MacMat, MicroOp, Param, ThresholdTable, WeightMat};
 use super::plan::{
     BinKind, BinaryStep, ConvStep, DepthwiseStep, EwChainStep, GSrc, GenericStep, MacElide,
     MatMulStep, Plan, PlanStats, PoolStep, Step,
@@ -56,6 +62,33 @@ use super::plan::{
 const I32_LIMIT: f64 = 2_147_000_000.0;
 const I64_LIMIT: f64 = 4.0e18;
 
+/// A chosen-width weight matrix still in flat `(rows, n)` row-major
+/// form, before the tile-major pre-pack. Elision compaction and bias
+/// folding operate on this form; [`FlatMat::into_weight_mat`] performs
+/// the (single) pack once the final matrix is settled, so elided steps
+/// never pay for packing the full-size matrix they are about to discard.
+enum FlatMat {
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl FlatMat {
+    fn is_integer(&self) -> bool {
+        !matches!(self, FlatMat::F64(_))
+    }
+
+    /// Pack the settled `(rows, n)` matrix into its dual-layout
+    /// [`WeightMat`] form (this is the one pack per MAC step).
+    fn into_weight_mat(self, rows: usize, n: usize) -> WeightMat {
+        match self {
+            FlatMat::F64(v) => WeightMat::F64(MacMat::new(v, rows, n)),
+            FlatMat::I32(v) => WeightMat::I32(MacMat::new(v, rows, n)),
+            FlatMat::I64(v) => WeightMat::I64(MacMat::new(v, rows, n)),
+        }
+    }
+}
+
 /// Split an integer `(k, n)` weight matrix into its live rows plus a
 /// per-column bias folding the contribution of rows whose input is stuck
 /// at a constant (`stuck[r] = Some(v)`). Returns None when nothing is
@@ -64,11 +97,11 @@ const I64_LIMIT: f64 = 4.0e18;
 /// the bias magnitude is covered by the same worst-case partial-sum
 /// bound that selected the accumulator width).
 fn elide_stuck_rows(
-    wmat: &WeightMat,
+    wmat: &FlatMat,
     k: usize,
     n: usize,
     stuck: &[Option<f64>],
-) -> Option<(WeightMat, Vec<usize>, Vec<i64>)> {
+) -> Option<(FlatMat, Vec<usize>, Vec<i64>)> {
     if stuck.len() != k || stuck.iter().all(|s| s.is_none()) {
         return None;
     }
@@ -108,15 +141,15 @@ fn elide_stuck_rows(
         (compact, live, bias)
     }
     match wmat {
-        WeightMat::I32(w) => {
+        FlatMat::I32(w) => {
             let (c, live, bias) = split(w, n, stuck, |v| v as i64);
-            Some((WeightMat::I32(c), live, bias))
+            Some((FlatMat::I32(c), live, bias))
         }
-        WeightMat::I64(w) => {
+        FlatMat::I64(w) => {
             let (c, live, bias) = split(w, n, stuck, |v| v);
-            Some((WeightMat::I64(c), live, bias))
+            Some((FlatMat::I64(c), live, bias))
         }
-        WeightMat::F64(_) => None,
+        FlatMat::F64(_) => None,
     }
 }
 
@@ -132,7 +165,7 @@ fn elide_stuck_rows(
 /// for integer matrices with integral stuck values (validated by
 /// [`elide_stuck_rows`]).
 fn conv_pos_bias(
-    wmat: &WeightMat,
+    wmat: &FlatMat,
     ch_stuck: &[Option<f64>],
     spec: Conv2dSpec,
     h: usize,
@@ -143,9 +176,9 @@ fn conv_pos_bias(
     let (oh, ow) = spec.out_hw(h, w);
     let at = |r: usize, j: usize| -> i64 {
         match wmat {
-            WeightMat::I32(v) => v[r * oc + j] as i64,
-            WeightMat::I64(v) => v[r * oc + j],
-            WeightMat::F64(_) => unreachable!("elision is integer-only"),
+            FlatMat::I32(v) => v[r * oc + j] as i64,
+            FlatMat::I64(v) => v[r * oc + j],
+            FlatMat::F64(_) => unreachable!("elision is integer-only"),
         }
     };
     let mut bias = vec![0i64; oh * ow * oc];
@@ -690,7 +723,9 @@ impl<'g> Compiler<'g> {
     /// Pick the weight representation: integer (i32/i64 accumulators)
     /// when SIRA proves the operands integer and the worst-case
     /// partial-sum magnitude `max_j Σ_k amax_k*|w_kj|` fits; f64
-    /// otherwise. `wdata` is `(k, n)` row-major.
+    /// otherwise. `wdata` is `(k, n)` row-major. Returns the flat form —
+    /// the tile-major pack happens once, after elision settles the final
+    /// matrix ([`FlatMat::into_weight_mat`]).
     fn choose_weight_mat(
         &self,
         out_name: &str,
@@ -698,8 +733,8 @@ impl<'g> Compiler<'g> {
         wdata: &[f64],
         k: usize,
         n: usize,
-    ) -> WeightMat {
-        let fallback = || WeightMat::F64(wdata.to_vec());
+    ) -> FlatMat {
+        let fallback = || FlatMat::F64(wdata.to_vec());
         // cheap reject via the shared SIRA metadata: no integer output
         // interval means the operands cannot both be pure integers
         if sira_int_bounds(self.analysis, out_name).is_none() {
@@ -723,9 +758,9 @@ impl<'g> Compiler<'g> {
         let wmax = wdata.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
         let peak = worst.max(amax_all).max(wmax);
         if peak < I32_LIMIT {
-            WeightMat::I32(wdata.iter().map(|&v| v as i32).collect())
+            FlatMat::I32(wdata.iter().map(|&v| v as i32).collect())
         } else if peak < I64_LIMIT {
-            WeightMat::I64(wdata.iter().map(|&v| v as i64).collect())
+            FlatMat::I64(wdata.iter().map(|&v| v as i64).collect())
         } else {
             fallback()
         }
@@ -751,17 +786,19 @@ impl<'g> Compiler<'g> {
             per_k
         });
         let out_name = node.outputs[0].clone();
-        let mut wmat = self.choose_weight_mat(&out_name, amax, w.data(), k, n);
+        let mut flat = self.choose_weight_mat(&out_name, amax, w.data(), k, n);
         // §7.1 stuck-channel elision: input positions proven constant
         // never enter the MAC; their contribution seeds the accumulator.
         // m == 1 keeps the per-row gather trivial (all zoo layers).
         let mut elide = None;
-        if wmat.is_integer() && m == 1 {
+        let mut k_rows = k;
+        if flat.is_integer() && m == 1 {
             if let Ok(stuck) = stuck::stuck_elements(self.analysis, &node.inputs[0], a_shape) {
-                if let Some((compact, live, bias)) = elide_stuck_rows(&wmat, k, n, &stuck) {
+                if let Some((compact, live, bias)) = elide_stuck_rows(&flat, k, n, &stuck) {
                     self.stats.elided_mac_steps += 1;
                     self.stats.elided_mac_channels += k - live.len();
-                    wmat = compact;
+                    k_rows = live.len();
+                    flat = compact;
                     elide = Some(MacElide {
                         live,
                         bias,
@@ -770,6 +807,8 @@ impl<'g> Compiler<'g> {
                 }
             }
         }
+        // single tile-major pack, after elision settled the matrix
+        let wmat = flat.into_weight_mat(k_rows, n);
         let out_shape = self.sample_shape(&out_name)?.to_vec();
         let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
         let (table, final_out) = match fused {
@@ -781,6 +820,7 @@ impl<'g> Compiler<'g> {
             WeightMat::I32(_) => self.stats.matmul_i32 += 1,
             WeightMat::I64(_) => self.stats.matmul_i64 += 1,
         }
+        self.stats.packed_weight_elems += wmat.packed_elems();
         if table.is_some() {
             self.stats.fused_thresholds += 1;
         }
@@ -824,7 +864,7 @@ impl<'g> Compiler<'g> {
             (0..k).map(|kk| chmax[kk / (kh * kw)]).collect::<Vec<f64>>()
         });
         let out_name = node.outputs[0].clone();
-        let mut wmat = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
+        let mut flat = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
         // §7.1 stuck-channel elision: a channel whose every spatial
         // element is stuck at one value leaves the im2col + MAC entirely.
         // With pad 0 the contribution is the same at every output
@@ -832,7 +872,8 @@ impl<'g> Compiler<'g> {
         // taps read the pad zero instead of the stuck value, so the
         // pad/stuck interaction folds into per-output-position biases.
         let mut elide = None;
-        if wmat.is_integer() {
+        let mut k_rows = k;
+        if flat.is_integer() {
             if let Ok(stuck) = stuck::stuck_elements(self.analysis, &node.inputs[0], x_shape) {
                 let hw = h * wd;
                 let ch_stuck: Vec<Option<f64>> = (0..ch)
@@ -845,18 +886,19 @@ impl<'g> Compiler<'g> {
                     .collect();
                 let per_ch = kh * kw;
                 let stuck_rows: Vec<Option<f64>> = (0..k).map(|r| ch_stuck[r / per_ch]).collect();
-                let elided = elide_stuck_rows(&wmat, k, oc, &stuck_rows);
-                if let Some((compact, _rows, col_bias)) = elided {
+                let elided = elide_stuck_rows(&flat, k, oc, &stuck_rows);
+                if let Some((compact, live_rows, col_bias)) = elided {
                     let live: Vec<usize> = (0..ch).filter(|&c| ch_stuck[c].is_none()).collect();
                     let (bias, pos_stride) = if spec.pad == (0, 0) {
                         (col_bias, 0)
                     } else {
                         self.stats.elided_padded_convs += 1;
-                        (conv_pos_bias(&wmat, &ch_stuck, spec, h, wd, oc), oc)
+                        (conv_pos_bias(&flat, &ch_stuck, spec, h, wd, oc), oc)
                     };
                     self.stats.elided_mac_steps += 1;
                     self.stats.elided_mac_channels += ch - live.len();
-                    wmat = compact;
+                    k_rows = live_rows.len();
+                    flat = compact;
                     elide = Some(MacElide {
                         live,
                         bias,
@@ -865,6 +907,8 @@ impl<'g> Compiler<'g> {
                 }
             }
         }
+        // single tile-major pack, after elision settled the matrix
+        let wmat = flat.into_weight_mat(k_rows, oc);
         let out_shape = self.sample_shape(&out_name)?.to_vec();
         let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
         let (table, final_out) = match fused {
@@ -876,6 +920,7 @@ impl<'g> Compiler<'g> {
             WeightMat::I32(_) => self.stats.conv_i32 += 1,
             WeightMat::I64(_) => self.stats.conv_i64 += 1,
         }
+        self.stats.packed_weight_elems += wmat.packed_elems();
         if table.is_some() {
             self.stats.fused_thresholds += 1;
         }

@@ -9,6 +9,15 @@
 //! for matrix products, and order-independent threshold counting — this
 //! is what makes the engine bit-exact against the interpreter (enforced
 //! by `rust/tests/engine_equivalence.rs`).
+//!
+//! The MAC core comes in two interchangeable, bit-identical forms: the
+//! scalar generic [`MacElem::mac_row`] (the oracle) and the tiled,
+//! register-blocked kernels in [`tile`] that the plan dispatches to for
+//! kernels above `Plan::set_min_tile_work` — see
+//! `rust/tests/kernel_properties.rs` for the property/fuzz suite that
+//! pins the two together.
+
+pub mod tile;
 
 use crate::tensor::{round_half_even, Conv2dSpec};
 
@@ -130,21 +139,76 @@ impl MicroOp {
     }
 }
 
+/// Borrowed view of an elided-channel accumulator bias (§7.1): one
+/// value per output column when `pos_stride == 0`, else `pos_stride`
+/// (= output-channel count) wide rows per output position. Shared by
+/// the scalar and the tiled MAC cores so both seed identically.
+#[derive(Clone, Copy)]
+pub struct BiasRef<'a> {
+    pub(crate) bias: &'a [i64],
+    pub(crate) pos_stride: usize,
+}
+
+/// One MAC weight matrix in both layouts the engine keeps: `flat` is the
+/// `(k, n)` row-major form (the scalar-oracle path; also what elision
+/// compaction and bias folding index), `packed` the tile-major form the
+/// register-blocked kernels stream (see [`tile`]). The packed copy costs
+/// `k * round_up(n, tile::NR)` extra elements per MAC step — the
+/// documented packed-weights memory trade-off, surfaced through
+/// `PlanStats::packed_weight_elems`.
+#[derive(Clone, Debug)]
+pub struct MacMat<T: MacElem> {
+    pub(crate) flat: Vec<T>,
+    pub(crate) k: usize,
+    pub(crate) n: usize,
+    pub(crate) packed: tile::PackedWeights<T>,
+}
+
+impl<T: MacElem> MacMat<T> {
+    /// Build both layouts from a `(k, n)` row-major matrix (packing
+    /// happens once, at plan-compile time).
+    pub fn new(flat: Vec<T>, k: usize, n: usize) -> MacMat<T> {
+        let packed = tile::PackedWeights::pack(&flat, k, n);
+        MacMat { flat, k, n, packed }
+    }
+
+    /// The `(k, n)` row-major form.
+    pub fn flat(&self) -> &[T] {
+        &self.flat
+    }
+
+    /// The tile-packed form.
+    pub fn packed(&self) -> &tile::PackedWeights<T> {
+        &self.packed
+    }
+}
+
 /// Constant weight matrix of a MAC step, laid out `(k, n)` row-major
-/// (already transposed for row-times-matrix products). The integer
-/// variants carry SIRA-proven-width accumulation: `I32` when the
-/// compile-time worst-case partial-sum bound fits a 32-bit accumulator,
-/// `I64` when it needs up to 63 bits.
+/// (already transposed for row-times-matrix products) plus its
+/// tile-packed twin ([`MacMat`]). The integer variants carry
+/// SIRA-proven-width accumulation: `I32` when the compile-time
+/// worst-case partial-sum bound fits a 32-bit accumulator, `I64` when it
+/// needs up to 63 bits.
 #[derive(Clone, Debug)]
 pub enum WeightMat {
-    F64(Vec<f64>),
-    I32(Vec<i32>),
-    I64(Vec<i64>),
+    F64(MacMat<f64>),
+    I32(MacMat<i32>),
+    I64(MacMat<i64>),
 }
 
 impl WeightMat {
     pub fn is_integer(&self) -> bool {
         !matches!(self, WeightMat::F64(_))
+    }
+
+    /// Padded element count of the tile-packed copy (the memory-overhead
+    /// observable).
+    pub fn packed_elems(&self) -> usize {
+        match self {
+            WeightMat::F64(m) => m.packed.padded_len(),
+            WeightMat::I32(m) => m.packed.padded_len(),
+            WeightMat::I64(m) => m.packed.padded_len(),
+        }
     }
 }
 
@@ -159,6 +223,12 @@ impl WeightMat {
 /// product.
 pub trait MacElem: Copy + Send + Sync + 'static {
     const ZERO: Self;
+    /// Whether the tiled kernels must reproduce the scalar zero-skip
+    /// exactly: true for f64, where `acc + 0.0 * w` can differ from
+    /// skipping (signed zeros, non-finite weights); false for the
+    /// integer widths, where a zero activation contributes an exact
+    /// zero either way and the branch-free form is SIMD-friendlier.
+    const EXACT_SKIP: bool;
     fn from_f64(v: f64) -> Self;
     fn from_i64(v: i64) -> Self;
     fn to_f64(self) -> f64;
@@ -192,6 +262,7 @@ pub trait MacElem: Copy + Send + Sync + 'static {
 
 impl MacElem for f64 {
     const ZERO: Self = 0.0;
+    const EXACT_SKIP: bool = true;
     #[inline(always)]
     fn from_f64(v: f64) -> Self {
         v
@@ -216,6 +287,7 @@ impl MacElem for f64 {
 
 impl MacElem for i32 {
     const ZERO: Self = 0;
+    const EXACT_SKIP: bool = false;
     #[inline(always)]
     fn from_f64(v: f64) -> Self {
         v as i32
@@ -240,6 +312,7 @@ impl MacElem for i32 {
 
 impl MacElem for i64 {
     const ZERO: Self = 0;
+    const EXACT_SKIP: bool = false;
     #[inline(always)]
     fn from_f64(v: f64) -> Self {
         v as i64

@@ -1,0 +1,411 @@
+//! Tiled, register-blocked MAC microkernels: the SIMD-friendly core
+//! behind the engine's MatMul / im2col-Conv steps (elision-compacted
+//! variants included), with the scalar [`MacElem::mac_row`] retained as
+//! the bit-exactness oracle (see `rust/tests/kernel_properties.rs`).
+//!
+//! # Layout
+//!
+//! Weights are pre-packed at plan-compile time ([`PackedWeights::pack`],
+//! driven by [`super::MacMat::new`] from `engine::fuse`) into **panels**:
+//! the `(k, n)` row-major matrix is cut into column blocks of [`NR`]
+//! lanes, and each panel stores its `k × NR` slice contiguously (ragged
+//! final panel zero-padded to `NR`). The inner loop then streams one
+//! contiguous panel row per `k` step — no strided weight access, no
+//! bounds arithmetic the compiler cannot hoist.
+//!
+//! # Microkernel
+//!
+//! [`panel_block`] keeps an `MR × NR` accumulator grid in fixed-size
+//! arrays — small enough that the compiler promotes every lane to a SIMD
+//! register and unrolls both block loops — and streams the panel
+//! sequentially over `k`, so each panel is read exactly once per row
+//! block while the `MR` activation rows are reused from registers/L1.
+//!
+//! # Bit-exactness
+//!
+//! The register blocking reorders work only **across** output elements,
+//! never within one dot product: each accumulator lane still adds its
+//! terms in increasing-`k` order, starting from its seed (zero or the
+//! elided-channel bias) — exactly the scalar kernel's order. Two
+//! consequences, both locked by the property suite:
+//!
+//! * **f64** stays bit-identical because the per-element operation
+//!   sequence is identical, including the zero-skip (`MacElem::
+//!   EXACT_SKIP`): a skipped `a == 0.0` term is skipped here too, so
+//!   signed zeros and non-finite weights behave exactly as in the
+//!   scalar kernel.
+//! * **i32/i64** cannot overflow anywhere the scalar kernel didn't: the
+//!   per-element partial sums are the *same* sums in the same order (the
+//!   compile-time `Σ|aᵢ·wᵢⱼ|` bound from `engine::fuse` additionally
+//!   covers any order, pad lanes contribute exact zeros).
+//!
+//! # Tuning
+//!
+//! [`NR`]/[`MR`] are compile-time constants chosen for mainstream
+//! x86-64/aarch64 SIMD widths; see ROADMAP.md ("Execution backends") for
+//! how to re-tune them per target CPU.
+
+use core::ops::Range;
+
+use super::{BiasRef, MacElem, ThresholdTable};
+
+/// Register lanes per column panel: 8 accumulators span two 256-bit
+/// vectors at f64/i64 width and one at i32 — wide enough to saturate
+/// 2×FMA pipes, narrow enough that an `MR×NR` grid still fits the
+/// architectural register file.
+pub const NR: usize = 8;
+
+/// Activation rows per register block. `MR × NR = 32` accumulator lanes
+/// ≤ 8 vector registers at f64 width, leaving room for the broadcast
+/// activation values and the streamed panel row. Re-tunable up to 8
+/// (the row-block dispatch in this module instantiates every block
+/// height 1..=8 and advances by the height actually run, so any
+/// `1 ..= 8` value is safe); the compile-time assertion below guards
+/// the ceiling.
+pub const MR: usize = 4;
+
+const _: () = assert!(MR >= 1 && MR <= 8, "MR must be within the dispatched 1..=8 range");
+
+/// A weight matrix packed tile-major for the register-blocked kernels:
+/// `ceil(n / NR)` panels, each holding its `k × NR` column slice
+/// contiguously (row `kk` of panel `jb` = columns `jb*NR .. jb*NR+NR` of
+/// weight row `kk`), with the ragged final panel zero-padded. Padding is
+/// exact: pad lanes multiply-accumulate literal zeros and are never
+/// written back.
+#[derive(Clone, Debug)]
+pub struct PackedWeights<T> {
+    data: Vec<T>,
+    k: usize,
+    n: usize,
+}
+
+impl<T: MacElem> PackedWeights<T> {
+    /// Pack a `(k, n)` row-major matrix. The packed copy costs
+    /// `k * round_up(n, NR)` elements — the documented packed-weights
+    /// memory trade-off (≈ one extra copy of every MAC weight matrix).
+    pub fn pack(flat: &[T], k: usize, n: usize) -> PackedWeights<T> {
+        assert_eq!(flat.len(), k * n, "flat weight matrix is not (k, n)");
+        let nb = n.div_ceil(NR);
+        let mut data = vec![T::ZERO; nb * k * NR];
+        for jb in 0..nb {
+            let base = jb * k * NR;
+            let j0 = jb * NR;
+            let lanes = NR.min(n - j0);
+            for kk in 0..k {
+                data[base + kk * NR..base + kk * NR + lanes]
+                    .copy_from_slice(&flat[kk * n + j0..kk * n + j0 + lanes]);
+            }
+        }
+        PackedWeights { data, k, n }
+    }
+
+    /// Dot length (weight rows).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical column count (pre-padding).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total packed elements, padding included (the memory-overhead
+    /// observable surfaced through `PlanStats::packed_weight_elems`).
+    pub fn padded_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The contiguous `k × NR` slice of column panel `jb`.
+    #[inline]
+    fn panel(&self, jb: usize) -> &[T] {
+        &self.data[jb * self.k * NR..(jb + 1) * self.k * NR]
+    }
+}
+
+/// The `M × NR` register-blocked inner loop over one weight panel:
+/// `acc[r][jj] += a[r*stride + kk] * panel[kk*NR + jj]` for `kk` in
+/// increasing order over the full dot length. `acc` lives in fixed-size
+/// arrays so every lane stays in a SIMD register across the whole `k`
+/// loop; the panel row is one contiguous `NR`-wide load per `kk`. The
+/// f64 instantiation preserves the scalar kernel's zero-skip per
+/// activation element ([`MacElem::EXACT_SKIP`]); integer instantiations
+/// are branch-free (a zero activation contributes an exact zero either
+/// way).
+#[inline]
+fn panel_block<T: MacElem, const M: usize>(
+    a: &[T],
+    stride: usize,
+    k: usize,
+    panel: &[T],
+    acc: &mut [[T; NR]; M],
+) {
+    for kk in 0..k {
+        let w: &[T; NR] = panel[kk * NR..kk * NR + NR]
+            .try_into()
+            .expect("panel rows are NR-wide");
+        for (r, acc_r) in acc.iter_mut().enumerate() {
+            let ar = a[r * stride + kk];
+            if T::EXACT_SKIP && ar.is_zero() {
+                continue;
+            }
+            for (lane, &wv) in acc_r.iter_mut().zip(w.iter()) {
+                *lane = lane.mul_acc(ar, wv);
+            }
+        }
+    }
+}
+
+/// Tiled counterpart of [`MacElem::mac_row`], generalised to a row
+/// block: `acc[r * cols.len() + (j - cols.start)] += a_row_r · W[:, j]`
+/// for every row `r < rows` and column `j` in `cols`, where `a` holds
+/// `rows` activation rows of length `w.k()` and `acc` is caller-seeded
+/// (zero, or an elided-channel bias) — the same contract as the scalar
+/// kernel, element-exactly (the property suite's oracle comparison).
+pub fn mac_rows_tiled<T: MacElem>(
+    a: &[T],
+    rows: usize,
+    w: &PackedWeights<T>,
+    cols: Range<usize>,
+    acc: &mut [T],
+) {
+    let k = w.k;
+    assert!(cols.end <= w.n, "column range beyond the packed matrix");
+    let width = cols.len();
+    assert!(a.len() >= rows * k, "activation block too short");
+    assert!(acc.len() >= rows * width, "accumulator block too short");
+    if width == 0 {
+        return;
+    }
+    let mut r0 = 0usize;
+    while r0 < rows {
+        // dispatch on the block height actually run (`min(remaining, MR)`)
+        // and advance by exactly that, so every MR in 1..=8 is safe
+        let m = (rows - r0).min(MR);
+        match m {
+            1 => raw_rows::<T, 1>(a, w, r0, &cols, acc),
+            2 => raw_rows::<T, 2>(a, w, r0, &cols, acc),
+            3 => raw_rows::<T, 3>(a, w, r0, &cols, acc),
+            4 => raw_rows::<T, 4>(a, w, r0, &cols, acc),
+            5 => raw_rows::<T, 5>(a, w, r0, &cols, acc),
+            6 => raw_rows::<T, 6>(a, w, r0, &cols, acc),
+            7 => raw_rows::<T, 7>(a, w, r0, &cols, acc),
+            _ => raw_rows::<T, 8>(a, w, r0, &cols, acc),
+        }
+        r0 += m;
+    }
+}
+
+/// One `M`-row block of [`mac_rows_tiled`]: load the in-range seeds into
+/// the register grid, run the panels, store the in-range lanes back.
+/// Lanes outside `cols` (other shards' columns, pad lanes) are computed
+/// into discarded registers and never written.
+#[inline]
+fn raw_rows<T: MacElem, const M: usize>(
+    a: &[T],
+    w: &PackedWeights<T>,
+    r0: usize,
+    cols: &Range<usize>,
+    acc: &mut [T],
+) {
+    let k = w.k;
+    let width = cols.len();
+    for jb in cols.start / NR..cols.end.div_ceil(NR) {
+        let j0 = jb * NR;
+        let mut regs = [[T::ZERO; NR]; M];
+        for (r, regs_r) in regs.iter_mut().enumerate() {
+            let row = &acc[(r0 + r) * width..(r0 + r) * width + width];
+            for (jj, lane) in regs_r.iter_mut().enumerate() {
+                let j = j0 + jj;
+                if j >= cols.start && j < cols.end {
+                    *lane = row[j - cols.start];
+                }
+            }
+        }
+        panel_block::<T, M>(&a[r0 * k..], k, k, w.panel(jb), &mut regs);
+        for (r, regs_r) in regs.iter().enumerate() {
+            let row = &mut acc[(r0 + r) * width..(r0 + r) * width + width];
+            for (jj, lane) in regs_r.iter().enumerate() {
+                let j = j0 + jj;
+                if j >= cols.start && j < cols.end {
+                    row[j - cols.start] = *lane;
+                }
+            }
+        }
+    }
+}
+
+/// Output placement of one tiled MAC block.
+#[derive(Clone, Copy)]
+pub(crate) enum TiledOut {
+    /// MatMul: `out[row * cols.len() + (j - cols.start)]`.
+    RowMajor,
+    /// Conv NCHW scatter: `out[(j - cols.start) * frame + row]` (row =
+    /// output position, `j` = output channel).
+    ChannelMajor { frame: usize },
+}
+
+/// The plan-facing tiled MAC block: seed the accumulator grid from the
+/// elided-channel bias (uniform per column, or per output position when
+/// `pos_stride != 0`), run the panels, then finish each in-range value
+/// through the optional fused threshold into `out` — the tiled
+/// equivalent of `plan::mm_block` / `plan::conv_block`, dispatched
+/// behind `Plan::set_min_tile_work`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mac_block_tiled<T: MacElem>(
+    a: &[T],
+    w: &PackedWeights<T>,
+    rows: usize,
+    cols: Range<usize>,
+    bias: Option<BiasRef<'_>>,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+    layout: TiledOut,
+) {
+    if cols.is_empty() {
+        return;
+    }
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let m = (rows - r0).min(MR);
+        match m {
+            1 => fused_rows::<T, 1>(a, w, r0, &cols, bias, fused, out, layout),
+            2 => fused_rows::<T, 2>(a, w, r0, &cols, bias, fused, out, layout),
+            3 => fused_rows::<T, 3>(a, w, r0, &cols, bias, fused, out, layout),
+            4 => fused_rows::<T, 4>(a, w, r0, &cols, bias, fused, out, layout),
+            5 => fused_rows::<T, 5>(a, w, r0, &cols, bias, fused, out, layout),
+            6 => fused_rows::<T, 6>(a, w, r0, &cols, bias, fused, out, layout),
+            7 => fused_rows::<T, 7>(a, w, r0, &cols, bias, fused, out, layout),
+            _ => fused_rows::<T, 8>(a, w, r0, &cols, bias, fused, out, layout),
+        }
+        r0 += m;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fused_rows<T: MacElem, const M: usize>(
+    a: &[T],
+    w: &PackedWeights<T>,
+    r0: usize,
+    cols: &Range<usize>,
+    bias: Option<BiasRef<'_>>,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+    layout: TiledOut,
+) {
+    let k = w.k;
+    let width = cols.len();
+    for jb in cols.start / NR..cols.end.div_ceil(NR) {
+        let j0 = jb * NR;
+        let mut regs = [[T::ZERO; NR]; M];
+        if let Some(b) = bias {
+            for (r, regs_r) in regs.iter_mut().enumerate() {
+                let base = (r0 + r) * b.pos_stride;
+                for (jj, lane) in regs_r.iter_mut().enumerate() {
+                    let j = j0 + jj;
+                    if j >= cols.start && j < cols.end {
+                        *lane = T::from_i64(b.bias[base + j]);
+                    }
+                }
+            }
+        }
+        panel_block::<T, M>(&a[r0 * k..], k, k, w.panel(jb), &mut regs);
+        for (r, regs_r) in regs.iter().enumerate() {
+            for (jj, lane) in regs_r.iter().enumerate() {
+                let j = j0 + jj;
+                if j < cols.start || j >= cols.end {
+                    continue;
+                }
+                let f = lane.to_f64();
+                let v = match fused {
+                    Some(t) => t.apply_channel(f, j),
+                    None => f,
+                };
+                match layout {
+                    TiledOut::RowMajor => out[(r0 + r) * width + (j - cols.start)] = v,
+                    TiledOut::ChannelMajor { frame } => {
+                        out[(j - cols.start) * frame + r0 + r] = v
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_rows<T: MacElem>(
+        a: &[T],
+        rows: usize,
+        k: usize,
+        flat: &[T],
+        n: usize,
+        cols: Range<usize>,
+        acc: &mut [T],
+    ) {
+        let width = cols.len();
+        for r in 0..rows {
+            T::mac_row(
+                &a[r * k..(r + 1) * k],
+                flat,
+                n,
+                cols.clone(),
+                &mut acc[r * width..(r + 1) * width],
+            );
+        }
+    }
+
+    #[test]
+    fn pack_layout_is_panelled_and_zero_padded() {
+        // (2, 10): two panels, the second padded from 2 lanes to NR
+        let flat: Vec<i32> = (0..20).collect();
+        let p = PackedWeights::pack(&flat, 2, 10);
+        assert_eq!(p.padded_len(), 2 * 2 * NR);
+        // panel 0, row 1 = columns 0..8 of weight row 1
+        assert_eq!(&p.panel(0)[NR..2 * NR], &flat[10..18]);
+        // panel 1, row 0 = columns 8..10 then zeros
+        assert_eq!(&p.panel(1)[..2], &flat[8..10]);
+        assert!(p.panel(1)[2..NR].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn tiled_matches_scalar_on_awkward_shapes() {
+        // shapes straddling every tile boundary, K = 0 included
+        for (rows, k, n) in [
+            (1usize, 0usize, 1usize),
+            (1, 3, NR - 1),
+            (2, 5, NR),
+            (3, 8, NR + 1),
+            (MR, 16, 2 * NR + 3),
+            (MR + 2, 17, 3 * NR - 1),
+        ] {
+            let a: Vec<i64> = (0..rows * k).map(|i| (i as i64 % 7) - 3).collect();
+            let flat: Vec<i64> = (0..k * n).map(|i| (i as i64 % 11) - 5).collect();
+            let p = PackedWeights::pack(&flat, k, n);
+            let mut want = vec![0i64; rows * n];
+            scalar_rows(&a, rows, k, &flat, n, 0..n, &mut want);
+            let mut got = vec![0i64; rows * n];
+            mac_rows_tiled(&a, rows, &p, 0..n, &mut got);
+            assert_eq!(got, want, "rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn f64_zero_skip_is_bit_identical_to_scalar() {
+        // signed zeros + a zero activation against a negative weight:
+        // the lanes must take the scalar kernel's skip path bit-for-bit
+        let a = [0.0f64, -0.0, 2.0, 0.0];
+        let n = NR + 1;
+        let flat: Vec<f64> = (0..4 * n).map(|i| -(i as f64) - 0.5).collect();
+        let p = PackedWeights::pack(&flat, 4, n);
+        let mut want = vec![-0.0f64; n];
+        scalar_rows(&a, 1, 4, &flat, n, 0..n, &mut want);
+        let mut got = vec![-0.0f64; n];
+        mac_rows_tiled(&a, 1, &p, 0..n, &mut got);
+        for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "lane {j}");
+        }
+    }
+}

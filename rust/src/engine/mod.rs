@@ -9,30 +9,59 @@
 //! for serving. Following the FINN-R observation that end-to-end
 //! throughput is set by the compiled dataflow rather than the model
 //! math, this module turns SIRA's per-tensor facts into a specialised
-//! execution artifact:
+//! execution artifact.
 //!
-//! ```text
-//! let analysis = sira::analyze(&graph, &input_ranges)?;
-//! let mut plan  = engine::compile(&graph, &analysis)?;   // AOT
-//! plan.set_threads(4);                                   // optional
-//! let outputs   = plan.run_batch(&inputs)?;              // hot path
+//! The example below is a doctest on purpose: it exercises the real
+//! [`Plan::set_threads`] / [`Plan::with_min_kernel_work`] /
+//! [`Plan::set_min_tile_work`] tuning surface, so the documented API can
+//! no longer drift from the implementation (the PR 3 refactor had left a
+//! prose copy of this snippet behind).
+//!
+//! ```
+//! use sira_finn::engine;
+//! use sira_finn::models::{Granularity, QnnBuilder};
+//! use sira_finn::sira::{analyze, SiRange};
+//! use sira_finn::tensor::Tensor;
+//! # fn main() -> anyhow::Result<()> {
+//! let mut b = QnnBuilder::new("doc", 1);
+//! b.input("x", &[1, 8]);
+//! b.quant_act(8, false, Granularity::PerTensor, 255.0);
+//! b.linear(4, 3, Granularity::PerTensor, true);
+//! let graph = b.finish()?;
+//! let mut input_ranges = std::collections::BTreeMap::new();
+//! input_ranges.insert("x".to_string(), SiRange::scalar(0.0, 255.0));
+//!
+//! let analysis = analyze(&graph, &input_ranges)?;          // SIRA facts
+//! let mut plan = engine::compile(&graph, &analysis)?       // AOT compile
+//!     .with_min_kernel_work(1 << 12);                      // sharding gate
+//! plan.set_threads(4);        // persistent pool, shared by plan clones
+//! plan.set_min_tile_work(0);  // force the tiled MAC cores (bit-exact)
+//!
+//! let inputs = vec![Tensor::zeros(&[1, 8]); 2];
+//! let outputs = plan.run_batch(&inputs)?;                  // hot path
+//! assert_eq!(outputs.len(), 2);
+//! # Ok(()) }
 //! ```
 //!
 //! See [`fuse`] for what the compiler specialises (constant folding,
 //! elementwise-chain fusion, im2col+MVU+threshold fusion, SIRA-narrowed
 //! i32/i64 accumulators, stuck-channel elision — padded convs included,
-//! buffer-arena reuse), [`plan`] for the parallel runner (sample
-//! sharding across the batch plus row/channel sharding inside large MVU
-//! kernels), [`pool`] for the persistent worker pool every sharded path
-//! executes on (work items instead of per-call thread spawns, worker
-//! states checked out per task), [`segment`] for pipeline-parallel plan
-//! segmentation ([`SegmentedPlan`], served by
+//! tile-major weight pre-packing, buffer-arena reuse), [`kernels::tile`]
+//! for the register-blocked SIMD-friendly MAC cores (the scalar
+//! [`kernels::MacElem::mac_row`] stays on as the bit-exactness oracle,
+//! pinned by `rust/tests/kernel_properties.rs`), [`plan`] for the
+//! parallel runner (sample sharding across the batch plus tile-aligned
+//! row/column/channel sharding inside large MVU kernels), [`pool`] for
+//! the persistent worker pool every sharded path executes on (work items
+//! instead of per-call thread spawns, worker states checked out per
+//! task), [`segment`] for pipeline-parallel plan segmentation
+//! ([`SegmentedPlan`], served by
 //! [`crate::coordinator::Coordinator::start_pipelined`]), and
 //! `rust/tests/engine_equivalence.rs` plus
 //! `rust/tests/engine_differential.rs` for the bit-exactness contract
 //! against the interpreter — on the zoo workloads and on seeded random
-//! graphs, at every tested batch size and thread count, monolithic and
-//! segmented.
+//! graphs, at every tested batch size and thread count, tiled and
+//! scalar, monolithic and segmented.
 
 pub mod arena;
 pub mod fuse;

@@ -35,6 +35,15 @@
 //!   reference order. [`Plan::set_min_kernel_work`] tunes the MAC volume
 //!   below which a kernel stays serial.
 //!
+//! Orthogonally to sharding, MAC kernels above [`Plan::set_min_tile_work`]
+//! execute on the tiled, register-blocked cores in
+//! [`super::kernels::tile`] (pre-packed weights, `MR × NR` accumulator
+//! grids the compiler keeps in SIMD registers); smaller kernels stay on
+//! the scalar [`super::kernels::MacElem::mac_row`] oracle. The two are
+//! bit-identical — locked by `rust/tests/kernel_properties.rs` and the
+//! differential harness — and tiled column/channel shards align to the
+//! panel width so work items never stream the same weight panel twice.
+//!
 //! # Segmented execution
 //!
 //! [`super::segment::SegmentedPlan`] additionally splits the step list
@@ -50,9 +59,10 @@ use crate::graph::Op;
 use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 
 use super::kernels::{
-    im2col_batched, im2col_channels, MacElem, MicroOp, ThresholdTable, WeightMat,
+    im2col_batched, im2col_channels, tile, BiasRef, MacElem, MacMat, MicroOp, ThresholdTable,
+    WeightMat,
 };
-use super::pool::{Scratch, WorkerPool, WorkerState};
+use super::pool::{chunk_len, Scratch, WorkerPool, WorkerState};
 
 use std::sync::Arc;
 
@@ -64,6 +74,16 @@ use std::sync::Arc;
 /// [`Plan::with_min_kernel_work`] (0 forces sharding, `usize::MAX`
 /// disables it).
 const DEFAULT_MIN_KERNEL_WORK: usize = 1 << 12;
+
+/// Below this many MAC operations a kernel runs on the scalar
+/// [`MacElem::mac_row`] oracle instead of the register-blocked tiled
+/// kernels ([`tile`]): on micro shapes the blocked form's lane setup
+/// outweighs its throughput, and the scalar path costs nothing to keep
+/// (both are bit-identical, so this is purely a performance knob). Tune
+/// per deployment via [`Plan::set_min_tile_work`] /
+/// [`Plan::with_min_tile_work`] (0 forces the tiled path everywhere,
+/// `usize::MAX` keeps every kernel on the scalar oracle).
+const DEFAULT_MIN_TILE_WORK: usize = 1 << 10;
 
 /// Stuck-channel elision (§7.1) applied to an integer MAC step: `live`
 /// lists the input positions (MatMul) or input channels (Conv) still fed
@@ -84,13 +104,6 @@ pub(crate) struct MacElide {
     pub bias: Vec<i64>,
     /// 0 = one bias per output column; `oc` = per-output-position rows.
     pub pos_stride: usize,
-}
-
-/// Borrowed view of an elision bias used by the MAC cores.
-#[derive(Clone, Copy)]
-pub(crate) struct BiasRef<'a> {
-    bias: &'a [i64],
-    pos_stride: usize,
 }
 
 impl MacElide {
@@ -352,12 +365,14 @@ impl Step {
 
 /// Immutable execution parameters threaded through a step run: the pool
 /// to submit intra-kernel work items to (None = fully serial), the
-/// intra-kernel thread budget, and the sharding gate.
+/// intra-kernel thread budget, the sharding gate, and the tiled-kernel
+/// gate.
 #[derive(Clone, Copy)]
 pub(crate) struct ExecCtx<'a> {
     pub pool: Option<&'a WorkerPool>,
     pub kt: usize,
     pub min_work: usize,
+    pub min_tile: usize,
 }
 
 impl ExecCtx<'_> {
@@ -369,6 +384,11 @@ impl ExecCtx<'_> {
         } else {
             1
         }
+    }
+
+    /// Whether a MAC of `work` volume runs on the tiled kernels.
+    fn tiled(&self, work: usize) -> bool {
+        work >= self.min_tile
     }
 }
 
@@ -470,23 +490,50 @@ fn mm_block<T: MacElem>(
 }
 
 /// Resolved parallelism of one MAC step: the intra-kernel work-item
-/// budget (already gated on `min_kernel_work`) and the pool to submit
-/// to.
+/// budget (already gated on `min_kernel_work`), the pool to submit to,
+/// and whether the kernel cleared the tiled gate (`min_tile_work`).
 #[derive(Clone, Copy)]
 struct MacPar<'a> {
     kt: usize,
     pool: Option<&'a WorkerPool>,
+    tiled: bool,
+}
+
+/// One matmul chunk on either MAC core: the tiled register-blocked
+/// kernels or the scalar oracle — bit-identical by the kernel property
+/// suite, so the dispatch is purely a performance decision.
+#[allow(clippy::too_many_arguments)]
+fn mm_chunk<T: MacElem>(
+    a: &[T],
+    w: &MacMat<T>,
+    rows: usize,
+    k: usize,
+    n: usize,
+    cols: core::ops::Range<usize>,
+    bias: Option<BiasRef<'_>>,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+    tiled: bool,
+) {
+    if tiled {
+        let layout = tile::TiledOut::RowMajor;
+        tile::mac_block_tiled(a, &w.packed, rows, cols, bias, fused, out, layout);
+    } else {
+        mm_block(a, &w.flat, rows, k, n, cols, bias, fused, out);
+    }
 }
 
 /// Batched matmul over `rows * k` activations: serial, or sharded across
 /// rows (batch/m parallelism), or across output columns when only one
 /// row exists (the single-sample large-layer case). Sharded work items
 /// are submitted to the persistent pool; the submitting thread computes
-/// the tail chunk itself.
+/// the tail chunk itself. Column shards of a tiled kernel align to the
+/// [`tile::NR`] panel width so no two work items touch the same weight
+/// panel (shard boundaries still never split a dot product either way).
 #[allow(clippy::too_many_arguments)]
 fn run_mm<T: MacElem>(
     a: &[T],
-    w: &[T],
+    w: &MacMat<T>,
     rows: usize,
     k: usize,
     n: usize,
@@ -495,6 +542,9 @@ fn run_mm<T: MacElem>(
     out: &mut [f64],
     par: MacPar<'_>,
 ) {
+    debug_assert_eq!(w.k, k, "weight rows must match the gathered row width");
+    debug_assert_eq!(w.n, n);
+    let tiled = par.tiled;
     let out = &mut out[..rows * n];
     let kt = par.kt;
     let pool = if kt > 1 { par.pool } else { None };
@@ -510,10 +560,10 @@ fn run_mm<T: MacElem>(
                     rest = tail;
                     let a_block = &a[r0 * k..r1 * k];
                     if r1 == rows {
-                        mm_block(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk);
+                        mm_chunk(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk, tiled);
                     } else {
                         sc.spawn(move || {
-                            mm_block(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk)
+                            mm_chunk(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk, tiled)
                         });
                     }
                     r0 = r1;
@@ -522,7 +572,7 @@ fn run_mm<T: MacElem>(
             return;
         }
         if rows == 1 && n >= 2 * kt {
-            let per = n.div_ceil(kt);
+            let per = chunk_len(n, kt, if tiled { tile::NR } else { 1 });
             pool.scope(|sc| {
                 let mut rest = out;
                 let mut j0 = 0usize;
@@ -531,9 +581,11 @@ fn run_mm<T: MacElem>(
                     let (chunk, tail) = rest.split_at_mut(j1 - j0);
                     rest = tail;
                     if j1 == n {
-                        mm_block(a, w, 1, k, n, j0..j1, bias, fused, chunk);
+                        mm_chunk(a, w, 1, k, n, j0..j1, bias, fused, chunk, tiled);
                     } else {
-                        sc.spawn(move || mm_block(a, w, 1, k, n, j0..j1, bias, fused, chunk));
+                        sc.spawn(move || {
+                            mm_chunk(a, w, 1, k, n, j0..j1, bias, fused, chunk, tiled)
+                        });
                     }
                     j0 = j1;
                 }
@@ -541,7 +593,7 @@ fn run_mm<T: MacElem>(
             return;
         }
     }
-    mm_block(a, w, rows, k, n, 0..n, bias, fused, out);
+    mm_chunk(a, w, rows, k, n, 0..n, bias, fused, out, tiled);
 }
 
 /// One sample's conv MAC over output channels `jr`: for every output
@@ -574,14 +626,48 @@ fn conv_block<T: MacElem>(
     }
 }
 
+/// One conv output-channel chunk on either MAC core (tiled register
+/// blocks over the output positions, or the scalar oracle) — same bits
+/// either way.
+#[allow(clippy::too_many_arguments)]
+fn conv_chunk<T: MacElem>(
+    cols: &[T],
+    w: &MacMat<T>,
+    frame: usize,
+    k: usize,
+    oc: usize,
+    jr: core::ops::Range<usize>,
+    bias: Option<BiasRef<'_>>,
+    fused: &Option<ThresholdTable>,
+    chunk: &mut [f64],
+    tiled: bool,
+) {
+    if tiled {
+        tile::mac_block_tiled(
+            cols,
+            &w.packed,
+            frame,
+            jr,
+            bias,
+            fused,
+            chunk,
+            tile::TiledOut::ChannelMajor { frame },
+        );
+    } else {
+        conv_block(cols, &w.flat, frame, k, oc, jr, bias, fused, chunk);
+    }
+}
+
 /// Batched conv MAC: per sample, optionally sharding the output-channel
 /// axis across pool work items (each shard's NCHW output region is
 /// contiguous, so no two tasks ever share a cache line, let alone an
 /// element); the submitting thread computes the tail shard itself.
+/// Channel shards of a tiled kernel align to the [`tile::NR`] panel
+/// width so no two work items recompute the same weight panel.
 #[allow(clippy::too_many_arguments)]
 fn run_conv<T: MacElem>(
     cols: &[T],
-    w: &[T],
+    w: &MacMat<T>,
     b: usize,
     frame: usize,
     k: usize,
@@ -592,6 +678,9 @@ fn run_conv<T: MacElem>(
     out: &mut [f64],
     par: MacPar<'_>,
 ) {
+    debug_assert_eq!(w.k, k, "weight rows must match the im2col row width");
+    debug_assert_eq!(w.n, oc);
+    let tiled = par.tiled;
     let kt = par.kt;
     let pool = if kt > 1 && oc >= 2 { par.pool } else { None };
     for bi in 0..b {
@@ -599,7 +688,7 @@ fn run_conv<T: MacElem>(
         let sample_out = &mut out[bi * per_out..(bi + 1) * per_out];
         match pool {
             Some(pool) => {
-                let per = oc.div_ceil(kt);
+                let per = chunk_len(oc, kt, if tiled { tile::NR } else { 1 });
                 pool.scope(|sc| {
                     let mut rest = sample_out;
                     let mut j0 = 0usize;
@@ -608,17 +697,31 @@ fn run_conv<T: MacElem>(
                         let (chunk, tail) = rest.split_at_mut((j1 - j0) * frame);
                         rest = tail;
                         if j1 == oc {
-                            conv_block(sample_cols, w, frame, k, oc, j0..j1, bias, fused, chunk);
+                            let jr = j0..j1;
+                            conv_chunk(sample_cols, w, frame, k, oc, jr, bias, fused, chunk, tiled);
                         } else {
                             sc.spawn(move || {
-                                conv_block(sample_cols, w, frame, k, oc, j0..j1, bias, fused, chunk)
+                                conv_chunk(
+                                    sample_cols,
+                                    w,
+                                    frame,
+                                    k,
+                                    oc,
+                                    j0..j1,
+                                    bias,
+                                    fused,
+                                    chunk,
+                                    tiled,
+                                )
                             });
                         }
                         j0 = j1;
                     }
                 });
             }
-            None => conv_block(sample_cols, w, frame, k, oc, 0..oc, bias, fused, sample_out),
+            None => {
+                conv_chunk(sample_cols, w, frame, k, oc, 0..oc, bias, fused, sample_out, tiled)
+            }
         }
     }
 }
@@ -657,9 +760,11 @@ impl Step {
                 let k_eff = s.k_eff();
                 let live = s.elide.as_ref().map(|e| e.live.as_slice());
                 let bias = s.elide.as_ref().map(|e| e.bias_ref());
+                let work = rows * k_eff * s.n;
                 let par = MacPar {
-                    kt: ctx.kernel_threads(rows * k_eff * s.n),
+                    kt: ctx.kernel_threads(work),
                     pool: ctx.pool,
+                    tiled: ctx.tiled(work),
                 };
                 let fused = &s.fused;
                 match &s.w {
@@ -692,9 +797,11 @@ impl Step {
                     None => im2col_batched(x, b, s.c, s.h, s.w, s.spec, cols),
                 };
                 let bias = s.elide.as_ref().map(|e| e.bias_ref());
+                let work = rows * k_eff * s.oc;
                 let par = MacPar {
-                    kt: ctx.kernel_threads(rows * k_eff * s.oc),
+                    kt: ctx.kernel_threads(work),
                     pool: ctx.pool,
+                    tiled: ctx.tiled(work),
                 };
                 let fused = &s.fused;
                 let oc = s.oc;
@@ -886,6 +993,11 @@ pub struct PlanStats {
     /// elided Conv steps with nonzero padding, where the stuck/pad
     /// interaction folds into per-output-position biases
     pub elided_padded_convs: usize,
+    /// total elements held by the tile-packed weight copies (padding
+    /// included) — the packed-weights memory trade-off: ≈ one extra copy
+    /// of every MAC weight matrix, rounded up to the `tile::NR` panel
+    /// width (see README)
+    pub packed_weight_elems: usize,
     pub logical_slots: usize,
     pub physical_buffers: usize,
 }
@@ -903,7 +1015,7 @@ impl std::fmt::Display for PlanStats {
             f,
             "{} steps (ew {} / mm {}+{}i32+{}i64 / conv {}+{}i32+{}i64 / dw {} / pool {} / bin {} / gen {}), \
              {} fused thresholds, {} folded nodes, {} elided stuck channels ({} MACs, {} padded), \
-             {} buffers for {} tensors",
+             {} packed weight elems, {} buffers for {} tensors",
             self.steps,
             self.ew_chains,
             self.matmul_f64,
@@ -921,6 +1033,7 @@ impl std::fmt::Display for PlanStats {
             self.elided_mac_channels,
             self.elided_mac_steps,
             self.elided_padded_convs,
+            self.packed_weight_elems,
             self.physical_buffers,
             self.logical_slots,
         )
@@ -951,6 +1064,7 @@ pub struct Plan {
     pub(crate) stats: PlanStats,
     pub(crate) threads: usize,
     pub(crate) min_kernel_work: usize,
+    pub(crate) min_tile_work: usize,
 }
 
 /// Borrowed, `Copy` view of the immutable parts of a plan needed to run
@@ -1050,6 +1164,7 @@ impl Plan {
             stats,
             threads: 1,
             min_kernel_work: DEFAULT_MIN_KERNEL_WORK,
+            min_tile_work: DEFAULT_MIN_TILE_WORK,
         }
     }
 
@@ -1123,6 +1238,28 @@ impl Plan {
         self.min_kernel_work
     }
 
+    /// Minimum `rows * k * n` MAC volume before a kernel runs on the
+    /// tiled, register-blocked cores ([`super::kernels::tile`]) instead
+    /// of the scalar oracle. The two are bit-identical (locked by
+    /// `rust/tests/kernel_properties.rs`), so this is purely a
+    /// performance knob: 0 forces the tiled path onto every kernel
+    /// (what the differential harness does), `usize::MAX` keeps every
+    /// kernel on the scalar oracle.
+    pub fn set_min_tile_work(&mut self, min_work: usize) {
+        self.min_tile_work = min_work;
+    }
+
+    /// Builder-style [`Plan::set_min_tile_work`].
+    pub fn with_min_tile_work(mut self, min_work: usize) -> Plan {
+        self.min_tile_work = min_work;
+        self
+    }
+
+    /// Current tiled-kernel gate.
+    pub fn min_tile_work(&self) -> usize {
+        self.min_tile_work
+    }
+
     pub(crate) fn view(&self) -> PlanView<'_> {
         PlanView {
             steps: &self.steps,
@@ -1183,6 +1320,7 @@ impl Plan {
                 pool: pool.as_deref(),
                 kt: self.threads,
                 min_work: self.min_kernel_work,
+                min_tile: self.min_tile_work,
             };
             return view.run_shard(&mut self.serial, inputs, &ctx);
         }
@@ -1198,6 +1336,7 @@ impl Plan {
             pool: Some(pool),
             kt: (self.threads / shards).max(1),
             min_work: self.min_kernel_work,
+            min_tile: self.min_tile_work,
         };
         let n_phys = self.n_phys;
         let serial = &mut self.serial;

@@ -95,6 +95,18 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Chunk length for splitting `total` units across at most `parts` work
+/// items with chunk boundaries aligned to `align` units: tiled MAC
+/// shards align their column/channel ranges to the register-panel width
+/// (`kernels::tile::NR`) so no two work items stream the same weight
+/// panel; `align = 1` reproduces the plain `div_ceil` split. The last
+/// chunk may be short; every unit is covered exactly once either way.
+pub(crate) fn chunk_len(total: usize, parts: usize, align: usize) -> usize {
+    let align = align.max(1);
+    let per = total.div_ceil(parts.max(1));
+    per.div_ceil(align) * align
+}
+
 /// Completion latch of one scope: counts outstanding work items and
 /// records the first panic any of them raised.
 struct Latch {
@@ -350,6 +362,29 @@ impl<'pool, 'env> Scope<'pool, 'env> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn chunk_len_aligns_and_covers() {
+        // plain split
+        assert_eq!(chunk_len(10, 3, 1), 4);
+        // aligned split: boundaries land on multiples of 8
+        assert_eq!(chunk_len(16, 8, 8), 8);
+        assert_eq!(chunk_len(9, 2, 8), 8); // chunks 8 + 1, both covered
+        assert_eq!(chunk_len(7, 4, 8), 8); // one short chunk
+        for (total, parts, align) in [(1usize, 1usize, 8usize), (100, 7, 8), (64, 9, 4)] {
+            let per = chunk_len(total, parts, align);
+            assert_eq!(per % align, 0);
+            // walking in `per` steps covers every unit exactly once
+            let mut covered = 0usize;
+            let mut chunks = 0usize;
+            while covered < total {
+                covered += per.min(total - covered);
+                chunks += 1;
+            }
+            assert_eq!(covered, total);
+            assert!(chunks <= parts.max(1));
+        }
+    }
 
     #[test]
     fn scope_runs_borrowed_tasks_to_completion() {

@@ -220,6 +220,7 @@ impl SegmentedPlan {
             pool: self.plan.pool.as_deref(),
             kt: self.plan.threads,
             min_work: self.plan.min_kernel_work,
+            min_tile: self.plan.min_tile_work,
         };
         self.plan.view().run_steps(ws, b, self.seg_range(s), &ctx)
     }

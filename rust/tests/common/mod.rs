@@ -1,0 +1,54 @@
+//! Shared fixtures for the integration-test targets (each test target
+//! compiles this module separately via `mod common;` — cargo never
+//! builds it as its own target because `autotests = false`).
+
+use std::collections::BTreeMap;
+
+use sira_finn::graph::{Graph, Node, Op, RoundMode};
+use sira_finn::sira::SiRange;
+use sira_finn::tensor::Tensor;
+
+/// A quant → integer MatMul graph whose worst-case partial-sum bound
+/// sits just inside the engine's i32 headroom limit (4 × 100 × 5e6 =
+/// 2.0e9 < 2.147e9), so the SIRA-proven extremes drive the accumulator
+/// to the very sums the width selection certified. Shared by the
+/// accumulator-edge cases in `kernel_properties.rs` (engine tiled vs
+/// scalar vs executor) and `sira_soundness.rs` (bound tightness): one
+/// copy, so the near-limit arithmetic cannot drift between the two.
+#[allow(dead_code)]
+pub fn near_limit_graph() -> (Graph, BTreeMap<String, SiRange>) {
+    let mut g = Graph::new("edge-mm");
+    g.add_input("x", &[1, 4]);
+    g.add_initializer("one", Tensor::scalar(1.0));
+    g.add_initializer("z", Tensor::scalar(0.0));
+    g.add_initializer("bits", Tensor::scalar(8.0));
+    g.add_node(Node::new(
+        "q",
+        Op::Quant {
+            signed: true,
+            narrow: false,
+            rounding: RoundMode::RoundEven,
+        },
+        &["x", "one", "z", "bits"],
+        &["xq"],
+    ));
+    g.add_initializer(
+        "W",
+        Tensor::new(
+            &[4, 3],
+            vec![
+                5_000_000.0, -5_000_000.0, 2_500_000.0, //
+                5_000_000.0, 5_000_000.0, -2_500_000.0, //
+                5_000_000.0, -5_000_000.0, 2_500_000.0, //
+                5_000_000.0, 5_000_000.0, -2_500_000.0,
+            ],
+        )
+        .unwrap(),
+    );
+    g.add_node(Node::new("mm", Op::MatMul, &["xq", "W"], &["y"]));
+    g.outputs.push("y".into());
+    sira_finn::graph::shapes::infer_shapes(&mut g).unwrap();
+    let mut inputs = BTreeMap::new();
+    inputs.insert("x".to_string(), SiRange::scalar(-100.0, 100.0));
+    (g, inputs)
+}

@@ -8,10 +8,15 @@
 //! (`SegmentedPlan`, the pipelined coordinator's compute path).
 //! `min_kernel_work = 0` forces every sharded code path (pool sample
 //! sharding at batch > 1, row/column/channel work items at batch 1)
-//! even on these tiny graphs. A plan-reuse loop additionally locks the
-//! persistent pool's determinism across consecutive `run_batch` calls,
-//! and a subset of graphs goes through the full pipelined coordinator
-//! request path.
+//! even on these tiny graphs, and the **tiled-vs-scalar axis** runs the
+//! register-blocked MAC cores (`min_tile_work = 0`) under every thread
+//! count, the scalar oracle (`min_tile_work = usize::MAX`) at threads
+//! {1, 4}, and the default gate (threshold-crossing shapes: large
+//! kernels tile, small ones stay scalar within one plan) at threads 2.
+//! A plan-reuse loop additionally locks the persistent pool's
+//! determinism across consecutive `run_batch` calls, and a subset of
+//! graphs goes through the full pipelined coordinator request path —
+//! both on the tiled kernels.
 //!
 //! The base seed is fixed (reproducible by construction); `scripts/
 //! verify.sh` pins it explicitly via `SIRA_DIFF_SEED` when running the
@@ -131,35 +136,59 @@ fn assert_differential(g: &Graph, analysis: &Analysis, seed: u64, label: &str) {
         .iter()
         .map(|x| exec.run_single(x).unwrap().remove(0))
         .collect();
-    for threads in [1usize, 2, 4, 8] {
+    // (threads, min_tile_work): the tiled register-blocked kernels
+    // (forced via 0) under every thread count; the scalar oracle
+    // (usize::MAX) at {1, 4}; the default gate at threads 2, where
+    // threshold-crossing shapes mix both MAC cores within one plan.
+    let axis: [(usize, Option<usize>); 7] = [
+        (1, Some(0)),
+        (2, Some(0)),
+        (4, Some(0)),
+        (8, Some(0)),
+        (1, Some(usize::MAX)),
+        (4, Some(usize::MAX)),
+        (2, None),
+    ];
+    for (threads, tile_work) in axis {
         let mut plan = engine::compile(g, analysis)
             .unwrap_or_else(|e| panic!("{label} seed {seed}: compile failed: {e:#}"));
         plan.set_threads(threads);
         plan.set_min_kernel_work(0); // force the sharded paths
+        if let Some(tw) = tile_work {
+            plan.set_min_tile_work(tw);
+        }
+        let mode = match tile_work {
+            Some(0) => "tiled",
+            Some(_) => "scalar",
+            None => "mixed",
+        };
         for bsz in [1usize, 3, 8] {
             let ys = plan.run_batch(&xs[..bsz]).unwrap_or_else(|e| {
-                panic!("{label} seed {seed} t={threads} b={bsz}: run failed: {e:#}")
+                panic!("{label} seed {seed} t={threads} {mode} b={bsz}: run failed: {e:#}")
             });
             assert_eq!(ys.len(), bsz);
             for (i, (w, y)) in want[..bsz].iter().zip(&ys).enumerate() {
                 assert_eq!(
                     w.shape(),
                     y.shape(),
-                    "{label} seed {seed} t={threads} b={bsz}: shape at sample {i}"
+                    "{label} seed {seed} t={threads} {mode} b={bsz}: shape at sample {i}"
                 );
                 assert_eq!(
                     w.data(),
                     y.data(),
-                    "{label} seed {seed} t={threads} b={bsz}: not element-exact at sample {i}"
+                    "{label} seed {seed} t={threads} {mode} b={bsz}: not element-exact at \
+                     sample {i}"
                 );
             }
         }
     }
     // segmented execution — the pipelined coordinator's compute path:
     // same steps and buffers, run segment by segment with staged state
+    // (tiled kernels forced, so the staged path exercises them too)
     let mut plan = engine::compile(g, analysis).unwrap();
     plan.set_threads(2);
     plan.set_min_kernel_work(0);
+    plan.set_min_tile_work(0);
     let mut sp = engine::SegmentedPlan::new(plan, 3);
     for bsz in [1usize, 3, 8] {
         let ys = sp.run_batch(&xs[..bsz]).unwrap_or_else(|e| {
@@ -249,7 +278,8 @@ fn plan_reuse_through_the_pool_is_deterministic_and_leak_free() {
         .collect();
     let mut plan = engine::compile(&g, &analysis)
         .unwrap()
-        .with_min_kernel_work(0);
+        .with_min_kernel_work(0)
+        .with_min_tile_work(0);
     plan.set_threads(4);
     for round in 0..10 {
         let ys = plan.run_batch(&xs).unwrap();
@@ -305,6 +335,7 @@ fn differential_pipelined_coordinator() {
             let mut plan = engine::compile(&g, &analysis).unwrap();
             plan.set_threads(threads);
             plan.set_min_kernel_work(0);
+            plan.set_min_tile_work(0);
             let sp = engine::SegmentedPlan::new(plan, 3);
             let coord = Coordinator::start_pipelined(
                 sp,

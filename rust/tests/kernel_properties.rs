@@ -1,0 +1,399 @@
+//! Kernel-level property/fuzz suite for the tiled MAC core: for seeded
+//! random shapes — K = 0, N = 1, tile-boundary ±1 and
+//! non-multiple-of-tile remainders included — the register-blocked
+//! `tile::mac_rows_tiled` must agree **element-exactly** with the scalar
+//! `MacElem::mac_row` oracle across all three accumulator widths
+//! (f64 / i32 / i64), arbitrary column-range tilings must compose to the
+//! full product, and the tiled unroll order must not be able to overflow
+//! anywhere the scalar k-order could not (driven to the exact
+//! `sira_int_bounds` extremes). The overflow properties rely on
+//! overflow *checks* being live — a reordering bug would wrap back to
+//! the correct value under plain release — so the suite runs in the
+//! default dev profile via `cargo test` and, pinned-seed in tier-1,
+//! under the `relcheck` profile (release optimization +
+//! `overflow-checks = true`, see Cargo.toml). This is the contract that
+//! makes every future kernel rewrite safe: swap the implementation,
+//! keep the suite green.
+//!
+//! The base seed is fixed; `scripts/verify.sh` pins it explicitly via
+//! `SIRA_KERNEL_SEED` when running the suite as part of tier-1.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use common::near_limit_graph;
+use sira_finn::engine;
+use sira_finn::engine::kernels::tile::{mac_rows_tiled, PackedWeights, MR, NR};
+use sira_finn::engine::kernels::MacElem;
+use sira_finn::executor::Executor;
+use sira_finn::passes::accmin::sira_int_bounds;
+use sira_finn::sira::{analyze, SiRange};
+use sira_finn::tensor::Tensor;
+use sira_finn::util::rng::Rng;
+
+/// Fixed default; override (e.g. from CI) with SIRA_KERNEL_SEED.
+fn base_seed() -> u64 {
+    std::env::var("SIRA_KERNEL_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x711E)
+}
+
+/// The scalar oracle lifted to a row block: per activation row, the
+/// plain `MacElem::mac_row` over the flat row-major matrix.
+fn scalar_rows<T: MacElem>(
+    a: &[T],
+    rows: usize,
+    k: usize,
+    flat: &[T],
+    n: usize,
+    cols: core::ops::Range<usize>,
+    acc: &mut [T],
+) {
+    let width = cols.len();
+    for r in 0..rows {
+        T::mac_row(
+            &a[r * k..(r + 1) * k],
+            flat,
+            n,
+            cols.clone(),
+            &mut acc[r * width..(r + 1) * width],
+        );
+    }
+}
+
+/// Random small integers at width `T`, with explicit zeros sprinkled in
+/// so the f64 zero-skip path is exercised.
+fn fill<T: MacElem>(rng: &mut Rng, len: usize, amp: i64) -> Vec<T> {
+    (0..len)
+        .map(|_| {
+            if rng.chance(0.2) {
+                T::ZERO
+            } else {
+                T::from_i64(rng.int_in(-amp, amp))
+            }
+        })
+        .collect()
+}
+
+/// Shapes straddling every tile boundary: K = 0, N = 1, exact NR / MR
+/// multiples, ±1 around them, and ragged remainders.
+fn boundary_shapes() -> Vec<(usize, usize, usize)> {
+    let mut shapes = Vec::new();
+    for rows in [1usize, 2, MR - 1, MR, MR + 1, 2 * MR + 1] {
+        for k in [0usize, 1, 3, NR, NR + 1, 17] {
+            for n in [1usize, NR - 1, NR, NR + 1, 2 * NR, 2 * NR + 1, 3 * NR - 1] {
+                shapes.push((rows, k, n));
+            }
+        }
+    }
+    shapes
+}
+
+/// Tiled == scalar for one width over one shape, with random seeds in
+/// the accumulator (the caller-seeding contract elision relies on).
+fn check_shape<T: MacElem + PartialEq + std::fmt::Debug>(
+    rng: &mut Rng,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    let a: Vec<T> = fill(rng, rows * k, 9);
+    let flat: Vec<T> = fill(rng, k * n, 9);
+    let packed = PackedWeights::pack(&flat, k, n);
+    let seed: Vec<T> = fill(rng, rows * n, 50);
+    let mut want = seed.clone();
+    scalar_rows(&a, rows, k, &flat, n, 0..n, &mut want);
+    let mut got = seed;
+    mac_rows_tiled(&a, rows, &packed, 0..n, &mut got);
+    assert_eq!(got, want, "rows={rows} k={k} n={n}");
+}
+
+#[test]
+fn tiled_matches_scalar_across_widths_and_shapes() {
+    let mut rng = Rng::new(base_seed());
+    for (rows, k, n) in boundary_shapes() {
+        check_shape::<f64>(&mut rng, rows, k, n);
+        check_shape::<i32>(&mut rng, rows, k, n);
+        check_shape::<i64>(&mut rng, rows, k, n);
+    }
+    // fuzz tail: fully random shapes
+    for _ in 0..40 {
+        let rows = rng.int_in(1, 11) as usize;
+        let k = rng.int_in(0, 40) as usize;
+        let n = rng.int_in(1, 40) as usize;
+        check_shape::<f64>(&mut rng, rows, k, n);
+        check_shape::<i32>(&mut rng, rows, k, n);
+        check_shape::<i64>(&mut rng, rows, k, n);
+    }
+}
+
+/// Arbitrary column-range tilings compose to the full product: cutting
+/// `0..n` into random consecutive ranges and running each through the
+/// tiled kernel reproduces the full-width result exactly — the invariant
+/// the tile-aligned column/channel work items of the pool rely on (and
+/// which must hold even for ranges *not* aligned to NR).
+#[test]
+fn column_range_tilings_compose_to_the_full_product() {
+    let mut rng = Rng::new(base_seed() ^ 0xC0);
+    for trial in 0..60 {
+        let rows = rng.int_in(1, 6) as usize;
+        let k = rng.int_in(0, 24) as usize;
+        let n = rng.int_in(1, 36) as usize;
+        let a: Vec<i64> = fill(&mut rng, rows * k, 9);
+        let flat: Vec<i64> = fill(&mut rng, k * n, 9);
+        let packed = PackedWeights::pack(&flat, k, n);
+        let mut full = vec![0i64; rows * n];
+        mac_rows_tiled(&a, rows, &packed, 0..n, &mut full);
+        let mut want = vec![0i64; rows * n];
+        scalar_rows(&a, rows, k, &flat, n, 0..n, &mut want);
+        assert_eq!(full, want, "trial {trial}: full-width tiled != scalar");
+        // random consecutive tiling of 0..n
+        let mut cuts = vec![0usize, n];
+        for _ in 0..rng.int_in(0, 3) {
+            cuts.push(rng.int_in(0, n as i64) as usize);
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut assembled = vec![0i64; rows * n];
+        for w in cuts.windows(2) {
+            let (j0, j1) = (w[0], w[1]);
+            let width = j1 - j0;
+            let mut piece = vec![0i64; rows * width];
+            mac_rows_tiled(&a, rows, &packed, j0..j1, &mut piece);
+            for r in 0..rows {
+                assembled[r * n + j0..r * n + j1]
+                    .copy_from_slice(&piece[r * width..(r + 1) * width]);
+            }
+        }
+        assert_eq!(assembled, full, "trial {trial}: tiling {cuts:?} diverged");
+    }
+}
+
+/// The three accumulator widths agree on common integer data (magnitudes
+/// far from every overflow bound).
+#[test]
+fn widths_agree_on_small_integer_data() {
+    let mut rng = Rng::new(base_seed() ^ 0x3D);
+    for _ in 0..30 {
+        let rows = rng.int_in(1, 5) as usize;
+        let k = rng.int_in(0, 20) as usize;
+        let n = rng.int_in(1, 20) as usize;
+        let ints: Vec<i64> = (0..rows * k).map(|_| rng.int_in(-9, 9)).collect();
+        let wints: Vec<i64> = (0..k * n).map(|_| rng.int_in(-9, 9)).collect();
+        let run = |got: &mut Vec<f64>| {
+            let a: Vec<f64> = ints.iter().map(|&v| v as f64).collect();
+            let flat: Vec<f64> = wints.iter().map(|&v| v as f64).collect();
+            let packed = PackedWeights::pack(&flat, k, n);
+            got.resize(rows * n, 0.0);
+            mac_rows_tiled(&a, rows, &packed, 0..n, got);
+        };
+        let mut f = Vec::new();
+        run(&mut f);
+        let a32: Vec<i32> = ints.iter().map(|&v| v as i32).collect();
+        let w32: Vec<i32> = wints.iter().map(|&v| v as i32).collect();
+        let mut g32 = vec![0i32; rows * n];
+        mac_rows_tiled(&a32, rows, &PackedWeights::pack(&w32, k, n), 0..n, &mut g32);
+        let a64: Vec<i64> = ints.clone();
+        let mut g64 = vec![0i64; rows * n];
+        mac_rows_tiled(&a64, rows, &PackedWeights::pack(&wints, k, n), 0..n, &mut g64);
+        for i in 0..rows * n {
+            assert_eq!(g32[i] as f64, f[i], "i32 vs f64 at {i}");
+            assert_eq!(g64[i] as f64, f[i], "i64 vs f64 at {i}");
+        }
+    }
+}
+
+/// f64 zero-skip bit-exactness: activations containing +0.0 and -0.0
+/// against negative/fractional weights must reproduce the scalar
+/// kernel's skip decisions bit-for-bit (value equality would hide a
+/// signed-zero drift).
+#[test]
+fn f64_signed_zero_skip_is_bit_exact() {
+    let mut rng = Rng::new(base_seed() ^ 0xF0);
+    for trial in 0..40 {
+        let rows = rng.int_in(1, 6) as usize;
+        let k = rng.int_in(1, 20) as usize;
+        let n = rng.int_in(1, 3 * NR as i64) as usize;
+        let a: Vec<f64> = (0..rows * k)
+            .map(|_| match rng.int_in(0, 4) {
+                0 => 0.0,
+                1 => -0.0,
+                v => (v as f64 - 3.0) * 1.5,
+            })
+            .collect();
+        let flat: Vec<f64> = (0..k * n)
+            .map(|_| (rng.int_in(-7, 7) as f64) * 0.25 - 0.125)
+            .collect();
+        let packed = PackedWeights::pack(&flat, k, n);
+        let seed: Vec<f64> = (0..rows * n)
+            .map(|_| if rng.chance(0.3) { -0.0 } else { rng.int_in(-5, 5) as f64 })
+            .collect();
+        let mut want = seed.clone();
+        scalar_rows(&a, rows, k, &flat, n, 0..n, &mut want);
+        let mut got = seed;
+        mac_rows_tiled(&a, rows, &packed, 0..n, &mut got);
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "trial {trial}: f64 bits diverged at {i} ({w} vs {g})"
+            );
+        }
+    }
+}
+
+/// Accumulator-edge property, i32: alternating ±2^30 terms keep every
+/// scalar k-order partial sum at |·| ≤ 2^30, while the absolute-value
+/// sum (16 × 2^30) is far beyond i32::MAX — a kernel that reordered
+/// terms *within* one output element (e.g. summing the positive half
+/// first) would overflow and, under the overflow checks this test runs
+/// with (dev profile locally, the `relcheck` profile in tier-1), panic.
+/// The tiled unroll reorders only across elements, so it must match the
+/// scalar oracle exactly.
+#[test]
+fn i32_tiled_order_cannot_overflow_where_scalar_did_not() {
+    const M: i32 = 1 << 30;
+    let k = 16usize;
+    let n = NR + 3;
+    let a = vec![1i32; k];
+    let mut flat = vec![0i32; k * n];
+    for kk in 0..k {
+        let v = if kk % 2 == 0 { M } else { -M };
+        for j in 0..n {
+            flat[kk * n + j] = v;
+        }
+    }
+    let packed = PackedWeights::pack(&flat, k, n);
+    let mut want = vec![0i32; n];
+    scalar_rows(&a, 1, k, &flat, n, 0..n, &mut want);
+    let mut got = vec![0i32; n];
+    mac_rows_tiled(&a, 1, &packed, 0..n, &mut got);
+    assert_eq!(got, want);
+    assert!(got.iter().all(|&v| v == 0));
+    // seeds at the representable edge: seed + first term touches i32::MAX
+    let seed = vec![i32::MAX - M; n];
+    let mut want = seed.clone();
+    scalar_rows(&a, 1, k, &flat, n, 0..n, &mut want);
+    let mut got = seed;
+    mac_rows_tiled(&a, 1, &packed, 0..n, &mut got);
+    assert_eq!(got, want);
+    assert!(got.iter().all(|&v| v == i32::MAX - M));
+}
+
+/// The i64 twin of the edge property, at ±2^62.
+#[test]
+fn i64_tiled_order_cannot_overflow_where_scalar_did_not() {
+    const M: i64 = 1 << 62;
+    let k = 16usize;
+    let n = 2 * NR - 1;
+    let a = vec![1i64; k];
+    let mut flat = vec![0i64; k * n];
+    for kk in 0..k {
+        let v = if kk % 2 == 0 { M } else { -M };
+        for j in 0..n {
+            flat[kk * n + j] = v;
+        }
+    }
+    let packed = PackedWeights::pack(&flat, k, n);
+    let mut want = vec![0i64; n];
+    scalar_rows(&a, 1, k, &flat, n, 0..n, &mut want);
+    let mut got = vec![0i64; n];
+    mac_rows_tiled(&a, 1, &packed, 0..n, &mut got);
+    assert_eq!(got, want);
+    assert!(got.iter().all(|&v| v == 0));
+}
+
+/// Engine-level accumulator-edge case: inputs pinned to the exact
+/// `sira_int_bounds` extremes (and one step inside) through the compiled
+/// plan — tiled kernels forced, scalar oracle forced — must match the
+/// executor element-exactly, with the i32 fast path engaged.
+#[test]
+fn engine_integer_mac_is_exact_at_sira_bound_extremes() {
+    let (g, inputs) = near_limit_graph();
+    let analysis = analyze(&g, &inputs).unwrap();
+    let (lo, hi) = sira_int_bounds(&analysis, "xq").expect("quant output is pure-integer");
+    let (lo, hi) = (lo as f64, hi as f64);
+    let xs: Vec<Tensor> = [
+        vec![hi; 4],
+        vec![lo; 4],
+        vec![hi - 1.0; 4],
+        vec![lo + 1.0; 4],
+        vec![hi, lo, hi, lo],
+        vec![lo, hi, lo, hi],
+    ]
+    .into_iter()
+    .map(|v| Tensor::new(&[1, 4], v).unwrap())
+    .collect();
+    let mut exec = Executor::new(&g).unwrap();
+    let want: Vec<Tensor> = xs
+        .iter()
+        .map(|x| exec.run_single(x).unwrap().remove(0))
+        .collect();
+    let mut tiled = engine::compile(&g, &analysis).unwrap().with_min_tile_work(0);
+    assert_eq!(tiled.stats().matmul_i32, 1, "{}", tiled.stats());
+    let mut scalar = engine::compile(&g, &analysis)
+        .unwrap()
+        .with_min_tile_work(usize::MAX);
+    let got_t = tiled.run_batch(&xs).unwrap();
+    let got_s = scalar.run_batch(&xs).unwrap();
+    for (i, w) in want.iter().enumerate() {
+        assert_eq!(w.data(), got_t[i].data(), "tiled diverged at extreme {i}");
+        assert_eq!(w.data(), got_s[i].data(), "scalar diverged at extreme {i}");
+    }
+}
+
+/// Threshold-crossing shapes: the tiled-work gate is on `rows * k * n`
+/// with `rows = batch × m`, so at batch 1 this QNN's first MatMul
+/// (1 × 64 × 32 = 2048 MACs) clears the default `min_tile_work` gate
+/// (1 << 10) while its second (1 × 32 × 4 = 128) does not — the
+/// default-gate plan genuinely mixes tiled and scalar kernels in one
+/// run. Batch 8 pushes the second layer over the gate too
+/// (8 × 32 × 4 = 1024 ≥ 1 << 10), so sweeping batch sizes covers
+/// mixed *and* all-tiled dispatch; every configuration must be
+/// bit-exact against both forced modes and against the executor.
+#[test]
+fn default_tile_gate_mixes_paths_bit_exactly() {
+    use sira_finn::models::{Granularity, QnnBuilder};
+
+    let mut b = QnnBuilder::new("mix", 77);
+    b.input("x", &[1, 64]);
+    b.quant_act(8, false, Granularity::PerTensor, 255.0);
+    b.linear(32, 3, Granularity::PerTensor, true);
+    b.relu();
+    b.quant_act(4, false, Granularity::PerTensor, 8.0);
+    b.linear(4, 4, Granularity::PerTensor, true);
+    let g = b.finish().unwrap();
+    let mut inputs = BTreeMap::new();
+    inputs.insert("x".to_string(), SiRange::scalar(0.0, 255.0));
+    let analysis = analyze(&g, &inputs).unwrap();
+    let mut rng = Rng::new(base_seed() ^ 0x5E);
+    let xs: Vec<Tensor> = (0..8)
+        .map(|_| {
+            Tensor::new(&[1, 64], (0..64).map(|_| rng.int_in(0, 255) as f64).collect()).unwrap()
+        })
+        .collect();
+    let mut exec = Executor::new(&g).unwrap();
+    let want: Vec<Tensor> = xs
+        .iter()
+        .map(|x| exec.run_single(x).unwrap().remove(0))
+        .collect();
+    let mut forced = engine::compile(&g, &analysis).unwrap().with_min_tile_work(0);
+    let mut scalar = engine::compile(&g, &analysis)
+        .unwrap()
+        .with_min_tile_work(usize::MAX);
+    let mut mixed = engine::compile(&g, &analysis).unwrap(); // default gate
+    // batch 1: mixed dispatch (layer 1 tiled, layer 2 scalar);
+    // batch 3: still mixed (384 < 1024); batch 8: everything tiled
+    for bsz in [1usize, 3, 8] {
+        let got_f = forced.run_batch(&xs[..bsz]).unwrap();
+        let got_s = scalar.run_batch(&xs[..bsz]).unwrap();
+        let got_m = mixed.run_batch(&xs[..bsz]).unwrap();
+        for (i, w) in want[..bsz].iter().enumerate() {
+            assert_eq!(w.data(), got_f[i].data(), "b={bsz} tiled vs executor at {i}");
+            assert_eq!(w.data(), got_s[i].data(), "b={bsz} scalar vs executor at {i}");
+            assert_eq!(w.data(), got_m[i].data(), "b={bsz} mixed vs executor at {i}");
+        }
+    }
+}

@@ -4,10 +4,12 @@
 //! tensor must fall inside its analyzed range, and the affine
 //! scale/bias invariant must hold for every scaled-integer range.
 
+mod common;
+
 use std::collections::BTreeMap;
 
 use sira_finn::executor::Executor;
-use sira_finn::graph::{Graph, Node, Op, RoundMode};
+use sira_finn::graph::{Graph, Node, Op};
 use sira_finn::models::{Granularity, QnnBuilder};
 use sira_finn::sira::{analyze, SiRange};
 use sira_finn::tensor::Tensor;
@@ -204,6 +206,63 @@ fn observed_values_lie_within_sira_int_bounds_raw_and_streamlined() {
         inputs.insert("x".to_string(), uint8_range());
         let s_analysis = prepare_streamlined(&mut sg, &inputs).unwrap();
         check(&sg, &s_analysis, seed, "streamlined");
+    }
+}
+
+/// Accumulator-edge case on the `common::near_limit_graph` fixture
+/// (shared with `rust/tests/kernel_properties.rs`): a quant → integer
+/// MatMul whose worst-case partial-sum bound (4 × 100 × 5e6 = 2.0e9)
+/// sits just inside the engine's i32 headroom.
+/// Inputs pinned to the exact `sira_int_bounds` extremes must drive the
+/// observed outputs to the analyzed integer bounds *exactly* (tightness
+/// — these are the sums the A2Q-style width selection certified), and
+/// inputs one step inside must stay strictly inside; nothing may ever
+/// escape the bounds.
+#[test]
+fn int_bounds_are_tight_and_sound_at_extreme_inputs() {
+    use sira_finn::passes::accmin::sira_int_bounds;
+
+    let (g, inputs) = common::near_limit_graph();
+    let analysis = analyze(&g, &inputs).unwrap();
+
+    let (xlo, xhi) = sira_int_bounds(&analysis, "xq").expect("quant output is pure-integer");
+    let (ylo, yhi) = sira_int_bounds(&analysis, "y").expect("integer MAC output has int bounds");
+    let (xlo, xhi) = (xlo as f64, xhi as f64);
+    let mut exec = Executor::new(&g).unwrap();
+    let mut run = |v: Vec<f64>| -> Vec<f64> {
+        exec.run_single(&Tensor::new(&[1, 4], v).unwrap()).unwrap()[0]
+            .data()
+            .to_vec()
+    };
+    // column 0's weights are all positive: the all-hi / all-lo inputs
+    // achieve the analyzed bound exactly
+    let at_hi = run(vec![xhi; 4]);
+    let at_lo = run(vec![xlo; 4]);
+    assert_eq!(at_hi[0], yhi as f64, "upper int bound not achieved");
+    assert_eq!(at_lo[0], ylo as f64, "lower int bound not achieved");
+    // every extreme-pattern output stays inside the bounds
+    let pats = [
+        vec![xhi; 4],
+        vec![xlo; 4],
+        vec![xhi, xlo, xhi, xlo],
+        vec![xlo, xhi, xlo, xhi],
+    ];
+    for p in pats {
+        for &v in &run(p.clone()) {
+            assert!(
+                v >= ylo as f64 && v <= yhi as f64,
+                "extreme input {p:?} escaped int bounds: {v} not in [{ylo}, {yhi}]"
+            );
+        }
+    }
+    // one step inside the extremes stays strictly inside the bounds
+    for p in [vec![xhi - 1.0; 4], vec![xlo + 1.0; 4]] {
+        for &v in &run(p.clone()) {
+            assert!(
+                v > ylo as f64 && v < yhi as f64,
+                "near-extreme input {p:?} touched the bound: {v}"
+            );
+        }
     }
 }
 

@@ -25,7 +25,13 @@ cargo test -q
 echo "== engine differential suite (release, fixed seed) =="
 SIRA_DIFF_SEED=53759 cargo test --release --test engine_differential -q
 
-echo "== perf_hotpath batch-8 gate, plain + pipelined (>25% engine regression fails) =="
+# The relcheck profile is release-grade optimization + overflow-checks:
+# the accumulator-order properties rely on an overflowing reorder
+# panicking rather than silently wrapping back to the right answer.
+echo "== kernel property suite: tiled vs scalar MAC cores (relcheck profile, fixed seed) =="
+SIRA_KERNEL_SEED=90210 cargo test --profile relcheck --test kernel_properties -q
+
+echo "== perf_hotpath batch-8 gate, plain + pipelined + tiled MVU (>25% engine regression fails) =="
 # Baselines are machine-relative: gate against a machine-local copy under
 # target/ (never committed), seeded from the checked-in schema/config in
 # BENCH_baseline.json. The first run on a fresh machine records its own
