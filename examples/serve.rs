@@ -2,17 +2,23 @@
 //! pool) with selectable execution backends:
 //!
 //! * `--engine` — the plan-compiled integer runtime ([`sira_finn::engine`])
-//!   behind batched workers: real batched execution, SIRA-narrowed
-//!   accumulators, fused thresholds. Add `--streamline` to serve the
-//!   streamlined (pure-integer) form of the model, `--threads N` to let
-//!   each worker's plan shard its drained batch across the persistent
-//!   N-thread pool (row-sharding large MVU kernels when the batch is
-//!   small), and `--pipeline N` to serve pipeline-parallel over N plan
-//!   segments (batch k+1 enters segment 0 while batch k runs segment 1).
+//!   behind batched workers, built through the serving registry
+//!   ([`sira_finn::serve::registry`]) — the same construction path the
+//!   network front end (`sira-finn serve --listen`) uses, so the two
+//!   cannot drift. Add `--streamline` to serve the streamlined
+//!   (pure-integer) form of the model, `--threads N` to let each
+//!   worker's plan shard its drained batch across the persistent
+//!   N-thread pool, and `--pipeline N` to serve pipeline-parallel over N
+//!   plan segments (batch k+1 enters segment 0 while batch k runs
+//!   segment 1).
 //! * default — PJRT artifact (when built with `--features pjrt` and
 //!   `make artifacts` ran), else the sidecar graph on the interpretive
 //!   executor, else the zoo graph on the executor.
 //! * `--executor` — force the interpretive executor.
+//!
+//! The end-of-run metrics line is the shared JSON emitter
+//! ([`Metrics::json_report`](sira_finn::coordinator::Metrics::json_report))
+//! — the same schema `GET /metrics` and `sira-finn loadgen` report.
 //!
 //! ```
 //! cargo run --release --example serve -- --engine --model cnv --requests 200
@@ -22,25 +28,15 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use sira_finn::coordinator::{BatchPolicy, Coordinator};
-use sira_finn::engine;
 use sira_finn::executor::Executor;
+use sira_finn::models;
 use sira_finn::models::sidecar::load_sidecar_file;
-use sira_finn::models::{self, ZooModel};
 use sira_finn::runtime::Runtime;
-use sira_finn::sira::analyze;
+use sira_finn::serve::{ModelEntry, ModelSpec};
 use sira_finn::tensor::Tensor;
 use sira_finn::util::cli::Args;
+use sira_finn::util::json::Json;
 use sira_finn::util::rng::Rng;
-
-fn zoo(name: &str) -> Result<ZooModel> {
-    match name {
-        "tfc" => models::tfc_w2a2(),
-        "cnv" => models::cnv_w2a2(),
-        "rn8" => models::rn8_w3a3(),
-        "mnv1" => models::mnv1_w4a4_scaled(4),
-        other => anyhow::bail!("unknown model '{other}' (tfc|cnv|rn8|mnv1)"),
-    }
-}
 
 fn main() -> Result<()> {
     let args = Args::from_env(&["executor", "engine", "streamline"])?;
@@ -62,36 +58,19 @@ fn main() -> Result<()> {
     let have_sidecar = std::path::Path::new("artifacts/model_params.json").exists();
 
     let (coord, input_shape) = if engine_mode {
-        let m = zoo(&model_name)?;
-        let mut g = m.graph.clone();
-        let analysis = if args.flag("streamline") {
-            engine::prepare_streamlined(&mut g, &m.input_ranges)?
-        } else {
-            analyze(&g, &m.input_ranges)?
+        // the registry owns plan compilation + coordinator construction
+        // for the engine path (shared with `sira-finn serve`)
+        let spec = ModelSpec {
+            name: model_name.clone(),
+            engine: true,
+            streamline: args.flag("streamline"),
+            threads: args.get_usize("threads", 1)?,
+            pipeline,
+            workers,
         };
-        let mut plan = engine::compile(&g, &analysis)?;
-        plan.set_threads(args.get_usize("threads", 1)?);
-        println!(
-            "backend: plan engine ({}{}, threads={}) — {}",
-            m.name,
-            if args.flag("streamline") { ", streamlined" } else { "" },
-            plan.threads(),
-            plan.stats()
-        );
-        let shape = m.input_shape.clone();
-        let c = if pipeline > 1 {
-            let sp = engine::SegmentedPlan::new(plan, pipeline);
-            println!("pipeline: {}", sp.describe());
-            Coordinator::start_pipelined(sp, policy)
-        } else {
-            Coordinator::start_batched(workers, policy, move || {
-                // each worker owns a private clone of the compiled plan
-                // (thread budget and persistent pool included)
-                let mut p = plan.clone();
-                move |xs: &[Tensor]| p.run_batch(xs)
-            })
-        };
-        (c, shape)
+        let entry = ModelEntry::build(&spec, policy)?;
+        println!("backend: {}", entry.describe);
+        (entry.coordinator, entry.input_shape)
     } else if use_pjrt {
         println!("backend: PJRT (streamlined Pallas artifact)");
         let c = Coordinator::start(workers, policy, move || {
@@ -109,7 +88,7 @@ fn main() -> Result<()> {
             let m = load_sidecar_file("artifacts/model_params.json")?;
             (m.graph, m.input_shape, "sidecar model".to_string())
         } else {
-            let m = zoo(&model_name)?;
+            let m = models::by_name(&model_name)?;
             (m.graph, m.input_shape, format!("zoo model {}", m.name))
         };
         println!("backend: rust graph executor ({label})");
@@ -144,20 +123,18 @@ fn main() -> Result<()> {
         }
     }
     let dt = t0.elapsed();
-    let (p50, p95, p99) = coord.metrics.percentiles();
-    let (o50, o95, o99) = coord.metrics.occupancy_percentiles();
     println!(
         "{ok}/{n} ok in {dt:.2?} -> {:.1} req/s across {workers} workers",
         n as f64 / dt.as_secs_f64()
     );
-    println!("latency p50 {p50} us, p95 {p95} us, p99 {p99} us");
+    // latency/occupancy/segments in the shared machine-readable schema
     println!(
-        "batch occupancy mean {:.2} (p50 {o50} / p95 {o95} / p99 {o99}) over {} batches",
-        coord.metrics.mean_occupancy(),
-        coord
-            .metrics
-            .batches
-            .load(std::sync::atomic::Ordering::Relaxed)
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::Str("serve-example".to_string())),
+            ("model", Json::Str(model_name)),
+            ("metrics", coord.metrics.json_report(dt)),
+        ])
     );
     print!("{}", coord.metrics.segment_summary(dt));
     coord.shutdown();

@@ -14,9 +14,12 @@
 //! `cargo bench --bench perf_hotpath -- --gate BENCH_baseline.json` runs
 //! only the engine batch-8 measurements — threads 1 and 4 through
 //! `run_batch`, the threads-4 two-segment *pipelined* coordinator
-//! configuration, plus the tiled large-MVU configuration (a synthetic
+//! configuration, the tiled large-MVU configuration (a synthetic
 //! 784×256 integer MatMul, the shape class the register-blocked kernels
-//! target) — and compares them against the checked-in baseline, failing
+//! target), plus the loopback network-serving configuration
+//! (`serve/loopback/cnv/b8`: a real `127.0.0.1` HTTP server driven by
+//! the in-crate load generator) — and compares them against the
+//! checked-in baseline, failing
 //! (exit 1) on a >25% throughput regression. Baselines are
 //! machine-relative: an entry missing for this environment is measured
 //! and recorded into the file instead of compared, so the first gate run
@@ -234,6 +237,53 @@ fn run_shapes() {
     }
 }
 
+/// Measure the full network serving path ns/sample: a loopback server
+/// (engine backend) driven closed-loop by the in-crate load generator —
+/// sockets, HTTP framing, JSON, admission, dynamic batching and the
+/// engine all on the clock. Best-of-3 wall-clock runs (scheduling noise
+/// would otherwise leak into the gate).
+fn measure_serve_loopback_b8(model: &str, threads: usize) -> f64 {
+    use sira_finn::serve::{loadgen, LoadSpec, ModelSpec, Server, ServerConfig};
+    let requests = 48usize;
+    let batch = 8usize;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let cfg = ServerConfig {
+            specs: vec![ModelSpec {
+                threads,
+                ..ModelSpec::engine_default(model)
+            }],
+            max_pending: 256,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            ..Default::default()
+        };
+        let server = Server::start(cfg).expect("loopback server");
+        let spec = LoadSpec {
+            addr: server.addr().to_string(),
+            model: model.to_string(),
+            conns: 2,
+            requests,
+            batch,
+            rate: None,
+            deadline_ms: None,
+            seed: 0x10AD,
+        };
+        let report = loadgen::run(&spec).expect("loadgen run");
+        assert_eq!(
+            report.ok, requests,
+            "loopback gate run must not shed or fail: {}",
+            report.json()
+        );
+        let ns = report.wall.as_nanos() as f64 / (requests * batch) as f64;
+        server.shutdown();
+        best = best.min(ns);
+    }
+    best
+}
+
 /// Compare one measurement against the baseline map, recording it when
 /// this environment has never seen the key.
 fn gate_check(
@@ -315,6 +365,16 @@ fn run_gate(path: &str) -> i32 {
         let key = "engine/mvu784x256/b8/t1/tiled".to_string();
         let got = measure_mvu_b8(&b, 1);
         json_line("gate-mvu", "engine", "mvu784x256", 8, 1, got);
+        gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
+    }
+    // full network serving path: loopback HTTP server + load generator,
+    // cnv at 8 samples per request — gates the whole socket→engine→
+    // socket pipeline so a serving-layer regression (framing, JSON,
+    // admission, batching) fails tier-1 like an engine one would
+    {
+        let key = "serve/loopback/cnv/b8".to_string();
+        let got = measure_serve_loopback_b8("cnv", 1);
+        json_line("gate-serve", "serve", "cnv", 8, 1, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
     if recorded {

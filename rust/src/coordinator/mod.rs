@@ -34,11 +34,29 @@ use anyhow::{anyhow, Result};
 use crate::engine::pool::WorkerState;
 use crate::engine::SegmentedPlan;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Error text for requests whose deadline expired before any engine
+/// touched them (see [`Coordinator::submit_at`]). The network serving
+/// layer matches on this to map the failure to HTTP 504.
+pub const DEADLINE_EXCEEDED: &str = "deadline exceeded before execution";
+
+/// Error text `submit` returns after [`Coordinator::shutdown`] — the
+/// serving layer matches on this (and [`WORKERS_GONE`]) to map
+/// shutdown-race failures to a retryable HTTP 503.
+pub const SHUT_DOWN: &str = "coordinator is shut down";
+
+/// Error text when the worker threads disappeared without a shutdown.
+pub const WORKERS_GONE: &str = "coordinator workers are gone";
 
 /// One inference request.
 struct Job {
     input: Tensor,
     enqueued: Instant,
+    /// absolute per-request deadline; expired jobs are dropped before
+    /// they reach a batch
+    deadline: Option<Instant>,
     reply: Sender<Result<Tensor>>,
 }
 
@@ -52,6 +70,25 @@ struct StageMsg {
     metas: Vec<Meta>,
     b: usize,
     carry: Vec<Vec<f64>>,
+}
+
+/// Drop deadline-expired jobs out of a drained batch before any engine
+/// runs: each expired job fails with [`DEADLINE_EXCEEDED`] and counts in
+/// [`Metrics::expired`]. The admission contract for the serving layer —
+/// work that can no longer meet its budget never occupies a batch slot.
+fn drop_expired(batch: Vec<Job>, metrics: &Metrics) -> Vec<Job> {
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.len());
+    for job in batch {
+        match job.deadline {
+            Some(d) if d <= now => {
+                metrics.record_expired(job.enqueued);
+                let _ = job.reply.send(Err(anyhow!(DEADLINE_EXCEEDED)));
+            }
+            _ => live.push(job),
+        }
+    }
+    live
 }
 
 /// Fail every request of a pipelined batch with the same error text.
@@ -97,6 +134,9 @@ pub struct SegmentStat {
 pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// requests dropped before execution because their deadline expired
+    /// (a subset of `failed`)
+    pub expired: AtomicU64,
     pub batches: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
     /// requests per executed batch, one entry per batch
@@ -118,19 +158,18 @@ impl Metrics {
             .push(lat.as_micros() as u64);
     }
 
+    fn record_expired(&self, enqueued: Instant) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+        self.record(enqueued.elapsed(), false);
+    }
+
     fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_sizes.lock().unwrap().push(size as u64);
     }
 
     fn percentiles_of(v: &Mutex<Vec<u64>>) -> (u64, u64, u64) {
-        let mut v = v.lock().unwrap().clone();
-        if v.is_empty() {
-            return (0, 0, 0);
-        }
-        v.sort_unstable();
-        let pick = |p: f64| v[((v.len() - 1) as f64 * p) as usize];
-        (pick(0.50), pick(0.95), pick(0.99))
+        stats::percentiles_u64(&v.lock().unwrap())
     }
 
     /// (p50, p95, p99) latency in microseconds.
@@ -170,6 +209,56 @@ impl Metrics {
     /// (empty unless serving via [`Coordinator::start_pipelined`]).
     pub fn segment_stats(&self) -> Vec<SegmentStat> {
         self.segments.lock().unwrap().clone()
+    }
+
+    /// Machine-readable serving report built on the shared percentile
+    /// emitter ([`crate::util::stats::percentile_json`]): request
+    /// counters, throughput against the given wall time, latency and
+    /// batch-occupancy percentiles, and per-segment pipeline occupancy.
+    /// One schema for every surface — the HTTP `/metrics` endpoint,
+    /// `sira-finn serve`/`loadgen` and `examples/serve.rs` all render
+    /// this object instead of keeping their own format strings.
+    pub fn json_report(&self, wall: Duration) -> Json {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let wall_s = wall.as_secs_f64().max(1e-9);
+        let latency = stats::percentile_json(&self.latencies_us.lock().unwrap());
+        let occupancy = stats::percentile_json(&self.batch_sizes.lock().unwrap());
+        let wall_us = wall.as_micros().max(1) as f64;
+        let segments = Json::Arr(
+            self.segment_stats()
+                .iter()
+                .map(|st| {
+                    Json::obj(vec![
+                        ("batches", Json::Num(st.batches as f64)),
+                        ("busy_us", Json::Num(st.busy_us as f64)),
+                        (
+                            "busy_pct_of_wall",
+                            Json::Num(100.0 * st.busy_us as f64 / wall_us),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("completed", Json::Num(completed as f64)),
+            (
+                "failed",
+                Json::Num(self.failed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "expired",
+                Json::Num(self.expired.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "batches",
+                Json::Num(self.batches.load(Ordering::Relaxed) as f64),
+            ),
+            ("wall_ms", Json::Num(wall_s * 1e3)),
+            ("throughput_rps", Json::Num(completed as f64 / wall_s)),
+            ("latency_us", latency),
+            ("occupancy", occupancy),
+            ("segments", segments),
+        ])
     }
 
     /// Render the per-segment occupancy report against a serving wall
@@ -243,9 +332,15 @@ fn drain_batch(rx: &Mutex<Receiver<Job>>, policy: &BatchPolicy) -> Option<Vec<Jo
 }
 
 /// The coordinator: router + batcher + worker pool.
+///
+/// `submit` and `shutdown` both take `&self` (interior mutability), so a
+/// network serving layer can share one coordinator behind an `Arc` and
+/// drain it while other threads still hold references: submits racing a
+/// shutdown either land in the final drain or get a clean
+/// "coordinator is shut down" error — never a panic or a wedged channel.
 pub struct Coordinator {
-    tx: Option<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
+    tx: Mutex<Option<Sender<Job>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -270,6 +365,10 @@ impl Coordinator {
             workers.push(std::thread::spawn(move || {
                 let mut engine = make_engine();
                 while let Some(batch) = drain_batch(&rx, &policy) {
+                    let batch = drop_expired(batch, &metrics);
+                    if batch.is_empty() {
+                        continue;
+                    }
                     metrics.record_batch(batch.len());
                     for job in batch {
                         let result = engine(&job.input);
@@ -281,8 +380,8 @@ impl Coordinator {
             }));
         }
         Coordinator {
-            tx: Some(tx),
-            workers,
+            tx: Mutex::new(Some(tx)),
+            workers: Mutex::new(workers),
             metrics,
         }
     }
@@ -319,6 +418,10 @@ impl Coordinator {
             workers.push(std::thread::spawn(move || {
                 let mut engine = make_engine();
                 while let Some(batch) = drain_batch(&rx, &policy) {
+                    let batch = drop_expired(batch, &metrics);
+                    if batch.is_empty() {
+                        continue;
+                    }
                     metrics.record_batch(batch.len());
                     let mut inputs = Vec::with_capacity(batch.len());
                     let mut metas = Vec::with_capacity(batch.len());
@@ -356,8 +459,8 @@ impl Coordinator {
             }));
         }
         Coordinator {
-            tx: Some(tx),
-            workers,
+            tx: Mutex::new(Some(tx)),
+            workers: Mutex::new(workers),
             metrics,
         }
     }
@@ -406,6 +509,10 @@ impl Coordinator {
             workers.push(std::thread::spawn(move || {
                 let mut ws = WorkerState::default();
                 while let Some(batch) = drain_batch(&rx, &policy) {
+                    let batch = drop_expired(batch, &metrics);
+                    if batch.is_empty() {
+                        continue;
+                    }
                     metrics.record_batch(batch.len());
                     let b = batch.len();
                     let mut inputs = Vec::with_capacity(b);
@@ -482,24 +589,44 @@ impl Coordinator {
         }
 
         Coordinator {
-            tx: Some(tx),
-            workers,
+            tx: Mutex::new(Some(tx)),
+            workers: Mutex::new(workers),
             metrics,
         }
     }
 
     /// Submit a request; returns a handle to await the response.
     pub fn submit(&self, input: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        self.submit_at(input, None)
+    }
+
+    /// Submit a request with an optional absolute deadline. A job whose
+    /// deadline has passed by the time a worker drains it is dropped
+    /// *before* it reaches a batch: its reply is an error containing
+    /// [`DEADLINE_EXCEEDED`] and it counts in [`Metrics::expired`], but
+    /// no engine cycles are spent on it. After [`Coordinator::shutdown`]
+    /// this returns a clean "coordinator is shut down" error.
+    pub fn submit_at(
+        &self,
+        input: Tensor,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Tensor>>> {
+        // clone the sender under the lock, send outside it: submits
+        // never serialize on each other, and a shutdown taking the
+        // sender concurrently still lets this job join the final drain
+        let sender = match self.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.clone(),
+            None => return Err(anyhow!(SHUT_DOWN)),
+        };
         let (reply, rx) = channel();
-        self.tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("coordinator stopped"))?
+        sender
             .send(Job {
                 input,
                 enqueued: Instant::now(),
+                deadline,
                 reply,
             })
-            .map_err(|_| anyhow!("coordinator workers are gone"))?;
+            .map_err(|_| anyhow!(WORKERS_GONE))?;
         Ok(rx)
     }
 
@@ -510,10 +637,15 @@ impl Coordinator {
             .map_err(|_| anyhow!("worker dropped the reply channel"))?
     }
 
-    /// Graceful shutdown: drain and join.
-    pub fn shutdown(mut self) {
-        self.tx.take(); // close the channel
-        for w in self.workers.drain(..) {
+    /// Graceful shutdown: close the submit channel, let the workers
+    /// drain every queued job, and join them. Idempotent, and safe to
+    /// call through a shared reference (e.g. an `Arc` held by network
+    /// connection threads) — later `submit`s fail cleanly instead of
+    /// panicking on a dead channel.
+    pub fn shutdown(&self) {
+        self.tx.lock().unwrap().take(); // close the channel
+        let workers: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
             let _ = w.join();
         }
     }
@@ -521,10 +653,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -795,6 +924,94 @@ mod tests {
         let c = Coordinator::start_pipelined(sp, BatchPolicy::default());
         let y = c.infer(Tensor::full(&[1, 6], 7.0)).unwrap();
         assert_eq!(y.shape(), &[1, 6]);
+        c.shutdown();
+    }
+
+    /// Satellite contract for the network layer: `submit` after
+    /// `shutdown` is a clean error, not a channel-disconnect panic or a
+    /// race on worker teardown — the serving drain path hits this when a
+    /// kept-alive connection fires one more request after the registry
+    /// drained its coordinators.
+    #[test]
+    fn submit_after_shutdown_is_a_clean_error() {
+        let c = Coordinator::start(2, BatchPolicy::default(), doubler);
+        assert_eq!(c.infer(Tensor::scalar(3.0)).unwrap().first(), 6.0);
+        c.shutdown();
+        let err = c.submit(Tensor::scalar(1.0)).unwrap_err();
+        assert!(
+            err.to_string().contains("shut down"),
+            "unexpected error: {err:#}"
+        );
+        let err = c.infer(Tensor::scalar(1.0)).unwrap_err();
+        assert!(err.to_string().contains("shut down"));
+        // idempotent: a second shutdown is a no-op
+        c.shutdown();
+    }
+
+    /// Deadline-expired jobs are dropped before they reach a batch: the
+    /// engine never sees them, the reply carries the deadline error, and
+    /// the expired counter records the drop.
+    #[test]
+    fn expired_jobs_never_reach_the_engine() {
+        use std::sync::atomic::AtomicUsize;
+        let executed = Arc::new(AtomicUsize::new(0));
+        let executed_in = Arc::clone(&executed);
+        let c = Coordinator::start_batched(1, BatchPolicy::default(), move || {
+            let executed = Arc::clone(&executed_in);
+            move |xs: &[Tensor]| {
+                executed.fetch_add(xs.len(), Ordering::SeqCst);
+                Ok(xs.to_vec())
+            }
+        });
+        // a deadline already in the past: must fail without execution
+        let h = c
+            .submit_at(Tensor::scalar(1.0), Some(Instant::now()))
+            .unwrap();
+        let err = h.recv().unwrap().unwrap_err();
+        assert!(
+            err.to_string().contains(DEADLINE_EXCEEDED),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(c.metrics.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(executed.load(Ordering::SeqCst), 0, "engine ran expired work");
+        // a generous deadline still executes normally
+        let h = c
+            .submit_at(
+                Tensor::scalar(2.0),
+                Some(Instant::now() + Duration::from_secs(60)),
+            )
+            .unwrap();
+        assert_eq!(h.recv().unwrap().unwrap().first(), 2.0);
+        assert_eq!(executed.load(Ordering::SeqCst), 1);
+        c.shutdown();
+    }
+
+    /// The shared JSON report carries every counter surface the serving
+    /// endpoints render, in one schema.
+    #[test]
+    fn json_report_has_the_serving_schema() {
+        let c = Coordinator::start(1, BatchPolicy::default(), doubler);
+        for i in 0..8 {
+            c.infer(Tensor::scalar(i as f64)).unwrap();
+        }
+        let j = c.metrics.json_report(Duration::from_millis(100));
+        assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(j.get("failed").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("expired").unwrap().as_usize().unwrap(), 0);
+        assert!(j.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        let lat = j.get("latency_us").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize().unwrap(), 8);
+        assert!(
+            lat.get("p50").unwrap().as_f64().unwrap()
+                <= lat.get("p99").unwrap().as_f64().unwrap()
+        );
+        let occ = j.get("occupancy").unwrap();
+        assert!(occ.get("mean").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(j.get("segments").unwrap().as_arr().unwrap().is_empty());
+        // the report parses back as JSON text (the /metrics path)
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
         c.shutdown();
     }
 

@@ -41,6 +41,10 @@
 //!   (`artifacts/*.hlo.txt`) via the `xla` crate.
 //! - [`coordinator`] — a multi-threaded inference-serving coordinator
 //!   (request router, dynamic batcher, worker pool, metrics).
+//! - [`serve`] — the std-only network serving subsystem: hand-rolled
+//!   HTTP/1.1 front end, multi-model registry over compiled engine
+//!   plans, admission control with load-shed and deadlines, graceful
+//!   drain, and the loopback load generator.
 //! - [`util`] — substrates unavailable offline: JSON, seeded RNG, CLI
 //!   parsing, table formatting, timing/bench harness.
 //!
@@ -60,6 +64,7 @@ pub mod hw;
 pub mod models;
 pub mod passes;
 pub mod runtime;
+pub mod serve;
 pub mod sira;
 pub mod synth;
 pub mod tensor;

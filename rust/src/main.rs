@@ -7,33 +7,28 @@
 //!                   --acc sira|datatype|32 --target-cycles 16384
 //! sira-finn serve   --model tfc --workers 4 --requests 256 \
 //!                   [--engine [--streamline] --threads N --pipeline N]
+//! sira-finn serve   --listen 127.0.0.1:8080 --models tfc,cnv --engine \
+//!                   [--threads N --pipeline N --max-pending N --deadline-ms N]
+//! sira-finn loadgen --addr 127.0.0.1:8080 --model cnv --conns 4 \
+//!                   --requests 256 --batch 8 [--rate R --deadline-ms N]
 //! sira-finn e2e     [--artifacts artifacts]
 //! ```
 
-use anyhow::{bail, Result};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
 
 use sira_finn::accel::{compile_qnn, CompileOptions, TailStyle};
-use sira_finn::coordinator::{BatchPolicy, Coordinator};
-use sira_finn::engine;
-use sira_finn::executor::Executor;
+use sira_finn::coordinator::BatchPolicy;
 use sira_finn::hw::{EwDtype, ThresholdStyle};
-use sira_finn::models::{self, ZooModel};
+use sira_finn::models;
 use sira_finn::passes::accmin::AccPolicy;
+use sira_finn::serve::{self, LoadSpec, ModelEntry, ModelSpec, Server, ServerConfig};
 use sira_finn::sira::analyze;
 use sira_finn::tensor::Tensor;
 use sira_finn::util::cli::Args;
+use sira_finn::util::json::Json;
 use sira_finn::util::table::Table;
-
-fn zoo_model(name: &str) -> Result<ZooModel> {
-    match name {
-        "tfc" => models::tfc_w2a2(),
-        "cnv" => models::cnv_w2a2(),
-        "rn8" => models::rn8_w3a3(),
-        "mnv1" => models::mnv1_w4a4_scaled(4),
-        "mnv1-full" => models::mnv1_w4a4(),
-        other => bail!("unknown model '{other}' (tfc|cnv|rn8|mnv1|mnv1-full)"),
-    }
-}
 
 fn parse_opts(args: &Args) -> Result<CompileOptions> {
     let tail = match args.get_or("tail", "thresholding") {
@@ -60,7 +55,7 @@ fn parse_opts(args: &Args) -> Result<CompileOptions> {
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {
-    let m = zoo_model(args.get_or("model", "tfc"))?;
+    let m = models::by_name(args.get_or("model", "tfc"))?;
     let a = analyze(&m.graph, &m.input_ranges)?;
     let mut t = Table::new(&["Tensor", "lo", "hi", "int?", "scale", "bits"]);
     for node in m.graph.topo_nodes()? {
@@ -92,7 +87,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 }
 
 fn cmd_compile(args: &Args) -> Result<()> {
-    let m = zoo_model(args.get_or("model", "tfc"))?;
+    let m = models::by_name(args.get_or("model", "tfc"))?;
     let opts = parse_opts(args)?;
     let c = compile_qnn(m.graph, &m.input_ranges, &opts)?;
     println!("compiled {} with {:?} / {:?}", m.name, opts.tail_style, opts.acc_policy);
@@ -129,72 +124,158 @@ fn cmd_compile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let m = zoo_model(args.get_or("model", "tfc"))?;
-    let workers = args.get_usize("workers", 4)?;
-    let n = args.get_usize("requests", 256)?;
-    let threads = args.get_usize("threads", 1)?;
+/// One [`ModelSpec`] from the shared serve flags (`--engine`,
+/// `--streamline`, `--threads`, `--pipeline`, `--workers`) — the same
+/// backend-selection rules for the in-process loop and the network
+/// server, built through the serving registry in both cases.
+fn spec_from_args(name: &str, args: &Args) -> Result<ModelSpec> {
     let pipeline = args.get_usize("pipeline", 1)?;
-    // --streamline only makes sense on the engine path: imply --engine
-    let engine_mode = args.flag("engine") || args.flag("streamline") || pipeline > 1;
-    let shape = m.input_shape.clone();
-    let coord = if engine_mode {
-        // direct engine serve path: plan-compiled integer runtime with a
-        // persistent worker pool; --pipeline N swaps the batched workers
-        // for one stage thread per plan segment
-        let mut g = m.graph.clone();
-        let analysis = if args.flag("streamline") {
-            engine::prepare_streamlined(&mut g, &m.input_ranges)?
-        } else {
-            analyze(&g, &m.input_ranges)?
-        };
-        let mut plan = engine::compile(&g, &analysis)?;
-        plan.set_threads(threads);
-        println!(
-            "backend: plan engine ({}{}, threads={threads}) — {}",
-            m.name,
-            if args.flag("streamline") { ", streamlined" } else { "" },
-            plan.stats()
-        );
-        if pipeline > 1 {
-            let sp = engine::SegmentedPlan::new(plan, pipeline);
-            println!("pipeline: {}", sp.describe());
-            Coordinator::start_pipelined(sp, BatchPolicy::default())
-        } else {
-            Coordinator::start_batched(workers, BatchPolicy::default(), move || {
-                let mut p = plan.clone();
-                move |xs: &[Tensor]| p.run_batch(xs)
-            })
-        }
-    } else {
-        println!("backend: graph executor ({})", m.name);
-        let g = std::sync::Arc::new(m.graph);
-        Coordinator::start(workers, BatchPolicy::default(), move || {
-            let g = std::sync::Arc::clone(&g);
-            move |x: &Tensor| {
-                let mut e = Executor::new(&g)?;
-                Ok(e.run_single(x)?.remove(0))
-            }
-        })
+    Ok(ModelSpec {
+        name: name.to_string(),
+        // --streamline / --pipeline only make sense on the engine path:
+        // imply --engine
+        engine: args.flag("engine") || args.flag("streamline") || pipeline > 1,
+        streamline: args.flag("streamline"),
+        threads: args.get_usize("threads", 1)?,
+        pipeline,
+        workers: args.get_usize("workers", 4)?,
+    })
+}
+
+fn batch_policy(args: &Args) -> Result<BatchPolicy> {
+    Ok(BatchPolicy {
+        max_batch: args.get_usize("batch", 8)?,
+        ..Default::default()
+    })
+}
+
+fn opt_ms(args: &Args, key: &str) -> Result<Option<u64>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.parse()?)),
+    }
+}
+
+/// `serve --listen ADDR`: the network front end ([`sira_finn::serve`]).
+/// Runs until a client POSTs `/admin/shutdown`, then drains gracefully
+/// and prints the final per-model metrics via the shared JSON emitter.
+fn cmd_serve_network(args: &Args, listen: &str) -> Result<()> {
+    let names: Vec<String> = args
+        .get_or("models", args.get_or("model", "tfc"))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let specs = names
+        .iter()
+        .map(|n| spec_from_args(n, args))
+        .collect::<Result<Vec<_>>>()?;
+    let cfg = ServerConfig {
+        listen: listen.to_string(),
+        specs,
+        policy: batch_policy(args)?,
+        max_pending: args.get_usize("max-pending", 256)?,
+        default_deadline: opt_ms(args, "deadline-ms")?.map(Duration::from_millis),
+        ..Default::default()
     };
+    let server = Server::start(cfg)?;
+    println!("listening on http://{}", server.addr());
+    for e in server.registry().entries() {
+        println!("  model {}: {}", e.spec.name, e.describe);
+    }
+    println!(
+        "routes: POST /v1/models/{{name}}/infer | GET /metrics | GET /v1/models | \
+         POST /admin/shutdown (graceful drain)"
+    );
+    server.wait_for_shutdown_request();
+    println!("shutdown requested; draining in-flight work");
+    let (drained, final_metrics) = server.shutdown_with_report();
+    println!("{final_metrics}");
+    println!("drained={drained}");
+    Ok(())
+}
+
+/// `serve` without `--listen`: the original in-process synthetic
+/// request loop, now built through the same registry as the network
+/// path so the two backends cannot drift.
+fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(listen) = args.get("listen") {
+        return cmd_serve_network(args, listen);
+    }
+    let n = args.get_usize("requests", 256)?;
+    let spec = spec_from_args(args.get_or("model", "tfc"), args)?;
+    let entry = ModelEntry::build(&spec, batch_policy(args)?)?;
+    println!("backend: {}", entry.describe);
+    let shape = entry.input_shape.clone();
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..n)
-        .map(|i| coord.submit(Tensor::full(&shape, (i % 255) as f64)).unwrap())
+        .map(|i| {
+            entry
+                .coordinator
+                .submit(Tensor::full(&shape, (i % 255) as f64))
+                .unwrap()
+        })
         .collect();
     for h in handles {
         h.recv().unwrap()?;
     }
     let dt = t0.elapsed();
-    let (p50, p95, p99) = coord.metrics.percentiles();
     println!(
-        "{} requests in {:.2?} -> {:.1} req/s (workers={workers})",
+        "{} requests in {:.2?} -> {:.1} req/s (workers={})",
         n,
         dt,
-        n as f64 / dt.as_secs_f64()
+        n as f64 / dt.as_secs_f64(),
+        spec.workers
     );
-    println!("latency p50 {p50} us, p95 {p95} us, p99 {p99} us");
-    print!("{}", coord.metrics.segment_summary(dt));
-    coord.shutdown();
+    // machine-readable summary: the same emitter /metrics serves
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::Str("serve".to_string())),
+            ("model", Json::Str(spec.name.clone())),
+            ("metrics", entry.coordinator.metrics.json_report(dt)),
+        ])
+    );
+    print!("{}", entry.coordinator.metrics.segment_summary(dt));
+    entry.coordinator.shutdown();
+    Ok(())
+}
+
+/// `loadgen`: drive a running serve front end over loopback (or any
+/// reachable address) and print the client-side latency/throughput
+/// report as one JSON line.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("loadgen needs --addr HOST:PORT (start one with serve --listen)"))?;
+    let spec = LoadSpec {
+        addr: addr.to_string(),
+        model: args.get_or("model", "tfc").to_string(),
+        conns: args.get_usize("conns", 4)?,
+        requests: args.get_usize("requests", 256)?,
+        batch: args.get_usize("batch", 1)?,
+        rate: match args.get("rate") {
+            None => None,
+            Some(v) => Some(v.parse()?),
+        },
+        deadline_ms: opt_ms(args, "deadline-ms")?,
+        seed: args.get_u64("seed", 0x10AD)?,
+    };
+    let report = serve::loadgen::run(&spec)?;
+    println!("{}", report.json());
+    if args.flag("metrics") {
+        let mut c = serve::http::Client::connect(addr)?;
+        let (status, body) = c.get("/metrics")?;
+        if status == 200 {
+            println!("{}", String::from_utf8_lossy(&body));
+        } else {
+            bail!("GET /metrics returned {status}");
+        }
+    }
+    if args.flag("shutdown") {
+        let mut c = serve::http::Client::connect(addr)?;
+        c.request("POST", "/admin/shutdown", &[], b"")?;
+    }
     Ok(())
 }
 
@@ -204,17 +285,18 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help", "engine", "streamline"])?;
+    let args = Args::from_env(&["help", "engine", "streamline", "metrics", "shutdown"])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "analyze" => cmd_analyze(&args),
         "compile" => cmd_compile(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "e2e" => cmd_e2e(&args),
         _ => {
             println!(
                 "sira-finn — SIRA-enhanced FDNA compiler\n\
-                 usage: sira-finn <analyze|compile|serve|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
+                 usage: sira-finn <analyze|compile|serve|loadgen|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
                  serve: --workers N (coordinator workers) --requests N\n\
                  \x20      --engine      serve the plan-compiled integer runtime\n\
                  \x20      --streamline  streamline first (implies --engine)\n\
@@ -222,6 +304,15 @@ fn main() -> Result<()> {
                  \x20                    (sample-sharded batches + row-sharded MVUs)\n\
                  \x20      --pipeline N  pipeline-parallel serving over N plan\n\
                  \x20                    segments (implies --engine)\n\
+                 \x20      --listen ADDR serve over HTTP instead of the in-process loop\n\
+                 \x20                    (--models tfc,cnv --max-pending N --deadline-ms N;\n\
+                 \x20                    stop with POST /admin/shutdown)\n\
+                 loadgen: --addr HOST:PORT --model NAME --conns N --requests N\n\
+                 \x20      --batch K     samples per request\n\
+                 \x20      --rate R      open-loop at R req/s (default: closed loop)\n\
+                 \x20      --deadline-ms N  per-request budget (x-deadline-ms)\n\
+                 \x20      --metrics     fetch and print GET /metrics after the run\n\
+                 \x20      --shutdown    POST /admin/shutdown after the run\n\
                  see README.md"
             );
             Ok(())

@@ -233,6 +233,27 @@ pub fn mnv1_w4a4() -> Result<ZooModel> {
     mnv1_w4a4_scaled(1)
 }
 
+/// CLI-facing names accepted by [`by_name`], in presentation order.
+pub const ZOO_NAMES: &[&str] = &["tfc", "cnv", "rn8", "mnv1", "mnv1-full"];
+
+/// Resolve a CLI model name to its zoo builder — the single name→model
+/// lookup shared by `sira-finn` (analyze/compile/serve/loadgen), the
+/// serving registry and `examples/serve.rs`, so the binaries' model
+/// tables cannot drift.
+pub fn by_name(name: &str) -> Result<ZooModel> {
+    match name {
+        "tfc" => tfc_w2a2(),
+        "cnv" => cnv_w2a2(),
+        "rn8" => rn8_w3a3(),
+        "mnv1" => mnv1_w4a4_scaled(4),
+        "mnv1-full" => mnv1_w4a4(),
+        other => anyhow::bail!(
+            "unknown model '{other}' (expected one of: {})",
+            ZOO_NAMES.join("|")
+        ),
+    }
+}
+
 /// All four paper workloads (MNv1 at reduced 56x56 resolution by default
 /// for tractable end-to-end benches; the graph structure, channel counts
 /// and parameter tensors are identical to the full model).

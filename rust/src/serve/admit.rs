@@ -1,0 +1,258 @@
+//! Admission control for the serving front end: a bounded pending-work
+//! gate with load-shed, per-request deadline budgets, and the drain
+//! handshake graceful shutdown uses.
+//!
+//! The coordinator's submit channel is unbounded by design (the batcher
+//! wants to see everything that has arrived), so overload protection
+//! lives one layer up: every HTTP inference request must acquire an
+//! admission permit for its sample count before any job is submitted.
+//! When the gate is full the request is shed immediately with HTTP 503 —
+//! bounded queueing delay for admitted work beats unbounded latency for
+//! everyone, which is also how the FDNA hardware this models behaves
+//! (backpressure at the input FIFO, not silent buffering).
+//!
+//! Units are **samples**, not requests: a 8-sample batch request holds 8
+//! units, so `max_pending` bounds the actual compute backlog regardless
+//! of how clients shape their batches. A request larger than the whole
+//! bound is admitted only when the gate is idle (it could never run
+//! otherwise).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Why a request was not admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// the pending-work gate is at capacity — classic load-shed
+    Full { pending: usize, max_pending: usize },
+    /// the server is draining for shutdown; no new work is accepted
+    Draining,
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitError::Full {
+                pending,
+                max_pending,
+            } => write!(
+                f,
+                "server overloaded: {pending} samples pending (limit {max_pending}), try again"
+            ),
+            AdmitError::Draining => write!(f, "server is draining for shutdown"),
+        }
+    }
+}
+
+/// RAII permit for `n` admitted samples; releases on drop.
+pub struct Permit<'a> {
+    gate: &'a Admission,
+    n: usize,
+}
+
+impl Permit<'_> {
+    pub fn samples(&self) -> usize {
+        self.n
+    }
+}
+
+impl fmt::Debug for Permit<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Permit({} samples)", self.n)
+    }
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.gate.pending.fetch_sub(self.n, Ordering::AcqRel);
+    }
+}
+
+/// The bounded admission gate.
+pub struct Admission {
+    max_pending: usize,
+    pending: AtomicUsize,
+    draining: AtomicBool,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(max_pending: usize) -> Admission {
+        Admission {
+            max_pending: max_pending.max(1),
+            pending: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to admit `n` samples. On success the returned [`Permit`] must
+    /// be held for as long as the work is in flight — admission is what
+    /// graceful drain waits on.
+    pub fn try_acquire(&self, n: usize) -> Result<Permit<'_>, AdmitError> {
+        if self.draining.load(Ordering::Acquire) {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmitError::Draining);
+        }
+        let res = self.pending.fetch_update(
+            Ordering::AcqRel,
+            Ordering::Acquire,
+            |p| {
+                // an oversized request (n > max_pending) is admitted
+                // only from idle, so it can run at all without letting
+                // two of them stack up
+                if p > 0 && p + n > self.max_pending {
+                    None
+                } else {
+                    Some(p + n)
+                }
+            },
+        );
+        match res {
+            Ok(_) => {
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Permit { gate: self, n })
+            }
+            Err(p) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(AdmitError::Full {
+                    pending: p,
+                    max_pending: self.max_pending,
+                })
+            }
+        }
+    }
+
+    /// Stop admitting new work (requests now shed with `Draining`).
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Block until every admitted sample has released its permit, or the
+    /// timeout passes. Returns whether the gate fully drained.
+    pub fn await_drain(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.pending.load(Ordering::Acquire) > 0 {
+            if t0.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        true
+    }
+
+    /// Samples currently admitted and in flight.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Requests admitted since start.
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed (full or draining) since start.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Gate state for the `/metrics` report.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("max_pending", Json::Num(self.max_pending as f64)),
+            ("pending", Json::Num(self.pending() as f64)),
+            ("admitted", Json::Num(self.admitted_total() as f64)),
+            ("shed", Json::Num(self.shed_total() as f64)),
+            ("draining", Json::Bool(self.is_draining())),
+        ])
+    }
+}
+
+/// Resolve a request's absolute deadline: an explicit per-request budget
+/// (the `x-deadline-ms` header) overrides the server default; `None`
+/// everywhere means no deadline. A zero budget is already expired — the
+/// canonical "drop this unless it can run immediately" probe.
+pub fn deadline_in(budget_ms: Option<u64>, default: Option<Duration>) -> Option<Instant> {
+    match budget_ms {
+        Some(ms) => Some(Instant::now() + Duration::from_millis(ms)),
+        None => default.map(|d| Instant::now() + d),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_the_bound_and_sheds_past_it() {
+        let g = Admission::new(8);
+        let a = g.try_acquire(5).unwrap();
+        let b = g.try_acquire(3).unwrap();
+        assert_eq!(g.pending(), 8);
+        let err = g.try_acquire(1).unwrap_err();
+        assert!(matches!(err, AdmitError::Full { pending: 8, .. }), "{err}");
+        drop(a);
+        assert_eq!(g.pending(), 3);
+        let c = g.try_acquire(4).unwrap();
+        drop(b);
+        drop(c);
+        assert_eq!(g.pending(), 0);
+        assert_eq!(g.admitted_total(), 3);
+        assert_eq!(g.shed_total(), 1);
+    }
+
+    #[test]
+    fn oversized_requests_only_run_from_idle() {
+        let g = Admission::new(4);
+        // idle: a request bigger than the whole gate is still served
+        let big = g.try_acquire(9).unwrap();
+        assert_eq!(g.pending(), 9);
+        // but nothing else gets in next to it
+        assert!(g.try_acquire(1).is_err());
+        drop(big);
+        assert!(g.try_acquire(1).is_ok());
+    }
+
+    #[test]
+    fn drain_sheds_new_work_and_waits_for_permits() {
+        let g = Admission::new(8);
+        let held = g.try_acquire(2).unwrap();
+        g.begin_drain();
+        assert_eq!(g.try_acquire(1).unwrap_err(), AdmitError::Draining);
+        assert!(!g.await_drain(Duration::from_millis(5)), "held permit");
+        drop(held);
+        assert!(g.await_drain(Duration::from_millis(100)));
+        assert!(g.is_draining());
+    }
+
+    #[test]
+    fn deadline_budget_resolution() {
+        assert!(deadline_in(None, None).is_none());
+        let d = deadline_in(Some(0), None).unwrap();
+        assert!(d <= Instant::now());
+        let d = deadline_in(None, Some(Duration::from_secs(5))).unwrap();
+        assert!(d > Instant::now());
+        // explicit budget wins over the default
+        let d = deadline_in(Some(0), Some(Duration::from_secs(500))).unwrap();
+        assert!(d <= Instant::now() + Duration::from_secs(1));
+    }
+
+    #[test]
+    fn json_snapshot_schema() {
+        let g = Admission::new(16);
+        let _p = g.try_acquire(3).unwrap();
+        let j = g.json();
+        assert_eq!(j.get("pending").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("max_pending").unwrap().as_usize().unwrap(), 16);
+        assert!(!j.get("draining").unwrap().as_bool().unwrap());
+    }
+}

@@ -1,0 +1,417 @@
+//! Minimal hand-rolled HTTP/1.1 (std only — no hyper offline): exactly
+//! the subset the serving front end needs. Request-line/header/body
+//! parsing with `content-length` framing, keep-alive connection reuse,
+//! and a matching client used by the loopback load generator and the
+//! integration tests. No chunked transfer, no TLS, no HTTP/2 — those are
+//! recorded as explicit non-goals in ROADMAP.md.
+//!
+//! Framing rules implemented (the load-bearing parts of RFC 9112):
+//! * request line `METHOD target HTTP/1.x`, headers until an empty line,
+//!   then exactly `content-length` body bytes (0 when absent);
+//! * header names are case-insensitive (lowercased on parse);
+//! * HTTP/1.1 connections persist unless `connection: close`; HTTP/1.0
+//!   connections close unless `connection: keep-alive`;
+//! * hard limits on header-line, header-block and body sizes so a
+//!   misbehaving client cannot make the server allocate unboundedly.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Longest accepted single header/request line, in bytes.
+pub const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Largest accepted header block (request line + all headers).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Largest accepted request body. Generous for batch inference payloads
+/// (an 8-sample CNV batch is ~0.5 MB of JSON) while still bounding a
+/// hostile `content-length`.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// path component of the request target (query string stripped)
+    pub path: String,
+    /// raw query string after `?`, empty when absent
+    pub query: String,
+    /// `HTTP/1.1` or `HTTP/1.0`
+    pub version: String,
+    /// header (name, value) pairs, names lowercased
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value for `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after this exchange.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self
+            .header("connection")
+            .unwrap_or("")
+            .to_ascii_lowercase();
+        if self.version == "HTTP/1.0" {
+            conn.contains("keep-alive")
+        } else {
+            !conn.contains("close")
+        }
+    }
+
+    /// Parse the body as JSON.
+    pub fn body_json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|e| anyhow!("request body is not UTF-8: {e}"))?;
+        Json::parse(text)
+    }
+}
+
+/// Read one line (including the terminator) with a hard length cap.
+/// io errors keep their source (`anyhow::Context`), so the server can
+/// tell an idle-timeout/torn connection from a protocol violation.
+fn read_line_limited(r: &mut impl BufRead, out: &mut String, limit: usize) -> Result<usize> {
+    let mut lim = r.take(limit as u64 + 1);
+    let n = lim.read_line(out).context("reading header line")?;
+    if n > limit {
+        bail!("header line exceeds {limit} bytes");
+    }
+    Ok(n)
+}
+
+/// Read one request off a buffered connection. `Ok(None)` means the peer
+/// closed a kept-alive connection cleanly between requests (EOF before
+/// the first request byte); any mid-request EOF or malformed framing is
+/// an error.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
+    let mut line = String::new();
+    if read_line_limited(r, &mut line, MAX_LINE_BYTES)? == 0 {
+        return Ok(None);
+    }
+    let start = line.trim_end_matches(['\r', '\n']);
+    let mut parts = start.split(' ').filter(|s| !s.is_empty());
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow!("request line missing target: {start:?}"))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow!("request line missing HTTP version: {start:?}"))?
+        .to_string();
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version {version:?}");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = Vec::new();
+    let mut header_bytes = start.len();
+    loop {
+        let mut h = String::new();
+        if read_line_limited(r, &mut h, MAX_LINE_BYTES)? == 0 {
+            bail!("connection closed inside the header block");
+        }
+        let h = h.trim_end_matches(['\r', '\n']);
+        if h.is_empty() {
+            break;
+        }
+        header_bytes += h.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            bail!("header block exceeds {MAX_HEADER_BYTES} bytes");
+        }
+        let (k, v) = h
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed header line {h:?}"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let mut req = Request {
+        method,
+        path,
+        query,
+        version,
+        headers,
+        body: Vec::new(),
+    };
+    let len = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad content-length {v:?}"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        bail!("body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit");
+    }
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)
+            .with_context(|| format!("reading {len}-byte body"))?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// One response, written with explicit `content-length` framing.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// JSON response with the given status.
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.to_string().into_bytes(),
+        }
+    }
+
+    /// JSON error envelope: `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+    }
+
+    /// Canonical reason phrase for the status codes this server emits.
+    pub fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
+            _ => "Response",
+        }
+    }
+
+    /// Serialize status line + headers + body onto the wire.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            self.status,
+            Response::reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Read one response off a buffered connection: `(status, body)`.
+/// Client-side mirror of [`read_request`], same framing rules.
+pub fn read_response(r: &mut impl BufRead) -> Result<(u16, Vec<u8>)> {
+    let mut line = String::new();
+    if read_line_limited(r, &mut line, MAX_LINE_BYTES)? == 0 {
+        bail!("connection closed before the status line");
+    }
+    let start = line.trim_end_matches(['\r', '\n']);
+    let mut parts = start.split(' ').filter(|s| !s.is_empty());
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version {version:?}");
+    }
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow!("status line missing code: {start:?}"))?
+        .parse()
+        .map_err(|_| anyhow!("bad status code in {start:?}"))?;
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if read_line_limited(r, &mut h, MAX_LINE_BYTES)? == 0 {
+            bail!("connection closed inside the response headers");
+        }
+        let h = h.trim_end_matches(['\r', '\n']);
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad content-length {v:?}"))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("response body of {content_length} bytes exceeds the limit");
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|e| anyhow!("reading {content_length}-byte response body: {e}"))?;
+    Ok((status, body))
+}
+
+/// A keep-alive HTTP client over one TCP connection — what the loopback
+/// load generator and the integration tests drive the server with.
+/// Reads are buffered; writes go straight to the socket.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream),
+        })
+    }
+
+    /// One request/response exchange; the connection stays usable
+    /// afterwards (keep-alive).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>)> {
+        let s = self.reader.get_mut();
+        write!(
+            s,
+            "{method} {path} HTTP/1.1\r\nhost: loopback\r\ncontent-length: {}\r\n",
+            body.len()
+        )?;
+        for (k, v) in headers {
+            write!(s, "{k}: {v}\r\n")?;
+        }
+        write!(s, "\r\n")?;
+        s.write_all(body)?;
+        s.flush()?;
+        read_response(&mut self.reader)
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<(u16, Vec<u8>)> {
+        self.request("GET", path, &[], b"")
+    }
+
+    /// POST a JSON body; returns the status and the parsed JSON reply.
+    pub fn post_json(
+        &mut self,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &Json,
+    ) -> Result<(u16, Json)> {
+        let (status, bytes) = self.request("POST", path, headers, body.to_string().as_bytes())?;
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| anyhow!("response body is not UTF-8: {e}"))?;
+        Ok((status, Json::parse(text)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Option<Request>> {
+        read_request(&mut Cursor::new(raw.to_vec()))
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse(
+            b"POST /v1/models/tfc/infer?trace=1 HTTP/1.1\r\n\
+              Host: x\r\nContent-Length: 4\r\nX-Deadline-Ms: 250\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/models/tfc/infer");
+        assert_eq!(req.query, "trace=1");
+        assert_eq!(req.header("x-deadline-ms"), Some("250"));
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn keep_alive_semantics() {
+        let r = parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive());
+        let r = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive(), "HTTP/1.0 defaults to close");
+        let r = parse(b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_torn_requests_error() {
+        assert!(parse(b"").unwrap().is_none());
+        assert!(parse(b"GET / HTTP/1.1\r\nHost: x\r\n").is_err()); // EOF mid-headers
+        assert!(parse(b"GET / HTTP/1.1\r\nContent-Length: 9\r\n\r\nabc").is_err()); // short body
+        assert!(parse(b"GARBAGE\r\n\r\n").is_err()); // no target/version
+        assert!(parse(b"GET / SPDY/3\r\n\r\n").is_err()); // wrong protocol
+        assert!(parse(b"GET / HTTP/1.1\r\nContent-Length: nine\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn oversized_lines_are_rejected() {
+        let mut raw = b"GET /".to_vec();
+        raw.extend(vec![b'a'; MAX_LINE_BYTES + 10]);
+        raw.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert!(parse(&raw).is_err());
+    }
+
+    #[test]
+    fn two_keep_alive_requests_on_one_connection() {
+        let raw =
+            b"GET /healthz HTTP/1.1\r\n\r\nPOST /x HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi".to_vec();
+        let mut cur = Cursor::new(raw);
+        let a = read_request(&mut cur).unwrap().unwrap();
+        assert_eq!(a.path, "/healthz");
+        let b = read_request(&mut cur).unwrap().unwrap();
+        assert_eq!(b.body, b"hi");
+        assert!(read_request(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn response_roundtrips_through_the_client_reader() {
+        let resp = Response::json(503, &Json::obj(vec![("error", Json::Str("full".into()))]));
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let (status, body) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 503);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "full");
+    }
+
+    #[test]
+    fn reason_phrases_cover_the_emitted_codes() {
+        for code in [200u16, 400, 404, 405, 413, 500, 503, 504] {
+            assert!(!Response::reason(code).is_empty());
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! Loopback load generator: drive a running serve front end over real
+//! sockets and report client-observed latency percentiles + throughput,
+//! so serving performance joins the benchmark trajectory next to the
+//! kernel-level numbers.
+//!
+//! Two modes:
+//! * **closed loop** (default) — each connection fires its next request
+//!   the moment the previous response lands: measures the server's
+//!   capacity at a fixed concurrency.
+//! * **open loop** (`rate`) — requests are fired on a fixed global
+//!   schedule regardless of response progress, and latency is measured
+//!   from the *scheduled* send time, so queueing delay under overload is
+//!   charged to the server instead of silently omitted (the coordinated-
+//!   omission correction).
+//!
+//! Responses are classified by status: 200 ok, 503 shed (admission
+//! load-shed or drain), 504 expired (deadline), anything else failed.
+//! The JSON report renders latency through the shared percentile emitter
+//! ([`crate::util::stats::percentile_json`]) — the same schema the
+//! server's own `/metrics` uses.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::http::Client;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// server address, e.g. `127.0.0.1:8080`
+    pub addr: String,
+    /// model to target (`POST /v1/models/{model}/infer`)
+    pub model: String,
+    /// concurrent keep-alive connections
+    pub conns: usize,
+    /// total requests across all connections
+    pub requests: usize,
+    /// samples per request body
+    pub batch: usize,
+    /// open-loop target rate in requests/s across all connections;
+    /// `None` selects closed-loop mode
+    pub rate: Option<f64>,
+    /// per-request deadline budget sent as `x-deadline-ms`
+    pub deadline_ms: Option<u64>,
+    /// seed for the synthetic request payloads
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            addr: String::new(),
+            model: "tfc".to_string(),
+            conns: 2,
+            requests: 64,
+            batch: 1,
+            rate: None,
+            deadline_ms: None,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Aggregated client-side results of one run.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub mode: &'static str,
+    pub model: String,
+    pub conns: usize,
+    pub requests: usize,
+    pub batch: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub expired: usize,
+    pub failed: usize,
+    pub wall: Duration,
+    /// per-request latency of successful requests, microseconds
+    pub latencies_us: Vec<u64>,
+}
+
+impl LoadReport {
+    /// Successful requests per second over the run's wall time.
+    pub fn throughput_rps(&self) -> f64 {
+        self.ok as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Successful *samples* per second (requests × batch).
+    pub fn throughput_sps(&self) -> f64 {
+        self.throughput_rps() * self.batch as f64
+    }
+
+    /// One JSON line (`{"bench":"loadgen",...}`) with counters,
+    /// throughput and the shared-schema latency percentiles.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("loadgen".to_string())),
+            ("mode", Json::Str(self.mode.to_string())),
+            ("model", Json::Str(self.model.clone())),
+            ("conns", Json::Num(self.conns as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("wall_ms", Json::Num(self.wall.as_secs_f64() * 1e3)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("throughput_sps", Json::Num(self.throughput_sps())),
+            ("latency_us", stats::percentile_json(&self.latencies_us)),
+        ])
+    }
+}
+
+/// Ask the server for the model's per-sample input shape
+/// (`GET /v1/models`), so payloads match without hardcoding the zoo.
+pub fn fetch_input_shape(addr: &str, model: &str) -> Result<Vec<usize>> {
+    let mut c = Client::connect(addr)?;
+    let (status, body) = c.get("/v1/models")?;
+    if status != 200 {
+        anyhow::bail!("GET /v1/models returned {status}");
+    }
+    let v = Json::parse(std::str::from_utf8(&body)?)?;
+    for m in v.get("models")?.as_arr()? {
+        if m.get("name")?.as_str()? == model {
+            return m.get("input_shape")?.as_usize_vec();
+        }
+    }
+    anyhow::bail!("server does not serve model '{model}'")
+}
+
+/// Pre-render a small pool of request bodies (seeded, uint8-valued
+/// samples) so JSON generation stays out of the timed loop.
+fn payload_pool(spec: &LoadSpec, numel: usize) -> Vec<String> {
+    let mut rng = Rng::new(spec.seed);
+    (0..8)
+        .map(|_| {
+            let samples: Vec<Json> = (0..spec.batch)
+                .map(|_| {
+                    Json::nums(&(0..numel).map(|_| rng.int_in(0, 255) as f64).collect::<Vec<_>>())
+                })
+                .collect();
+            Json::obj(vec![("inputs", Json::Arr(samples))]).to_string()
+        })
+        .collect()
+}
+
+/// Per-thread tallies, merged after join.
+#[derive(Default)]
+struct Tally {
+    ok: usize,
+    shed: usize,
+    expired: usize,
+    failed: usize,
+    latencies_us: Vec<u64>,
+}
+
+impl Tally {
+    fn classify(&mut self, status: u16, latency: Duration) {
+        match status {
+            200 => {
+                self.ok += 1;
+                self.latencies_us.push(latency.as_micros() as u64);
+            }
+            503 => self.shed += 1,
+            504 => self.expired += 1,
+            _ => self.failed += 1,
+        }
+    }
+}
+
+/// Run one load-generation pass against a live server.
+pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
+    let shape = fetch_input_shape(&spec.addr, &spec.model)?;
+    let numel: usize = shape.iter().product();
+    let bodies = Arc::new(payload_pool(spec, numel));
+    let path = format!("/v1/models/{}/infer", spec.model);
+    let deadline_hdr = spec.deadline_ms.map(|ms| ms.to_string());
+    let conns = spec.conns.max(1);
+    let interval = spec.rate.map(|r| Duration::from_secs_f64(1.0 / r.max(1e-9)));
+
+    let t0 = Instant::now();
+    let tallies: Vec<Tally> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(conns);
+        for c in 0..conns {
+            let bodies = Arc::clone(&bodies);
+            let path = &path;
+            let addr = &spec.addr;
+            let deadline_hdr = deadline_hdr.as_deref();
+            handles.push(s.spawn(move || -> Result<Tally> {
+                let mut client = Client::connect(addr)?;
+                let mut tally = Tally::default();
+                let mut j = c;
+                while j < spec.requests {
+                    let sched = match interval {
+                        // open loop: request j fires at t0 + j*interval
+                        Some(iv) => {
+                            let at = t0 + iv.mul_f64(j as f64);
+                            let now = Instant::now();
+                            if at > now {
+                                std::thread::sleep(at - now);
+                            }
+                            at
+                        }
+                        None => Instant::now(),
+                    };
+                    let headers: Vec<(&str, &str)> = match deadline_hdr {
+                        Some(v) => vec![("x-deadline-ms", v)],
+                        None => Vec::new(),
+                    };
+                    let body = &bodies[j % bodies.len()];
+                    let (status, _reply) =
+                        client.request("POST", path, &headers, body.as_bytes())?;
+                    tally.classify(status, sched.elapsed());
+                    j += conns;
+                }
+                Ok(tally)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow!("loadgen thread panicked"))?)
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall = t0.elapsed();
+
+    let mut report = LoadReport {
+        mode: if interval.is_some() { "open" } else { "closed" },
+        model: spec.model.clone(),
+        conns,
+        requests: spec.requests,
+        batch: spec.batch,
+        ok: 0,
+        shed: 0,
+        expired: 0,
+        failed: 0,
+        wall,
+        latencies_us: Vec::new(),
+    };
+    for t in tallies {
+        report.ok += t.ok;
+        report.shed += t.shed;
+        report.expired += t.expired;
+        report.failed += t.failed;
+        report.latencies_us.extend(t.latencies_us);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_schema() {
+        let r = LoadReport {
+            mode: "closed",
+            model: "tfc".into(),
+            conns: 2,
+            requests: 10,
+            batch: 4,
+            ok: 9,
+            shed: 1,
+            expired: 0,
+            failed: 0,
+            wall: Duration::from_millis(90),
+            latencies_us: vec![100, 200, 300],
+        };
+        let j = r.json();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "loadgen");
+        assert_eq!(j.get("ok").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(j.get("shed").unwrap().as_usize().unwrap(), 1);
+        assert!(j.get("throughput_rps").unwrap().as_f64().unwrap() > 99.0);
+        assert!((r.throughput_sps() - 4.0 * r.throughput_rps()).abs() < 1e-9);
+        assert_eq!(
+            j.get("latency_us").unwrap().get("count").unwrap().as_usize().unwrap(),
+            3
+        );
+    }
+
+    #[test]
+    fn payload_pool_matches_batch_and_numel() {
+        let spec = LoadSpec {
+            batch: 3,
+            ..Default::default()
+        };
+        let pool = payload_pool(&spec, 5);
+        assert_eq!(pool.len(), 8);
+        for body in &pool {
+            let v = Json::parse(body).unwrap();
+            let samples = v.get("inputs").unwrap().as_arr().unwrap();
+            assert_eq!(samples.len(), 3);
+            for s in samples {
+                assert_eq!(s.as_f64_vec().unwrap().len(), 5);
+            }
+        }
+        // seeded: two pools from the same spec are identical
+        assert_eq!(pool, payload_pool(&spec, 5));
+    }
+}

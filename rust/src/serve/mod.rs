@@ -1,0 +1,531 @@
+//! `serve`: the std-only network serving subsystem — bytes on a socket
+//! to the plan-compiled integer engine and back.
+//!
+//! Until this module existed, every "serving" surface was an in-process
+//! synthetic request loop: no socket ever opened, so the coordinator's
+//! dynamic batcher, the pipelined [`crate::engine::SegmentedPlan`] and
+//! the tiled engine had never seen real concurrent clients, overload or
+//! deadlines. Following FINN-R's argument that a quantized-accelerator
+//! stack is only as good as its end-to-end deployment, this is a real
+//! request path, built entirely on `std::net` plus the crate's own JSON
+//! (`tokio`/`hyper`/`serde` are unavailable offline):
+//!
+//! * [`http`] — a hand-rolled HTTP/1.1 subset: request/response framing
+//!   with `content-length`, keep-alive, hard input limits, and the
+//!   matching client the load generator and tests use.
+//! * [`registry`] — the multi-model registry: engine `Plan`s compiled
+//!   once per model at startup (raw or streamlined, per-model
+//!   thread/pipeline budgets), each behind its own
+//!   [`Coordinator`](crate::coordinator::Coordinator); requests route
+//!   by name via `POST /v1/models/{name}/infer`.
+//! * [`admit`] — admission control: a bounded pending-sample gate that
+//!   sheds overload with HTTP 503 instead of queueing unboundedly,
+//!   per-request deadline budgets (`x-deadline-ms`) that drop expired
+//!   work *before* it reaches a batch (HTTP 504), and the drain
+//!   handshake graceful shutdown waits on.
+//! * [`loadgen`] — the loopback load generator (`sira-finn loadgen`):
+//!   open- and closed-loop client fleets reporting p50/p95/p99 and
+//!   throughput as JSON lines.
+//!
+//! Routes: `GET /healthz`, `GET /metrics` (machine-readable
+//! [`Metrics::json_report`](crate::coordinator::Metrics::json_report)
+//! per model + admission counters), `GET /v1/models`,
+//! `POST /v1/models/{name}/infer`, `POST /admin/shutdown` (begin
+//! graceful drain). Request bodies carry `{"inputs": [[...], ...]}`
+//! (one flat f64 array per sample) or `{"input": [...]}`; replies carry
+//! `{"outputs": [[...], ...]}` bit-exact against
+//! [`Plan::run_batch`](crate::engine::Plan::run_batch) — f64 values
+//! survive the JSON round trip exactly (shortest-roundtrip formatting on
+//! write, exact parse on read), which the loopback integration test
+//! (`rust/tests/serve_loopback.rs`) locks.
+//!
+//! Concurrency model: one accept loop, one thread per connection
+//! (plenty for a CPU inference server whose real concurrency bound is
+//! the engine pool), coordinator worker threads per model. Connection
+//! threads are detached; graceful shutdown is gated on *admitted work*
+//! (the permit gate), not on connection count, so an idle kept-alive
+//! connection can never stall a drain.
+
+pub mod admit;
+pub mod http;
+pub mod loadgen;
+pub mod registry;
+
+pub use admit::{Admission, AdmitError};
+pub use loadgen::{LoadReport, LoadSpec};
+pub use registry::{ModelEntry, ModelSpec, Registry};
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{BatchPolicy, DEADLINE_EXCEEDED, SHUT_DOWN, WORKERS_GONE};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use http::{Request, Response};
+
+/// Server construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// bind address; port 0 picks a free port (see [`Server::addr`])
+    pub listen: String,
+    /// models to compile and serve
+    pub specs: Vec<ModelSpec>,
+    /// dynamic-batching policy shared by every model's coordinator
+    pub policy: BatchPolicy,
+    /// admission bound, in *samples* across all models
+    pub max_pending: usize,
+    /// default per-request deadline when no `x-deadline-ms` is sent
+    pub default_deadline: Option<Duration>,
+    /// per-connection idle read timeout
+    pub idle_timeout: Duration,
+    /// how long graceful shutdown waits for admitted work to finish
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            specs: vec![ModelSpec::engine_default("tfc")],
+            policy: BatchPolicy::default(),
+            max_pending: 256,
+            default_deadline: None,
+            idle_timeout: Duration::from_secs(60),
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared server state: what every connection thread sees.
+struct ServerCtx {
+    registry: Registry,
+    admit: Admission,
+    default_deadline: Option<Duration>,
+    /// set by `POST /admin/shutdown`;
+    /// [`Server::wait_for_shutdown_request`] polls it
+    shutdown_requested: AtomicBool,
+    started: Instant,
+}
+
+/// A running serving front end.
+pub struct Server {
+    addr: SocketAddr,
+    ctx: Arc<ServerCtx>,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    drain_timeout: Duration,
+}
+
+impl Server {
+    /// Compile the registry, bind the listener and start accepting.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let registry = Registry::build(&cfg.specs, cfg.policy)?;
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| anyhow!("binding {}: {e}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        let ctx = Arc::new(ServerCtx {
+            registry,
+            admit: Admission::new(cfg.max_pending),
+            default_deadline: cfg.default_deadline,
+            shutdown_requested: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_handle = {
+            let ctx = Arc::clone(&ctx);
+            let stop = Arc::clone(&stop);
+            let idle = cfg.idle_timeout;
+            std::thread::spawn(move || accept_loop(listener, &stop, &ctx, idle))
+        };
+        Ok(Server {
+            addr,
+            ctx,
+            stop,
+            accept_handle: Some(accept_handle),
+            drain_timeout: cfg.drain_timeout,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.ctx.registry
+    }
+
+    pub fn admission(&self) -> &Admission {
+        &self.ctx.admit
+    }
+
+    /// Whether a client has requested `POST /admin/shutdown`.
+    pub fn shutdown_requested(&self) -> bool {
+        self.ctx.shutdown_requested.load(Ordering::Acquire)
+    }
+
+    /// Block until a client requests shutdown over HTTP (the CLI's
+    /// foreground loop; no signal handling exists in offline std).
+    pub fn wait_for_shutdown_request(&self) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, shed new work, wait for every
+    /// admitted sample to finish (bounded by `drain_timeout`), then
+    /// drain and join the model coordinators. Returns whether the
+    /// admission gate fully drained in time.
+    pub fn shutdown(mut self) -> bool {
+        self.shutdown_impl()
+    }
+
+    /// [`Server::shutdown`], then a final `/metrics`-schema snapshot
+    /// taken *after* the drain — so work that completed during the
+    /// drain window is included (what the CLI prints on exit).
+    pub fn shutdown_with_report(mut self) -> (bool, Json) {
+        let drained = self.shutdown_impl();
+        (drained, metrics_json(&self.ctx))
+    }
+
+    fn shutdown_impl(&mut self) -> bool {
+        let Some(handle) = self.accept_handle.take() else {
+            return true; // already shut down
+        };
+        self.stop.store(true, Ordering::Release);
+        // poke the blocking accept() so the loop observes `stop`
+        let _ = TcpStream::connect(self.addr);
+        let _ = handle.join();
+        self.ctx.admit.begin_drain();
+        let drained = self.ctx.admit.await_drain(self.drain_timeout);
+        self.ctx.registry.shutdown();
+        drained
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: &AtomicBool, ctx: &Arc<ServerCtx>, idle: Duration) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept error
+        };
+        let ctx = Arc::clone(ctx);
+        // detached on purpose: drain is gated on admitted work, not on
+        // connection threads (an idle keep-alive must not stall it)
+        std::thread::spawn(move || handle_connection(stream, &ctx, idle));
+    }
+}
+
+fn handle_connection(stream: TcpStream, ctx: &ServerCtx, idle: Duration) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(idle)).ok();
+    stream.set_write_timeout(Some(idle)).ok();
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // peer closed between requests
+            Err(e) => {
+                // io-rooted failures (idle timeout, torn connection)
+                // close silently — writing a framed 400 would
+                // desynchronize a keep-alive client's next exchange.
+                // Genuine protocol violations get the best-effort 400.
+                if e.root_cause().downcast_ref::<std::io::Error>().is_none() {
+                    let resp = Response::error(400, &format!("{e:#}"));
+                    let _ = resp.write_to(reader.get_mut(), false);
+                }
+                return;
+            }
+        };
+        let keep = req.keep_alive();
+        let resp = route(ctx, &req);
+        if resp.write_to(reader.get_mut(), keep).is_err() {
+            return;
+        }
+        if !keep {
+            return;
+        }
+    }
+}
+
+/// Dispatch one request to its handler.
+fn route(ctx: &ServerCtx, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(
+            200,
+            &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "uptime_ms",
+                    Json::Num(ctx.started.elapsed().as_secs_f64() * 1e3),
+                ),
+                ("draining", Json::Bool(ctx.admit.is_draining())),
+            ]),
+        ),
+        ("GET", "/metrics") => Response::json(200, &metrics_json(ctx)),
+        ("GET", "/v1/models") => Response::json(200, &ctx.registry.models_json()),
+        ("POST", "/admin/shutdown") => {
+            ctx.admit.begin_drain();
+            ctx.shutdown_requested.store(true, Ordering::Release);
+            Response::json(200, &Json::obj(vec![("draining", Json::Bool(true))]))
+        }
+        (method, path) => {
+            let infer_target = path
+                .strip_prefix("/v1/models/")
+                .and_then(|rest| rest.strip_suffix("/infer"));
+            match infer_target {
+                Some(model) if method == "POST" => handle_infer(ctx, model, req),
+                Some(_) => Response::error(405, "inference requires POST"),
+                None => Response::error(404, &format!("no route for {method} {path}")),
+            }
+        }
+    }
+}
+
+/// `GET /metrics`: admission gate counters plus one shared-schema
+/// metrics report per model — all machine-readable, no prose.
+fn metrics_json(ctx: &ServerCtx) -> Json {
+    Json::obj(vec![
+        (
+            "uptime_ms",
+            Json::Num(ctx.started.elapsed().as_secs_f64() * 1e3),
+        ),
+        ("admission", ctx.admit.json()),
+        ("models", ctx.registry.metrics_json()),
+    ])
+}
+
+/// Extract the request's sample list: `{"inputs": [[...], ...]}` or the
+/// single-sample shorthand `{"input": [...]}`.
+fn parse_samples(body: &Json) -> Result<Vec<Vec<f64>>> {
+    if let Some(inputs) = body.opt("inputs") {
+        inputs.as_arr()?.iter().map(|s| s.as_f64_vec()).collect()
+    } else if let Some(single) = body.opt("input") {
+        Ok(vec![single.as_f64_vec()?])
+    } else {
+        bail!("body must carry 'inputs' (array of samples) or 'input' (one sample)")
+    }
+}
+
+/// Map coordinator/engine error text onto HTTP semantics: deadline
+/// drops are 504, shutdown/drain races are 503 (retryable), everything
+/// else is a 500.
+fn error_response(msg: &str) -> Response {
+    if msg.contains(DEADLINE_EXCEEDED) {
+        Response::error(504, msg)
+    } else if msg.contains(SHUT_DOWN) || msg.contains(WORKERS_GONE) {
+        Response::error(503, msg)
+    } else {
+        Response::error(500, msg)
+    }
+}
+
+/// `POST /v1/models/{name}/infer`.
+fn handle_infer(ctx: &ServerCtx, model: &str, req: &Request) -> Response {
+    let Some(entry) = ctx.registry.get(model) else {
+        return Response::error(
+            404,
+            &format!(
+                "unknown model '{model}' (served: {})",
+                ctx.registry.names().join(", ")
+            ),
+        );
+    };
+    let body = match req.body_json() {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
+    };
+    let samples = match parse_samples(&body) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if samples.is_empty() {
+        return Response::error(400, "empty batch");
+    }
+    for (i, s) in samples.iter().enumerate() {
+        if s.len() != entry.input_numel {
+            return Response::error(
+                400,
+                &format!(
+                    "sample {i} has {} elements, model '{model}' wants {} (shape {:?})",
+                    s.len(),
+                    entry.input_numel,
+                    entry.input_shape
+                ),
+            );
+        }
+    }
+    let budget_ms = match req.header("x-deadline-ms") {
+        None => None,
+        Some(v) => match v.trim().parse::<u64>() {
+            Ok(ms) => Some(ms),
+            Err(_) => return Response::error(400, &format!("bad x-deadline-ms {v:?}")),
+        },
+    };
+    let deadline = admit::deadline_in(budget_ms, ctx.default_deadline);
+
+    // admission: one unit per sample, held until every reply landed
+    let n = samples.len();
+    let _permit = match ctx.admit.try_acquire(n) {
+        Ok(p) => p,
+        Err(e) => return Response::error(503, &e.to_string()),
+    };
+
+    // submit each sample individually — the coordinator's dynamic
+    // batcher coalesces them (and concurrent clients' samples) into
+    // engine batches
+    let mut handles = Vec::with_capacity(n);
+    for data in samples {
+        let t = match Tensor::new(&entry.input_shape, data) {
+            Ok(t) => t,
+            Err(e) => return Response::error(400, &format!("{e:#}")),
+        };
+        match entry.coordinator.submit_at(t, deadline) {
+            Ok(h) => handles.push(h),
+            Err(e) => return error_response(&format!("{e:#}")),
+        }
+    }
+
+    // await every reply before releasing the permit, even on partial
+    // failure — admitted work must stay visible to the drain gate
+    let mut outs = Vec::with_capacity(handles.len());
+    let mut first_err: Option<String> = None;
+    for h in handles {
+        match h.recv() {
+            Ok(Ok(t)) => outs.push(t),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(format!("{e:#}"));
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some("worker dropped the reply channel".to_string());
+                }
+            }
+        }
+    }
+    if let Some(msg) = first_err {
+        return error_response(&msg);
+    }
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("model", Json::Str(model.to_string())),
+            ("batch", Json::Num(outs.len() as f64)),
+            (
+                "output_shape",
+                Json::nums(
+                    &entry
+                        .output_shape
+                        .iter()
+                        .map(|&d| d as f64)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "outputs",
+                Json::Arr(outs.iter().map(|t| Json::nums(t.data())).collect()),
+            ),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::http::Client;
+
+    fn tiny_server(max_pending: usize) -> Server {
+        let cfg = ServerConfig {
+            specs: vec![ModelSpec::engine_default("tfc")],
+            max_pending,
+            ..Default::default()
+        };
+        Server::start(cfg).unwrap()
+    }
+
+    #[test]
+    fn healthz_models_and_infer_roundtrip() {
+        let server = tiny_server(64);
+        let addr = server.addr().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let (status, body) = c.get("/healthz").unwrap();
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap());
+
+        let (status, body) = c.get("/v1/models").unwrap();
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let models = v.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(
+            models[0].get("input_shape").unwrap().as_usize_vec().unwrap(),
+            vec![1, 784]
+        );
+
+        // same keep-alive connection: two inference requests
+        let sample = Json::nums(&[100.0; 784]);
+        let body = Json::obj(vec![("inputs", Json::Arr(vec![sample.clone(), sample]))]);
+        for _ in 0..2 {
+            let (status, reply) = c
+                .post_json("/v1/models/tfc/infer", &[], &body)
+                .unwrap();
+            assert_eq!(status, 200, "{reply}");
+            assert_eq!(reply.get("batch").unwrap().as_usize().unwrap(), 2);
+            let outs = reply.get("outputs").unwrap().as_arr().unwrap();
+            assert_eq!(outs.len(), 2);
+            assert_eq!(outs[0].as_f64_vec().unwrap().len(), 10);
+        }
+        assert!(server.shutdown(), "gate should drain");
+    }
+
+    #[test]
+    fn bad_requests_get_400_class_errors() {
+        let server = tiny_server(64);
+        let addr = server.addr().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        // unknown model
+        let one = Json::obj(vec![("input", Json::nums(&[1.0]))]);
+        let (status, _) = c.post_json("/v1/models/nope/infer", &[], &one).unwrap();
+        assert_eq!(status, 404);
+        // wrong method on an infer route
+        let (status, _) = c.get("/v1/models/tfc/infer").unwrap();
+        assert_eq!(status, 405);
+        // malformed JSON
+        let (status, _) = c
+            .request("POST", "/v1/models/tfc/infer", &[], b"{nope")
+            .unwrap();
+        assert_eq!(status, 400);
+        // wrong sample size
+        let (status, reply) = c.post_json("/v1/models/tfc/infer", &[], &one).unwrap();
+        assert_eq!(status, 400, "{reply}");
+        // bad deadline header
+        let good = Json::obj(vec![("input", Json::nums(&[0.0; 784]))]);
+        let (status, _) = c
+            .post_json("/v1/models/tfc/infer", &[("x-deadline-ms", "soon")], &good)
+            .unwrap();
+        assert_eq!(status, 400);
+        // unknown route
+        let (status, _) = c.get("/nope").unwrap();
+        assert_eq!(status, 404);
+        server.shutdown();
+    }
+}

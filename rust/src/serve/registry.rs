@@ -1,0 +1,287 @@
+//! Multi-model registry: compile an engine [`Plan`] (or stand up the
+//! interpretive executor) for each requested zoo model **once** at
+//! server start, wrap each in its own [`Coordinator`], and route
+//! requests by model name. Per-model serving knobs (streamlining, thread
+//! budget, pipeline segments, worker count) live in [`ModelSpec`], so a
+//! server can host e.g. a pipelined CNV next to a single-threaded TFC.
+//!
+//! Both binaries' serve paths build through this module ([`crate::serve`]
+//! for the network front end, `sira-finn serve` / `examples/serve.rs`
+//! for the in-process loops), so backend construction cannot drift
+//! between them.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{BatchPolicy, Coordinator};
+use crate::engine::{self, SegmentedPlan};
+use crate::executor::Executor;
+use crate::models;
+use crate::sira::analyze;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// How one model should be served.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// zoo name ([`crate::models::by_name`])
+    pub name: String,
+    /// plan-compiled engine (the hot path) vs the interpretive executor
+    pub engine: bool,
+    /// streamline before compiling (pure-integer plan); engine only
+    pub streamline: bool,
+    /// persistent-pool thread budget per plan ([`engine::Plan::set_threads`])
+    pub threads: usize,
+    /// pipeline-parallel segments; >1 serves via
+    /// [`Coordinator::start_pipelined`]
+    pub pipeline: usize,
+    /// coordinator workers (ignored on the pipelined path, which runs
+    /// one stage thread per segment instead)
+    pub workers: usize,
+}
+
+impl ModelSpec {
+    /// The default serving shape: plan engine, raw graph, serial plan,
+    /// two batched workers.
+    pub fn engine_default(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            engine: true,
+            streamline: false,
+            threads: 1,
+            pipeline: 1,
+            workers: 2,
+        }
+    }
+}
+
+/// One served model: its coordinator plus the metadata the HTTP layer
+/// needs to validate and describe requests.
+pub struct ModelEntry {
+    pub spec: ModelSpec,
+    /// per-sample input shape (leading batch dim 1), e.g. `[1, 784]`
+    pub input_shape: Vec<usize>,
+    pub input_numel: usize,
+    /// per-sample output shape; empty when the backend cannot state it
+    /// ahead of time
+    pub output_shape: Vec<usize>,
+    /// one-line backend description (plan composition stats or backend
+    /// name), for logs and `GET /v1/models`
+    pub describe: String,
+    pub coordinator: Coordinator,
+    started: Instant,
+}
+
+impl ModelEntry {
+    /// Compile and start serving one model.
+    pub fn build(spec: &ModelSpec, policy: BatchPolicy) -> Result<ModelEntry> {
+        let m = models::by_name(&spec.name)?;
+        if spec.engine {
+            let mut g = m.graph;
+            let analysis = if spec.streamline {
+                engine::prepare_streamlined(&mut g, &m.input_ranges)?
+            } else {
+                analyze(&g, &m.input_ranges)?
+            };
+            let mut plan = engine::compile(&g, &analysis)?;
+            plan.set_threads(spec.threads);
+            let input_shape = plan.input_shape().to_vec();
+            let input_numel = input_shape.iter().product();
+            let output_shape = plan.output_shape().to_vec();
+            let mut describe = format!(
+                "engine({}{}, threads={}) — {}",
+                m.name,
+                if spec.streamline { ", streamlined" } else { "" },
+                spec.threads,
+                plan.stats()
+            );
+            let coordinator = if spec.pipeline > 1 {
+                let sp = SegmentedPlan::new(plan, spec.pipeline);
+                describe = format!("{describe}; pipeline: {}", sp.describe());
+                Coordinator::start_pipelined(sp, policy)
+            } else {
+                Coordinator::start_batched(spec.workers.max(1), policy, move || {
+                    let mut p = plan.clone();
+                    move |xs: &[Tensor]| p.run_batch(xs)
+                })
+            };
+            Ok(ModelEntry {
+                spec: spec.clone(),
+                input_shape,
+                input_numel,
+                output_shape,
+                describe,
+                coordinator,
+                started: Instant::now(),
+            })
+        } else {
+            let input_shape = m.input_shape.clone();
+            let input_numel = input_shape.iter().product();
+            let output_shape = m
+                .graph
+                .outputs
+                .first()
+                .and_then(|o| m.graph.shapes.get(o))
+                .cloned()
+                .unwrap_or_default();
+            let describe = format!("executor({})", m.name);
+            let g = Arc::new(m.graph);
+            let coordinator = Coordinator::start(spec.workers.max(1), policy, move || {
+                let g = Arc::clone(&g);
+                move |x: &Tensor| {
+                    let mut e = Executor::new(&g)?;
+                    Ok(e.run_single(x)?.remove(0))
+                }
+            });
+            Ok(ModelEntry {
+                spec: spec.clone(),
+                input_shape,
+                input_numel,
+                output_shape,
+                describe,
+                coordinator,
+                started: Instant::now(),
+            })
+        }
+    }
+
+    /// Serving metrics for this model via the shared JSON emitter.
+    pub fn metrics_json(&self) -> Json {
+        self.coordinator.metrics.json_report(self.started.elapsed())
+    }
+
+    /// Model card for `GET /v1/models`.
+    pub fn model_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.spec.name.clone())),
+            (
+                "backend",
+                Json::Str(if self.spec.engine { "engine" } else { "executor" }.to_string()),
+            ),
+            ("streamline", Json::Bool(self.spec.streamline)),
+            ("threads", Json::Num(self.spec.threads as f64)),
+            ("pipeline", Json::Num(self.spec.pipeline as f64)),
+            (
+                "input_shape",
+                Json::nums(&self.input_shape.iter().map(|&d| d as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "output_shape",
+                Json::nums(&self.output_shape.iter().map(|&d| d as f64).collect::<Vec<_>>()),
+            ),
+            ("describe", Json::Str(self.describe.clone())),
+        ])
+    }
+}
+
+/// The registry: name → served model.
+pub struct Registry {
+    entries: BTreeMap<String, ModelEntry>,
+}
+
+impl Registry {
+    /// Compile and start every requested model. Duplicate names are an
+    /// error (they would silently shadow each other's metrics).
+    pub fn build(specs: &[ModelSpec], policy: BatchPolicy) -> Result<Registry> {
+        if specs.is_empty() {
+            bail!("registry needs at least one model");
+        }
+        let mut entries = BTreeMap::new();
+        for spec in specs {
+            if entries.contains_key(&spec.name) {
+                bail!("model '{}' listed twice", spec.name);
+            }
+            entries.insert(spec.name.clone(), ModelEntry::build(spec, policy)?);
+        }
+        Ok(Registry { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.entries.values()
+    }
+
+    /// `GET /v1/models` payload.
+    pub fn models_json(&self) -> Json {
+        Json::obj(vec![(
+            "models",
+            Json::Arr(self.entries.values().map(|e| e.model_json()).collect()),
+        )])
+    }
+
+    /// Per-model serving metrics, one shared-schema report each.
+    pub fn metrics_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(k, e)| (k.clone(), e.metrics_json()))
+                .collect(),
+        )
+    }
+
+    /// Graceful: drain and join every coordinator. Requests submitted
+    /// afterwards fail with the coordinator's clean shutdown error.
+    pub fn shutdown(&self) {
+        for e in self.entries.values() {
+            e.coordinator.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_routes_a_model() {
+        let reg = Registry::build(
+            &[ModelSpec::engine_default("tfc")],
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let e = reg.get("tfc").unwrap();
+        assert_eq!(e.input_shape, vec![1, 784]);
+        assert_eq!(e.input_numel, 784);
+        assert_eq!(e.output_shape, vec![1, 10]);
+        let y = e
+            .coordinator
+            .infer(Tensor::full(&[1, 784], 100.0))
+            .unwrap();
+        assert_eq!(y.shape(), &[1, 10]);
+        assert!(reg.get("cnv").is_none());
+        let cards = reg.models_json();
+        let arr = cards.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "tfc");
+        reg.shutdown();
+        // post-shutdown submits fail cleanly (the drain contract)
+        let err = e
+            .coordinator
+            .infer(Tensor::full(&[1, 784], 1.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn duplicate_and_unknown_names_are_errors() {
+        let two = [
+            ModelSpec::engine_default("tfc"),
+            ModelSpec::engine_default("tfc"),
+        ];
+        assert!(Registry::build(&two, BatchPolicy::default()).is_err());
+        let bogus = [ModelSpec::engine_default("nope")];
+        let err = Registry::build(&bogus, BatchPolicy::default()).unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
+        assert!(Registry::build(&[], BatchPolicy::default()).is_err());
+    }
+}

@@ -1,7 +1,44 @@
 //! Small statistics helpers: summary statistics, histograms and ordinary
 //! least-squares linear regression (used to fit the analytical cost models
 //! of §5.4 against the structural synthesis estimator, mirroring the
-//! paper's regression over Vivado out-of-context runs).
+//! paper's regression over Vivado out-of-context runs), plus the shared
+//! percentile-summary JSON emitter used by every serving-metrics surface
+//! (`/metrics`, `sira-finn loadgen`, `examples/serve.rs`).
+
+use crate::util::json::Json;
+
+/// (p50, p95, p99) of integer-valued samples (latency microseconds,
+/// batch occupancies, ...). Sorts a copy; (0, 0, 0) when empty.
+pub fn percentiles_u64(samples: &[u64]) -> (u64, u64, u64) {
+    if samples.is_empty() {
+        return (0, 0, 0);
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let pick = |p: f64| v[((v.len() - 1) as f64 * p) as usize];
+    (pick(0.50), pick(0.95), pick(0.99))
+}
+
+/// The single percentile/occupancy JSON emitter shared by the HTTP
+/// `/metrics` endpoint, the loopback load generator and the serve
+/// example: `{count, mean, p50, p95, p99}` over integer samples. Every
+/// machine-readable latency/occupancy report goes through here so the
+/// schema cannot drift between surfaces.
+pub fn percentile_json(samples: &[u64]) -> Json {
+    let (p50, p95, p99) = percentiles_u64(samples);
+    let mean = if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<u64>() as f64 / samples.len() as f64
+    };
+    Json::obj(vec![
+        ("count", Json::Num(samples.len() as f64)),
+        ("mean", Json::Num(mean)),
+        ("p50", Json::Num(p50 as f64)),
+        ("p95", Json::Num(p95 as f64)),
+        ("p99", Json::Num(p99 as f64)),
+    ])
+}
 
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -117,5 +154,23 @@ mod tests {
     fn histogram_counts() {
         let h = int_histogram(&[8, 8, 10, 24]);
         assert_eq!(h, vec![(8, 2), (10, 1), (24, 1)]);
+    }
+
+    #[test]
+    fn percentiles_ordering_and_empty() {
+        assert_eq!(percentiles_u64(&[]), (0, 0, 0));
+        let v: Vec<u64> = (1..=100).collect();
+        let (p50, p95, p99) = percentiles_u64(&v);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(p50, 50);
+        assert_eq!(p99, 99);
+    }
+
+    #[test]
+    fn percentile_json_schema() {
+        let j = percentile_json(&[10, 20, 30, 40]);
+        assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("mean").unwrap().as_f64().unwrap(), 25.0);
+        assert!(j.get("p50").unwrap().as_f64().unwrap() <= j.get("p99").unwrap().as_f64().unwrap());
     }
 }

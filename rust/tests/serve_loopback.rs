@@ -1,0 +1,336 @@
+//! Loopback integration tests for the network serving subsystem
+//! (`sira_finn::serve`): a real server on `127.0.0.1:0`, real TCP
+//! clients, and the full contract from ISSUE 5 —
+//!
+//! * concurrent clients × {tfc, cnv} × mixed batch sizes get responses
+//!   **bit-exact** against a direct [`Plan::run_batch`] on the same
+//!   inputs (f64 values survive the JSON round trip exactly);
+//! * overload yields 503 load-shed without wedging the server;
+//! * deadline-expired requests fail with the timeout error (504) before
+//!   any engine runs them;
+//! * graceful shutdown drains in-flight work, and post-shutdown
+//!   requests fail cleanly.
+
+use std::time::{Duration, Instant};
+
+use sira_finn::coordinator::BatchPolicy;
+use sira_finn::engine;
+use sira_finn::models;
+use sira_finn::serve::http::Client;
+use sira_finn::serve::{ModelSpec, Server, ServerConfig};
+use sira_finn::sira::analyze;
+use sira_finn::tensor::Tensor;
+use sira_finn::util::json::Json;
+use sira_finn::util::rng::Rng;
+
+/// A server on an ephemeral loopback port serving the given models on
+/// the engine backend.
+fn start_server(names: &[&str], threads: usize, max_pending: usize) -> Server {
+    let specs: Vec<ModelSpec> = names
+        .iter()
+        .map(|n| ModelSpec {
+            threads,
+            ..ModelSpec::engine_default(n)
+        })
+        .collect();
+    let cfg = ServerConfig {
+        specs,
+        max_pending,
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        ..Default::default()
+    };
+    Server::start(cfg).unwrap()
+}
+
+/// A reference plan compiled exactly like the server's (raw graph,
+/// engine backend) — thread count is irrelevant to the bits.
+fn reference_plan(name: &str) -> engine::Plan {
+    let m = models::by_name(name).unwrap();
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    engine::compile(&m.graph, &analysis).unwrap()
+}
+
+fn random_samples(rng: &mut Rng, numel: usize, batch: usize) -> Vec<Vec<f64>> {
+    (0..batch)
+        .map(|_| (0..numel).map(|_| rng.int_in(0, 255) as f64).collect())
+        .collect()
+}
+
+fn infer_body(samples: &[Vec<f64>]) -> Json {
+    Json::obj(vec![(
+        "inputs",
+        Json::Arr(samples.iter().map(|s| Json::nums(s)).collect()),
+    )])
+}
+
+/// N concurrent client threads × two models × mixed batch sizes, every
+/// response compared element-exact against `Plan::run_batch`.
+#[test]
+fn loopback_is_bit_exact_vs_run_batch() {
+    let server = start_server(&["tfc", "cnv"], 2, 1024);
+    let addr = server.addr().to_string();
+    let shapes = [("tfc", 784usize), ("cnv", 3 * 32 * 32)];
+    let batch_sizes = [1usize, 3, 8];
+
+    type Recorded = (String, Vec<Vec<f64>>, Vec<Vec<f64>>);
+    let recorded: Vec<Recorded> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..3usize {
+            for (model, numel) in shapes {
+                let addr = addr.clone();
+                handles.push(s.spawn(move || {
+                    let mut rng = Rng::new(0x5EEF + t as u64 * 131 + numel as u64);
+                    let mut client = Client::connect(&addr).unwrap();
+                    let path = format!("/v1/models/{model}/infer");
+                    let mut out: Vec<Recorded> = Vec::new();
+                    for round in 0..3usize {
+                        let b = batch_sizes[(t + round) % batch_sizes.len()];
+                        let samples = random_samples(&mut rng, numel, b);
+                        let (status, reply) =
+                            client.post_json(&path, &[], &infer_body(&samples)).unwrap();
+                        assert_eq!(status, 200, "{reply}");
+                        let outputs: Vec<Vec<f64>> = reply
+                            .get("outputs")
+                            .unwrap()
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|o| o.as_f64_vec().unwrap())
+                            .collect();
+                        assert_eq!(outputs.len(), b);
+                        out.push((model.to_string(), samples, outputs));
+                    }
+                    out
+                }));
+            }
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    });
+
+    // replay every request against a local plan: element-exact
+    let mut plans = std::collections::BTreeMap::new();
+    for (model, _) in shapes {
+        let plan = reference_plan(model);
+        let shape = plan.input_shape().to_vec();
+        plans.insert(model.to_string(), (plan, shape));
+    }
+    let mut total_samples = 0usize;
+    for (model, samples, outputs) in &recorded {
+        let (plan, shape) = plans.get_mut(model).unwrap();
+        let shape = shape.clone();
+        let xs: Vec<Tensor> = samples
+            .iter()
+            .map(|s| Tensor::new(&shape, s.clone()).unwrap())
+            .collect();
+        let want = plan.run_batch(&xs).unwrap();
+        assert_eq!(want.len(), outputs.len());
+        for (w, got) in want.iter().zip(outputs) {
+            assert_eq!(
+                w.data(),
+                got.as_slice(),
+                "served output differs from Plan::run_batch for {model}"
+            );
+        }
+        total_samples += samples.len();
+    }
+
+    // the server-side metrics saw exactly that many samples
+    let mut c = Client::connect(&addr).unwrap();
+    let (status, body) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let models_j = v.get("models").unwrap();
+    let completed: usize = ["tfc", "cnv"]
+        .iter()
+        .map(|m| {
+            models_j
+                .get(m)
+                .unwrap()
+                .get("completed")
+                .unwrap()
+                .as_usize()
+                .unwrap()
+        })
+        .sum();
+    assert_eq!(completed, total_samples);
+    assert_eq!(
+        v.get("admission").unwrap().get("shed").unwrap().as_usize().unwrap(),
+        0,
+        "no load-shed expected at this pending bound"
+    );
+    assert!(server.shutdown(), "drain must complete");
+}
+
+/// Overload: a tight admission bound sheds concurrent batch requests
+/// with 503 (`cnv` batches are slow enough to overlap), and the server
+/// keeps serving afterwards.
+#[test]
+fn overload_sheds_503_without_wedging() {
+    // max_pending 4 < batch 8: an 8-sample request is only admitted
+    // from idle, so any overlapping request is deterministically shed
+    let server = start_server(&["cnv"], 1, 4);
+    let addr = server.addr().to_string();
+    let numel = 3 * 32 * 32;
+
+    let (ok, shed): (usize, usize) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..6usize {
+            let addr = addr.clone();
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::new(0xBAD + t as u64);
+                let mut client = Client::connect(&addr).unwrap();
+                let (mut ok, mut shed) = (0usize, 0usize);
+                for _ in 0..2 {
+                    let samples = random_samples(&mut rng, numel, 8);
+                    let (status, reply) = client
+                        .post_json("/v1/models/cnv/infer", &[], &infer_body(&samples))
+                        .unwrap();
+                    match status {
+                        200 => ok += 1,
+                        503 => {
+                            assert!(
+                                reply.get("error").unwrap().as_str().unwrap().contains("overload"),
+                                "{reply}"
+                            );
+                            shed += 1;
+                        }
+                        other => panic!("unexpected status {other}: {reply}"),
+                    }
+                }
+                (ok, shed)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |(a, b), (c, d)| (a + c, b + d))
+    });
+    assert_eq!(ok + shed, 12);
+    assert!(ok >= 1, "at least the first arrival must be admitted");
+    assert!(shed >= 1, "overlapping batch-8 requests must shed at cap 4");
+
+    // not wedged: a fresh request succeeds once the burst is over
+    let mut rng = Rng::new(0xAF7E);
+    let mut client = Client::connect(&addr).unwrap();
+    let samples = random_samples(&mut rng, numel, 1);
+    let (status, reply) = client
+        .post_json("/v1/models/cnv/infer", &[], &infer_body(&samples))
+        .unwrap();
+    assert_eq!(status, 200, "{reply}");
+    // the shed counter made it into /metrics
+    let (status, body) = client.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(
+        v.get("admission").unwrap().get("shed").unwrap().as_usize().unwrap() >= shed,
+        "shed counter must be visible in /metrics"
+    );
+    server.shutdown();
+}
+
+/// Deadline budgets: an already-expired budget (`x-deadline-ms: 0`)
+/// fails with 504 and the deadline error before any engine runs; the
+/// server keeps serving and counts the expiry.
+#[test]
+fn expired_deadlines_get_504_and_server_keeps_serving() {
+    let server = start_server(&["tfc"], 1, 64);
+    let addr = server.addr().to_string();
+    let mut rng = Rng::new(0xDEAD);
+    let mut client = Client::connect(&addr).unwrap();
+    let samples = random_samples(&mut rng, 784, 2);
+    let (status, reply) = client
+        .post_json(
+            "/v1/models/tfc/infer",
+            &[("x-deadline-ms", "0")],
+            &infer_body(&samples),
+        )
+        .unwrap();
+    assert_eq!(status, 504, "{reply}");
+    assert!(
+        reply.get("error").unwrap().as_str().unwrap().contains("deadline exceeded"),
+        "{reply}"
+    );
+    // a generous budget on the same connection still succeeds
+    let (status, reply) = client
+        .post_json(
+            "/v1/models/tfc/infer",
+            &[("x-deadline-ms", "60000")],
+            &infer_body(&samples),
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{reply}");
+    // expiries are visible in the model's metrics
+    let (status, body) = client.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let tfc = v.get("models").unwrap().get("tfc").unwrap();
+    assert_eq!(tfc.get("expired").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(tfc.get("completed").unwrap().as_usize().unwrap(), 2);
+    server.shutdown();
+}
+
+/// Graceful shutdown: in-flight admitted work completes before the
+/// coordinators drain; afterwards the port is closed.
+#[test]
+fn graceful_shutdown_drains_in_flight_work() {
+    let server = start_server(&["cnv"], 1, 64);
+    let addr = server.addr().to_string();
+    let numel = 3 * 32 * 32;
+
+    let client_thread = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(0xD7A1);
+            let mut client = Client::connect(&addr).unwrap();
+            let samples = random_samples(&mut rng, numel, 8);
+            client
+                .post_json("/v1/models/cnv/infer", &[], &infer_body(&samples))
+                .unwrap()
+        })
+    };
+    // wait until that request is admitted (or already finished), then
+    // begin the drain while it may still be in flight
+    let t0 = Instant::now();
+    while server.admission().admitted_total() == 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(server.shutdown(), "drain must complete within the timeout");
+    let (status, reply) = client_thread.join().unwrap();
+    assert_eq!(status, 200, "in-flight work must finish during drain: {reply}");
+    // the listener is gone: new connections are refused
+    assert!(
+        std::net::TcpStream::connect(addr.as_str()).is_err(),
+        "post-shutdown connections must fail"
+    );
+}
+
+/// `POST /admin/shutdown` flips the drain flag and sheds new work with
+/// the draining error while the server finishes what it admitted.
+#[test]
+fn admin_shutdown_begins_drain() {
+    let server = start_server(&["tfc"], 1, 64);
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    assert!(!server.shutdown_requested());
+    let (status, _) = client.request("POST", "/admin/shutdown", &[], b"").unwrap();
+    assert_eq!(status, 200);
+    assert!(server.shutdown_requested());
+    // new work is shed while draining
+    let mut rng = Rng::new(0x0FF);
+    let samples = random_samples(&mut rng, 784, 1);
+    let (status, reply) = client
+        .post_json("/v1/models/tfc/infer", &[], &infer_body(&samples))
+        .unwrap();
+    assert_eq!(status, 503, "{reply}");
+    assert!(
+        reply.get("error").unwrap().as_str().unwrap().contains("draining"),
+        "{reply}"
+    );
+    server.shutdown();
+}

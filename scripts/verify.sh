@@ -31,7 +31,13 @@ SIRA_DIFF_SEED=53759 cargo test --release --test engine_differential -q
 echo "== kernel property suite: tiled vs scalar MAC cores (relcheck profile, fixed seed) =="
 SIRA_KERNEL_SEED=90210 cargo test --profile relcheck --test kernel_properties -q
 
-echo "== perf_hotpath batch-8 gate, plain + pipelined + tiled MVU (>25% engine regression fails) =="
+# Release build: the loopback suite runs real CNV inference batches
+# behind real sockets; debug-profile engine math would dominate the
+# wall clock without testing anything extra.
+echo "== serve loopback suite: HTTP front end, bit-exactness, 503 shed, deadlines, drain =="
+cargo test --release --test serve_loopback -q
+
+echo "== perf_hotpath batch-8 gate, plain + pipelined + tiled MVU + serve loopback (>25% engine regression fails) =="
 # Baselines are machine-relative: gate against a machine-local copy under
 # target/ (never committed), seeded from the checked-in schema/config in
 # BENCH_baseline.json. The first run on a fresh machine records its own
