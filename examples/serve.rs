@@ -8,9 +8,10 @@
 //!   cannot drift. Add `--streamline` to serve the streamlined
 //!   (pure-integer) form of the model, `--threads N` to let each
 //!   worker's plan shard its drained batch across the persistent
-//!   N-thread pool, and `--pipeline N` to serve pipeline-parallel over N
+//!   N-thread pool, `--pipeline N` to serve pipeline-parallel over N
 //!   plan segments (batch k+1 enters segment 0 while batch k runs
-//!   segment 1).
+//!   segment 1), and `--profile` to attach the per-step plan profiler
+//!   and print its kernel-cost report after the run.
 //! * default — PJRT artifact (when built with `--features pjrt` and
 //!   `make artifacts` ran), else the sidecar graph on the interpretive
 //!   executor, else the zoo graph on the executor.
@@ -39,7 +40,7 @@ use sira_finn::util::json::Json;
 use sira_finn::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["executor", "engine", "streamline"])?;
+    let args = Args::from_env(&["executor", "engine", "streamline", "profile"])?;
     let n = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
     let policy = BatchPolicy {
@@ -57,7 +58,7 @@ fn main() -> Result<()> {
         && std::path::Path::new("artifacts/model_streamlined.hlo.txt").exists();
     let have_sidecar = std::path::Path::new("artifacts/model_params.json").exists();
 
-    let (coord, input_shape) = if engine_mode {
+    let (coord, input_shape, profiler) = if engine_mode {
         // the registry owns plan compilation + coordinator construction
         // for the engine path (shared with `sira-finn serve`)
         let spec = ModelSpec {
@@ -67,10 +68,11 @@ fn main() -> Result<()> {
             threads: args.get_usize("threads", 1)?,
             pipeline,
             workers,
+            profile: args.flag("profile"),
         };
         let entry = ModelEntry::build(&spec, policy)?;
         println!("backend: {}", entry.describe);
-        (entry.coordinator, entry.input_shape)
+        (entry.coordinator, entry.input_shape, entry.profiler)
     } else if use_pjrt {
         println!("backend: PJRT (streamlined Pallas artifact)");
         let c = Coordinator::start(workers, policy, move || {
@@ -81,7 +83,7 @@ fn main() -> Result<()> {
                 .expect("artifact");
             move |x: &Tensor| Ok(model.run(std::slice::from_ref(x))?.remove(0))
         });
-        (c, vec![1, 3, 8, 8])
+        (c, vec![1, 3, 8, 8], None)
     } else {
         // interpretive executor over whichever graph source is available
         let (graph, shape, label) = if have_sidecar {
@@ -100,7 +102,7 @@ fn main() -> Result<()> {
                 Ok(e.run_single(x)?.remove(0))
             }
         });
-        (c, shape)
+        (c, shape, None)
     };
 
     let numel: usize = input_shape.iter().product();
@@ -137,6 +139,9 @@ fn main() -> Result<()> {
         ])
     );
     print!("{}", coord.metrics.segment_summary(dt));
+    if let Some(p) = &profiler {
+        print!("{}", p.report());
+    }
     coord.shutdown();
     Ok(())
 }

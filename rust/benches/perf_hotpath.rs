@@ -34,6 +34,13 @@
 //! to im2col conv frames, printing one JSON line per (width, shape) with
 //! both timings and the speedup. This is the observable for re-tuning
 //! the `NR`/`MR` tile constants per target CPU (see ROADMAP.md).
+//!
+//! # Per-step plan profile
+//!
+//! `cargo bench --bench perf_hotpath -- --profile` attaches the plan
+//! profiler (sampling every call) and prints one
+//! `{"bench":"profile",...}` JSON line per zoo model: per-step calls,
+//! sampled kernel timings, and the tiled-vs-scalar MAC dispatch counts.
 
 use std::collections::BTreeMap;
 
@@ -237,6 +244,34 @@ fn run_shapes() {
     }
 }
 
+/// `--profile`: per-step plan profile emission — attach the
+/// [`sira_finn::obs::PlanProfiler`] with dense sampling, run a batch-8
+/// workload, and print one `{"bench":"profile",...}` JSON line per zoo
+/// model, so step-level kernel costs join the perf trajectory next to
+/// the aggregate ns/inference numbers (the observable ROADMAP's tile
+/// and layout items steer by).
+fn run_profile() {
+    section("per-step plan profile (engine, b=8, t=1)");
+    let mut rng = Rng::new(0x0BF11E);
+    for zm in [models::tfc_w2a2().unwrap(), models::cnv_w2a2().unwrap()] {
+        let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
+        let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
+        plan.enable_profiling(1);
+        let batch8: Vec<Tensor> =
+            (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
+        for _ in 0..16 {
+            plan.run_batch(&batch8).unwrap();
+        }
+        let report = plan.profiler().expect("profiler attached").report();
+        print!("{report}");
+        println!(
+            "{{\"bench\":\"profile\",\"model\":\"{}\",\"profile\":{}}}",
+            zm.name,
+            report.json()
+        );
+    }
+}
+
 /// Measure the full network serving path ns/sample: a loopback server
 /// (engine backend) driven closed-loop by the in-crate load generator —
 /// sockets, HTTP framing, JSON, admission, dynamic batching and the
@@ -394,12 +429,16 @@ fn run_gate(path: &str) -> i32 {
 fn main() {
     // `cargo bench` appends a bare `--bench` to harness=false targets:
     // accept it as a value-less flag
-    let args = Args::from_env(&["bench", "shapes"]).unwrap();
+    let args = Args::from_env(&["bench", "shapes", "profile"]).unwrap();
     if let Some(path) = args.get("gate") {
         std::process::exit(run_gate(path));
     }
     if args.flag("shapes") {
         run_shapes();
+        return;
+    }
+    if args.flag("profile") {
+        run_profile();
         return;
     }
     let b = Bencher::default();

@@ -22,6 +22,18 @@
 //! tokio is unavailable offline; the coordinator is built on std threads
 //! and mpsc channels (ample for a CPU inference pipeline — the FDNA this
 //! models is itself a synchronous streaming dataflow).
+//!
+//! # Observability
+//!
+//! [`Metrics`] keeps **bounded** state: counters plus fixed-bucket
+//! [`crate::obs::Histogram`]s for latency and batch occupancy (the
+//! unbounded per-request `Vec<u64>` sample logs are gone — a week-long
+//! serve costs the same memory as a one-request one). Count and mean
+//! stay exact; percentiles are bucket-resolution estimates. Jobs carry
+//! an optional request id ([`Coordinator::submit_traced`]); when the
+//! global tracer ([`crate::obs::trace`]) is at debug level, workers emit
+//! `batch_wait` spans per job and `batch_exec`/`segment_exec` spans per
+//! drained batch, each listing the request ids it carried.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,9 +45,10 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::pool::WorkerState;
 use crate::engine::SegmentedPlan;
+use crate::obs::trace::{tracer, Level};
+use crate::obs::Histogram;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
-use crate::util::stats;
 
 /// Error text for requests whose deadline expired before any engine
 /// touched them (see [`Coordinator::submit_at`]). The network serving
@@ -57,12 +70,80 @@ struct Job {
     /// absolute per-request deadline; expired jobs are dropped before
     /// they reach a batch
     deadline: Option<Instant>,
+    /// request id for tracing (`None` for untraced submitters — the id
+    /// is shared, not cloned, on its way through the pipeline)
+    id: Option<Arc<str>>,
     reply: Sender<Result<Tensor>>,
 }
 
 /// Per-request bookkeeping carried alongside a batch through the
 /// pipeline stages.
-type Meta = (Instant, Sender<Result<Tensor>>);
+struct Meta {
+    enqueued: Instant,
+    id: Option<Arc<str>>,
+    reply: Sender<Result<Tensor>>,
+}
+
+impl Meta {
+    fn of(job: Job) -> (Tensor, Meta) {
+        (
+            job.input,
+            Meta {
+                enqueued: job.enqueued,
+                id: job.id,
+                reply: job.reply,
+            },
+        )
+    }
+}
+
+/// Emit one `batch_wait` span per traced job of a freshly drained batch
+/// (time from submit to batch formation). One relaxed load when tracing
+/// is off.
+fn trace_batch_wait(batch: &[Job]) {
+    let t = tracer();
+    if !t.enabled(Level::Debug) {
+        return;
+    }
+    for job in batch {
+        if let Some(id) = &job.id {
+            t.emit(
+                Level::Debug,
+                "span",
+                vec![
+                    ("span", Json::Str("batch_wait".into())),
+                    ("id", Json::Str(id.to_string())),
+                    ("dur_us", Json::Num(job.enqueued.elapsed().as_micros() as f64)),
+                ],
+            );
+        }
+    }
+}
+
+/// Emit one execute span for a batch (`batch_exec` for monolithic
+/// workers, `segment_exec` with a `segment` field for pipeline stages),
+/// listing the request ids the batch carried.
+fn trace_batch_exec(span: &'static str, segment: Option<usize>, b: usize, busy: Duration, metas: &[Meta]) {
+    let t = tracer();
+    if !t.enabled(Level::Debug) {
+        return;
+    }
+    let ids: Vec<Json> = metas
+        .iter()
+        .filter_map(|m| m.id.as_ref())
+        .map(|id| Json::Str(id.to_string()))
+        .collect();
+    let mut fields = vec![
+        ("span", Json::Str(span.into())),
+        ("batch", Json::Num(b as f64)),
+        ("dur_us", Json::Num(busy.as_micros() as f64)),
+        ("ids", Json::Arr(ids)),
+    ];
+    if let Some(s) = segment {
+        fields.push(("segment", Json::Num(s as f64)));
+    }
+    t.emit(Level::Debug, "span", fields);
+}
 
 /// A batch in flight between two pipeline stages: request bookkeeping
 /// plus the segment-boundary carry buffers (moved, never copied).
@@ -93,9 +174,9 @@ fn drop_expired(batch: Vec<Job>, metrics: &Metrics) -> Vec<Job> {
 
 /// Fail every request of a pipelined batch with the same error text.
 fn fail_batch(metrics: &Metrics, metas: Vec<Meta>, msg: &str) {
-    for (enq, reply) in metas {
-        metrics.record(enq.elapsed(), false);
-        let _ = reply.send(Err(anyhow!("{msg}")));
+    for m in metas {
+        metrics.record(m.enqueued.elapsed(), false);
+        let _ = m.reply.send(Err(anyhow!("{msg}")));
     }
 }
 
@@ -109,9 +190,9 @@ fn finish_batch(
 ) {
     match sp.extract(ws, b) {
         Ok(outs) => {
-            for ((enq, reply), out) in metas.into_iter().zip(outs) {
-                metrics.record(enq.elapsed(), true);
-                let _ = reply.send(Ok(out));
+            for (m, out) in metas.into_iter().zip(outs) {
+                metrics.record(m.enqueued.elapsed(), true);
+                let _ = m.reply.send(Ok(out));
             }
         }
         Err(e) => fail_batch(metrics, metas, &format!("{e:#}")),
@@ -129,8 +210,11 @@ pub struct SegmentStat {
     pub busy_us: u64,
 }
 
-/// Aggregated serving metrics.
-#[derive(Debug, Default)]
+/// Aggregated serving metrics. Memory is **bounded**: latency and
+/// occupancy live in fixed-bucket [`Histogram`]s (streaming count/sum
+/// plus one atomic per bucket), never per-request vectors, so the
+/// metrics footprint of a long-running serve is constant.
+#[derive(Debug)]
 pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
@@ -138,11 +222,25 @@ pub struct Metrics {
     /// (a subset of `failed`)
     pub expired: AtomicU64,
     pub batches: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
-    /// requests per executed batch, one entry per batch
-    batch_sizes: Mutex<Vec<u64>>,
+    latency_us: Histogram,
+    /// requests per executed batch, one histogram entry per batch
+    occupancy: Histogram,
     /// per-pipeline-segment occupancy (empty outside pipelined serving)
     segments: Mutex<Vec<SegmentStat>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            latency_us: Histogram::latency_us(),
+            occupancy: Histogram::occupancy(),
+            segments: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl Metrics {
@@ -152,10 +250,7 @@ impl Metrics {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        self.latencies_us
-            .lock()
-            .unwrap()
-            .push(lat.as_micros() as u64);
+        self.latency_us.record(lat.as_micros() as u64);
     }
 
     fn record_expired(&self, enqueued: Instant) {
@@ -165,32 +260,44 @@ impl Metrics {
 
     fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size as u64);
+        self.occupancy.record(size as u64);
     }
 
-    fn percentiles_of(v: &Mutex<Vec<u64>>) -> (u64, u64, u64) {
-        stats::percentiles_u64(&v.lock().unwrap())
-    }
-
-    /// (p50, p95, p99) latency in microseconds.
+    /// (p50, p95, p99) latency in microseconds (bucket-resolution
+    /// estimates, see [`Histogram::percentile`]).
     pub fn percentiles(&self) -> (u64, u64, u64) {
-        Metrics::percentiles_of(&self.latencies_us)
+        (
+            self.latency_us.percentile(0.50),
+            self.latency_us.percentile(0.95),
+            self.latency_us.percentile(0.99),
+        )
     }
 
     /// (p50, p95, p99) batch occupancy — requests per executed batch.
     /// The observable for whether dynamic batching is actually feeding
     /// the batched engine.
     pub fn occupancy_percentiles(&self) -> (u64, u64, u64) {
-        Metrics::percentiles_of(&self.batch_sizes)
+        (
+            self.occupancy.percentile(0.50),
+            self.occupancy.percentile(0.95),
+            self.occupancy.percentile(0.99),
+        )
     }
 
     /// Mean requests per executed batch (0.0 before any batch ran).
+    /// Exact: streaming sum over streaming count.
     pub fn mean_occupancy(&self) -> f64 {
-        let v = self.batch_sizes.lock().unwrap();
-        if v.is_empty() {
-            return 0.0;
-        }
-        v.iter().sum::<u64>() as f64 / v.len() as f64
+        self.occupancy.mean()
+    }
+
+    /// The latency histogram (for Prometheus exposition).
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latency_us
+    }
+
+    /// The batch-occupancy histogram (for Prometheus exposition).
+    pub fn occupancy_histogram(&self) -> &Histogram {
+        &self.occupancy
     }
 
     fn init_segments(&self, n: usize) {
@@ -211,18 +318,21 @@ impl Metrics {
         self.segments.lock().unwrap().clone()
     }
 
-    /// Machine-readable serving report built on the shared percentile
-    /// emitter ([`crate::util::stats::percentile_json`]): request
-    /// counters, throughput against the given wall time, latency and
+    /// Machine-readable serving report in the shared percentile schema
+    /// (`{count, mean, p50, p95, p99}`, the same shape
+    /// [`crate::util::stats::percentile_json`] emits): request counters,
+    /// throughput against the given wall time, latency and
     /// batch-occupancy percentiles, and per-segment pipeline occupancy.
     /// One schema for every surface — the HTTP `/metrics` endpoint,
     /// `sira-finn serve`/`loadgen` and `examples/serve.rs` all render
-    /// this object instead of keeping their own format strings.
+    /// this object instead of keeping their own format strings. Counts
+    /// and means are exact; percentiles are bucket-resolution estimates
+    /// from the fixed-bucket histograms.
     pub fn json_report(&self, wall: Duration) -> Json {
         let completed = self.completed.load(Ordering::Relaxed);
         let wall_s = wall.as_secs_f64().max(1e-9);
-        let latency = stats::percentile_json(&self.latencies_us.lock().unwrap());
-        let occupancy = stats::percentile_json(&self.batch_sizes.lock().unwrap());
+        let latency = self.latency_us.percentile_json();
+        let occupancy = self.occupancy.percentile_json();
         let wall_us = wall.as_micros().max(1) as f64;
         let segments = Json::Arr(
             self.segment_stats()
@@ -370,10 +480,25 @@ impl Coordinator {
                         continue;
                     }
                     metrics.record_batch(batch.len());
+                    trace_batch_wait(&batch);
                     for job in batch {
+                        // per-request engines: time each job's execute
+                        // span individually (only when tracing at debug)
+                        let t0 = tracer().enabled(Level::Debug).then(Instant::now);
                         let result = engine(&job.input);
                         let ok = result.is_ok();
                         metrics.record(job.enqueued.elapsed(), ok);
+                        if let (Some(t0), Some(id)) = (t0, &job.id) {
+                            tracer().emit(
+                                Level::Debug,
+                                "span",
+                                vec![
+                                    ("span", Json::Str("exec".into())),
+                                    ("id", Json::Str(id.to_string())),
+                                    ("dur_us", Json::Num(t0.elapsed().as_micros() as f64)),
+                                ],
+                            );
+                        }
                         let _ = job.reply.send(result);
                     }
                 }
@@ -423,17 +548,21 @@ impl Coordinator {
                         continue;
                     }
                     metrics.record_batch(batch.len());
+                    trace_batch_wait(&batch);
                     let mut inputs = Vec::with_capacity(batch.len());
                     let mut metas = Vec::with_capacity(batch.len());
                     for job in batch {
-                        inputs.push(job.input);
-                        metas.push((job.enqueued, job.reply));
+                        let (input, meta) = Meta::of(job);
+                        inputs.push(input);
+                        metas.push(meta);
                     }
+                    let t0 = Instant::now();
                     match engine(&inputs) {
                         Ok(outs) if outs.len() == inputs.len() => {
-                            for ((enq, reply), out) in metas.into_iter().zip(outs) {
-                                metrics.record(enq.elapsed(), true);
-                                let _ = reply.send(Ok(out));
+                            trace_batch_exec("batch_exec", None, inputs.len(), t0.elapsed(), &metas);
+                            for (m, out) in metas.into_iter().zip(outs) {
+                                metrics.record(m.enqueued.elapsed(), true);
+                                let _ = m.reply.send(Ok(out));
                             }
                         }
                         Ok(outs) => {
@@ -442,17 +571,10 @@ impl Coordinator {
                                 outs.len(),
                                 inputs.len()
                             );
-                            for (enq, reply) in metas {
-                                metrics.record(enq.elapsed(), false);
-                                let _ = reply.send(Err(anyhow!("{msg}")));
-                            }
+                            fail_batch(&metrics, metas, &msg);
                         }
                         Err(e) => {
-                            let msg = format!("{e:#}");
-                            for (enq, reply) in metas {
-                                metrics.record(enq.elapsed(), false);
-                                let _ = reply.send(Err(anyhow!("{msg}")));
-                            }
+                            fail_batch(&metrics, metas, &format!("{e:#}"));
                         }
                     }
                 }
@@ -514,18 +636,20 @@ impl Coordinator {
                         continue;
                     }
                     metrics.record_batch(batch.len());
+                    trace_batch_wait(&batch);
                     let b = batch.len();
                     let mut inputs = Vec::with_capacity(b);
                     let mut metas: Vec<Meta> = Vec::with_capacity(b);
                     for job in batch {
-                        inputs.push(job.input);
-                        metas.push((job.enqueued, job.reply));
+                        let (input, meta) = Meta::of(job);
+                        inputs.push(input);
+                        metas.push(meta);
                     }
                     if let Some(t) = sp.const_output() {
                         // degenerate constant-output plan: no pipeline
-                        for (enq, reply) in metas {
-                            metrics.record(enq.elapsed(), true);
-                            let _ = reply.send(Ok(t.clone()));
+                        for m in metas {
+                            metrics.record(m.enqueued.elapsed(), true);
+                            let _ = m.reply.send(Ok(t.clone()));
                         }
                         continue;
                     }
@@ -538,12 +662,14 @@ impl Coordinator {
                             Some(nx) => {
                                 let carry = sp.take_carry(0, &mut ws);
                                 metrics.record_segment(0, t0.elapsed());
+                                trace_batch_exec("segment_exec", Some(0), b, t0.elapsed(), &metas);
                                 if let Err(lost) = nx.send(StageMsg { metas, b, carry }) {
                                     fail_batch(&metrics, lost.0.metas, "pipeline stage exited");
                                 }
                             }
                             None => {
                                 metrics.record_segment(0, t0.elapsed());
+                                trace_batch_exec("segment_exec", Some(0), b, t0.elapsed(), &metas);
                                 finish_batch(&sp, &ws, b, metas, &metrics);
                             }
                         },
@@ -573,12 +699,14 @@ impl Coordinator {
                             Some(nx) => {
                                 let carry = sp.take_carry(s, &mut ws);
                                 metrics.record_segment(s, t0.elapsed());
+                                trace_batch_exec("segment_exec", Some(s), b, t0.elapsed(), &metas);
                                 if let Err(lost) = nx.send(StageMsg { metas, b, carry }) {
                                     fail_batch(&metrics, lost.0.metas, "pipeline stage exited");
                                 }
                             }
                             None => {
                                 metrics.record_segment(s, t0.elapsed());
+                                trace_batch_exec("segment_exec", Some(s), b, t0.elapsed(), &metas);
                                 finish_batch(&sp, &ws, b, metas, &metrics);
                             }
                         },
@@ -611,6 +739,20 @@ impl Coordinator {
         input: Tensor,
         deadline: Option<Instant>,
     ) -> Result<Receiver<Result<Tensor>>> {
+        self.submit_traced(input, deadline, None)
+    }
+
+    /// [`submit_at`](Self::submit_at) plus a request id: the id rides
+    /// the job through batching (and, in pipelined serving, every
+    /// stage), so `batch_wait` / `batch_exec` / `segment_exec` trace
+    /// spans can attribute coordinator time to the originating HTTP
+    /// request.
+    pub fn submit_traced(
+        &self,
+        input: Tensor,
+        deadline: Option<Instant>,
+        id: Option<Arc<str>>,
+    ) -> Result<Receiver<Result<Tensor>>> {
         // clone the sender under the lock, send outside it: submits
         // never serialize on each other, and a shutdown taking the
         // sender concurrently still lets this job join the final drain
@@ -624,6 +766,7 @@ impl Coordinator {
                 input,
                 enqueued: Instant::now(),
                 deadline,
+                id,
                 reply,
             })
             .map_err(|_| anyhow!(WORKERS_GONE))?;
@@ -1013,6 +1156,63 @@ mod tests {
         let text = j.to_string();
         assert_eq!(Json::parse(&text).unwrap(), j);
         c.shutdown();
+    }
+
+    /// The histogram-backed metrics keep count and mean exact while
+    /// holding constant memory — no per-request vector anywhere.
+    #[test]
+    fn metrics_memory_is_bounded_and_counts_exact() {
+        let m = Metrics::default();
+        for i in 0..10_000u64 {
+            m.record(Duration::from_micros(50 + i % 100), true);
+            m.record_batch(((i % 8) + 1) as usize);
+        }
+        assert_eq!(m.completed.load(Ordering::Relaxed), 10_000);
+        assert_eq!(m.latency_histogram().count(), 10_000);
+        assert_eq!(m.occupancy_histogram().count(), 10_000);
+        // exact mean of 1..=8 cycling occupancies
+        assert!((m.mean_occupancy() - 4.5).abs() < 1e-9, "{}", m.mean_occupancy());
+        let j = m.json_report(Duration::from_secs(1));
+        assert_eq!(j.get("latency_us").unwrap().get("count").unwrap().as_usize().unwrap(), 10_000);
+        let (p50, p95, p99) = m.percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        // every latency was in [50, 150): estimates must stay in-bucket
+        assert!((50..=200).contains(&p50), "p50 {p50}");
+    }
+
+    /// Request ids submitted via `submit_traced` surface in the
+    /// `batch_wait` and `batch_exec` debug spans.
+    #[test]
+    fn request_ids_flow_through_batch_spans() {
+        use crate::obs::trace::MemorySink;
+        let sink = MemorySink::new();
+        let t = tracer();
+        t.set_sink(sink.clone() as Arc<dyn crate::obs::TraceSink>);
+        t.set_level(Level::Debug);
+        let c = Coordinator::start_batched(1, BatchPolicy::default(), || {
+            |xs: &[Tensor]| Ok(xs.to_vec())
+        });
+        let id: Arc<str> = Arc::from("rid-span-test");
+        let h = c.submit_traced(Tensor::scalar(5.0), None, Some(Arc::clone(&id))).unwrap();
+        h.recv().unwrap().unwrap();
+        c.shutdown();
+        t.set_level(Level::Off);
+        t.set_sink(Arc::new(crate::obs::StderrSink));
+        let lines = sink.take();
+        let mine: Vec<Json> = lines
+            .iter()
+            .filter(|l| l.contains("rid-span-test"))
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        let spans: Vec<String> = mine
+            .iter()
+            .map(|j| j.get("span").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(spans.contains(&"batch_wait".to_string()), "spans: {spans:?}");
+        assert!(spans.contains(&"batch_exec".to_string()), "spans: {spans:?}");
+        for j in &mine {
+            assert!(j.get("dur_us").unwrap().as_f64().unwrap() >= 0.0);
+        }
     }
 
     #[test]

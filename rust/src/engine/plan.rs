@@ -56,6 +56,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::executor::execute_op;
 use crate::graph::Op;
+use crate::obs::profile::PlanProfiler;
 use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 
 use super::kernels::{
@@ -365,14 +366,15 @@ impl Step {
 
 /// Immutable execution parameters threaded through a step run: the pool
 /// to submit intra-kernel work items to (None = fully serial), the
-/// intra-kernel thread budget, the sharding gate, and the tiled-kernel
-/// gate.
+/// intra-kernel thread budget, the sharding gate, the tiled-kernel
+/// gate, and the optional step profiler (None = zero-cost).
 #[derive(Clone, Copy)]
 pub(crate) struct ExecCtx<'a> {
     pub pool: Option<&'a WorkerPool>,
     pub kt: usize,
     pub min_work: usize,
     pub min_tile: usize,
+    pub prof: Option<&'a PlanProfiler>,
 }
 
 impl ExecCtx<'_> {
@@ -727,6 +729,32 @@ fn run_conv<T: MacElem>(
 }
 
 impl Step {
+    /// Short kind label for profiling reports: the step family plus the
+    /// accumulator width for MAC steps (`matmul(i32)`, `conv(i64)`), the
+    /// fused micro-op count for elementwise chains (`ew[3]`), the op
+    /// name for interpreter fallbacks.
+    pub(crate) fn kind_label(&self) -> String {
+        fn width(w: &WeightMat) -> &'static str {
+            match w {
+                WeightMat::F64(_) => "f64",
+                WeightMat::I32(_) => "i32",
+                WeightMat::I64(_) => "i64",
+            }
+        }
+        match self {
+            Step::Ew(s) => format!("ew[{}]", s.ops.len()),
+            Step::MatMul(s) => format!("matmul({})", width(&s.w)),
+            Step::Conv(s) => format!("conv({})", width(&s.wmat)),
+            Step::Depthwise(_) => "depthwise".to_string(),
+            Step::Pool(s) => match s.kind {
+                PoolKind::Max => "pool(max)".to_string(),
+                PoolKind::Average => "pool(avg)".to_string(),
+            },
+            Step::Binary(_) => "binary".to_string(),
+            Step::Generic(s) => format!("generic({})", s.op.name()),
+        }
+    }
+
     /// Execute one step over a `b`-sample shard under `ctx` (intra-kernel
     /// budget, sharding gate, pool).
     fn run(
@@ -766,6 +794,9 @@ impl Step {
                     pool: ctx.pool,
                     tiled: ctx.tiled(work),
                 };
+                if let Some(p) = ctx.prof {
+                    p.note_mac(par.tiled);
+                }
                 let fused = &s.fused;
                 match &s.w {
                     WeightMat::F64(w) => {
@@ -803,6 +834,9 @@ impl Step {
                     pool: ctx.pool,
                     tiled: ctx.tiled(work),
                 };
+                if let Some(p) = ctx.prof {
+                    p.note_mac(par.tiled);
+                }
                 let fused = &s.fused;
                 let oc = s.oc;
                 match &s.wmat {
@@ -1065,6 +1099,9 @@ pub struct Plan {
     pub(crate) threads: usize,
     pub(crate) min_kernel_work: usize,
     pub(crate) min_tile_work: usize,
+    /// Optional step profiler, shared by every clone of this plan
+    /// (attached by [`Plan::enable_profiling`], absent by default).
+    pub(crate) prof: Option<Arc<PlanProfiler>>,
 }
 
 /// Borrowed, `Copy` view of the immutable parts of a plan needed to run
@@ -1093,6 +1130,10 @@ impl PlanView<'_> {
     }
 
     /// Run steps `range` over a `b`-sample batch resident in `ws`.
+    /// When `ctx.prof` is attached, each step bumps its always-on call
+    /// counter and (1-in-`sample_every` calls) a timing sample —
+    /// indexed by *absolute* step position so segmented execution
+    /// attributes to the same slots as the monolithic runner.
     pub(crate) fn run_steps(
         &self,
         ws: &mut WorkerState,
@@ -1100,8 +1141,16 @@ impl PlanView<'_> {
         range: core::ops::Range<usize>,
         ctx: &ExecCtx,
     ) -> Result<()> {
-        for step in &self.steps[range] {
+        let base = range.start;
+        for (i, step) in self.steps[range].iter().enumerate() {
+            let t0 = match ctx.prof {
+                Some(p) => p.begin(base + i),
+                None => None,
+            };
             step.run(&mut ws.bufs, &mut ws.scratch, b, ctx)?;
+            if let Some(p) = ctx.prof {
+                p.end(base + i, t0, b);
+            }
         }
         Ok(())
     }
@@ -1165,6 +1214,7 @@ impl Plan {
             threads: 1,
             min_kernel_work: DEFAULT_MIN_KERNEL_WORK,
             min_tile_work: DEFAULT_MIN_TILE_WORK,
+            prof: None,
         }
     }
 
@@ -1215,6 +1265,26 @@ impl Plan {
     /// executed work items, parked states.
     pub fn pool(&self) -> Option<&WorkerPool> {
         self.pool.as_deref()
+    }
+
+    /// Attach a [`PlanProfiler`] shared by every *subsequent* clone of
+    /// this plan: always-on per-step call counters, plus sampled
+    /// timing on 1-in-`sample_every` calls per step (`0` keeps only
+    /// the counters, `1` times everything). Step labels and per-sample
+    /// work estimates are derived from the compiled steps.
+    pub fn enable_profiling(&mut self, sample_every: u64) {
+        let labels = self
+            .steps
+            .iter()
+            .map(|s| (s.kind_label(), s.work()))
+            .collect();
+        self.prof = Some(Arc::new(PlanProfiler::new(&self.name, labels, sample_every)));
+    }
+
+    /// The attached profiler, if any (shared with every clone made
+    /// after [`Plan::enable_profiling`]).
+    pub fn profiler(&self) -> Option<&Arc<PlanProfiler>> {
+        self.prof.as_ref()
     }
 
     /// Minimum `rows * k * n` MAC volume before intra-kernel sharding
@@ -1321,6 +1391,7 @@ impl Plan {
                 kt: self.threads,
                 min_work: self.min_kernel_work,
                 min_tile: self.min_tile_work,
+                prof: self.prof.as_deref(),
             };
             return view.run_shard(&mut self.serial, inputs, &ctx);
         }
@@ -1337,6 +1408,7 @@ impl Plan {
             kt: (self.threads / shards).max(1),
             min_work: self.min_kernel_work,
             min_tile: self.min_tile_work,
+            prof: self.prof.as_deref(),
         };
         let n_phys = self.n_phys;
         let serial = &mut self.serial;

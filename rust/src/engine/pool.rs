@@ -193,6 +193,7 @@ impl std::fmt::Debug for WorkerPool {
         f.debug_struct("WorkerPool")
             .field("workers", &self.workers)
             .field("tasks_executed", &self.tasks_executed())
+            .field("queued_tasks", &self.queued_tasks())
             .finish()
     }
 }
@@ -242,6 +243,13 @@ impl WorkerPool {
     /// concurrently — the leak observable.
     pub fn pooled_states(&self) -> usize {
         lock(&self.shared.states).len()
+    }
+
+    /// Work items queued but not yet picked up by any executor — the
+    /// instantaneous backlog observable behind the serving metrics
+    /// gauges (0 whenever the pool is keeping up).
+    pub fn queued_tasks(&self) -> usize {
+        lock(&self.shared.queue).len()
     }
 
     /// Check a [`WorkerState`] out of the pool (creating one if none is
@@ -397,6 +405,8 @@ mod tests {
         });
         assert_eq!(parts.iter().sum::<u64>(), 360);
         assert!(pool.tasks_executed() >= 8);
+        // a completed scope leaves no backlog behind
+        assert_eq!(pool.queued_tasks(), 0);
     }
 
     #[test]

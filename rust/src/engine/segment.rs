@@ -221,6 +221,7 @@ impl SegmentedPlan {
             kt: self.plan.threads,
             min_work: self.plan.min_kernel_work,
             min_tile: self.plan.min_tile_work,
+            prof: self.plan.prof.as_deref(),
         };
         self.plan.view().run_steps(ws, b, self.seg_range(s), &ctx)
     }

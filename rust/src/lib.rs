@@ -41,6 +41,10 @@
 //!   (`artifacts/*.hlo.txt`) via the `xla` crate.
 //! - [`coordinator`] — a multi-threaded inference-serving coordinator
 //!   (request router, dynamic batcher, worker pool, metrics).
+//! - [`obs`] — the observability layer: bounded-memory metric
+//!   instruments with Prometheus text exposition, structured request
+//!   tracing (JSON-line spans, `SIRA_TRACE` env filter, slow-request
+//!   threshold) and the per-step plan profiler.
 //! - [`serve`] — the std-only network serving subsystem: hand-rolled
 //!   HTTP/1.1 front end, multi-model registry over compiled engine
 //!   plans, admission control with load-shed and deadlines, graceful
@@ -62,6 +66,7 @@ pub mod executor;
 pub mod graph;
 pub mod hw;
 pub mod models;
+pub mod obs;
 pub mod passes;
 pub mod runtime;
 pub mod serve;

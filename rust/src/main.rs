@@ -10,7 +10,9 @@
 //! sira-finn serve   --listen 127.0.0.1:8080 --models tfc,cnv --engine \
 //!                   [--threads N --pipeline N --max-pending N --deadline-ms N]
 //! sira-finn loadgen --addr 127.0.0.1:8080 --model cnv --conns 4 \
-//!                   --requests 256 --batch 8 [--rate R --deadline-ms N]
+//!                   --requests 256 --batch 8 [--rate R --deadline-ms N --prom]
+//! sira-finn profile --model tfc [--streamline --threads N --batch K \
+//!                   --requests N --sample-every N]
 //! sira-finn e2e     [--artifacts artifacts]
 //! ```
 
@@ -139,6 +141,7 @@ fn spec_from_args(name: &str, args: &Args) -> Result<ModelSpec> {
         threads: args.get_usize("threads", 1)?,
         pipeline,
         workers: args.get_usize("workers", 4)?,
+        profile: args.flag("profile"),
     })
 }
 
@@ -237,7 +240,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ])
     );
     print!("{}", entry.coordinator.metrics.segment_summary(dt));
+    if let Some(p) = &entry.profiler {
+        print!("{}", p.report());
+    }
     entry.coordinator.shutdown();
+    Ok(())
+}
+
+/// `profile`: compile one model's plan, attach the per-step profiler,
+/// run a synthetic in-process workload, and print the per-step cost
+/// report (table plus one JSON line).
+fn cmd_profile(args: &Args) -> Result<()> {
+    let m = models::by_name(args.get_or("model", "tfc"))?;
+    let mut g = m.graph;
+    let analysis = if args.flag("streamline") {
+        sira_finn::engine::prepare_streamlined(&mut g, &m.input_ranges)?
+    } else {
+        analyze(&g, &m.input_ranges)?
+    };
+    let mut plan = sira_finn::engine::compile(&g, &analysis)?;
+    plan.set_threads(args.get_usize("threads", 1)?);
+    plan.enable_profiling(args.get_u64("sample-every", 1)?);
+    let batch = args.get_usize("batch", 8)?;
+    let iters = args.get_usize("requests", 32)?;
+    let shape = plan.input_shape().to_vec();
+    let xs: Vec<Tensor> = (0..batch)
+        .map(|i| Tensor::full(&shape, (i % 255) as f64))
+        .collect();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        plan.run_batch(&xs)?;
+    }
+    let wall = t0.elapsed();
+    let report = plan.profiler().expect("profiler attached").report();
+    print!("{report}");
+    println!(
+        "wall: {wall:.2?} for {iters} batches of {batch} ({:.1} samples/s)",
+        (iters * batch) as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("bench", Json::Str("profile".to_string())),
+            ("model", Json::Str(m.name.to_string())),
+            ("wall_ms", Json::Num(wall.as_secs_f64() * 1e3)),
+            ("profile", report.json()),
+        ])
+    );
     Ok(())
 }
 
@@ -272,6 +321,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             bail!("GET /metrics returned {status}");
         }
     }
+    if args.flag("prom") {
+        // scrape + validate the Prometheus exposition; any malformed
+        // line fails the run (this is the CI smoke's teeth)
+        let n = serve::loadgen::scrape_prom(addr)?;
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("bench", Json::Str("prom-scrape".to_string())),
+                ("samples", Json::Num(n as f64)),
+            ])
+        );
+    }
     if args.flag("shutdown") {
         let mut c = serve::http::Client::connect(addr)?;
         c.request("POST", "/admin/shutdown", &[], b"")?;
@@ -285,18 +346,27 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help", "engine", "streamline", "metrics", "shutdown"])?;
+    let args = Args::from_env(&[
+        "help",
+        "engine",
+        "streamline",
+        "metrics",
+        "shutdown",
+        "profile",
+        "prom",
+    ])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "analyze" => cmd_analyze(&args),
         "compile" => cmd_compile(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "profile" => cmd_profile(&args),
         "e2e" => cmd_e2e(&args),
         _ => {
             println!(
                 "sira-finn — SIRA-enhanced FDNA compiler\n\
-                 usage: sira-finn <analyze|compile|serve|loadgen|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
+                 usage: sira-finn <analyze|compile|serve|loadgen|profile|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
                  serve: --workers N (coordinator workers) --requests N\n\
                  \x20      --engine      serve the plan-compiled integer runtime\n\
                  \x20      --streamline  streamline first (implies --engine)\n\
@@ -304,6 +374,8 @@ fn main() -> Result<()> {
                  \x20                    (sample-sharded batches + row-sharded MVUs)\n\
                  \x20      --pipeline N  pipeline-parallel serving over N plan\n\
                  \x20                    segments (implies --engine)\n\
+                 \x20      --profile     attach the per-step plan profiler (engine\n\
+                 \x20                    only); report lands under `profile` in /metrics\n\
                  \x20      --listen ADDR serve over HTTP instead of the in-process loop\n\
                  \x20                    (--models tfc,cnv --max-pending N --deadline-ms N;\n\
                  \x20                    stop with POST /admin/shutdown)\n\
@@ -312,8 +384,12 @@ fn main() -> Result<()> {
                  \x20      --rate R      open-loop at R req/s (default: closed loop)\n\
                  \x20      --deadline-ms N  per-request budget (x-deadline-ms)\n\
                  \x20      --metrics     fetch and print GET /metrics after the run\n\
+                 \x20      --prom        scrape + validate /metrics?format=prom after the run\n\
                  \x20      --shutdown    POST /admin/shutdown after the run\n\
-                 see README.md"
+                 profile: --model NAME [--streamline --threads N]\n\
+                 \x20      --batch K --requests N  synthetic workload size\n\
+                 \x20      --sample-every N        timing sample period (default 1)\n\
+                 see README.md (Observability)"
             );
             Ok(())
         }

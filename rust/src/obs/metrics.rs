@@ -1,0 +1,616 @@
+//! Bounded-memory metric primitives and Prometheus text exposition.
+//!
+//! Three atomic instrument types — [`Counter`], [`Gauge`] and
+//! fixed-bucket [`Histogram`] — replace the unbounded `Vec<u64>` sample
+//! logs the serving metrics used to accumulate: a histogram's memory is
+//! fixed at construction (one `AtomicU64` per bucket plus streaming
+//! count/sum/min/max), so a serve that stays up for a week costs the
+//! same bytes as one that served a single request. Count and sum are
+//! exact; percentiles are estimated at bucket resolution (linear
+//! interpolation inside the bucket holding the rank, clamped to the
+//! observed min/max so degenerate distributions report exact values).
+//!
+//! [`PromWriter`] renders instruments as Prometheus text exposition
+//! format 0.0.4 (`# HELP`/`# TYPE` headers, escaped label values,
+//! cumulative `_bucket{le=...}` series), and [`validate_exposition`]
+//! parses an exposition body back, line by line — the checker behind the
+//! golden test and the `scripts/verify.sh` loadgen smoke run.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed atomic gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram over `u64` samples (latency microseconds,
+/// batch occupancies). Bucket upper bounds are inclusive (`v <= bound`
+/// lands in that bucket, mirroring Prometheus `le`); one extra overflow
+/// bucket catches everything above the last bound. All state is atomic,
+/// so concurrent `record` calls from pool shards and stage threads need
+/// no lock.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    /// Histogram with the given strictly increasing upper bounds.
+    pub fn new(bounds: &[u64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Default latency histogram: 1µs → 60s in a 1-2-5 decade ladder —
+    /// 24 buckets, fixed forever, regardless of how many samples land.
+    pub fn latency_us() -> Histogram {
+        Histogram::new(&[
+            1,
+            2,
+            5,
+            10,
+            20,
+            50,
+            100,
+            200,
+            500,
+            1_000,
+            2_000,
+            5_000,
+            10_000,
+            20_000,
+            50_000,
+            100_000,
+            200_000,
+            500_000,
+            1_000_000,
+            2_000_000,
+            5_000_000,
+            10_000_000,
+            30_000_000,
+            60_000_000,
+        ])
+    }
+
+    /// Batch-occupancy histogram: exact buckets through 16 (the
+    /// interesting range for `max_batch` defaults), then doubling.
+    pub fn occupancy() -> Histogram {
+        Histogram::new(&[
+            1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 512, 1024,
+        ])
+    }
+
+    pub fn record(&self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean (streaming sum / count); 0 when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Bucket upper bounds (without the overflow bucket).
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Non-cumulative per-bucket counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Percentile estimate at bucket resolution: the rank formula
+    /// matches `util::stats::percentiles_u64` (index `(n-1)*p` of the
+    /// sorted samples), the value is linearly interpolated inside the
+    /// bucket containing that rank and clamped to the observed min/max.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = crate::util::stats::percentile_rank(n, p); // 1-based
+        let counts = self.bucket_counts();
+        let (min, max) = (self.min.load(Ordering::Relaxed), self.max.load(Ordering::Relaxed));
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let lo = if i == 0 { 0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { max.max(lo) };
+                let frac = (rank - cum) as f64 / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est.round() as u64).clamp(min, max);
+            }
+            cum += c;
+        }
+        max
+    }
+
+    /// The shared `{count, mean, p50, p95, p99}` serving-metrics schema
+    /// (`util::stats::percentile_json`), computed from bucket state:
+    /// count and mean are exact, percentiles are bucket-resolution
+    /// estimates.
+    pub fn percentile_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.percentile(0.50) as f64)),
+            ("p95", Json::Num(self.percentile(0.95) as f64)),
+            ("p99", Json::Num(self.percentile(0.99) as f64)),
+        ])
+    }
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a HELP text: backslash and newline (quotes are legal there).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn format_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Incremental renderer for Prometheus text exposition format 0.0.4.
+/// Serve it with content type `text/plain; version=0.0.4`.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    /// Emit the `# HELP` / `# TYPE` header for a metric family.
+    /// `kind` is one of `counter`, `gauge`, `histogram`.
+    pub fn family(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {}\n", escape_help(help)));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&format_value(value));
+        self.out.push('\n');
+    }
+
+    /// Emit a full histogram family body: cumulative `_bucket` series
+    /// (ending in `le="+Inf"`), `_sum` and `_count`. The family header
+    /// must have been written by the caller (so several labelled
+    /// histograms can share one family).
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let counts = h.bucket_counts();
+        let mut cum = 0u64;
+        let bucket_name = format!("{name}_bucket");
+        for (i, bound) in h.bounds().iter().enumerate() {
+            cum += counts[i];
+            let le = format!("{bound}");
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", &le));
+            self.sample(&bucket_name, &ls, cum as f64);
+        }
+        cum += counts[h.bounds().len()];
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.sample(&bucket_name, &ls, cum as f64);
+        self.sample(&format!("{name}_sum"), labels, h.sum() as f64);
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse one `{k="v",...}` label block; returns the byte just past the
+/// closing brace.
+fn parse_labels(line: &str, start: usize) -> Result<usize> {
+    let bytes = line.as_bytes();
+    let mut i = start + 1; // past '{'
+    loop {
+        // label name
+        let name_start = i;
+        while i < bytes.len() && bytes[i] != b'=' {
+            i += 1;
+        }
+        if i >= bytes.len() {
+            bail!("label without '=': {line}");
+        }
+        if !valid_label_name(&line[name_start..i]) {
+            bail!("bad label name in: {line}");
+        }
+        i += 1; // past '='
+        if i >= bytes.len() || bytes[i] != b'"' {
+            bail!("label value must be quoted: {line}");
+        }
+        i += 1; // past opening quote
+        while i < bytes.len() {
+            match bytes[i] {
+                b'\\' => i += 2, // escaped char
+                b'"' => break,
+                _ => i += 1,
+            }
+        }
+        if i >= bytes.len() {
+            bail!("unterminated label value: {line}");
+        }
+        i += 1; // past closing quote
+        match bytes.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => return Ok(i + 1),
+            _ => bail!("expected ',' or '}}' after label value: {line}"),
+        }
+    }
+}
+
+/// Validate a Prometheus text exposition body line by line. Returns the
+/// number of sample lines on success; fails on any malformed line (bad
+/// metric name, unbalanced label quotes, non-numeric value, unknown
+/// comment form). An exposition with zero samples is also an error —
+/// a scrape that returns only comments means the registry is wired
+/// wrong.
+pub fn validate_exposition(text: &str) -> Result<usize> {
+    let mut samples = 0usize;
+    for line in text.lines() {
+        let line = line.trim_end_matches('\r');
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(r) = rest.strip_prefix("HELP ").or_else(|| rest.strip_prefix("TYPE ")) {
+                let mut parts = r.splitn(2, ' ');
+                let name = parts.next().unwrap_or("");
+                if !valid_metric_name(name) {
+                    bail!("bad metric name in comment: {line}");
+                }
+                if rest.starts_with("TYPE ") {
+                    let kind = parts.next().unwrap_or("").trim();
+                    if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                        bail!("unknown metric type '{kind}': {line}");
+                    }
+                }
+            }
+            // other comments are legal and ignored
+            continue;
+        }
+        // sample line: name[{labels}] value [timestamp]
+        let name_end = line
+            .find(|c: char| c == '{' || c == ' ')
+            .ok_or_else(|| anyhow::anyhow!("sample line without value: {line}"))?;
+        if !valid_metric_name(&line[..name_end]) {
+            bail!("bad metric name: {line}");
+        }
+        let value_start = if line.as_bytes()[name_end] == b'{' {
+            let after = parse_labels(line, name_end)?;
+            if line.as_bytes().get(after) != Some(&b' ') {
+                bail!("expected space after labels: {line}");
+            }
+            after + 1
+        } else {
+            name_end + 1
+        };
+        let mut fields = line[value_start..].split_whitespace();
+        let value = fields.next().ok_or_else(|| anyhow::anyhow!("missing value: {line}"))?;
+        if !matches!(value, "+Inf" | "-Inf" | "NaN") && value.parse::<f64>().is_err() {
+            bail!("bad sample value '{value}': {line}");
+        }
+        if let Some(ts) = fields.next() {
+            if ts.parse::<i64>().is_err() {
+                bail!("bad timestamp '{ts}': {line}");
+            }
+        }
+        if fields.next().is_some() {
+            bail!("trailing garbage: {line}");
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        bail!("exposition contains no samples");
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentiles_u64;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.add(3);
+        g.sub(4);
+        assert_eq!(g.get(), 6);
+    }
+
+    #[test]
+    fn histogram_exact_count_sum_mean() {
+        let h = Histogram::latency_us();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 100);
+        assert_eq!(h.mean(), 25.0);
+    }
+
+    #[test]
+    fn histogram_degenerate_distribution_is_exact() {
+        // all samples equal: every percentile must clamp to that value
+        let h = Histogram::occupancy();
+        for _ in 0..100 {
+            h.record(16);
+        }
+        assert_eq!(h.percentile(0.50), 16);
+        assert_eq!(h.percentile(0.99), 16);
+        assert_eq!(h.mean(), 16.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone_and_empty_is_zero() {
+        let h = Histogram::latency_us();
+        assert_eq!(h.percentile(0.99), 0);
+        let mut rng = Rng::new(0x0B5);
+        for _ in 0..500 {
+            h.record(rng.int_in(1, 1_000_000) as u64);
+        }
+        let (p50, p95, p99) = (h.percentile(0.5), h.percentile(0.95), h.percentile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    }
+
+    /// Property test: bucket counts and the streaming sum must match a
+    /// scalar oracle over seeded random samples, and every percentile
+    /// estimate must land inside the bucket that holds the true
+    /// (sorted-sample) percentile.
+    #[test]
+    fn histogram_matches_scalar_oracle() {
+        let bounds = Histogram::latency_us();
+        let bounds = bounds.bounds().to_vec();
+        for seed in [1u64, 0xBEEF, 0x5EED, 42] {
+            let mut rng = Rng::new(seed);
+            let h = Histogram::new(&bounds);
+            let mut samples: Vec<u64> = Vec::new();
+            for _ in 0..2000 {
+                // mix of magnitudes so every decade of buckets is hit
+                let mag = rng.int_in(0, 6) as u32;
+                let v = rng.int_in(1, 10i64.pow(mag).max(2)) as u64;
+                h.record(v);
+                samples.push(v);
+            }
+            // oracle bucket counts
+            let mut oracle = vec![0u64; bounds.len() + 1];
+            for &v in &samples {
+                let idx = bounds.partition_point(|&b| b < v);
+                oracle[idx] += 1;
+            }
+            assert_eq!(h.bucket_counts(), oracle, "seed {seed}");
+            assert_eq!(h.sum(), samples.iter().sum::<u64>(), "seed {seed}");
+            assert_eq!(h.count(), samples.len() as u64, "seed {seed}");
+            // percentile estimates stay within the true value's bucket
+            let (t50, t95, t99) = percentiles_u64(&samples);
+            for (p, truth) in [(0.50, t50), (0.95, t95), (0.99, t99)] {
+                let est = h.percentile(p);
+                let truth_bucket = bounds.partition_point(|&b| b < truth);
+                let lo = if truth_bucket == 0 { 0 } else { bounds[truth_bucket - 1] };
+                let hi = bounds.get(truth_bucket).copied().unwrap_or(u64::MAX);
+                assert!(
+                    est >= lo && est <= hi,
+                    "seed {seed} p{p}: est {est} outside bucket ({lo}, {hi}] of true {truth}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_json_matches_vec_schema() {
+        let h = Histogram::latency_us();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        let j = h.percentile_json();
+        assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("mean").unwrap().as_f64().unwrap(), 25.0);
+        assert!(j.get("p50").unwrap().as_f64().unwrap() <= j.get("p99").unwrap().as_f64().unwrap());
+    }
+
+    /// Golden test: exact exposition text for a small fixed registry.
+    #[test]
+    fn prom_exposition_golden() {
+        let h = Histogram::new(&[1, 5, 10]);
+        for v in [1u64, 3, 7, 20] {
+            h.record(v);
+        }
+        let mut w = PromWriter::new();
+        w.family("sira_requests_total", "Completed requests.", "counter");
+        w.sample("sira_requests_total", &[("model", "cnv")], 42.0);
+        w.family("sira_pending", "Admitted samples in flight.", "gauge");
+        w.sample("sira_pending", &[], 3.0);
+        w.family("sira_latency_us", "Request latency (microseconds).", "histogram");
+        w.histogram("sira_latency_us", &[("model", "c\"v\n")], &h);
+        let text = w.finish();
+        let expected = "\
+# HELP sira_requests_total Completed requests.
+# TYPE sira_requests_total counter
+sira_requests_total{model=\"cnv\"} 42
+# HELP sira_pending Admitted samples in flight.
+# TYPE sira_pending gauge
+sira_pending 3
+# HELP sira_latency_us Request latency (microseconds).
+# TYPE sira_latency_us histogram
+sira_latency_us_bucket{model=\"c\\\"v\\n\",le=\"1\"} 1
+sira_latency_us_bucket{model=\"c\\\"v\\n\",le=\"5\"} 2
+sira_latency_us_bucket{model=\"c\\\"v\\n\",le=\"10\"} 3
+sira_latency_us_bucket{model=\"c\\\"v\\n\",le=\"+Inf\"} 4
+sira_latency_us_sum{model=\"c\\\"v\\n\"} 31
+sira_latency_us_count{model=\"c\\\"v\\n\"} 4
+";
+        assert_eq!(text, expected);
+        assert_eq!(validate_exposition(&text).unwrap(), 8);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate_exposition("").is_err()); // no samples
+        assert!(validate_exposition("# HELP only comments\n").is_err());
+        assert!(validate_exposition("9bad_name 1\n").is_err());
+        assert!(validate_exposition("name{l=unquoted} 1\n").is_err());
+        assert!(validate_exposition("name{l=\"open} 1\n").is_err());
+        assert!(validate_exposition("name notanumber\n").is_err());
+        assert!(validate_exposition("name 1 2 3\n").is_err());
+        assert!(validate_exposition("# TYPE x rainbow\nx 1\n").is_err());
+        assert_eq!(validate_exposition("x 1\nx{a=\"b\"} 2.5\ny +Inf\n").unwrap(), 3);
+        assert_eq!(validate_exposition("x 1 1700000000000\n").unwrap(), 1);
+    }
+}

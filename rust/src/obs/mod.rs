@@ -1,0 +1,23 @@
+//! Observability: bounded-memory metrics, structured request tracing
+//! and per-step plan profiling — the sensor layer for the serving
+//! stack (and the live counterpart of the paper's per-operator cost
+//! attribution).
+//!
+//! - [`metrics`] — atomic [`Counter`]/[`Gauge`]/fixed-bucket
+//!   [`Histogram`] instruments plus Prometheus text exposition
+//!   ([`PromWriter`], [`validate_exposition`]). Replaces the unbounded
+//!   `Vec<u64>` sample logs the coordinator metrics used to keep.
+//! - [`trace`] — per-request ids and JSON-line span records on a
+//!   pluggable sink, filtered by `SIRA_TRACE` with a
+//!   `SIRA_TRACE_SLOW_MS` slow-request threshold.
+//! - [`profile`] — per-step plan profiler ([`PlanProfiler`]): always-on
+//!   step counters plus opt-in sampled kernel timing, surfaced by
+//!   `sira-finn profile` and `--profile` on the serving paths.
+
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+pub use metrics::{validate_exposition, Counter, Gauge, Histogram, PromWriter};
+pub use profile::{PlanProfiler, ProfileReport, StepReport};
+pub use trace::{next_request_id, tracer, Level, MemorySink, StderrSink, TraceSink, Tracer};

@@ -1,0 +1,349 @@
+//! Per-step plan profiler: attributes engine time to individual plan
+//! steps (the paper's per-operator cost breakdown, live instead of
+//! offline).
+//!
+//! A [`PlanProfiler`] is attached to a `Plan` with
+//! `Plan::enable_profiling(sample_every)` and shared by every clone of
+//! that plan (pool shards, coordinator workers, pipeline stages), so
+//! one report aggregates the whole serving fleet for a model. Two
+//! cost tiers:
+//!
+//! - **step counters** — always on while a profiler is attached: one
+//!   relaxed atomic add per step per call.
+//! - **sampled timing** — `Instant` pairs around 1-in-`sample_every`
+//!   calls per step (`sample_every = 1` times everything, `0` disables
+//!   timing and keeps only the counters). Reported totals are scaled
+//!   back up by `calls / sampled`, so a 1-in-16 sample still estimates
+//!   full step cost.
+//!
+//! A detached plan (the default) carries no profiler and pays nothing —
+//! the hot loop's only change is an `Option` check that predicts
+//! perfectly.
+//!
+//! The profiler also counts MAC-core dispatch (tiled register-blocked
+//! vs scalar) — the observable behind the `min_tile_work` gate tuning
+//! in ROADMAP item 2.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-step accumulator. `work` is the compile-time per-sample op
+/// estimate (`Step::work()`), kept so reports can show ns-per-op.
+#[derive(Debug)]
+struct StepSlot {
+    label: String,
+    work: u64,
+    calls: AtomicU64,
+    sampled: AtomicU64,
+    ns: AtomicU64,
+    items: AtomicU64,
+}
+
+/// Aggregated profiling state for one compiled plan (shared across
+/// plan clones via `Arc`).
+#[derive(Debug)]
+pub struct PlanProfiler {
+    plan: String,
+    sample_every: u64,
+    steps: Vec<StepSlot>,
+    mac_tiled: AtomicU64,
+    mac_scalar: AtomicU64,
+}
+
+impl PlanProfiler {
+    /// `labels` carries one `(kind label, per-sample work)` pair per
+    /// plan step, in step order. `sample_every = 0` keeps counters
+    /// only; `n >= 1` times one call in `n` per step.
+    pub(crate) fn new(plan: &str, labels: Vec<(String, u64)>, sample_every: u64) -> PlanProfiler {
+        PlanProfiler {
+            plan: plan.to_string(),
+            sample_every,
+            steps: labels
+                .into_iter()
+                .map(|(label, work)| StepSlot {
+                    label,
+                    work,
+                    calls: AtomicU64::new(0),
+                    sampled: AtomicU64::new(0),
+                    ns: AtomicU64::new(0),
+                    items: AtomicU64::new(0),
+                })
+                .collect(),
+            mac_tiled: AtomicU64::new(0),
+            mac_scalar: AtomicU64::new(0),
+        }
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Count a step call; returns a start timestamp when this call is
+    /// selected for timing.
+    pub(crate) fn begin(&self, step: usize) -> Option<Instant> {
+        let n = self.steps[step].calls.fetch_add(1, Ordering::Relaxed);
+        if self.sample_every > 0 && n % self.sample_every == 0 {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a timed call opened by [`begin`](Self::begin); `b` is the
+    /// batch (sample) count the call processed.
+    pub(crate) fn end(&self, step: usize, t0: Option<Instant>, b: usize) {
+        if let Some(t0) = t0 {
+            let slot = &self.steps[step];
+            slot.sampled.fetch_add(1, Ordering::Relaxed);
+            slot.ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            slot.items.fetch_add(b as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one MAC kernel dispatch (tiled register-blocked core vs
+    /// the scalar oracle).
+    pub(crate) fn note_mac(&self, tiled: bool) {
+        if tiled {
+            self.mac_tiled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.mac_scalar.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot the accumulated state into a report.
+    pub fn report(&self) -> ProfileReport {
+        let steps: Vec<StepReport> = self
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let calls = s.calls.load(Ordering::Relaxed);
+                let sampled = s.sampled.load(Ordering::Relaxed);
+                let ns = s.ns.load(Ordering::Relaxed);
+                let items = s.items.load(Ordering::Relaxed);
+                // scale the sampled time back up to an estimate of the
+                // full cost of this step across all calls
+                let est_ns = if sampled > 0 { (ns as f64 * calls as f64 / sampled as f64) as u64 } else { 0 };
+                StepReport { index: i, kind: s.label.clone(), work: s.work, calls, sampled, ns, items, est_ns }
+            })
+            .collect();
+        ProfileReport {
+            plan: self.plan.clone(),
+            sample_every: self.sample_every,
+            mac_tiled: self.mac_tiled.load(Ordering::Relaxed),
+            mac_scalar: self.mac_scalar.load(Ordering::Relaxed),
+            steps,
+        }
+    }
+}
+
+/// One step's aggregated numbers.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Step index in plan order.
+    pub index: usize,
+    /// Kind label, e.g. `matmul(i32)` or `ew[4]`.
+    pub kind: String,
+    /// Compile-time per-sample op estimate.
+    pub work: u64,
+    /// Total calls (always-on counter).
+    pub calls: u64,
+    /// Calls that were actually timed.
+    pub sampled: u64,
+    /// Nanoseconds across the sampled calls only.
+    pub ns: u64,
+    /// Samples (batch elements) across the sampled calls.
+    pub items: u64,
+    /// Sampled time scaled up by `calls / sampled`.
+    pub est_ns: u64,
+}
+
+/// Snapshot report for one plan, renderable as a table or JSON.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub plan: String,
+    pub sample_every: u64,
+    pub mac_tiled: u64,
+    pub mac_scalar: u64,
+    pub steps: Vec<StepReport>,
+}
+
+impl ProfileReport {
+    /// Estimated total ns across all steps (sum of scaled step times).
+    pub fn est_total_ns(&self) -> u64 {
+        self.steps.iter().map(|s| s.est_ns).sum()
+    }
+
+    /// Aggregate estimated ns by kind label, heaviest first.
+    pub fn by_kind(&self) -> Vec<(String, u64, u64)> {
+        let mut map: std::collections::BTreeMap<&str, (u64, u64)> = std::collections::BTreeMap::new();
+        for s in &self.steps {
+            let e = map.entry(&s.kind).or_insert((0, 0));
+            e.0 += s.est_ns;
+            e.1 += s.calls;
+        }
+        let mut v: Vec<(String, u64, u64)> =
+            map.into_iter().map(|(k, (ns, calls))| (k.to_string(), ns, calls)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+
+    pub fn json(&self) -> Json {
+        let total = self.est_total_ns();
+        Json::obj(vec![
+            ("plan", Json::Str(self.plan.clone())),
+            ("sample_every", Json::Num(self.sample_every as f64)),
+            (
+                "mac",
+                Json::obj(vec![
+                    ("tiled", Json::Num(self.mac_tiled as f64)),
+                    ("scalar", Json::Num(self.mac_scalar as f64)),
+                ]),
+            ),
+            ("est_total_ns", Json::Num(total as f64)),
+            (
+                "steps",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("index", Json::Num(s.index as f64)),
+                                ("kind", Json::Str(s.kind.clone())),
+                                ("work", Json::Num(s.work as f64)),
+                                ("calls", Json::Num(s.calls as f64)),
+                                ("sampled", Json::Num(s.sampled as f64)),
+                                ("ns", Json::Num(s.ns as f64)),
+                                ("items", Json::Num(s.items as f64)),
+                                ("est_ns", Json::Num(s.est_ns as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "kinds",
+                Json::Arr(
+                    self.by_kind()
+                        .into_iter()
+                        .map(|(kind, ns, calls)| {
+                            Json::obj(vec![
+                                ("kind", Json::Str(kind)),
+                                ("est_ns", Json::Num(ns as f64)),
+                                ("calls", Json::Num(calls as f64)),
+                                (
+                                    "share",
+                                    Json::Num(if total > 0 { ns as f64 / total as f64 } else { 0.0 }),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Display for ProfileReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let total = self.est_total_ns().max(1);
+        writeln!(
+            f,
+            "plan '{}' step profile (sample 1/{}, mac dispatch: {} tiled / {} scalar)",
+            self.plan,
+            self.sample_every.max(1),
+            self.mac_tiled,
+            self.mac_scalar
+        )?;
+        writeln!(f, "{:>4} {:<18} {:>10} {:>8} {:>12} {:>6}", "step", "kind", "work", "calls", "est_ns", "share")?;
+        for s in &self.steps {
+            writeln!(
+                f,
+                "{:>4} {:<18} {:>10} {:>8} {:>12} {:>5.1}%",
+                s.index,
+                s.kind,
+                s.work,
+                s.calls,
+                s.est_ns,
+                100.0 * s.est_ns as f64 / total as f64
+            )?;
+        }
+        for (kind, ns, calls) in self.by_kind() {
+            writeln!(
+                f,
+                "  by kind: {:<18} {:>12} ns ({:>5.1}%) over {} calls",
+                kind,
+                ns,
+                100.0 * ns as f64 / total as f64,
+                calls
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_without_sampling() {
+        let p = PlanProfiler::new("t", vec![("matmul(i32)".into(), 100), ("ew[2]".into(), 10)], 0);
+        for _ in 0..5 {
+            let t = p.begin(0);
+            assert!(t.is_none(), "sample_every=0 must not time");
+            p.end(0, t, 8);
+        }
+        let r = p.report();
+        assert_eq!(r.steps[0].calls, 5);
+        assert_eq!(r.steps[0].sampled, 0);
+        assert_eq!(r.steps[0].est_ns, 0);
+        assert_eq!(r.steps[1].calls, 0);
+    }
+
+    #[test]
+    fn sampling_scales_estimates() {
+        let p = PlanProfiler::new("t", vec![("pool".into(), 50)], 4);
+        let mut timed = 0;
+        for _ in 0..16 {
+            let t = p.begin(0);
+            if t.is_some() {
+                timed += 1;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            p.end(0, t, 1);
+        }
+        assert_eq!(timed, 4); // calls 0, 4, 8, 12
+        let r = p.report();
+        assert_eq!(r.steps[0].calls, 16);
+        assert_eq!(r.steps[0].sampled, 4);
+        // est scales the 4 timed calls up 4x
+        assert!(r.steps[0].est_ns >= 4 * r.steps[0].ns / 5, "{r:?}");
+        assert!(r.est_total_ns() >= r.steps[0].ns);
+    }
+
+    #[test]
+    fn mac_dispatch_counters_and_json_shape() {
+        let p = PlanProfiler::new("t", vec![("matmul(i32)".into(), 100)], 1);
+        p.note_mac(true);
+        p.note_mac(true);
+        p.note_mac(false);
+        let t = p.begin(0);
+        p.end(0, t, 8);
+        let j = p.report().json();
+        assert_eq!(j.get("mac").unwrap().get("tiled").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("mac").unwrap().get("scalar").unwrap().as_usize().unwrap(), 1);
+        let steps = j.get("steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].get("kind").unwrap().as_str().unwrap(), "matmul(i32)");
+        assert_eq!(steps[0].get("calls").unwrap().as_usize().unwrap(), 1);
+        let kinds = j.get("kinds").unwrap().as_arr().unwrap();
+        assert_eq!(kinds.len(), 1);
+        // round-trips through the parser like every other report
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // display renders without panicking
+        let _ = p.report().to_string();
+    }
+}

@@ -1,0 +1,241 @@
+//! Structured request tracing: JSON-line span records on a pluggable
+//! sink, with a level filter and a slow-request threshold.
+//!
+//! Every record is one JSON object per line with at least `ts_ms`
+//! (milliseconds since the Unix epoch), `level` and `record` keys; the
+//! emitting site adds its own fields (`id` for the request id, `span`,
+//! `dur_us`, ...). The request path emits:
+//!
+//! - `record:"request"` — one summary per HTTP inference request with a
+//!   phase breakdown (`parse`/`admit`/`exec`/`respond`/`total`
+//!   microseconds), at **info**; escalated to **error** with
+//!   `slow:true` when total latency exceeds the slow-request
+//!   threshold.
+//! - `record:"span"` — fine-grained spans (`batch_wait` per job,
+//!   `batch_exec`/`segment_exec` per drained batch with the request
+//!   ids it carried), at **debug**.
+//!
+//! The global tracer is configured from the environment on first use:
+//!
+//! - `SIRA_TRACE` = `off` (default) | `error` | `info` | `debug`
+//! - `SIRA_TRACE_SLOW_MS` = slow-request threshold in milliseconds
+//!   (default 1000)
+//!
+//! With the default `off` level every instrumentation site reduces to
+//! one relaxed atomic load, so tracing costs nothing unless asked for.
+//! Sinks are pluggable ([`TraceSink`]): stderr by default, an in-memory
+//! buffer for tests.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Trace verbosity, ordered: a record is emitted when its level is at
+/// or below the tracer's configured level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "info" => Level::Info,
+            "debug" | "1" | "on" => Level::Debug,
+            _ => Level::Off,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Destination for trace lines. Implementations must tolerate
+/// concurrent `emit` calls.
+pub trait TraceSink: Send + Sync {
+    fn emit(&self, line: &str);
+}
+
+/// Default sink: one line to stderr per record.
+#[derive(Debug, Default)]
+pub struct StderrSink;
+
+impl TraceSink for StderrSink {
+    fn emit(&self, line: &str) {
+        eprintln!("{line}");
+    }
+}
+
+/// Test sink: buffers lines in memory.
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    lines: Mutex<Vec<String>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Arc<MemorySink> {
+        Arc::new(MemorySink::default())
+    }
+
+    /// Drain and return everything captured so far.
+    pub fn take(&self) -> Vec<String> {
+        std::mem::take(&mut *self.lines.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl TraceSink for MemorySink {
+    fn emit(&self, line: &str) {
+        self.lines.lock().unwrap_or_else(|e| e.into_inner()).push(line.to_string());
+    }
+}
+
+/// A level-filtered JSON-line emitter over a swappable sink.
+pub struct Tracer {
+    level: AtomicU8,
+    slow_us: AtomicU64,
+    sink: Mutex<Arc<dyn TraceSink>>,
+}
+
+impl Tracer {
+    pub fn new(level: Level, slow_us: u64, sink: Arc<dyn TraceSink>) -> Tracer {
+        Tracer {
+            level: AtomicU8::new(level as u8),
+            slow_us: AtomicU64::new(slow_us),
+            sink: Mutex::new(sink),
+        }
+    }
+
+    /// Tracer configured from `SIRA_TRACE` / `SIRA_TRACE_SLOW_MS`,
+    /// writing to stderr.
+    pub fn from_env() -> Tracer {
+        let level = std::env::var("SIRA_TRACE").map(|v| Level::parse(&v)).unwrap_or(Level::Off);
+        let slow_ms = std::env::var("SIRA_TRACE_SLOW_MS")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(1000);
+        Tracer::new(level, slow_ms * 1000, Arc::new(StderrSink))
+    }
+
+    /// One relaxed load — the fast path every instrumentation site
+    /// guards on.
+    pub fn enabled(&self, level: Level) -> bool {
+        level as u8 <= self.level.load(Ordering::Relaxed)
+    }
+
+    /// Slow-request threshold in microseconds.
+    pub fn slow_us(&self) -> u64 {
+        self.slow_us.load(Ordering::Relaxed)
+    }
+
+    pub fn set_level(&self, level: Level) {
+        self.level.store(level as u8, Ordering::Relaxed);
+    }
+
+    pub fn set_slow_ms(&self, ms: u64) {
+        self.slow_us.store(ms * 1000, Ordering::Relaxed);
+    }
+
+    pub fn set_sink(&self, sink: Arc<dyn TraceSink>) {
+        *self.sink.lock().unwrap_or_else(|e| e.into_inner()) = sink;
+    }
+
+    /// Emit one record (if the level passes) with `ts_ms`, `level` and
+    /// `record` added to the caller's fields.
+    pub fn emit(&self, level: Level, record: &str, fields: Vec<(&str, Json)>) {
+        if !self.enabled(level) {
+            return;
+        }
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let mut all = vec![
+            ("ts_ms", Json::Num(ts_ms)),
+            ("level", Json::Str(level.name().into())),
+            ("record", Json::Str(record.into())),
+        ];
+        all.extend(fields);
+        let line = Json::obj(all).to_string();
+        let sink = Arc::clone(&*self.sink.lock().unwrap_or_else(|e| e.into_inner()));
+        sink.emit(&line);
+    }
+}
+
+/// The process-wide tracer, configured from the environment on first
+/// use. Serving and coordinator instrumentation goes through here;
+/// tests that need isolation construct their own [`Tracer`].
+pub fn tracer() -> &'static Tracer {
+    static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+    GLOBAL.get_or_init(Tracer::from_env)
+}
+
+/// Generate a request id: process-unique, monotonic, cheap. Requests
+/// arriving with an `x-request-id` header keep their caller-assigned id
+/// instead.
+pub fn next_request_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("r-{:x}-{n:x}", std::process::id())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering_and_sink_capture() {
+        let sink = MemorySink::new();
+        let t = Tracer::new(Level::Info, 1_000_000, sink.clone() as Arc<dyn TraceSink>);
+        assert!(t.enabled(Level::Error) && t.enabled(Level::Info));
+        assert!(!t.enabled(Level::Debug));
+        t.emit(Level::Debug, "span", vec![("id", Json::Str("x".into()))]);
+        t.emit(Level::Info, "request", vec![("id", Json::Str("r-1".into()))]);
+        let lines = sink.take();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(&lines[0]).unwrap();
+        assert_eq!(j.get("record").unwrap().as_str().unwrap(), "request");
+        assert_eq!(j.get("level").unwrap().as_str().unwrap(), "info");
+        assert_eq!(j.get("id").unwrap().as_str().unwrap(), "r-1");
+        assert!(j.get("ts_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn level_parse_and_off_is_free() {
+        assert_eq!(Level::parse("DEBUG"), Level::Debug);
+        assert_eq!(Level::parse("info"), Level::Info);
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse(""), Level::Off);
+        assert_eq!(Level::parse("nonsense"), Level::Off);
+        let sink = MemorySink::new();
+        let t = Tracer::new(Level::Off, 0, sink.clone() as Arc<dyn TraceSink>);
+        t.emit(Level::Error, "request", vec![]);
+        assert!(sink.take().is_empty());
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_structured() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert_ne!(a, b);
+        assert!(a.starts_with("r-"));
+    }
+
+    #[test]
+    fn slow_threshold_units() {
+        let t = Tracer::new(Level::Error, 0, Arc::new(StderrSink));
+        t.set_slow_ms(250);
+        assert_eq!(t.slow_us(), 250_000);
+    }
+}

@@ -155,6 +155,11 @@ impl Admission {
         self.pending.load(Ordering::Acquire)
     }
 
+    /// Gate capacity in samples.
+    pub fn max_pending(&self) -> usize {
+        self.max_pending
+    }
+
     /// Requests admitted since start.
     pub fn admitted_total(&self) -> u64 {
         self.admitted.load(Ordering::Relaxed)

@@ -172,6 +172,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers beyond the framing set (names should be
+    /// lowercase; used for `x-request-id` echo and similar).
+    pub headers: Vec<(String, String)>,
 }
 
 impl Response {
@@ -181,7 +184,24 @@ impl Response {
             status,
             content_type: "application/json",
             body: v.to_string().into_bytes(),
+            headers: Vec::new(),
         }
+    }
+
+    /// Plain-text response (Prometheus exposition and friends).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response {
+            status,
+            content_type,
+            body: body.into_bytes(),
+            headers: Vec::new(),
+        }
+    }
+
+    /// Builder-style extra header.
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
     }
 
     /// JSON error envelope: `{"error": msg}`.
@@ -208,13 +228,17 @@ impl Response {
     pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
             self.status,
             Response::reason(self.status),
             self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
         )?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "\r\n")?;
         w.write_all(&self.body)?;
         w.flush()
     }
@@ -223,6 +247,13 @@ impl Response {
 /// Read one response off a buffered connection: `(status, body)`.
 /// Client-side mirror of [`read_request`], same framing rules.
 pub fn read_response(r: &mut impl BufRead) -> Result<(u16, Vec<u8>)> {
+    let (status, _headers, body) = read_response_headers(r)?;
+    Ok((status, body))
+}
+
+/// [`read_response`], but keeping the response headers (names
+/// lowercased) — what the request-id round-trip assertions read.
+pub fn read_response_headers(r: &mut impl BufRead) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
     let mut line = String::new();
     if read_line_limited(r, &mut line, MAX_LINE_BYTES)? == 0 {
         bail!("connection closed before the status line");
@@ -241,6 +272,7 @@ pub fn read_response(r: &mut impl BufRead) -> Result<(u16, Vec<u8>)> {
         .parse()
         .map_err(|_| anyhow!("bad status code in {start:?}"))?;
 
+    let mut headers = Vec::new();
     let mut content_length = 0usize;
     loop {
         let mut h = String::new();
@@ -258,6 +290,7 @@ pub fn read_response(r: &mut impl BufRead) -> Result<(u16, Vec<u8>)> {
                     .parse()
                     .map_err(|_| anyhow!("bad content-length {v:?}"))?;
             }
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
         }
     }
     if content_length > MAX_BODY_BYTES {
@@ -266,7 +299,7 @@ pub fn read_response(r: &mut impl BufRead) -> Result<(u16, Vec<u8>)> {
     let mut body = vec![0u8; content_length];
     r.read_exact(&mut body)
         .map_err(|e| anyhow!("reading {content_length}-byte response body: {e}"))?;
-    Ok((status, body))
+    Ok((status, headers, body))
 }
 
 /// A keep-alive HTTP client over one TCP connection — what the loopback
@@ -295,6 +328,19 @@ impl Client {
         headers: &[(&str, &str)],
         body: &[u8],
     ) -> Result<(u16, Vec<u8>)> {
+        let (status, _headers, body) = self.request_full(method, path, headers, body)?;
+        Ok((status, body))
+    }
+
+    /// [`Client::request`], but returning the response headers too
+    /// (names lowercased).
+    pub fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
         let s = self.reader.get_mut();
         write!(
             s,
@@ -307,7 +353,7 @@ impl Client {
         write!(s, "\r\n")?;
         s.write_all(body)?;
         s.flush()?;
-        read_response(&mut self.reader)
+        read_response_headers(&mut self.reader)
     }
 
     pub fn get(&mut self, path: &str) -> Result<(u16, Vec<u8>)> {
@@ -406,6 +452,20 @@ mod tests {
         assert_eq!(status, 503);
         let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(v.get("error").unwrap().as_str().unwrap(), "full");
+    }
+
+    #[test]
+    fn extra_headers_roundtrip_lowercased() {
+        let resp = Response::json(200, &Json::Null).with_header("X-Request-Id", "r-1-2f");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let (status, headers, _) = read_response_headers(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 200);
+        let rid = headers
+            .iter()
+            .find(|(k, _)| k == "x-request-id")
+            .map(|(_, v)| v.as_str());
+        assert_eq!(rid, Some("r-1-2f"));
     }
 
     #[test]

@@ -24,6 +24,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::trace::next_request_id;
+use crate::obs::validate_exposition;
 use crate::serve::http::Client;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -114,6 +116,20 @@ impl LoadReport {
             ("latency_us", stats::percentile_json(&self.latencies_us)),
         ])
     }
+}
+
+/// Scrape `GET /metrics?format=prom` from a live server and validate
+/// every line of the exposition; returns the sample count. Errors on
+/// any malformed line — the CI smoke (`sira-finn loadgen --prom`) and
+/// `scripts/verify.sh` gate on this.
+pub fn scrape_prom(addr: &str) -> Result<usize> {
+    let mut c = Client::connect(addr)?;
+    let (status, body) = c.get("/metrics?format=prom")?;
+    if status != 200 {
+        anyhow::bail!("GET /metrics?format=prom returned {status}");
+    }
+    let text = std::str::from_utf8(&body)?;
+    validate_exposition(text)
 }
 
 /// Ask the server for the model's per-sample input shape
@@ -208,10 +224,13 @@ pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
                         }
                         None => Instant::now(),
                     };
-                    let headers: Vec<(&str, &str)> = match deadline_hdr {
-                        Some(v) => vec![("x-deadline-ms", v)],
-                        None => Vec::new(),
-                    };
+                    // one id per request, so server-side spans can be
+                    // joined back to this client's timeline
+                    let rid = next_request_id();
+                    let mut headers: Vec<(&str, &str)> = vec![("x-request-id", &rid)];
+                    if let Some(v) = deadline_hdr {
+                        headers.push(("x-deadline-ms", v));
+                    }
                     let body = &bodies[j % bodies.len()];
                     let (status, _reply) =
                         client.request("POST", path, &headers, body.as_bytes())?;

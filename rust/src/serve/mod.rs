@@ -29,9 +29,14 @@
 //!
 //! Routes: `GET /healthz`, `GET /metrics` (machine-readable
 //! [`Metrics::json_report`](crate::coordinator::Metrics::json_report)
-//! per model + admission counters), `GET /v1/models`,
+//! per model + admission counters; `?format=prom` selects Prometheus
+//! text exposition 0.0.4 instead), `GET /v1/models`,
 //! `POST /v1/models/{name}/infer`, `POST /admin/shutdown` (begin
-//! graceful drain). Request bodies carry `{"inputs": [[...], ...]}`
+//! graceful drain). Every request carries an id — the client's
+//! `x-request-id` header, or a minted one — echoed back as a response
+//! header, attached to coordinator jobs, and stamped on the JSON-line
+//! spans the [`crate::obs::trace`] layer emits (`SIRA_TRACE=info`
+//! for per-request summaries, `debug` for batch/segment spans). Request bodies carry `{"inputs": [[...], ...]}`
 //! (one flat f64 array per sample) or `{"input": [...]}`; replies carry
 //! `{"outputs": [[...], ...]}` bit-exact against
 //! [`Plan::run_batch`](crate::engine::Plan::run_batch) — f64 values
@@ -65,6 +70,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{BatchPolicy, DEADLINE_EXCEEDED, SHUT_DOWN, WORKERS_GONE};
+use crate::obs::trace::{next_request_id, tracer, Level};
+use crate::obs::PromWriter;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
@@ -232,12 +239,25 @@ fn accept_loop(listener: TcpListener, stop: &AtomicBool, ctx: &Arc<ServerCtx>, i
     }
 }
 
+/// Per-request phase timings the infer handler fills in for the
+/// request summary span (all zero on non-inference routes).
+#[derive(Default)]
+struct Phases {
+    /// body JSON parse + sample validation
+    parse_us: u64,
+    /// admission gate acquire
+    admit_us: u64,
+    /// submit-to-last-reply through the coordinator
+    exec_us: u64,
+}
+
 fn handle_connection(stream: TcpStream, ctx: &ServerCtx, idle: Duration) {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(idle)).ok();
     stream.set_write_timeout(Some(idle)).ok();
     let mut reader = BufReader::new(stream);
     loop {
+        let t_accept = Instant::now();
         let req = match http::read_request(&mut reader) {
             Ok(Some(r)) => r,
             Ok(None) => return, // peer closed between requests
@@ -253,19 +273,64 @@ fn handle_connection(stream: TcpStream, ctx: &ServerCtx, idle: Duration) {
                 return;
             }
         };
+        let t_read = t_accept.elapsed();
+        // request id: honour the client's x-request-id, mint one
+        // otherwise; flows through admission, batching and spans, and
+        // echoes back on the response
+        let rid: Arc<str> = match req.header("x-request-id") {
+            Some(v) if !v.is_empty() => Arc::from(v),
+            _ => Arc::from(next_request_id().as_str()),
+        };
         let keep = req.keep_alive();
-        let resp = route(ctx, &req);
-        if resp.write_to(reader.get_mut(), keep).is_err() {
-            return;
-        }
-        if !keep {
+        let mut phases = Phases::default();
+        let resp = route(ctx, &req, &rid, &mut phases).with_header("x-request-id", &rid);
+        let t_respond = Instant::now();
+        let write_ok = resp.write_to(reader.get_mut(), keep).is_ok();
+        trace_request(&req, &rid, resp.status, &phases, t_accept, t_read, t_respond.elapsed());
+        if !write_ok || !keep {
             return;
         }
     }
 }
 
+/// Emit the per-request summary span: Info normally, escalated to
+/// Error with `slow: true` past the `SIRA_TRACE_SLOW_MS` threshold.
+fn trace_request(
+    req: &Request,
+    rid: &str,
+    status: u16,
+    ph: &Phases,
+    t_accept: Instant,
+    read: Duration,
+    respond: Duration,
+) {
+    let total_us = t_accept.elapsed().as_micros() as u64;
+    let slow = total_us >= tracer().slow_us();
+    let level = if slow { Level::Error } else { Level::Info };
+    if !tracer().enabled(level) {
+        return;
+    }
+    tracer().emit(
+        level,
+        "request",
+        vec![
+            ("id", Json::Str(rid.to_string())),
+            ("method", Json::Str(req.method.clone())),
+            ("path", Json::Str(req.path.clone())),
+            ("status", Json::Num(status as f64)),
+            ("read_us", Json::Num(read.as_micros() as f64)),
+            ("parse_us", Json::Num(ph.parse_us as f64)),
+            ("admit_us", Json::Num(ph.admit_us as f64)),
+            ("exec_us", Json::Num(ph.exec_us as f64)),
+            ("respond_us", Json::Num(respond.as_micros() as f64)),
+            ("total_us", Json::Num(total_us as f64)),
+            ("slow", Json::Bool(slow)),
+        ],
+    );
+}
+
 /// Dispatch one request to its handler.
-fn route(ctx: &ServerCtx, req: &Request) -> Response {
+fn route(ctx: &ServerCtx, req: &Request, rid: &Arc<str>, phases: &mut Phases) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::json(
             200,
@@ -278,7 +343,13 @@ fn route(ctx: &ServerCtx, req: &Request) -> Response {
                 ("draining", Json::Bool(ctx.admit.is_draining())),
             ]),
         ),
-        ("GET", "/metrics") => Response::json(200, &metrics_json(ctx)),
+        ("GET", "/metrics") => {
+            if req.query.split('&').any(|kv| kv == "format=prom") {
+                Response::text(200, "text/plain; version=0.0.4", metrics_prom(ctx))
+            } else {
+                Response::json(200, &metrics_json(ctx))
+            }
+        }
         ("GET", "/v1/models") => Response::json(200, &ctx.registry.models_json()),
         ("POST", "/admin/shutdown") => {
             ctx.admit.begin_drain();
@@ -290,7 +361,7 @@ fn route(ctx: &ServerCtx, req: &Request) -> Response {
                 .strip_prefix("/v1/models/")
                 .and_then(|rest| rest.strip_suffix("/infer"));
             match infer_target {
-                Some(model) if method == "POST" => handle_infer(ctx, model, req),
+                Some(model) if method == "POST" => handle_infer(ctx, model, req, rid, phases),
                 Some(_) => Response::error(405, "inference requires POST"),
                 None => Response::error(404, &format!("no route for {method} {path}")),
             }
@@ -309,6 +380,140 @@ fn metrics_json(ctx: &ServerCtx) -> Json {
         ("admission", ctx.admit.json()),
         ("models", ctx.registry.metrics_json()),
     ])
+}
+
+/// `GET /metrics?format=prom`: the same state as [`metrics_json`] in
+/// Prometheus text exposition format 0.0.4 (one family per instrument,
+/// per-model series labelled `model="..."`).
+fn metrics_prom(ctx: &ServerCtx) -> String {
+    let mut w = PromWriter::new();
+    w.family("sira_uptime_seconds", "Seconds since server start.", "gauge");
+    w.sample("sira_uptime_seconds", &[], ctx.started.elapsed().as_secs_f64());
+
+    w.family(
+        "sira_admission_pending_samples",
+        "Samples currently admitted and in flight.",
+        "gauge",
+    );
+    w.sample("sira_admission_pending_samples", &[], ctx.admit.pending() as f64);
+    w.family(
+        "sira_admission_max_pending_samples",
+        "Admission gate capacity in samples.",
+        "gauge",
+    );
+    w.sample(
+        "sira_admission_max_pending_samples",
+        &[],
+        ctx.admit.max_pending() as f64,
+    );
+    w.family(
+        "sira_admission_admitted_requests_total",
+        "Requests admitted since start.",
+        "counter",
+    );
+    w.sample(
+        "sira_admission_admitted_requests_total",
+        &[],
+        ctx.admit.admitted_total() as f64,
+    );
+    w.family(
+        "sira_admission_shed_requests_total",
+        "Requests shed (gate full or draining) since start.",
+        "counter",
+    );
+    w.sample(
+        "sira_admission_shed_requests_total",
+        &[],
+        ctx.admit.shed_total() as f64,
+    );
+    w.family(
+        "sira_admission_draining",
+        "1 while the server is draining for shutdown.",
+        "gauge",
+    );
+    w.sample(
+        "sira_admission_draining",
+        &[],
+        if ctx.admit.is_draining() { 1.0 } else { 0.0 },
+    );
+
+    w.family(
+        "sira_samples_completed_total",
+        "Samples served successfully, per model.",
+        "counter",
+    );
+    for e in ctx.registry.entries() {
+        let m = &e.coordinator.metrics;
+        w.sample(
+            "sira_samples_completed_total",
+            &[("model", &e.spec.name)],
+            m.completed.load(std::sync::atomic::Ordering::Relaxed) as f64,
+        );
+    }
+    w.family(
+        "sira_samples_failed_total",
+        "Samples that failed in the engine, per model.",
+        "counter",
+    );
+    for e in ctx.registry.entries() {
+        let m = &e.coordinator.metrics;
+        w.sample(
+            "sira_samples_failed_total",
+            &[("model", &e.spec.name)],
+            m.failed.load(std::sync::atomic::Ordering::Relaxed) as f64,
+        );
+    }
+    w.family(
+        "sira_samples_expired_total",
+        "Samples dropped on deadline before batching, per model.",
+        "counter",
+    );
+    for e in ctx.registry.entries() {
+        let m = &e.coordinator.metrics;
+        w.sample(
+            "sira_samples_expired_total",
+            &[("model", &e.spec.name)],
+            m.expired.load(std::sync::atomic::Ordering::Relaxed) as f64,
+        );
+    }
+    w.family(
+        "sira_batches_total",
+        "Engine batches executed, per model.",
+        "counter",
+    );
+    for e in ctx.registry.entries() {
+        let m = &e.coordinator.metrics;
+        w.sample(
+            "sira_batches_total",
+            &[("model", &e.spec.name)],
+            m.batches.load(std::sync::atomic::Ordering::Relaxed) as f64,
+        );
+    }
+    w.family(
+        "sira_request_latency_microseconds",
+        "End-to-end per-sample latency (submit to reply), per model.",
+        "histogram",
+    );
+    for e in ctx.registry.entries() {
+        w.histogram(
+            "sira_request_latency_microseconds",
+            &[("model", &e.spec.name)],
+            e.coordinator.metrics.latency_histogram(),
+        );
+    }
+    w.family(
+        "sira_batch_occupancy_samples",
+        "Samples per executed engine batch, per model.",
+        "histogram",
+    );
+    for e in ctx.registry.entries() {
+        w.histogram(
+            "sira_batch_occupancy_samples",
+            &[("model", &e.spec.name)],
+            e.coordinator.metrics.occupancy_histogram(),
+        );
+    }
+    w.finish()
 }
 
 /// Extract the request's sample list: `{"inputs": [[...], ...]}` or the
@@ -337,7 +542,13 @@ fn error_response(msg: &str) -> Response {
 }
 
 /// `POST /v1/models/{name}/infer`.
-fn handle_infer(ctx: &ServerCtx, model: &str, req: &Request) -> Response {
+fn handle_infer(
+    ctx: &ServerCtx,
+    model: &str,
+    req: &Request,
+    rid: &Arc<str>,
+    phases: &mut Phases,
+) -> Response {
     let Some(entry) = ctx.registry.get(model) else {
         return Response::error(
             404,
@@ -347,6 +558,7 @@ fn handle_infer(ctx: &ServerCtx, model: &str, req: &Request) -> Response {
             ),
         );
     };
+    let t_parse = Instant::now();
     let body = match req.body_json() {
         Ok(v) => v,
         Err(e) => return Response::error(400, &format!("bad JSON body: {e:#}")),
@@ -371,6 +583,7 @@ fn handle_infer(ctx: &ServerCtx, model: &str, req: &Request) -> Response {
             );
         }
     }
+    phases.parse_us = t_parse.elapsed().as_micros() as u64;
     let budget_ms = match req.header("x-deadline-ms") {
         None => None,
         Some(v) => match v.trim().parse::<u64>() {
@@ -382,21 +595,28 @@ fn handle_infer(ctx: &ServerCtx, model: &str, req: &Request) -> Response {
 
     // admission: one unit per sample, held until every reply landed
     let n = samples.len();
+    let t_admit = Instant::now();
     let _permit = match ctx.admit.try_acquire(n) {
         Ok(p) => p,
         Err(e) => return Response::error(503, &e.to_string()),
     };
+    phases.admit_us = t_admit.elapsed().as_micros() as u64;
 
     // submit each sample individually — the coordinator's dynamic
     // batcher coalesces them (and concurrent clients' samples) into
-    // engine batches
+    // engine batches; every job carries the request id so batch spans
+    // can be joined back to this request
+    let t_exec = Instant::now();
     let mut handles = Vec::with_capacity(n);
     for data in samples {
         let t = match Tensor::new(&entry.input_shape, data) {
             Ok(t) => t,
             Err(e) => return Response::error(400, &format!("{e:#}")),
         };
-        match entry.coordinator.submit_at(t, deadline) {
+        match entry
+            .coordinator
+            .submit_traced(t, deadline, Some(Arc::clone(rid)))
+        {
             Ok(h) => handles.push(h),
             Err(e) => return error_response(&format!("{e:#}")),
         }
@@ -421,6 +641,7 @@ fn handle_infer(ctx: &ServerCtx, model: &str, req: &Request) -> Response {
             }
         }
     }
+    phases.exec_us = t_exec.elapsed().as_micros() as u64;
     if let Some(msg) = first_err {
         return error_response(&msg);
     }
@@ -495,6 +716,45 @@ mod tests {
             assert_eq!(outs[0].as_f64_vec().unwrap().len(), 10);
         }
         assert!(server.shutdown(), "gate should drain");
+    }
+
+    #[test]
+    fn prom_metrics_and_request_id_echo() {
+        let server = tiny_server(64);
+        let addr = server.addr().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        // client-supplied id echoes back
+        let body = Json::obj(vec![("input", Json::nums(&[1.0; 784]))]);
+        let (status, headers, _) = c
+            .request_full(
+                "POST",
+                "/v1/models/tfc/infer",
+                &[("x-request-id", "my-rid-1")],
+                body.to_string().as_bytes(),
+            )
+            .unwrap();
+        assert_eq!(status, 200);
+        let rid = headers.iter().find(|(k, _)| k == "x-request-id").map(|(_, v)| v.as_str());
+        assert_eq!(rid, Some("my-rid-1"));
+        // a minted id is present when the client sends none
+        let (_, headers, _) = c.request_full("GET", "/healthz", &[], b"").unwrap();
+        let rid = headers
+            .iter()
+            .find(|(k, _)| k == "x-request-id")
+            .map(|(_, v)| v.clone())
+            .expect("minted request id");
+        assert!(rid.starts_with("r-"), "{rid}");
+        // the prom exposition parses and carries the per-model histogram
+        let (status, text) = c.get("/metrics?format=prom").unwrap();
+        assert_eq!(status, 200);
+        let text = String::from_utf8(text).unwrap();
+        let n = crate::obs::validate_exposition(&text).unwrap();
+        assert!(n > 10, "{n} samples:\n{text}");
+        assert!(
+            text.contains("sira_request_latency_microseconds_bucket{model=\"tfc\",le=\"+Inf\"}"),
+            "{text}"
+        );
+        server.shutdown();
     }
 
     #[test]

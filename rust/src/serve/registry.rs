@@ -20,6 +20,7 @@ use crate::coordinator::{BatchPolicy, Coordinator};
 use crate::engine::{self, SegmentedPlan};
 use crate::executor::Executor;
 use crate::models;
+use crate::obs::PlanProfiler;
 use crate::sira::analyze;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -41,7 +42,17 @@ pub struct ModelSpec {
     /// coordinator workers (ignored on the pipelined path, which runs
     /// one stage thread per segment instead)
     pub workers: usize,
+    /// attach a per-step [`PlanProfiler`] to the compiled plan (engine
+    /// only): always-on step counters plus 1-in-[`PROFILE_SAMPLE_EVERY`]
+    /// sampled kernel timing, reported under `profile` in the model's
+    /// metrics
+    pub profile: bool,
 }
+
+/// Sampling period the serving paths use when `--profile` is on: cheap
+/// enough to leave running (one `Instant` pair per step per 16 calls),
+/// dense enough to converge on steady traffic within seconds.
+pub const PROFILE_SAMPLE_EVERY: u64 = 16;
 
 impl ModelSpec {
     /// The default serving shape: plan engine, raw graph, serial plan,
@@ -54,6 +65,7 @@ impl ModelSpec {
             threads: 1,
             pipeline: 1,
             workers: 2,
+            profile: false,
         }
     }
 }
@@ -72,6 +84,9 @@ pub struct ModelEntry {
     /// name), for logs and `GET /v1/models`
     pub describe: String,
     pub coordinator: Coordinator,
+    /// per-step profiler shared with every plan clone (engine backends
+    /// built with `spec.profile`, absent otherwise)
+    pub profiler: Option<Arc<PlanProfiler>>,
     started: Instant,
 }
 
@@ -88,6 +103,11 @@ impl ModelEntry {
             };
             let mut plan = engine::compile(&g, &analysis)?;
             plan.set_threads(spec.threads);
+            if spec.profile {
+                // attach before any clone so workers/stages all share it
+                plan.enable_profiling(PROFILE_SAMPLE_EVERY);
+            }
+            let profiler = plan.profiler().cloned();
             let input_shape = plan.input_shape().to_vec();
             let input_numel = input_shape.iter().product();
             let output_shape = plan.output_shape().to_vec();
@@ -115,6 +135,7 @@ impl ModelEntry {
                 output_shape,
                 describe,
                 coordinator,
+                profiler,
                 started: Instant::now(),
             })
         } else {
@@ -143,14 +164,23 @@ impl ModelEntry {
                 output_shape,
                 describe,
                 coordinator,
+                profiler: None,
                 started: Instant::now(),
             })
         }
     }
 
-    /// Serving metrics for this model via the shared JSON emitter.
+    /// Serving metrics for this model via the shared JSON emitter —
+    /// plus the per-step `profile` report when a profiler is attached
+    /// (a pure addition, so the base schema cannot drift).
     pub fn metrics_json(&self) -> Json {
-        self.coordinator.metrics.json_report(self.started.elapsed())
+        let mut j = self.coordinator.metrics.json_report(self.started.elapsed());
+        if let Some(p) = &self.profiler {
+            if let Json::Obj(map) = &mut j {
+                map.insert("profile".to_string(), p.report().json());
+            }
+        }
+        j
     }
 
     /// Model card for `GET /v1/models`.
@@ -270,6 +300,31 @@ mod tests {
             .infer(Tensor::full(&[1, 784], 1.0))
             .unwrap_err();
         assert!(err.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn profiled_entry_reports_step_costs() {
+        let spec = ModelSpec {
+            profile: true,
+            ..ModelSpec::engine_default("tfc")
+        };
+        let reg = Registry::build(&[spec], BatchPolicy::default()).unwrap();
+        let e = reg.get("tfc").unwrap();
+        for _ in 0..4 {
+            e.coordinator
+                .infer(Tensor::full(&[1, 784], 100.0))
+                .unwrap();
+        }
+        let r = e.profiler.as_ref().expect("profiler attached").report();
+        assert!(!r.steps.is_empty());
+        assert!(r.steps.iter().all(|s| s.calls >= 1), "{r:?}");
+        assert!(r.mac_tiled + r.mac_scalar > 0, "{r:?}");
+        let j = e.metrics_json();
+        let prof = j.get("profile").unwrap();
+        assert_eq!(prof.get("sample_every").unwrap().as_usize().unwrap(), 16);
+        // the base metrics schema is untouched by the addition
+        assert!(j.get("latency_us").unwrap().get("count").unwrap().as_usize().unwrap() >= 4);
+        reg.shutdown();
     }
 
     #[test]

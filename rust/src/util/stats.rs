@@ -7,6 +7,18 @@
 
 use crate::util::json::Json;
 
+/// 1-based rank of the p-percentile over `n` sorted samples: the index
+/// formula `(n - 1) * p` (nearest-rank, the one `percentiles_u64` has
+/// always used) plus one. Shared with the bucket-resolution estimator
+/// in `obs::metrics::Histogram` so the two percentile surfaces agree on
+/// which sample they are pointing at.
+pub fn percentile_rank(n: u64, p: f64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    ((n - 1) as f64 * p) as u64 + 1
+}
+
 /// (p50, p95, p99) of integer-valued samples (latency microseconds,
 /// batch occupancies, ...). Sorts a copy; (0, 0, 0) when empty.
 pub fn percentiles_u64(samples: &[u64]) -> (u64, u64, u64) {
@@ -15,7 +27,7 @@ pub fn percentiles_u64(samples: &[u64]) -> (u64, u64, u64) {
     }
     let mut v = samples.to_vec();
     v.sort_unstable();
-    let pick = |p: f64| v[((v.len() - 1) as f64 * p) as usize];
+    let pick = |p: f64| v[percentile_rank(v.len() as u64, p) as usize - 1];
     (pick(0.50), pick(0.95), pick(0.99))
 }
 
@@ -154,6 +166,19 @@ mod tests {
     fn histogram_counts() {
         let h = int_histogram(&[8, 8, 10, 24]);
         assert_eq!(h, vec![(8, 2), (10, 1), (24, 1)]);
+    }
+
+    #[test]
+    fn percentile_rank_matches_index_formula() {
+        assert_eq!(percentile_rank(0, 0.5), 0);
+        assert_eq!(percentile_rank(1, 0.99), 1);
+        for n in [2u64, 8, 100, 1000] {
+            for p in [0.5, 0.95, 0.99] {
+                let rank = percentile_rank(n, p);
+                assert_eq!(rank, ((n - 1) as f64 * p) as u64 + 1);
+                assert!(rank >= 1 && rank <= n);
+            }
+        }
     }
 
     #[test]

@@ -310,6 +310,61 @@ fn graceful_shutdown_drains_in_flight_work() {
     );
 }
 
+/// Observability contract over a real socket: a client-supplied
+/// `x-request-id` echoes back on the response, a missing one is minted
+/// server-side, and `GET /metrics?format=prom` serves a well-formed
+/// Prometheus text exposition carrying the per-model serving series.
+#[test]
+fn request_ids_round_trip_and_prom_metrics_parse() {
+    let server = start_server(&["tfc"], 1, 64);
+    let addr = server.addr().to_string();
+    let mut rng = Rng::new(0x0B5);
+    let mut client = Client::connect(&addr).unwrap();
+    let req_body = infer_body(&random_samples(&mut rng, 784, 2)).to_string();
+
+    // client-supplied id echoes back verbatim
+    let (status, headers, _) = client
+        .request_full(
+            "POST",
+            "/v1/models/tfc/infer",
+            &[("x-request-id", "loopback-42")],
+            req_body.as_bytes(),
+        )
+        .unwrap();
+    assert_eq!(status, 200);
+    let echoed = headers
+        .iter()
+        .find(|(k, _)| k == "x-request-id")
+        .map(|(_, v)| v.as_str());
+    assert_eq!(echoed, Some("loopback-42"));
+
+    // no id supplied: the server mints one
+    let (status, headers, _) = client
+        .request_full("POST", "/v1/models/tfc/infer", &[], req_body.as_bytes())
+        .unwrap();
+    assert_eq!(status, 200);
+    let minted = headers
+        .iter()
+        .find(|(k, _)| k == "x-request-id")
+        .map(|(_, v)| v.as_str())
+        .unwrap();
+    assert!(minted.starts_with("r-"), "{minted}");
+
+    // the Prometheus exposition validates line by line and carries the
+    // per-model serving series next to the latency histogram
+    let (status, body) = client.get("/metrics?format=prom").unwrap();
+    assert_eq!(status, 200);
+    let text = std::str::from_utf8(&body).unwrap();
+    let n = sira_finn::obs::validate_exposition(text).unwrap();
+    assert!(n > 10, "expected a real exposition, got {n} samples:\n{text}");
+    assert!(
+        text.contains("sira_samples_completed_total{model=\"tfc\"}"),
+        "{text}"
+    );
+    assert!(text.contains("sira_request_latency_microseconds_bucket"), "{text}");
+    server.shutdown();
+}
+
 /// `POST /admin/shutdown` flips the drain flag and sheds new work with
 /// the draining error while the server finishes what it admitted.
 #[test]

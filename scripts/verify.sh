@@ -4,8 +4,9 @@
 # gate (when clippy is installed), the test suite, the engine
 # differential suite under a pinned seed (release, so the 50-case
 # harness is fast), the perf_hotpath batch-8 regression gate (plain and
-# pipelined configurations) against BENCH_baseline.json, and — when
-# rustfmt is installed — the formatting check.
+# pipelined configurations) against BENCH_baseline.json, the loadgen
+# prom smoke (scrape + validate /metrics?format=prom against a live
+# server), and — when rustfmt is installed — the formatting check.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -46,6 +47,30 @@ echo "== perf_hotpath batch-8 gate, plain + pipelined + tiled MVU + serve loopba
 mkdir -p target
 [ -f target/BENCH_baseline.local.json ] || cp BENCH_baseline.json target/BENCH_baseline.local.json
 cargo bench --bench perf_hotpath -- --gate target/BENCH_baseline.local.json
+
+# Observability smoke: a real server on an ephemeral loopback port,
+# driven by loadgen, then `--prom` scrapes /metrics?format=prom and
+# validates every exposition line (any malformed line exits nonzero).
+echo "== loadgen prom smoke: serve --listen + loadgen --prom (malformed exposition fails) =="
+SERVE_LOG=target/serve_smoke.log
+target/release/sira-finn serve --listen 127.0.0.1:0 --model tfc --engine >"$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's#^listening on http://##p' "$SERVE_LOG" | head -n1)
+  [ -n "$ADDR" ] && break
+  sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+  echo "prom smoke: server did not come up; log follows"
+  cat "$SERVE_LOG"
+  exit 1
+fi
+target/release/sira-finn loadgen --addr "$ADDR" --model tfc \
+  --conns 2 --requests 32 --batch 2 --prom --shutdown
+wait "$SERVE_PID"
+trap - EXIT
 
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
