@@ -10,8 +10,12 @@
 //!   worker's plan shard its drained batch across the persistent
 //!   N-thread pool, `--pipeline N` to serve pipeline-parallel over N
 //!   plan segments (batch k+1 enters segment 0 while batch k runs
-//!   segment 1), and `--profile` to attach the per-step plan profiler
-//!   and print its kernel-cost report after the run.
+//!   segment 1), `--profile` to attach the per-step plan profiler and
+//!   print its kernel-cost report after the run, `--replicas N` to
+//!   serve N coordinator replicas over clones of one plan (packed
+//!   weights Arc-shared, requests routed least-loaded), and
+//!   `--snapshot FILE` to cold-start from a serialized plan snapshot
+//!   (`sira-finn snapshot save`) instead of compiling.
 //! * default — PJRT artifact (when built with `--features pjrt` and
 //!   `make artifacts` ran), else the sidecar graph on the interpretive
 //!   executor, else the zoo graph on the executor.
@@ -25,10 +29,12 @@
 //! cargo run --release --example serve -- --engine --model cnv --requests 200
 //! ```
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use anyhow::Result;
 use sira_finn::coordinator::{BatchPolicy, Coordinator};
+use sira_finn::serve::registry::least_loaded;
 use sira_finn::executor::Executor;
 use sira_finn::models;
 use sira_finn::models::sidecar::load_sidecar_file;
@@ -58,9 +64,10 @@ fn main() -> Result<()> {
         && std::path::Path::new("artifacts/model_streamlined.hlo.txt").exists();
     let have_sidecar = std::path::Path::new("artifacts/model_params.json").exists();
 
-    let (coord, input_shape, profiler) = if engine_mode {
-        // the registry owns plan compilation + coordinator construction
-        // for the engine path (shared with `sira-finn serve`)
+    let (replicas, input_shape, profiler) = if engine_mode {
+        // the registry owns plan compilation (or snapshot loading) +
+        // replica construction for the engine path (shared with
+        // `sira-finn serve`)
         let spec = ModelSpec {
             name: model_name.clone(),
             engine: true,
@@ -69,10 +76,12 @@ fn main() -> Result<()> {
             pipeline,
             workers,
             profile: args.flag("profile"),
+            replicas: args.get_usize("replicas", 1)?,
+            snapshot_path: args.get("snapshot").map(|s| s.to_string()),
         };
         let entry = ModelEntry::build(&spec, policy)?;
         println!("backend: {}", entry.describe);
-        (entry.coordinator, entry.input_shape, entry.profiler)
+        (entry.replicas, entry.input_shape, entry.profiler)
     } else if use_pjrt {
         println!("backend: PJRT (streamlined Pallas artifact)");
         let c = Coordinator::start(workers, policy, move || {
@@ -83,7 +92,7 @@ fn main() -> Result<()> {
                 .expect("artifact");
             move |x: &Tensor| Ok(model.run(std::slice::from_ref(x))?.remove(0))
         });
-        (c, vec![1, 3, 8, 8], None)
+        (vec![c], vec![1, 3, 8, 8], None)
     } else {
         // interpretive executor over whichever graph source is available
         let (graph, shape, label) = if have_sidecar {
@@ -102,7 +111,7 @@ fn main() -> Result<()> {
                 Ok(e.run_single(x)?.remove(0))
             }
         });
-        (c, shape, None)
+        (vec![c], shape, None)
     };
 
     let numel: usize = input_shape.iter().product();
@@ -115,7 +124,9 @@ fn main() -> Result<()> {
                 (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
             )
             .unwrap();
-            coord.submit(x).unwrap()
+            // least-loaded replica routing (replica 0 when there is one)
+            let pending: Vec<u64> = replicas.iter().map(|c| c.metrics.pending()).collect();
+            replicas[least_loaded(&pending)].submit(x).unwrap()
         })
         .collect();
     let mut ok = 0;
@@ -126,22 +137,34 @@ fn main() -> Result<()> {
     }
     let dt = t0.elapsed();
     println!(
-        "{ok}/{n} ok in {dt:.2?} -> {:.1} req/s across {workers} workers",
-        n as f64 / dt.as_secs_f64()
+        "{ok}/{n} ok in {dt:.2?} -> {:.1} req/s across {workers} workers x {} replicas",
+        n as f64 / dt.as_secs_f64(),
+        replicas.len()
     );
+    if replicas.len() > 1 {
+        let spread: Vec<String> = replicas
+            .iter()
+            .map(|c| c.metrics.completed.load(Ordering::Relaxed).to_string())
+            .collect();
+        println!("replica completed spread: [{}]", spread.join(", "));
+    }
     // latency/occupancy/segments in the shared machine-readable schema
     println!(
         "{}",
         Json::obj(vec![
             ("bench", Json::Str("serve-example".to_string())),
             ("model", Json::Str(model_name)),
-            ("metrics", coord.metrics.json_report(dt)),
+            ("metrics", replicas[0].metrics.json_report(dt)),
         ])
     );
-    print!("{}", coord.metrics.segment_summary(dt));
+    for c in &replicas {
+        print!("{}", c.metrics.segment_summary(dt));
+    }
     if let Some(p) = &profiler {
         print!("{}", p.report());
     }
-    coord.shutdown();
+    for c in &replicas {
+        c.shutdown();
+    }
     Ok(())
 }

@@ -18,8 +18,10 @@
 //! 784×256 integer MatMul, the shape class the register-blocked kernels
 //! target), plus the loopback network-serving configuration
 //! (`serve/loopback/cnv/b8`: a real `127.0.0.1` HTTP server driven by
-//! the in-crate load generator) — and compares them against the
-//! checked-in baseline, failing
+//! the in-crate load generator) and the cold-start pair
+//! (`coldstart/<model>/{compile,snapshot}`: full graph→SIRA→compile vs
+//! [`engine::snapshot`] decode of the same plan) — and compares them
+//! against the checked-in baseline, failing
 //! (exit 1) on a >25% throughput regression. Baselines are
 //! machine-relative: an entry missing for this environment is measured
 //! and recorded into the file instead of compared, so the first gate run
@@ -319,6 +321,35 @@ fn measure_serve_loopback_b8(model: &str, threads: usize) -> f64 {
     best
 }
 
+/// Cold-start timings for one zoo model: the full graph → SIRA →
+/// compile path vs decoding a serialized plan snapshot
+/// ([`engine::snapshot`]) of the same plan, best-of-3 wall-clock each.
+/// The snapshot number is the fleet-restart observable the gate locks:
+/// loading must stay a decode + weight re-pack, never drift back into
+/// a recompile.
+fn measure_coldstart(model: &str) -> (f64, f64) {
+    let zm = models::by_name(model).unwrap();
+    let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
+    let bytes = engine::snapshot::to_bytes(&engine::compile(&zm.graph, &analysis).unwrap());
+    let mut best_compile = f64::INFINITY;
+    let mut best_snapshot = f64::INFINITY;
+    for _ in 0..3 {
+        // the compile path pays for everything a process restart pays
+        // for: model construction, SIRA analysis, plan compilation
+        let t0 = std::time::Instant::now();
+        let m = models::by_name(model).unwrap();
+        let a = analyze(&m.graph, &m.input_ranges).unwrap();
+        let plan = engine::compile(&m.graph, &a).unwrap();
+        best_compile = best_compile.min(t0.elapsed().as_nanos() as f64);
+
+        let t1 = std::time::Instant::now();
+        let loaded = engine::snapshot::from_bytes(&bytes).unwrap();
+        best_snapshot = best_snapshot.min(t1.elapsed().as_nanos() as f64);
+        assert_eq!(loaded.stats().steps, plan.stats().steps, "{model}");
+    }
+    (best_compile, best_snapshot)
+}
+
 /// Compare one measurement against the baseline map, recording it when
 /// this environment has never seen the key.
 fn gate_check(
@@ -411,6 +442,35 @@ fn run_gate(path: &str) -> i32 {
         let got = measure_serve_loopback_b8("cnv", 1);
         json_line("gate-serve", "serve", "cnv", 8, 1, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
+    }
+    // cold start (ROADMAP item 5 tentpole): full graph→SIRA→compile vs
+    // snapshot decode of the same plan — both gated, so a compile-time
+    // blow-up and a snapshot loader that quietly re-derives the plan
+    // both fail tier-1
+    for model in ["tfc", "cnv"] {
+        let (ns_compile, ns_snapshot) = measure_coldstart(model);
+        println!(
+            "{{\"bench\":\"perf_hotpath\",\"name\":\"coldstart\",\"model\":\"{model}\",\
+             \"ns_compile\":{ns_compile:.0},\"ns_snapshot\":{ns_snapshot:.0},\
+             \"speedup\":{:.2}}}",
+            ns_compile / ns_snapshot
+        );
+        gate_check(
+            &mut entries,
+            tolerance,
+            format!("coldstart/{model}/compile"),
+            ns_compile,
+            &mut failed,
+            &mut recorded,
+        );
+        gate_check(
+            &mut entries,
+            tolerance,
+            format!("coldstart/{model}/snapshot"),
+            ns_snapshot,
+            &mut failed,
+            &mut recorded,
+        );
     }
     if recorded {
         if let Json::Obj(o) = &mut doc {

@@ -216,6 +216,10 @@ pub struct SegmentStat {
 /// metrics footprint of a long-running serve is constant.
 #[derive(Debug)]
 pub struct Metrics {
+    /// requests accepted by `submit*` (whether or not they have
+    /// resolved yet); `submitted - completed - failed` is the live
+    /// queue depth — see [`Metrics::pending`]
+    pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     /// requests dropped before execution because their deadline expired
@@ -232,6 +236,7 @@ pub struct Metrics {
 impl Default for Metrics {
     fn default() -> Metrics {
         Metrics {
+            submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             expired: AtomicU64::new(0),
@@ -261,6 +266,18 @@ impl Metrics {
     fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.occupancy.record(size as u64);
+    }
+
+    /// Requests accepted by `submit*` but not yet resolved (completed
+    /// or failed; expired requests resolve as failed) — the queue-depth
+    /// signal least-loaded replica routing keys on. The counters are
+    /// relaxed atomics bumped from different threads, so a read can be
+    /// transiently stale; `saturating_sub` keeps a racing decrement
+    /// from underflowing.
+    pub fn pending(&self) -> u64 {
+        let done =
+            self.completed.load(Ordering::Relaxed) + self.failed.load(Ordering::Relaxed);
+        self.submitted.load(Ordering::Relaxed).saturating_sub(done)
     }
 
     /// (p50, p95, p99) latency in microseconds (bucket-resolution
@@ -350,6 +367,11 @@ impl Metrics {
                 .collect(),
         );
         Json::obj(vec![
+            (
+                "submitted",
+                Json::Num(self.submitted.load(Ordering::Relaxed) as f64),
+            ),
+            ("pending", Json::Num(self.pending() as f64)),
             ("completed", Json::Num(completed as f64)),
             (
                 "failed",
@@ -770,6 +792,7 @@ impl Coordinator {
                 reply,
             })
             .map_err(|_| anyhow!(WORKERS_GONE))?;
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(rx)
     }
 
@@ -821,6 +844,37 @@ mod tests {
         assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 64);
         let (p50, p95, p99) = c.metrics.percentiles();
         assert!(p50 <= p95 && p95 <= p99);
+        c.shutdown();
+    }
+
+    /// `pending()` is submitted minus resolved: with the single worker
+    /// gated shut, every submit raises it; releasing the gate and
+    /// awaiting every reply drains it back to exactly zero.
+    #[test]
+    fn pending_tracks_unresolved_submissions() {
+        let (gate_tx, gate_rx) = channel::<()>();
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        let c = Coordinator::start(1, BatchPolicy::default(), move || {
+            let gate = Arc::clone(&gate_rx);
+            move |x: &Tensor| {
+                gate.lock().unwrap().recv().ok();
+                Ok(x.map(|v| v))
+            }
+        });
+        assert_eq!(c.metrics.pending(), 0);
+        let handles: Vec<_> = (0..5)
+            .map(|i| c.submit(Tensor::scalar(i as f64)).unwrap())
+            .collect();
+        assert_eq!(c.metrics.submitted.load(Ordering::Relaxed), 5);
+        assert_eq!(c.metrics.pending(), 5, "gated worker resolved nothing yet");
+        for _ in 0..5 {
+            gate_tx.send(()).unwrap();
+        }
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 5);
+        assert_eq!(c.metrics.pending(), 0);
         c.shutdown();
     }
 

@@ -821,6 +821,7 @@ impl<'g> Compiler<'g> {
             WeightMat::I64(_) => self.stats.matmul_i64 += 1,
         }
         self.stats.packed_weight_elems += wmat.packed_elems();
+        self.stats.flat_weight_elems += wmat.flat_elems();
         if table.is_some() {
             self.stats.fused_thresholds += 1;
         }
@@ -921,6 +922,7 @@ impl<'g> Compiler<'g> {
             WeightMat::I64(_) => self.stats.conv_i64 += 1,
         }
         self.stats.packed_weight_elems += wmat.packed_elems();
+        self.stats.flat_weight_elems += wmat.flat_elems();
         if table.is_some() {
             self.stats.fused_thresholds += 1;
         }

@@ -19,6 +19,8 @@
 
 pub mod tile;
 
+use std::sync::Arc;
+
 use crate::tensor::{round_half_even, Conv2dSpec};
 
 /// A per-element constant parameter, broadcast-materialised at compile
@@ -156,30 +158,78 @@ pub struct BiasRef<'a> {
 /// `k * round_up(n, tile::NR)` extra elements per MAC step — the
 /// documented packed-weights memory trade-off, surfaced through
 /// `PlanStats::packed_weight_elems`.
+///
+/// Both layouts live behind shared immutable `Arc` storage: cloning a
+/// `MacMat` (and therefore a whole `Plan`, e.g. one per coordinator
+/// replica) bumps two reference counts instead of copying weights, so N
+/// replicas of one model cost one weight allocation. The flat oracle is
+/// additionally droppable at serve time ([`MacMat::drop_flat`]) — the
+/// tiled kernels are bit-identical to the scalar path, so a plan without
+/// the flat copy forces tiled dispatch and produces the same bits.
 #[derive(Clone, Debug)]
 pub struct MacMat<T: MacElem> {
-    pub(crate) flat: Vec<T>,
-    pub(crate) k: usize,
-    pub(crate) n: usize,
-    pub(crate) packed: tile::PackedWeights<T>,
+    flat: Option<Arc<Vec<T>>>,
+    k: usize,
+    n: usize,
+    packed: Arc<tile::PackedWeights<T>>,
 }
 
 impl<T: MacElem> MacMat<T> {
     /// Build both layouts from a `(k, n)` row-major matrix (packing
     /// happens once, at plan-compile time).
     pub fn new(flat: Vec<T>, k: usize, n: usize) -> MacMat<T> {
-        let packed = tile::PackedWeights::pack(&flat, k, n);
-        MacMat { flat, k, n, packed }
+        let packed = Arc::new(tile::PackedWeights::pack(&flat, k, n));
+        MacMat {
+            flat: Some(Arc::new(flat)),
+            k,
+            n,
+            packed,
+        }
     }
 
-    /// The `(k, n)` row-major form.
-    pub fn flat(&self) -> &[T] {
-        &self.flat
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The `(k, n)` row-major form, `None` after [`MacMat::drop_flat`].
+    pub fn flat(&self) -> Option<&[T]> {
+        self.flat.as_deref().map(Vec::as_slice)
     }
 
     /// The tile-packed form.
     pub fn packed(&self) -> &tile::PackedWeights<T> {
         &self.packed
+    }
+
+    /// The `(k, n)` row-major matrix, recovered from the panels when the
+    /// flat copy has been dropped (what plan serialization stores).
+    pub fn flat_data(&self) -> Vec<T> {
+        match &self.flat {
+            Some(f) => f.as_ref().clone(),
+            None => self.packed.unpack(),
+        }
+    }
+
+    /// Release the flat scalar-oracle copy (this handle's reference to
+    /// it — other clones keep theirs). MACs over a flat-less matrix
+    /// dispatch to the bit-identical tiled kernels unconditionally.
+    pub fn drop_flat(&mut self) {
+        self.flat = None;
+    }
+
+    /// Elements held by this handle's flat copy (0 once dropped).
+    pub fn flat_elems(&self) -> usize {
+        self.flat.as_ref().map_or(0, |f| f.len())
+    }
+
+    /// Reference count of the shared packed storage — the observable
+    /// that N plan clones really share one weight allocation.
+    pub fn packed_refs(&self) -> usize {
+        Arc::strong_count(&self.packed)
     }
 }
 
@@ -205,9 +255,42 @@ impl WeightMat {
     /// observable).
     pub fn packed_elems(&self) -> usize {
         match self {
-            WeightMat::F64(m) => m.packed.padded_len(),
-            WeightMat::I32(m) => m.packed.padded_len(),
-            WeightMat::I64(m) => m.packed.padded_len(),
+            WeightMat::F64(m) => m.packed().padded_len(),
+            WeightMat::I32(m) => m.packed().padded_len(),
+            WeightMat::I64(m) => m.packed().padded_len(),
+        }
+    }
+
+    /// Elements held by the flat scalar-oracle copy (0 once dropped).
+    pub fn flat_elems(&self) -> usize {
+        match self {
+            WeightMat::F64(m) => m.flat_elems(),
+            WeightMat::I32(m) => m.flat_elems(),
+            WeightMat::I64(m) => m.flat_elems(),
+        }
+    }
+
+    /// Whether the flat scalar-oracle copy is still attached.
+    pub fn has_flat(&self) -> bool {
+        self.flat_elems() > 0
+    }
+
+    /// Release the flat copy; see [`MacMat::drop_flat`].
+    pub fn drop_flat(&mut self) {
+        match self {
+            WeightMat::F64(m) => m.drop_flat(),
+            WeightMat::I32(m) => m.drop_flat(),
+            WeightMat::I64(m) => m.drop_flat(),
+        }
+    }
+
+    /// Reference count of the shared packed storage; see
+    /// [`MacMat::packed_refs`].
+    pub fn packed_refs(&self) -> usize {
+        match self {
+            WeightMat::F64(m) => m.packed_refs(),
+            WeightMat::I32(m) => m.packed_refs(),
+            WeightMat::I64(m) => m.packed_refs(),
         }
     }
 }

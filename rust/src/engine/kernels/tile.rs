@@ -120,6 +120,24 @@ impl<T: MacElem> PackedWeights<T> {
     fn panel(&self, jb: usize) -> &[T] {
         &self.data[jb * self.k * NR..(jb + 1) * self.k * NR]
     }
+
+    /// Recover the `(k, n)` row-major matrix from the panels, dropping
+    /// the pad lanes — the exact inverse of [`PackedWeights::pack`]
+    /// (packing copies, never transforms, so `pack(unpack()) == self`).
+    /// Used by plan serialization when the flat oracle has been dropped.
+    pub fn unpack(&self) -> Vec<T> {
+        let mut flat = vec![T::ZERO; self.k * self.n];
+        for jb in 0..self.n.div_ceil(NR) {
+            let panel = self.panel(jb);
+            let j0 = jb * NR;
+            let lanes = NR.min(self.n - j0);
+            for kk in 0..self.k {
+                flat[kk * self.n + j0..kk * self.n + j0 + lanes]
+                    .copy_from_slice(&panel[kk * NR..kk * NR + lanes]);
+            }
+        }
+        flat
+    }
 }
 
 /// The `M × NR` register-blocked inner loop over one weight panel:
@@ -389,6 +407,22 @@ mod tests {
             let mut got = vec![0i64; rows * n];
             mac_rows_tiled(&a, rows, &p, 0..n, &mut got);
             assert_eq!(got, want, "rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn unpack_inverts_pack_exactly() {
+        for (k, n) in [(1usize, 1usize), (3, NR - 1), (5, NR), (7, 2 * NR + 3), (2, 10)] {
+            let flat: Vec<i64> = (0..k * n).map(|i| (i as i64 % 13) - 6).collect();
+            let p = PackedWeights::pack(&flat, k, n);
+            assert_eq!(p.unpack(), flat, "k={k} n={n}");
+        }
+        // f64 round-trips bit-exactly too (copy, never transform)
+        let flat: Vec<f64> = vec![-0.0, 1.5, f64::MIN_POSITIVE, -7.25, 0.0, 3.0];
+        let p = PackedWeights::pack(&flat, 2, 3);
+        let back = p.unpack();
+        for (a, b) in flat.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

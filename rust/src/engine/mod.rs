@@ -69,6 +69,7 @@ pub mod kernels;
 pub mod plan;
 pub mod pool;
 pub mod segment;
+pub mod snapshot;
 
 use std::collections::BTreeMap;
 

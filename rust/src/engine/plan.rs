@@ -517,11 +517,15 @@ fn mm_chunk<T: MacElem>(
     out: &mut [f64],
     tiled: bool,
 ) {
-    if tiled {
-        let layout = tile::TiledOut::RowMajor;
-        tile::mac_block_tiled(a, &w.packed, rows, cols, bias, fused, out, layout);
-    } else {
-        mm_block(a, &w.flat, rows, k, n, cols, bias, fused, out);
+    match w.flat() {
+        // the scalar oracle needs the flat copy; once it is dropped
+        // (serve-time memory trim) every MAC dispatches tiled — same
+        // bits either way, so only memory and speed change
+        Some(flat) if !tiled => mm_block(a, flat, rows, k, n, cols, bias, fused, out),
+        _ => {
+            let layout = tile::TiledOut::RowMajor;
+            tile::mac_block_tiled(a, w.packed(), rows, cols, bias, fused, out, layout);
+        }
     }
 }
 
@@ -544,8 +548,8 @@ fn run_mm<T: MacElem>(
     out: &mut [f64],
     par: MacPar<'_>,
 ) {
-    debug_assert_eq!(w.k, k, "weight rows must match the gathered row width");
-    debug_assert_eq!(w.n, n);
+    debug_assert_eq!(w.k(), k, "weight rows must match the gathered row width");
+    debug_assert_eq!(w.n(), n);
     let tiled = par.tiled;
     let out = &mut out[..rows * n];
     let kt = par.kt;
@@ -644,19 +648,18 @@ fn conv_chunk<T: MacElem>(
     chunk: &mut [f64],
     tiled: bool,
 ) {
-    if tiled {
-        tile::mac_block_tiled(
+    match w.flat() {
+        Some(flat) if !tiled => conv_block(cols, flat, frame, k, oc, jr, bias, fused, chunk),
+        _ => tile::mac_block_tiled(
             cols,
-            &w.packed,
+            w.packed(),
             frame,
             jr,
             bias,
             fused,
             chunk,
             tile::TiledOut::ChannelMajor { frame },
-        );
-    } else {
-        conv_block(cols, &w.flat, frame, k, oc, jr, bias, fused, chunk);
+        ),
     }
 }
 
@@ -680,8 +683,8 @@ fn run_conv<T: MacElem>(
     out: &mut [f64],
     par: MacPar<'_>,
 ) {
-    debug_assert_eq!(w.k, k, "weight rows must match the im2col row width");
-    debug_assert_eq!(w.n, oc);
+    debug_assert_eq!(w.k(), k, "weight rows must match the im2col row width");
+    debug_assert_eq!(w.n(), oc);
     let tiled = par.tiled;
     let kt = par.kt;
     let pool = if kt > 1 && oc >= 2 { par.pool } else { None };
@@ -792,7 +795,9 @@ impl Step {
                 let par = MacPar {
                     kt: ctx.kernel_threads(work),
                     pool: ctx.pool,
-                    tiled: ctx.tiled(work),
+                    // no flat oracle (dropped at serve time) forces the
+                    // bit-identical tiled path regardless of the gate
+                    tiled: ctx.tiled(work) || !s.w.has_flat(),
                 };
                 if let Some(p) = ctx.prof {
                     p.note_mac(par.tiled);
@@ -832,7 +837,7 @@ impl Step {
                 let par = MacPar {
                     kt: ctx.kernel_threads(work),
                     pool: ctx.pool,
-                    tiled: ctx.tiled(work),
+                    tiled: ctx.tiled(work) || !s.wmat.has_flat(),
                 };
                 if let Some(p) = ctx.prof {
                     p.note_mac(par.tiled);
@@ -1032,6 +1037,10 @@ pub struct PlanStats {
     /// of every MAC weight matrix, rounded up to the `tile::NR` panel
     /// width (see README)
     pub packed_weight_elems: usize,
+    /// total elements held by the flat scalar-oracle weight copies —
+    /// zeroed by [`Plan::drop_flat_oracles`] at serve time, when every
+    /// MAC runs the bit-identical tiled kernels from packed storage only
+    pub flat_weight_elems: usize,
     pub logical_slots: usize,
     pub physical_buffers: usize,
 }
@@ -1049,7 +1058,7 @@ impl std::fmt::Display for PlanStats {
             f,
             "{} steps (ew {} / mm {}+{}i32+{}i64 / conv {}+{}i32+{}i64 / dw {} / pool {} / bin {} / gen {}), \
              {} fused thresholds, {} folded nodes, {} elided stuck channels ({} MACs, {} padded), \
-             {} packed weight elems, {} buffers for {} tensors",
+             {} packed + {} flat weight elems, {} buffers for {} tensors",
             self.steps,
             self.ew_chains,
             self.matmul_f64,
@@ -1068,6 +1077,7 @@ impl std::fmt::Display for PlanStats {
             self.elided_mac_steps,
             self.elided_padded_convs,
             self.packed_weight_elems,
+            self.flat_weight_elems,
             self.physical_buffers,
             self.logical_slots,
         )
@@ -1328,6 +1338,34 @@ impl Plan {
     /// Current tiled-kernel gate.
     pub fn min_tile_work(&self) -> usize {
         self.min_tile_work
+    }
+
+    /// Release every MAC weight's flat scalar-oracle copy (this plan's
+    /// references — other clones keep theirs): the serve-time memory
+    /// trim from ROADMAP item 5. All MACs then dispatch to the tiled
+    /// kernels, which are bit-identical to the scalar oracle, so outputs
+    /// are unchanged. `stats().flat_weight_elems` drops to 0.
+    pub fn drop_flat_oracles(&mut self) {
+        for step in &mut self.steps {
+            match step {
+                Step::MatMul(s) => s.w.drop_flat(),
+                Step::Conv(s) => s.wmat.drop_flat(),
+                _ => {}
+            }
+        }
+        self.stats.flat_weight_elems = 0;
+    }
+
+    /// `Arc` reference count of the first MAC step's packed weights
+    /// (None for plans without MAC steps) — the observable that N plan
+    /// clones (replicas) share one weight allocation rather than
+    /// holding N copies.
+    pub fn packed_share_count(&self) -> Option<usize> {
+        self.steps.iter().find_map(|s| match s {
+            Step::MatMul(st) => Some(st.w.packed_refs()),
+            Step::Conv(st) => Some(st.wmat.packed_refs()),
+            _ => None,
+        })
     }
 
     pub(crate) fn view(&self) -> PlanView<'_> {

@@ -1,0 +1,1085 @@
+//! Serialized plan snapshots: the fleet-scale cold-start path
+//! (ROADMAP item 5). `sira-finn serve` normally pays
+//! streamline → SIRA analysis → plan compilation on every process
+//! start; a snapshot makes that a file read plus weight re-packing —
+//! `save` writes a compiled [`Plan`] to a compact versioned binary
+//! sidecar, `load` rebuilds a plan that is **bit-exact** against the
+//! freshly compiled one (locked by `rust/tests/engine_equivalence.rs`).
+//!
+//! # Why a binary sidecar (and not the crate's JSON)
+//!
+//! The hand-rolled `util::json` stores every number as `f64`; i64 MAC
+//! weights and elision biases can exceed 2^53 and would silently lose
+//! bits through a JSON round trip. The snapshot instead stores integers
+//! as little-endian fixed-width words and floats as IEEE-754 bit
+//! patterns, so a round trip is exact by construction.
+//!
+//! # Format
+//!
+//! ```text
+//! magic    8 bytes   b"SIRAPLAN"
+//! version  u32 LE    bumped on any layout change; mismatch = clean error
+//! len      u64 LE    payload byte length
+//! checksum u64 LE    FNV-1a-64 over the payload
+//! payload  len bytes the serialized plan
+//! ```
+//!
+//! A corrupted, truncated or version-mismatched snapshot is always a
+//! clean `Err` — every length is bounds-checked against the remaining
+//! bytes before allocation, and the checksum is verified before any
+//! decoding — never a wrong answer.
+//!
+//! Only compile-time state is stored: steps (weights in their flat
+//! `(k, n)` form — packing is deterministic, so panels are rebuilt on
+//! load), buffer wiring, shapes and [`PlanStats`]. Runtime knobs
+//! (thread budget, work gates, profiler) stay at their defaults, same
+//! as a freshly compiled plan.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::{Op, RoundMode};
+use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
+
+use super::kernels::{MacMat, MicroOp, Param, ThresholdTable, WeightMat};
+use super::plan::{
+    BinKind, BinaryStep, ConvStep, DepthwiseStep, EwChainStep, GSrc, GenericStep, MacElide,
+    MatMulStep, Plan, PlanStats, PoolStep, Step,
+};
+
+/// File magic, first 8 bytes of every snapshot.
+pub const MAGIC: &[u8; 8] = b"SIRAPLAN";
+
+/// Format version; bumped on any layout change. A mismatch is a clean
+/// load error (old readers never misinterpret new layouts or vice
+/// versa).
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit over `bytes` — the integrity checksum. Not
+/// cryptographic; it catches torn writes and bit rot, which is the
+/// failure model for a local sidecar file.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// little-endian writer / bounds-checked reader
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn i64(&mut self, v: i64) {
+        self.u64(v as u64);
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn usizes(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+    fn i64s(&mut self, v: &[i64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.i64(x);
+        }
+    }
+    fn f64s(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("snapshot corrupt: bool byte {v}"),
+        }
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow!("snapshot corrupt: oversized count {v}"))
+    }
+
+    /// An element count about to drive a `Vec` allocation: must be
+    /// coverable by the remaining bytes (elements are ≥ `elem_size`
+    /// bytes), so a corrupted length can never trigger a huge
+    /// allocation or a misdecode — it fails here, cleanly.
+    fn count(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.usize()?;
+        match n.checked_mul(elem_size) {
+            Some(total) if total <= self.remaining() => Ok(n),
+            _ => bail!(
+                "snapshot corrupt: count {n} x {elem_size} bytes exceeds the {} remaining",
+                self.remaining()
+            ),
+        }
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let s = std::str::from_utf8(self.bytes(n)?)
+            .map_err(|e| anyhow!("snapshot corrupt: non-UTF-8 string: {e}"))?;
+        Ok(s.to_string())
+    }
+    fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+    fn i64s(&mut self) -> Result<Vec<i64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.i64()).collect()
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// component encoders/decoders
+
+fn enc_spec(e: &mut Enc, s: Conv2dSpec) {
+    e.usize(s.kernel.0);
+    e.usize(s.kernel.1);
+    e.usize(s.stride.0);
+    e.usize(s.stride.1);
+    e.usize(s.pad.0);
+    e.usize(s.pad.1);
+}
+
+fn dec_spec(d: &mut Dec) -> Result<Conv2dSpec> {
+    Ok(Conv2dSpec {
+        kernel: (d.usize()?, d.usize()?),
+        stride: (d.usize()?, d.usize()?),
+        pad: (d.usize()?, d.usize()?),
+    })
+}
+
+fn enc_tensor(e: &mut Enc, t: &Tensor) {
+    e.usizes(t.shape());
+    e.f64s(t.data());
+}
+
+fn dec_tensor(d: &mut Dec) -> Result<Tensor> {
+    let shape = d.usizes()?;
+    let data = d.f64s()?;
+    Tensor::new(&shape, data).context("snapshot corrupt: tensor shape/data mismatch")
+}
+
+fn enc_param(e: &mut Enc, p: &Param) {
+    match p {
+        Param::Scalar(v) => {
+            e.u8(0);
+            e.f64(*v);
+        }
+        Param::PerElem(v) => {
+            e.u8(1);
+            e.f64s(v);
+        }
+    }
+}
+
+fn dec_param(d: &mut Dec) -> Result<Param> {
+    match d.u8()? {
+        0 => Ok(Param::Scalar(d.f64()?)),
+        1 => Ok(Param::PerElem(d.f64s()?)),
+        t => bail!("snapshot corrupt: param tag {t}"),
+    }
+}
+
+fn enc_table(e: &mut Enc, t: &ThresholdTable) {
+    e.f64s(&t.rows);
+    e.usize(t.n);
+    e.usize(t.channels);
+    e.usize(t.ch_stride);
+    e.f64(t.out_scale);
+    e.f64(t.out_bias);
+}
+
+fn dec_table(d: &mut Dec) -> Result<ThresholdTable> {
+    let rows = d.f64s()?;
+    let n = d.usize()?;
+    let channels = d.usize()?;
+    if n.checked_mul(channels) != Some(rows.len()) {
+        bail!(
+            "snapshot corrupt: threshold table {} rows != {channels} channels x {n}",
+            rows.len()
+        );
+    }
+    Ok(ThresholdTable {
+        rows,
+        n,
+        channels,
+        ch_stride: d.usize()?,
+        out_scale: d.f64()?,
+        out_bias: d.f64()?,
+    })
+}
+
+fn enc_opt_table(e: &mut Enc, t: &Option<ThresholdTable>) {
+    match t {
+        None => e.u8(0),
+        Some(t) => {
+            e.u8(1);
+            enc_table(e, t);
+        }
+    }
+}
+
+fn dec_opt_table(d: &mut Dec) -> Result<Option<ThresholdTable>> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(dec_table(d)?)),
+        t => bail!("snapshot corrupt: option tag {t}"),
+    }
+}
+
+fn enc_micro_op(e: &mut Enc, op: &MicroOp) {
+    match op {
+        MicroOp::Mul(p) => {
+            e.u8(0);
+            enc_param(e, p);
+        }
+        MicroOp::Add(p) => {
+            e.u8(1);
+            enc_param(e, p);
+        }
+        MicroOp::Sub(p) => {
+            e.u8(2);
+            enc_param(e, p);
+        }
+        MicroOp::Rsub(p) => {
+            e.u8(3);
+            enc_param(e, p);
+        }
+        MicroOp::Div(p) => {
+            e.u8(4);
+            enc_param(e, p);
+        }
+        MicroOp::Rdiv(p) => {
+            e.u8(5);
+            enc_param(e, p);
+        }
+        MicroOp::Relu => e.u8(6),
+        MicroOp::Sigmoid => e.u8(7),
+        MicroOp::Floor => e.u8(8),
+        MicroOp::Ceil => e.u8(9),
+        MicroOp::RoundEven => e.u8(10),
+        MicroOp::Clip { lo, hi } => {
+            e.u8(11);
+            e.f64(*lo);
+            e.f64(*hi);
+        }
+        MicroOp::Threshold(t) => {
+            e.u8(12);
+            enc_table(e, t);
+        }
+    }
+}
+
+fn dec_micro_op(d: &mut Dec) -> Result<MicroOp> {
+    Ok(match d.u8()? {
+        0 => MicroOp::Mul(dec_param(d)?),
+        1 => MicroOp::Add(dec_param(d)?),
+        2 => MicroOp::Sub(dec_param(d)?),
+        3 => MicroOp::Rsub(dec_param(d)?),
+        4 => MicroOp::Div(dec_param(d)?),
+        5 => MicroOp::Rdiv(dec_param(d)?),
+        6 => MicroOp::Relu,
+        7 => MicroOp::Sigmoid,
+        8 => MicroOp::Floor,
+        9 => MicroOp::Ceil,
+        10 => MicroOp::RoundEven,
+        11 => MicroOp::Clip {
+            lo: d.f64()?,
+            hi: d.f64()?,
+        },
+        12 => MicroOp::Threshold(dec_table(d)?),
+        t => bail!("snapshot corrupt: micro-op tag {t}"),
+    })
+}
+
+/// Weights are stored flat `(k, n)` at their accumulator width (i32 as
+/// 4-byte words, so a CNV snapshot stays compact); the tile-packed
+/// panels are rebuilt on load — `PackedWeights::pack` is deterministic,
+/// so the loaded plan's panels are byte-identical to the compiled
+/// plan's. When the flat oracle was dropped before saving,
+/// `MacMat::flat_data` recovers it from the panels exactly.
+fn enc_weight_mat(e: &mut Enc, w: &WeightMat) {
+    match w {
+        WeightMat::F64(m) => {
+            e.u8(0);
+            e.usize(m.k());
+            e.usize(m.n());
+            e.f64s(&m.flat_data());
+        }
+        WeightMat::I32(m) => {
+            e.u8(1);
+            e.usize(m.k());
+            e.usize(m.n());
+            let flat = m.flat_data();
+            e.usize(flat.len());
+            for v in flat {
+                e.buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WeightMat::I64(m) => {
+            e.u8(2);
+            e.usize(m.k());
+            e.usize(m.n());
+            e.i64s(&m.flat_data());
+        }
+    }
+}
+
+fn dec_weight_mat(d: &mut Dec) -> Result<WeightMat> {
+    let tag = d.u8()?;
+    let k = d.usize()?;
+    let n = d.usize()?;
+    let check = |len: usize| -> Result<()> {
+        if k.checked_mul(n) != Some(len) {
+            bail!("snapshot corrupt: weight matrix {len} elems != ({k}, {n})");
+        }
+        Ok(())
+    };
+    Ok(match tag {
+        0 => {
+            let flat = d.f64s()?;
+            check(flat.len())?;
+            WeightMat::F64(MacMat::new(flat, k, n))
+        }
+        1 => {
+            let len = d.count(4)?;
+            let mut flat = Vec::with_capacity(len);
+            for _ in 0..len {
+                flat.push(i32::from_le_bytes(d.bytes(4)?.try_into().unwrap()));
+            }
+            check(flat.len())?;
+            WeightMat::I32(MacMat::new(flat, k, n))
+        }
+        2 => {
+            let flat = d.i64s()?;
+            check(flat.len())?;
+            WeightMat::I64(MacMat::new(flat, k, n))
+        }
+        t => bail!("snapshot corrupt: weight-mat tag {t}"),
+    })
+}
+
+fn enc_elide(e: &mut Enc, el: &Option<MacElide>) {
+    match el {
+        None => e.u8(0),
+        Some(el) => {
+            e.u8(1);
+            e.usizes(&el.live);
+            e.i64s(&el.bias);
+            e.usize(el.pos_stride);
+        }
+    }
+}
+
+fn dec_elide(d: &mut Dec) -> Result<Option<MacElide>> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(MacElide {
+            live: d.usizes()?,
+            bias: d.i64s()?,
+            pos_stride: d.usize()?,
+        })),
+        t => bail!("snapshot corrupt: elide tag {t}"),
+    }
+}
+
+fn enc_op(e: &mut Enc, op: &Op) {
+    match op {
+        Op::Quant {
+            signed,
+            narrow,
+            rounding,
+        } => {
+            e.u8(0);
+            e.bool(*signed);
+            e.bool(*narrow);
+            e.u8(match rounding {
+                RoundMode::RoundEven => 0,
+                RoundMode::Floor => 1,
+                RoundMode::Ceil => 2,
+            });
+        }
+        Op::MatMul => e.u8(1),
+        Op::Gemm => e.u8(2),
+        Op::Conv { spec, group } => {
+            e.u8(3);
+            enc_spec(e, *spec);
+            e.usize(*group);
+        }
+        Op::Add => e.u8(4),
+        Op::Sub => e.u8(5),
+        Op::Mul => e.u8(6),
+        Op::Div => e.u8(7),
+        Op::Relu => e.u8(8),
+        Op::Sigmoid => e.u8(9),
+        Op::BatchNorm { eps } => {
+            e.u8(10);
+            e.f64(*eps);
+        }
+        Op::MaxPool { spec } => {
+            e.u8(11);
+            enc_spec(e, *spec);
+        }
+        Op::AveragePool { spec } => {
+            e.u8(12);
+            enc_spec(e, *spec);
+        }
+        Op::GlobalAveragePool => e.u8(13),
+        Op::Reshape { shape } => {
+            e.u8(14);
+            e.usize(shape.len());
+            for &v in shape {
+                e.i64(v);
+            }
+        }
+        Op::Flatten { axis } => {
+            e.u8(15);
+            e.usize(*axis);
+        }
+        Op::Transpose { perm } => {
+            e.u8(16);
+            e.usizes(perm);
+        }
+        Op::Concat { axis } => {
+            e.u8(17);
+            e.usize(*axis);
+        }
+        Op::Identity => e.u8(18),
+        Op::Floor => e.u8(19),
+        Op::Clip { lo, hi } => {
+            e.u8(20);
+            e.f64(*lo);
+            e.f64(*hi);
+        }
+        Op::MultiThreshold {
+            out_scale,
+            out_bias,
+        } => {
+            e.u8(21);
+            e.f64(*out_scale);
+            e.f64(*out_bias);
+        }
+    }
+}
+
+fn dec_op(d: &mut Dec) -> Result<Op> {
+    Ok(match d.u8()? {
+        0 => Op::Quant {
+            signed: d.bool()?,
+            narrow: d.bool()?,
+            rounding: match d.u8()? {
+                0 => RoundMode::RoundEven,
+                1 => RoundMode::Floor,
+                2 => RoundMode::Ceil,
+                t => bail!("snapshot corrupt: round-mode tag {t}"),
+            },
+        },
+        1 => Op::MatMul,
+        2 => Op::Gemm,
+        3 => Op::Conv {
+            spec: dec_spec(d)?,
+            group: d.usize()?,
+        },
+        4 => Op::Add,
+        5 => Op::Sub,
+        6 => Op::Mul,
+        7 => Op::Div,
+        8 => Op::Relu,
+        9 => Op::Sigmoid,
+        10 => Op::BatchNorm { eps: d.f64()? },
+        11 => Op::MaxPool { spec: dec_spec(d)? },
+        12 => Op::AveragePool { spec: dec_spec(d)? },
+        13 => Op::GlobalAveragePool,
+        14 => {
+            let n = d.count(8)?;
+            Op::Reshape {
+                shape: (0..n).map(|_| d.i64()).collect::<Result<_>>()?,
+            }
+        }
+        15 => Op::Flatten { axis: d.usize()? },
+        16 => Op::Transpose { perm: d.usizes()? },
+        17 => Op::Concat { axis: d.usize()? },
+        18 => Op::Identity,
+        19 => Op::Floor,
+        20 => Op::Clip {
+            lo: d.f64()?,
+            hi: d.f64()?,
+        },
+        21 => Op::MultiThreshold {
+            out_scale: d.f64()?,
+            out_bias: d.f64()?,
+        },
+        t => bail!("snapshot corrupt: op tag {t}"),
+    })
+}
+
+fn enc_step(e: &mut Enc, step: &Step) {
+    match step {
+        Step::Ew(s) => {
+            e.u8(0);
+            e.usize(s.input);
+            e.usize(s.out);
+            e.usize(s.numel);
+            e.usize(s.ops.len());
+            for op in &s.ops {
+                enc_micro_op(e, op);
+            }
+        }
+        Step::MatMul(s) => {
+            e.u8(1);
+            e.usize(s.a);
+            e.usize(s.out);
+            e.usize(s.m);
+            e.usize(s.k);
+            e.usize(s.n);
+            enc_weight_mat(e, &s.w);
+            enc_opt_table(e, &s.fused);
+            enc_elide(e, &s.elide);
+        }
+        Step::Conv(s) => {
+            e.u8(2);
+            e.usize(s.x);
+            e.usize(s.out);
+            e.usize(s.c);
+            e.usize(s.h);
+            e.usize(s.w);
+            e.usize(s.oc);
+            e.usize(s.oh);
+            e.usize(s.ow);
+            enc_spec(e, s.spec);
+            enc_weight_mat(e, &s.wmat);
+            enc_opt_table(e, &s.fused);
+            enc_elide(e, &s.elide);
+        }
+        Step::Depthwise(s) => {
+            e.u8(3);
+            e.usize(s.x);
+            e.usize(s.out);
+            e.usize(s.c);
+            e.usize(s.h);
+            e.usize(s.w);
+            e.usize(s.oh);
+            e.usize(s.ow);
+            enc_spec(e, s.spec);
+            e.f64s(&s.weights);
+            enc_opt_table(e, &s.fused);
+        }
+        Step::Pool(s) => {
+            e.u8(4);
+            e.usize(s.x);
+            e.usize(s.out);
+            e.u8(match s.kind {
+                PoolKind::Max => 0,
+                PoolKind::Average => 1,
+            });
+            e.usize(s.c);
+            e.usize(s.h);
+            e.usize(s.w);
+            e.usize(s.oh);
+            e.usize(s.ow);
+            enc_spec(e, s.spec);
+        }
+        Step::Binary(s) => {
+            e.u8(5);
+            e.usize(s.a);
+            e.usize(s.b);
+            e.usize(s.out);
+            e.usize(s.numel);
+            e.u8(match s.kind {
+                BinKind::Add => 0,
+                BinKind::Sub => 1,
+                BinKind::Mul => 2,
+                BinKind::Div => 3,
+            });
+        }
+        Step::Generic(s) => {
+            e.u8(6);
+            enc_op(e, &s.op);
+            e.usize(s.ins.len());
+            for src in &s.ins {
+                match src {
+                    GSrc::Slot(id, shape) => {
+                        e.u8(0);
+                        e.usize(*id);
+                        e.usizes(shape);
+                    }
+                    GSrc::Const(t) => {
+                        e.u8(1);
+                        enc_tensor(e, t);
+                    }
+                }
+            }
+            e.usize(s.out);
+            e.usizes(&s.out_shape);
+            e.usize(s.out_numel);
+        }
+    }
+}
+
+fn dec_step(d: &mut Dec) -> Result<Step> {
+    Ok(match d.u8()? {
+        0 => {
+            let input = d.usize()?;
+            let out = d.usize()?;
+            let numel = d.usize()?;
+            let n_ops = d.count(1)?;
+            let ops = (0..n_ops).map(|_| dec_micro_op(d)).collect::<Result<_>>()?;
+            Step::Ew(EwChainStep {
+                input,
+                out,
+                numel,
+                ops,
+            })
+        }
+        1 => Step::MatMul(MatMulStep {
+            a: d.usize()?,
+            out: d.usize()?,
+            m: d.usize()?,
+            k: d.usize()?,
+            n: d.usize()?,
+            w: dec_weight_mat(d)?,
+            fused: dec_opt_table(d)?,
+            elide: dec_elide(d)?,
+        }),
+        2 => Step::Conv(ConvStep {
+            x: d.usize()?,
+            out: d.usize()?,
+            c: d.usize()?,
+            h: d.usize()?,
+            w: d.usize()?,
+            oc: d.usize()?,
+            oh: d.usize()?,
+            ow: d.usize()?,
+            spec: dec_spec(d)?,
+            wmat: dec_weight_mat(d)?,
+            fused: dec_opt_table(d)?,
+            elide: dec_elide(d)?,
+        }),
+        3 => Step::Depthwise(DepthwiseStep {
+            x: d.usize()?,
+            out: d.usize()?,
+            c: d.usize()?,
+            h: d.usize()?,
+            w: d.usize()?,
+            oh: d.usize()?,
+            ow: d.usize()?,
+            spec: dec_spec(d)?,
+            weights: d.f64s()?,
+            fused: dec_opt_table(d)?,
+        }),
+        4 => Step::Pool(PoolStep {
+            x: d.usize()?,
+            out: d.usize()?,
+            kind: match d.u8()? {
+                0 => PoolKind::Max,
+                1 => PoolKind::Average,
+                t => bail!("snapshot corrupt: pool-kind tag {t}"),
+            },
+            c: d.usize()?,
+            h: d.usize()?,
+            w: d.usize()?,
+            oh: d.usize()?,
+            ow: d.usize()?,
+            spec: dec_spec(d)?,
+        }),
+        5 => Step::Binary(BinaryStep {
+            a: d.usize()?,
+            b: d.usize()?,
+            out: d.usize()?,
+            numel: d.usize()?,
+            kind: match d.u8()? {
+                0 => BinKind::Add,
+                1 => BinKind::Sub,
+                2 => BinKind::Mul,
+                3 => BinKind::Div,
+                t => bail!("snapshot corrupt: bin-kind tag {t}"),
+            },
+        }),
+        6 => {
+            let op = dec_op(d)?;
+            let n_ins = d.count(1)?;
+            let ins = (0..n_ins)
+                .map(|_| {
+                    Ok(match d.u8()? {
+                        0 => GSrc::Slot(d.usize()?, d.usizes()?),
+                        1 => GSrc::Const(dec_tensor(d)?),
+                        t => bail!("snapshot corrupt: gsrc tag {t}"),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Step::Generic(GenericStep {
+                op,
+                ins,
+                out: d.usize()?,
+                out_shape: d.usizes()?,
+                out_numel: d.usize()?,
+            })
+        }
+        t => bail!("snapshot corrupt: step tag {t}"),
+    })
+}
+
+/// `PlanStats` fields in fixed order (all u64 on the wire). Encoder and
+/// decoder must stay in lockstep; any reorder is a `VERSION` bump.
+fn enc_stats(e: &mut Enc, s: &PlanStats) {
+    for v in [
+        s.steps,
+        s.ew_chains,
+        s.fused_micro_ops,
+        s.matmul_f64,
+        s.matmul_i32,
+        s.matmul_i64,
+        s.conv_f64,
+        s.conv_i32,
+        s.conv_i64,
+        s.depthwise,
+        s.pool,
+        s.binary,
+        s.generic,
+        s.fused_thresholds,
+        s.folded_nodes,
+        s.elided_mac_steps,
+        s.elided_mac_channels,
+        s.elided_padded_convs,
+        s.packed_weight_elems,
+        s.flat_weight_elems,
+        s.logical_slots,
+        s.physical_buffers,
+    ] {
+        e.usize(v);
+    }
+}
+
+fn dec_stats(d: &mut Dec) -> Result<PlanStats> {
+    Ok(PlanStats {
+        steps: d.usize()?,
+        ew_chains: d.usize()?,
+        fused_micro_ops: d.usize()?,
+        matmul_f64: d.usize()?,
+        matmul_i32: d.usize()?,
+        matmul_i64: d.usize()?,
+        conv_f64: d.usize()?,
+        conv_i32: d.usize()?,
+        conv_i64: d.usize()?,
+        depthwise: d.usize()?,
+        pool: d.usize()?,
+        binary: d.usize()?,
+        generic: d.usize()?,
+        fused_thresholds: d.usize()?,
+        folded_nodes: d.usize()?,
+        elided_mac_steps: d.usize()?,
+        elided_mac_channels: d.usize()?,
+        elided_padded_convs: d.usize()?,
+        packed_weight_elems: d.usize()?,
+        flat_weight_elems: d.usize()?,
+        logical_slots: d.usize()?,
+        physical_buffers: d.usize()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// public API
+
+/// Serialize a compiled plan to the snapshot wire format (header +
+/// checksummed payload).
+pub fn to_bytes(plan: &Plan) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.str(&plan.name);
+    e.usize(plan.steps.len());
+    for step in &plan.steps {
+        enc_step(&mut e, step);
+    }
+    e.usize(plan.n_phys);
+    e.usize(plan.input_phys);
+    e.usizes(&plan.input_shape);
+    e.usize(plan.output_phys);
+    e.usizes(&plan.output_shape);
+    e.usize(plan.output_numel);
+    match &plan.const_output {
+        None => e.u8(0),
+        Some(t) => {
+            e.u8(1);
+            enc_tensor(&mut e, t);
+        }
+    }
+    enc_stats(&mut e, &plan.stats);
+    let payload = e.buf;
+
+    let mut out = Vec::with_capacity(payload.len() + 28);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Rebuild a plan from snapshot bytes. Bad magic, version mismatch,
+/// truncation, checksum failure and any malformed payload are all clean
+/// errors — a snapshot never half-loads.
+pub fn from_bytes(bytes: &[u8]) -> Result<Plan> {
+    if bytes.len() < 28 {
+        bail!("snapshot too short ({} bytes) to hold a header", bytes.len());
+    }
+    if &bytes[..8] != MAGIC {
+        bail!("not a plan snapshot (bad magic)");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        bail!("snapshot format version {version}, this build reads {VERSION}");
+    }
+    let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let want_sum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let payload = &bytes[28..];
+    if payload.len() as u64 != len {
+        bail!(
+            "snapshot truncated: header says {len} payload bytes, file has {}",
+            payload.len()
+        );
+    }
+    let got_sum = fnv1a64(payload);
+    if got_sum != want_sum {
+        bail!("snapshot checksum mismatch ({got_sum:#018x} != {want_sum:#018x})");
+    }
+
+    let mut d = Dec::new(payload);
+    let name = d.str()?;
+    let n_steps = d.count(1)?;
+    let steps: Vec<Step> = (0..n_steps).map(|_| dec_step(&mut d)).collect::<Result<_>>()?;
+    let n_phys = d.usize()?;
+    let input_phys = d.usize()?;
+    let input_shape = d.usizes()?;
+    let output_phys = d.usize()?;
+    let output_shape = d.usizes()?;
+    let output_numel = d.usize()?;
+    let const_output = match d.u8()? {
+        0 => None,
+        1 => Some(dec_tensor(&mut d)?),
+        t => bail!("snapshot corrupt: const-output tag {t}"),
+    };
+    let mut stats = dec_stats(&mut d)?;
+    if d.remaining() != 0 {
+        bail!("snapshot corrupt: {} trailing bytes after the plan", d.remaining());
+    }
+    // the loaded plan always carries the flat oracle (decode rebuilds
+    // it), even if it was dropped before saving — keep the stat honest
+    stats.flat_weight_elems = steps
+        .iter()
+        .map(|s| match s {
+            Step::MatMul(st) => st.w.flat_elems(),
+            Step::Conv(st) => st.wmat.flat_elems(),
+            _ => 0,
+        })
+        .sum();
+    Ok(Plan::new(
+        name,
+        steps,
+        n_phys,
+        input_phys,
+        input_shape,
+        output_phys,
+        output_shape,
+        output_numel,
+        const_output,
+        stats,
+    ))
+}
+
+/// Write a plan snapshot to `path` (atomically: temp file + rename, so
+/// a crash mid-write never leaves a torn snapshot behind at the final
+/// name).
+pub fn save(plan: &Plan, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = to_bytes(plan);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing snapshot to {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming snapshot into {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a plan snapshot from `path`; see [`from_bytes`] for the failure
+/// contract.
+pub fn load(path: impl AsRef<Path>) -> Result<Plan> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    from_bytes(&bytes).with_context(|| format!("decoding snapshot {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::sira::analyze;
+    use crate::util::rng::Rng;
+
+    fn compiled(name: &str) -> Plan {
+        let m = models::by_name(name).unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        super::super::compile(&m.graph, &analysis).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_on_tfc() {
+        let mut fresh = compiled("tfc");
+        let bytes = to_bytes(&fresh);
+        let mut loaded = from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.name(), fresh.name());
+        assert_eq!(loaded.stats().steps, fresh.stats().steps);
+        assert_eq!(loaded.stats().integer_macs(), fresh.stats().integer_macs());
+        let mut rng = Rng::new(0x5A17);
+        let shape = fresh.input_shape().to_vec();
+        let numel: usize = shape.iter().product();
+        let xs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                Tensor::new(
+                    &shape,
+                    (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let want = fresh.run_batch(&xs).unwrap();
+        let got = loaded.run_batch(&xs).unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.data(), g.data());
+        }
+    }
+
+    #[test]
+    fn dropped_flat_oracle_still_snapshots_exactly() {
+        let fresh = compiled("tfc");
+        let mut trimmed = fresh.clone();
+        trimmed.drop_flat_oracles();
+        assert_eq!(trimmed.stats().flat_weight_elems, 0);
+        // unpack-on-save recovers the exact flat matrix
+        let a = to_bytes(&fresh);
+        let b = to_bytes(&trimmed);
+        assert_eq!(a, b, "snapshot bytes must not depend on the flat copy");
+    }
+
+    #[test]
+    fn corruption_and_version_mismatch_are_clean_errors() {
+        let plan = compiled("tfc");
+        let good = to_bytes(&plan);
+        assert!(from_bytes(&good).is_ok());
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("magic"));
+        // version mismatch
+        let mut bad = good.clone();
+        bad[8] = 99;
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("version"));
+        // flipped payload byte -> checksum
+        let mut bad = good.clone();
+        let mid = 28 + (bad.len() - 28) / 2;
+        bad[mid] ^= 0x01;
+        assert!(from_bytes(&bad).unwrap_err().to_string().contains("checksum"));
+        // truncations at every region never panic, always Err
+        for cut in [0usize, 7, 12, 27, 28, good.len() / 2, good.len() - 1] {
+            assert!(from_bytes(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage is rejected too (header length catches it)
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_via_save_and_load() {
+        let plan = compiled("tfc");
+        let dir = std::env::temp_dir().join(format!("sira_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tfc.plan");
+        save(&plan, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.name(), plan.name());
+        assert_eq!(to_bytes(&loaded), to_bytes(&plan));
+        assert!(load(dir.join("missing.plan")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -8,9 +8,12 @@
 //! sira-finn serve   --model tfc --workers 4 --requests 256 \
 //!                   [--engine [--streamline] --threads N --pipeline N]
 //! sira-finn serve   --listen 127.0.0.1:8080 --models tfc,cnv --engine \
-//!                   [--threads N --pipeline N --max-pending N --deadline-ms N]
+//!                   [--threads N --pipeline N --replicas N --snapshot FILE \
+//!                   --max-pending N --deadline-ms N]
 //! sira-finn loadgen --addr 127.0.0.1:8080 --model cnv --conns 4 \
 //!                   --requests 256 --batch 8 [--rate R --deadline-ms N --prom]
+//! sira-finn snapshot save --model tfc [--streamline] [--out tfc.plan]
+//! sira-finn snapshot load --file tfc.plan [--check-model tfc [--streamline]]
 //! sira-finn profile --model tfc [--streamline --threads N --batch K \
 //!                   --requests N --sample-every N]
 //! sira-finn e2e     [--artifacts artifacts]
@@ -127,21 +130,28 @@ fn cmd_compile(args: &Args) -> Result<()> {
 }
 
 /// One [`ModelSpec`] from the shared serve flags (`--engine`,
-/// `--streamline`, `--threads`, `--pipeline`, `--workers`) — the same
-/// backend-selection rules for the in-process loop and the network
-/// server, built through the serving registry in both cases.
+/// `--streamline`, `--threads`, `--pipeline`, `--workers`,
+/// `--replicas`, `--snapshot`) — the same backend-selection rules for
+/// the in-process loop and the network server, built through the
+/// serving registry in both cases.
 fn spec_from_args(name: &str, args: &Args) -> Result<ModelSpec> {
     let pipeline = args.get_usize("pipeline", 1)?;
+    let snapshot_path = args.get("snapshot").map(|s| s.to_string());
     Ok(ModelSpec {
         name: name.to_string(),
-        // --streamline / --pipeline only make sense on the engine path:
-        // imply --engine
-        engine: args.flag("engine") || args.flag("streamline") || pipeline > 1,
+        // --streamline / --pipeline / --snapshot only make sense on the
+        // engine path: imply --engine
+        engine: args.flag("engine")
+            || args.flag("streamline")
+            || pipeline > 1
+            || snapshot_path.is_some(),
         streamline: args.flag("streamline"),
         threads: args.get_usize("threads", 1)?,
         pipeline,
         workers: args.get_usize("workers", 4)?,
         profile: args.flag("profile"),
+        replicas: args.get_usize("replicas", 1)?,
+        snapshot_path,
     })
 }
 
@@ -214,7 +224,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let handles: Vec<_> = (0..n)
         .map(|i| {
             entry
-                .coordinator
+                .route()
                 .submit(Tensor::full(&shape, (i % 255) as f64))
                 .unwrap()
         })
@@ -231,19 +241,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         spec.workers
     );
     // machine-readable summary: the same emitter /metrics serves
+    // (aggregated across replicas when --replicas > 1)
     println!(
         "{}",
         Json::obj(vec![
             ("bench", Json::Str("serve".to_string())),
             ("model", Json::Str(spec.name.clone())),
-            ("metrics", entry.coordinator.metrics.json_report(dt)),
+            ("metrics", entry.metrics_json()),
         ])
     );
-    print!("{}", entry.coordinator.metrics.segment_summary(dt));
+    for c in &entry.replicas {
+        print!("{}", c.metrics.segment_summary(dt));
+    }
     if let Some(p) = &entry.profiler {
         print!("{}", p.report());
     }
-    entry.coordinator.shutdown();
+    entry.shutdown();
     Ok(())
 }
 
@@ -340,6 +353,81 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Compile one zoo model to a [`sira_finn::engine::Plan`] — the same
+/// streamline-or-raw choice the serve registry makes.
+fn compile_plan(name: &str, streamline: bool) -> Result<sira_finn::engine::Plan> {
+    let m = models::by_name(name)?;
+    let mut g = m.graph;
+    let analysis = if streamline {
+        sira_finn::engine::prepare_streamlined(&mut g, &m.input_ranges)?
+    } else {
+        analyze(&g, &m.input_ranges)?
+    };
+    sira_finn::engine::compile(&g, &analysis)
+}
+
+/// `snapshot save|load`: the serialized-plan cold-start path
+/// ([`sira_finn::engine::snapshot`]). `save` compiles a zoo model and
+/// writes the versioned binary sidecar; `load` reads one back (timing
+/// the read) and with `--check-model` proves it bit-exact against a
+/// fresh compile before exiting 0.
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    use sira_finn::engine::snapshot;
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("save") => {
+            let name = args.get_or("model", "tfc");
+            let default_out = format!("{name}.plan");
+            let out = args.get("out").unwrap_or(&default_out);
+            let t0 = std::time::Instant::now();
+            let plan = compile_plan(name, args.flag("streamline"))?;
+            let compile_dt = t0.elapsed();
+            snapshot::save(&plan, out)?;
+            println!(
+                "wrote {out}: plan '{}' ({} bytes, compiled in {compile_dt:.2?}) — {}",
+                plan.name(),
+                std::fs::metadata(out)?.len(),
+                plan.stats()
+            );
+            Ok(())
+        }
+        Some("load") => {
+            let file = args
+                .get("file")
+                .ok_or_else(|| anyhow!("snapshot load needs --file FILE"))?;
+            let t0 = std::time::Instant::now();
+            let mut plan = snapshot::load(file)?;
+            let load_dt = t0.elapsed();
+            println!(
+                "loaded {file}: plan '{}' in {load_dt:.2?} — {}",
+                plan.name(),
+                plan.stats()
+            );
+            if let Some(name) = args.get("check-model") {
+                let mut fresh = compile_plan(name, args.flag("streamline"))?;
+                let shape = fresh.input_shape().to_vec();
+                let xs: Vec<Tensor> = (0..4)
+                    .map(|i| Tensor::full(&shape, (i * 37 % 255) as f64))
+                    .collect();
+                let want = fresh.run_batch(&xs)?;
+                let got = plan.run_batch(&xs)?;
+                for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                    if w.data() != g.data() {
+                        bail!("snapshot output diverges from fresh compile on sample {i}");
+                    }
+                }
+                println!("check ok: bit-exact against freshly compiled '{name}'");
+            }
+            Ok(())
+        }
+        other => bail!(
+            "usage: sira-finn snapshot <save|load> (got {:?}); \
+             save --model NAME [--streamline] [--out FILE] | \
+             load --file FILE [--check-model NAME [--streamline]]",
+            other.unwrap_or("nothing")
+        ),
+    }
+}
+
 fn cmd_e2e(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     sira_finn::e2e::run_e2e(dir, 8)
@@ -361,12 +449,13 @@ fn main() -> Result<()> {
         "compile" => cmd_compile(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "snapshot" => cmd_snapshot(&args),
         "profile" => cmd_profile(&args),
         "e2e" => cmd_e2e(&args),
         _ => {
             println!(
                 "sira-finn — SIRA-enhanced FDNA compiler\n\
-                 usage: sira-finn <analyze|compile|serve|loadgen|profile|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
+                 usage: sira-finn <analyze|compile|serve|loadgen|snapshot|profile|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
                  serve: --workers N (coordinator workers) --requests N\n\
                  \x20      --engine      serve the plan-compiled integer runtime\n\
                  \x20      --streamline  streamline first (implies --engine)\n\
@@ -376,6 +465,11 @@ fn main() -> Result<()> {
                  \x20                    segments (implies --engine)\n\
                  \x20      --profile     attach the per-step plan profiler (engine\n\
                  \x20                    only); report lands under `profile` in /metrics\n\
+                 \x20      --replicas N  N coordinator replicas per model over clones of\n\
+                 \x20                    one plan (Arc-shared packed weights); requests\n\
+                 \x20                    route to the least-loaded replica\n\
+                 \x20      --snapshot F  cold-start the plan from a snapshot sidecar\n\
+                 \x20                    instead of compiling (implies --engine)\n\
                  \x20      --listen ADDR serve over HTTP instead of the in-process loop\n\
                  \x20                    (--models tfc,cnv --max-pending N --deadline-ms N;\n\
                  \x20                    stop with POST /admin/shutdown)\n\
@@ -386,6 +480,9 @@ fn main() -> Result<()> {
                  \x20      --metrics     fetch and print GET /metrics after the run\n\
                  \x20      --prom        scrape + validate /metrics?format=prom after the run\n\
                  \x20      --shutdown    POST /admin/shutdown after the run\n\
+                 snapshot: save --model NAME [--streamline] [--out FILE]\n\
+                 \x20      load --file FILE [--check-model NAME [--streamline]]\n\
+                 \x20      (serve picks snapshots up via --snapshot FILE per model)\n\
                  profile: --model NAME [--streamline --threads N]\n\
                  \x20      --batch K --requests N  synthetic workload size\n\
                  \x20      --sample-every N        timing sample period (default 1)\n\

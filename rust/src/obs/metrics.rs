@@ -553,6 +553,92 @@ mod tests {
         }
     }
 
+    /// Property: a one-sample histogram reports that exact sample at
+    /// every percentile (frac = 1.0 lands on the bucket's upper bound,
+    /// then the min/max clamp collapses it to the sample) — same answer
+    /// as the sorted-vector oracle on `[v]`.
+    #[test]
+    fn histogram_single_sample_is_exact_at_every_percentile() {
+        // one value per region: first bucket, mid-ladder, last bucket,
+        // and the overflow bucket
+        for v in [1u64, 3, 7_777, 60_000_000, 123_456_789] {
+            let h = Histogram::latency_us();
+            h.record(v);
+            let (t50, t95, t99) = percentiles_u64(&[v]);
+            assert_eq!((t50, t95, t99), (v, v, v));
+            for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                assert_eq!(h.percentile(p), v, "v={v} p={p}");
+            }
+        }
+    }
+
+    /// Property: when every sample lands in the overflow bucket (above
+    /// the last bound), estimates interpolate between the last bound and
+    /// the observed max, clamped to [min, max] — always inside the
+    /// oracle value's (overflow) bucket.
+    #[test]
+    fn histogram_all_in_overflow_bucket_stays_within_min_max() {
+        let h = Histogram::latency_us();
+        let top = *h.bounds().last().unwrap();
+        let mut rng = Rng::new(0x0F10);
+        let mut samples = Vec::new();
+        for _ in 0..200 {
+            let v = top + 1 + rng.int_in(0, 1_000_000) as u64;
+            h.record(v);
+            samples.push(v);
+        }
+        let (lo, hi) = (
+            *samples.iter().min().unwrap(),
+            *samples.iter().max().unwrap(),
+        );
+        let (t50, t95, t99) = percentiles_u64(&samples);
+        for (p, truth) in [(0.50, t50), (0.95, t95), (0.99, t99)] {
+            let est = h.percentile(p);
+            // the overflow bucket is (top, max]; clamp keeps the
+            // estimate inside the observed range, which contains truth
+            assert!(est > top, "p{p}: est {est} fell below the last bound");
+            assert!(
+                est >= lo && est <= hi,
+                "p{p}: est {est} outside observed [{lo}, {hi}], truth {truth}"
+            );
+        }
+    }
+
+    /// Property: a rank that lands exactly on a bucket's cumulative
+    /// count edge resolves to that bucket's upper bound (frac = 1.0) and
+    /// stays inside the oracle value's bucket.
+    #[test]
+    fn histogram_rank_exactly_at_bucket_boundary() {
+        let bounds = [10u64, 20, 30];
+        let h = Histogram::new(&bounds);
+        let mut samples = Vec::new();
+        // 10 samples in (0,10], 10 in (10,20]: p50's rank (10) is
+        // exactly the cumulative count of the first bucket
+        for i in 0..10u64 {
+            let v = i + 1;
+            h.record(v);
+            samples.push(v);
+        }
+        for i in 0..10u64 {
+            let v = 11 + i;
+            h.record(v);
+            samples.push(v);
+        }
+        let rank = crate::util::stats::percentile_rank(20, 0.50);
+        assert_eq!(rank, 10, "rank must sit exactly on the bucket edge");
+        let (t50, _, _) = percentiles_u64(&samples);
+        let est = h.percentile(0.50);
+        // truth is sample #10 (value 10) — bucket 0, whose bound is 10
+        let tb = bounds.partition_point(|&b| b < t50);
+        let blo = if tb == 0 { 0 } else { bounds[tb - 1] };
+        let bhi = bounds.get(tb).copied().unwrap_or(u64::MAX);
+        assert!(
+            est >= blo && est <= bhi,
+            "est {est} outside truth bucket ({blo}, {bhi}] of {t50}"
+        );
+        assert_eq!(est, 10, "boundary rank resolves to the bucket bound");
+    }
+
     #[test]
     fn percentile_json_matches_vec_schema() {
         let h = Histogram::latency_us();

@@ -56,15 +56,20 @@ impl Request {
     }
 
     /// Whether the connection should stay open after this exchange.
+    ///
+    /// The `connection` header is a comma-separated token list
+    /// (RFC 9112 §9.6): `keep-alive, upgrade` must parse, and a token
+    /// like `closed` must NOT match `close` (substring matching would).
     pub fn keep_alive(&self) -> bool {
         let conn = self
             .header("connection")
             .unwrap_or("")
             .to_ascii_lowercase();
+        let has_token = |want: &str| conn.split(',').any(|t| t.trim() == want);
         if self.version == "HTTP/1.0" {
-            conn.contains("keep-alive")
+            has_token("keep-alive")
         } else {
-            !conn.contains("close")
+            !has_token("close")
         }
     }
 
@@ -147,12 +152,23 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
         headers,
         body: Vec::new(),
     };
-    let len = match req.header("content-length") {
-        None => 0usize,
-        Some(v) => v
+    // Framing is decided by content-length; a request carrying more than
+    // one (even with equal values) is ambiguous across intermediaries —
+    // the classic request-smuggling vector — so reject it outright
+    // instead of silently trusting the first match.
+    let cl: Vec<&str> = req
+        .headers
+        .iter()
+        .filter(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.as_str())
+        .collect();
+    let len = match cl.as_slice() {
+        [] => 0usize,
+        [v] => v
             .trim()
             .parse::<usize>()
             .map_err(|_| anyhow!("bad content-length {v:?}"))?,
+        _ => bail!("{} content-length headers in one request ({cl:?})", cl.len()),
     };
     if len > MAX_BODY_BYTES {
         bail!("body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit");
@@ -283,15 +299,19 @@ pub fn read_response_headers(r: &mut impl BufRead) -> Result<(u16, Vec<(String, 
         if h.is_empty() {
             break;
         }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| anyhow!("bad content-length {v:?}"))?;
-            }
-            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        // Same strictness as the server side: a header line without a
+        // colon is a framing error, not noise to skip — skipping could
+        // silently drop the content-length that frames the body.
+        let (k, v) = h
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed response header line {h:?}"))?;
+        if k.trim().eq_ignore_ascii_case("content-length") {
+            content_length = v
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bad content-length {v:?}"))?;
         }
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
     }
     if content_length > MAX_BODY_BYTES {
         bail!("response body of {content_length} bytes exceeds the limit");
@@ -411,6 +431,58 @@ mod tests {
             .unwrap()
             .unwrap();
         assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn keep_alive_matches_whole_tokens_not_substrings() {
+        // "closed" is not the "close" token — HTTP/1.1 stays open
+        let r = parse(b"GET / HTTP/1.1\r\nConnection: closed\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive(), "token 'closed' must not match 'close'");
+        // comma-separated lists parse per token on both versions
+        let r = parse(b"GET / HTTP/1.1\r\nConnection: upgrade, close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive(), "'close' anywhere in the list closes");
+        let r = parse(b"GET / HTTP/1.0\r\nConnection: Keep-Alive, Upgrade\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive(), "1.0 list containing keep-alive persists");
+        // a 1.0 token that merely contains "keep-alive" is not the token
+        let r = parse(b"GET / HTTP/1.0\r\nConnection: not-keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive());
+    }
+
+    #[test]
+    fn duplicate_content_length_is_rejected() {
+        // equal duplicates: still ambiguous across intermediaries
+        assert!(parse(
+            b"POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 4\r\n\r\nabcd"
+        )
+        .is_err());
+        // conflicting duplicates: the smuggling shape proper
+        assert!(parse(
+            b"POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 11\r\n\r\nabcdGET /x H"
+        )
+        .is_err());
+        // one header still frames normally
+        let r = parse(b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn malformed_response_header_lines_error() {
+        // a colonless line inside the response headers is a framing
+        // error for the client reader, never silently skipped
+        let wire = b"HTTP/1.1 200 OK\r\nno-colon-here\r\ncontent-length: 0\r\n\r\n";
+        assert!(read_response_headers(&mut Cursor::new(wire.to_vec())).is_err());
+        // server side already errors; pin it too (torn-framing family)
+        assert!(parse(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").is_err());
     }
 
     #[test]

@@ -15,9 +15,12 @@
 //!   matching client the load generator and tests use.
 //! * [`registry`] — the multi-model registry: engine `Plan`s compiled
 //!   once per model at startup (raw or streamlined, per-model
-//!   thread/pipeline budgets), each behind its own
-//!   [`Coordinator`](crate::coordinator::Coordinator); requests route
-//!   by name via `POST /v1/models/{name}/infer`.
+//!   thread/pipeline budgets) or loaded from an
+//!   [`engine::snapshot`](crate::engine::snapshot) sidecar, served by N
+//!   replica [`Coordinator`](crate::coordinator::Coordinator)s over
+//!   clones of the one plan (packed weights Arc-shared, flat oracles
+//!   dropped); requests route by name via
+//!   `POST /v1/models/{name}/infer`, then to the least-loaded replica.
 //! * [`admit`] — admission control: a bounded pending-sample gate that
 //!   sheds overload with HTTP 503 instead of queueing unboundedly,
 //!   per-request deadline budgets (`x-deadline-ms`) that drop expired
@@ -382,9 +385,18 @@ fn metrics_json(ctx: &ServerCtx) -> Json {
     ])
 }
 
+/// Sum one counter across a model's replicas: prom counter series stay
+/// per-model (`model="..."`) no matter how many replicas serve it.
+fn sum_replicas(e: &ModelEntry, f: impl Fn(&crate::coordinator::Metrics) -> u64) -> f64 {
+    e.replicas.iter().map(|c| f(&c.metrics)).sum::<u64>() as f64
+}
+
 /// `GET /metrics?format=prom`: the same state as [`metrics_json`] in
 /// Prometheus text exposition format 0.0.4 (one family per instrument,
-/// per-model series labelled `model="..."`).
+/// per-model series labelled `model="..."`; with replicated models,
+/// counters are summed per model and histogram series gain a
+/// `replica` label, since bucket state is per-replica and cannot be
+/// merged exactly).
 fn metrics_prom(ctx: &ServerCtx) -> String {
     let mut w = PromWriter::new();
     w.family("sira_uptime_seconds", "Seconds since server start.", "gauge");
@@ -443,11 +455,10 @@ fn metrics_prom(ctx: &ServerCtx) -> String {
         "counter",
     );
     for e in ctx.registry.entries() {
-        let m = &e.coordinator.metrics;
         w.sample(
             "sira_samples_completed_total",
             &[("model", &e.spec.name)],
-            m.completed.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            sum_replicas(e, |m| m.completed.load(std::sync::atomic::Ordering::Relaxed)),
         );
     }
     w.family(
@@ -456,11 +467,10 @@ fn metrics_prom(ctx: &ServerCtx) -> String {
         "counter",
     );
     for e in ctx.registry.entries() {
-        let m = &e.coordinator.metrics;
         w.sample(
             "sira_samples_failed_total",
             &[("model", &e.spec.name)],
-            m.failed.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            sum_replicas(e, |m| m.failed.load(std::sync::atomic::Ordering::Relaxed)),
         );
     }
     w.family(
@@ -469,11 +479,10 @@ fn metrics_prom(ctx: &ServerCtx) -> String {
         "counter",
     );
     for e in ctx.registry.entries() {
-        let m = &e.coordinator.metrics;
         w.sample(
             "sira_samples_expired_total",
             &[("model", &e.spec.name)],
-            m.expired.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            sum_replicas(e, |m| m.expired.load(std::sync::atomic::Ordering::Relaxed)),
         );
     }
     w.family(
@@ -482,11 +491,22 @@ fn metrics_prom(ctx: &ServerCtx) -> String {
         "counter",
     );
     for e in ctx.registry.entries() {
-        let m = &e.coordinator.metrics;
         w.sample(
             "sira_batches_total",
             &[("model", &e.spec.name)],
-            m.batches.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            sum_replicas(e, |m| m.batches.load(std::sync::atomic::Ordering::Relaxed)),
+        );
+    }
+    w.family(
+        "sira_pending_requests",
+        "Requests submitted but not yet resolved, per model (the least-loaded routing signal).",
+        "gauge",
+    );
+    for e in ctx.registry.entries() {
+        w.sample(
+            "sira_pending_requests",
+            &[("model", &e.spec.name)],
+            sum_replicas(e, |m| m.pending()),
         );
     }
     w.family(
@@ -495,11 +515,22 @@ fn metrics_prom(ctx: &ServerCtx) -> String {
         "histogram",
     );
     for e in ctx.registry.entries() {
-        w.histogram(
-            "sira_request_latency_microseconds",
-            &[("model", &e.spec.name)],
-            e.coordinator.metrics.latency_histogram(),
-        );
+        if e.replicas.len() == 1 {
+            w.histogram(
+                "sira_request_latency_microseconds",
+                &[("model", &e.spec.name)],
+                e.replicas[0].metrics.latency_histogram(),
+            );
+        } else {
+            for (i, c) in e.replicas.iter().enumerate() {
+                let r = i.to_string();
+                w.histogram(
+                    "sira_request_latency_microseconds",
+                    &[("model", &e.spec.name), ("replica", &r)],
+                    c.metrics.latency_histogram(),
+                );
+            }
+        }
     }
     w.family(
         "sira_batch_occupancy_samples",
@@ -507,11 +538,22 @@ fn metrics_prom(ctx: &ServerCtx) -> String {
         "histogram",
     );
     for e in ctx.registry.entries() {
-        w.histogram(
-            "sira_batch_occupancy_samples",
-            &[("model", &e.spec.name)],
-            e.coordinator.metrics.occupancy_histogram(),
-        );
+        if e.replicas.len() == 1 {
+            w.histogram(
+                "sira_batch_occupancy_samples",
+                &[("model", &e.spec.name)],
+                e.replicas[0].metrics.occupancy_histogram(),
+            );
+        } else {
+            for (i, c) in e.replicas.iter().enumerate() {
+                let r = i.to_string();
+                w.histogram(
+                    "sira_batch_occupancy_samples",
+                    &[("model", &e.spec.name), ("replica", &r)],
+                    c.metrics.occupancy_histogram(),
+                );
+            }
+        }
     }
     w.finish()
 }
@@ -605,18 +647,18 @@ fn handle_infer(
     // submit each sample individually — the coordinator's dynamic
     // batcher coalesces them (and concurrent clients' samples) into
     // engine batches; every job carries the request id so batch spans
-    // can be joined back to this request
+    // can be joined back to this request. Routing is per *request*, not
+    // per sample: one least-loaded decision sends all of a request's
+    // samples to the same replica, preserving batching locality.
     let t_exec = Instant::now();
+    let coordinator = entry.route();
     let mut handles = Vec::with_capacity(n);
     for data in samples {
         let t = match Tensor::new(&entry.input_shape, data) {
             Ok(t) => t,
             Err(e) => return Response::error(400, &format!("{e:#}")),
         };
-        match entry
-            .coordinator
-            .submit_traced(t, deadline, Some(Arc::clone(rid)))
-        {
+        match coordinator.submit_traced(t, deadline, Some(Arc::clone(rid))) {
             Ok(h) => handles.push(h),
             Err(e) => return error_response(&format!("{e:#}")),
         }

@@ -47,6 +47,15 @@ pub struct ModelSpec {
     /// sampled kernel timing, reported under `profile` in the model's
     /// metrics
     pub profile: bool,
+    /// serving replicas: N coordinators over clones of **one** compiled
+    /// plan. Clones share the packed weights behind an `Arc`, so N
+    /// replicas cost one weight allocation; requests route to the
+    /// least-pending replica ([`ModelEntry::route`]). 0 is treated as 1.
+    pub replicas: usize,
+    /// load the compiled plan from this [`engine::snapshot`] sidecar
+    /// instead of compiling (engine only) — the fleet cold-start path:
+    /// file read + weight re-pack instead of streamline → SIRA → compile
+    pub snapshot_path: Option<String>,
 }
 
 /// Sampling period the serving paths use when `--profile` is on: cheap
@@ -66,8 +75,23 @@ impl ModelSpec {
             pipeline: 1,
             workers: 2,
             profile: false,
+            replicas: 1,
+            snapshot_path: None,
         }
     }
+}
+
+/// Index of the replica with the fewest unresolved requests (first one
+/// wins ties, so a quiet server routes to replica 0). Standalone so the
+/// routing policy is testable without standing up coordinators.
+pub fn least_loaded(pending: &[u64]) -> usize {
+    let mut best = 0;
+    for (i, &p) in pending.iter().enumerate().skip(1) {
+        if p < pending[best] {
+            best = i;
+        }
+    }
+    best
 }
 
 /// One served model: its coordinator plus the metadata the HTTP layer
@@ -83,7 +107,15 @@ pub struct ModelEntry {
     /// one-line backend description (plan composition stats or backend
     /// name), for logs and `GET /v1/models`
     pub describe: String,
-    pub coordinator: Coordinator,
+    /// the serving replicas, never empty; route new work through
+    /// [`ModelEntry::route`], use [`ModelEntry::coordinator`] when any
+    /// replica will do (admin surfaces, single-replica callers)
+    pub replicas: Vec<Coordinator>,
+    /// compiled-plan composition stats (engine backends only). With the
+    /// serve-time flat-oracle drop, `flat_weight_elems` is 0 here and
+    /// `packed_weight_elems` is the **whole** weight footprint — shared
+    /// across every replica, not multiplied by them.
+    pub plan_stats: Option<engine::PlanStats>,
     /// per-step profiler shared with every plan clone (engine backends
     /// built with `spec.profile`, absent otherwise)
     pub profiler: Option<Arc<PlanProfiler>>,
@@ -91,54 +123,96 @@ pub struct ModelEntry {
 }
 
 impl ModelEntry {
-    /// Compile and start serving one model.
+    /// Compile (or snapshot-load) and start serving one model across
+    /// `spec.replicas` coordinators.
     pub fn build(spec: &ModelSpec, policy: BatchPolicy) -> Result<ModelEntry> {
-        let m = models::by_name(&spec.name)?;
+        let n_replicas = spec.replicas.max(1);
         if spec.engine {
-            let mut g = m.graph;
-            let analysis = if spec.streamline {
-                engine::prepare_streamlined(&mut g, &m.input_ranges)?
-            } else {
-                analyze(&g, &m.input_ranges)?
+            // one plan per model, however many replicas serve it
+            let (mut plan, origin) = match &spec.snapshot_path {
+                Some(path) => (engine::snapshot::load(path)?, format!(", snapshot {path}")),
+                None => {
+                    let m = models::by_name(&spec.name)?;
+                    let mut g = m.graph;
+                    let analysis = if spec.streamline {
+                        engine::prepare_streamlined(&mut g, &m.input_ranges)?
+                    } else {
+                        analyze(&g, &m.input_ranges)?
+                    };
+                    let tag = if spec.streamline { ", streamlined" } else { "" };
+                    (engine::compile(&g, &analysis)?, tag.to_string())
+                }
             };
-            let mut plan = engine::compile(&g, &analysis)?;
             plan.set_threads(spec.threads);
             if spec.profile {
                 // attach before any clone so workers/stages all share it
                 plan.enable_profiling(PROFILE_SAMPLE_EVERY);
             }
+            // serve-time memory trim: serving always dispatches the
+            // tiled kernels (bit-identical to the scalar oracle, locked
+            // by the kernel property suite), so the flat weight copies
+            // are dead here — drop them and the whole fleet runs on one
+            // packed, Arc-shared allocation per model
+            plan.drop_flat_oracles();
             let profiler = plan.profiler().cloned();
             let input_shape = plan.input_shape().to_vec();
             let input_numel = input_shape.iter().product();
             let output_shape = plan.output_shape().to_vec();
+            let replica_tag = if n_replicas > 1 {
+                format!(", replicas={n_replicas}")
+            } else {
+                String::new()
+            };
             let mut describe = format!(
-                "engine({}{}, threads={}) — {}",
-                m.name,
-                if spec.streamline { ", streamlined" } else { "" },
+                "engine({}{origin}, threads={}{replica_tag}) — {}",
+                spec.name,
                 spec.threads,
                 plan.stats()
             );
-            let coordinator = if spec.pipeline > 1 {
-                let sp = SegmentedPlan::new(plan, spec.pipeline);
-                describe = format!("{describe}; pipeline: {}", sp.describe());
-                Coordinator::start_pipelined(sp, policy)
+            let plan_stats = Some(plan.stats().clone());
+            let mut replicas = Vec::with_capacity(n_replicas);
+            if spec.pipeline > 1 {
+                let mut pipe_desc = String::new();
+                for r in 0..n_replicas {
+                    let sp = SegmentedPlan::new(plan.clone(), spec.pipeline);
+                    if r == 0 {
+                        pipe_desc = sp.describe();
+                    }
+                    replicas.push(Coordinator::start_pipelined(sp, policy));
+                }
+                describe = format!("{describe}; pipeline: {pipe_desc}");
             } else {
-                Coordinator::start_batched(spec.workers.max(1), policy, move || {
-                    let mut p = plan.clone();
-                    move |xs: &[Tensor]| p.run_batch(xs)
-                })
-            };
+                for _ in 0..n_replicas {
+                    let plan = plan.clone();
+                    replicas.push(Coordinator::start_batched(
+                        spec.workers.max(1),
+                        policy,
+                        move || {
+                            let mut p = plan.clone();
+                            move |xs: &[Tensor]| p.run_batch(xs)
+                        },
+                    ));
+                }
+            }
             Ok(ModelEntry {
                 spec: spec.clone(),
                 input_shape,
                 input_numel,
                 output_shape,
                 describe,
-                coordinator,
+                replicas,
+                plan_stats,
                 profiler,
                 started: Instant::now(),
             })
         } else {
+            if spec.snapshot_path.is_some() {
+                bail!(
+                    "model '{}': snapshot serving needs the engine backend (--engine)",
+                    spec.name
+                );
+            }
+            let m = models::by_name(&spec.name)?;
             let input_shape = m.input_shape.clone();
             let input_numel = input_shape.iter().product();
             let output_shape = m
@@ -148,33 +222,104 @@ impl ModelEntry {
                 .and_then(|o| m.graph.shapes.get(o))
                 .cloned()
                 .unwrap_or_default();
-            let describe = format!("executor({})", m.name);
+            let replica_tag = if n_replicas > 1 {
+                format!(", replicas={n_replicas}")
+            } else {
+                String::new()
+            };
+            let describe = format!("executor({}{replica_tag})", m.name);
             let g = Arc::new(m.graph);
-            let coordinator = Coordinator::start(spec.workers.max(1), policy, move || {
-                let g = Arc::clone(&g);
-                move |x: &Tensor| {
-                    let mut e = Executor::new(&g)?;
-                    Ok(e.run_single(x)?.remove(0))
-                }
-            });
+            let replicas = (0..n_replicas)
+                .map(|_| {
+                    let g = Arc::clone(&g);
+                    Coordinator::start(spec.workers.max(1), policy, move || {
+                        let g = Arc::clone(&g);
+                        move |x: &Tensor| {
+                            let mut e = Executor::new(&g)?;
+                            Ok(e.run_single(x)?.remove(0))
+                        }
+                    })
+                })
+                .collect();
             Ok(ModelEntry {
                 spec: spec.clone(),
                 input_shape,
                 input_numel,
                 output_shape,
                 describe,
-                coordinator,
+                replicas,
+                plan_stats: None,
                 profiler: None,
                 started: Instant::now(),
             })
         }
     }
 
+    /// The replica a new request should go to: the one with the fewest
+    /// unresolved submissions right now ([`Metrics::pending`] — relaxed
+    /// counters, so the reading is approximate under churn; any answer
+    /// is a correct replica, the depth signal only shapes the spread).
+    ///
+    /// [`Metrics::pending`]: crate::coordinator::Metrics::pending
+    pub fn route(&self) -> &Coordinator {
+        let pending: Vec<u64> = self.replicas.iter().map(|c| c.metrics.pending()).collect();
+        &self.replicas[least_loaded(&pending)]
+    }
+
+    /// The first replica — for admin surfaces and callers that existed
+    /// before replication (every entry has at least one).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.replicas[0]
+    }
+
+    /// Drain and join every replica.
+    pub fn shutdown(&self) {
+        for c in &self.replicas {
+            c.shutdown();
+        }
+    }
+
     /// Serving metrics for this model via the shared JSON emitter —
     /// plus the per-step `profile` report when a profiler is attached
-    /// (a pure addition, so the base schema cannot drift).
+    /// (a pure addition, so the base schema cannot drift). A single
+    /// replica reports exactly as before replication existed; with
+    /// N > 1 the top level carries the summed counters plus aggregate
+    /// throughput, and each replica's full shared-schema report lands
+    /// under `replicas` (histograms are per-replica state, so they are
+    /// reported there rather than approximately merged).
     pub fn metrics_json(&self) -> Json {
-        let mut j = self.coordinator.metrics.json_report(self.started.elapsed());
+        use std::sync::atomic::Ordering;
+        let wall = self.started.elapsed();
+        let mut j = if self.replicas.len() == 1 {
+            self.replicas[0].metrics.json_report(wall)
+        } else {
+            let sum = |f: &dyn Fn(&crate::coordinator::Metrics) -> u64| -> f64 {
+                self.replicas.iter().map(|c| f(&c.metrics)).sum::<u64>() as f64
+            };
+            let completed = sum(&|m| m.completed.load(Ordering::Relaxed));
+            Json::obj(vec![
+                ("submitted", Json::Num(sum(&|m| m.submitted.load(Ordering::Relaxed)))),
+                ("pending", Json::Num(sum(&|m| m.pending()))),
+                ("completed", Json::Num(completed)),
+                ("failed", Json::Num(sum(&|m| m.failed.load(Ordering::Relaxed)))),
+                ("expired", Json::Num(sum(&|m| m.expired.load(Ordering::Relaxed)))),
+                ("batches", Json::Num(sum(&|m| m.batches.load(Ordering::Relaxed)))),
+                ("wall_ms", Json::Num(wall.as_secs_f64() * 1e3)),
+                (
+                    "throughput_rps",
+                    Json::Num(completed / wall.as_secs_f64().max(1e-9)),
+                ),
+                (
+                    "replicas",
+                    Json::Arr(
+                        self.replicas
+                            .iter()
+                            .map(|c| c.metrics.json_report(wall))
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
         if let Some(p) = &self.profiler {
             if let Json::Obj(map) = &mut j {
                 map.insert("profile".to_string(), p.report().json());
@@ -194,6 +339,8 @@ impl ModelEntry {
             ("streamline", Json::Bool(self.spec.streamline)),
             ("threads", Json::Num(self.spec.threads as f64)),
             ("pipeline", Json::Num(self.spec.pipeline as f64)),
+            ("replicas", Json::Num(self.replicas.len() as f64)),
+            ("snapshot", Json::Bool(self.spec.snapshot_path.is_some())),
             (
                 "input_shape",
                 Json::nums(&self.input_shape.iter().map(|&d| d as f64).collect::<Vec<_>>()),
@@ -259,11 +406,12 @@ impl Registry {
         )
     }
 
-    /// Graceful: drain and join every coordinator. Requests submitted
-    /// afterwards fail with the coordinator's clean shutdown error.
+    /// Graceful: drain and join every replica of every model. Requests
+    /// submitted afterwards fail with the coordinator's clean shutdown
+    /// error.
     pub fn shutdown(&self) {
         for e in self.entries.values() {
-            e.coordinator.shutdown();
+            e.shutdown();
         }
     }
 }
@@ -284,7 +432,7 @@ mod tests {
         assert_eq!(e.input_numel, 784);
         assert_eq!(e.output_shape, vec![1, 10]);
         let y = e
-            .coordinator
+            .coordinator()
             .infer(Tensor::full(&[1, 784], 100.0))
             .unwrap();
         assert_eq!(y.shape(), &[1, 10]);
@@ -296,7 +444,7 @@ mod tests {
         reg.shutdown();
         // post-shutdown submits fail cleanly (the drain contract)
         let err = e
-            .coordinator
+            .coordinator()
             .infer(Tensor::full(&[1, 784], 1.0))
             .unwrap_err();
         assert!(err.to_string().contains("shut down"));
@@ -311,7 +459,7 @@ mod tests {
         let reg = Registry::build(&[spec], BatchPolicy::default()).unwrap();
         let e = reg.get("tfc").unwrap();
         for _ in 0..4 {
-            e.coordinator
+            e.coordinator()
                 .infer(Tensor::full(&[1, 784], 100.0))
                 .unwrap();
         }
@@ -325,6 +473,92 @@ mod tests {
         // the base metrics schema is untouched by the addition
         assert!(j.get("latency_us").unwrap().get("count").unwrap().as_usize().unwrap() >= 4);
         reg.shutdown();
+    }
+
+    /// The tie-break is "first minimum" so a quiet server deterministically
+    /// routes to replica 0; any strictly smaller depth wins.
+    #[test]
+    fn least_loaded_picks_first_minimum() {
+        assert_eq!(least_loaded(&[5]), 0);
+        assert_eq!(least_loaded(&[3, 1, 2]), 1);
+        assert_eq!(least_loaded(&[2, 1, 1]), 1);
+        assert_eq!(least_loaded(&[7, 7, 7]), 0);
+        assert_eq!(least_loaded(&[9, 8, 0]), 2);
+    }
+
+    /// N replicas serve clones of one plan: same answers, flat oracle
+    /// dropped, one shared packed-weight footprint in the stats.
+    #[test]
+    fn replicas_share_one_plan_and_stay_bit_exact() {
+        let spec = ModelSpec {
+            replicas: 3,
+            ..ModelSpec::engine_default("tfc")
+        };
+        let reg = Registry::build(&[spec], BatchPolicy::default()).unwrap();
+        let e = reg.get("tfc").unwrap();
+        assert_eq!(e.replicas.len(), 3);
+        let stats = e.plan_stats.as_ref().unwrap();
+        assert!(stats.packed_weight_elems > 0);
+        assert_eq!(
+            stats.flat_weight_elems, 0,
+            "serve-time plans must drop the flat oracle"
+        );
+        let x = Tensor::full(&[1, 784], 100.0);
+        let want = e.replicas[0].infer(x.clone()).unwrap();
+        for c in &e.replicas[1..] {
+            assert_eq!(c.infer(x.clone()).unwrap().data(), want.data());
+        }
+        // route() always answers one of the replicas and stays exact
+        for _ in 0..6 {
+            assert_eq!(e.route().infer(x.clone()).unwrap().data(), want.data());
+        }
+        // aggregated metrics: every submission above is accounted for
+        let j = e.metrics_json();
+        assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(j.get("pending").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(
+            j.get("replicas").unwrap().as_arr().unwrap().len(),
+            3,
+            "per-replica reports present when N > 1"
+        );
+        reg.shutdown();
+    }
+
+    /// The fleet cold-start path end to end: serve a model from a
+    /// snapshot sidecar (`ModelSpec::snapshot_path`) and get the
+    /// freshly compiled plan's bits.
+    #[test]
+    fn snapshot_cold_start_serves_identical_bits() {
+        let m = models::by_name("tfc").unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let mut compiled = engine::compile(&m.graph, &analysis).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("sira-registry-snap-{}.plan", std::process::id()));
+        engine::snapshot::save(&compiled, &path).unwrap();
+        let spec = ModelSpec {
+            snapshot_path: Some(path.to_string_lossy().into_owned()),
+            ..ModelSpec::engine_default("tfc")
+        };
+        let reg = Registry::build(&[spec], BatchPolicy::default()).unwrap();
+        let e = reg.get("tfc").unwrap();
+        assert!(e.describe.contains("snapshot"), "{}", e.describe);
+        let x = Tensor::full(&[1, 784], 100.0);
+        let want = compiled.run_batch(std::slice::from_ref(&x)).unwrap().remove(0);
+        let got = e.coordinator().infer(x).unwrap();
+        assert_eq!(got.data(), want.data(), "snapshot-served bits diverged");
+        reg.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_path_on_executor_backend_is_an_error() {
+        let spec = ModelSpec {
+            engine: false,
+            snapshot_path: Some("nowhere.plan".to_string()),
+            ..ModelSpec::engine_default("tfc")
+        };
+        let err = Registry::build(&[spec], BatchPolicy::default()).unwrap_err();
+        assert!(err.to_string().contains("engine backend"), "{err:#}");
     }
 
     #[test]

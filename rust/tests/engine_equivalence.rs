@@ -151,6 +151,136 @@ fn pooled_threads_zoo_bit_exact_across_calls() {
     }
 }
 
+/// Build (raw, streamlined) compiled plans for every zoo workload this
+/// suite exercises, with the graph each was compiled from.
+fn zoo_plans() -> Vec<(String, engine::Plan)> {
+    let mut out = Vec::new();
+    for m in [
+        models::tfc_w2a2().unwrap(),
+        models::cnv_w2a2().unwrap(),
+        models::rn8_w3a3().unwrap(),
+        models::mnv1_w4a4_scaled(8).unwrap(),
+    ] {
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        out.push((
+            format!("{} (raw)", m.name),
+            engine::compile(&m.graph, &analysis).unwrap(),
+        ));
+        let mut g = m.graph.clone();
+        let analysis = engine::prepare_streamlined(&mut g, &m.input_ranges).unwrap();
+        out.push((
+            format!("{} (streamlined)", m.name),
+            engine::compile(&g, &analysis).unwrap(),
+        ));
+    }
+    out
+}
+
+/// Tentpole lock (ROADMAP item 5): a plan that went through the binary
+/// snapshot format answers with the freshly compiled plan's bits — for
+/// every zoo workload, raw and streamlined.
+#[test]
+fn snapshot_roundtrip_bit_exact_across_zoo() {
+    for (label, mut fresh) in zoo_plans() {
+        let bytes = engine::snapshot::to_bytes(&fresh);
+        let mut loaded = engine::snapshot::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("{label}: snapshot decode failed: {e:#}"));
+        assert_eq!(loaded.stats().steps, fresh.stats().steps, "{label}");
+        assert_eq!(
+            loaded.stats().integer_macs(),
+            fresh.stats().integer_macs(),
+            "{label}"
+        );
+        assert_eq!(
+            loaded.stats().packed_weight_elems,
+            fresh.stats().packed_weight_elems,
+            "{label}"
+        );
+        let mut rng = Rng::new(0x54A9);
+        let xs = random_batch(&mut rng, &fresh.input_shape().to_vec(), 2);
+        let want = fresh.run_batch(&xs).unwrap();
+        let got = loaded.run_batch(&xs).unwrap();
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.shape(), g.shape(), "{label}: shape at sample {i}");
+            assert_eq!(
+                w.data(),
+                g.data(),
+                "{label}: snapshot-loaded plan not bit-exact at sample {i}"
+            );
+        }
+    }
+}
+
+/// A corrupted snapshot must be a clean error, never a wrong answer:
+/// every single-byte flip — header, length, checksum, or payload — and
+/// every truncation point is rejected at decode.
+#[test]
+fn snapshot_corruption_is_always_a_clean_error() {
+    let m = models::tfc_w2a2().unwrap();
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    let plan = engine::compile(&m.graph, &analysis).unwrap();
+    let good = engine::snapshot::to_bytes(&plan);
+    assert!(engine::snapshot::from_bytes(&good).is_ok());
+    for i in (0..good.len()).step_by(101) {
+        let mut bad = good.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            engine::snapshot::from_bytes(&bad).is_err(),
+            "flipped byte {i} of {} decoded anyway",
+            good.len()
+        );
+    }
+    for cut in [0, 7, 27, 28, good.len() / 3, good.len() - 1] {
+        assert!(
+            engine::snapshot::from_bytes(&good[..cut]).is_err(),
+            "truncation at {cut} decoded anyway"
+        );
+    }
+}
+
+/// The fleet-memory claim, asserted at the allocation: N plan clones
+/// (what N serving replicas hold) share ONE packed-weight allocation —
+/// `Arc::strong_count` observed through `packed_share_count` rises and
+/// falls with the clones instead of duplicating weights.
+#[test]
+fn plan_clones_share_one_packed_weight_allocation() {
+    let m = models::tfc_w2a2().unwrap();
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    let plan = engine::compile(&m.graph, &analysis).unwrap();
+    assert_eq!(plan.packed_share_count(), Some(1));
+    let clones: Vec<_> = (0..7).map(|_| plan.clone()).collect();
+    assert_eq!(
+        plan.packed_share_count(),
+        Some(8),
+        "7 clones + the original must share one packed allocation"
+    );
+    drop(clones);
+    assert_eq!(plan.packed_share_count(), Some(1));
+}
+
+/// Serve-time memory trim: after `drop_flat_oracles` the plan runs the
+/// tiled kernels from packed storage only — and still answers with the
+/// untrimmed plan's bits.
+#[test]
+fn dropped_flat_oracles_stay_bit_exact() {
+    for (label, mut fresh) in zoo_plans() {
+        let mut trimmed = fresh.clone();
+        trimmed.drop_flat_oracles();
+        assert_eq!(trimmed.stats().flat_weight_elems, 0, "{label}");
+        let mut rng = Rng::new(0xD50F);
+        let xs = random_batch(&mut rng, &fresh.input_shape().to_vec(), 2);
+        let want = fresh.run_batch(&xs).unwrap();
+        let got = trimmed.run_batch(&xs).unwrap();
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                w.data(),
+                g.data(),
+                "{label}: flat-dropped plan diverged at sample {i}"
+            );
+        }
+    }
+}
+
 #[test]
 fn engine_batching_is_order_preserving() {
     // outputs must correspond to inputs positionally, not just setwise

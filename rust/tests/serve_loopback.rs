@@ -167,6 +167,133 @@ fn loopback_is_bit_exact_vs_run_batch() {
     assert!(server.shutdown(), "drain must complete");
 }
 
+/// Replicated serving (ISSUE 7 tentpole): N replicas behind the HTTP
+/// front end are coordinators over clones of **one** trimmed plan —
+/// responses stay bit-exact against a direct [`Plan::run_batch`],
+/// least-loaded routing spreads overlapping traffic beyond replica 0,
+/// and the aggregated per-model metrics account for every sample
+/// exactly once (summed counters + a per-replica report array).
+#[test]
+fn replicated_serving_is_bit_exact_and_spreads_load() {
+    let cfg = ServerConfig {
+        specs: vec![ModelSpec {
+            replicas: 3,
+            ..ModelSpec::engine_default("cnv")
+        }],
+        max_pending: 1024,
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let addr = server.addr().to_string();
+    let numel = 3 * 32 * 32;
+
+    // the replicas serve clones of ONE serve-trimmed plan: flat oracle
+    // dropped, packed weights the whole (shared) footprint
+    {
+        let entry = server.registry().get("cnv").unwrap();
+        assert_eq!(entry.replicas.len(), 3);
+        let stats = entry.plan_stats.as_ref().unwrap();
+        assert!(stats.packed_weight_elems > 0, "{stats}");
+        assert_eq!(stats.flat_weight_elems, 0, "{stats}");
+    }
+
+    // 6 clients post overlapping batch-8 requests; the barrier releases
+    // the first round's writes together, so the slow CNV batches overlap
+    // and routing sees nonzero pending depths
+    let barrier = std::sync::Barrier::new(6);
+    type Recorded = (Vec<Vec<f64>>, Vec<Vec<f64>>);
+    let recorded: Vec<Recorded> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..6usize {
+            let addr = addr.clone();
+            let barrier = &barrier;
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::new(0x5CA1E + t as u64 * 97);
+                let mut client = Client::connect(&addr).unwrap();
+                let mut out: Vec<Recorded> = Vec::new();
+                for round in 0..2usize {
+                    let samples = random_samples(&mut rng, numel, 8);
+                    if round == 0 {
+                        barrier.wait();
+                    }
+                    let (status, reply) = client
+                        .post_json("/v1/models/cnv/infer", &[], &infer_body(&samples))
+                        .unwrap();
+                    assert_eq!(status, 200, "{reply}");
+                    let outputs: Vec<Vec<f64>> = reply
+                        .get("outputs")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|o| o.as_f64_vec().unwrap())
+                        .collect();
+                    assert_eq!(outputs.len(), 8);
+                    out.push((samples, outputs));
+                }
+                out
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    });
+
+    // replay every request against a local plan: element-exact whichever
+    // replica answered
+    let mut plan = reference_plan("cnv");
+    let shape = plan.input_shape().to_vec();
+    for (samples, outputs) in &recorded {
+        let xs: Vec<Tensor> = samples
+            .iter()
+            .map(|s| Tensor::new(&shape, s.clone()).unwrap())
+            .collect();
+        let want = plan.run_batch(&xs).unwrap();
+        for (w, got) in want.iter().zip(outputs) {
+            assert_eq!(
+                w.data(),
+                got.as_slice(),
+                "replicated serving diverged from Plan::run_batch"
+            );
+        }
+    }
+    let total = (recorded.len() * 8) as u64;
+
+    // every sample accounted for exactly once across the replicas, and
+    // the overlapping burst reached beyond the first replica
+    {
+        use std::sync::atomic::Ordering;
+        let entry = server.registry().get("cnv").unwrap();
+        let per: Vec<u64> = entry
+            .replicas
+            .iter()
+            .map(|c| c.metrics.completed.load(Ordering::Relaxed))
+            .collect();
+        assert_eq!(per.iter().sum::<u64>(), total, "{per:?}");
+        assert!(
+            per.iter().filter(|&&c| c > 0).count() >= 2,
+            "least-loaded routing must spread overlapping traffic: {per:?}"
+        );
+    }
+
+    // the /metrics report for the model sums the replicas and carries
+    // their individual shared-schema reports
+    let mut c = Client::connect(&addr).unwrap();
+    let (status, body) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let cnv = v.get("models").unwrap().get("cnv").unwrap();
+    assert_eq!(cnv.get("completed").unwrap().as_usize().unwrap() as u64, total);
+    assert_eq!(cnv.get("pending").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(cnv.get("replicas").unwrap().as_arr().unwrap().len(), 3);
+    assert!(server.shutdown(), "drain must complete");
+}
+
 /// Overload: a tight admission bound sheds concurrent batch requests
 /// with 503 (`cnv` batches are slow enough to overlap), and the server
 /// keeps serving afterwards.

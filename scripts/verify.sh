@@ -4,9 +4,11 @@
 # gate (when clippy is installed), the test suite, the engine
 # differential suite under a pinned seed (release, so the 50-case
 # harness is fast), the perf_hotpath batch-8 regression gate (plain and
-# pipelined configurations) against BENCH_baseline.json, the loadgen
-# prom smoke (scrape + validate /metrics?format=prom against a live
-# server), and — when rustfmt is installed — the formatting check.
+# pipelined configurations) against BENCH_baseline.json, the snapshot
+# round-trip smoke (save a compiled plan sidecar, load it, prove it
+# bit-exact against a fresh compile), the loadgen prom smoke (scrape +
+# validate /metrics?format=prom against a live server), and — when
+# rustfmt is installed — the formatting check.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -47,6 +49,16 @@ echo "== perf_hotpath batch-8 gate, plain + pipelined + tiled MVU + serve loopba
 mkdir -p target
 [ -f target/BENCH_baseline.local.json ] || cp BENCH_baseline.json target/BENCH_baseline.local.json
 cargo bench --bench perf_hotpath -- --gate target/BENCH_baseline.local.json
+
+# Snapshot cold-start smoke: serialize a compiled tfc plan to a sidecar,
+# load it back, and prove the loaded plan bit-exact against a fresh
+# compile (--check-model runs both on the same probe batch and fails on
+# any diverging element).
+echo "== snapshot round-trip smoke: save + load --check-model (bit-exact or nonzero exit) =="
+SNAP=target/verify_tfc.plan
+target/release/sira-finn snapshot save --model tfc --out "$SNAP"
+target/release/sira-finn snapshot load --file "$SNAP" --check-model tfc
+rm -f "$SNAP"
 
 # Observability smoke: a real server on an ephemeral loopback port,
 # driven by loadgen, then `--prom` scrapes /metrics?format=prom and
