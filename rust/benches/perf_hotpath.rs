@@ -14,9 +14,11 @@
 //! `cargo bench --bench perf_hotpath -- --gate BENCH_baseline.json` runs
 //! only the engine batch-8 measurements — threads 1 and 4 through
 //! `run_batch`, the threads-4 two-segment *pipelined* coordinator
-//! configuration, the tiled large-MVU configuration (a synthetic
-//! 784×256 integer MatMul, the shape class the register-blocked kernels
-//! target), plus the loopback network-serving configuration
+//! configuration, the tiled large-MVU configurations (synthetic 784×256
+//! and deep-K 4096×256 integer MatMuls, the shape classes the
+//! register-blocked and KC cache-blocked kernels target), the mnv1
+//! depthwise configuration, plus the loopback network-serving
+//! configuration
 //! (`serve/loopback/cnv/b8`: a real `127.0.0.1` HTTP server driven by
 //! the in-crate load generator) and the cold-start pair
 //! (`coldstart/<model>/{compile,snapshot}`: full graph→SIRA→compile vs
@@ -34,8 +36,9 @@
 //! cores head to head — scalar `MacElem::mac_row` vs the tiled
 //! `tile::mac_rows_tiled` — across MVU shapes from single-row FC layers
 //! to im2col conv frames, printing one JSON line per (width, shape) with
-//! both timings and the speedup. This is the observable for re-tuning
-//! the `NR`/`MR` tile constants per target CPU (see ROADMAP.md).
+//! both timings and the speedup. For picking per-shape tiling schemes,
+//! prefer `sira-finn tune`, which measures candidates and persists the
+//! winners for every later compile ([`sira_finn::engine::tune`]).
 //!
 //! # Per-step plan profile
 //!
@@ -142,14 +145,18 @@ fn measure_pipelined_b8(model: &str, threads: usize, segments: usize) -> f64 {
 }
 
 /// Synthetic large-MVU gate workload: a unit-scale uint8 quant feeding a
-/// (784, 256) integer MatMul at batch 8 — big enough that the default
+/// (k, 256) integer MatMul at batch 8 — big enough that the default
 /// `min_tile_work` gate engages the tiled register-blocked kernels (the
 /// configuration this gate key locks; the zoo models' layers straddle
-/// the gate, this one is squarely above it).
-fn measure_mvu_b8(b: &Bencher, threads: usize) -> f64 {
+/// the gate, this one is squarely above it). k=784 is the classic MVU
+/// shape; k=4096 is the deep-K shape whose working set spills L1/L2 —
+/// the case KC cache blocking (`tile::mac_rows_blocked` + the tuned
+/// scheme) exists for.
+fn measure_mvu_b8(b: &Bencher, k: usize, threads: usize) -> f64 {
     use sira_finn::graph::{Graph, Node, Op, RoundMode};
-    let mut g = Graph::new("mvu784x256");
-    g.add_input("x", &[1, 784]);
+    let name = format!("mvu{k}x256");
+    let mut g = Graph::new(&name);
+    g.add_input("x", &[1, k]);
     g.add_initializer("one", Tensor::scalar(1.0));
     g.add_initializer("z", Tensor::scalar(0.0));
     g.add_initializer("bits", Tensor::scalar(8.0));
@@ -167,8 +174,8 @@ fn measure_mvu_b8(b: &Bencher, threads: usize) -> f64 {
     g.add_initializer(
         "W",
         Tensor::new(
-            &[784, 256],
-            (0..784 * 256).map(|_| rng.int_in(-3, 3) as f64).collect(),
+            &[k, 256],
+            (0..k * 256).map(|_| rng.int_in(-3, 3) as f64).collect(),
         )
         .unwrap(),
     );
@@ -185,8 +192,31 @@ fn measure_mvu_b8(b: &Bencher, threads: usize) -> f64 {
         plan.stats()
     );
     plan.set_threads(threads);
-    let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &[1, 784])).collect();
-    let r = b.run(&format!("engine mvu784x256 b=8 t={threads}"), || {
+    let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &[1, k])).collect();
+    let r = b.run(&format!("engine {name} b=8 t={threads}"), || {
+        plan.run_batch(&batch8).unwrap()
+    });
+    r.mean.as_nanos() as f64 / 8.0
+}
+
+/// Depthwise gate workload: the mnv1-style separable stack at batch 8 —
+/// its depthwise layers must compile onto [`engine`] depthwise steps and
+/// dispatch the tiled per-channel row-sweep kernel, so a silent
+/// fall-back to the scalar per-tap loop fails tier-1 as a throughput
+/// regression.
+fn measure_dw_b8(b: &Bencher, threads: usize) -> f64 {
+    let zm = models::mnv1_w4a4_scaled(4).unwrap();
+    let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
+    let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
+    assert!(
+        plan.stats().depthwise >= 1,
+        "mnv1 gate must compile depthwise steps: {}",
+        plan.stats()
+    );
+    plan.set_threads(threads);
+    let mut rng = Rng::new(0xD317);
+    let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
+    let r = b.run(&format!("engine mnv1 dw b=8 t={threads}"), || {
         plan.run_batch(&batch8).unwrap()
     });
     r.mean.as_nanos() as f64 / 8.0
@@ -422,15 +452,26 @@ fn run_gate(path: &str) -> i32 {
         json_line("gate-pipelined", "engine", model, 8, 4, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
-    // tiled large-MVU configuration: the synthetic 784x256 integer
-    // MatMul at batch 8, threads 1 — the shape class where the
-    // register-blocked kernels pay off most, gated so a tiling
-    // regression (or an accidental fall-back to the scalar oracle on
-    // large kernels) fails tier-1
+    // tiled large-MVU configurations: synthetic (k, 256) integer MatMuls
+    // at batch 8, threads 1 — the shape class where the register-blocked
+    // kernels pay off most, gated so a tiling regression (or an
+    // accidental fall-back to the scalar oracle on large kernels) fails
+    // tier-1. k=784 locks the classic shape; k=4096 is the deep-K shape
+    // where KC cache blocking engages (its panel working set spills the
+    // cache without it)
+    for k in [784usize, 4096] {
+        let name = format!("mvu{k}x256");
+        let key = format!("engine/{name}/b8/t1/tiled");
+        let got = measure_mvu_b8(&b, k, 1);
+        json_line("gate-mvu", "engine", &name, 8, 1, got);
+        gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
+    }
+    // depthwise configuration: mnv1's separable stack at batch 8,
+    // threads 1 — locks the depthwise tiled dispatch path
     {
-        let key = "engine/mvu784x256/b8/t1/tiled".to_string();
-        let got = measure_mvu_b8(&b, 1);
-        json_line("gate-mvu", "engine", "mvu784x256", 8, 1, got);
+        let key = "engine/mnv1/b8/t1/dw".to_string();
+        let got = measure_dw_b8(&b, 1);
+        json_line("gate-dw", "engine", "mnv1", 8, 1, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
     // full network serving path: loopback HTTP server + load generator,

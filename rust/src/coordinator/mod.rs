@@ -636,13 +636,25 @@ impl Coordinator {
         // stage s sends its carry to stage s + 1
         let mut stage_tx: Vec<Sender<StageMsg>> = Vec::new();
         let mut stage_rx: Vec<Receiver<StageMsg>> = Vec::new();
+        // ...and stage s + 1 sends the buffers that carry displaced from
+        // its state back to stage s (the recycle loop): steady-state
+        // pipelining then moves carries without allocating. Best-effort —
+        // a full/never-drained return hop degrades to the old
+        // allocate-per-batch behaviour, never to blocking.
+        let mut recycle_tx: Vec<Sender<Vec<Vec<f64>>>> = Vec::new();
+        let mut recycle_rx: Vec<Receiver<Vec<Vec<f64>>>> = Vec::new();
         for _ in 1..nseg {
             let (t, r) = channel::<StageMsg>();
             stage_tx.push(t);
             stage_rx.push(r);
+            let (t, r) = channel::<Vec<Vec<f64>>>();
+            recycle_tx.push(t);
+            recycle_rx.push(r);
         }
         let mut stage_tx = stage_tx.into_iter();
         let mut stage_rx = stage_rx.into_iter();
+        let mut recycle_tx = recycle_tx.into_iter();
+        let mut recycle_rx = recycle_rx.into_iter();
 
         // stage 0: drain + validate + pack + segment 0
         {
@@ -650,6 +662,7 @@ impl Coordinator {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
             let next = stage_tx.next(); // None when the plan is one segment
+            let returns = recycle_rx.next();
             workers.push(std::thread::spawn(move || {
                 let mut ws = WorkerState::default();
                 while let Some(batch) = drain_batch(&rx, &policy) {
@@ -688,6 +701,14 @@ impl Coordinator {
                                 if let Err(lost) = nx.send(StageMsg { metas, b, carry }) {
                                     fail_batch(&metrics, lost.0.metas, "pipeline stage exited");
                                 }
+                                // refill the just-emptied carry slots from
+                                // the downstream stage's returns, if any
+                                // have come back yet
+                                if let Some(back) = &returns {
+                                    while let Ok(bufs) = back.try_recv() {
+                                        sp.restore_carry(0, &mut ws, bufs);
+                                    }
+                                }
                             }
                             None => {
                                 metrics.record_segment(0, t0.elapsed());
@@ -706,16 +727,21 @@ impl Coordinator {
             let sp = Arc::clone(&sp);
             let metrics = Arc::clone(&metrics);
             let rx = stage_rx.next().expect("one receiver per later stage");
+            let back = recycle_tx.next().expect("one return sender per later stage");
             let next = if s + 1 < nseg {
                 Some(stage_tx.next().expect("one sender per inner stage"))
             } else {
                 None
             };
+            let returns = if s + 1 < nseg { recycle_rx.next() } else { None };
             workers.push(std::thread::spawn(move || {
                 let mut ws = WorkerState::default();
                 while let Ok(StageMsg { metas, b, carry }) = rx.recv() {
                     let t0 = Instant::now();
-                    sp.put_carry(s - 1, &mut ws, carry);
+                    let displaced = sp.put_carry(s - 1, &mut ws, carry);
+                    // hand the previous batch's buffers back upstream;
+                    // if the sender is gone, dropping them is fine
+                    let _ = back.send(displaced);
                     match sp.run_segment(s, &mut ws, b) {
                         Ok(()) => match &next {
                             Some(nx) => {
@@ -724,6 +750,11 @@ impl Coordinator {
                                 trace_batch_exec("segment_exec", Some(s), b, t0.elapsed(), &metas);
                                 if let Err(lost) = nx.send(StageMsg { metas, b, carry }) {
                                     fail_batch(&metrics, lost.0.metas, "pipeline stage exited");
+                                }
+                                if let Some(ret) = &returns {
+                                    while let Ok(bufs) = ret.try_recv() {
+                                        sp.restore_carry(s, &mut ws, bufs);
+                                    }
                                 }
                             }
                             None => {

@@ -52,15 +52,18 @@ use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 use super::arena::{assign, StepUse};
 use super::kernels::{MacMat, MicroOp, Param, ThresholdTable, WeightMat};
 use super::plan::{
-    BinKind, BinaryStep, ConvStep, DepthwiseStep, EwChainStep, GSrc, GenericStep, MacElide,
-    MatMulStep, Plan, PlanStats, PoolStep, Step,
+    BinKind, BinaryStep, ConvStep, DepthwiseStep, DwTaps, EwChainStep, GSrc, GenericStep,
+    MacElide, MatMulStep, Plan, PlanStats, PoolStep, Step,
 };
+use super::tune::TilingScheme;
 
 /// Conservative headroom limits for integer accumulation: the worst-case
 /// partial-sum magnitude bound must stay below these for the narrowed
-/// kernels to be selected.
-const I32_LIMIT: f64 = 2_147_000_000.0;
-const I64_LIMIT: f64 = 4.0e18;
+/// kernels to be selected. Shared with the plan runner, which re-checks
+/// the recorded bound (`kc_bound`) against the accumulator width before
+/// allowing the KC-blocked k-order onto a step.
+pub(crate) const I32_LIMIT: f64 = 2_147_000_000.0;
+pub(crate) const I64_LIMIT: f64 = 4.0e18;
 
 /// A chosen-width weight matrix still in flat `(rows, n)` row-major
 /// form, before the tile-major pre-pack. Elision compaction and bias
@@ -725,7 +728,18 @@ impl<'g> Compiler<'g> {
     /// partial-sum magnitude `max_j Σ_k amax_k*|w_kj|` fits; f64
     /// otherwise. `wdata` is `(k, n)` row-major. Returns the flat form —
     /// the tile-major pack happens once, after elision settles the final
-    /// matrix ([`FlatMat::into_weight_mat`]).
+    /// matrix ([`FlatMat::into_weight_mat`]) — plus the proven `peak`
+    /// bound (`0.0` for the f64 fallback, where no bound was proven).
+    ///
+    /// The bound doubles as the KC-blocking proof recorded on the step
+    /// (`kc_bound`): under k blocking every intermediate is either a
+    /// zero-seeded chunk partial (`|·| ≤ Σ_chunk amax·|w|`) or the bias
+    /// seed plus a prefix of whole chunks — both bounded by `peak`, so
+    /// `peak` under the width limit means no intermediate wraps, integer
+    /// addition stays associative, and the reordered sum is
+    /// bit-identical to the single-pass one. Elision only shrinks the
+    /// row set the bound sums over, so the pre-elision `peak` remains an
+    /// upper bound for the compacted kernel (bias included).
     fn choose_weight_mat(
         &self,
         out_name: &str,
@@ -733,8 +747,8 @@ impl<'g> Compiler<'g> {
         wdata: &[f64],
         k: usize,
         n: usize,
-    ) -> FlatMat {
-        let fallback = || FlatMat::F64(wdata.to_vec());
+    ) -> (FlatMat, f64) {
+        let fallback = || (FlatMat::F64(wdata.to_vec()), 0.0);
         // cheap reject via the shared SIRA metadata: no integer output
         // interval means the operands cannot both be pure integers
         if sira_int_bounds(self.analysis, out_name).is_none() {
@@ -758,9 +772,9 @@ impl<'g> Compiler<'g> {
         let wmax = wdata.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
         let peak = worst.max(amax_all).max(wmax);
         if peak < I32_LIMIT {
-            FlatMat::I32(wdata.iter().map(|&v| v as i32).collect())
+            (FlatMat::I32(wdata.iter().map(|&v| v as i32).collect()), peak)
         } else if peak < I64_LIMIT {
-            FlatMat::I64(wdata.iter().map(|&v| v as i64).collect())
+            (FlatMat::I64(wdata.iter().map(|&v| v as i64).collect()), peak)
         } else {
             fallback()
         }
@@ -786,7 +800,7 @@ impl<'g> Compiler<'g> {
             per_k
         });
         let out_name = node.outputs[0].clone();
-        let mut flat = self.choose_weight_mat(&out_name, amax, w.data(), k, n);
+        let (mut flat, kc_bound) = self.choose_weight_mat(&out_name, amax, w.data(), k, n);
         // §7.1 stuck-channel elision: input positions proven constant
         // never enter the MAC; their contribution seeds the accumulator.
         // m == 1 keeps the per-row gather trivial (all zoo layers).
@@ -836,6 +850,8 @@ impl<'g> Compiler<'g> {
             w: wmat,
             fused: table,
             elide,
+            kc_bound,
+            scheme: TilingScheme::default(),
         }));
         Ok(())
     }
@@ -865,7 +881,7 @@ impl<'g> Compiler<'g> {
             (0..k).map(|kk| chmax[kk / (kh * kw)]).collect::<Vec<f64>>()
         });
         let out_name = node.outputs[0].clone();
-        let mut flat = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
+        let (mut flat, kc_bound) = self.choose_weight_mat(&out_name, amax, wmat_t.data(), k, oc);
         // §7.1 stuck-channel elision: a channel whose every spatial
         // element is stuck at one value leaves the im2col + MAC entirely.
         // With pad 0 the contribution is the same at every output
@@ -941,6 +957,8 @@ impl<'g> Compiler<'g> {
             wmat,
             fused: table,
             elide,
+            kc_bound,
+            scheme: TilingScheme::default(),
         }));
         Ok(())
     }
@@ -954,14 +972,97 @@ impl<'g> Compiler<'g> {
         consumed: &mut [bool],
     ) -> Result<()> {
         let (ch, h, wd) = (x_shape[1], x_shape[2], x_shape[3]);
+        let (kh, kw) = spec.kernel;
         let (oh, ow) = spec.out_hw(h, wd);
         let out_name = node.outputs[0].clone();
         let out_shape = self.sample_shape(&out_name)?.to_vec();
         let fused = self.fusable_threshold(&out_name, &out_shape, consumed);
         let (table, final_out) = match fused {
             Some((t, mt_out)) => (Some(t), mt_out),
-            None => (None, out_name),
+            None => (None, out_name.clone()),
         };
+        let weights = w.data().to_vec();
+
+        // Per-channel SIRA bound — the depthwise analogue of
+        // choose_weight_mat's `peak`: output channel `c` only ever sums
+        // its own channel's taps, so `worst = max_c amax_c * Σ_taps|w_c|`
+        // bounds every (prefix of the) per-element accumulation. The
+        // row-sweep kernel applies taps in the exact scalar order, so
+        // the bound gates accumulator *width* only, not a reorder.
+        let mut kc_bound = 0.0f64;
+        if sira_int_bounds(self.analysis, &out_name).is_some()
+            && weights.iter().all(|v| v.fract() == 0.0 && v.is_finite())
+        {
+            if let Some(full) = self.activation_amax(&node.inputs[0], x_shape) {
+                let hw = h * wd;
+                let mut chmax = vec![0.0f64; ch];
+                for (i, &v) in full.iter().enumerate() {
+                    chmax[i / hw] = chmax[i / hw].max(v);
+                }
+                let per_ch = kh * kw;
+                let mut worst = 0.0f64;
+                for (c, &cm) in chmax.iter().enumerate() {
+                    let wsum: f64 =
+                        weights[c * per_ch..(c + 1) * per_ch].iter().map(|t| t.abs()).sum();
+                    worst = worst.max(cm * wsum);
+                }
+                let amax_all = chmax.iter().cloned().fold(0.0f64, f64::max);
+                let wmax = weights.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+                kc_bound = worst.max(amax_all).max(wmax);
+            }
+        }
+        let taps = if kc_bound > 0.0 && kc_bound < I32_LIMIT {
+            DwTaps::I32(weights.iter().map(|&v| v as i32).collect())
+        } else if kc_bound > 0.0 && kc_bound < I64_LIMIT {
+            DwTaps::I64(weights.iter().map(|&v| v as i64).collect())
+        } else {
+            kc_bound = 0.0;
+            DwTaps::F64
+        };
+
+        // §7.1 stuck-channel elision, depthwise form: a channel whose
+        // every input element is stuck contributes a compile-time
+        // constant output plane. The plane is precomputed with the exact
+        // scalar f64 tap order (pad taps skipped) and finished through
+        // the fused threshold — so the run-time copy is bit-identical to
+        // recomputing, on every accumulator width, which is why (unlike
+        // the matmul/conv form) this needs no integrality restriction.
+        let mut elided: Vec<(usize, Vec<f64>)> = Vec::new();
+        if let Ok(stuck) = stuck::stuck_elements(self.analysis, &node.inputs[0], x_shape) {
+            let hw = h * wd;
+            for c in 0..ch {
+                let v0 = match stuck[c * hw] {
+                    Some(v) if stuck[c * hw..(c + 1) * hw].iter().all(|&e| e == Some(v)) => v,
+                    _ => continue,
+                };
+                let mut plane = vec![0.0f64; oh * ow];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f64;
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+                                let ix = (ox * spec.stride.1 + kx) as isize - spec.pad.1 as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += v0 * weights[(c * kh + ky) * kw + kx];
+                            }
+                        }
+                        plane[oy * ow + ox] = match &table {
+                            Some(t) => t.apply_channel(acc, c),
+                            None => acc,
+                        };
+                    }
+                }
+                elided.push((c, plane));
+            }
+            if !elided.is_empty() {
+                self.stats.elided_mac_steps += 1;
+                self.stats.elided_mac_channels += elided.len();
+            }
+        }
+
         self.stats.depthwise += 1;
         if table.is_some() {
             self.stats.fused_thresholds += 1;
@@ -977,8 +1078,11 @@ impl<'g> Compiler<'g> {
             oh,
             ow,
             spec,
-            weights: w.data().to_vec(),
+            weights,
             fused: table,
+            taps,
+            kc_bound,
+            elided,
         }));
         Ok(())
     }

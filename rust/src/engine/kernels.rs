@@ -317,6 +317,12 @@ pub trait MacElem: Copy + Send + Sync + 'static {
     fn to_f64(self) -> f64;
     fn is_zero(self) -> bool;
     fn mul_acc(self, a: Self, b: Self) -> Self;
+    /// Plain addition — what the KC-blocked kernels spill chunk partials
+    /// with. Deliberately *not* wrapping for the integer widths: under
+    /// the `relcheck` overflow-check profile an unproven reorder panics
+    /// instead of silently wrapping back to the right answer, which is
+    /// the property the accumulator-edge suite pins.
+    fn add(self, other: Self) -> Self;
 
     /// `acc += a_row · W[:, cols]` over `(k, n)` weights, accumulating in
     /// increasing k order with the same zero-skip as
@@ -366,6 +372,10 @@ impl MacElem for f64 {
     fn mul_acc(self, a: Self, b: Self) -> Self {
         self + a * b
     }
+    #[inline(always)]
+    fn add(self, other: Self) -> Self {
+        self + other
+    }
 }
 
 impl MacElem for i32 {
@@ -391,6 +401,10 @@ impl MacElem for i32 {
     fn mul_acc(self, a: Self, b: Self) -> Self {
         self + a * b
     }
+    #[inline(always)]
+    fn add(self, other: Self) -> Self {
+        self + other
+    }
 }
 
 impl MacElem for i64 {
@@ -415,6 +429,10 @@ impl MacElem for i64 {
     #[inline(always)]
     fn mul_acc(self, a: Self, b: Self) -> Self {
         self + a * b
+    }
+    #[inline(always)]
+    fn add(self, other: Self) -> Self {
+        self + other
     }
 }
 

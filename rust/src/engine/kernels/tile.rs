@@ -21,13 +21,27 @@
 //! sequentially over `k`, so each panel is read exactly once per row
 //! block while the `MR` activation rows are reused from registers/L1.
 //!
+//! # KC blocking
+//!
+//! [`mac_rows_blocked`] adds a cache-blocked loop nest on top of the
+//! same panels: the dot length is cut into `kc`-deep chunks, and for
+//! each chunk a *group* of panels is swept while the chunk of
+//! activation rows stays L1-resident. Each `(chunk, panel)` pair
+//! accumulates into a zero-seeded register tile that is then **spilled**
+//! (added) into the memory accumulator. This changes the association of
+//! every dot product — chunk partials are formed away from the seed —
+//! so the blocked kernels are only dispatched on steps whose SIRA bound
+//! proves every such partial safe at the step's accumulator width (see
+//! `engine::fuse`); see the bit-exactness rules below.
+//!
 //! # Bit-exactness
 //!
-//! The register blocking reorders work only **across** output elements,
-//! never within one dot product: each accumulator lane still adds its
-//! terms in increasing-`k` order, starting from its seed (zero or the
-//! elided-channel bias) — exactly the scalar kernel's order. Two
-//! consequences, both locked by the property suite:
+//! The single-pass register blocking ([`mac_rows_tiled`]) reorders work
+//! only **across** output elements, never within one dot product: each
+//! accumulator lane still adds its terms in increasing-`k` order,
+//! starting from its seed (zero or the elided-channel bias) — exactly
+//! the scalar kernel's order. Two consequences, both locked by the
+//! property suite:
 //!
 //! * **f64** stays bit-identical because the per-element operation
 //!   sequence is identical, including the zero-skip (`MacElem::
@@ -39,15 +53,32 @@
 //!   compile-time `Σ|aᵢ·wᵢⱼ|` bound from `engine::fuse` additionally
 //!   covers any order, pad lanes contribute exact zeros).
 //!
+//! The KC-blocked kernels keep integer results element-exact under a
+//! stronger precondition: integer addition is associative as long as no
+//! intermediate wraps, every blocked intermediate is either a chunk
+//! partial (`|·| ≤ Σ|aᵢ·wᵢⱼ|`) or the seed plus a prefix of whole
+//! chunks (also `≤ |seed-subset| + Σ|live aᵢ·wᵢⱼ|`), and `engine::fuse`
+//! only marks a step KC-safe when that absolute-value bound fits the
+//! accumulator width. **f64 never takes the blocked path** — a changed
+//! association changes rounding — which is why the blocked entry points
+//! are integer-proof-gated at dispatch, not here.
+//!
 //! # Tuning
 //!
-//! [`NR`]/[`MR`] are compile-time constants chosen for mainstream
-//! x86-64/aarch64 SIMD widths; see ROADMAP.md ("Execution backends") for
-//! how to re-tune them per target CPU.
+//! [`NR`] stays a compile-time constant — it is baked into the
+//! [`PackedWeights`] panel layout — but the row-block height, panel
+//! group width and k-chunk depth of the blocked kernels are runtime
+//! parameters (`TilingScheme { mr, nr_panels, kc }` in `engine::tune`):
+//! `sira-finn tune` measures candidate schemes per kernel shape on the
+//! local machine and the plan compiler resolves the tuned scheme per
+//! step (snapshot loads re-resolve against the same local tuning file).
+//! [`MR`] is the default row-block height used when no tuning entry
+//! applies.
 
 use core::ops::Range;
 
 use super::{BiasRef, MacElem, ThresholdTable};
+use crate::tensor::Conv2dSpec;
 
 /// Register lanes per column panel: 8 accumulators span two 256-bit
 /// vectors at f64/i64 width and one at i32 — wide enough to saturate
@@ -252,6 +283,112 @@ fn raw_rows<T: MacElem, const M: usize>(
     }
 }
 
+/// KC-blocked counterpart of [`mac_rows_tiled`]: same accumulate-into
+/// contract (`acc` caller-seeded), but the loop nest is
+/// `row block → panel group → k chunk → panel`, with each
+/// `(chunk, panel)` pair accumulated into a zero-seeded register tile
+/// that is then spilled (added) into `acc`. `mr` is the row-block
+/// height (clamped to the dispatched `1..=8`), `nr_panels` the number
+/// of [`NR`]-wide panels swept per chunk while the activation chunk
+/// stays hot, and `kc` the chunk depth (`0` means unblocked: one chunk
+/// spanning the whole dot length — still partial-from-zero
+/// association).
+///
+/// Integer-only by contract: the changed association is element-exact
+/// for i32/i64 when the caller holds the SIRA proof that no
+/// intermediate wraps (see the module docs), and silently changes
+/// rounding for f64 — dispatch (`engine::plan`) never routes f64 steps
+/// here, and the property suite runs it under overflow checks.
+pub fn mac_rows_blocked<T: MacElem>(
+    a: &[T],
+    rows: usize,
+    w: &PackedWeights<T>,
+    cols: Range<usize>,
+    mr: usize,
+    nr_panels: usize,
+    kc: usize,
+    acc: &mut [T],
+) {
+    let k = w.k;
+    assert!(cols.end <= w.n, "column range beyond the packed matrix");
+    let width = cols.len();
+    assert!(a.len() >= rows * k, "activation block too short");
+    assert!(acc.len() >= rows * width, "accumulator block too short");
+    if width == 0 {
+        return;
+    }
+    let mr = mr.clamp(1, 8);
+    let group = nr_panels.max(1);
+    let kc = if kc == 0 { k.max(1) } else { kc };
+    let jb_first = cols.start / NR;
+    let jb_last = cols.end.div_ceil(NR);
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let m = (rows - r0).min(mr);
+        let mut jb = jb_first;
+        while jb < jb_last {
+            let jbe = (jb + group).min(jb_last);
+            match m {
+                1 => blocked_rows::<T, 1>(a, w, r0, &cols, jb..jbe, kc, acc),
+                2 => blocked_rows::<T, 2>(a, w, r0, &cols, jb..jbe, kc, acc),
+                3 => blocked_rows::<T, 3>(a, w, r0, &cols, jb..jbe, kc, acc),
+                4 => blocked_rows::<T, 4>(a, w, r0, &cols, jb..jbe, kc, acc),
+                5 => blocked_rows::<T, 5>(a, w, r0, &cols, jb..jbe, kc, acc),
+                6 => blocked_rows::<T, 6>(a, w, r0, &cols, jb..jbe, kc, acc),
+                7 => blocked_rows::<T, 7>(a, w, r0, &cols, jb..jbe, kc, acc),
+                _ => blocked_rows::<T, 8>(a, w, r0, &cols, jb..jbe, kc, acc),
+            }
+            jb = jbe;
+        }
+        r0 += m;
+    }
+}
+
+/// One `M`-row × panel-group block of [`mac_rows_blocked`]: chunks of
+/// `kc` weight rows, panels of the group swept per chunk, partials
+/// spilled into `acc` after every `(chunk, panel)` microkernel.
+#[inline]
+fn blocked_rows<T: MacElem, const M: usize>(
+    a: &[T],
+    w: &PackedWeights<T>,
+    r0: usize,
+    cols: &Range<usize>,
+    panels: Range<usize>,
+    kc: usize,
+    acc: &mut [T],
+) {
+    let k = w.k;
+    let width = cols.len();
+    let mut k0 = 0usize;
+    loop {
+        let klen = kc.min(k - k0);
+        for jb in panels.clone() {
+            let j0 = jb * NR;
+            let mut part = [[T::ZERO; NR]; M];
+            panel_block::<T, M>(
+                &a[r0 * k + k0..],
+                k,
+                klen,
+                &w.panel(jb)[k0 * NR..],
+                &mut part,
+            );
+            for (r, part_r) in part.iter().enumerate() {
+                let row = &mut acc[(r0 + r) * width..(r0 + r) * width + width];
+                for (jj, lane) in part_r.iter().enumerate() {
+                    let j = j0 + jj;
+                    if j >= cols.start && j < cols.end {
+                        row[j - cols.start] = row[j - cols.start].add(*lane);
+                    }
+                }
+            }
+        }
+        k0 += klen;
+        if k0 >= k {
+            break;
+        }
+    }
+}
+
 /// Output placement of one tiled MAC block.
 #[derive(Clone, Copy)]
 pub(crate) enum TiledOut {
@@ -350,6 +487,134 @@ fn fused_rows<T: MacElem, const M: usize>(
     }
 }
 
+/// The plan-facing KC-blocked MAC block: seed a `T`-typed scratch
+/// accumulator from the elided-channel bias, run the blocked loop nest
+/// ([`mac_rows_blocked`]), then finish every in-range value through the
+/// optional fused threshold into `out`. The memory accumulator is what
+/// "spilled partials" spill into; the caller supplies the vector (the
+/// sharded chunk paths pass a call-local one, since pool work items
+/// cannot share a worker's conversion scratch). Integer-proof-gated at
+/// dispatch like the raw blocked kernel — f64 steps never route here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mac_block_blocked<T: MacElem>(
+    a: &[T],
+    w: &PackedWeights<T>,
+    rows: usize,
+    cols: Range<usize>,
+    bias: Option<BiasRef<'_>>,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+    layout: TiledOut,
+    mr: usize,
+    nr_panels: usize,
+    kc: usize,
+    scratch: &mut Vec<T>,
+) {
+    let width = cols.len();
+    if width == 0 {
+        return;
+    }
+    scratch.clear();
+    scratch.resize(rows * width, T::ZERO);
+    if let Some(b) = bias {
+        for r in 0..rows {
+            let base = r * b.pos_stride;
+            for (jj, j) in cols.clone().enumerate() {
+                scratch[r * width + jj] = T::from_i64(b.bias[base + j]);
+            }
+        }
+    }
+    mac_rows_blocked(a, rows, w, cols.clone(), mr, nr_panels, kc, scratch);
+    for r in 0..rows {
+        for (jj, j) in cols.clone().enumerate() {
+            let f = scratch[r * width + jj].to_f64();
+            let v = match fused {
+                Some(t) => t.apply_channel(f, j),
+                None => f,
+            };
+            match layout {
+                TiledOut::RowMajor => out[r * width + jj] = v,
+                TiledOut::ChannelMajor { frame } => out[jj * frame + r] = v,
+            }
+        }
+    }
+}
+
+/// Row-tiled depthwise-conv kernel for **one channel**: instead of the
+/// scalar per-output-position tap loop, every output row is swept
+/// tap-by-tap — for a fixed `(ky, kx)` the inner loop is a contiguous
+/// (stride-strided) AXPY over the output row, which vectorizes — with
+/// a reusable `T`-typed row accumulator. Taps are applied in the same
+/// ascending `(ky, kx)` order as the scalar loop and out-of-bounds
+/// (padding) taps are skipped identically, so the per-element operation
+/// sequence is *exactly* the scalar one: f64 is bit-identical, and the
+/// integer instantiations are exact wherever the scalar order was (the
+/// per-channel SIRA bound from `engine::fuse` gates the width). The
+/// fused per-channel threshold is applied on the way out.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dw_channel_rows<T: MacElem>(
+    xin: &[T],
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    spec: Conv2dSpec,
+    taps: &[T],
+    channel: usize,
+    fused: &Option<ThresholdTable>,
+    out: &mut [f64],
+    rowacc: &mut Vec<T>,
+) {
+    let (kh, kw) = spec.kernel;
+    debug_assert!(xin.len() >= h * w);
+    debug_assert_eq!(taps.len(), kh * kw);
+    debug_assert!(out.len() >= oh * ow);
+    rowacc.clear();
+    rowacc.resize(ow, T::ZERO);
+    for oy in 0..oh {
+        let acc = &mut rowacc[..ow];
+        for lane in acc.iter_mut() {
+            *lane = T::ZERO;
+        }
+        for ky in 0..kh {
+            let iy = (oy * spec.stride.0 + ky) as isize - spec.pad.0 as isize;
+            if iy < 0 || iy >= h as isize {
+                continue;
+            }
+            let xrow = &xin[iy as usize * w..iy as usize * w + w];
+            for kx in 0..kw {
+                let wt = taps[ky * kw + kx];
+                // first/last output column whose input stays in-bounds
+                // for this kx: 0 <= ox*stride + kx - pad < w. No
+                // zero-skip here — the scalar depthwise loop has none,
+                // and bit-exactness means mirroring it exactly.
+                let off = kx as isize - spec.pad.1 as isize;
+                let ox0 = if off >= 0 {
+                    0usize
+                } else {
+                    ((-off) as usize).div_ceil(spec.stride.1)
+                };
+                let ox1 = if (w as isize) > off {
+                    (((w as isize - 1 - off) as usize) / spec.stride.1 + 1).min(ow)
+                } else {
+                    0
+                };
+                for (ox, lane) in acc.iter_mut().enumerate().take(ox1).skip(ox0) {
+                    let ix = (ox * spec.stride.1) as isize + off;
+                    *lane = lane.mul_acc(xrow[ix as usize], wt);
+                }
+            }
+        }
+        for (ox, lane) in acc.iter().enumerate() {
+            let f = lane.to_f64();
+            out[oy * ow + ox] = match fused {
+                Some(t) => t.apply_channel(f, channel),
+                None => f,
+            };
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,6 +689,65 @@ mod tests {
         for (a, b) in flat.iter().zip(&back) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn blocked_matches_scalar_across_schemes_and_shapes() {
+        // every (mr, nr_panels, kc) combination over boundary-straddling
+        // shapes must reproduce the scalar oracle exactly (integer data
+        // far from any overflow bound, so association cannot matter)
+        for (rows, k, n) in [
+            (1usize, 0usize, 1usize),
+            (1, 3, NR - 1),
+            (2, 5, NR),
+            (3, 8, NR + 1),
+            (MR, 16, 2 * NR + 3),
+            (MR + 2, 17, 3 * NR - 1),
+            (2 * MR + 1, 33, 2 * NR),
+        ] {
+            let a: Vec<i64> = (0..rows * k).map(|i| (i as i64 % 7) - 3).collect();
+            let flat: Vec<i64> = (0..k * n).map(|i| (i as i64 % 11) - 5).collect();
+            let p = PackedWeights::pack(&flat, k, n);
+            let seed: Vec<i64> = (0..rows * n).map(|i| (i as i64 % 9) - 4).collect();
+            let mut want = seed.clone();
+            scalar_rows(&a, rows, k, &flat, n, 0..n, &mut want);
+            for mr in [1usize, 3, 4, 8] {
+                for np in [1usize, 2, 4] {
+                    for kc in [0usize, 1, 5, 16, 64] {
+                        let mut got = seed.clone();
+                        mac_rows_blocked(&a, rows, &p, 0..n, mr, np, kc, &mut got);
+                        assert_eq!(
+                            got, want,
+                            "rows={rows} k={k} n={n} mr={mr} np={np} kc={kc}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_respects_column_ranges() {
+        let (rows, k, n) = (5usize, 21usize, 2 * NR + 5);
+        let a: Vec<i32> = (0..rows * k).map(|i| (i as i32 % 5) - 2).collect();
+        let flat: Vec<i32> = (0..k * n).map(|i| (i as i32 % 7) - 3).collect();
+        let p = PackedWeights::pack(&flat, k, n);
+        let mut full = vec![0i32; rows * n];
+        mac_rows_blocked(&a, rows, &p, 0..n, 4, 2, 8, &mut full);
+        // stitch unaligned sub-ranges back together
+        let cuts = [0usize, 3, NR, NR + 5, 2 * NR + 1, n];
+        let mut assembled = vec![0i32; rows * n];
+        for wpair in cuts.windows(2) {
+            let (j0, j1) = (wpair[0], wpair[1]);
+            let width = j1 - j0;
+            let mut piece = vec![0i32; rows * width];
+            mac_rows_blocked(&a, rows, &p, j0..j1, 4, 2, 8, &mut piece);
+            for r in 0..rows {
+                assembled[r * n + j0..r * n + j1]
+                    .copy_from_slice(&piece[r * width..(r + 1) * width]);
+            }
+        }
+        assert_eq!(assembled, full);
     }
 
     #[test]

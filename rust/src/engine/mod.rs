@@ -70,6 +70,7 @@ pub mod plan;
 pub mod pool;
 pub mod segment;
 pub mod snapshot;
+pub mod tune;
 
 use std::collections::BTreeMap;
 
@@ -79,10 +80,22 @@ use crate::graph::Graph;
 use crate::passes::{fold, lower, streamline, thresholds};
 use crate::sira::{analyze, Analysis, SiRange};
 
-pub use fuse::compile;
 pub use plan::{Plan, PlanStats};
 pub use pool::WorkerPool;
 pub use segment::SegmentedPlan;
+pub use tune::TilingScheme;
+
+/// Compile a graph to an executable [`Plan`] and resolve each MAC
+/// step's tiling scheme against this machine's tuning table
+/// ([`tune::global`]). The scheme only steers loop geometry — results
+/// are bit-identical with or without a tuning file, so the table is a
+/// pure performance input applied at the edge (here and at snapshot
+/// decode), never serialized into plans.
+pub fn compile(g: &Graph, analysis: &Analysis) -> Result<Plan> {
+    let mut plan = fuse::compile(g, analysis)?;
+    plan.apply_tuning(tune::global());
+    Ok(plan)
+}
 
 /// Streamline `g` in place (lower → fold → extract scales → aggregate →
 /// threshold-convert, the §4.1 pipeline) and return a fresh SIRA
@@ -670,5 +683,110 @@ mod tests {
         );
         let mut rng = Rng::new(23);
         exact_match(&m, &analysis, &input_batch(&mut rng, &[1, 16], 2));
+    }
+
+    /// Saturate a tuning table so *every* MAC step in `plan` resolves to
+    /// `force`, whatever its shape — the test double for a tuning file
+    /// that (rightly or wrongly) demands KC blocking everywhere.
+    fn force_table(plan: &Plan, force: TilingScheme) -> tune::TuningTable {
+        use super::plan::Step;
+        let mut t = tune::TuningTable::default();
+        for step in &plan.steps {
+            let (k_eff, n) = match step {
+                Step::MatMul(s) => (s.elide.as_ref().map_or(s.k, |e| e.live.len()), s.n),
+                Step::Conv(s) => {
+                    let live = s.elide.as_ref().map_or(s.c, |e| e.live.len());
+                    (live * s.spec.kernel.0 * s.spec.kernel.1, s.oc)
+                }
+                _ => continue,
+            };
+            t.entries.insert(
+                tune::shape_key(k_eff, n),
+                tune::TuneEntry { scheme: force, ns: 1.0 },
+            );
+        }
+        t
+    }
+
+    /// Tentpole safety net, end to end: force a ragged KC-blocked scheme
+    /// onto every MAC step through a hand-built tuning table, drop the
+    /// tile work gate so the blocked core actually dispatches, and
+    /// confirm the plan stays bit-exact vs the interpreter. Then the
+    /// unproven side: an f64-weight plan handed the *same* table keeps
+    /// `kc_safe` false (kc_bound = 0.0), stays on the single-pass path,
+    /// and still matches the interpreter — a tuning table, however
+    /// aggressive, can never change results.
+    #[test]
+    fn forced_kc_blocking_stays_bit_exact_and_unproven_steps_stay_safe() {
+        use super::plan::Step;
+        let force = TilingScheme { mr: 3, nr_panels: 2, kc: 5 };
+
+        // proven integer MACs: the blocked core engages
+        let mut b = QnnBuilder::new("smlp-kc", 41);
+        b.input("x", &[1, 10]);
+        b.quant_act(8, false, Granularity::PerTensor, 255.0);
+        b.linear(6, 2, Granularity::PerTensor, false);
+        b.batchnorm();
+        b.relu();
+        b.quant_act(2, false, Granularity::PerTensor, 4.0);
+        b.linear(4, 4, Granularity::PerTensor, true);
+        let mut g = b.finish().unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(0.0, 255.0));
+        let analysis = prepare_streamlined(&mut g, &inputs).unwrap();
+        let mut plan = compile(&g, &analysis).unwrap();
+        assert!(plan.stats().integer_macs() >= 1, "{}", plan.stats());
+        plan.apply_tuning(&force_table(&plan, force));
+        plan.set_min_tile_work(0);
+        assert!(
+            plan.steps.iter().any(|s| matches!(
+                s, Step::MatMul(m) if m.scheme == force && m.kc_bound > 0.0
+            )),
+            "no proven MatMul picked up the forced blocked scheme"
+        );
+        let mut rng = Rng::new(77);
+        let xs = input_batch(&mut rng, &[1, 10], 4);
+        let ys = plan.run_batch(&xs).unwrap();
+        let mut exec = Executor::new(&g).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = exec.run_single(x).unwrap().remove(0);
+            assert_eq!(want.data(), y.data(), "forced-KC integer plan diverged");
+        }
+
+        // unproven f64 MAC: same table, blocking must refuse to engage
+        let mut g = Graph::new("f64mm-kc");
+        g.add_input("x", &[1, 6]);
+        g.add_initializer(
+            "W",
+            Tensor::new(&[6, 4], (0..24).map(|i| i as f64 * 0.37 - 3.1).collect()).unwrap(),
+        );
+        g.add_node(Node::new("mm", Op::MatMul, &["x", "W"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), crate::sira::SiRange::scalar(-10.0, 10.0));
+        let analysis = analyze(&g, &inputs).unwrap();
+        let mut plan = compile(&g, &analysis).unwrap();
+        assert_eq!(plan.stats().matmul_f64, 1, "{}", plan.stats());
+        plan.apply_tuning(&force_table(&plan, force));
+        plan.set_min_tile_work(0);
+        assert!(
+            plan.steps.iter().any(|s| matches!(
+                s, Step::MatMul(m) if m.scheme == force && m.kc_bound == 0.0
+            )),
+            "f64 step should carry the scheme but no proof"
+        );
+        let xs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                Tensor::new(&[1, 6], (0..6).map(|_| rng.int_in(-20, 20) as f64 * 0.5).collect())
+                    .unwrap()
+            })
+            .collect();
+        let ys = plan.run_batch(&xs).unwrap();
+        let mut exec = Executor::new(&g).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = exec.run_single(x).unwrap().remove(0);
+            assert_eq!(want.data(), y.data(), "unproven f64 step was reordered");
+        }
     }
 }

@@ -59,11 +59,13 @@ use crate::graph::Op;
 use crate::obs::profile::PlanProfiler;
 use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 
+use super::fuse::{I32_LIMIT, I64_LIMIT};
 use super::kernels::{
     im2col_batched, im2col_channels, tile, BiasRef, MacElem, MacMat, MicroOp, ThresholdTable,
     WeightMat,
 };
 use super::pool::{chunk_len, Scratch, WorkerPool, WorkerState};
+use super::tune::{TilingScheme, TuningTable};
 
 use std::sync::Arc;
 
@@ -143,6 +145,16 @@ pub(crate) struct MatMulStep {
     pub w: WeightMat,
     pub fused: Option<ThresholdTable>,
     pub elide: Option<MacElide>,
+    /// SIRA worst-case partial-sum magnitude bound (the `peak` that
+    /// selected the accumulator width), or `0.0` when no bound was
+    /// proven. KC-blocked execution reorders the k accumulation, which
+    /// is only bit-exact when every intermediate is wrap-free — so a
+    /// blocked scheme engages only when this bound also clears the
+    /// accumulator width's limit (see [`kc_safe`]).
+    pub kc_bound: f64,
+    /// Tiling geometry resolved against the machine-local tuning table
+    /// at compile/load time ([`Plan::apply_tuning`]); never serialized.
+    pub scheme: TilingScheme,
 }
 
 impl MatMulStep {
@@ -171,6 +183,22 @@ pub(crate) struct ConvStep {
     pub fused: Option<ThresholdTable>,
     /// `live` holds input *channel* indices here
     pub elide: Option<MacElide>,
+    /// SIRA partial-sum bound gating KC-blocked reordering (see
+    /// [`MatMulStep::kc_bound`]); `0.0` = unproven.
+    pub kc_bound: f64,
+    /// Machine-local tiling geometry ([`Plan::apply_tuning`]).
+    pub scheme: TilingScheme,
+}
+
+/// Accumulator-width view of a depthwise step's taps: integer copies
+/// when SIRA proved the per-channel dot bound fits (`kc_bound` against
+/// the same limits MatMul/Conv use), f64 otherwise. Derived from
+/// `weights` at compile *and* at snapshot decode — never serialized.
+#[derive(Clone, Debug)]
+pub(crate) enum DwTaps {
+    F64,
+    I32(Vec<i32>),
+    I64(Vec<i64>),
 }
 
 /// Depthwise convolution (per-channel kernels), optional fused threshold.
@@ -184,9 +212,28 @@ pub(crate) struct DepthwiseStep {
     pub oh: usize,
     pub ow: usize,
     pub spec: Conv2dSpec,
-    /// `(c, kh, kw)` flattened
+    /// `(c, kh, kw)` flattened — the reference f64 taps
     pub weights: Vec<f64>,
     pub fused: Option<ThresholdTable>,
+    /// integer tap copies when the SIRA per-channel bound allows
+    pub taps: DwTaps,
+    /// worst per-channel `amax_c * Σ|w_c|` bound (`0.0` = unproven)
+    pub kc_bound: f64,
+    /// §7.1 stuck-channel elision for the depthwise path: channels whose
+    /// every input element is SIRA-stuck never run the kernel — their
+    /// finished (thresholded) `oh*ow` output plane is precomputed at
+    /// compile time with the exact scalar f64 tap order, so copying it
+    /// is bit-identical to recomputing on any width. Sorted by channel.
+    pub elided: Vec<(usize, Vec<f64>)>,
+}
+
+impl DepthwiseStep {
+    fn elided_plane(&self, ch: usize) -> Option<&[f64]> {
+        self.elided
+            .iter()
+            .find(|(c, _)| *c == ch)
+            .map(|(_, p)| p.as_slice())
+    }
 }
 
 /// Max/average pooling over NCHW (count_include_pad = false, identical
@@ -493,17 +540,36 @@ fn mm_block<T: MacElem>(
 
 /// Resolved parallelism of one MAC step: the intra-kernel work-item
 /// budget (already gated on `min_kernel_work`), the pool to submit to,
-/// and whether the kernel cleared the tiled gate (`min_tile_work`).
+/// whether the kernel cleared the tiled gate (`min_tile_work`), and the
+/// tuned tiling geometry plus whether the KC-blocked kernel may engage
+/// (tuned scheme deviates from default *and* the step's SIRA bound
+/// proves the reordered partial sums wrap-free at the accumulator
+/// width).
 #[derive(Clone, Copy)]
 struct MacPar<'a> {
     kt: usize,
     pool: Option<&'a WorkerPool>,
     tiled: bool,
+    scheme: TilingScheme,
+    blocked: bool,
 }
 
-/// One matmul chunk on either MAC core: the tiled register-blocked
-/// kernels or the scalar oracle — bit-identical by the kernel property
-/// suite, so the dispatch is purely a performance decision.
+/// Whether a step's SIRA partial-sum bound proves the KC-blocked
+/// k-order safe at the chosen accumulator width. `0.0` is the
+/// no-proof sentinel; f64 accumulators are never blocked (float
+/// addition is not associative, so reordering would change bits).
+fn kc_safe(kc_bound: f64, w: &WeightMat) -> bool {
+    match w {
+        WeightMat::F64(_) => false,
+        WeightMat::I32(_) => kc_bound > 0.0 && kc_bound < I32_LIMIT,
+        WeightMat::I64(_) => kc_bound > 0.0 && kc_bound < I64_LIMIT,
+    }
+}
+
+/// One matmul chunk on one of the three MAC cores: KC-blocked (tuned
+/// geometry, proven-safe steps only), tiled register blocks, or the
+/// scalar oracle — all bit-identical by the kernel property suite, so
+/// the dispatch is purely a performance decision.
 #[allow(clippy::too_many_arguments)]
 fn mm_chunk<T: MacElem>(
     a: &[T],
@@ -515,13 +581,34 @@ fn mm_chunk<T: MacElem>(
     bias: Option<BiasRef<'_>>,
     fused: &Option<ThresholdTable>,
     out: &mut [f64],
-    tiled: bool,
+    par: MacPar<'_>,
 ) {
+    if par.blocked {
+        // chunks may run as pool work items, so the spill accumulator is
+        // a call-local allocation (same precedent as mm_block's)
+        let mut acc = Vec::new();
+        let s = par.scheme;
+        tile::mac_block_blocked(
+            a,
+            w.packed(),
+            rows,
+            cols,
+            bias,
+            fused,
+            out,
+            tile::TiledOut::RowMajor,
+            s.mr,
+            s.nr_panels,
+            s.kc,
+            &mut acc,
+        );
+        return;
+    }
     match w.flat() {
         // the scalar oracle needs the flat copy; once it is dropped
         // (serve-time memory trim) every MAC dispatches tiled — same
         // bits either way, so only memory and speed change
-        Some(flat) if !tiled => mm_block(a, flat, rows, k, n, cols, bias, fused, out),
+        Some(flat) if !par.tiled => mm_block(a, flat, rows, k, n, cols, bias, fused, out),
         _ => {
             let layout = tile::TiledOut::RowMajor;
             tile::mac_block_tiled(a, w.packed(), rows, cols, bias, fused, out, layout);
@@ -566,10 +653,10 @@ fn run_mm<T: MacElem>(
                     rest = tail;
                     let a_block = &a[r0 * k..r1 * k];
                     if r1 == rows {
-                        mm_chunk(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk, tiled);
+                        mm_chunk(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk, par);
                     } else {
                         sc.spawn(move || {
-                            mm_chunk(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk, tiled)
+                            mm_chunk(a_block, w, r1 - r0, k, n, 0..n, bias, fused, chunk, par)
                         });
                     }
                     r0 = r1;
@@ -587,10 +674,10 @@ fn run_mm<T: MacElem>(
                     let (chunk, tail) = rest.split_at_mut(j1 - j0);
                     rest = tail;
                     if j1 == n {
-                        mm_chunk(a, w, 1, k, n, j0..j1, bias, fused, chunk, tiled);
+                        mm_chunk(a, w, 1, k, n, j0..j1, bias, fused, chunk, par);
                     } else {
                         sc.spawn(move || {
-                            mm_chunk(a, w, 1, k, n, j0..j1, bias, fused, chunk, tiled)
+                            mm_chunk(a, w, 1, k, n, j0..j1, bias, fused, chunk, par)
                         });
                     }
                     j0 = j1;
@@ -599,7 +686,7 @@ fn run_mm<T: MacElem>(
             return;
         }
     }
-    mm_chunk(a, w, rows, k, n, 0..n, bias, fused, out, tiled);
+    mm_chunk(a, w, rows, k, n, 0..n, bias, fused, out, par);
 }
 
 /// One sample's conv MAC over output channels `jr`: for every output
@@ -632,9 +719,9 @@ fn conv_block<T: MacElem>(
     }
 }
 
-/// One conv output-channel chunk on either MAC core (tiled register
-/// blocks over the output positions, or the scalar oracle) — same bits
-/// either way.
+/// One conv output-channel chunk on one of the three MAC cores
+/// (KC-blocked on proven-safe steps, tiled register blocks over the
+/// output positions, or the scalar oracle) — same bits every way.
 #[allow(clippy::too_many_arguments)]
 fn conv_chunk<T: MacElem>(
     cols: &[T],
@@ -646,10 +733,29 @@ fn conv_chunk<T: MacElem>(
     bias: Option<BiasRef<'_>>,
     fused: &Option<ThresholdTable>,
     chunk: &mut [f64],
-    tiled: bool,
+    par: MacPar<'_>,
 ) {
+    if par.blocked {
+        let mut acc = Vec::new();
+        let s = par.scheme;
+        tile::mac_block_blocked(
+            cols,
+            w.packed(),
+            frame,
+            jr,
+            bias,
+            fused,
+            chunk,
+            tile::TiledOut::ChannelMajor { frame },
+            s.mr,
+            s.nr_panels,
+            s.kc,
+            &mut acc,
+        );
+        return;
+    }
     match w.flat() {
-        Some(flat) if !tiled => conv_block(cols, flat, frame, k, oc, jr, bias, fused, chunk),
+        Some(flat) if !par.tiled => conv_block(cols, flat, frame, k, oc, jr, bias, fused, chunk),
         _ => tile::mac_block_tiled(
             cols,
             w.packed(),
@@ -703,7 +809,7 @@ fn run_conv<T: MacElem>(
                         rest = tail;
                         if j1 == oc {
                             let jr = j0..j1;
-                            conv_chunk(sample_cols, w, frame, k, oc, jr, bias, fused, chunk, tiled);
+                            conv_chunk(sample_cols, w, frame, k, oc, jr, bias, fused, chunk, par);
                         } else {
                             sc.spawn(move || {
                                 conv_chunk(
@@ -716,7 +822,7 @@ fn run_conv<T: MacElem>(
                                     bias,
                                     fused,
                                     chunk,
-                                    tiled,
+                                    par,
                                 )
                             });
                         }
@@ -725,7 +831,87 @@ fn run_conv<T: MacElem>(
                 });
             }
             None => {
-                conv_chunk(sample_cols, w, frame, k, oc, 0..oc, bias, fused, sample_out, tiled)
+                conv_chunk(sample_cols, w, frame, k, oc, 0..oc, bias, fused, sample_out, par)
+            }
+        }
+    }
+}
+
+/// Tiled depthwise runner: per channel, copy the precomputed plane for
+/// elided (stuck) channels, otherwise convert the channel's input plane
+/// to the accumulator width and sweep it through the row-tiled AXPY
+/// kernel ([`tile::dw_channel_rows`]) — same tap order as the scalar
+/// loop, so bit-exact on every width the SIRA bound admits.
+fn run_dw_tiled<T: MacElem>(
+    s: &DepthwiseStep,
+    taps: &[T],
+    x: &[f64],
+    b: usize,
+    out: &mut [f64],
+    xbuf: &mut Vec<T>,
+) {
+    let (kh, kw) = s.spec.kernel;
+    let hw = s.h * s.w;
+    let ohw = s.oh * s.ow;
+    let mut rowacc: Vec<T> = Vec::new();
+    for bi in 0..b {
+        for ch in 0..s.c {
+            let out_plane = &mut out[(bi * s.c + ch) * ohw..(bi * s.c + ch + 1) * ohw];
+            if let Some(plane) = s.elided_plane(ch) {
+                out_plane.copy_from_slice(plane);
+                continue;
+            }
+            let xin = &x[(bi * s.c + ch) * hw..(bi * s.c + ch + 1) * hw];
+            xbuf.clear();
+            xbuf.extend(xin.iter().map(|&v| T::from_f64(v)));
+            tile::dw_channel_rows(
+                xbuf,
+                s.h,
+                s.w,
+                s.oh,
+                s.ow,
+                s.spec,
+                &taps[ch * kh * kw..(ch + 1) * kh * kw],
+                ch,
+                &s.fused,
+                out_plane,
+                &mut rowacc,
+            );
+        }
+    }
+}
+
+/// Scalar depthwise reference loop (per-position tap accumulation in
+/// f64), with the same elided-plane copies as the tiled path.
+fn run_dw_scalar(s: &DepthwiseStep, x: &[f64], b: usize, out: &mut [f64]) {
+    let (kh, kw) = s.spec.kernel;
+    let ohw = s.oh * s.ow;
+    for bi in 0..b {
+        for ch in 0..s.c {
+            if let Some(plane) = s.elided_plane(ch) {
+                out[(bi * s.c + ch) * ohw..(bi * s.c + ch + 1) * ohw].copy_from_slice(plane);
+                continue;
+            }
+            for oy in 0..s.oh {
+                for ox in 0..s.ow {
+                    let mut acc = 0.0f64;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * s.spec.stride.0 + ky) as isize - s.spec.pad.0 as isize;
+                            let ix = (ox * s.spec.stride.1 + kx) as isize - s.spec.pad.1 as isize;
+                            if iy < 0 || ix < 0 || iy >= s.h as isize || ix >= s.w as isize {
+                                continue;
+                            }
+                            acc += x[((bi * s.c + ch) * s.h + iy as usize) * s.w + ix as usize]
+                                * s.weights[(ch * kh + ky) * kw + kx];
+                        }
+                    }
+                    let v = match &s.fused {
+                        Some(t) => t.apply_channel(acc, ch),
+                        None => acc,
+                    };
+                    out[((bi * s.c + ch) * s.oh + oy) * s.ow + ox] = v;
+                }
             }
         }
     }
@@ -748,7 +934,14 @@ impl Step {
             Step::Ew(s) => format!("ew[{}]", s.ops.len()),
             Step::MatMul(s) => format!("matmul({})", width(&s.w)),
             Step::Conv(s) => format!("conv({})", width(&s.wmat)),
-            Step::Depthwise(_) => "depthwise".to_string(),
+            Step::Depthwise(s) => {
+                let w = match &s.taps {
+                    DwTaps::F64 => "f64",
+                    DwTaps::I32(_) => "i32",
+                    DwTaps::I64(_) => "i64",
+                };
+                format!("depthwise({w})")
+            }
             Step::Pool(s) => match s.kind {
                 PoolKind::Max => "pool(max)".to_string(),
                 PoolKind::Average => "pool(avg)".to_string(),
@@ -792,12 +985,18 @@ impl Step {
                 let live = s.elide.as_ref().map(|e| e.live.as_slice());
                 let bias = s.elide.as_ref().map(|e| e.bias_ref());
                 let work = rows * k_eff * s.n;
+                let tiled = ctx.tiled(work) || !s.w.has_flat();
                 let par = MacPar {
                     kt: ctx.kernel_threads(work),
                     pool: ctx.pool,
                     // no flat oracle (dropped at serve time) forces the
                     // bit-identical tiled path regardless of the gate
-                    tiled: ctx.tiled(work) || !s.w.has_flat(),
+                    tiled,
+                    scheme: s.scheme,
+                    // the tuned KC-blocked geometry engages only on
+                    // tiled-eligible steps whose SIRA bound proves the
+                    // reordered k accumulation wrap-free at this width
+                    blocked: tiled && s.scheme.is_blocked() && kc_safe(s.kc_bound, &s.w),
                 };
                 if let Some(p) = ctx.prof {
                     p.note_mac(par.tiled);
@@ -834,10 +1033,13 @@ impl Step {
                 };
                 let bias = s.elide.as_ref().map(|e| e.bias_ref());
                 let work = rows * k_eff * s.oc;
+                let tiled = ctx.tiled(work) || !s.wmat.has_flat();
                 let par = MacPar {
                     kt: ctx.kernel_threads(work),
                     pool: ctx.pool,
-                    tiled: ctx.tiled(work) || !s.wmat.has_flat(),
+                    tiled,
+                    scheme: s.scheme,
+                    blocked: tiled && s.scheme.is_blocked() && kc_safe(s.kc_bound, &s.wmat),
                 };
                 if let Some(p) = ctx.prof {
                     p.note_mac(par.tiled);
@@ -868,38 +1070,27 @@ impl Step {
                 let need = b * per_out;
                 let mut out = take_out(bufs, s.out, need);
                 let x = &bufs[s.x][..b * s.c * s.h * s.w];
-                let (kh, kw) = s.spec.kernel;
-                for bi in 0..b {
-                    for ch in 0..s.c {
-                        for oy in 0..s.oh {
-                            for ox in 0..s.ow {
-                                let mut acc = 0.0f64;
-                                for ky in 0..kh {
-                                    for kx in 0..kw {
-                                        let iy = (oy * s.spec.stride.0 + ky) as isize
-                                            - s.spec.pad.0 as isize;
-                                        let ix = (ox * s.spec.stride.1 + kx) as isize
-                                            - s.spec.pad.1 as isize;
-                                        if iy < 0
-                                            || ix < 0
-                                            || iy >= s.h as isize
-                                            || ix >= s.w as isize
-                                        {
-                                            continue;
-                                        }
-                                        acc += x[((bi * s.c + ch) * s.h + iy as usize) * s.w
-                                            + ix as usize]
-                                            * s.weights[(ch * kh + ky) * kw + kx];
-                                    }
-                                }
-                                let v = match &s.fused {
-                                    Some(t) => t.apply_channel(acc, ch),
-                                    None => acc,
-                                };
-                                out[((bi * s.c + ch) * s.oh + oy) * s.ow + ox] = v;
-                            }
+                let work = b * s.c * s.oh * s.ow * s.spec.kernel.0 * s.spec.kernel.1;
+                let tiled = ctx.tiled(work);
+                if let Some(p) = ctx.prof {
+                    p.note_mac(tiled);
+                }
+                if tiled {
+                    // row-sweep AXPY kernel at the SIRA-chosen width
+                    // (same tap order as the scalar loop — bit-exact)
+                    match &s.taps {
+                        DwTaps::I32(taps) => {
+                            run_dw_tiled(s, taps, x, b, &mut out, &mut scratch.i32v)
+                        }
+                        DwTaps::I64(taps) => {
+                            run_dw_tiled(s, taps, x, b, &mut out, &mut scratch.i64v)
+                        }
+                        DwTaps::F64 => {
+                            run_dw_tiled(s, &s.weights, x, b, &mut out, &mut scratch.cols)
                         }
                     }
+                } else {
+                    run_dw_scalar(s, x, b, &mut out);
                 }
                 bufs[s.out] = out;
             }
@@ -1354,6 +1545,29 @@ impl Plan {
             }
         }
         self.stats.flat_weight_elems = 0;
+    }
+
+    /// Resolve every MAC step's tiling scheme against a machine-local
+    /// tuning table, keyed by effective kernel shape (`k_eff`, `n`).
+    /// Called at plan compile ([`super::compile`]) and after snapshot
+    /// decode — the scheme is a per-machine performance decision, so it
+    /// is never serialized into plans or sidecars. Results are
+    /// unaffected: the KC-blocked path a non-default scheme selects is
+    /// proof-gated per step and bit-identical where it engages.
+    pub(crate) fn apply_tuning(&mut self, table: &TuningTable) {
+        for step in &mut self.steps {
+            match step {
+                Step::MatMul(s) => s.scheme = table.scheme_for(s.k_eff(), s.n),
+                Step::Conv(s) => {
+                    let k_eff = match &s.elide {
+                        Some(e) => e.live.len() * s.spec.kernel.0 * s.spec.kernel.1,
+                        None => s.c * s.spec.kernel.0 * s.spec.kernel.1,
+                    };
+                    s.scheme = table.scheme_for(k_eff, s.oc);
+                }
+                _ => {}
+            }
+        }
     }
 
     /// `Arc` reference count of the first MAC step's packed weights

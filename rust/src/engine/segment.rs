@@ -241,11 +241,37 @@ impl SegmentedPlan {
     }
 
     /// Install carried buffers into the next stage's state (receiver
-    /// side; order matches [`SegmentedPlan::take_carry`]).
-    pub(crate) fn put_carry(&self, bound: usize, ws: &mut WorkerState, bufs: Vec<Vec<f64>>) {
+    /// side; order matches [`SegmentedPlan::take_carry`]). Returns the
+    /// displaced buffers (same slots, previous batch's allocations) so
+    /// the coordinator can recycle them back to the sender — steady-state
+    /// pipelining then moves carries without ever allocating.
+    #[must_use = "displaced buffers should be recycled to the sender (or explicitly dropped)"]
+    pub(crate) fn put_carry(
+        &self,
+        bound: usize,
+        ws: &mut WorkerState,
+        bufs: Vec<Vec<f64>>,
+    ) -> Vec<Vec<f64>> {
+        ws.ensure(self.plan.n_phys);
+        self.carries[bound]
+            .iter()
+            .zip(bufs)
+            .map(|(&p, v)| std::mem::replace(&mut ws.bufs[p], v))
+            .collect()
+    }
+
+    /// Re-install recycled buffers into the sender's state (the reverse
+    /// hop of the carry loop). Capacity is what matters — the next
+    /// `run_segment` overwrites contents — so this is best-effort: any
+    /// shape mismatch is simply absorbed by `ensure`/`resize` later.
+    pub(crate) fn restore_carry(&self, bound: usize, ws: &mut WorkerState, bufs: Vec<Vec<f64>>) {
         ws.ensure(self.plan.n_phys);
         for (&p, v) in self.carries[bound].iter().zip(bufs) {
-            ws.bufs[p] = v;
+            // only fill empty slots: take_carry left them empty, and a
+            // non-empty slot means the stage already re-allocated
+            if ws.bufs[p].is_empty() {
+                ws.bufs[p] = v;
+            }
         }
     }
 
@@ -387,7 +413,8 @@ mod tests {
                 sp.run_segment(s, &mut stage_states[s], xs.len()).unwrap();
                 if s + 1 < nseg {
                     let carry = sp.take_carry(s, &mut stage_states[s]);
-                    sp.put_carry(s, &mut stage_states[s + 1], carry);
+                    let displaced = sp.put_carry(s, &mut stage_states[s + 1], carry);
+                    sp.restore_carry(s, &mut stage_states[s], displaced);
                 }
             }
             let got = sp.extract(&stage_states[nseg - 1], xs.len()).unwrap();
@@ -395,6 +422,44 @@ mod tests {
                 assert_eq!(w.data(), y.data(), "staged hand-off diverged (seed {seed})");
             }
         }
+    }
+
+    /// The recycle loop: `put_carry` hands back the receiver's displaced
+    /// previous-batch buffers, `restore_carry` refills the sender's
+    /// emptied slots — so in steady state the carry hand-off allocates
+    /// nothing.
+    #[test]
+    fn put_carry_returns_displaced_buffers_for_recycling() {
+        let (g, inputs) = deep_mlp();
+        let analysis = analyze(&g, &inputs).unwrap();
+        let sp = SegmentedPlan::new(compile(&g, &analysis).unwrap(), 2);
+        assert_eq!(sp.segments(), 2, "{}", sp.describe());
+        let mut tx = WorkerState::default();
+        let mut rx = WorkerState::default();
+        let xs = batch(&[1, 12], 2, 3);
+        // round 1: a fresh receiver has nothing to hand back
+        sp.pack(&mut tx, &xs).unwrap();
+        sp.run_segment(0, &mut tx, xs.len()).unwrap();
+        let carry = sp.take_carry(0, &mut tx);
+        let displaced = sp.put_carry(0, &mut rx, carry);
+        assert!(
+            displaced.iter().all(Vec::is_empty),
+            "fresh receiver should displace only empty buffers"
+        );
+        sp.restore_carry(0, &mut tx, displaced);
+        sp.run_segment(1, &mut rx, xs.len()).unwrap();
+        // round 2 (steady state): the receiver displaces the previous
+        // batch's real allocations, and the sender absorbs them
+        sp.pack(&mut tx, &xs).unwrap();
+        sp.run_segment(0, &mut tx, xs.len()).unwrap();
+        let carry = sp.take_carry(0, &mut tx);
+        let displaced = sp.put_carry(0, &mut rx, carry);
+        assert_eq!(displaced.len(), sp.carry_counts()[0]);
+        assert!(
+            displaced.iter().any(|v| !v.is_empty()),
+            "steady-state hand-off must recycle real buffers"
+        );
+        sp.restore_carry(0, &mut tx, displaced);
     }
 
     #[test]

@@ -29,11 +29,15 @@
 //! bytes before allocation, and the checksum is verified before any
 //! decoding — never a wrong answer.
 //!
-//! Only compile-time state is stored: steps (weights in their flat
-//! `(k, n)` form — packing is deterministic, so panels are rebuilt on
-//! load), buffer wiring, shapes and [`PlanStats`]. Runtime knobs
-//! (thread budget, work gates, profiler) stay at their defaults, same
-//! as a freshly compiled plan.
+//! Only compile-time, machine-independent state is stored: steps
+//! (weights in their flat `(k, n)` form — packing is deterministic, so
+//! panels are rebuilt on load), SIRA accumulation bounds (`kc_bound`),
+//! buffer wiring, shapes and [`PlanStats`]. Runtime knobs (thread
+//! budget, work gates, profiler) stay at their defaults, and tiling
+//! schemes are deliberately **not** serialized — they describe the
+//! machine that tuned them, not the model — so decode re-resolves them
+//! against this host's tuning table ([`super::tune::global`]), same as
+//! a freshly compiled plan.
 
 use std::path::Path;
 
@@ -44,17 +48,19 @@ use crate::tensor::{Conv2dSpec, PoolKind, Tensor};
 
 use super::kernels::{MacMat, MicroOp, Param, ThresholdTable, WeightMat};
 use super::plan::{
-    BinKind, BinaryStep, ConvStep, DepthwiseStep, EwChainStep, GSrc, GenericStep, MacElide,
-    MatMulStep, Plan, PlanStats, PoolStep, Step,
+    BinKind, BinaryStep, ConvStep, DepthwiseStep, DwTaps, EwChainStep, GSrc, GenericStep,
+    MacElide, MatMulStep, Plan, PlanStats, PoolStep, Step,
 };
+use super::tune::TilingScheme;
 
 /// File magic, first 8 bytes of every snapshot.
 pub const MAGIC: &[u8; 8] = b"SIRAPLAN";
 
 /// Format version; bumped on any layout change. A mismatch is a clean
 /// load error (old readers never misinterpret new layouts or vice
-/// versa).
-pub const VERSION: u32 = 1;
+/// versa). v2 added the per-step `kc_bound` and the depthwise tap
+/// width / elided-plane fields.
+pub const VERSION: u32 = 2;
 
 /// FNV-1a 64-bit over `bytes` — the integrity checksum. Not
 /// cryptographic; it catches torn writes and bit rot, which is the
@@ -616,6 +622,7 @@ fn enc_step(e: &mut Enc, step: &Step) {
             enc_weight_mat(e, &s.w);
             enc_opt_table(e, &s.fused);
             enc_elide(e, &s.elide);
+            e.f64(s.kc_bound);
         }
         Step::Conv(s) => {
             e.u8(2);
@@ -631,6 +638,7 @@ fn enc_step(e: &mut Enc, step: &Step) {
             enc_weight_mat(e, &s.wmat);
             enc_opt_table(e, &s.fused);
             enc_elide(e, &s.elide);
+            e.f64(s.kc_bound);
         }
         Step::Depthwise(s) => {
             e.u8(3);
@@ -644,6 +652,21 @@ fn enc_step(e: &mut Enc, step: &Step) {
             enc_spec(e, s.spec);
             e.f64s(&s.weights);
             enc_opt_table(e, &s.fused);
+            // the tap width alone is stored; the casted taps are
+            // re-derived from the f64 weights at decode (the cast is
+            // deterministic, so the single source of truth stays the
+            // f64 vector)
+            e.u8(match &s.taps {
+                DwTaps::F64 => 0,
+                DwTaps::I32(_) => 1,
+                DwTaps::I64(_) => 2,
+            });
+            e.f64(s.kc_bound);
+            e.usize(s.elided.len());
+            for (ch, plane) in &s.elided {
+                e.usize(*ch);
+                e.f64s(plane);
+            }
         }
         Step::Pool(s) => {
             e.u8(4);
@@ -721,6 +744,8 @@ fn dec_step(d: &mut Dec) -> Result<Step> {
             w: dec_weight_mat(d)?,
             fused: dec_opt_table(d)?,
             elide: dec_elide(d)?,
+            kc_bound: d.f64()?,
+            scheme: TilingScheme::default(),
         }),
         2 => Step::Conv(ConvStep {
             x: d.usize()?,
@@ -735,19 +760,59 @@ fn dec_step(d: &mut Dec) -> Result<Step> {
             wmat: dec_weight_mat(d)?,
             fused: dec_opt_table(d)?,
             elide: dec_elide(d)?,
+            kc_bound: d.f64()?,
+            scheme: TilingScheme::default(),
         }),
-        3 => Step::Depthwise(DepthwiseStep {
-            x: d.usize()?,
-            out: d.usize()?,
-            c: d.usize()?,
-            h: d.usize()?,
-            w: d.usize()?,
-            oh: d.usize()?,
-            ow: d.usize()?,
-            spec: dec_spec(d)?,
-            weights: d.f64s()?,
-            fused: dec_opt_table(d)?,
-        }),
+        3 => {
+            let x = d.usize()?;
+            let out = d.usize()?;
+            let c = d.usize()?;
+            let h = d.usize()?;
+            let w = d.usize()?;
+            let oh = d.usize()?;
+            let ow = d.usize()?;
+            let spec = dec_spec(d)?;
+            let weights = d.f64s()?;
+            let fused = dec_opt_table(d)?;
+            let taps = match d.u8()? {
+                0 => DwTaps::F64,
+                1 => DwTaps::I32(weights.iter().map(|&v| v as i32).collect()),
+                2 => DwTaps::I64(weights.iter().map(|&v| v as i64).collect()),
+                t => bail!("snapshot corrupt: depthwise width tag {t}"),
+            };
+            let kc_bound = d.f64()?;
+            let n_elided = d.count(16)?;
+            let mut elided = Vec::with_capacity(n_elided);
+            for _ in 0..n_elided {
+                let ch = d.usize()?;
+                let plane = d.f64s()?;
+                if ch >= c {
+                    bail!("snapshot corrupt: elided channel {ch} out of {c}");
+                }
+                if plane.len() != oh * ow {
+                    bail!(
+                        "snapshot corrupt: elided plane {} elems != {oh}x{ow}",
+                        plane.len()
+                    );
+                }
+                elided.push((ch, plane));
+            }
+            Step::Depthwise(DepthwiseStep {
+                x,
+                out,
+                c,
+                h,
+                w,
+                oh,
+                ow,
+                spec,
+                weights,
+                fused,
+                taps,
+                kc_bound,
+                elided,
+            })
+        }
         4 => Step::Pool(PoolStep {
             x: d.usize()?,
             out: d.usize()?,
@@ -952,7 +1017,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Plan> {
             _ => 0,
         })
         .sum();
-    Ok(Plan::new(
+    let mut plan = Plan::new(
         name,
         steps,
         n_phys,
@@ -963,7 +1028,11 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Plan> {
         output_numel,
         const_output,
         stats,
-    ))
+    );
+    // tiling schemes are per-machine, never per-snapshot: re-resolve
+    // against this host's tuning table, exactly like a fresh compile
+    plan.apply_tuning(super::tune::global());
+    Ok(plan)
 }
 
 /// Write a plan snapshot to `path` (atomically: temp file + rename, so

@@ -1,0 +1,427 @@
+//! Per-machine MAC tiling autotuner.
+//!
+//! The tiled kernels in [`super::kernels::tile`] expose three geometry
+//! knobs — the row-block height `mr`, the number of `NR`-wide column
+//! panels swept per row block (`nr_panels`), and the k-dimension cache
+//! block `kc`. The best setting depends on the host's cache hierarchy
+//! and on the kernel shape, so instead of freezing one geometry at
+//! compile time the engine consults a **tuning table**: a per-machine
+//! JSON file mapping kernel shapes (`k`×`n`) to the measured-fastest
+//! [`TilingScheme`].
+//!
+//! * `sira-finn tune [--quick]` measures the candidate grid on this
+//!   machine and writes the table next to the perf-gate baseline
+//!   (`target/SIRA_tuning.local.json`, override with `SIRA_TUNING_FILE`).
+//! * Plan compilation ([`super::compile`]) and snapshot decode
+//!   ([`super::snapshot::from_bytes`]) both resolve schemes against the
+//!   *local* table at load time — machine-specific geometry is never
+//!   baked into a plan sidecar.
+//! * A missing table simply means the default scheme (the fixed
+//!   `MR`×`NR` single-pass geometry) everywhere. A corrupt, truncated,
+//!   or stale-version table is *ignored with a warning* — tuning is an
+//!   optimization, never a correctness input, so a bad file must never
+//!   fail a plan.
+//! * The default scheme is always in the measured candidate set and the
+//!   argmin includes it, so a tuned table is never slower than the
+//!   fixed geometry it replaces (up to measurement noise).
+//!
+//! Correctness does not depend on the table at all: every candidate is
+//! checked bit-exact against the scalar oracle during tuning, and at
+//! run time a KC-blocked scheme only engages on steps whose SIRA bound
+//! proves the reassociated partial sums cannot wrap (see
+//! [`super::kernels::tile`] module docs).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::Bencher;
+use crate::util::json::Json;
+
+use super::kernels::tile::{self, PackedWeights};
+use super::kernels::MacElem;
+
+/// File-format discriminator and version for the tuning JSON.
+pub const TUNING_KIND: &str = "sira-tiling";
+pub const TUNING_VERSION: u64 = 1;
+
+/// One tiled-MAC loop geometry: `mr` rows per register block,
+/// `nr_panels` `NR`-wide column panels swept per row block, and the
+/// k-dimension cache block `kc` (`0` = no k blocking, single pass).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilingScheme {
+    pub mr: usize,
+    pub nr_panels: usize,
+    pub kc: usize,
+}
+
+impl Default for TilingScheme {
+    /// The fixed geometry the kernels shipped with before tuning
+    /// existed: `MR` rows, one panel at a time, no k blocking.
+    fn default() -> Self {
+        TilingScheme {
+            mr: tile::MR,
+            nr_panels: 1,
+            kc: 0,
+        }
+    }
+}
+
+impl TilingScheme {
+    /// Whether this scheme requires the KC-blocked kernel (any deviation
+    /// from the default single-pass geometry). Default schemes run the
+    /// original `mac_rows_tiled` path and need no overflow proof.
+    pub fn is_blocked(&self) -> bool {
+        *self != TilingScheme::default()
+    }
+
+    /// Reject geometries outside the range the kernels support, so a
+    /// hand-edited tuning file cannot push the loop nest into a corner
+    /// the dispatch clamps were never written for.
+    pub fn sane(&self) -> bool {
+        (1..=8).contains(&self.mr) && (1..=64).contains(&self.nr_panels) && self.kc <= (1 << 20)
+    }
+
+    fn to_json(self, ns: f64) -> Json {
+        Json::obj(vec![
+            ("mr", Json::Num(self.mr as f64)),
+            ("nr_panels", Json::Num(self.nr_panels as f64)),
+            ("kc", Json::Num(self.kc as f64)),
+            ("ns", Json::Num(ns)),
+        ])
+    }
+}
+
+/// One tuned entry: the winning scheme and its measured time (kept for
+/// the report; not consulted at plan compile).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneEntry {
+    pub scheme: TilingScheme,
+    pub ns: f64,
+}
+
+/// The per-machine shape→scheme map.
+#[derive(Clone, Debug, Default)]
+pub struct TuningTable {
+    pub entries: BTreeMap<String, TuneEntry>,
+}
+
+/// Key under which a MAC kernel shape is tuned: the effective dot
+/// length `k` (after stuck-row elision) and the output width `n`.
+pub fn shape_key(k: usize, n: usize) -> String {
+    format!("k{k}n{n}")
+}
+
+impl TuningTable {
+    /// Scheme for a kernel shape; default when the shape was never
+    /// tuned on this machine.
+    pub fn scheme_for(&self, k: usize, n: usize) -> TilingScheme {
+        self.entries
+            .get(&shape_key(k, n))
+            .map(|e| e.scheme)
+            .unwrap_or_default()
+    }
+
+    /// Serialize as the versioned tuning JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut entries = BTreeMap::new();
+        for (key, e) in &self.entries {
+            entries.insert(key.clone(), e.scheme.to_json(e.ns));
+        }
+        Json::obj(vec![
+            ("tuning", Json::Str(TUNING_KIND.to_string())),
+            ("version", Json::Num(TUNING_VERSION as f64)),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    /// Parse a tuning document, validating kind, version, and every
+    /// scheme. Any malformed entry fails the whole parse — the caller
+    /// ([`global`]) degrades to the default table with a warning.
+    pub fn parse(text: &str) -> Result<TuningTable> {
+        let doc = Json::parse(text)?;
+        let kind = doc.get("tuning")?.as_str()?;
+        if kind != TUNING_KIND {
+            return Err(anyhow!("not a tuning file (kind '{kind}')"));
+        }
+        let version = doc.get("version")?.as_i64()?;
+        if version != TUNING_VERSION as i64 {
+            return Err(anyhow!(
+                "tuning file version {version} != supported {TUNING_VERSION}"
+            ));
+        }
+        let mut entries = BTreeMap::new();
+        for (key, v) in doc.get("entries")?.as_obj()? {
+            let scheme = TilingScheme {
+                mr: v.get("mr")?.as_usize()?,
+                nr_panels: v.get("nr_panels")?.as_usize()?,
+                kc: v.get("kc")?.as_usize()?,
+            };
+            if !scheme.sane() {
+                return Err(anyhow!("entry '{key}' has out-of-range scheme {scheme:?}"));
+            }
+            let ns = v.opt("ns").and_then(|n| n.as_f64().ok()).unwrap_or(0.0);
+            entries.insert(key.clone(), TuneEntry { scheme, ns });
+        }
+        Ok(TuningTable { entries })
+    }
+
+    /// Load from a file. `Ok(None)` when the file does not exist (the
+    /// untuned-machine case); `Err` on unreadable or invalid content.
+    pub fn load(path: &std::path::Path) -> Result<Option<TuningTable>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        Ok(Some(TuningTable::parse(&text)?))
+    }
+
+    /// Write the table (atomic tmp + rename, like the snapshot sidecar).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, format!("{}\n", self.to_json()))?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+/// Where the per-machine tuning table lives: `SIRA_TUNING_FILE` if set,
+/// else next to the perf-gate baseline under `target/`.
+pub fn default_path() -> PathBuf {
+    match std::env::var_os("SIRA_TUNING_FILE") {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from("target/SIRA_tuning.local.json"),
+    }
+}
+
+/// The process-wide tuning table, loaded once from [`default_path`].
+/// Missing file → default table (silently). Invalid file → default
+/// table with one warning on stderr; never an error, never a changed
+/// result (schemes only steer loop order, which is proven
+/// result-invariant before it is allowed to engage).
+pub fn global() -> &'static TuningTable {
+    static TABLE: OnceLock<TuningTable> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let path = default_path();
+        match TuningTable::load(&path) {
+            Ok(Some(t)) => t,
+            Ok(None) => TuningTable::default(),
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring tuning file {}: {e}; using default tiling scheme",
+                    path.display()
+                );
+                TuningTable::default()
+            }
+        }
+    })
+}
+
+/// The candidate geometries measured per shape: the default (always —
+/// this is what makes tuned tables never-slower), then the cross of
+/// row-block heights, panel-group widths, and k blocks. Candidates
+/// whose `kc` is at least the shape's `k` are skipped (blocking past
+/// the whole dot length is the default single pass with extra spill
+/// traffic).
+fn candidate_schemes(k: usize) -> Vec<TilingScheme> {
+    let mut out = vec![TilingScheme::default()];
+    for mr in [4usize, 8] {
+        for nr_panels in [1usize, 2, 4] {
+            for kc in [0usize, 64, 256, 1024] {
+                let s = TilingScheme { mr, nr_panels, kc };
+                if kc > 0 && kc >= k {
+                    continue;
+                }
+                if s != TilingScheme::default() && !out.contains(&s) {
+                    out.push(s);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The shapes tuned by default: the zoo's FC layers (784/256-deep),
+/// its im2col conv frames, and the deep-K class the KC block targets.
+pub fn default_shapes() -> Vec<(usize, usize)> {
+    vec![
+        (784, 256),
+        (256, 256),
+        (256, 10),
+        (576, 64),
+        (1152, 128),
+        (4096, 256),
+    ]
+}
+
+/// Measure one shape across the candidate grid and return the winner.
+/// Every candidate is verified bit-exact against the scalar oracle on
+/// the benchmark data before it is timed — a kernel that cannot
+/// reproduce the scalar result is disqualified, not just slow.
+fn tune_shape(b: &Bencher, k: usize, n: usize) -> TuneEntry {
+    const ROWS: usize = 8;
+    let mut seed = 0x70_17E5u64 ^ ((k as u64) << 20) ^ n as u64;
+    let mut next = move || {
+        // xorshift — deterministic synthetic int8-ish operands
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        (seed % 17) as i64 - 8
+    };
+    let a: Vec<i32> = (0..ROWS * k).map(|_| next() as i32).collect();
+    let flat: Vec<i32> = (0..k * n).map(|_| next() as i32).collect();
+    let packed = PackedWeights::pack(&flat, k, n);
+
+    // scalar oracle for the correctness screen
+    let mut want = vec![0i32; ROWS * n];
+    for r in 0..ROWS {
+        i32::mac_row(&a[r * k..(r + 1) * k], &flat, n, 0..n, &mut want[r * n..(r + 1) * n]);
+    }
+
+    let mut acc = vec![0i32; ROWS * n];
+    let mut best: Option<TuneEntry> = None;
+    for s in candidate_schemes(k) {
+        acc.iter_mut().for_each(|v| *v = 0);
+        if s.is_blocked() {
+            tile::mac_rows_blocked(&a, ROWS, &packed, 0..n, s.mr, s.nr_panels, s.kc, &mut acc);
+        } else {
+            tile::mac_rows_tiled(&a, ROWS, &packed, 0..n, &mut acc);
+        }
+        if acc != want {
+            eprintln!("tune: scheme {s:?} is not bit-exact on k{k}n{n}; disqualified");
+            continue;
+        }
+        let r = b.run(
+            &format!("tune k{k}n{n} mr{} np{} kc{}", s.mr, s.nr_panels, s.kc),
+            || {
+                acc.iter_mut().for_each(|v| *v = 0);
+                if s.is_blocked() {
+                    tile::mac_rows_blocked(
+                        &a,
+                        ROWS,
+                        &packed,
+                        0..n,
+                        s.mr,
+                        s.nr_panels,
+                        s.kc,
+                        &mut acc,
+                    );
+                } else {
+                    tile::mac_rows_tiled(&a, ROWS, &packed, 0..n, &mut acc);
+                }
+                acc[0]
+            },
+        );
+        let ns = r.mean.as_nanos() as f64;
+        let better = match &best {
+            None => true,
+            Some(prev) => ns < prev.ns,
+        };
+        if better {
+            best = Some(TuneEntry { scheme: s, ns });
+        }
+    }
+    best.expect("default scheme always measures")
+}
+
+/// Tune the given shapes on this machine. `quick` trades measurement
+/// time for noise (the verify-script smoke uses it); the full run is
+/// what `sira-finn tune` ships by default.
+pub fn tune(shapes: &[(usize, usize)], quick: bool) -> TuningTable {
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut table = TuningTable::default();
+    for &(k, n) in shapes {
+        let e = tune_shape(&b, k, n);
+        println!(
+            "tuned k{k}n{n}: mr={} nr_panels={} kc={} ({:.0} ns)",
+            e.scheme.mr, e.scheme.nr_panels, e.scheme.kc, e.ns
+        );
+        table.entries.insert(shape_key(k, n), e);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scheme_is_not_blocked_and_sane() {
+        let d = TilingScheme::default();
+        assert!(!d.is_blocked());
+        assert!(d.sane());
+        assert!(TilingScheme { kc: 64, ..d }.is_blocked());
+        assert!(!TilingScheme { mr: 0, ..d }.sane());
+        assert!(!TilingScheme { nr_panels: 65, ..d }.sane());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries() {
+        let mut t = TuningTable::default();
+        t.entries.insert(
+            shape_key(784, 256),
+            TuneEntry {
+                scheme: TilingScheme {
+                    mr: 8,
+                    nr_panels: 2,
+                    kc: 256,
+                },
+                ns: 1234.0,
+            },
+        );
+        let text = t.to_json().to_string();
+        let back = TuningTable::parse(&text).unwrap();
+        assert_eq!(back.scheme_for(784, 256), t.scheme_for(784, 256));
+        // untuned shape resolves to default
+        assert_eq!(back.scheme_for(3, 3), TilingScheme::default());
+    }
+
+    #[test]
+    fn parse_rejects_wrong_kind_version_and_insane_schemes() {
+        assert!(TuningTable::parse("{").is_err());
+        assert!(TuningTable::parse("{\"tuning\":\"other\",\"version\":1,\"entries\":{}}").is_err());
+        assert!(
+            TuningTable::parse("{\"tuning\":\"sira-tiling\",\"version\":99,\"entries\":{}}")
+                .is_err()
+        );
+        assert!(TuningTable::parse(
+            "{\"tuning\":\"sira-tiling\",\"version\":1,\
+             \"entries\":{\"k4n4\":{\"mr\":0,\"nr_panels\":1,\"kc\":0}}}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn candidates_always_include_default_and_respect_k() {
+        for k in [1usize, 63, 64, 256, 4096] {
+            let cs = candidate_schemes(k);
+            assert_eq!(cs[0], TilingScheme::default());
+            for s in &cs {
+                assert!(s.sane());
+                assert!(s.kc == 0 || s.kc < k, "kc {} vs k {k}", s.kc);
+            }
+        }
+    }
+
+    #[test]
+    fn quick_tune_on_tiny_shape_is_exact_and_never_slower_shaped() {
+        // tiny shape so the test stays fast; correctness screen plus the
+        // argmin-over-candidates-including-default property
+        let b = Bencher {
+            warmup: std::time::Duration::from_millis(1),
+            measure: std::time::Duration::from_millis(2),
+            max_iters: 64,
+        };
+        let e = super::tune_shape(&b, 96, 32);
+        assert!(e.scheme.sane());
+        assert!(e.ns > 0.0);
+    }
+}

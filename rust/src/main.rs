@@ -433,6 +433,54 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     sira_finn::e2e::run_e2e(dir, 8)
 }
 
+/// `tune`: measure MAC tiling-scheme candidates on this machine and
+/// persist the winners ([`sira_finn::engine::tune`]). Every later
+/// `engine::compile` and snapshot cold-start on this host picks the
+/// table up; deleting the file falls back to the fixed default scheme.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use sira_finn::engine::tune;
+    let shapes = match args.get("shapes") {
+        None => tune::default_shapes(),
+        Some(list) => {
+            let mut v = Vec::new();
+            for part in list.split(',').filter(|s| !s.trim().is_empty()) {
+                let (k, n) = part
+                    .split_once('x')
+                    .ok_or_else(|| anyhow!("--shapes wants KxN[,KxN...], got '{part}'"))?;
+                v.push((k.trim().parse::<usize>()?, n.trim().parse::<usize>()?));
+            }
+            v
+        }
+    };
+    let quick = args.flag("quick");
+    let t0 = std::time::Instant::now();
+    let table = tune::tune(&shapes, quick);
+    let dt = t0.elapsed();
+    let mut t = Table::new(&["Shape", "mr", "nr_panels", "kc", "ns/iter"]);
+    for (key, e) in &table.entries {
+        t.row(vec![
+            key.clone(),
+            e.scheme.mr.to_string(),
+            e.scheme.nr_panels.to_string(),
+            if e.scheme.kc == 0 { "-".into() } else { e.scheme.kc.to_string() },
+            format!("{:.0}", e.ns),
+        ]);
+    }
+    println!("{}", t.render());
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => tune::default_path(),
+    };
+    table.save(&out)?;
+    println!(
+        "tuned {} shapes in {dt:.2?}{} -> {}",
+        shapes.len(),
+        if quick { " (quick)" } else { "" },
+        out.display()
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "help",
@@ -442,6 +490,7 @@ fn main() -> Result<()> {
         "shutdown",
         "profile",
         "prom",
+        "quick",
     ])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -451,11 +500,12 @@ fn main() -> Result<()> {
         "loadgen" => cmd_loadgen(&args),
         "snapshot" => cmd_snapshot(&args),
         "profile" => cmd_profile(&args),
+        "tune" => cmd_tune(&args),
         "e2e" => cmd_e2e(&args),
         _ => {
             println!(
                 "sira-finn — SIRA-enhanced FDNA compiler\n\
-                 usage: sira-finn <analyze|compile|serve|loadgen|snapshot|profile|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
+                 usage: sira-finn <analyze|compile|serve|loadgen|snapshot|profile|tune|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
                  serve: --workers N (coordinator workers) --requests N\n\
                  \x20      --engine      serve the plan-compiled integer runtime\n\
                  \x20      --streamline  streamline first (implies --engine)\n\
@@ -486,6 +536,11 @@ fn main() -> Result<()> {
                  profile: --model NAME [--streamline --threads N]\n\
                  \x20      --batch K --requests N  synthetic workload size\n\
                  \x20      --sample-every N        timing sample period (default 1)\n\
+                 tune: measure MAC tiling schemes on this machine and save them\n\
+                 \x20      --shapes KxN[,KxN...]   shapes to tune (default: zoo MVU shapes)\n\
+                 \x20      --quick                 short measurement windows (CI smoke)\n\
+                 \x20      --out FILE              tuning file (default: target/SIRA_tuning.local.json\n\
+                 \x20                              or $SIRA_TUNING_FILE); compiles pick it up\n\
                  see README.md (Observability)"
             );
             Ok(())

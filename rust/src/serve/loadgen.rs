@@ -232,8 +232,19 @@ pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
                         headers.push(("x-deadline-ms", v));
                     }
                     let body = &bodies[j % bodies.len()];
+                    // the connection is persistent across requests; on a
+                    // transport error (server dropped the keep-alive,
+                    // mid-run restart) reconnect once and retry the same
+                    // request rather than killing the whole connection's
+                    // worth of remaining requests
                     let (status, _reply) =
-                        client.request("POST", path, &headers, body.as_bytes())?;
+                        match client.request("POST", path, &headers, body.as_bytes()) {
+                            Ok(r) => r,
+                            Err(_) => {
+                                client = Client::connect(addr)?;
+                                client.request("POST", path, &headers, body.as_bytes())?
+                            }
+                        };
                     tally.classify(status, sched.elapsed());
                     j += conns;
                 }

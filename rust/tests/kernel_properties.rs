@@ -6,7 +6,13 @@
 //! (f64 / i32 / i64), arbitrary column-range tilings must compose to the
 //! full product, and the tiled unroll order must not be able to overflow
 //! anywhere the scalar k-order could not (driven to the exact
-//! `sira_int_bounds` extremes). The overflow properties rely on
+//! `sira_int_bounds` extremes). The KC-blocked loop nest
+//! (`tile::mac_rows_blocked`) gets the same treatment over a grid of
+//! `(mr, nr_panels, kc)` schemes, plus accumulator-edge cases where the
+//! SIRA absolute-value bound `Σ|a·w|` sits one term below the width
+//! limit — the exact regime in which the dispatcher may legally engage
+//! blocking, where every chunk partial is proven wrap-free and the
+//! result must stay bit-identical. The overflow properties rely on
 //! overflow *checks* being live — a reordering bug would wrap back to
 //! the correct value under plain release — so the suite runs in the
 //! default dev profile via `cargo test` and, pinned-seed in tier-1,
@@ -24,7 +30,7 @@ use std::collections::BTreeMap;
 
 use common::near_limit_graph;
 use sira_finn::engine;
-use sira_finn::engine::kernels::tile::{mac_rows_tiled, PackedWeights, MR, NR};
+use sira_finn::engine::kernels::tile::{mac_rows_blocked, mac_rows_tiled, PackedWeights, MR, NR};
 use sira_finn::engine::kernels::MacElem;
 use sira_finn::executor::Executor;
 use sira_finn::passes::accmin::sira_int_bounds;
@@ -280,6 +286,122 @@ fn i32_tiled_order_cannot_overflow_where_scalar_did_not() {
     mac_rows_tiled(&a, 1, &packed, 0..n, &mut got);
     assert_eq!(got, want);
     assert!(got.iter().all(|&v| v == i32::MAX - M));
+}
+
+/// Blocked == scalar for one width, shape, and `(mr, nr_panels, kc)`
+/// scheme, with random accumulator seeds (the same caller-seeding
+/// contract as the single-pass kernel).
+fn check_blocked<T: MacElem + PartialEq + std::fmt::Debug>(
+    rng: &mut Rng,
+    rows: usize,
+    k: usize,
+    n: usize,
+    mr: usize,
+    np: usize,
+    kc: usize,
+) {
+    let a: Vec<T> = fill(rng, rows * k, 9);
+    let flat: Vec<T> = fill(rng, k * n, 9);
+    let packed = PackedWeights::pack(&flat, k, n);
+    let seed: Vec<T> = fill(rng, rows * n, 50);
+    let mut want = seed.clone();
+    scalar_rows(&a, rows, k, &flat, n, 0..n, &mut want);
+    let mut got = seed;
+    mac_rows_blocked(&a, rows, &packed, 0..n, mr, np, kc, &mut got);
+    assert_eq!(got, want, "rows={rows} k={k} n={n} mr={mr} np={np} kc={kc}");
+}
+
+/// The KC-blocked loop nest must agree element-exactly with the scalar
+/// oracle over every tile-boundary shape and a grid of schemes — row
+/// blocks, panel-group widths and chunk depths that divide k evenly,
+/// raggedly, and not at all. f64 rides along with integer-valued data
+/// (where any summation order is exact); the engine never dispatches
+/// f64 steps to the blocked kernel precisely because general f64 data
+/// would round differently.
+#[test]
+fn blocked_matches_scalar_across_schemes_and_shapes() {
+    let mut rng = Rng::new(base_seed() ^ 0xB1);
+    let schemes = [
+        (1usize, 1usize, 1usize),
+        (3, 2, 5),
+        (4, 1, 64),
+        (8, 4, 0),
+        (8, 2, 7),
+    ];
+    for (rows, k, n) in boundary_shapes() {
+        for &(mr, np, kc) in &schemes {
+            check_blocked::<i32>(&mut rng, rows, k, n, mr, np, kc);
+            check_blocked::<i64>(&mut rng, rows, k, n, mr, np, kc);
+            check_blocked::<f64>(&mut rng, rows, k, n, mr, np, kc);
+        }
+    }
+    // fuzz tail: random shapes x random schemes
+    for _ in 0..40 {
+        let rows = rng.int_in(1, 11) as usize;
+        let k = rng.int_in(0, 70) as usize;
+        let n = rng.int_in(1, 40) as usize;
+        let mr = rng.int_in(1, 8) as usize;
+        let np = rng.int_in(1, 4) as usize;
+        let kc = rng.int_in(0, 20) as usize;
+        check_blocked::<i32>(&mut rng, rows, k, n, mr, np, kc);
+        check_blocked::<i64>(&mut rng, rows, k, n, mr, np, kc);
+    }
+}
+
+/// Accumulator-edge property for the blocked order, i32: terms sized so
+/// the SIRA absolute-value bound `Σ_k |a_k·w_kj|` lands one term short
+/// of `i32::MAX` — the exact precondition under which the dispatcher is
+/// allowed to engage KC blocking. Every chunk partial and every spill
+/// prefix is bounded by that sum, so under overflow checks (dev locally,
+/// `relcheck` in tier-1) nothing may wrap in *any* chunking, and the
+/// result must equal the scalar k-order exactly. Mixed signs make the
+/// chunk partials genuinely different from the scalar prefixes, so an
+/// association bug cannot cancel out.
+#[test]
+fn i32_blocked_is_exact_at_the_sira_absolute_bound() {
+    let k = 16usize;
+    let n = NR + 3;
+    let a = vec![1i32; k];
+    let step = i32::MAX / k as i32; // sum of |terms| = 16*step < i32::MAX
+    let mut flat = vec![0i32; k * n];
+    for kk in 0..k {
+        let v = if kk % 3 == 0 { -step } else { step };
+        for j in 0..n {
+            flat[kk * n + j] = v;
+        }
+    }
+    let packed = PackedWeights::pack(&flat, k, n);
+    let mut want = vec![0i32; n];
+    scalar_rows(&a, 1, k, &flat, n, 0..n, &mut want);
+    for kc in [0usize, 1, 3, 5, 8, 16, 64] {
+        let mut got = vec![0i32; n];
+        mac_rows_blocked(&a, 1, &packed, 0..n, 4, 2, kc, &mut got);
+        assert_eq!(got, want, "kc={kc}");
+    }
+}
+
+/// The i64 twin of the blocked edge property.
+#[test]
+fn i64_blocked_is_exact_at_the_sira_absolute_bound() {
+    let k = 16usize;
+    let n = 2 * NR - 1;
+    let a = vec![1i64; k];
+    let step = i64::MAX / k as i64;
+    let mut flat = vec![0i64; k * n];
+    for kk in 0..k {
+        let v = if kk % 3 == 0 { -step } else { step };
+        for j in 0..n {
+            flat[kk * n + j] = v;
+        }
+    }
+    let packed = PackedWeights::pack(&flat, k, n);
+    let mut want = vec![0i64; n];
+    scalar_rows(&a, 1, k, &flat, n, 0..n, &mut want);
+    for kc in [0usize, 1, 3, 5, 8, 16, 64] {
+        let mut got = vec![0i64; n];
+        mac_rows_blocked(&a, 1, &packed, 0..n, 4, 2, kc, &mut got);
+        assert_eq!(got, want, "kc={kc}");
+    }
 }
 
 /// The i64 twin of the edge property, at ±2^62.

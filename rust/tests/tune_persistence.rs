@@ -1,0 +1,117 @@
+//! Tuning-file persistence contract: a corrupt, truncated, wrong-kind,
+//! or stale-version tuning JSON must degrade to the default
+//! [`TilingScheme`] with a clean warning — never an error out of
+//! `engine::compile`, and never a wrong-answer plan. The scheme only
+//! steers MAC loop order (proven result-invariant before it may
+//! engage), so even a *maliciously* wrong tuning file cannot change
+//! results; this suite locks the degrade-cleanly half of that contract.
+//!
+//! Everything lives in ONE test fn on purpose: [`tune::global`] reads
+//! `SIRA_TUNING_FILE` exactly once per process, so the env var must be
+//! set before the first `engine::compile` in this binary and must not
+//! race another test.
+
+use sira_finn::engine;
+use sira_finn::engine::tune::{self, TilingScheme, TuneEntry, TuningTable};
+use sira_finn::executor::Executor;
+use sira_finn::models;
+use sira_finn::sira::analyze;
+use sira_finn::tensor::Tensor;
+
+#[test]
+fn corrupt_tuning_files_never_poison_plans() {
+    let dir = std::env::temp_dir().join(format!("sira_tune_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // load/parse level: every malformed document is a clean Err
+    let cases: &[(&str, &str)] = &[
+        ("binary garbage", "\x00\x01\x02 not json"),
+        (
+            "truncated",
+            "{\"tuning\":\"sira-tiling\",\"version\":1,\"entr",
+        ),
+        (
+            "wrong kind",
+            "{\"tuning\":\"something-else\",\"version\":1,\"entries\":{}}",
+        ),
+        (
+            "stale version",
+            "{\"tuning\":\"sira-tiling\",\"version\":99,\"entries\":{}}",
+        ),
+        (
+            "insane scheme",
+            "{\"tuning\":\"sira-tiling\",\"version\":1,\"entries\":\
+             {\"k8n8\":{\"mr\":0,\"nr_panels\":1,\"kc\":0,\"ns\":1}}}",
+        ),
+        (
+            "missing scheme fields",
+            "{\"tuning\":\"sira-tiling\",\"version\":1,\"entries\":{\"k8n8\":{\"mr\":4}}}",
+        ),
+    ];
+    for (label, text) in cases {
+        let p = dir.join("bad.json");
+        std::fs::write(&p, text).unwrap();
+        assert!(TuningTable::load(&p).is_err(), "{label} must fail the load");
+    }
+
+    // a missing file is the untuned-machine case, not an error
+    assert!(matches!(TuningTable::load(&dir.join("absent.json")), Ok(None)));
+
+    // and a valid file round-trips exactly
+    let mut good = TuningTable::default();
+    let scheme = TilingScheme {
+        mr: 8,
+        nr_panels: 2,
+        kc: 256,
+    };
+    good.entries
+        .insert(tune::shape_key(784, 256), TuneEntry { scheme, ns: 123.0 });
+    let gp = dir.join("good.json");
+    good.save(&gp).unwrap();
+    let back = TuningTable::load(&gp).unwrap().unwrap();
+    assert_eq!(back.scheme_for(784, 256), scheme);
+    assert_eq!(back.scheme_for(1, 1), TilingScheme::default());
+
+    // process level: point the global table at a stale-version file,
+    // then compile + run. global() must warn and degrade to the default
+    // table; the compiled plan must stay bit-exact vs the interpreter.
+    let bad = dir.join("poisoned.json");
+    std::fs::write(
+        &bad,
+        "{\"tuning\":\"sira-tiling\",\"version\":99,\"entries\":{}}",
+    )
+    .unwrap();
+    std::env::set_var("SIRA_TUNING_FILE", &bad);
+    assert_eq!(tune::default_path(), bad);
+    assert!(
+        tune::global().entries.is_empty(),
+        "corrupt tuning file must degrade to the default table"
+    );
+
+    let m = models::tfc_w2a2().unwrap();
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    let mut plan = engine::compile(&m.graph, &analysis)
+        .expect("a corrupt tuning file must never fail compilation");
+    let mut exec = Executor::new(&m.graph).unwrap();
+    let shape = m.input_shape.clone();
+    let numel: usize = shape.iter().product();
+    let xs: Vec<Tensor> = (0..3)
+        .map(|i| {
+            Tensor::new(
+                &shape,
+                (0..numel).map(|e| ((e * 7 + i * 31) % 256) as f64).collect(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let ys = plan.run_batch(&xs).unwrap();
+    for (x, y) in xs.iter().zip(&ys) {
+        let want = exec.run_single(x).unwrap().remove(0);
+        assert_eq!(
+            want.data(),
+            y.data(),
+            "plan compiled under a corrupt tuning file diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

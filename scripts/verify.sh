@@ -3,7 +3,9 @@
 # build (all targets, so benches and examples must compile), the lint
 # gate (when clippy is installed), the test suite, the engine
 # differential suite under a pinned seed (release, so the 50-case
-# harness is fast), the perf_hotpath batch-8 regression gate (plain and
+# harness is fast), the tuning-persistence suite (corrupt tuning files
+# degrade cleanly) plus a `tune --quick` autotuner smoke, the
+# perf_hotpath batch-8 regression gate (plain and
 # pipelined configurations) against BENCH_baseline.json, the snapshot
 # round-trip smoke (save a compiled plan sidecar, load it, prove it
 # bit-exact against a fresh compile), the loadgen prom smoke (scrape +
@@ -40,7 +42,21 @@ SIRA_KERNEL_SEED=90210 cargo test --profile relcheck --test kernel_properties -q
 echo "== serve loopback suite: HTTP front end, bit-exactness, 503 shed, deadlines, drain =="
 cargo test --release --test serve_loopback -q
 
-echo "== perf_hotpath batch-8 gate, plain + pipelined + tiled MVU + serve loopback (>25% engine regression fails) =="
+# Tuning persistence: corrupt / truncated / stale-version tuning JSON
+# must degrade to the default TilingScheme with a warning — never fail
+# compilation or change results (one test fn per process on purpose:
+# tune::global() reads SIRA_TUNING_FILE exactly once).
+echo "== tuning persistence suite: corrupt tuning files degrade cleanly =="
+cargo test --release --test tune_persistence -q
+
+# Autotuner smoke: a quick measurement pass over the default shape set
+# must produce a loadable tuning file (written to a scratch path so the
+# machine's real tuning table, if any, is left alone).
+echo "== tune --quick smoke: autotuner writes a loadable tuning file =="
+target/release/sira-finn tune --quick --out target/tune_smoke.json
+rm -f target/tune_smoke.json
+
+echo "== perf_hotpath batch-8 gate, plain + pipelined + tiled MVU (classic + deep-K) + depthwise + serve loopback (>25% engine regression fails) =="
 # Baselines are machine-relative: gate against a machine-local copy under
 # target/ (never committed), seeded from the checked-in schema/config in
 # BENCH_baseline.json. The first run on a fresh machine records its own
