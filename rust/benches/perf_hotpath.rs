@@ -13,12 +13,13 @@
 //!
 //! `cargo bench --bench perf_hotpath -- --gate BENCH_baseline.json` runs
 //! only the engine batch-8 measurements — threads 1 and 4 through
-//! `run_batch`, the threads-4 two-segment *pipelined* coordinator
-//! configuration, the tiled large-MVU configurations (synthetic 784×256
-//! and deep-K 4096×256 integer MatMuls, the shape classes the
-//! register-blocked and KC cache-blocked kernels target), the mnv1
-//! depthwise configuration, plus the loopback network-serving
-//! configuration
+//! `run_batch` (tfc/cnv, plus the deeper vgg12 and the dense-skip rn12
+//! at threads 4), the threads-4 two-segment *pipelined* coordinator
+//! configuration (tfc/cnv/vgg12), the tiled large-MVU configurations
+//! (synthetic 784×256 and deep-K 4096×256 integer MatMuls, the shape
+//! classes the register-blocked and KC cache-blocked kernels target),
+//! the mnv1 and dws depthwise configurations, plus the loopback
+//! network-serving configuration
 //! (`serve/loopback/cnv/b8`: a real `127.0.0.1` HTTP server driven by
 //! the in-crate load generator) and the cold-start pair
 //! (`coldstart/<model>/{compile,snapshot}`: full graph→SIRA→compile vs
@@ -87,11 +88,7 @@ fn random_input(rng: &mut Rng, shape: &[usize]) -> Tensor {
 /// Measure engine ns/inference at batch 8 for one zoo model and thread
 /// count (the gate observable).
 fn measure_engine_b8(b: &Bencher, model: &str, threads: usize) -> f64 {
-    let zm = match model {
-        "tfc" => models::tfc_w2a2().unwrap(),
-        "cnv" => models::cnv_w2a2().unwrap(),
-        other => panic!("gate model '{other}'"),
-    };
+    let zm = models::by_name(model).unwrap();
     let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
     let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
     plan.set_threads(threads);
@@ -109,11 +106,7 @@ fn measure_engine_b8(b: &Bencher, model: &str, threads: usize) -> f64 {
 /// batches fill to 8. Best-of-3 wall-clock runs (channel scheduling
 /// noise would otherwise leak into the gate).
 fn measure_pipelined_b8(model: &str, threads: usize, segments: usize) -> f64 {
-    let zm = match model {
-        "tfc" => models::tfc_w2a2().unwrap(),
-        "cnv" => models::cnv_w2a2().unwrap(),
-        other => panic!("gate model '{other}'"),
-    };
+    let zm = models::by_name(model).unwrap();
     let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
     let mut rng = Rng::new(0x919E);
     let xs: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
@@ -199,24 +192,25 @@ fn measure_mvu_b8(b: &Bencher, k: usize, threads: usize) -> f64 {
     r.mean.as_nanos() as f64 / 8.0
 }
 
-/// Depthwise gate workload: the mnv1-style separable stack at batch 8 —
+/// Depthwise gate workload: a separable stack (mnv1 at the 56x56
+/// serving resolution, or the keyword-spotting dws net) at batch 8 —
 /// its depthwise layers must compile onto [`engine`] depthwise steps and
 /// dispatch the tiled per-channel row-sweep kernel, so a silent
 /// fall-back to the scalar per-tap loop fails tier-1 as a throughput
 /// regression.
-fn measure_dw_b8(b: &Bencher, threads: usize) -> f64 {
-    let zm = models::mnv1_w4a4_scaled(4).unwrap();
+fn measure_dw_b8(b: &Bencher, model: &str, threads: usize) -> f64 {
+    let zm = models::by_name(model).unwrap();
     let analysis = analyze(&zm.graph, &zm.input_ranges).unwrap();
     let mut plan = engine::compile(&zm.graph, &analysis).unwrap();
     assert!(
         plan.stats().depthwise >= 1,
-        "mnv1 gate must compile depthwise steps: {}",
+        "{model} gate must compile depthwise steps: {}",
         plan.stats()
     );
     plan.set_threads(threads);
     let mut rng = Rng::new(0xD317);
     let batch8: Vec<Tensor> = (0..8).map(|_| random_input(&mut rng, &zm.input_shape)).collect();
-    let r = b.run(&format!("engine mnv1 dw b=8 t={threads}"), || {
+    let r = b.run(&format!("engine {model} dw b=8 t={threads}"), || {
         plan.run_batch(&batch8).unwrap()
     });
     r.mean.as_nanos() as f64 / 8.0
@@ -439,14 +433,24 @@ fn run_gate(path: &str) -> i32 {
     };
     let mut failed = false;
     let mut recorded = false;
-    for (model, threads) in [("tfc", 1), ("tfc", 4), ("cnv", 1), ("cnv", 4)] {
+    for (model, threads) in [
+        ("tfc", 1),
+        ("tfc", 4),
+        ("cnv", 1),
+        ("cnv", 4),
+        // zoo additions: the deep-VGG segment-balance load and the
+        // dense-skip residual net, gated at the serving thread budget
+        ("vgg12", 4),
+        ("rn12", 4),
+    ] {
         let key = format!("engine/{model}/b8/t{threads}");
         let got = measure_engine_b8(&b, model, threads);
         json_line("gate", "engine", model, 8, threads, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
     // pipelined serving configuration: threads 4, batch 8, 2 segments
-    for model in ["tfc", "cnv"] {
+    // (vgg12's 10-conv stack is the hardest of the three to cut evenly)
+    for model in ["tfc", "cnv", "vgg12"] {
         let key = format!("engine/{model}/b8/t4/pipe2");
         let got = measure_pipelined_b8(model, 4, 2);
         json_line("gate-pipelined", "engine", model, 8, 4, got);
@@ -466,12 +470,13 @@ fn run_gate(path: &str) -> i32 {
         json_line("gate-mvu", "engine", &name, 8, 1, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
-    // depthwise configuration: mnv1's separable stack at batch 8,
-    // threads 1 — locks the depthwise tiled dispatch path
-    {
-        let key = "engine/mnv1/b8/t1/dw".to_string();
-        let got = measure_dw_b8(&b, 1);
-        json_line("gate-dw", "engine", "mnv1", 8, 1, got);
+    // depthwise configurations: mnv1's separable stack plus the dws
+    // keyword-spotting net at batch 8, threads 1 — two distinct channel/
+    // resolution profiles locking the depthwise tiled dispatch path
+    for model in ["mnv1", "dws"] {
+        let key = format!("engine/{model}/b8/t1/dw");
+        let got = measure_dw_b8(&b, model, 1);
+        json_line("gate-dw", "engine", model, 8, 1, got);
         gate_check(&mut entries, tolerance, key, got, &mut failed, &mut recorded);
     }
     // full network serving path: loopback HTTP server + load generator,
@@ -547,8 +552,11 @@ fn main() {
     for m in [
         models::tfc_w2a2().unwrap(),
         models::cnv_w2a2().unwrap(),
+        models::vgg12_w2a2().unwrap(),
         models::rn8_w3a3().unwrap(),
+        models::rn12_w3a3().unwrap(),
         models::mnv1_w4a4_scaled(4).unwrap(),
+        models::dws_w4a4().unwrap(),
     ] {
         let r = b.run(&format!("sira::analyze {}", m.name), || {
             analyze(&m.graph, &m.input_ranges).unwrap()

@@ -789,4 +789,142 @@ mod tests {
             assert_eq!(want.data(), y.data(), "unproven f64 step was reordered");
         }
     }
+
+    /// `Plan::apply_tuning` resolution on the three zoo additions
+    /// (VGG12, RN12, DWS), raw and streamlined: a saturated tuning table
+    /// must land its scheme on the models' MAC steps through the
+    /// `(k_eff, n)` lookup — elided shapes included — and the retiled
+    /// plan must stay bit-exact against the interpreter with the tile
+    /// work gate dropped.
+    #[test]
+    fn apply_tuning_resolves_on_new_zoo_models() {
+        use super::plan::Step;
+        let force = TilingScheme { mr: 2, nr_panels: 2, kc: 7 };
+        for m in [
+            crate::models::vgg12_w2a2().unwrap(),
+            crate::models::rn12_w3a3().unwrap(),
+            crate::models::dws_w4a4().unwrap(),
+        ] {
+            let mut rng = Rng::new(0x7A11);
+            let xs = input_batch(&mut rng, &m.input_shape, 1);
+            for streamlined in [false, true] {
+                let label = if streamlined { "streamlined" } else { "raw" };
+                let mut g = m.graph.clone();
+                let analysis = if streamlined {
+                    prepare_streamlined(&mut g, &m.input_ranges).unwrap()
+                } else {
+                    analyze(&g, &m.input_ranges).unwrap()
+                };
+                let mut plan = compile(&g, &analysis).unwrap();
+                plan.apply_tuning(&force_table(&plan, force));
+                plan.set_min_tile_work(0);
+                assert!(
+                    plan.steps.iter().any(|s| {
+                        matches!(s, Step::MatMul(st) if st.scheme == force)
+                            || matches!(s, Step::Conv(st) if st.scheme == force)
+                    }),
+                    "{} ({label}): no MAC step resolved the forced scheme",
+                    m.name
+                );
+                let ys = plan.run_batch(&xs).unwrap();
+                let mut exec = Executor::new(&g).unwrap();
+                let want = exec.run_single(&xs[0]).unwrap().remove(0);
+                assert_eq!(
+                    want.data(),
+                    ys[0].data(),
+                    "{} ({label}): retiled plan diverged",
+                    m.name
+                );
+            }
+        }
+    }
+
+    /// Depthwise form of §7.1 stuck-channel elision, second witness
+    /// beyond MNv1: a padded depthwise conv shaped like DWS's
+    /// stem-output stage with one input channel pinned must compile its
+    /// constant output plane away (`DepthwiseStep::elided`), count it in
+    /// `elided_mac_channels`, and stay bit-exact on inputs honoring the
+    /// stuck channel.
+    #[test]
+    fn stuck_plane_is_elided_from_padded_depthwise_conv() {
+        use super::plan::Step;
+        let ch = 8usize;
+        let mut g = Graph::new("stuckdw");
+        g.add_input("x", &[1, ch, 8, 8]);
+        g.add_initializer("one", Tensor::scalar(1.0));
+        g.add_initializer("z", Tensor::scalar(0.0));
+        g.add_initializer("bits", Tensor::scalar(8.0));
+        g.add_node(Node::new(
+            "q",
+            Op::Quant {
+                signed: true,
+                narrow: false,
+                rounding: RoundMode::RoundEven,
+            },
+            &["x", "one", "z", "bits"],
+            &["xq"],
+        ));
+        let mut rng = Rng::new(0xD25);
+        g.add_initializer(
+            "W",
+            Tensor::new(
+                &[ch, 1, 3, 3],
+                (0..ch * 9).map(|_| rng.int_in(-3, 3) as f64).collect(),
+            )
+            .unwrap(),
+        );
+        g.add_node(Node::new(
+            "dw",
+            Op::Conv {
+                spec: crate::tensor::Conv2dSpec {
+                    kernel: (3, 3),
+                    stride: (1, 1),
+                    pad: (1, 1),
+                },
+                group: ch,
+            },
+            &["xq", "W"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        // channel 3 stuck at 5, all others live
+        let (mut lo, mut hi) = (vec![-50.0; ch], vec![50.0; ch]);
+        lo[3] = 5.0;
+        hi[3] = 5.0;
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            crate::sira::SiRange::float(
+                Tensor::new(&[1, ch, 1, 1], lo).unwrap(),
+                Tensor::new(&[1, ch, 1, 1], hi).unwrap(),
+            )
+            .unwrap(),
+        );
+        let analysis = analyze(&g, &inputs).unwrap();
+        let plan = compile(&g, &analysis).unwrap();
+        assert_eq!(plan.stats().depthwise, 1, "{}", plan.stats());
+        assert_eq!(plan.stats().elided_mac_channels, 1, "{}", plan.stats());
+        let elided_planes: usize = plan
+            .steps
+            .iter()
+            .map(|s| match s {
+                Step::Depthwise(d) => d.elided.len(),
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(elided_planes, 1, "stuck plane not elided from the dw step");
+        let xs: Vec<Tensor> = (0..2)
+            .map(|_| {
+                let mut data = Vec::with_capacity(ch * 64);
+                for c in 0..ch {
+                    for _ in 0..64 {
+                        data.push(if c == 3 { 5.0 } else { rng.int_in(-50, 50) as f64 });
+                    }
+                }
+                Tensor::new(&[1, ch, 8, 8], data).unwrap()
+            })
+            .collect();
+        exact_match(&g, &analysis, &xs);
+    }
 }

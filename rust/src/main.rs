@@ -2,7 +2,7 @@
 //! with the SIRA-enhanced FDNA compiler.
 //!
 //! ```text
-//! sira-finn analyze --model tfc|cnv|rn8|mnv1
+//! sira-finn analyze --model tfc|cnv|vgg12|rn8|rn12|mnv1|dws
 //! sira-finn compile --model tfc --tail thresholding|composite \
 //!                   --acc sira|datatype|32 --target-cycles 16384
 //! sira-finn serve   --model tfc --workers 4 --requests 256 \
@@ -505,7 +505,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "sira-finn — SIRA-enhanced FDNA compiler\n\
-                 usage: sira-finn <analyze|compile|serve|loadgen|snapshot|profile|tune|e2e> [--model tfc|cnv|rn8|mnv1] ...\n\
+                 usage: sira-finn <analyze|compile|serve|loadgen|snapshot|profile|tune|e2e> [--model tfc|cnv|vgg12|rn8|rn12|mnv1|dws] ...\n\
                  serve: --workers N (coordinator workers) --requests N\n\
                  \x20      --engine      serve the plan-compiled integer runtime\n\
                  \x20      --streamline  streamline first (implies --engine)\n\

@@ -11,6 +11,6 @@ pub use builder::{Granularity, QnnBuilder, ScaleKind};
 pub use datasets::{gaussian_blobs, Dataset};
 pub use sidecar::load_sidecar;
 pub use zoo::{
-    by_name, cnv_w2a2, mnv1_w4a4, mnv1_w4a4_scaled, paper_zoo, rn8_w3a3, tfc_w2a2,
-    worked_example, ZooModel, ZOO_NAMES,
+    by_name, cnv_w2a2, dws_w4a4, mnv1_w4a4, mnv1_w4a4_scaled, paper_zoo, rn12_w3a3, rn8_w3a3,
+    tfc_w2a2, vgg12_w2a2, worked_example, ZooModel, ZOO_NAMES,
 };

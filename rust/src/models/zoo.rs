@@ -1,5 +1,10 @@
-//! The QNN workload zoo of Table 5: TFC-w2a2, CNV-w2a2, RN8-w3a3 and
-//! MNv1-w4a4, built with deterministic seeded weights (the paper's
+//! The QNN workload zoo: the four Table 5 paper models (TFC-w2a2,
+//! CNV-w2a2, RN8-w3a3, MNv1-w4a4) plus three extension topologies that
+//! widen structural coverage — VGG12-w2a2 (deep VGG, segment-balance
+//! load), RN12-w3a3 (dense skips: one tap tensor feeding two residual
+//! joins through separate quantizers) and DWS-w4a4 (DS-CNN-style
+//! depthwise-separable net, the second load on the depthwise engine
+//! path). All are built with deterministic seeded weights (the paper's
 //! checkpoints come from the QONNX model zoo; SIRA's behaviour — range
 //! propagation, accumulator bounds, threshold counts, stuck channels —
 //! is a function of graph structure and weight values, which seeded
@@ -105,6 +110,45 @@ pub fn cnv_w2a2() -> Result<ZooModel> {
     })
 }
 
+/// VGG12-w2a2: a deeper VGG-style CIFAR classifier than CNV
+/// (2x32c3 - MP - 2x64c3 - MP - 3x128c3 - MP - 3x256c3 - 2 FC) with
+/// 2-bit weights/activations and 8-bit first/last layers. Ten convs in
+/// four uneven stages give `engine::segment` a longer, lumpier step
+/// sequence to cut and balance than CNV's six.
+pub fn vgg12_w2a2() -> Result<ZooModel> {
+    let mut b = QnnBuilder::new("VGG12-w2a2", 0x7612);
+    b.input("x", &[1, 3, 32, 32]);
+    b.quant_act(8, false, Granularity::PerTensor, 255.0);
+    let stages: [(usize, usize); 4] = [(32, 2), (64, 2), (128, 3), (256, 3)];
+    for (si, (ch, reps)) in stages.iter().enumerate() {
+        for _ in 0..*reps {
+            b.conv(*ch, 3, 1, 1, 2, Granularity::PerChannel, false);
+            b.batchnorm();
+            b.relu();
+            b.quant_act(2, false, Granularity::PerTensor, 6.0);
+        }
+        if si < 3 {
+            b.maxpool(2);
+        }
+    }
+    b.global_avgpool();
+    b.flatten();
+    b.linear(256, 2, Granularity::PerTensor, false);
+    b.batchnorm();
+    b.relu();
+    b.quant_act(2, false, Granularity::PerTensor, 6.0);
+    b.linear(10, 8, Granularity::PerTensor, true);
+    Ok(ZooModel {
+        name: "VGG12-w2a2",
+        graph: b.finish()?,
+        input_ranges: image_range("x"),
+        input_shape: vec![1, 3, 32, 32],
+        classes: 10,
+        wbits: 2,
+        abits: 2,
+    })
+}
+
 /// One quantized residual basic block (two 3x3 convs; 1x1 projection on
 /// stride/channel changes). Both branches are re-quantized to a *shared*
 /// signed scale before the Add so streamlining can factor it (§3.2.2).
@@ -162,6 +206,89 @@ pub fn rn8_w3a3() -> Result<ZooModel> {
         input_ranges: image_range("x"),
         input_shape: vec![1, 3, 32, 32],
         classes: 100,
+        wbits: 3,
+        abits: 3,
+    })
+}
+
+/// A densely-skipped residual stage: two basic sub-blocks that BOTH take
+/// their skip connection from the same stage-entry tensor `t0`, so `t0`
+/// ends up with three consumers (the first main-branch conv plus two skip
+/// quantizers). This is deliberately richer than [`residual_block`]'s
+/// single-consumer-per-branch shape: it exercises the
+/// `passes::streamline` single-use gate and the `engine::fuse`
+/// multi-consumer chain boundaries on a tensor that crosses quantizers
+/// more than once. Channel count and stride are held constant so both
+/// joins shape-check against the shared tap.
+fn dense_residual_stage(b: &mut QnnBuilder, ch: usize, wbits: u32, abits: u32) {
+    let t0 = b.current().to_string();
+    let t0_shape = b.current_shape().to_vec();
+    let res_hint = 6.0; // shared pre-add scale hint
+    // sub-block 1, main branch
+    b.conv(ch, 3, 1, 1, wbits, Granularity::PerChannel, false);
+    b.batchnorm();
+    b.relu();
+    b.quant_act(abits, false, Granularity::PerTensor, res_hint);
+    b.conv(ch, 3, 1, 1, wbits, Granularity::PerChannel, false);
+    b.batchnorm();
+    b.quant_act(abits, true, Granularity::PerTensor, res_hint);
+    let main1 = b.current().to_string();
+    let main1_shape = b.current_shape().to_vec();
+    // sub-block 1, skip: t0 requantized to the shared signed scale
+    b.seek(&t0, &t0_shape);
+    b.quant_act(abits, true, Granularity::PerTensor, res_hint);
+    let skip1 = b.current().to_string();
+    b.seek(&main1, &main1_shape);
+    b.add_residual(&skip1);
+    b.relu();
+    b.quant_act(abits, false, Granularity::PerTensor, res_hint);
+    // sub-block 2, main branch (continues from the first join)
+    b.conv(ch, 3, 1, 1, wbits, Granularity::PerChannel, false);
+    b.batchnorm();
+    b.relu();
+    b.quant_act(abits, false, Granularity::PerTensor, res_hint);
+    b.conv(ch, 3, 1, 1, wbits, Granularity::PerChannel, false);
+    b.batchnorm();
+    b.quant_act(abits, true, Granularity::PerTensor, res_hint);
+    let main2 = b.current().to_string();
+    let main2_shape = b.current_shape().to_vec();
+    // sub-block 2, skip: the SAME t0 again — its third consumer
+    b.seek(&t0, &t0_shape);
+    b.quant_act(abits, true, Granularity::PerTensor, res_hint);
+    let skip2 = b.current().to_string();
+    b.seek(&main2, &main2_shape);
+    b.add_residual(&skip2);
+    b.relu();
+    b.quant_act(abits, false, Granularity::PerTensor, res_hint);
+}
+
+/// RN12-w3a3: a richer-skip ResNet than RN8 — stem, one basic block, one
+/// densely-skipped stage (shared tap feeding two residual joins), then
+/// two downsampling basic blocks and an FC head. 13 convs, 5 residual
+/// adds; 3-bit weights/activations with 8-bit first/last layers.
+pub fn rn12_w3a3() -> Result<ZooModel> {
+    let mut b = QnnBuilder::new("RN12-w3a3", 0x12E5);
+    b.input("x", &[1, 3, 32, 32]);
+    b.quant_act(8, false, Granularity::PerTensor, 255.0);
+    // 8-bit stem
+    b.conv(16, 3, 1, 1, 8, Granularity::PerChannel, false);
+    b.batchnorm();
+    b.relu();
+    b.quant_act(3, false, Granularity::PerTensor, 6.0);
+    residual_block(&mut b, 16, 1, 3, 3);
+    dense_residual_stage(&mut b, 16, 3, 3);
+    residual_block(&mut b, 32, 2, 3, 3);
+    residual_block(&mut b, 64, 2, 3, 3);
+    b.global_avgpool();
+    b.flatten();
+    // 8-bit classifier
+    b.linear(10, 8, Granularity::PerTensor, true);
+    Ok(ZooModel {
+        name: "RN12-w3a3",
+        graph: b.finish()?,
+        input_ranges: image_range("x"),
+        input_shape: vec![1, 3, 32, 32],
+        classes: 10,
         wbits: 3,
         abits: 3,
     })
@@ -233,8 +360,44 @@ pub fn mnv1_w4a4() -> Result<ZooModel> {
     mnv1_w4a4_scaled(1)
 }
 
+/// DWS-w4a4: a DS-CNN-style keyword-spotting net, the second
+/// depthwise-separable workload after MNv1 and deliberately different
+/// from it: single-channel 32x32 spectrogram input, a stride-2 stem and
+/// four dw-separable blocks at small widths (64/128), 12 classes. Its
+/// depthwise shapes (32/64/128 channels at 16x16 and 8x8) load the
+/// depthwise width selection, `kc_bound` proof and stuck-plane elision
+/// from a second angle than MNv1's 224/`scale_divisor` pyramid.
+pub fn dws_w4a4() -> Result<ZooModel> {
+    let mut b = QnnBuilder::new("DWS-w4a4", 0xD25);
+    b.input("x", &[1, 1, 32, 32]);
+    b.quant_act(8, false, Granularity::PerTensor, 255.0);
+    // 8-bit stem, stride 2; per-channel act scale feeds the first dw conv
+    b.conv(32, 3, 2, 1, 8, Granularity::PerChannel, false);
+    b.batchnorm();
+    b.relu();
+    b.quant_act(4, false, Granularity::PerChannel, 6.0);
+    let blocks: [(usize, usize); 4] = [(64, 1), (64, 2), (128, 1), (128, 1)];
+    for (out_ch, stride) in blocks {
+        dw_separable(&mut b, out_ch, stride, 4, 4);
+    }
+    b.global_avgpool();
+    b.flatten();
+    b.linear(12, 8, Granularity::PerTensor, true);
+    Ok(ZooModel {
+        name: "DWS-w4a4",
+        graph: b.finish()?,
+        input_ranges: image_range("x"),
+        input_shape: vec![1, 1, 32, 32],
+        classes: 12,
+        wbits: 4,
+        abits: 4,
+    })
+}
+
 /// CLI-facing names accepted by [`by_name`], in presentation order.
-pub const ZOO_NAMES: &[&str] = &["tfc", "cnv", "rn8", "mnv1", "mnv1-full"];
+pub const ZOO_NAMES: &[&str] = &[
+    "tfc", "cnv", "vgg12", "rn8", "rn12", "mnv1", "mnv1-full", "dws",
+];
 
 /// Resolve a CLI model name to its zoo builder — the single name→model
 /// lookup shared by `sira-finn` (analyze/compile/serve/loadgen), the
@@ -244,9 +407,12 @@ pub fn by_name(name: &str) -> Result<ZooModel> {
     match name {
         "tfc" => tfc_w2a2(),
         "cnv" => cnv_w2a2(),
+        "vgg12" => vgg12_w2a2(),
         "rn8" => rn8_w3a3(),
+        "rn12" => rn12_w3a3(),
         "mnv1" => mnv1_w4a4_scaled(4),
         "mnv1-full" => mnv1_w4a4(),
+        "dws" => dws_w4a4(),
         other => anyhow::bail!(
             "unknown model '{other}' (expected one of: {})",
             ZOO_NAMES.join("|")
@@ -254,15 +420,22 @@ pub fn by_name(name: &str) -> Result<ZooModel> {
     }
 }
 
-/// All four paper workloads (MNv1 at reduced 56x56 resolution by default
-/// for tractable end-to-end benches; the graph structure, channel counts
-/// and parameter tensors are identical to the full model).
+/// The four paper workloads plus the three extension topologies
+/// (deep-VGG, dense-skip residual, DS-CNN), i.e. every [`ZOO_NAMES`]
+/// entry except `mnv1-full` — MNv1 appears once, at its reduced 56x56
+/// serving resolution, for tractable end-to-end benches; the graph
+/// structure, channel counts and parameter tensors are identical to the
+/// full model. Kept in [`ZOO_NAMES`] order and test-locked against
+/// [`by_name`] so the two registries cannot drift.
 pub fn paper_zoo() -> Result<Vec<ZooModel>> {
     Ok(vec![
         tfc_w2a2()?,
         cnv_w2a2()?,
+        vgg12_w2a2()?,
         rn8_w3a3()?,
+        rn12_w3a3()?,
         mnv1_w4a4_scaled(4)?,
+        dws_w4a4()?,
     ])
 }
 
@@ -352,6 +525,102 @@ mod tests {
     }
 
     #[test]
+    fn vgg12_structure() {
+        let m = vgg12_w2a2().unwrap();
+        assert_eq!(m.graph.count_op("Conv"), 10);
+        assert_eq!(m.graph.count_op("MaxPool"), 3);
+        assert_eq!(m.graph.count_op("MatMul"), 2);
+        assert_eq!(m.graph.shapes[&m.graph.outputs[0]], vec![1, 10]);
+    }
+
+    #[test]
+    fn rn12_structure_and_run() {
+        let m = rn12_w3a3().unwrap();
+        // stem + block(2) + dense stage(4) + block(3) + block(3)
+        let convs = m.graph.count_op("Conv");
+        assert_eq!(convs, 1 + 2 + 4 + 3 + 3, "convs = {convs}");
+        assert_eq!(m.graph.count_op("Add"), 6); // 5 residual adds + fc bias
+        let x = Tensor::full(&[1, 3, 32, 32], 100.0);
+        let y = Executor::new(&m.graph).unwrap().run_single(&x).unwrap();
+        assert_eq!(y[0].shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn rn12_has_a_multi_consumer_tensor_crossing_quantizers() {
+        // The dense stage's entry tensor must feed >= 3 nodes, at least
+        // two of them quantizers — the shape the streamline single-use
+        // gate and fuse's consumer checks exist for.
+        let m = rn12_w3a3().unwrap();
+        let g = &m.graph;
+        let found = g.nodes.iter().flat_map(|n| n.outputs.iter()).any(|t| {
+            let consumers: Vec<_> = g
+                .nodes
+                .iter()
+                .filter(|n| n.inputs.iter().any(|i| i == t))
+                .collect();
+            consumers.len() >= 3
+                && consumers
+                    .iter()
+                    .filter(|n| matches!(n.op, crate::graph::Op::Quant { .. }))
+                    .count()
+                    >= 2
+        });
+        assert!(found, "no >=3-consumer tensor crossing >=2 quantizers");
+    }
+
+    #[test]
+    fn dws_structure_and_run() {
+        let m = dws_w4a4().unwrap();
+        assert_eq!(m.graph.count_op("Conv"), 1 + 8); // stem + 4x(dw + pw)
+        let dw = m
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, crate::graph::Op::Conv { group, .. } if group > 1))
+            .count();
+        assert_eq!(dw, 4);
+        let x = Tensor::full(&[1, 1, 32, 32], 100.0);
+        let y = Executor::new(&m.graph).unwrap().run_single(&x).unwrap();
+        assert_eq!(y[0].shape(), &[1, 12]);
+    }
+
+    #[test]
+    fn by_name_and_paper_zoo_agree_for_every_zoo_name() {
+        // paper_zoo is ZOO_NAMES minus mnv1-full (MNv1 appears once, at
+        // the 56x56 serving resolution): every other name must resolve
+        // via by_name to a model structurally identical to its
+        // paper_zoo entry, so the CLI/serve registry and the bench zoo
+        // cannot drift apart again (the mnv1 scaled(8)-vs-scaled(4)
+        // regression this test pins down).
+        let zoo = paper_zoo().unwrap();
+        assert_eq!(zoo.len(), ZOO_NAMES.len() - 1);
+        for name in ZOO_NAMES {
+            let m = by_name(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            if *name == "mnv1-full" {
+                continue; // full-resolution alias, intentionally not in paper_zoo
+            }
+            // name alone is ambiguous (mnv1 and mnv1-full share a
+            // ZooModel name), so match on name + input shape.
+            let z = zoo
+                .iter()
+                .find(|z| z.name == m.name && z.input_shape == m.input_shape)
+                .unwrap_or_else(|| panic!("{name}: no paper_zoo entry for {}", m.name));
+            assert_eq!(z.classes, m.classes, "{name}: classes drift");
+            assert_eq!(
+                z.graph.nodes.len(),
+                m.graph.nodes.len(),
+                "{name}: node count drift"
+            );
+            let params = |g: &Graph| -> usize { g.initializers.values().map(|t| t.numel()).sum() };
+            assert_eq!(
+                params(&z.graph),
+                params(&m.graph),
+                "{name}: parameter count drift"
+            );
+        }
+    }
+
+    #[test]
     fn rn8_structure_and_run() {
         let m = rn8_w3a3().unwrap();
         // stem + 3 blocks x (2 main convs [+ projection]) = 1 + 2 + 3 + 3 = conv count
@@ -389,7 +658,14 @@ mod tests {
 
     #[test]
     fn zoo_models_analyze_under_sira() {
-        for m in [tfc_w2a2().unwrap(), cnv_w2a2().unwrap(), rn8_w3a3().unwrap()] {
+        for m in [
+            tfc_w2a2().unwrap(),
+            cnv_w2a2().unwrap(),
+            vgg12_w2a2().unwrap(),
+            rn8_w3a3().unwrap(),
+            rn12_w3a3().unwrap(),
+            dws_w4a4().unwrap(),
+        ] {
             let a = crate::sira::analyze(&m.graph, &m.input_ranges)
                 .unwrap_or_else(|e| panic!("{}: {e}", m.name));
             // output range must be finite

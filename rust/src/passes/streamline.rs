@@ -145,8 +145,19 @@ fn const_side(g: &Graph, node: &Node) -> Option<(usize, usize)> {
 }
 
 /// True if `tensor` is consumed exactly once and is not a graph output.
+///
+/// Counts input-position *occurrences*, not consuming nodes: a node that
+/// reads the tensor twice (e.g. `Add(t, t)` after a shared scale Mul) is
+/// two uses. `Graph::consumers` would report one consumer for that shape,
+/// which let rules like residual factoring rewrite a branch while the
+/// other occurrence still referenced it.
 fn single_use(g: &Graph, tensor: &str) -> bool {
-    g.consumers(tensor).len() == 1 && !g.outputs.iter().any(|o| o == tensor)
+    let uses: usize = g
+        .nodes
+        .iter()
+        .map(|n| n.inputs.iter().filter(|i| i.as_str() == tensor).count())
+        .sum();
+    uses == 1 && !g.outputs.iter().any(|o| o == tensor)
 }
 
 /// The streamlining rule engine: applies local rewrites until fixpoint.
@@ -713,6 +724,32 @@ mod tests {
             assert!((a - b).abs() < 1e-12);
         }
         assert_eq!(g.count_op("Mul"), 1, "branch scales not factored");
+    }
+
+    #[test]
+    fn self_add_of_shared_mul_is_not_factored() {
+        // `Add(t, t)` where `t` is the output of one Mul:
+        // `Graph::consumers` reports a single consuming node for `t`,
+        // but the Add reads it twice. Node-counting single_use let
+        // residual factoring fire on this shape — it removed the shared
+        // Mul once, then panicked looking up the "second" branch's
+        // producer. The occurrence-counting gate must refuse the
+        // rewrite, and streamlining must stay bit-exact.
+        let mut g = Graph::new("selfadd");
+        g.add_input("x", &[1, 4]);
+        g.add_initializer("s", Tensor::scalar(0.5));
+        g.add_node(Node::new("m", Op::Mul, &["x", "s"], &["t"]));
+        g.add_node(Node::new("add", Op::Add, &["t", "t"], &["y"]));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let x = Tensor::new(&[1, 4], vec![1., -2., 3., -4.]).unwrap();
+        let y0 = run(&g, &x);
+        streamline(&mut g).unwrap();
+        g.check().unwrap();
+        let y1 = run(&g, &x);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-12);
+        }
     }
 
     #[test]

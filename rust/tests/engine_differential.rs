@@ -44,13 +44,20 @@ fn base_seed() -> u64 {
 
 /// Random small QNN: random input rank, layer kinds, widths, bitwidths,
 /// signedness, activation/weight granularities (per-channel scales
-/// included), pooling and optional depthwise convs.
+/// included), pooling, optional depthwise convs, and (from a separate
+/// seed stream) fan-out constructs — a residual skip whose tap tensor
+/// has two consumers crossing a quantizer, a self-add `Add(t, t)`, and a
+/// graph output that is also consumed downstream — so the streamline
+/// single-use gate and fuse's multi-consumer/output chain boundaries get
+/// randomized coverage, not just the zoo's fixed shapes.
 ///
 /// `streamline_safe` keeps activation quantizers unsigned + per-tensor —
 /// the envelope the streamlining passes are specified over (weight
-/// granularity stays random, per-channel included). Raw-graph cases use
-/// the full variety: the engine's generic fallback must swallow anything
-/// the executor runs.
+/// granularity stays random, per-channel included; the signed shared-
+/// scale pre-add quantizers of the residual construct are the rn8/rn12
+/// pattern, which is inside that envelope). Raw-graph cases use the full
+/// variety: the engine's generic fallback must swallow anything the
+/// executor runs.
 fn random_qnn(seed: u64, streamline_safe: bool) -> (Graph, Vec<usize>) {
     let mut rng = Rng::new(seed);
     let conv_input = rng.chance(0.5);
@@ -106,8 +113,53 @@ fn random_qnn(seed: u64, streamline_safe: bool) -> (Graph, Vec<usize>) {
             b.quant_act(abits, false, agran, 8.0);
         }
     }
+    // Fan-out constructs, drawn from a *separate* stream so the
+    // layer-stack draws above replay identically for existing pinned
+    // seeds — only graphs where a construct fires gain new structure.
+    let mut fan = Rng::new(seed ^ 0xFA00);
+    if fan.chance(0.35) {
+        // Residual skip in FC-land: `tap` (a quantizer output) feeds
+        // both the main linear and a skip requantizer — a multi-consumer
+        // tensor crossing a quantizer, the shape the streamline
+        // single-use gate and fuse's consumer checks guard.
+        let tap = b.current().to_string();
+        let tap_shape = b.current_shape().to_vec();
+        let f = tap_shape[1];
+        b.linear(f, fan.int_in(2, 6) as u32, Granularity::PerTensor, false);
+        b.batchnorm();
+        b.quant_act(3, true, Granularity::PerTensor, 8.0);
+        let main = b.current().to_string();
+        let main_shape = b.current_shape().to_vec();
+        b.seek(&tap, &tap_shape);
+        b.quant_act(3, true, Granularity::PerTensor, 8.0);
+        let skip = b.current().to_string();
+        b.seek(&main, &main_shape);
+        b.add_residual(&skip);
+        b.relu();
+        b.quant_act(3, false, Granularity::PerTensor, 8.0);
+    }
+    if fan.chance(0.25) {
+        // Self-add `Add(t, t)`: one consuming node but two input-
+        // position uses of the same tensor — the shape that exposed the
+        // node-counting single_use bug in residual factoring.
+        let t = b.current().to_string();
+        b.add_residual(&t);
+        b.relu();
+        b.quant_act(3, false, Granularity::PerTensor, 8.0);
+    }
+    let output_mid = fan.chance(0.3);
+    let pre_tail = b.current().to_string();
     b.linear(5, 8, Granularity::PerTensor, true);
-    (b.finish().unwrap(), in_shape)
+    let mut g = b.finish().unwrap();
+    if output_mid {
+        // Graph output that is also consumed downstream: keep the
+        // classifier tail as live consumer nodes of the output tensor,
+        // but make the pre-tail tensor the graph's single output —
+        // exercising fuse's chain break at graph outputs and the
+        // arena's output-slot pinning while later steps still run.
+        g.outputs = vec![pre_tail];
+    }
+    (g, in_shape)
 }
 
 fn uint8_input_ranges() -> BTreeMap<String, SiRange> {

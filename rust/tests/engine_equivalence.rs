@@ -47,9 +47,49 @@ fn assert_bit_exact(g: &Graph, analysis: &Analysis, seed: u64, batches: &[usize]
     }
 }
 
+/// Like [`assert_bit_exact`] but at explicit thread counts {1, 4} with
+/// `min_kernel_work` forced to 0 so the sharded paths engage even at
+/// batch 1 — the acceptance matrix for zoo additions.
+fn assert_bit_exact_threads(g: &Graph, analysis: &Analysis, seed: u64, batches: &[usize]) {
+    let mut exec = Executor::new(g).unwrap();
+    let in_shape = g.shapes[&g.inputs[0]].clone();
+    for threads in [1usize, 4] {
+        let mut plan = engine::compile(g, analysis)
+            .unwrap_or_else(|e| panic!("{}: engine compile failed: {e:#}", g.name));
+        plan.set_threads(threads);
+        plan.set_min_kernel_work(0);
+        let mut rng = Rng::new(seed);
+        for &bsz in batches {
+            let xs = random_batch(&mut rng, &in_shape, bsz);
+            let ys = plan.run_batch(&xs).unwrap();
+            assert_eq!(ys.len(), xs.len());
+            for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
+                let want = exec.run_single(x).unwrap().remove(0);
+                assert_eq!(
+                    want.shape(),
+                    y.shape(),
+                    "{}: shape at sample {i} (t={threads})",
+                    g.name
+                );
+                assert_eq!(
+                    want.data(),
+                    y.data(),
+                    "{}: engine not bit-exact at sample {i} (batch {bsz}, t={threads})",
+                    g.name
+                );
+            }
+        }
+    }
+}
+
 fn raw_case(m: ZooModel, seed: u64, batches: &[usize]) {
     let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
     assert_bit_exact(&m.graph, &analysis, seed, batches);
+}
+
+fn raw_case_threads(m: ZooModel, seed: u64, batches: &[usize]) {
+    let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+    assert_bit_exact_threads(&m.graph, &analysis, seed, batches);
 }
 
 #[test]
@@ -68,10 +108,35 @@ fn rn8_w3a3_bit_exact() {
 }
 
 #[test]
+fn vgg12_w2a2_bit_exact() {
+    raw_case_threads(models::vgg12_w2a2().unwrap(), 0x7612, &[2]);
+}
+
+#[test]
+fn rn12_w3a3_bit_exact() {
+    raw_case_threads(models::rn12_w3a3().unwrap(), 0x12E5, &[2]);
+}
+
+#[test]
+fn dws_w4a4_bit_exact() {
+    raw_case_threads(models::dws_w4a4().unwrap(), 0x0D25, &[1, 4]);
+}
+
+#[test]
 fn mnv1_w4a4_bit_exact() {
     // 28x28 resolution: identical graph structure/params to the paper
-    // model, tractable for a per-sample interpreter comparison
+    // model, tractable for a per-sample interpreter comparison. The
+    // serving resolution (by_name's 56x56) is covered separately below —
+    // both resolutions are deliberate, not drift.
     raw_case(models::mnv1_w4a4_scaled(8).unwrap(), 0x1144, &[1]);
+}
+
+#[test]
+fn mnv1_serving_resolution_bit_exact() {
+    // by_name("mnv1") — the exact artifact the CLI, the serving registry
+    // and the perf gate compile (56x56). Previously only 28x28 was
+    // equivalence-tested while every other path ran 56x56.
+    raw_case(models::by_name("mnv1").unwrap(), 0x1145, &[1]);
 }
 
 #[test]
@@ -107,6 +172,58 @@ fn streamlined_cnv_bit_exact_with_fused_thresholds() {
     assert_bit_exact(&g, &analysis, 0x5C27, &[2]);
 }
 
+#[test]
+fn streamlined_vgg12_bit_exact_with_integer_macs() {
+    let m = models::vgg12_w2a2().unwrap();
+    let mut g = m.graph.clone();
+    let analysis = engine::prepare_streamlined(&mut g, &m.input_ranges).unwrap();
+    let plan = engine::compile(&g, &analysis).unwrap();
+    assert!(
+        plan.stats().integer_macs() >= 1,
+        "streamlined VGG12 produced no integer MACs: {}",
+        plan.stats()
+    );
+    assert!(
+        plan.stats().fused_thresholds >= 1,
+        "streamlined VGG12 fused no thresholds: {}",
+        plan.stats()
+    );
+    assert_bit_exact_threads(&g, &analysis, 0x5762, &[2]);
+}
+
+#[test]
+fn streamlined_rn12_bit_exact_with_integer_macs() {
+    let m = models::rn12_w3a3().unwrap();
+    let mut g = m.graph.clone();
+    let analysis = engine::prepare_streamlined(&mut g, &m.input_ranges).unwrap();
+    let plan = engine::compile(&g, &analysis).unwrap();
+    assert!(
+        plan.stats().integer_macs() >= 1,
+        "streamlined RN12 produced no integer MACs: {}",
+        plan.stats()
+    );
+    assert_bit_exact_threads(&g, &analysis, 0x52E5, &[2]);
+}
+
+#[test]
+fn streamlined_dws_bit_exact_with_depthwise_steps() {
+    let m = models::dws_w4a4().unwrap();
+    let mut g = m.graph.clone();
+    let analysis = engine::prepare_streamlined(&mut g, &m.input_ranges).unwrap();
+    let plan = engine::compile(&g, &analysis).unwrap();
+    assert!(
+        plan.stats().integer_macs() >= 1,
+        "streamlined DWS produced no integer MACs: {}",
+        plan.stats()
+    );
+    assert!(
+        plan.stats().depthwise >= 1,
+        "streamlined DWS compiled no depthwise steps: {}",
+        plan.stats()
+    );
+    assert_bit_exact_threads(&g, &analysis, 0x5D25, &[1, 4]);
+}
+
 /// Segmented execution on the zoo workloads: the pipelined serving
 /// compute path must produce the monolithic runner's bits.
 #[test]
@@ -114,6 +231,9 @@ fn segmented_zoo_models_bit_exact() {
     for (m, segs) in [
         (models::tfc_w2a2().unwrap(), 3usize),
         (models::cnv_w2a2().unwrap(), 4),
+        (models::vgg12_w2a2().unwrap(), 5),
+        (models::rn12_w3a3().unwrap(), 4),
+        (models::dws_w4a4().unwrap(), 3),
     ] {
         let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
         let mut mono = engine::compile(&m.graph, &analysis).unwrap();
@@ -158,8 +278,13 @@ fn zoo_plans() -> Vec<(String, engine::Plan)> {
     for m in [
         models::tfc_w2a2().unwrap(),
         models::cnv_w2a2().unwrap(),
+        models::vgg12_w2a2().unwrap(),
         models::rn8_w3a3().unwrap(),
-        models::mnv1_w4a4_scaled(8).unwrap(),
+        models::rn12_w3a3().unwrap(),
+        // by_name's 56x56 serving artifact, not the 28x28 test scale —
+        // the snapshot/trim suites must cover what serve actually loads
+        models::by_name("mnv1").unwrap(),
+        models::dws_w4a4().unwrap(),
     ] {
         let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
         out.push((

@@ -2,9 +2,10 @@
 //! (`sira_finn::serve`): a real server on `127.0.0.1:0`, real TCP
 //! clients, and the full contract from ISSUE 5 —
 //!
-//! * concurrent clients × {tfc, cnv} × mixed batch sizes get responses
-//!   **bit-exact** against a direct [`Plan::run_batch`] on the same
-//!   inputs (f64 values survive the JSON round trip exactly);
+//! * concurrent clients × {tfc, cnv, vgg12, rn12, dws} × mixed batch
+//!   sizes get responses **bit-exact** against a direct
+//!   [`Plan::run_batch`] on the same inputs (f64 values survive the
+//!   JSON round trip exactly);
 //! * overload yields 503 load-shed without wedging the server;
 //! * deadline-expired requests fail with the timeout error (504) before
 //!   any engine runs them;
@@ -66,13 +67,19 @@ fn infer_body(samples: &[Vec<f64>]) -> Json {
     )])
 }
 
-/// N concurrent client threads × two models × mixed batch sizes, every
-/// response compared element-exact against `Plan::run_batch`.
+/// N concurrent client threads × five zoo models × mixed batch sizes,
+/// every response compared element-exact against `Plan::run_batch`.
 #[test]
 fn loopback_is_bit_exact_vs_run_batch() {
-    let server = start_server(&["tfc", "cnv"], 2, 1024);
+    let server = start_server(&["tfc", "cnv", "vgg12", "rn12", "dws"], 2, 1024);
     let addr = server.addr().to_string();
-    let shapes = [("tfc", 784usize), ("cnv", 3 * 32 * 32)];
+    let shapes = [
+        ("tfc", 784usize),
+        ("cnv", 3 * 32 * 32),
+        ("vgg12", 3 * 32 * 32),
+        ("rn12", 3 * 32 * 32),
+        ("dws", 32 * 32),
+    ];
     let batch_sizes = [1usize, 3, 8];
 
     type Recorded = (String, Vec<Vec<f64>>, Vec<Vec<f64>>);
@@ -146,7 +153,7 @@ fn loopback_is_bit_exact_vs_run_batch() {
     assert_eq!(status, 200);
     let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     let models_j = v.get("models").unwrap();
-    let completed: usize = ["tfc", "cnv"]
+    let completed: usize = ["tfc", "cnv", "vgg12", "rn12", "dws"]
         .iter()
         .map(|m| {
             models_j

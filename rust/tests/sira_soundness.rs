@@ -209,6 +209,68 @@ fn observed_values_lie_within_sira_int_bounds_raw_and_streamlined() {
     }
 }
 
+/// The same pure-integer-bounds property, run over the three zoo
+/// additions (VGG12, RN12, DWS) raw and streamlined — real topologies
+/// with residual fan-out, dense skips and depthwise stages rather than
+/// the linear random stacks above. One sampled input per form keeps the
+/// debug-profile runtime bounded; the elision-relevant property is
+/// per-tensor, not per-sample.
+#[test]
+fn zoo_additions_respect_sira_int_bounds_raw_and_streamlined() {
+    use sira_finn::engine::prepare_streamlined;
+    use sira_finn::models;
+    use sira_finn::passes::accmin::sira_int_bounds;
+
+    let check = |g: &Graph, analysis: &sira_finn::sira::Analysis, name: &str, label: &str| {
+        let in_shape = g.shapes[&g.inputs[0]].clone();
+        let numel: usize = in_shape.iter().product();
+        let mut rng = Rng::new(0x200A);
+        let x = Tensor::new(
+            &in_shape,
+            (0..numel).map(|_| rng.int_in(0, 255) as f64).collect(),
+        )
+        .unwrap();
+        let mut m = BTreeMap::new();
+        m.insert(g.inputs[0].clone(), x);
+        let env = Executor::new(g).unwrap().run_env(&m).unwrap();
+        let mut checked = 0usize;
+        for (tensor, value) in &env {
+            let Ok(r) = analysis.get(tensor) else { continue };
+            let Some(ic) = &r.int else { continue };
+            if !ic.is_pure_integer() {
+                continue;
+            }
+            let Some((lo, hi)) = sira_int_bounds(analysis, tensor) else {
+                continue;
+            };
+            for (i, &v) in value.data().iter().enumerate() {
+                assert!(
+                    v >= lo as f64 - 1e-9 && v <= hi as f64 + 1e-9,
+                    "{name} ({label}), {tensor}[{i}]: {v} outside int bounds [{lo}, {hi}]"
+                );
+            }
+            checked += 1;
+        }
+        assert!(
+            checked > 0,
+            "{name} ({label}): no pure-integer tensors were checked"
+        );
+    };
+
+    for m in [
+        models::vgg12_w2a2().unwrap(),
+        models::rn12_w3a3().unwrap(),
+        models::dws_w4a4().unwrap(),
+    ] {
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        check(&m.graph, &analysis, m.name, "raw");
+
+        let mut sg = m.graph.clone();
+        let s_analysis = prepare_streamlined(&mut sg, &m.input_ranges).unwrap();
+        check(&sg, &s_analysis, m.name, "streamlined");
+    }
+}
+
 /// Accumulator-edge case on the `common::near_limit_graph` fixture
 /// (shared with `rust/tests/kernel_properties.rs`): a quant → integer
 /// MatMul whose worst-case partial-sum bound (4 × 100 × 5e6 = 2.0e9)
