@@ -22,7 +22,9 @@
 //! network-serving configuration
 //! (`serve/loopback/cnv/b8`: a real `127.0.0.1` HTTP server driven by
 //! the in-crate load generator) and the cold-start pair
-//! (`coldstart/<model>/{compile,snapshot}`: full graph→SIRA→compile vs
+//! (`coldstart/<model>/{compile,snapshot}`, plus
+//! `coldstart/cnv/onnx-import` for the ONNX bytes→import→SIRA→compile
+//! interchange path: full graph→SIRA→compile vs
 //! [`engine::snapshot`] decode of the same plan) — and compares them
 //! against the checked-in baseline, failing
 //! (exit 1) on a >25% throughput regression. Baselines are
@@ -374,6 +376,26 @@ fn measure_coldstart(model: &str) -> (f64, f64) {
     (best_compile, best_snapshot)
 }
 
+/// Cold start through the interchange front door: ONNX bytes →
+/// [`models::import_model`] → SIRA → plan compile, best-of-3. Gated so
+/// importer regressions (a quadratic decode, a shape-inference blowup)
+/// show up as a cold-start number, not an anecdote.
+fn measure_onnx_coldstart(model: &str) -> f64 {
+    let zm = models::by_name(model).unwrap();
+    let bytes = models::export_model(&zm.graph);
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        let g = models::import_model(&bytes).unwrap();
+        let ranges = models::default_input_ranges(&g).unwrap();
+        let a = analyze(&g, &ranges).unwrap();
+        let plan = engine::compile(&g, &a).unwrap();
+        best = best.min(t0.elapsed().as_nanos() as f64);
+        assert!(plan.stats().steps > 0, "{model}");
+    }
+    best
+}
+
 /// Compare one measurement against the baseline map, recording it when
 /// this environment has never seen the key.
 fn gate_check(
@@ -514,6 +536,23 @@ fn run_gate(path: &str) -> i32 {
             tolerance,
             format!("coldstart/{model}/snapshot"),
             ns_snapshot,
+            &mut failed,
+            &mut recorded,
+        );
+    }
+    // interchange cold start: exported ONNX bytes back through
+    // import → SIRA → compile, the `sira-finn import` / `--onnx` path
+    {
+        let ns_import = measure_onnx_coldstart("cnv");
+        println!(
+            "{{\"bench\":\"perf_hotpath\",\"name\":\"coldstart\",\"model\":\"cnv\",\
+             \"ns_onnx_import\":{ns_import:.0}}}"
+        );
+        gate_check(
+            &mut entries,
+            tolerance,
+            "coldstart/cnv/onnx-import".to_string(),
+            ns_import,
             &mut failed,
             &mut recorded,
         );

@@ -5,6 +5,7 @@
 //! sira-finn analyze --model tfc|cnv|vgg12|rn8|rn12|mnv1|dws
 //! sira-finn compile --model tfc --tail thresholding|composite \
 //!                   --acc sira|datatype|32 --target-cycles 16384
+//! sira-finn import  model.onnx [--streamline] [--snapshot model.plan]
 //! sira-finn serve   --model tfc --workers 4 --requests 256 \
 //!                   [--engine [--streamline] --threads N --pipeline N]
 //! sira-finn serve   --listen 127.0.0.1:8080 --models tfc,cnv --engine \
@@ -59,11 +60,11 @@ fn parse_opts(args: &Args) -> Result<CompileOptions> {
     })
 }
 
-fn cmd_analyze(args: &Args) -> Result<()> {
-    let m = models::by_name(args.get_or("model", "tfc"))?;
-    let a = analyze(&m.graph, &m.input_ranges)?;
+/// Render the per-tensor SIRA range table (shared by `analyze` and
+/// `import`).
+fn sira_table(g: &sira_finn::graph::Graph, a: &sira_finn::sira::Analysis) -> Result<String> {
     let mut t = Table::new(&["Tensor", "lo", "hi", "int?", "scale", "bits"]);
-    for node in m.graph.topo_nodes()? {
+    for node in g.topo_nodes()? {
         let out = node.output();
         let r = a.get(out)?;
         let (lo, hi) = r.bounds();
@@ -87,7 +88,71 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             bits,
         ]);
     }
-    println!("SIRA analysis of {}:\n{}", m.name, t.render());
+    Ok(t.render())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let m = models::by_name(args.get_or("model", "tfc"))?;
+    let a = analyze(&m.graph, &m.input_ranges)?;
+    println!("SIRA analysis of {}:\n{}", m.name, sira_table(&m.graph, &a)?);
+    Ok(())
+}
+
+/// `import`: decode an ONNX/QONNX file into the internal graph, run
+/// SIRA over it (uint8 input convention), compile the engine plan, and
+/// prove it executes with a probe batch. `--snapshot FILE` additionally
+/// writes the compiled plan as a cold-start sidecar, after which the
+/// model serves via `serve --snapshot FILE` without re-importing.
+fn cmd_import(args: &Args) -> Result<()> {
+    let file = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("file"))
+        .ok_or_else(|| {
+            anyhow!("usage: sira-finn import FILE.onnx [--streamline] [--snapshot OUT.plan]")
+        })?;
+    let bytes = std::fs::read(file)?;
+    let t0 = std::time::Instant::now();
+    let mut g = models::import_model(&bytes)?;
+    let import_dt = t0.elapsed();
+    println!(
+        "imported {file}: graph '{}' in {import_dt:.2?} — {} nodes, {} initializers, inputs {:?}",
+        g.name,
+        g.nodes.len(),
+        g.initializers.len(),
+        g.inputs
+    );
+    let ranges = models::default_input_ranges(&g)?;
+    let analysis = analyze(&g, &ranges)?;
+    println!("SIRA analysis of {}:\n{}", g.name, sira_table(&g, &analysis)?);
+    let analysis = if args.flag("streamline") {
+        sira_finn::engine::prepare_streamlined(&mut g, &ranges)?
+    } else {
+        analysis
+    };
+    let t0 = std::time::Instant::now();
+    let mut plan = sira_finn::engine::compile(&g, &analysis)?;
+    let compile_dt = t0.elapsed();
+    let shape = plan.input_shape().to_vec();
+    let xs: Vec<Tensor> = (0..2)
+        .map(|i| Tensor::full(&shape, (i * 37 % 255) as f64))
+        .collect();
+    plan.run_batch(&xs)?;
+    println!(
+        "engine probe ok: compiled in {compile_dt:.2?}{} and ran a {}-sample batch — {}",
+        if args.flag("streamline") { " (streamlined)" } else { "" },
+        xs.len(),
+        plan.stats()
+    );
+    if let Some(out) = args.get("snapshot") {
+        sira_finn::engine::snapshot::save(&plan, out)?;
+        println!(
+            "wrote {out}: plan '{}' ({} bytes)",
+            plan.name(),
+            std::fs::metadata(out)?.len()
+        );
+    }
     Ok(())
 }
 
@@ -152,6 +217,7 @@ fn spec_from_args(name: &str, args: &Args) -> Result<ModelSpec> {
         profile: args.flag("profile"),
         replicas: args.get_usize("replicas", 1)?,
         snapshot_path,
+        onnx_path: args.get("onnx").map(|s| s.to_string()),
     })
 }
 
@@ -496,6 +562,7 @@ fn main() -> Result<()> {
     match cmd {
         "analyze" => cmd_analyze(&args),
         "compile" => cmd_compile(&args),
+        "import" => cmd_import(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "snapshot" => cmd_snapshot(&args),
@@ -505,7 +572,10 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "sira-finn — SIRA-enhanced FDNA compiler\n\
-                 usage: sira-finn <analyze|compile|serve|loadgen|snapshot|profile|tune|e2e> [--model tfc|cnv|vgg12|rn8|rn12|mnv1|dws] ...\n\
+                 usage: sira-finn <analyze|compile|import|serve|loadgen|snapshot|profile|tune|e2e> [--model tfc|cnv|vgg12|rn8|rn12|mnv1|dws] ...\n\
+                 import: sira-finn import FILE.onnx [--streamline] [--snapshot OUT.plan]\n\
+                 \x20      decode a QONNX/ONNX model, print its SIRA report, compile\n\
+                 \x20      and probe the engine plan (see README, Model interchange)\n\
                  serve: --workers N (coordinator workers) --requests N\n\
                  \x20      --engine      serve the plan-compiled integer runtime\n\
                  \x20      --streamline  streamline first (implies --engine)\n\
@@ -520,6 +590,8 @@ fn main() -> Result<()> {
                  \x20                    route to the least-loaded replica\n\
                  \x20      --snapshot F  cold-start the plan from a snapshot sidecar\n\
                  \x20                    instead of compiling (implies --engine)\n\
+                 \x20      --onnx F      build the model from an ONNX file instead of\n\
+                 \x20                    the zoo (the --model name is just its label)\n\
                  \x20      --listen ADDR serve over HTTP instead of the in-process loop\n\
                  \x20                    (--models tfc,cnv --max-pending N --deadline-ms N;\n\
                  \x20                    stop with POST /admin/shutdown)\n\

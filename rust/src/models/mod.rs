@@ -1,14 +1,16 @@
 //! QNN workload zoo (Table 5), synthetic datasets, the §3.3 worked
-//! example and the artifact-sidecar model loader used by the end-to-end
-//! example.
+//! example, the artifact-sidecar model loader used by the end-to-end
+//! example and the QONNX/ONNX interchange layer.
 
 pub mod builder;
 pub mod datasets;
+pub mod onnx;
 pub mod sidecar;
 pub mod zoo;
 
 pub use builder::{Granularity, QnnBuilder, ScaleKind};
 pub use datasets::{gaussian_blobs, Dataset};
+pub use onnx::{default_input_ranges, export_model, import_model};
 pub use sidecar::load_sidecar;
 pub use zoo::{
     by_name, cnv_w2a2, dws_w4a4, mnv1_w4a4, mnv1_w4a4_scaled, paper_zoo, rn12_w3a3, rn8_w3a3,

@@ -1,0 +1,308 @@
+//! Serialize an internal [`Graph`] to QONNX-flavored ONNX bytes.
+//!
+//! Conventions (mirrored by [`super::import`], so export → import is
+//! graph-isomorphic and bit-exact):
+//!
+//! - Initializers are written as `DOUBLE` tensors with little-endian
+//!   `raw_data`, preserving the crate's f64 tensor storage bit-for-bit.
+//! - Float-valued attributes (`epsilon`, `out_scale`, ...) are written
+//!   twice: the standard f32 field for ecosystem compatibility, plus a
+//!   rank-0 `DOUBLE` tensor attribute named `<attr>_f64` carrying the
+//!   exact value. The importer prefers the `_f64` twin when present.
+//! - `Reshape` gets its target shape as a second `INT64` initializer
+//!   input named `<node>::shape` (ONNX semantics); the importer folds it
+//!   back into the op and drops the synthetic initializer.
+//! - The `graph` field is written *last* in `ModelProto`, so any
+//!   truncation of the output cuts into the graph payload and fails the
+//!   importer's framing checks instead of silently dropping fields.
+//!
+//! QONNX custom ops (`Quant`, `MultiThreshold`) carry domain
+//! `qonnx.custom_op.general`, matching the QONNX python package.
+
+use crate::graph::{Graph, Node, Op, RoundMode};
+use crate::tensor::Tensor;
+
+use super::proto::{DT_DOUBLE, DT_INT64};
+use super::wire::{put_bytes, put_f32, put_int, put_packed_i64s, put_str};
+
+/// Domain string for QONNX custom ops.
+pub const QONNX_DOMAIN: &str = "qonnx.custom_op.general";
+/// ai.onnx opset version we declare (and accept back).
+pub const ONNX_OPSET: i64 = 13;
+
+/// Serialize a graph to ONNX `ModelProto` bytes. Infallible: every
+/// internal [`Op`] has an ONNX spelling.
+pub fn export_model(g: &Graph) -> Vec<u8> {
+    let mut graph = Vec::new();
+
+    // Synthetic initializers (Reshape target shapes) collected per node.
+    let mut extra_inits: Vec<(String, Vec<i64>)> = Vec::new();
+    for n in &g.nodes {
+        let nb = encode_node(n, &mut extra_inits);
+        put_bytes(&mut graph, 1, &nb);
+    }
+    put_str(&mut graph, 2, &g.name);
+    for (name, t) in &g.initializers {
+        let tb = encode_double_tensor(name, t);
+        put_bytes(&mut graph, 5, &tb);
+    }
+    for (name, dims) in &extra_inits {
+        let tb = encode_int64_tensor(name, dims);
+        put_bytes(&mut graph, 5, &tb);
+    }
+    for name in &g.inputs {
+        let shape = g.shapes.get(name).map(Vec::as_slice).unwrap_or(&[]);
+        let vb = encode_value_info(name, shape);
+        put_bytes(&mut graph, 11, &vb);
+    }
+    for name in &g.outputs {
+        let shape = g.shapes.get(name).map(Vec::as_slice).unwrap_or(&[]);
+        let vb = encode_value_info(name, shape);
+        put_bytes(&mut graph, 12, &vb);
+    }
+
+    let mut model = Vec::new();
+    put_int(&mut model, 1, 8); // ir_version 8
+    put_str(&mut model, 2, "sira-finn");
+    for (domain, version) in [("", ONNX_OPSET), (QONNX_DOMAIN, 1)] {
+        let mut op = Vec::new();
+        put_str(&mut op, 1, domain);
+        put_int(&mut op, 2, version);
+        put_bytes(&mut model, 8, &op);
+    }
+    // graph last: every proper truncation lands inside this payload.
+    put_bytes(&mut model, 7, &graph);
+    model
+}
+
+fn encode_node(n: &Node, extra_inits: &mut Vec<(String, Vec<i64>)>) -> Vec<u8> {
+    let mut b = Vec::new();
+    let mut inputs: Vec<String> = n.inputs.clone();
+    let mut attrs: Vec<Vec<u8>> = Vec::new();
+    let mut domain = "";
+
+    let op_type: &str = match &n.op {
+        Op::Quant {
+            signed,
+            narrow,
+            rounding,
+        } => {
+            domain = QONNX_DOMAIN;
+            attrs.push(attr_int("signed", i64::from(*signed)));
+            attrs.push(attr_int("narrow", i64::from(*narrow)));
+            let mode = match rounding {
+                RoundMode::RoundEven => "ROUND",
+                RoundMode::Floor => "FLOOR",
+                RoundMode::Ceil => "CEIL",
+            };
+            attrs.push(attr_str("rounding_mode", mode));
+            "Quant"
+        }
+        Op::MatMul => "MatMul",
+        Op::Gemm => "Gemm",
+        Op::Conv { spec, group } => {
+            attrs.push(attr_ints(
+                "kernel_shape",
+                &[spec.kernel.0 as i64, spec.kernel.1 as i64],
+            ));
+            attrs.push(attr_ints(
+                "strides",
+                &[spec.stride.0 as i64, spec.stride.1 as i64],
+            ));
+            attrs.push(attr_ints(
+                "pads",
+                &[
+                    spec.pad.0 as i64,
+                    spec.pad.1 as i64,
+                    spec.pad.0 as i64,
+                    spec.pad.1 as i64,
+                ],
+            ));
+            attrs.push(attr_ints("dilations", &[1, 1]));
+            attrs.push(attr_int("group", *group as i64));
+            "Conv"
+        }
+        Op::Add => "Add",
+        Op::Sub => "Sub",
+        Op::Mul => "Mul",
+        Op::Div => "Div",
+        Op::Relu => "Relu",
+        Op::Sigmoid => "Sigmoid",
+        Op::BatchNorm { eps } => {
+            push_f64_attr(&mut attrs, "epsilon", *eps);
+            "BatchNormalization"
+        }
+        Op::MaxPool { spec } | Op::AveragePool { spec } => {
+            attrs.push(attr_ints(
+                "kernel_shape",
+                &[spec.kernel.0 as i64, spec.kernel.1 as i64],
+            ));
+            attrs.push(attr_ints(
+                "strides",
+                &[spec.stride.0 as i64, spec.stride.1 as i64],
+            ));
+            attrs.push(attr_ints(
+                "pads",
+                &[
+                    spec.pad.0 as i64,
+                    spec.pad.1 as i64,
+                    spec.pad.0 as i64,
+                    spec.pad.1 as i64,
+                ],
+            ));
+            if matches!(n.op, Op::MaxPool { .. }) {
+                "MaxPool"
+            } else {
+                "AveragePool"
+            }
+        }
+        Op::GlobalAveragePool => "GlobalAveragePool",
+        Op::Reshape { shape } => {
+            let init_name = format!("{}::shape", n.name);
+            inputs.push(init_name.clone());
+            extra_inits.push((init_name, shape.clone()));
+            "Reshape"
+        }
+        Op::Flatten { axis } => {
+            attrs.push(attr_int("axis", *axis as i64));
+            "Flatten"
+        }
+        Op::Transpose { perm } => {
+            let perm: Vec<i64> = perm.iter().map(|&p| p as i64).collect();
+            attrs.push(attr_ints("perm", &perm));
+            "Transpose"
+        }
+        Op::Concat { axis } => {
+            attrs.push(attr_int("axis", *axis as i64));
+            "Concat"
+        }
+        Op::Identity => "Identity",
+        Op::Floor => "Floor",
+        Op::Clip { lo, hi } => {
+            push_f64_attr(&mut attrs, "min", *lo);
+            push_f64_attr(&mut attrs, "max", *hi);
+            "Clip"
+        }
+        Op::MultiThreshold {
+            out_scale,
+            out_bias,
+        } => {
+            domain = QONNX_DOMAIN;
+            push_f64_attr(&mut attrs, "out_scale", *out_scale);
+            push_f64_attr(&mut attrs, "out_bias", *out_bias);
+            "MultiThreshold"
+        }
+    };
+
+    for i in &inputs {
+        put_str(&mut b, 1, i);
+    }
+    for o in &n.outputs {
+        put_str(&mut b, 2, o);
+    }
+    put_str(&mut b, 3, &n.name);
+    put_str(&mut b, 4, op_type);
+    for a in &attrs {
+        put_bytes(&mut b, 5, a);
+    }
+    if !domain.is_empty() {
+        put_str(&mut b, 7, domain);
+    }
+    b
+}
+
+// ---------------------------------------------------------------------------
+// Attribute encoding
+// ---------------------------------------------------------------------------
+
+fn attr_int(name: &str, v: i64) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_str(&mut b, 1, name);
+    put_int(&mut b, 3, v);
+    put_int(&mut b, 20, 2); // AttributeType::INT
+    b
+}
+
+fn attr_ints(name: &str, vals: &[i64]) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_str(&mut b, 1, name);
+    put_packed_i64s(&mut b, 8, vals);
+    put_int(&mut b, 20, 7); // AttributeType::INTS
+    b
+}
+
+fn attr_str(name: &str, s: &str) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_str(&mut b, 1, name);
+    put_str(&mut b, 4, s);
+    put_int(&mut b, 20, 3); // AttributeType::STRING
+    b
+}
+
+/// The lossless float-attribute pair: standard f32 field plus a rank-0
+/// DOUBLE tensor attribute `<name>_f64` carrying the exact value.
+fn push_f64_attr(attrs: &mut Vec<Vec<u8>>, name: &str, v: f64) {
+    let mut b = Vec::new();
+    put_str(&mut b, 1, name);
+    put_f32(&mut b, 2, v as f32);
+    put_int(&mut b, 20, 1); // AttributeType::FLOAT
+    attrs.push(b);
+
+    let mut t = Vec::new();
+    put_int(&mut t, 2, DT_DOUBLE);
+    put_bytes(&mut t, 9, &v.to_bits().to_le_bytes());
+    let mut b = Vec::new();
+    put_str(&mut b, 1, &format!("{name}_f64"));
+    put_bytes(&mut b, 5, &t);
+    put_int(&mut b, 20, 4); // AttributeType::TENSOR
+    attrs.push(b);
+}
+
+// ---------------------------------------------------------------------------
+// Tensor / value-info encoding
+// ---------------------------------------------------------------------------
+
+fn encode_double_tensor(name: &str, t: &Tensor) -> Vec<u8> {
+    let mut b = Vec::new();
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    put_packed_i64s(&mut b, 1, &dims);
+    put_int(&mut b, 2, DT_DOUBLE);
+    put_str(&mut b, 8, name);
+    let mut raw = Vec::with_capacity(t.numel() * 8);
+    for v in t.data() {
+        raw.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    put_bytes(&mut b, 9, &raw);
+    b
+}
+
+fn encode_int64_tensor(name: &str, vals: &[i64]) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_packed_i64s(&mut b, 1, &[vals.len() as i64]);
+    put_int(&mut b, 2, DT_INT64);
+    put_str(&mut b, 8, name);
+    let mut raw = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        raw.extend_from_slice(&v.to_le_bytes());
+    }
+    put_bytes(&mut b, 9, &raw);
+    b
+}
+
+fn encode_value_info(name: &str, shape: &[usize]) -> Vec<u8> {
+    let mut shape_b = Vec::new();
+    for &d in shape {
+        let mut dim = Vec::new();
+        put_int(&mut dim, 1, d as i64);
+        put_bytes(&mut shape_b, 1, &dim);
+    }
+    let mut tt = Vec::new();
+    put_int(&mut tt, 1, DT_DOUBLE); // elem_type: our tensors are f64
+    put_bytes(&mut tt, 2, &shape_b);
+    let mut ty = Vec::new();
+    put_bytes(&mut ty, 1, &tt);
+    let mut b = Vec::new();
+    put_str(&mut b, 1, name);
+    put_bytes(&mut b, 2, &ty);
+    b
+}

@@ -1,0 +1,593 @@
+//! Map a parsed ONNX `ModelProto` onto the internal [`Graph`].
+//!
+//! Supported ops (QONNX subset): `Quant`, `MultiThreshold` (domain
+//! `qonnx.custom_op.general`), `Conv`, `Gemm`, `MatMul`,
+//! `Add`/`Sub`/`Mul`/`Div`, `Relu`, `Sigmoid`, `Floor`, `Identity`,
+//! `Clip`, `BatchNormalization`, `MaxPool`/`AveragePool`/
+//! `GlobalAveragePool`, `Reshape`/`Flatten`, `Transpose`, `Concat`.
+//!
+//! Everything else — and every supported op used with semantics the
+//! executor does not implement (asymmetric padding, conv bias inputs,
+//! non-default Gemm transforms, ...) — is rejected with an error naming
+//! the node (`node 'conv0' (#3, Conv): ...`) so a failed import points
+//! straight at the offending construct. Malformed bytes never panic:
+//! the wire layer bounds-checks every declared length, and this layer
+//! validates every count, dimension and attribute before use.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{shapes, Graph, Node, Op, RoundMode};
+use crate::tensor::{Conv2dSpec, Tensor};
+
+use super::proto::{self, AttrValue, GraphP, NodeP, TensorP, DT_DOUBLE, DT_FLOAT, DT_INT64};
+
+/// Decode ONNX `ModelProto` bytes into an internal graph with inferred
+/// shapes, validated by [`Graph::check`].
+pub fn import_model(bytes: &[u8]) -> Result<Graph> {
+    let model = proto::parse_model(bytes).context("onnx import: malformed protobuf")?;
+    let Some(gp) = model.graph else {
+        bail!("onnx import: ModelProto carries no graph");
+    };
+    build_graph(gp).context("onnx import")
+}
+
+fn build_graph(gp: GraphP) -> Result<Graph> {
+    let mut g = Graph::new(if gp.name.is_empty() {
+        "onnx_import"
+    } else {
+        gp.name.as_str()
+    });
+
+    // Initializer table (decoded lazily per use would re-decode; decode once).
+    let mut inits: BTreeMap<String, &TensorP> = BTreeMap::new();
+    for t in &gp.initializers {
+        if t.name.is_empty() {
+            bail!("initializer with empty name");
+        }
+        if inits.insert(t.name.clone(), t).is_some() {
+            bail!("duplicate initializer '{}'", t.name);
+        }
+    }
+
+    // Graph inputs. ONNX ir_version < 4 lists initializers among the
+    // inputs; those are constants, not dynamic inputs.
+    for vi in &gp.inputs {
+        if vi.name.is_empty() {
+            bail!("graph input with empty name");
+        }
+        if inits.contains_key(&vi.name) {
+            continue;
+        }
+        if vi.dims.is_empty() {
+            bail!(
+                "graph input '{}': missing shape annotation (dynamic ranks unsupported)",
+                vi.name
+            );
+        }
+        let mut dims = Vec::with_capacity(vi.dims.len());
+        for (i, d) in vi.dims.iter().enumerate() {
+            match d {
+                Some(d) if *d >= 1 => dims.push(*d as usize),
+                Some(d) => bail!("graph input '{}': dim {i} is {d} (must be >= 1)", vi.name),
+                None => bail!(
+                    "graph input '{}': dim {i} is symbolic (dynamic shapes unsupported)",
+                    vi.name
+                ),
+            }
+        }
+        if g.inputs.contains(&vi.name) {
+            bail!("duplicate graph input '{}'", vi.name);
+        }
+        g.add_input(&vi.name, &dims);
+    }
+
+    // Nodes: map each onto an internal Op, collecting attribute-folded
+    // initializers (Reshape target shapes) to drop afterwards.
+    let mut folded: BTreeSet<String> = BTreeSet::new();
+    let mut nodes: Vec<Node> = Vec::new();
+    for (idx, np) in gp.nodes.iter().enumerate() {
+        let path = format!(
+            "node '{}' (#{idx}, {})",
+            if np.name.is_empty() { "<unnamed>" } else { &np.name },
+            if np.op_type.is_empty() { "<no op_type>" } else { &np.op_type }
+        );
+        let (op, inputs) = map_node(np, &inits, &mut folded).with_context(|| path.clone())?;
+        if np.outputs.len() != 1 || np.outputs[0].is_empty() {
+            bail!("{path}: expected exactly 1 named output, got {:?}", np.outputs);
+        }
+        let name = if np.name.is_empty() {
+            format!("{}_{idx}", np.op_type)
+        } else {
+            np.name.clone()
+        };
+        let input_refs: Vec<&str> = inputs.iter().map(String::as_str).collect();
+        let out_refs: Vec<&str> = np.outputs.iter().map(String::as_str).collect();
+        nodes.push(Node::new(&name, op, &input_refs, &out_refs));
+    }
+
+    // An initializer folded into an attribute is dropped only if no kept
+    // node input still references it.
+    let referenced: BTreeSet<&str> = nodes
+        .iter()
+        .flat_map(|n| n.inputs.iter().map(String::as_str))
+        .collect();
+    for (name, tp) in &inits {
+        if folded.contains(name) && !referenced.contains(name.as_str()) {
+            continue;
+        }
+        let t = decode_tensor(tp).with_context(|| format!("initializer '{name}'"))?;
+        g.add_initializer(name, t);
+    }
+    for n in nodes {
+        g.add_node(n);
+    }
+
+    for vi in &gp.outputs {
+        if vi.name.is_empty() {
+            bail!("graph output with empty name");
+        }
+        g.outputs.push(vi.name.clone());
+    }
+    if g.outputs.is_empty() {
+        bail!("graph declares no outputs");
+    }
+
+    shapes::infer_shapes(&mut g).context("shape inference on imported graph")?;
+    g.check().context("validation of imported graph")?;
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// Node mapping
+// ---------------------------------------------------------------------------
+
+/// Returns the internal op plus the node inputs to keep (Reshape drops
+/// its shape input after folding it into the op).
+fn map_node(
+    np: &NodeP,
+    inits: &BTreeMap<String, &TensorP>,
+    folded: &mut BTreeSet<String>,
+) -> Result<(Op, Vec<String>)> {
+    let a = Attrs(np);
+    let op = match np.op_type.as_str() {
+        "Quant" => {
+            want_inputs(np, 4)?;
+            a.allow(&["signed", "narrow", "rounding_mode"])?;
+            let signed = a.int("signed")?.unwrap_or(1) != 0;
+            let narrow = a.int("narrow")?.unwrap_or(0) != 0;
+            let rounding = match a.str("rounding_mode")?.as_deref().unwrap_or("ROUND") {
+                "ROUND" => RoundMode::RoundEven,
+                "FLOOR" => RoundMode::Floor,
+                "CEIL" => RoundMode::Ceil,
+                m => bail!("rounding_mode '{m}' unsupported (ROUND/FLOOR/CEIL)"),
+            };
+            Op::Quant {
+                signed,
+                narrow,
+                rounding,
+            }
+        }
+        "MatMul" => {
+            want_inputs(np, 2)?;
+            a.allow(&[])?;
+            Op::MatMul
+        }
+        "Gemm" => {
+            want_inputs(np, 3)?;
+            a.allow(&["alpha", "beta", "transA", "transB"])?;
+            if a.f64("alpha")?.unwrap_or(1.0) != 1.0 || a.f64("beta")?.unwrap_or(1.0) != 1.0 {
+                bail!("Gemm with alpha/beta != 1 unsupported");
+            }
+            if a.int("transA")?.unwrap_or(0) != 0 || a.int("transB")?.unwrap_or(0) != 0 {
+                bail!("Gemm with transA/transB != 0 unsupported");
+            }
+            Op::Gemm
+        }
+        "Conv" => {
+            if np.inputs.len() == 3 {
+                bail!("Conv bias input unsupported (fold it into a following Add)");
+            }
+            want_inputs(np, 2)?;
+            a.allow(&["kernel_shape", "strides", "pads", "dilations", "group", "auto_pad"])?;
+            if let Some(ap) = a.str("auto_pad")? {
+                if ap != "NOTSET" {
+                    bail!("auto_pad '{ap}' unsupported");
+                }
+            }
+            let spec = conv_spec(&a)?;
+            let group = a.int("group")?.unwrap_or(1);
+            if group < 1 {
+                bail!("group {group} invalid");
+            }
+            Op::Conv {
+                spec,
+                group: group as usize,
+            }
+        }
+        "Add" | "Sub" | "Mul" | "Div" => {
+            want_inputs(np, 2)?;
+            a.allow(&[])?;
+            match np.op_type.as_str() {
+                "Add" => Op::Add,
+                "Sub" => Op::Sub,
+                "Mul" => Op::Mul,
+                _ => Op::Div,
+            }
+        }
+        "Relu" => {
+            want_inputs(np, 1)?;
+            a.allow(&[])?;
+            Op::Relu
+        }
+        "Sigmoid" => {
+            want_inputs(np, 1)?;
+            a.allow(&[])?;
+            Op::Sigmoid
+        }
+        "Floor" => {
+            want_inputs(np, 1)?;
+            a.allow(&[])?;
+            Op::Floor
+        }
+        "Identity" => {
+            want_inputs(np, 1)?;
+            a.allow(&[])?;
+            Op::Identity
+        }
+        "Clip" => {
+            if np.inputs.len() > 1 {
+                bail!("Clip min/max as inputs unsupported (use opset-6 style attributes)");
+            }
+            want_inputs(np, 1)?;
+            a.allow(&["min", "max"])?;
+            Op::Clip {
+                lo: a.f64("min")?.unwrap_or(f64::NEG_INFINITY),
+                hi: a.f64("max")?.unwrap_or(f64::INFINITY),
+            }
+        }
+        "BatchNormalization" => {
+            want_inputs(np, 5)?;
+            // momentum only affects training; spatial=1/training_mode=0
+            // are the inference defaults.
+            a.allow(&["epsilon", "momentum", "spatial", "training_mode"])?;
+            if a.int("spatial")?.unwrap_or(1) != 1 {
+                bail!("BatchNormalization spatial=0 unsupported");
+            }
+            if a.int("training_mode")?.unwrap_or(0) != 0 {
+                bail!("BatchNormalization training_mode=1 unsupported");
+            }
+            Op::BatchNorm {
+                eps: a.f64("epsilon")?.unwrap_or(1e-5),
+            }
+        }
+        "MaxPool" | "AveragePool" => {
+            want_inputs(np, 1)?;
+            a.allow(&[
+                "kernel_shape",
+                "strides",
+                "pads",
+                "dilations",
+                "auto_pad",
+                "ceil_mode",
+                "storage_order",
+                "count_include_pad",
+            ])?;
+            if let Some(ap) = a.str("auto_pad")? {
+                if ap != "NOTSET" {
+                    bail!("auto_pad '{ap}' unsupported");
+                }
+            }
+            if a.int("ceil_mode")?.unwrap_or(0) != 0 {
+                bail!("ceil_mode=1 unsupported");
+            }
+            if a.int("storage_order")?.unwrap_or(0) != 0 {
+                bail!("storage_order=1 unsupported");
+            }
+            let spec = conv_spec(&a)?;
+            if np.op_type == "AveragePool"
+                && a.int("count_include_pad")?.unwrap_or(0) != 0
+                && spec.pad != (0, 0)
+            {
+                bail!("AveragePool count_include_pad=1 with nonzero pads unsupported");
+            }
+            if np.op_type == "MaxPool" {
+                Op::MaxPool { spec }
+            } else {
+                Op::AveragePool { spec }
+            }
+        }
+        "GlobalAveragePool" => {
+            want_inputs(np, 1)?;
+            a.allow(&[])?;
+            Op::GlobalAveragePool
+        }
+        "Reshape" => {
+            want_inputs(np, 2)?;
+            a.allow(&["allowzero"])?;
+            // Internal Reshape semantics treat 0 as "copy input dim",
+            // i.e. ONNX allowzero=0 (the default).
+            if a.int("allowzero")?.unwrap_or(0) != 0 {
+                bail!("Reshape allowzero=1 unsupported");
+            }
+            let shape_in = &np.inputs[1];
+            let Some(tp) = inits.get(shape_in) else {
+                bail!("shape input '{shape_in}' is not an initializer (dynamic reshape unsupported)");
+            };
+            let t = decode_tensor(tp).with_context(|| format!("shape input '{shape_in}'"))?;
+            if t.shape().len() != 1 {
+                bail!("shape input '{shape_in}' must be 1-D, got {:?}", t.shape());
+            }
+            let mut shape = Vec::with_capacity(t.numel());
+            for &v in t.data() {
+                if v.fract() != 0.0 || !v.is_finite() {
+                    bail!("shape input '{shape_in}' has non-integer entry {v}");
+                }
+                shape.push(v as i64);
+            }
+            folded.insert(shape_in.clone());
+            return Ok((Op::Reshape { shape }, vec![np.inputs[0].clone()]));
+        }
+        "Flatten" => {
+            want_inputs(np, 1)?;
+            a.allow(&["axis"])?;
+            let axis = a.int("axis")?.unwrap_or(1);
+            if axis < 0 {
+                bail!("Flatten negative axis {axis} unsupported");
+            }
+            Op::Flatten {
+                axis: axis as usize,
+            }
+        }
+        "Transpose" => {
+            want_inputs(np, 1)?;
+            a.allow(&["perm"])?;
+            let perm = a.ints("perm")?.unwrap_or_default();
+            let mut out = Vec::with_capacity(perm.len());
+            for p in perm {
+                if p < 0 {
+                    bail!("perm entry {p} negative");
+                }
+                out.push(p as usize);
+            }
+            Op::Transpose { perm: out }
+        }
+        "Concat" => {
+            if np.inputs.is_empty() {
+                bail!("Concat with no inputs");
+            }
+            a.allow(&["axis"])?;
+            let Some(axis) = a.int("axis")? else {
+                bail!("Concat requires an axis attribute");
+            };
+            if axis < 0 {
+                bail!("Concat negative axis {axis} unsupported");
+            }
+            Op::Concat {
+                axis: axis as usize,
+            }
+        }
+        "MultiThreshold" => {
+            want_inputs(np, 2)?;
+            a.allow(&["out_scale", "out_bias", "out_dtype", "data_layout"])?;
+            if let Some(layout) = a.str("data_layout")? {
+                if layout != "NCHW" {
+                    bail!("MultiThreshold data_layout '{layout}' unsupported");
+                }
+            }
+            Op::MultiThreshold {
+                out_scale: a.f64("out_scale")?.unwrap_or(1.0),
+                out_bias: a.f64("out_bias")?.unwrap_or(0.0),
+            }
+        }
+        "" => bail!("node has no op_type"),
+        other => bail!("op_type '{other}' unsupported"),
+    };
+    Ok((op, np.inputs.clone()))
+}
+
+fn want_inputs(np: &NodeP, n: usize) -> Result<()> {
+    if np.inputs.len() != n {
+        bail!("expected {n} inputs, got {}", np.inputs.len());
+    }
+    if let Some(i) = np.inputs.iter().find(|i| i.is_empty()) {
+        bail!("empty input name {i:?} (optional-input placeholders unsupported)");
+    }
+    Ok(())
+}
+
+/// kernel_shape / strides / pads → [`Conv2dSpec`]. Pads must be
+/// symmetric ([t, l, b, r] with t==b, l==r) — the internal spec only
+/// models symmetric padding.
+fn conv_spec(a: &Attrs<'_>) -> Result<Conv2dSpec> {
+    let kernel = a.int_pair("kernel_shape")?.context("kernel_shape attribute required")?;
+    let stride = a.int_pair("strides")?.unwrap_or((1, 1));
+    let pads = a.ints("pads")?.unwrap_or_else(|| vec![0, 0, 0, 0]);
+    let pad = match pads.as_slice() {
+        [t, l, b, r] if t == b && l == r && *t >= 0 && *l >= 0 => (*t as usize, *l as usize),
+        _ => bail!("asymmetric or malformed pads {pads:?} unsupported"),
+    };
+    if let Some(d) = a.ints("dilations")? {
+        if d.iter().any(|&v| v != 1) {
+            bail!("dilations {d:?} unsupported");
+        }
+    }
+    Ok(Conv2dSpec {
+        kernel,
+        stride,
+        pad,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Attribute access
+// ---------------------------------------------------------------------------
+
+struct Attrs<'a>(&'a NodeP);
+
+impl<'a> Attrs<'a> {
+    fn get(&self, name: &str) -> Option<&'a AttrValue> {
+        self.0
+            .attrs
+            .iter()
+            .find(|a| a.name == name)
+            .map(|a| &a.value)
+    }
+
+    /// Reject attributes outside the allowlist (`_f64` twins of allowed
+    /// float attributes are implicitly allowed).
+    fn allow(&self, names: &[&str]) -> Result<()> {
+        for attr in &self.0.attrs {
+            let base = attr.name.strip_suffix("_f64").unwrap_or(&attr.name);
+            if !names.contains(&base) {
+                bail!("attribute '{}' unsupported", attr.name);
+            }
+        }
+        Ok(())
+    }
+
+    fn int(&self, name: &str) -> Result<Option<i64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(AttrValue::Int(v)) => Ok(Some(*v)),
+            Some(v) => bail!("attribute '{name}': expected INT, got {}", v.kind()),
+        }
+    }
+
+    fn ints(&self, name: &str) -> Result<Option<Vec<i64>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(AttrValue::Ints(v)) => Ok(Some(v.clone())),
+            Some(v) => bail!("attribute '{name}': expected INTS, got {}", v.kind()),
+        }
+    }
+
+    fn int_pair(&self, name: &str) -> Result<Option<(usize, usize)>> {
+        match self.ints(name)? {
+            None => Ok(None),
+            Some(v) => match v.as_slice() {
+                [a, b] if *a >= 1 && *b >= 1 => Ok(Some((*a as usize, *b as usize))),
+                _ => bail!("attribute '{name}': expected two positive ints, got {v:?}"),
+            },
+        }
+    }
+
+    fn str(&self, name: &str) -> Result<Option<String>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(AttrValue::Str(v)) => Ok(Some(v.clone())),
+            Some(v) => bail!("attribute '{name}': expected STRING, got {}", v.kind()),
+        }
+    }
+
+    /// Float attribute with lossless-twin support: prefer the rank-0
+    /// DOUBLE tensor attribute `<name>_f64` written by
+    /// [`super::export`], fall back to the standard f32 field.
+    fn f64(&self, name: &str) -> Result<Option<f64>> {
+        if let Some(v) = self.get(&format!("{name}_f64")) {
+            let AttrValue::Tensor(tp) = v else {
+                bail!("attribute '{name}_f64': expected TENSOR, got {}", v.kind());
+            };
+            let t = decode_tensor(tp).with_context(|| format!("attribute '{name}_f64'"))?;
+            if t.numel() != 1 {
+                bail!("attribute '{name}_f64': expected a scalar, got {:?}", t.shape());
+            }
+            return Ok(Some(t.data()[0]));
+        }
+        match self.get(name) {
+            None => Ok(None),
+            Some(AttrValue::Float(v)) => Ok(Some(f64::from(*v))),
+            Some(v) => bail!("attribute '{name}': expected FLOAT, got {}", v.kind()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor decoding
+// ---------------------------------------------------------------------------
+
+/// Decode a `TensorProto` into an f64 [`Tensor`]. FLOAT and INT64
+/// payloads are widened to f64 (both are exactly representable);
+/// DOUBLE round-trips bit-for-bit. Declared dimensions are validated
+/// against the actual payload length before any allocation keyed on
+/// them, so a tensor claiming 10^12 elements with a 16-byte payload
+/// fails fast.
+pub(super) fn decode_tensor(tp: &TensorP) -> Result<Tensor> {
+    let mut dims: Vec<usize> = Vec::with_capacity(tp.dims.len());
+    let mut numel: usize = 1;
+    for &d in &tp.dims {
+        if d < 0 {
+            bail!("negative dim {d}");
+        }
+        let d = d as usize;
+        numel = numel
+            .checked_mul(d)
+            .with_context(|| format!("dims {:?} overflow", tp.dims))?;
+        dims.push(d);
+    }
+
+    let data: Vec<f64> = match tp.data_type {
+        DT_DOUBLE => match &tp.raw_data {
+            Some(raw) => {
+                check_raw_len(raw.len(), numel, 8)?;
+                raw.chunks_exact(8)
+                    .map(|c| {
+                        f64::from_bits(u64::from_le_bytes([
+                            c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                        ]))
+                    })
+                    .collect()
+            }
+            None => {
+                check_typed_len(tp.double_data.len(), numel)?;
+                tp.double_data.clone()
+            }
+        },
+        DT_FLOAT => match &tp.raw_data {
+            Some(raw) => {
+                check_raw_len(raw.len(), numel, 4)?;
+                raw.chunks_exact(4)
+                    .map(|c| f64::from(f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]]))))
+                    .collect()
+            }
+            None => {
+                check_typed_len(tp.float_data.len(), numel)?;
+                tp.float_data.iter().map(|&v| f64::from(v)).collect()
+            }
+        },
+        DT_INT64 => match &tp.raw_data {
+            Some(raw) => {
+                check_raw_len(raw.len(), numel, 8)?;
+                raw.chunks_exact(8)
+                    .map(|c| {
+                        i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f64
+                    })
+                    .collect()
+            }
+            None => {
+                check_typed_len(tp.int64_data.len(), numel)?;
+                tp.int64_data.iter().map(|&v| v as f64).collect()
+            }
+        },
+        dt => bail!("data_type {dt} unsupported (FLOAT=1, INT64=7, DOUBLE=11)"),
+    };
+    Tensor::new(&dims, data)
+}
+
+fn check_raw_len(got: usize, numel: usize, elem: usize) -> Result<()> {
+    let want = numel
+        .checked_mul(elem)
+        .context("element count overflows byte length")?;
+    if got != want {
+        bail!("raw_data length {got} does not match {numel} elements of {elem} bytes");
+    }
+    Ok(())
+}
+
+fn check_typed_len(got: usize, numel: usize) -> Result<()> {
+    if got != numel {
+        bail!("typed data length {got} does not match declared element count {numel}");
+    }
+    Ok(())
+}

@@ -1,0 +1,315 @@
+//! Parsed representations of the ONNX `ModelProto` subset QONNX uses,
+//! decoded from protobuf wire bytes by [`super::wire::Reader`].
+//!
+//! Field numbers follow the onnx.proto3 schema:
+//!
+//! | message       | fields we read                                             |
+//! |---------------|------------------------------------------------------------|
+//! | ModelProto    | ir_version=1, producer_name=2, graph=7, opset_import=8     |
+//! | GraphProto    | node=1, name=2, initializer=5, input=11, output=12         |
+//! | NodeProto     | input=1, output=2, name=3, op_type=4, attribute=5, domain=7|
+//! | AttributeProto| name=1, f=2, i=3, s=4, t=5, floats=7, ints=8, strings=9    |
+//! | TensorProto   | dims=1, data_type=2, float_data=4, int64_data=7, name=8,   |
+//! |               | raw_data=9, double_data=13                                 |
+//! | ValueInfoProto| name=1, type=2 (→ tensor_type=1 → shape=2 → dim=1)         |
+//!
+//! Unknown fields are skipped; unknown *constructs* (segments, external
+//! data, sparse tensors) surface as precise errors at import time.
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{read_f32s, read_f64s, read_i64s, Reader, WIRE_I32, WIRE_LEN, WIRE_VARINT};
+
+/// TensorProto.DataType values we understand.
+pub const DT_FLOAT: i64 = 1;
+pub const DT_INT64: i64 = 7;
+pub const DT_DOUBLE: i64 = 11;
+
+#[derive(Debug, Default)]
+pub struct ModelP {
+    pub ir_version: i64,
+    pub producer_name: String,
+    pub opsets: Vec<(String, i64)>,
+    pub graph: Option<GraphP>,
+}
+
+#[derive(Debug, Default)]
+pub struct GraphP {
+    pub name: String,
+    pub nodes: Vec<NodeP>,
+    pub initializers: Vec<TensorP>,
+    pub inputs: Vec<ValueInfoP>,
+    pub outputs: Vec<ValueInfoP>,
+}
+
+#[derive(Debug, Default)]
+pub struct NodeP {
+    pub name: String,
+    pub op_type: String,
+    pub domain: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub attrs: Vec<AttrP>,
+}
+
+#[derive(Debug)]
+pub struct AttrP {
+    pub name: String,
+    pub value: AttrValue,
+}
+
+#[derive(Debug)]
+pub enum AttrValue {
+    Int(i64),
+    Float(f32),
+    Str(String),
+    Tensor(TensorP),
+    Ints(Vec<i64>),
+    Floats(Vec<f32>),
+    Strs(Vec<String>),
+}
+
+impl AttrValue {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AttrValue::Int(_) => "INT",
+            AttrValue::Float(_) => "FLOAT",
+            AttrValue::Str(_) => "STRING",
+            AttrValue::Tensor(_) => "TENSOR",
+            AttrValue::Ints(_) => "INTS",
+            AttrValue::Floats(_) => "FLOATS",
+            AttrValue::Strs(_) => "STRINGS",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TensorP {
+    pub name: String,
+    pub dims: Vec<i64>,
+    pub data_type: i64,
+    pub raw_data: Option<Vec<u8>>,
+    pub float_data: Vec<f32>,
+    pub int64_data: Vec<i64>,
+    pub double_data: Vec<f64>,
+}
+
+#[derive(Debug, Default)]
+pub struct ValueInfoP {
+    pub name: String,
+    /// Dimensions from the type annotation; `None` for a symbolic
+    /// (`dim_param`) or absent dimension value.
+    pub dims: Vec<Option<i64>>,
+}
+
+// ---------------------------------------------------------------------------
+// Parsers
+// ---------------------------------------------------------------------------
+
+pub fn parse_model(bytes: &[u8]) -> Result<ModelP> {
+    let mut r = Reader::new(bytes);
+    let mut m = ModelP::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 if wire == WIRE_VARINT => m.ir_version = r.varint()? as i64,
+            2 if wire == WIRE_LEN => m.producer_name = r.string()?,
+            7 if wire == WIRE_LEN => {
+                let g = parse_graph(r.bytes()?).context("in ModelProto.graph")?;
+                m.graph = Some(g);
+            }
+            8 if wire == WIRE_LEN => m.opsets.push(parse_opset(r.bytes()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(m)
+}
+
+fn parse_opset(bytes: &[u8]) -> Result<(String, i64)> {
+    let mut r = Reader::new(bytes);
+    let (mut domain, mut version) = (String::new(), 0i64);
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 if wire == WIRE_LEN => domain = r.string()?,
+            2 if wire == WIRE_VARINT => version = r.varint()? as i64,
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok((domain, version))
+}
+
+fn parse_graph(bytes: &[u8]) -> Result<GraphP> {
+    let mut r = Reader::new(bytes);
+    let mut g = GraphP::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 if wire == WIRE_LEN => {
+                let idx = g.nodes.len();
+                let n = parse_node(r.bytes()?).with_context(|| format!("in node #{idx}"))?;
+                g.nodes.push(n);
+            }
+            2 if wire == WIRE_LEN => g.name = r.string()?,
+            5 if wire == WIRE_LEN => {
+                let t = parse_tensor(r.bytes()?).context("in initializer")?;
+                g.initializers.push(t);
+            }
+            11 if wire == WIRE_LEN => g.inputs.push(parse_value_info(r.bytes()?)?),
+            12 if wire == WIRE_LEN => g.outputs.push(parse_value_info(r.bytes()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(g)
+}
+
+fn parse_node(bytes: &[u8]) -> Result<NodeP> {
+    let mut r = Reader::new(bytes);
+    let mut n = NodeP::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 if wire == WIRE_LEN => n.inputs.push(r.string()?),
+            2 if wire == WIRE_LEN => n.outputs.push(r.string()?),
+            3 if wire == WIRE_LEN => n.name = r.string()?,
+            4 if wire == WIRE_LEN => n.op_type = r.string()?,
+            5 if wire == WIRE_LEN => {
+                let a = parse_attr(r.bytes()?)
+                    .with_context(|| format!("in attribute of node '{}'", n.name))?;
+                n.attrs.push(a);
+            }
+            7 if wire == WIRE_LEN => n.domain = r.string()?,
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(n)
+}
+
+fn parse_attr(bytes: &[u8]) -> Result<AttrP> {
+    let mut r = Reader::new(bytes);
+    let mut name = String::new();
+    let mut declared_type: Option<i64> = None;
+    let mut single: Option<AttrValue> = None;
+    let (mut ints, mut floats, mut strs) = (Vec::new(), Vec::new(), Vec::new());
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 if wire == WIRE_LEN => name = r.string()?,
+            2 if wire == WIRE_I32 => single = Some(AttrValue::Float(f32::from_bits(r.fixed32()?))),
+            3 if wire == WIRE_VARINT => single = Some(AttrValue::Int(r.varint()? as i64)),
+            4 if wire == WIRE_LEN => single = Some(AttrValue::Str(r.string()?)),
+            5 if wire == WIRE_LEN => {
+                single = Some(AttrValue::Tensor(parse_tensor(r.bytes()?)?));
+            }
+            7 => read_f32s(&mut r, wire, &mut floats)?,
+            8 => read_i64s(&mut r, wire, &mut ints)?,
+            9 if wire == WIRE_LEN => strs.push(r.string()?),
+            20 if wire == WIRE_VARINT => declared_type = Some(r.varint()? as i64),
+            _ => r.skip(wire)?,
+        }
+    }
+    // AttributeProto.AttributeType: FLOAT=1 INT=2 STRING=3 TENSOR=4
+    // FLOATS=6 INTS=7 STRINGS=8. When the writer declared a repeated
+    // type, honor it even if the list came through empty.
+    let value = match declared_type {
+        Some(6) => AttrValue::Floats(floats),
+        Some(7) => AttrValue::Ints(ints),
+        Some(8) => AttrValue::Strs(strs),
+        _ => {
+            if let Some(v) = single {
+                v
+            } else if !ints.is_empty() {
+                AttrValue::Ints(ints)
+            } else if !floats.is_empty() {
+                AttrValue::Floats(floats)
+            } else if !strs.is_empty() {
+                AttrValue::Strs(strs)
+            } else {
+                bail!("attribute '{name}' carries no value");
+            }
+        }
+    };
+    Ok(AttrP { name, value })
+}
+
+fn parse_tensor(bytes: &[u8]) -> Result<TensorP> {
+    let mut r = Reader::new(bytes);
+    let mut t = TensorP::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => read_i64s(&mut r, wire, &mut t.dims)?,
+            2 if wire == WIRE_VARINT => t.data_type = r.varint()? as i64,
+            4 => read_f32s(&mut r, wire, &mut t.float_data)?,
+            7 => read_i64s(&mut r, wire, &mut t.int64_data)?,
+            8 if wire == WIRE_LEN => t.name = r.string()?,
+            9 if wire == WIRE_LEN => t.raw_data = Some(r.bytes()?.to_vec()),
+            13 => read_f64s(&mut r, wire, &mut t.double_data)?,
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(t)
+}
+
+fn parse_value_info(bytes: &[u8]) -> Result<ValueInfoP> {
+    let mut r = Reader::new(bytes);
+    let mut v = ValueInfoP::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 if wire == WIRE_LEN => v.name = r.string()?,
+            2 if wire == WIRE_LEN => {
+                // TypeProto → tensor_type (field 1) → shape (field 2) → dim.
+                let mut tr = Reader::new(r.bytes()?);
+                while !tr.done() {
+                    let (tf, tw) = tr.key()?;
+                    if tf == 1 && tw == WIRE_LEN {
+                        parse_tensor_type(tr.bytes()?, &mut v)?;
+                    } else {
+                        tr.skip(tw)?;
+                    }
+                }
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(v)
+}
+
+fn parse_tensor_type(bytes: &[u8], v: &mut ValueInfoP) -> Result<()> {
+    let mut r = Reader::new(bytes);
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        if field == 2 && wire == WIRE_LEN {
+            // TensorShapeProto: repeated dim (field 1).
+            let mut sr = Reader::new(r.bytes()?);
+            while !sr.done() {
+                let (sf, sw) = sr.key()?;
+                if sf == 1 && sw == WIRE_LEN {
+                    v.dims.push(parse_dim(sr.bytes()?)?);
+                } else {
+                    sr.skip(sw)?;
+                }
+            }
+        } else {
+            r.skip(wire)?;
+        }
+    }
+    Ok(())
+}
+
+fn parse_dim(bytes: &[u8]) -> Result<Option<i64>> {
+    let mut r = Reader::new(bytes);
+    let mut dim = None;
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 if wire == WIRE_VARINT => dim = Some(r.varint()? as i64),
+            2 if wire == WIRE_LEN => {
+                r.bytes()?; // dim_param: symbolic → stays None
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(dim)
+}

@@ -1,0 +1,331 @@
+//! Minimal protobuf wire-format codec (reader + writer), specialized for
+//! the ONNX `ModelProto` subset used by [`super::import`] / [`super::export`].
+//!
+//! Only the four wire types that ONNX actually emits are supported:
+//! varint (0), 64-bit (1), length-delimited (2) and 32-bit (5). The
+//! deprecated group wire types (3/4) are rejected with a clean error.
+//!
+//! The reader is zero-copy (borrowed sub-slices of the input buffer) and
+//! bounds-checked everywhere: every declared length is validated against
+//! the remaining input *before* any slice or allocation happens, so a
+//! malformed header claiming a multi-gigabyte payload fails fast instead
+//! of OOM-ing. Nothing in this module panics on untrusted bytes.
+
+use anyhow::{bail, Result};
+
+/// Protobuf wire types.
+pub const WIRE_VARINT: u8 = 0;
+pub const WIRE_I64: u8 = 1;
+pub const WIRE_LEN: u8 = 2;
+pub const WIRE_I32: u8 = 5;
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Cursor over a borrowed byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Base-128 varint, at most 10 bytes (a full u64).
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let Some(&b) = self.buf.get(self.pos) else {
+                bail!("truncated varint at offset {}", self.pos);
+            };
+            self.pos += 1;
+            if shift == 63 && b > 1 {
+                bail!("varint overflows u64 at offset {}", self.pos - 1);
+            }
+            v |= u64::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                bail!("varint longer than 10 bytes at offset {}", self.pos - 1);
+            }
+        }
+    }
+
+    /// Field key: returns (field number, wire type). Rejects field 0 and
+    /// the deprecated group wire types.
+    pub fn key(&mut self) -> Result<(u64, u8)> {
+        let k = self.varint()?;
+        let field = k >> 3;
+        let wire = (k & 7) as u8;
+        if field == 0 {
+            bail!("invalid field number 0 at offset {}", self.pos);
+        }
+        match wire {
+            WIRE_VARINT | WIRE_I64 | WIRE_LEN | WIRE_I32 => Ok((field, wire)),
+            3 | 4 => bail!("deprecated group wire type (field {field}) unsupported"),
+            w => bail!("invalid wire type {w} (field {field})"),
+        }
+    }
+
+    /// Length-delimited payload. The declared length is checked against
+    /// the remaining input before the slice is taken.
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let len = self.varint()?;
+        let len = usize::try_from(len)
+            .ok()
+            .filter(|&l| l <= self.remaining());
+        let Some(len) = len else {
+            bail!(
+                "declared length exceeds remaining input ({} bytes left) at offset {}",
+                self.remaining(),
+                self.pos
+            );
+        };
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    /// Length-delimited payload decoded as UTF-8.
+    pub fn string(&mut self) -> Result<String> {
+        let s = self.bytes()?;
+        match std::str::from_utf8(s) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => bail!("invalid UTF-8 in string field"),
+        }
+    }
+
+    pub fn fixed32(&mut self) -> Result<u32> {
+        if self.remaining() < 4 {
+            bail!("truncated 32-bit field at offset {}", self.pos);
+        }
+        let b = &self.buf[self.pos..self.pos + 4];
+        self.pos += 4;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn fixed64(&mut self) -> Result<u64> {
+        if self.remaining() < 8 {
+            bail!("truncated 64-bit field at offset {}", self.pos);
+        }
+        let b = &self.buf[self.pos..self.pos + 8];
+        self.pos += 8;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Skip a field of the given wire type (unknown-field tolerance).
+    pub fn skip(&mut self, wire: u8) -> Result<()> {
+        match wire {
+            WIRE_VARINT => {
+                self.varint()?;
+            }
+            WIRE_I64 => {
+                self.fixed64()?;
+            }
+            WIRE_LEN => {
+                self.bytes()?;
+            }
+            WIRE_I32 => {
+                self.fixed32()?;
+            }
+            w => bail!("cannot skip wire type {w}"),
+        }
+        Ok(())
+    }
+}
+
+/// Decode a repeated-int64 field that may be packed (wire 2) or unpacked
+/// (wire 0). Each varint is at least one input byte, so the output length
+/// is bounded by the input length.
+pub fn read_i64s(r: &mut Reader<'_>, wire: u8, out: &mut Vec<i64>) -> Result<()> {
+    match wire {
+        WIRE_VARINT => out.push(r.varint()? as i64),
+        WIRE_LEN => {
+            let mut p = Reader::new(r.bytes()?);
+            while !p.done() {
+                out.push(p.varint()? as i64);
+            }
+        }
+        w => bail!("repeated int64 field has wire type {w}"),
+    }
+    Ok(())
+}
+
+/// Decode a repeated-float field (packed wire 2 or unpacked wire 5).
+pub fn read_f32s(r: &mut Reader<'_>, wire: u8, out: &mut Vec<f32>) -> Result<()> {
+    match wire {
+        WIRE_I32 => out.push(f32::from_bits(r.fixed32()?)),
+        WIRE_LEN => {
+            let payload = r.bytes()?;
+            if payload.len() % 4 != 0 {
+                bail!("packed float payload length {} not a multiple of 4", payload.len());
+            }
+            let mut p = Reader::new(payload);
+            while !p.done() {
+                out.push(f32::from_bits(p.fixed32()?));
+            }
+        }
+        w => bail!("repeated float field has wire type {w}"),
+    }
+    Ok(())
+}
+
+/// Decode a repeated-double field (packed wire 2 or unpacked wire 1).
+pub fn read_f64s(r: &mut Reader<'_>, wire: u8, out: &mut Vec<f64>) -> Result<()> {
+    match wire {
+        WIRE_I64 => out.push(f64::from_bits(r.fixed64()?)),
+        WIRE_LEN => {
+            let payload = r.bytes()?;
+            if payload.len() % 8 != 0 {
+                bail!("packed double payload length {} not a multiple of 8", payload.len());
+            }
+            let mut p = Reader::new(payload);
+            while !p.done() {
+                out.push(f64::from_bits(p.fixed64()?));
+            }
+        }
+        w => bail!("repeated double field has wire type {w}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn put_key(out: &mut Vec<u8>, field: u64, wire: u8) {
+    put_varint(out, (field << 3) | u64::from(wire));
+}
+
+/// Varint-typed field. Negative i64 values go through the standard
+/// two's-complement 10-byte encoding (ONNX int64 fields are not zigzag).
+pub fn put_int(out: &mut Vec<u8>, field: u64, v: i64) {
+    put_key(out, field, WIRE_VARINT);
+    put_varint(out, v as u64);
+}
+
+pub fn put_bytes(out: &mut Vec<u8>, field: u64, payload: &[u8]) {
+    put_key(out, field, WIRE_LEN);
+    put_varint(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+}
+
+pub fn put_str(out: &mut Vec<u8>, field: u64, s: &str) {
+    put_bytes(out, field, s.as_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, field: u64, v: f32) {
+    put_key(out, field, WIRE_I32);
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Packed repeated int64 (the proto3 default encoding for `repeated int64`).
+pub fn put_packed_i64s(out: &mut Vec<u8>, field: u64, vals: &[i64]) {
+    if vals.is_empty() {
+        return;
+    }
+    let mut payload = Vec::new();
+    for &v in vals {
+        put_varint(&mut payload, v as u64);
+    }
+    put_bytes(out, field, &payload);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trips_edge_values() {
+        for v in [0u64, 1, 127, 128, 300, u64::from(u32::MAX), u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.varint().unwrap(), v);
+            assert!(r.done());
+        }
+    }
+
+    #[test]
+    fn negative_int64_round_trips() {
+        let mut buf = Vec::new();
+        put_int(&mut buf, 3, -5);
+        let mut r = Reader::new(&buf);
+        let (field, wire) = r.key().unwrap();
+        assert_eq!((field, wire), (3, WIRE_VARINT));
+        assert_eq!(r.varint().unwrap() as i64, -5);
+    }
+
+    #[test]
+    fn oversized_declared_length_is_rejected_before_allocation() {
+        // key: field 1, wire 2; declared length u64::MAX.
+        let mut buf = Vec::new();
+        put_key(&mut buf, 1, WIRE_LEN);
+        put_varint(&mut buf, u64::MAX);
+        let mut r = Reader::new(&buf);
+        r.key().unwrap();
+        assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn group_wire_types_error_cleanly() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, (1 << 3) | 3); // field 1, start-group
+        let mut r = Reader::new(&buf);
+        assert!(r.key().is_err());
+    }
+
+    #[test]
+    fn truncated_varint_errors() {
+        let mut r = Reader::new(&[0x80, 0x80]);
+        assert!(r.varint().is_err());
+    }
+
+    #[test]
+    fn varint_overflow_errors() {
+        // 11 continuation bytes: longer than any valid u64 varint.
+        let mut r = Reader::new(&[0xFF; 11]);
+        assert!(r.varint().is_err());
+    }
+
+    #[test]
+    fn packed_i64s_round_trip() {
+        let vals = [0i64, 1, -1, 1 << 40, -(1 << 40)];
+        let mut buf = Vec::new();
+        put_packed_i64s(&mut buf, 7, &vals);
+        let mut r = Reader::new(&buf);
+        let (field, wire) = r.key().unwrap();
+        assert_eq!(field, 7);
+        let mut out = Vec::new();
+        read_i64s(&mut r, wire, &mut out).unwrap();
+        assert_eq!(out, vals);
+    }
+}

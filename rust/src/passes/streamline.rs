@@ -413,11 +413,20 @@ fn try_move_past_movement_and_pool(g: &mut Graph, i: usize) -> Result<bool> {
         return Ok(false);
     };
     let c = g.initializers[&prev.inputs[ci]].clone();
+    // Pooling mixes values *within* a channel's spatial window, so a
+    // constant may only cross it if it is uniform over that window:
+    // scalar, or a rank>=3 tensor whose trailing (spatial) dims are 1
+    // ([1,C,1,1] bias/scale). A rank-1/2 non-scalar right-aligns onto
+    // H/W under broadcasting — spatially varying — and must stay put:
+    // max(x+c) != max(x)+c when c differs across the window. The zoo
+    // pipeline never emits such constants, but imported ONNX graphs can.
+    let spatial_free =
+        c.numel() == 1 || (c.rank() >= 3 && c.shape()[c.rank() - 1] == 1 && c.shape()[c.rank() - 2] == 1);
     let allowed = match (kind, prev_is_mul) {
-        ("avg", _) => true,                                      // linear
+        ("avg", _) => spatial_free,                              // linear per channel
         ("move", _) => c.numel() == 1,                           // scalar only
-        ("max", true) => c.data().iter().all(|&v| v > 0.0),      // monotone
-        ("max", false) => true,                                  // max(x+c) = max(x)+c
+        ("max", true) => spatial_free && c.data().iter().all(|&v| v > 0.0), // monotone
+        ("max", false) => spatial_free,                          // max(x+c) = max(x)+c
         ("relu", true) => c.data().iter().all(|&v| v > 0.0),     // relu(cx)=c relu(x)
         ("relu", false) => false,
         _ => false,
@@ -701,6 +710,40 @@ mod tests {
         let y1 = run(&g, &x);
         assert_eq!(y0, y1);
         // Mul stays before the pool
+        assert!(matches!(g.nodes[g.producer("y").unwrap()].op, Op::MaxPool { .. }));
+    }
+
+    #[test]
+    fn spatial_add_does_not_cross_maxpool() {
+        // A [1,2] constant right-aligns onto the H/W dims of the NCHW
+        // input: each pooling window sees two different offsets, so
+        // max(x+c) != max(x)+c and the Add must stay upstream of the
+        // pool. (Scalar constants still cross, per
+        // mul_moves_past_maxpool_and_flatten.)
+        let mut g = Graph::new("t");
+        g.add_input("x", &[1, 1, 2, 2]);
+        g.add_initializer("c", Tensor::new(&[1, 2], vec![10.0, 0.0]).unwrap());
+        g.add_node(Node::new("a", Op::Add, &["x", "c"], &["s"]));
+        g.add_node(Node::new(
+            "p",
+            Op::MaxPool {
+                spec: Conv2dSpec {
+                    kernel: (2, 2),
+                    stride: (2, 2),
+                    pad: (0, 0),
+                },
+            },
+            &["s"],
+            &["y"],
+        ));
+        g.outputs.push("y".into());
+        crate::graph::shapes::infer_shapes(&mut g).unwrap();
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 5., 3., 2.]).unwrap();
+        let y0 = run(&g, &x);
+        streamline(&mut g).unwrap();
+        g.check().unwrap();
+        let y1 = run(&g, &x);
+        assert_eq!(y0, y1);
         assert!(matches!(g.nodes[g.producer("y").unwrap()].op, Op::MaxPool { .. }));
     }
 

@@ -2,8 +2,11 @@
 //! the subset the serving front end needs. Request-line/header/body
 //! parsing with `content-length` framing, keep-alive connection reuse,
 //! and a matching client used by the loopback load generator and the
-//! integration tests. No chunked transfer, no TLS, no HTTP/2 — those are
-//! recorded as explicit non-goals in ROADMAP.md.
+//! integration tests. No TLS, no HTTP/2 — explicit non-goals in
+//! ROADMAP.md. Chunked transfer is not implemented either, but it is
+//! *detected*: a request declaring any `transfer-encoding` gets a
+//! framed `501 Not Implemented` (via [`UnsupportedTransferEncoding`])
+//! rather than having its body misread under content-length framing.
 //!
 //! Framing rules implemented (the load-bearing parts of RFC 9112):
 //! * request line `METHOD target HTTP/1.x`, headers until an empty line,
@@ -93,6 +96,26 @@ fn read_line_limited(r: &mut impl BufRead, out: &mut String, limit: usize) -> Re
     Ok(n)
 }
 
+/// Typed error for a request declaring `Transfer-Encoding` (chunked or
+/// otherwise): this server frames bodies by `content-length` only, so
+/// the body cannot be read safely. [`crate::serve`]'s connection loop
+/// downcasts to this to answer with a framed `501 Not Implemented`
+/// before closing, instead of the generic best-effort 400.
+#[derive(Debug)]
+pub struct UnsupportedTransferEncoding(pub String);
+
+impl std::fmt::Display for UnsupportedTransferEncoding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "transfer-encoding {:?} not implemented (bodies must be content-length framed)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for UnsupportedTransferEncoding {}
+
 /// Read one request off a buffered connection. `Ok(None)` means the peer
 /// closed a kept-alive connection cleanly between requests (EOF before
 /// the first request byte); any mid-request EOF or malformed framing is
@@ -152,6 +175,14 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
         headers,
         body: Vec::new(),
     };
+    // Declared transfer-encoding means the body is not content-length
+    // framed; reading it as such would desynchronize the connection
+    // (the request-smuggling shape of the bug). Surface a typed error
+    // so the connection loop can answer with a framed 501 and close
+    // instead of misreading the body.
+    if let Some((_, v)) = req.headers.iter().find(|(k, _)| k == "transfer-encoding") {
+        return Err(UnsupportedTransferEncoding(v.clone()).into());
+    }
     // Framing is decided by content-length; a request carrying more than
     // one (even with equal values) is ambiguous across intermediaries —
     // the classic request-smuggling vector — so reject it outright
@@ -234,6 +265,7 @@ impl Response {
             405 => "Method Not Allowed",
             413 => "Payload Too Large",
             500 => "Internal Server Error",
+            501 => "Not Implemented",
             503 => "Service Unavailable",
             504 => "Gateway Timeout",
             _ => "Response",
@@ -476,6 +508,29 @@ mod tests {
     }
 
     #[test]
+    fn transfer_encoding_is_rejected_with_a_typed_error() {
+        // chunked framing would desynchronize the content-length reader;
+        // the typed error lets the connection loop answer 501
+        let err = parse(
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nabcd\r\n0\r\n\r\n",
+        )
+        .unwrap_err();
+        assert!(
+            err.downcast_ref::<UnsupportedTransferEncoding>().is_some(),
+            "{err:#}"
+        );
+        assert!(err.to_string().contains("chunked"), "{err:#}");
+        // any declared transfer-encoding is refused, not just chunked
+        assert!(parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n").is_err());
+        // ...including when a content-length is also present (the
+        // TE+CL smuggling shape)
+        assert!(parse(
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 4\r\n\r\nabcd"
+        )
+        .is_err());
+    }
+
+    #[test]
     fn malformed_response_header_lines_error() {
         // a colonless line inside the response headers is a framing
         // error for the client reader, never silently skipped
@@ -542,7 +597,7 @@ mod tests {
 
     #[test]
     fn reason_phrases_cover_the_emitted_codes() {
-        for code in [200u16, 400, 404, 405, 413, 500, 503, 504] {
+        for code in [200u16, 400, 404, 405, 413, 500, 501, 503, 504] {
             assert!(!Response::reason(code).is_empty());
         }
     }

@@ -265,6 +265,15 @@ fn handle_connection(stream: TcpStream, ctx: &ServerCtx, idle: Duration) {
             Ok(Some(r)) => r,
             Ok(None) => return, // peer closed between requests
             Err(e) => {
+                // A declared transfer-encoding gets a framed 501: the
+                // request head parsed fine, only the body framing is
+                // unimplemented — say so, then close (the unread body
+                // bytes make the connection unusable for keep-alive).
+                if e.downcast_ref::<http::UnsupportedTransferEncoding>().is_some() {
+                    let resp = Response::error(501, &format!("{e:#}"));
+                    let _ = resp.write_to(reader.get_mut(), false);
+                    return;
+                }
                 // io-rooted failures (idle timeout, torn connection)
                 // close silently — writing a framed 400 would
                 // desynchronize a keep-alive client's next exchange.
@@ -758,6 +767,33 @@ mod tests {
             assert_eq!(outs[0].as_f64_vec().unwrap().len(), 10);
         }
         assert!(server.shutdown(), "gate should drain");
+    }
+
+    /// A chunked request gets a framed 501 (not a body misread or a
+    /// silent close), and the connection is then closed.
+    #[test]
+    fn chunked_transfer_encoding_gets_a_framed_501() {
+        use std::io::{BufReader, Write};
+        let server = tiny_server(64);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(
+            b"POST /v1/models/tfc/infer HTTP/1.1\r\nhost: x\r\n\
+              transfer-encoding: chunked\r\n\r\n4\r\nabcd\r\n0\r\n\r\n",
+        )
+        .unwrap();
+        let mut r = BufReader::new(s);
+        let (status, body) = http::read_response(&mut r).unwrap();
+        assert_eq!(status, 501, "{}", String::from_utf8_lossy(&body));
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("transfer-encoding"),
+            "{v}"
+        );
+        // server closed the connection after answering
+        let mut rest = Vec::new();
+        std::io::Read::read_to_end(&mut r, &mut rest).unwrap();
+        assert!(rest.is_empty());
+        assert!(server.shutdown());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{BatchPolicy, Coordinator};
 use crate::engine::{self, SegmentedPlan};
@@ -56,6 +56,13 @@ pub struct ModelSpec {
     /// instead of compiling (engine only) — the fleet cold-start path:
     /// file read + weight re-pack instead of streamline → SIRA → compile
     pub snapshot_path: Option<String>,
+    /// build the model from this ONNX/QONNX file
+    /// ([`models::import_model`]) instead of the zoo; `name` is then
+    /// just the serving label. Works on both backends, uses the uint8
+    /// input convention ([`models::default_input_ranges`]), and is
+    /// mutually exclusive with `snapshot_path` (import once, snapshot,
+    /// then cold-start from the sidecar).
+    pub onnx_path: Option<String>,
 }
 
 /// Sampling period the serving paths use when `--profile` is on: cheap
@@ -77,6 +84,33 @@ impl ModelSpec {
             profile: false,
             replicas: 1,
             snapshot_path: None,
+            onnx_path: None,
+        }
+    }
+}
+
+/// Resolve a spec's model source: the zoo by name, or — when
+/// `onnx_path` is set — an imported ONNX graph with the default uint8
+/// input ranges. Returns the graph, its SIRA input ranges and a
+/// describe-string fragment naming the source.
+fn graph_for(
+    spec: &ModelSpec,
+) -> Result<(
+    crate::graph::Graph,
+    BTreeMap<String, crate::sira::SiRange>,
+    String,
+)> {
+    match &spec.onnx_path {
+        Some(path) => {
+            let bytes =
+                std::fs::read(path).with_context(|| format!("reading onnx file {path}"))?;
+            let g = models::import_model(&bytes)?;
+            let ranges = models::default_input_ranges(&g)?;
+            Ok((g, ranges, format!(", onnx {path}")))
+        }
+        None => {
+            let m = models::by_name(&spec.name)?;
+            Ok((m.graph, m.input_ranges, String::new()))
         }
     }
 }
@@ -127,20 +161,26 @@ impl ModelEntry {
     /// `spec.replicas` coordinators.
     pub fn build(spec: &ModelSpec, policy: BatchPolicy) -> Result<ModelEntry> {
         let n_replicas = spec.replicas.max(1);
+        if spec.snapshot_path.is_some() && spec.onnx_path.is_some() {
+            bail!(
+                "model '{}': --snapshot and --onnx are mutually exclusive \
+                 (import + snapshot once, then cold-start from the sidecar)",
+                spec.name
+            );
+        }
         if spec.engine {
             // one plan per model, however many replicas serve it
             let (mut plan, origin) = match &spec.snapshot_path {
                 Some(path) => (engine::snapshot::load(path)?, format!(", snapshot {path}")),
                 None => {
-                    let m = models::by_name(&spec.name)?;
-                    let mut g = m.graph;
+                    let (mut g, input_ranges, source) = graph_for(spec)?;
                     let analysis = if spec.streamline {
-                        engine::prepare_streamlined(&mut g, &m.input_ranges)?
+                        engine::prepare_streamlined(&mut g, &input_ranges)?
                     } else {
-                        analyze(&g, &m.input_ranges)?
+                        analyze(&g, &input_ranges)?
                     };
                     let tag = if spec.streamline { ", streamlined" } else { "" };
-                    (engine::compile(&g, &analysis)?, tag.to_string())
+                    (engine::compile(&g, &analysis)?, format!("{source}{tag}"))
                 }
             };
             plan.set_threads(spec.threads);
@@ -212,14 +252,18 @@ impl ModelEntry {
                     spec.name
                 );
             }
-            let m = models::by_name(&spec.name)?;
-            let input_shape = m.input_shape.clone();
+            let (graph, _, source) = graph_for(spec)?;
+            let input_shape = graph
+                .inputs
+                .first()
+                .and_then(|i| graph.shapes.get(i))
+                .cloned()
+                .unwrap_or_default();
             let input_numel = input_shape.iter().product();
-            let output_shape = m
-                .graph
+            let output_shape = graph
                 .outputs
                 .first()
-                .and_then(|o| m.graph.shapes.get(o))
+                .and_then(|o| graph.shapes.get(o))
                 .cloned()
                 .unwrap_or_default();
             let replica_tag = if n_replicas > 1 {
@@ -227,8 +271,8 @@ impl ModelEntry {
             } else {
                 String::new()
             };
-            let describe = format!("executor({}{replica_tag})", m.name);
-            let g = Arc::new(m.graph);
+            let describe = format!("executor({}{source}{replica_tag})", spec.name);
+            let g = Arc::new(graph);
             let replicas = (0..n_replicas)
                 .map(|_| {
                     let g = Arc::clone(&g);
@@ -341,6 +385,7 @@ impl ModelEntry {
             ("pipeline", Json::Num(self.spec.pipeline as f64)),
             ("replicas", Json::Num(self.replicas.len() as f64)),
             ("snapshot", Json::Bool(self.spec.snapshot_path.is_some())),
+            ("onnx", Json::Bool(self.spec.onnx_path.is_some())),
             (
                 "input_shape",
                 Json::nums(&self.input_shape.iter().map(|&d| d as f64).collect::<Vec<_>>()),
@@ -548,6 +593,49 @@ mod tests {
         assert_eq!(got.data(), want.data(), "snapshot-served bits diverged");
         reg.shutdown();
         std::fs::remove_file(&path).ok();
+    }
+
+    /// `ModelSpec::onnx_path` end to end: export tfc to a file, serve
+    /// the file on both backends, and get the bits of the zoo-built
+    /// original back.
+    #[test]
+    fn onnx_file_serves_identical_bits_on_both_backends() {
+        let m = models::by_name("tfc").unwrap();
+        let analysis = analyze(&m.graph, &m.input_ranges).unwrap();
+        let mut compiled = engine::compile(&m.graph, &analysis).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("sira-registry-onnx-{}.onnx", std::process::id()));
+        std::fs::write(&path, models::export_model(&m.graph)).unwrap();
+        let x = Tensor::full(&[1, 784], 100.0);
+        let want = compiled.run_batch(std::slice::from_ref(&x)).unwrap().remove(0);
+        for engine_backend in [true, false] {
+            let spec = ModelSpec {
+                engine: engine_backend,
+                onnx_path: Some(path.to_string_lossy().into_owned()),
+                ..ModelSpec::engine_default("tfc-onnx")
+            };
+            let reg = Registry::build(&[spec], BatchPolicy::default()).unwrap();
+            let e = reg.get("tfc-onnx").unwrap();
+            assert!(e.describe.contains("onnx"), "{}", e.describe);
+            assert_eq!(e.input_shape, vec![1, 784]);
+            let got = e.coordinator().infer(x.clone()).unwrap();
+            assert_eq!(got.data(), want.data(), "onnx-served bits diverged (engine={engine_backend})");
+            let card = e.model_json();
+            assert!(card.get("onnx").unwrap().as_bool().unwrap());
+            reg.shutdown();
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn onnx_path_and_snapshot_path_are_mutually_exclusive() {
+        let spec = ModelSpec {
+            onnx_path: Some("a.onnx".to_string()),
+            snapshot_path: Some("a.plan".to_string()),
+            ..ModelSpec::engine_default("tfc")
+        };
+        let err = Registry::build(&[spec], BatchPolicy::default()).unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err:#}");
     }
 
     #[test]

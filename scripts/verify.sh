@@ -8,9 +8,10 @@
 # perf_hotpath batch-8 regression gate (plain and
 # pipelined configurations) against BENCH_baseline.json, the snapshot
 # round-trip smoke (save a compiled plan sidecar, load it, prove it
-# bit-exact against a fresh compile), the loadgen prom smoke (scrape +
-# validate /metrics?format=prom against a live server), and — when
-# rustfmt is installed — the formatting check.
+# bit-exact against a fresh compile), the ONNX import smoke (every
+# checked-in fixture through `sira-finn import`), the loadgen prom
+# smoke (scrape + validate /metrics?format=prom against a live server),
+# and — when rustfmt is installed — the formatting check.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -75,6 +76,15 @@ SNAP=target/verify_tfc.plan
 target/release/sira-finn snapshot save --model tfc --out "$SNAP"
 target/release/sira-finn snapshot load --file "$SNAP" --check-model tfc
 rm -f "$SNAP"
+
+# ONNX import smoke: every checked-in fixture (one per supported-op
+# family, produced by an independent python protobuf writer) must
+# compile end to end — import, SIRA analysis, engine probe. Exercises
+# the real CLI path the round-trip tests can't reach.
+echo "== onnx import smoke: sira-finn import over every fixture =="
+for f in rust/tests/fixtures/onnx/*.onnx; do
+  target/release/sira-finn import "$f" >/dev/null
+done
 
 # Observability smoke: a real server on an ephemeral loopback port,
 # driven by loadgen, then `--prom` scrapes /metrics?format=prom and
